@@ -1,0 +1,43 @@
+//! β ablation example (Fig 11): sweep the importance-blend parameter on
+//! the quickstart workload and print the accuracy-vs-β curve.
+//!
+//!   cargo run --release --example ablation_beta
+
+use fedel::config::{ExperimentCfg, FleetSpec};
+use fedel::report::Table;
+use fedel::sim::experiment::Experiment;
+
+fn main() -> anyhow::Result<()> {
+    let base = ExperimentCfg {
+        model: "mlp".into(),
+        fleet: FleetSpec::Small10,
+        rounds: 30,
+        local_steps: 4,
+        lr: 0.05,
+        eval_every: 5,
+        eval_batches: 8,
+        ..Default::default()
+    };
+    let mut t = Table::new("beta ablation (mlp, small10)", &["beta", "final_acc", "sim_h"]);
+    let mut fedavg_exp = Experiment::build(base.clone())?;
+    let fedavg = fedavg_exp.run(Some("fedavg"))?;
+    t.row(vec![
+        "fedavg".into(),
+        format!("{:.3}", fedavg.final_acc),
+        format!("{:.1}", fedavg.sim_total_secs / 3600.0),
+    ]);
+    for beta in [0.0, 0.2, 0.4, 0.6, 0.8, 1.0] {
+        let mut cfg = base.clone();
+        cfg.beta = beta;
+        let mut exp = Experiment::build(cfg)?;
+        let res = exp.run(Some("fedel"))?;
+        t.row(vec![
+            format!("{beta}"),
+            format!("{:.3}", res.final_acc),
+            format!("{:.1}", res.sim_total_secs / 3600.0),
+        ]);
+    }
+    t.print();
+    println!("paper shape (Fig 11): moderate beta best; extremes fall below FedAvg");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Large-scale simulation: 100 heterogeneous clients over the paper's four
+//! device types {1, 1/2, 1/3, 1/4}x, TinyImageNet-like VGG. Mirrors the
+//! paper's Sec. 5.1 large-scale scenario.
+//!
+//!   cargo run --release --example fleet_100 [-- rounds] [-- clients]
+
+use fedel::config::{ExperimentCfg, FleetSpec};
+use fedel::report::{render_table1, table1_rows};
+use fedel::sim::experiment::Experiment;
+
+fn main() -> anyhow::Result<()> {
+    let mut args = std::env::args().skip(1);
+    let rounds: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(40);
+    let clients: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(100);
+    let cfg = ExperimentCfg {
+        model: "vgg_tinyin".into(),
+        fleet: FleetSpec::Large(clients),
+        rounds,
+        local_steps: 4,
+        lr: 0.04,
+        alpha: 0.1,
+        eval_every: 5,
+        eval_batches: 8,
+        slowest_round_secs: 161.9 * 60.0, // paper Table 2 TinyImageNet round
+        verbose: true,
+        ..Default::default()
+    };
+    println!("fleet_100: {clients} clients x {rounds} rounds, vgg_tinyin");
+    let mut exp = Experiment::build(cfg)?;
+
+    // device-type census
+    let mut census: std::collections::BTreeMap<String, usize> = Default::default();
+    for d in &exp.fleet {
+        *census.entry(d.name.clone()).or_insert(0) += 1;
+    }
+    println!("fleet census: {census:?}");
+
+    let mut results = Vec::new();
+    for name in ["fedavg", "timelyfl", "fedel"] {
+        let t0 = std::time::Instant::now();
+        let res = exp.run(Some(name))?;
+        println!(
+            "== {name}: final acc {:.2}%, simulated {}, wall {:.0}s",
+            100.0 * res.final_acc,
+            fedel::util::fmt_hours(res.sim_total_secs),
+            t0.elapsed().as_secs_f64()
+        );
+        results.push(res);
+    }
+    render_table1("fleet_100 summary", &table1_rows(&results, 0.95, false), false).print();
+    Ok(())
+}

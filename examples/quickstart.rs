@@ -1,0 +1,40 @@
+//! Quickstart: FedEL vs FedAvg on the fast MLP workload, 10-device
+//! heterogeneous fleet. Runs in a few seconds on the prebuilt artifacts:
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use fedel::config::{ExperimentCfg, FleetSpec};
+use fedel::report::{render_table1, table1_rows};
+use fedel::sim::experiment::Experiment;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExperimentCfg {
+        model: "mlp".into(),
+        fleet: FleetSpec::Small10,
+        rounds: 40,
+        local_steps: 4,
+        lr: 0.05,
+        eval_every: 4,
+        eval_batches: 8,
+        ..Default::default()
+    };
+    println!("quickstart: {} rounds of FL on `mlp`, 5 Xavier + 5 Orin", cfg.rounds);
+    let mut exp = Experiment::build(cfg)?;
+
+    let mut results = Vec::new();
+    for name in ["fedavg", "elastictrainer", "fedel"] {
+        let t0 = std::time::Instant::now();
+        let res = exp.run(Some(name))?;
+        println!(
+            "  {name:<16} final acc {:>5.1}%  simulated {:>6}  (wall {:.1}s)",
+            100.0 * res.final_acc,
+            fedel::util::fmt_hours(res.sim_total_secs),
+            t0.elapsed().as_secs_f64()
+        );
+        results.push(res);
+    }
+    let rows = table1_rows(&results, 0.95, false);
+    render_table1("quickstart summary (speedup at matched accuracy)", &rows, false).print();
+    println!("next: examples/e2e_cifar.rs for the full end-to-end driver");
+    Ok(())
+}

@@ -1,0 +1,99 @@
+"""AOT pipeline: lower every (model, exit) train step + eval step to HLO
+text, write the manifest and deterministic initial parameters.
+
+Run once by `make artifacts`; python never appears on the training path
+afterwards.  HLO *text* (not serialized HloModuleProto) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which
+xla_extension 0.5.1 (the version behind the published `xla` 0.1.6 crate)
+rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Usage:
+  python -m compile.aot --out-dir ../artifacts [--models mlp,vgg_cifar,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import models as zoo
+from .models.base import ModelDef, make_eval_step, make_train_step
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_model(model: ModelDef, out_dir: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    p = model.param_count
+    f32, i32 = jnp.float32, jnp.int32
+    params_s = jax.ShapeDtypeStruct((p,), f32)
+    x_s = jax.ShapeDtypeStruct(model.batched_input_shape(), f32)
+    y_s = jax.ShapeDtypeStruct((model.label_len,), i32)
+    mask_s = jax.ShapeDtypeStruct((p,), f32)
+    lr_s = jax.ShapeDtypeStruct((), f32)
+
+    artifacts = {}
+    for e in range(1, model.num_blocks + 1):
+        t0 = time.time()
+        step = make_train_step(model, e)
+        lowered = jax.jit(step).lower(params_s, x_s, y_s, mask_s, lr_s)
+        text = to_hlo_text(lowered)
+        name = f"train_exit_{e}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        artifacts[f"train_exit_{e}"] = name
+        if verbose:
+            print(f"  [{model.name}] exit {e}/{model.num_blocks}: "
+                  f"{len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s")
+
+    ev = make_eval_step(model)
+    lowered = jax.jit(ev).lower(params_s, x_s, y_s)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, "eval.hlo.txt"), "w") as f:
+        f.write(text)
+    artifacts["eval"] = "eval.hlo.txt"
+
+    init = model.layout.init_flat(model.seed)
+    init.tofile(os.path.join(out_dir, "init.bin"))
+
+    manifest = model.to_manifest()
+    manifest["artifacts"] = artifacts
+    manifest["init"] = "init.bin"
+    manifest["init_sha1"] = hashlib.sha1(init.tobytes()).hexdigest()
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"  [{model.name}] P={p} K={manifest['num_tensors']} "
+              f"B={manifest['num_blocks']} -> {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default=",".join(sorted(zoo.ZOO)),
+                    help="comma-separated zoo names")
+    args = ap.parse_args()
+    names = [n for n in args.models.split(",") if n]
+    t0 = time.time()
+    for n in names:
+        model = zoo.get(n)
+        lower_model(model, os.path.join(args.out_dir, n))
+    print(f"AOT done: {len(names)} models in {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

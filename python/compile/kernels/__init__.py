@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for FedEL's compute hot spots.
+
+masked_sgd   — fused masked-SGD update + g^2 importance accumulation
+matmul.dense — MXU-tiled blocked matmul with Pallas custom_vjp
+softmax_xent — fused row-blocked softmax cross-entropy with custom_vjp
+ref          — pure-jnp oracles every kernel is tested against
+"""
+from . import masked_sgd, matmul, ref, softmax_xent  # noqa: F401

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: fused masked-SGD update + squared-gradient importance.
+
+This is FedEL's per-step parameter hot path: given the flat parameter
+vector, the flat gradient, and the FedEL tensor-selection mask (already
+broadcast to element granularity by the rust coordinator), produce
+
+    new_p = p - lr * mask * g        (frozen tensors: mask == 0)
+    sq    = g * g                    (feeds per-tensor importance sums)
+
+in a single pass over HBM.  Fusing the two avoids reading `g` twice — on a
+real TPU this kernel is memory-bound, so one fused pass is the roofline.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): a 1-D grid over the flat
+vector in `TILE`-element blocks.  Each grid step stages three f32 input
+tiles + writes two output tiles through VMEM: 5 * TILE * 4 bytes = 160 KiB
+at TILE=8192, far below the ~16 MiB VMEM budget, leaving room for the
+pipelined double-buffering the Mosaic compiler inserts automatically.
+Lowered with interpret=True so the CPU PJRT plugin executes plain HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 131072 f32 = 512 KiB per ref: the largest power-of-two tile whose five
+# refs, double-buffered by the Mosaic pipeliner, stay inside a 16 MiB VMEM
+# (5 x 512 KiB x 2 = 5.2 MiB). Perf note (EXPERIMENTS.md §Perf): the
+# original 8192 tile cost 49 grid steps on the 400k-param LM and interpret
+# mode charges ~1-5 ms of full-array staging per step — 76 ms/step, 40% of
+# the whole train step; at 131072 the same update is 11.9 ms (and a single
+# grid step for every other model in the zoo).
+TILE = 131072
+
+
+def _kernel(p_ref, g_ref, m_ref, lr_ref, out_p_ref, out_sq_ref):
+    g = g_ref[...]
+    out_p_ref[...] = p_ref[...] - lr_ref[0] * m_ref[...] * g
+    out_sq_ref[...] = g * g
+
+
+def masked_sgd(params: jax.Array, grads: jax.Array, mask: jax.Array,
+               lr: jax.Array, *, tile: int = TILE):
+    """Fused masked SGD + g^2; returns (new_params, sq_grads).
+
+    Shapes: params/grads/mask are flat f32 [P] (any P — padded internally to
+    a multiple of `tile`); lr is a scalar.
+    """
+    (n,) = params.shape
+    n_pad = (-n) % tile
+    if n_pad:
+        pad = lambda a: jnp.pad(a, (0, n_pad))
+        params, grads, mask = pad(params), pad(grads), pad(mask)
+    total = params.shape[0]
+    grid = (total // tile,)
+    spec = pl.BlockSpec((tile,), lambda i: (i,))
+    new_p, sq = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec,
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((total,), jnp.float32)] * 2,
+        interpret=True,
+    )(params, grads, mask, jnp.reshape(lr, (1,)))
+    if n_pad:
+        new_p, sq = new_p[:n], sq[:n]
+    return new_p, sq
+
+
+def global_importance(w_new: jax.Array, w_old: jax.Array, inv_lr: jax.Array,
+                      *, tile: int = TILE) -> jax.Array:
+    """Elementwise FedEL global-importance kernel: (w_new - w_old)^2 / eta.
+
+    Same 1-D tiling as masked_sgd; the per-tensor segment reduction happens
+    in the caller (jnp) over the manifest layout.
+    """
+
+    def kernel(a_ref, b_ref, s_ref, o_ref):
+        dw = a_ref[...] - b_ref[...]
+        o_ref[...] = dw * dw * s_ref[0]
+
+    (n,) = w_new.shape
+    n_pad = (-n) % tile
+    if n_pad:
+        w_new = jnp.pad(w_new, (0, n_pad))
+        w_old = jnp.pad(w_old, (0, n_pad))
+    total = w_new.shape[0]
+    spec = pl.BlockSpec((tile,), lambda i: (i,))
+    out = pl.pallas_call(
+        kernel,
+        grid=(total // tile,),
+        in_specs=[spec, spec, pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((total,), jnp.float32),
+        interpret=True,
+    )(w_new, w_old, jnp.reshape(inv_lr, (1,)))
+    return out[:n] if n_pad else out

@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: MXU-tiled blocked matmul with f32 accumulator.
+
+The dense layers of every model in the zoo (MLP blocks, early-exit heads,
+transformer QKV/MLP projections) route through this kernel, so it sits on
+the lowered HLO's hot path next to the conv ops XLA fuses itself.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid (M/bm, N/bn, K/bk) with
+the K axis innermost so each (i, j) output tile is revisited across K steps
+and accumulates in place — the classic MXU systolic schedule expressed via
+BlockSpec index maps (the output index map ignores the K grid axis, which
+is how Pallas keeps the tile resident in VMEM between K steps).  Block
+shape (128, 128, 128) is the MXU-native tile; f32 inputs feed the MXU
+directly (bf16 would double throughput on real hardware — numerics stay
+f32 because the oracle comparison and the CPU interpret path are f32).
+
+A custom_vjp (`dense` below) expresses the backward pass as two more
+Pallas matmuls (dx = dy @ w^T, dw = x^T @ dy) so jax.grad of the whole
+model keeps this kernel on the path in the *backward* HLO too.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM, BN, BK = 128, 128, 128
+
+# Largest dimension the adaptive scheduler will cover with a single block.
+# Perf note (EXPERIMENTS.md §Perf): under interpret=True every extra grid
+# step pays full-array staging, making the MXU-canonical 128^3 tiling
+# 20-100x slower than one whole-matrix block for the zoo's <=512-wide
+# matmuls; on a real TPU the 128^3 path is the right schedule, so callers
+# can still request it explicitly.
+MAX_SINGLE_BLOCK = 1024
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def _pad2(a: jax.Array, bm: int, bn: int) -> jax.Array:
+    m, n = a.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        a = jnp.pad(a, ((0, pm), (0, pn)))
+    return a
+
+
+def _round_up(x: int, to: int) -> int:
+    return ((x + to - 1) // to) * to
+
+
+def matmul(x: jax.Array, w: jax.Array, *, bm: int = 0, bn: int = 0,
+           bk: int = 0) -> jax.Array:
+    """Blocked (M,K)@(K,N)->(M,N) f32 matmul; pads ragged edges.
+
+    Block sizes of 0 pick the adaptive schedule: one whole-matrix block
+    when every dim fits MAX_SINGLE_BLOCK (the fast interpret path), else
+    the MXU-canonical 128^3 tiling.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    if bm == 0:
+        if max(m, n, k) <= MAX_SINGLE_BLOCK:
+            bm, bn, bk = _round_up(m, 8), _round_up(n, 128), _round_up(k, 8)
+        else:
+            bm, bn, bk = BM, BN, BK
+    xp, wp = _pad2(x, bm, bk), _pad2(w, bk, bn)
+    mp, kp = xp.shape
+    _, np_ = wp.shape
+    k_steps = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, k_steps=k_steps),
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Pallas-backed matmul with a Pallas backward (custom_vjp)."""
+    return matmul(x, w)
+
+
+def _dense_fwd(x, w):
+    return matmul(x, w), (x, w)
+
+
+def _dense_bwd(res, dy):
+    x, w = res
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    return dx, dw
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

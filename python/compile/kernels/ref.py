@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function here is the *reference semantics*; the Pallas kernels in this
+package must match them to float32 tolerance. pytest (python/tests) asserts
+`assert_allclose(kernel(...), ref(...))` across shape/dtype sweeps driven by
+hypothesis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_sgd_ref(params: jax.Array, grads: jax.Array, mask: jax.Array,
+                   lr: jax.Array) -> jax.Array:
+    """Elementwise masked SGD over the flat parameter vector.
+
+    new_p = p - lr * mask * g.  `mask` is the FedEL tensor-selection mask
+    broadcast to element granularity (sub-tensor masks are allowed: HeteroFL
+    and FIARSE use fractional per-tensor coverage).
+    """
+    return params - lr * mask * grads
+
+
+def sq_accum_ref(grads: jax.Array) -> jax.Array:
+    """Elementwise squared gradients (input to per-tensor importance sums)."""
+    return grads * grads
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Plain f32 matmul accumulator semantics: (M,K) @ (K,N) -> (M,N)."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def softmax_xent_ref(logits: jax.Array, labels: jax.Array):
+    """Row-wise softmax cross entropy.
+
+    Returns (per_example_loss [B], softmax_probs [B, C]); probs are the
+    residual saved for the backward pass: dlogits = (p - onehot(y)) * g / B.
+    """
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / z
+    logp = logits - m - jnp.log(z)
+    loss = -jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32),
+                                axis=-1)[:, 0]
+    return loss, p
+
+
+def global_importance_ref(w_new: jax.Array, w_old: jax.Array,
+                          inv_lr: jax.Array) -> jax.Array:
+    """FedEL global tensor importance, elementwise part (Sec. 4.2):
+
+    I^g = ((w_{r+1} - w_r) / eta) * (w_{r+1} - w_r) = (dw)^2 / eta.
+    Per-tensor reduction happens outside (segment sums over the manifest
+    layout).
+    """
+    dw = w_new - w_old
+    return dw * dw * inv_lr

@@ -1,0 +1,96 @@
+"""L1 Pallas kernel: fused row-blocked softmax cross-entropy.
+
+Every model's loss head lands here (image classifiers: [B, C] logits;
+the LM: [B*T, V] logits).  The kernel fuses max-subtraction, exp,
+normalization, and the label gather into one pass that keeps each logits
+row block resident in VMEM; it emits both the per-row loss and the softmax
+probabilities, which the custom_vjp consumes for the closed-form backward
+dlogits = (p - onehot(y)) * dy_row — no re-materialization of exp() in the
+backward HLO.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid over row blocks of
+`BR` rows; the class axis stays whole (C <= 2048 for every model in the
+zoo -> one row block is at most BR * 2048 * 4 B = 1 MiB of VMEM).  The
+label "gather" is a one-hot dot expressed with broadcasted_iota, which maps
+to the VPU rather than a scalar loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BR = 128  # rows per grid step
+
+
+def _xent_kernel(logits_ref, labels_ref, loss_ref, p_ref):
+    x = logits_ref[...]                       # [br, C]
+    y = labels_ref[...]                       # [br]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / z
+    logp = x - m - jnp.log(z)
+    c = x.shape[-1]
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+              == y[:, None].astype(jnp.int32))
+    loss_ref[...] = -jnp.sum(jnp.where(onehot, logp, 0.0), axis=-1)
+    p_ref[...] = p
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, *, br: int = BR):
+    """Fused softmax cross entropy; returns (per_row_loss [B], probs [B,C])."""
+    b, c = logits.shape
+    pad = (-b) % br
+    if pad:
+        logits = jnp.pad(logits, ((0, pad), (0, 0)))
+        # pad labels with class 0: padded rows are sliced off below.
+        labels = jnp.pad(labels, (0, pad))
+    bp = logits.shape[0]
+    loss, p = pl.pallas_call(
+        _xent_kernel,
+        grid=(bp // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp,), jnp.float32),
+            jax.ShapeDtypeStruct((bp, c), jnp.float32),
+        ],
+        interpret=True,
+    )(logits, labels)
+    if pad:
+        loss, p = loss[:b], p[:b]
+    return loss, p
+
+
+@jax.custom_vjp
+def mean_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy over rows, Pallas fwd + closed-form bwd."""
+    loss, _ = softmax_xent(logits, labels)
+    return jnp.mean(loss)
+
+
+def _mx_fwd(logits, labels):
+    loss, p = softmax_xent(logits, labels)
+    return jnp.mean(loss), (p, labels)
+
+
+def _mx_bwd(res, g):
+    p, labels = res
+    b, c = p.shape
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, p.shape, 1)
+              == labels[:, None].astype(jnp.int32)).astype(jnp.float32)
+    dlogits = (p - onehot) * (g / b)
+    return dlogits, None
+
+
+mean_xent.defvjp(_mx_fwd, _mx_bwd)

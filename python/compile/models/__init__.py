@@ -1,0 +1,30 @@
+"""L2 model zoo: the four FedEL workloads + the fast MLP test model.
+
+Names match the paper's tasks (DESIGN.md §4 lists the substitutions):
+  mlp           — fast-path model for tests/quickstart
+  vgg_cifar     — VGG-style chain CNN, CIFAR10-like (10 classes)
+  vgg_tinyin    — same, Tiny-ImageNet-like (64 classes)
+  resnet_speech — residual CNN, Google-Speech-like (35 classes)
+  tinylm_reddit — causal transformer LM, Reddit-like (perplexity)
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from .base import Layout, ModelDef, TensorSpec, make_eval_step, make_train_step
+from . import mlp, resnet, tinylm, vgg
+
+ZOO: Dict[str, Callable[[], ModelDef]] = {
+    "mlp": mlp.build,
+    "vgg_cifar": vgg.build_cifar,
+    "vgg_tinyin": vgg.build_tinyin,
+    "resnet_speech": resnet.build,
+    "tinylm_reddit": tinylm.build,
+}
+
+
+def get(name: str) -> ModelDef:
+    if name not in ZOO:
+        raise KeyError(f"unknown model {name!r}; have {sorted(ZOO)}")
+    return ZOO[name]()

@@ -1,0 +1,260 @@
+"""L2 model framework: flat-parameter layouts, blocks, and early exits.
+
+Every model in the zoo is expressed over ONE flat f32 parameter vector so
+the rust coordinator can treat parameters, gradients, masks, and
+aggregation as dense `Vec<f32>` operations.  A `Layout` records, for each
+tensor: its flat offset, shape, owning *block* (the unit FedEL's sliding
+window moves over), whether it is an early-exit head, and the forward FLOPs
+of the op it parameterizes (per example) — the raw material for the
+ElasticTrainer tensor timing model on the rust side.
+
+The train step lowered per exit `e` is exactly the FedEL window semantics:
+forward runs through blocks `0..e-1` plus head `e-1` ONLY (blocks >= e are
+absent from the graph, so they cost nothing, unlike plain ElasticTrainer);
+backward computes gradients for everything in the forward graph (the
+chain-rule dependency of Limitation #1), and *freezing* is the elementwise
+`mask` applied by the L1 masked-SGD kernel.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class TensorSpec:
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+    size: int
+    block: int
+    is_head: bool
+    flops_fwd: float  # forward FLOPs (per example) of the op this tensor feeds
+    init: str         # "he" | "zeros" | "embed"
+    init_scale: float = 1.0  # extra multiplier on the init std (residual scaling)
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "offset": self.offset,
+            "size": self.size,
+            "block": self.block,
+            "is_head": self.is_head,
+            "flops_fwd": self.flops_fwd,
+        }
+
+
+class Layout:
+    """Accumulates TensorSpecs and assigns flat offsets."""
+
+    def __init__(self) -> None:
+        self.tensors: List[TensorSpec] = []
+        self._offset = 0
+
+    def add(self, name: str, shape: Sequence[int], block: int, *,
+            flops_fwd: float, is_head: bool = False,
+            init: str = "he", init_scale: float = 1.0) -> int:
+        size = int(np.prod(shape))
+        spec = TensorSpec(name, tuple(shape), self._offset, size, block,
+                          is_head, float(flops_fwd), init, init_scale)
+        self.tensors.append(spec)
+        self._offset += size
+        return len(self.tensors) - 1
+
+    @property
+    def param_count(self) -> int:
+        return self._offset
+
+    def views(self, flat: jax.Array) -> Dict[str, jax.Array]:
+        """Slice the flat vector into named, shaped tensor views."""
+        return {
+            t.name: jax.lax.dynamic_slice_in_dim(flat, t.offset, t.size)
+            .reshape(t.shape)
+            for t in self.tensors
+        }
+
+    def init_flat(self, seed: int) -> np.ndarray:
+        """Deterministic initialization of the full flat vector."""
+        rng = np.random.RandomState(seed)
+        flat = np.zeros(self.param_count, dtype=np.float32)
+        for t in self.tensors:
+            if t.init == "zeros":
+                continue
+            if t.init == "embed":
+                w = rng.randn(*t.shape).astype(np.float32) * 0.02
+            else:  # he
+                fan_in = int(np.prod(t.shape[:-1])) if len(t.shape) > 1 else t.shape[0]
+                std = math.sqrt(2.0 / max(fan_in, 1))
+                w = rng.randn(*t.shape).astype(np.float32) * std
+            flat[t.offset:t.offset + t.size] = w.reshape(-1) * t.init_scale
+        return flat
+
+    def segment_sums(self, elem: jax.Array) -> jax.Array:
+        """Per-tensor sums of an elementwise [P] vector -> [K]."""
+        return jnp.stack([
+            jnp.sum(jax.lax.dynamic_slice_in_dim(elem, t.offset, t.size))
+            for t in self.tensors
+        ])
+
+
+@dataclasses.dataclass
+class ModelDef:
+    """A zoo entry: layout + forward + task metadata.
+
+    forward(views, x, exit_e) must only touch tensors of blocks < exit_e
+    and the head attached to block exit_e - 1, and must return logits of
+    shape [label_len, num_classes].
+    """
+
+    name: str
+    layout: Layout
+    num_blocks: int
+    batch: int
+    input_shape: Tuple[int, ...]   # per-example
+    num_classes: int
+    label_len: int                 # rows of y per batch (B, or B*T for LM)
+    task: str                      # "classification" | "lm"
+    forward: Callable[[Dict[str, jax.Array], jax.Array, int], jax.Array]
+    seed: int = 0
+
+    @property
+    def param_count(self) -> int:
+        return self.layout.param_count
+
+    def batched_input_shape(self) -> Tuple[int, ...]:
+        return (self.batch, *self.input_shape)
+
+    def block_tensor_ids(self) -> List[List[int]]:
+        out: List[List[int]] = [[] for _ in range(self.num_blocks)]
+        for i, t in enumerate(self.layout.tensors):
+            out[t.block].append(i)
+        return out
+
+    def to_manifest(self) -> dict:
+        blocks = []
+        ids = self.block_tensor_ids()
+        for b in range(self.num_blocks):
+            flops = sum(self.layout.tensors[i].flops_fwd for i in ids[b]
+                        if not self.layout.tensors[i].is_head)
+            blocks.append({"id": b, "tensor_ids": ids[b], "flops_fwd": flops})
+        return {
+            "model": self.name,
+            "batch": self.batch,
+            "input_shape": list(self.input_shape),
+            "num_classes": self.num_classes,
+            "label_len": self.label_len,
+            "task": self.task,
+            "param_count": self.param_count,
+            "num_tensors": len(self.layout.tensors),
+            "num_blocks": self.num_blocks,
+            "tensors": [t.to_json() for t in self.layout.tensors],
+            "blocks": blocks,
+            "exits": list(range(1, self.num_blocks + 1)),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Train / eval step builders (shared by every model).
+# ---------------------------------------------------------------------------
+
+def make_train_step(model: ModelDef, exit_e: int):
+    """Build the masked-SGD train step for early exit `exit_e` (1..B).
+
+    Signature (all f32 unless noted):
+      (params [P], x [batch, ...], y [label_len] i32, mask [P], lr [])
+        -> (new_params [P], loss [], tensor_sq_grads [K])
+    """
+    from ..kernels import masked_sgd as ms
+    from ..kernels import softmax_xent as sx
+
+    def loss_fn(params, x, y):
+        views = model.layout.views(params)
+        logits = model.forward(views, x, exit_e)
+        return sx.mean_xent(logits, y)
+
+    def step(params, x, y, mask, lr):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        new_params, sq = ms.masked_sgd(params, grads, mask, lr)
+        return new_params, loss, model.layout.segment_sums(sq)
+
+    return step
+
+
+def make_eval_step(model: ModelDef):
+    """Full-model eval: (params, x, y) -> (metric_sum, loss_sum).
+
+    metric_sum = #correct rows (classification) == also #correct next-token
+    predictions for the LM; loss_sum = summed xent, so the rust side can
+    compute accuracy = metric/rows and perplexity = exp(loss/rows).
+    """
+    from ..kernels import softmax_xent as sx
+
+    def step(params, x, y):
+        views = model.layout.views(params)
+        logits = model.forward(views, x, model.num_blocks)
+        loss, _ = sx.softmax_xent(logits, y)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        correct = jnp.sum((pred == y.astype(jnp.int32)).astype(jnp.float32))
+        return correct, jnp.sum(loss)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Shared layer helpers.
+# ---------------------------------------------------------------------------
+
+def dense_apply(views: Dict[str, jax.Array], name: str, x: jax.Array,
+                *, use_pallas: bool = True) -> jax.Array:
+    """x @ W + b through the Pallas dense kernel."""
+    w = views[f"{name}/w"]
+    b = views[f"{name}/b"]
+    if use_pallas:
+        from ..kernels.matmul import dense as pallas_dense
+        return pallas_dense(x, w) + b
+    return jnp.matmul(x, w) + b
+
+
+def conv2d(views: Dict[str, jax.Array], name: str, x: jax.Array,
+           stride: int = 1) -> jax.Array:
+    """NHWC 3x3 same conv + bias (XLA-native; see DESIGN.md §2)."""
+    w = views[f"{name}/w"]   # HWIO
+    b = views[f"{name}/b"]
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + b
+
+
+def conv2d_1x1(views: Dict[str, jax.Array], name: str, x: jax.Array,
+               stride: int = 1) -> jax.Array:
+    w = views[f"{name}/w"]
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y
+
+
+def maxpool2(x: jax.Array) -> jax.Array:
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def gap(x: jax.Array) -> jax.Array:
+    """Global average pool NHWC -> [N, C]."""
+    return jnp.mean(x, axis=(1, 2))
+
+
+def conv_flops(h: int, w: int, k: int, cin: int, cout: int) -> float:
+    return 2.0 * h * w * k * k * cin * cout
+
+
+def dense_flops(din: int, dout: int, rows: int = 1) -> float:
+    return 2.0 * din * dout * rows

@@ -1,0 +1,43 @@
+"""MLP zoo entry: the fast-path model for tests, quickstart, and CI.
+
+Six Dense+ReLU blocks over a 64-d synthetic feature vector, an early-exit
+head (Dense -> classes) after every block.  Small enough that a full FL
+experiment runs in seconds, yet exercises every FedEL code path (blocks,
+exits, masks, importance).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .base import Layout, ModelDef, dense_apply, dense_flops
+
+
+def build(num_blocks: int = 6, width: int = 64, num_classes: int = 10,
+          batch: int = 32, in_dim: int = 64, seed: int = 1) -> ModelDef:
+    lay = Layout()
+    dims = [in_dim] + [width] * num_blocks
+    for b in range(num_blocks):
+        lay.add(f"block{b}/dense/w", (dims[b], dims[b + 1]), b,
+                flops_fwd=dense_flops(dims[b], dims[b + 1]))
+        lay.add(f"block{b}/dense/b", (dims[b + 1],), b,
+                flops_fwd=float(dims[b + 1]), init="zeros")
+        # Early-exit head attached to block b (head b == exit b+1).
+        lay.add(f"head{b}/w", (dims[b + 1], num_classes), b,
+                flops_fwd=dense_flops(dims[b + 1], num_classes), is_head=True, init_scale=0.1)
+        lay.add(f"head{b}/b", (num_classes,), b,
+                flops_fwd=float(num_classes), is_head=True, init="zeros")
+
+    def forward(views: Dict[str, jax.Array], x: jax.Array, exit_e: int):
+        h = x
+        for b in range(exit_e):
+            h = jax.nn.relu(dense_apply(views, f"block{b}/dense", h))
+        return dense_apply(views, f"head{exit_e - 1}", h)
+
+    return ModelDef(
+        name="mlp", layout=lay, num_blocks=num_blocks, batch=batch,
+        input_shape=(in_dim,), num_classes=num_classes, label_len=batch,
+        task="classification", forward=forward, seed=seed)

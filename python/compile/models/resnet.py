@@ -1,0 +1,86 @@
+"""Residual CNN: the paper's speech-recognition workload.
+
+Paper: ResNet50 on Google Speech Commands (35-way keyword spotting).
+Here: a residual network over 32x32x1 synthetic mel-spectrogram-like
+inputs (DESIGN.md §4).  Following the paper's Sec. 4.1 blocking rule for
+residual architectures, *each residual unit is one window block* (the stem
+conv is its own block), so the sliding window never splits a skip
+connection.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .base import (Layout, ModelDef, conv2d, conv2d_1x1, conv_flops,
+                   dense_apply, dense_flops, gap)
+
+# (cout, stride) per residual block after the stem.
+RES_PLAN = [(16, 1), (32, 2), (32, 1), (64, 2), (64, 1)]
+
+
+def build(num_classes: int = 35, batch: int = 16, seed: int = 4) -> ModelDef:
+    lay = Layout()
+    h = w = 32
+
+    # Block 0: stem conv 1 -> 16.
+    lay.add("block0/conv/w", (3, 3, 1, 16), 0,
+            flops_fwd=conv_flops(h, w, 3, 1, 16))
+    lay.add("block0/conv/b", (16,), 0, flops_fwd=float(h * w * 16),
+            init="zeros")
+    lay.add("head0/w", (16, num_classes), 0,
+            flops_fwd=dense_flops(16, num_classes), is_head=True, init_scale=0.1)
+    lay.add("head0/b", (num_classes,), 0, flops_fwd=float(num_classes),
+            is_head=True, init="zeros")
+
+    cin = 16
+    dims = []
+    for i, (cout, stride) in enumerate(RES_PLAN):
+        b = i + 1
+        if stride == 2:
+            h, w = h // 2, w // 2
+        lay.add(f"block{b}/conv1/w", (3, 3, cin, cout), b,
+                flops_fwd=conv_flops(h, w, 3, cin, cout))
+        lay.add(f"block{b}/conv1/b", (cout,), b,
+                flops_fwd=float(h * w * cout), init="zeros")
+        # conv2 starts near zero so each residual unit begins ~identity
+        # (fixup-style; no batchnorm in the zoo).
+        lay.add(f"block{b}/conv2/w", (3, 3, cout, cout), b,
+                flops_fwd=conv_flops(h, w, 3, cout, cout), init_scale=0.1)
+        lay.add(f"block{b}/conv2/b", (cout,), b,
+                flops_fwd=float(h * w * cout), init="zeros")
+        if cin != cout or stride != 1:
+            lay.add(f"block{b}/skip/w", (1, 1, cin, cout), b,
+                    flops_fwd=conv_flops(h, w, 1, cin, cout))
+        lay.add(f"head{b}/w", (cout, num_classes), b,
+                flops_fwd=dense_flops(cout, num_classes), is_head=True, init_scale=0.1)
+        lay.add(f"head{b}/b", (num_classes,), b, flops_fwd=float(num_classes),
+                is_head=True, init="zeros")
+        dims.append((cin, cout, stride))
+        cin = cout
+
+    def forward(views: Dict[str, jax.Array], x: jax.Array, exit_e: int):
+        hmap = jax.nn.relu(conv2d(views, "block0/conv", x))
+        for i, (ci, co, stride) in enumerate(dims):
+            b = i + 1
+            if b >= exit_e:
+                break
+            y = jax.nn.relu(conv2d(views, f"block{b}/conv1", hmap,
+                                   stride=stride))
+            y = conv2d(views, f"block{b}/conv2", y)
+            if ci != co or stride != 1:
+                skip = conv2d_1x1(views, f"block{b}/skip", hmap,
+                                  stride=stride)
+            else:
+                skip = hmap
+            hmap = jax.nn.relu(y + skip)
+        pooled = gap(hmap)
+        return dense_apply(views, f"head{exit_e - 1}", pooled)
+
+    return ModelDef(
+        name="resnet_speech", layout=lay, num_blocks=len(RES_PLAN) + 1,
+        batch=batch, input_shape=(32, 32, 1), num_classes=num_classes,
+        label_len=batch, task="classification", forward=forward, seed=seed)

@@ -1,0 +1,111 @@
+"""Transformer LM: the paper's NLP workload (next-word prediction).
+
+Paper: lightweight ALBERT fine-tuned on Reddit, evaluated by perplexity,
+with ELBERT-style per-layer early exits defining the window blocks.
+Here: a small causal transformer over a synthetic Markov token stream
+(DESIGN.md §4): block 0 = embeddings (+learned positions), blocks 1..L =
+transformer layers, with an early-exit LM head (Dense d->V) at every block
+boundary.  Dense projections route through the Pallas matmul kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .base import Layout, ModelDef, dense_apply, dense_flops
+
+
+def build(vocab: int = 512, seq: int = 32, d: int = 64, layers: int = 4,
+          heads: int = 4, mlp_mult: int = 4, batch: int = 8,
+          seed: int = 5) -> ModelDef:
+    lay = Layout()
+    dh = d // heads
+    dm = d * mlp_mult
+
+    # Block 0: token + position embeddings.
+    lay.add("block0/embed/tok", (vocab, d), 0, flops_fwd=float(seq * d),
+            init="embed")
+    lay.add("block0/embed/pos", (seq, d), 0, flops_fwd=float(seq * d),
+            init="embed")
+    lay.add("head0/w", (d, vocab), 0,
+            flops_fwd=dense_flops(d, vocab, seq), is_head=True, init_scale=0.1)
+    lay.add("head0/b", (vocab,), 0, flops_fwd=float(vocab), is_head=True,
+            init="zeros")
+
+    for i in range(layers):
+        b = i + 1
+        pref = f"block{b}"
+        res_scale = 1.0 / (2.0 * layers) ** 0.5  # GPT-2 style residual init
+        for nm, (di, do) in {"q": (d, d), "k": (d, d), "v": (d, d),
+                             "o": (d, d)}.items():
+            lay.add(f"{pref}/attn/{nm}/w", (di, do), b,
+                    flops_fwd=dense_flops(di, do, seq),
+                    init_scale=res_scale if nm == "o" else 1.0)
+            lay.add(f"{pref}/attn/{nm}/b", (do,), b, flops_fwd=float(do),
+                    init="zeros")
+        lay.add(f"{pref}/ln1/g", (d,), b, flops_fwd=float(seq * d),
+                init="zeros")  # stored as (gain - 1): init 0 => gain 1
+        lay.add(f"{pref}/mlp/fc1/w", (d, dm), b,
+                flops_fwd=dense_flops(d, dm, seq))
+        lay.add(f"{pref}/mlp/fc1/b", (dm,), b, flops_fwd=float(dm),
+                init="zeros")
+        lay.add(f"{pref}/mlp/fc2/w", (dm, d), b,
+                flops_fwd=dense_flops(dm, d, seq), init_scale=res_scale)
+        lay.add(f"{pref}/mlp/fc2/b", (d,), b, flops_fwd=float(d),
+                init="zeros")
+        lay.add(f"{pref}/ln2/g", (d,), b, flops_fwd=float(seq * d),
+                init="zeros")
+        lay.add(f"head{b}/w", (d, vocab), b,
+                flops_fwd=dense_flops(d, vocab, seq), is_head=True, init_scale=0.1)
+        lay.add(f"head{b}/b", (vocab,), b, flops_fwd=float(vocab),
+                is_head=True, init="zeros")
+
+    def layernorm(x, gain_minus_one):
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + 1e-5) * (1.0 + gain_minus_one)
+
+    causal = jnp.tril(jnp.ones((seq, seq), jnp.float32))
+
+    def attention(views, pref, x, bsz):
+        def proj(nm, t):
+            flat = t.reshape(bsz * seq, d)
+            out = dense_apply(views, f"{pref}/attn/{nm}", flat)
+            return out.reshape(bsz, seq, d)
+
+        q, k, v = proj("q", x), proj("k", x), proj("v", x)
+        q = q.reshape(bsz, seq, heads, dh).transpose(0, 2, 1, 3)
+        k = k.reshape(bsz, seq, heads, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(bsz, seq, heads, dh).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+        att = jnp.where(causal[None, None] > 0, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        y = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        y = y.transpose(0, 2, 1, 3).reshape(bsz, seq, d)
+        return proj("o", y)
+
+    def forward(views: Dict[str, jax.Array], x: jax.Array, exit_e: int):
+        # x: [bsz, seq] int32 token ids (passed as f32 and cast).
+        bsz = x.shape[0]
+        ids = x.astype(jnp.int32)
+        h = views["block0/embed/tok"][ids] + views["block0/embed/pos"][None]
+        for i in range(exit_e - 1):
+            b = i + 1
+            pref = f"block{b}"
+            h = h + attention(views, pref,
+                              layernorm(h, views[f"{pref}/ln1/g"]), bsz)
+            hm = layernorm(h, views[f"{pref}/ln2/g"])
+            hm = hm.reshape(bsz * seq, d)
+            hm = jax.nn.relu(dense_apply(views, f"{pref}/mlp/fc1", hm))
+            hm = dense_apply(views, f"{pref}/mlp/fc2", hm)
+            h = h + hm.reshape(bsz, seq, d)
+        flat = h.reshape(bsz * seq, d)
+        return dense_apply(views, f"head{exit_e - 1}", flat)
+
+    return ModelDef(
+        name="tinylm_reddit", layout=lay, num_blocks=layers + 1, batch=batch,
+        input_shape=(seq,), num_classes=vocab, label_len=batch * seq,
+        task="lm", forward=forward, seed=seed)

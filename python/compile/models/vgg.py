@@ -1,0 +1,71 @@
+"""VGG-style chain CNN: the paper's image-classification workload.
+
+Paper: VGG16 on CIFAR10 / Tiny ImageNet.  Here: the same chain-of-conv
+architecture scaled for CPU-PJRT training (DESIGN.md §4 substitutions) —
+eight conv blocks over 32x32x3 inputs, a maxpool every second block, an
+early-exit head (GAP -> Dense) at every block boundary.  In a chain network
+every layer is its own window block, exactly the paper's Sec. 4.1 choice
+for VGG16.
+
+`vgg_cifar`  : 10 classes (CIFAR10-like)
+`vgg_tinyin` : 64 classes (Tiny-ImageNet-like)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .base import (Layout, ModelDef, conv2d, conv_flops, dense_apply,
+                   dense_flops, gap, maxpool2)
+
+# (channels, pool-after-block?) per block; spatial starts at 32x32.
+PLAN = [(8, False), (8, True), (16, False), (16, True),
+        (32, False), (32, True), (64, False), (64, True)]
+
+
+def build(name: str = "vgg_cifar", num_classes: int = 10, batch: int = 16,
+          seed: int = 2, plan: List = None) -> ModelDef:
+    plan = plan or PLAN
+    lay = Layout()
+    h = w = 32
+    cin = 3
+    spatial = []
+    for b, (cout, pool) in enumerate(plan):
+        lay.add(f"block{b}/conv/w", (3, 3, cin, cout), b,
+                flops_fwd=conv_flops(h, w, 3, cin, cout))
+        lay.add(f"block{b}/conv/b", (cout,), b,
+                flops_fwd=float(h * w * cout), init="zeros")
+        if pool:
+            h, w = h // 2, w // 2
+        spatial.append((h, w))
+        # Early-exit head: GAP -> dense(cout -> classes).
+        lay.add(f"head{b}/w", (cout, num_classes), b,
+                flops_fwd=dense_flops(cout, num_classes), is_head=True, init_scale=0.1)
+        lay.add(f"head{b}/b", (num_classes,), b,
+                flops_fwd=float(num_classes), is_head=True, init="zeros")
+        cin = cout
+
+    def forward(views: Dict[str, jax.Array], x: jax.Array, exit_e: int):
+        hmap = x
+        for b in range(exit_e):
+            hmap = jax.nn.relu(conv2d(views, f"block{b}/conv", hmap))
+            if plan[b][1]:
+                hmap = maxpool2(hmap)
+        pooled = gap(hmap)
+        return dense_apply(views, f"head{exit_e - 1}", pooled)
+
+    return ModelDef(
+        name=name, layout=lay, num_blocks=len(plan), batch=batch,
+        input_shape=(32, 32, 3), num_classes=num_classes, label_len=batch,
+        task="classification", forward=forward, seed=seed)
+
+
+def build_cifar(batch: int = 16) -> ModelDef:
+    return build("vgg_cifar", num_classes=10, batch=batch, seed=2)
+
+
+def build_tinyin(batch: int = 16) -> ModelDef:
+    return build("vgg_tinyin", num_classes=64, batch=batch, seed=3)

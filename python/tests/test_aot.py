@@ -1,0 +1,76 @@
+"""AOT pipeline: HLO text round-trips, manifest consistency with artifacts."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import models as zoo
+from compile.models.base import make_train_step
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_hlo_text_is_parseable_hlo_module():
+    m = zoo.get("mlp")
+    p = m.param_count
+    step = make_train_step(m, 1)
+    lowered = jax.jit(step).lower(
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct(m.batched_input_shape(), jnp.float32),
+        jax.ShapeDtypeStruct((m.label_len,), jnp.int32),
+        jax.ShapeDtypeStruct((p,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # the tuple return convention the rust loader expects
+    assert "f32[%d]" % p in text
+
+
+@pytest.mark.parametrize("name", sorted(zoo.ZOO))
+def test_manifest_matches_model(name):
+    """Manifest on disk (if `make artifacts` ran) must match the zoo."""
+    mdir = os.path.join(ART, name)
+    if not os.path.exists(os.path.join(mdir, "manifest.json")):
+        pytest.skip("artifacts not built")
+    man = json.load(open(os.path.join(mdir, "manifest.json")))
+    m = zoo.get(name)
+    assert man["param_count"] == m.param_count
+    assert man["num_blocks"] == m.num_blocks
+    assert man["num_tensors"] == len(m.layout.tensors)
+    for ts, t in zip(man["tensors"], m.layout.tensors):
+        assert ts["name"] == t.name
+        assert ts["offset"] == t.offset
+        assert ts["size"] == t.size
+        assert ts["block"] == t.block
+
+
+@pytest.mark.parametrize("name", sorted(zoo.ZOO))
+def test_artifact_files_exist(name):
+    mdir = os.path.join(ART, name)
+    if not os.path.exists(os.path.join(mdir, "manifest.json")):
+        pytest.skip("artifacts not built")
+    man = json.load(open(os.path.join(mdir, "manifest.json")))
+    for _, fname in man["artifacts"].items():
+        path = os.path.join(mdir, fname)
+        assert os.path.exists(path), fname
+        assert os.path.getsize(path) > 100
+    init = np.fromfile(os.path.join(mdir, man["init"]), dtype=np.float32)
+    assert init.shape == (man["param_count"],)
+    import hashlib
+    assert hashlib.sha1(init.tobytes()).hexdigest() == man["init_sha1"]
+
+
+def test_init_bin_reproducible_from_zoo():
+    name = "mlp"
+    mdir = os.path.join(ART, name)
+    if not os.path.exists(os.path.join(mdir, "init.bin")):
+        pytest.skip("artifacts not built")
+    on_disk = np.fromfile(os.path.join(mdir, "init.bin"), dtype=np.float32)
+    m = zoo.get(name)
+    np.testing.assert_array_equal(on_disk, m.layout.init_flat(m.seed))

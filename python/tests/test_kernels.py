@@ -1,0 +1,237 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (including ragged, non-tile-multiple sizes) and
+value ranges; assert_allclose against ref.py is THE correctness signal for
+the kernels that end up inside every AOT artifact.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import masked_sgd as ms
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+from compile.kernels import softmax_xent as sx
+
+F32 = np.float32
+
+
+def rnd(rs, *shape):
+    return jnp.asarray(rs.randn(*shape).astype(F32))
+
+
+# ---------------------------------------------------------------------------
+# masked_sgd
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 5000), seed=st.integers(0, 2**31 - 1),
+       lr=st.floats(1e-4, 1.0))
+def test_masked_sgd_matches_ref(n, seed, lr):
+    rs = np.random.RandomState(seed)
+    p, g = rnd(rs, n), rnd(rs, n)
+    mask = jnp.asarray((rs.rand(n) > 0.5).astype(F32))
+    new_p, sq = ms.masked_sgd(p, g, mask, jnp.float32(lr), tile=256)
+    np.testing.assert_allclose(new_p, ref.masked_sgd_ref(p, g, mask, lr),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(sq, ref.sq_accum_ref(g), rtol=1e-6, atol=1e-7)
+
+
+def test_masked_sgd_zero_mask_freezes_everything():
+    rs = np.random.RandomState(0)
+    p, g = rnd(rs, 1000), rnd(rs, 1000)
+    new_p, _ = ms.masked_sgd(p, g, jnp.zeros(1000, F32), jnp.float32(0.5),
+                             tile=128)
+    np.testing.assert_array_equal(np.asarray(new_p), np.asarray(p))
+
+
+def test_masked_sgd_full_mask_is_plain_sgd():
+    rs = np.random.RandomState(1)
+    p, g = rnd(rs, 777), rnd(rs, 777)
+    new_p, _ = ms.masked_sgd(p, g, jnp.ones(777, F32), jnp.float32(0.1),
+                             tile=128)
+    np.testing.assert_allclose(new_p, p - 0.1 * g, rtol=1e-5, atol=1e-6)
+
+
+def test_masked_sgd_fractional_mask():
+    """HeteroFL/FIARSE-style sub-tensor (fractional-coverage) masks."""
+    rs = np.random.RandomState(2)
+    p, g = rnd(rs, 300), rnd(rs, 300)
+    mask = jnp.asarray(np.repeat([1.0, 0.0, 1.0], 100).astype(F32))
+    new_p, _ = ms.masked_sgd(p, g, mask, jnp.float32(0.2), tile=64)
+    got = np.asarray(new_p)
+    np.testing.assert_allclose(got[100:200], np.asarray(p)[100:200])
+    np.testing.assert_allclose(got[:100], np.asarray(p - 0.2 * g)[:100],
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_masked_sgd_exact_tile_multiple_no_padding():
+    rs = np.random.RandomState(3)
+    n = 1024
+    p, g = rnd(rs, n), rnd(rs, n)
+    mask = jnp.ones(n, F32)
+    new_p, sq = ms.masked_sgd(p, g, mask, jnp.float32(0.01), tile=256)
+    assert new_p.shape == (n,) and sq.shape == (n,)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 3000), seed=st.integers(0, 2**31 - 1),
+       lr=st.floats(1e-3, 1.0))
+def test_global_importance_matches_ref(n, seed, lr):
+    rs = np.random.RandomState(seed)
+    w_new, w_old = rnd(rs, n), rnd(rs, n)
+    inv_lr = jnp.float32(1.0 / lr)
+    got = ms.global_importance(w_new, w_old, inv_lr, tile=256)
+    np.testing.assert_allclose(
+        got, ref.global_importance_ref(w_new, w_old, inv_lr),
+        rtol=1e-5, atol=1e-6)
+
+
+def test_global_importance_nonnegative():
+    rs = np.random.RandomState(4)
+    a, b = rnd(rs, 500), rnd(rs, 500)
+    out = np.asarray(ms.global_importance(a, b, jnp.float32(2.0), tile=128))
+    assert (out >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# matmul / dense
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 150), k=st.integers(1, 150), n=st.integers(1, 150),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref(m, k, n, seed):
+    rs = np.random.RandomState(seed)
+    x, w = rnd(rs, m, k), rnd(rs, k, n)
+    got = mm.matmul(x, w, bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_matmul_exact_block_sizes():
+    rs = np.random.RandomState(5)
+    x, w = rnd(rs, 128, 128), rnd(rs, 128, 128)
+    np.testing.assert_allclose(mm.matmul(x, w), ref.matmul_ref(x, w),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_identity():
+    eye = jnp.eye(64, dtype=F32)
+    rs = np.random.RandomState(6)
+    x = rnd(rs, 64, 64)
+    np.testing.assert_allclose(mm.matmul(x, eye, bm=32, bn=32, bk=32), x,
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_dense_vjp_matches_autodiff():
+    rs = np.random.RandomState(7)
+    x, w = rnd(rs, 40, 30), rnd(rs, 30, 20)
+
+    def f_pallas(x, w):
+        return jnp.sum(jnp.tanh(mm.dense(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.tanh(ref.matmul_ref(x, w)))
+
+    gx, gw = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    rx, rw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, rw, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# softmax_xent
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 200), c=st.integers(2, 64),
+       seed=st.integers(0, 2**31 - 1))
+def test_softmax_xent_matches_ref(b, c, seed):
+    rs = np.random.RandomState(seed)
+    logits = rnd(rs, b, c)
+    labels = jnp.asarray(rs.randint(0, c, b).astype(np.int32))
+    loss, p = sx.softmax_xent(logits, labels, br=32)
+    lref, pref = ref.softmax_xent_ref(logits, labels)
+    np.testing.assert_allclose(loss, lref, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(p, pref, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_xent_probs_sum_to_one():
+    rs = np.random.RandomState(8)
+    logits = rnd(rs, 50, 10)
+    labels = jnp.asarray(rs.randint(0, 10, 50).astype(np.int32))
+    _, p = sx.softmax_xent(logits, labels, br=16)
+    np.testing.assert_allclose(np.asarray(p).sum(-1), np.ones(50), rtol=1e-5)
+
+
+def test_softmax_xent_extreme_logits_stable():
+    logits = jnp.asarray([[1000.0, -1000.0], [-1000.0, 1000.0]], F32)
+    labels = jnp.asarray([0, 1], np.int32)
+    loss, _ = sx.softmax_xent(logits, labels, br=2)
+    assert np.isfinite(np.asarray(loss)).all()
+    np.testing.assert_allclose(np.asarray(loss), [0.0, 0.0], atol=1e-5)
+
+
+def test_mean_xent_grad_matches_autodiff():
+    rs = np.random.RandomState(9)
+    logits = rnd(rs, 33, 12)
+    labels = jnp.asarray(rs.randint(0, 12, 33).astype(np.int32))
+    g = jax.grad(lambda l: sx.mean_xent(l, labels))(logits)
+    gr = jax.grad(lambda l: jnp.mean(ref.softmax_xent_ref(l, labels)[0]))(
+        logits)
+    np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-6)
+
+
+def test_mean_xent_grad_sums_to_zero_rows():
+    """dlogits rows of softmax-xent always sum to ~0."""
+    rs = np.random.RandomState(10)
+    logits = rnd(rs, 17, 9)
+    labels = jnp.asarray(rs.randint(0, 9, 17).astype(np.int32))
+    g = np.asarray(jax.grad(lambda l: sx.mean_xent(l, labels))(logits))
+    np.testing.assert_allclose(g.sum(-1), np.zeros(17), atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# adaptive matmul scheduling (perf-pass regression tests)
+# ---------------------------------------------------------------------------
+
+def test_matmul_adaptive_single_block_matches_ref():
+    rs = np.random.RandomState(11)
+    x, w = rnd(rs, 200, 300), rnd(rs, 300, 150)
+    got = mm.matmul(x, w)  # bm=0 -> adaptive whole-matrix schedule
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-3)
+
+
+def test_matmul_adaptive_falls_back_to_mxu_tiles_when_large():
+    rs = np.random.RandomState(12)
+    # one dim above MAX_SINGLE_BLOCK -> the 128^3 path
+    x, w = rnd(rs, 8, mm.MAX_SINGLE_BLOCK + 64), rnd(rs, mm.MAX_SINGLE_BLOCK + 64, 8)
+    got = mm.matmul(x, w)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-3, atol=1e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96),
+       seed=st.integers(0, 2**31 - 1))
+def test_matmul_adaptive_matches_explicit_blocks(m, k, n, seed):
+    rs = np.random.RandomState(seed)
+    x, w = rnd(rs, m, k), rnd(rs, k, n)
+    a = mm.matmul(x, w)
+    b = mm.matmul(x, w, bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_masked_sgd_large_vector_single_tile():
+    """The perf-pass TILE covers <=131072 params in one grid step."""
+    rs = np.random.RandomState(13)
+    n = ms.TILE  # exactly one tile
+    p, g = rnd(rs, n), rnd(rs, n)
+    mask = jnp.ones(n, F32)
+    new_p, sq = ms.masked_sgd(p, g, mask, jnp.float32(0.01))
+    np.testing.assert_allclose(new_p, ref.masked_sgd_ref(p, g, mask, 0.01),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(sq, ref.sq_accum_ref(g), rtol=1e-6, atol=1e-7)

@@ -1,0 +1,219 @@
+"""L2 model-zoo correctness: layouts, early exits, masked train semantics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import models as zoo
+from compile.models.base import make_eval_step, make_train_step
+
+F32 = np.float32
+ALL_MODELS = sorted(zoo.ZOO)
+
+
+def make_batch(m, seed=0):
+    rs = np.random.RandomState(seed)
+    if m.task == "lm":
+        x = rs.randint(0, m.num_classes, m.batched_input_shape()).astype(F32)
+    else:
+        x = rs.randn(*m.batched_input_shape()).astype(F32)
+    y = rs.randint(0, m.num_classes, m.label_len).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+# ---------------------------------------------------------------------------
+# Layout invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_layout_offsets_are_contiguous(name):
+    m = zoo.get(name)
+    off = 0
+    for t in m.layout.tensors:
+        assert t.offset == off
+        assert t.size == int(np.prod(t.shape))
+        off += t.size
+    assert off == m.param_count
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_layout_blocks_cover_all_tensors(name):
+    m = zoo.get(name)
+    ids = m.block_tensor_ids()
+    flat = sorted(i for blk in ids for i in blk)
+    assert flat == list(range(len(m.layout.tensors)))
+    # every block has at least one non-head tensor and one head tensor
+    for b, blk in enumerate(ids):
+        kinds = {m.layout.tensors[i].is_head for i in blk}
+        assert kinds == {True, False}, f"block {b} missing head or body"
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_init_deterministic(name):
+    m1, m2 = zoo.get(name), zoo.get(name)
+    a = m1.layout.init_flat(m1.seed)
+    b = m2.layout.init_flat(m2.seed)
+    np.testing.assert_array_equal(a, b)
+    assert a.dtype == np.float32
+    assert np.isfinite(a).all()
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_manifest_schema(name):
+    m = zoo.get(name)
+    man = m.to_manifest()
+    for key in ("model", "batch", "input_shape", "num_classes", "label_len",
+                "task", "param_count", "num_tensors", "num_blocks",
+                "tensors", "blocks", "exits"):
+        assert key in man, key
+    assert man["num_tensors"] == len(man["tensors"])
+    assert man["exits"] == list(range(1, man["num_blocks"] + 1))
+    assert all(b["flops_fwd"] > 0 for b in man["blocks"])
+
+
+# ---------------------------------------------------------------------------
+# Early-exit semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_all_exits_produce_logits(name):
+    m = zoo.get(name)
+    params = jnp.asarray(m.layout.init_flat(m.seed))
+    x, _ = make_batch(m)
+    views = m.layout.views(params)
+    for e in range(1, m.num_blocks + 1):
+        logits = m.forward(views, x, e)
+        assert logits.shape == (m.label_len, m.num_classes), (name, e)
+        assert np.isfinite(np.asarray(logits)).all(), (name, e)
+
+
+@pytest.mark.parametrize("name", ["mlp", "vgg_cifar"])
+def test_exit_e_ignores_deeper_blocks(name):
+    """Perturbing blocks >= e must not change exit-e logits."""
+    m = zoo.get(name)
+    params = m.layout.init_flat(m.seed)
+    x, _ = make_batch(m)
+    e = 2
+    base = m.forward(m.layout.views(jnp.asarray(params)), x, e)
+    tampered = params.copy()
+    for t in m.layout.tensors:
+        if t.block >= e:
+            tampered[t.offset:t.offset + t.size] += 7.0
+    got = m.forward(m.layout.views(jnp.asarray(tampered)), x, e)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+
+
+@pytest.mark.parametrize("name", ["mlp", "vgg_cifar"])
+def test_exit_e_uses_own_head_only(name):
+    """Perturbing other heads must not change exit-e logits."""
+    m = zoo.get(name)
+    params = m.layout.init_flat(m.seed)
+    x, _ = make_batch(m)
+    e = 3
+    base = m.forward(m.layout.views(jnp.asarray(params)), x, e)
+    tampered = params.copy()
+    for t in m.layout.tensors:
+        if t.is_head and not t.name.startswith(f"head{e - 1}/"):
+            tampered[t.offset:t.offset + t.size] -= 3.0
+    got = m.forward(m.layout.views(jnp.asarray(tampered)), x, e)
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# Train-step semantics (the exact artifact the rust runtime executes)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_train_step_shapes_and_finiteness(name):
+    m = zoo.get(name)
+    params = jnp.asarray(m.layout.init_flat(m.seed))
+    x, y = make_batch(m)
+    mask = jnp.ones(m.param_count, F32)
+    step = jax.jit(make_train_step(m, m.num_blocks))
+    new_p, loss, sq = step(params, x, y, mask, jnp.float32(0.01))
+    assert new_p.shape == (m.param_count,)
+    assert sq.shape == (len(m.layout.tensors),)
+    assert np.isfinite(float(loss))
+    assert np.isfinite(np.asarray(new_p)).all()
+    assert (np.asarray(sq) >= 0).all()
+
+
+@pytest.mark.parametrize("name", ["mlp", "vgg_cifar", "tinylm_reddit"])
+def test_train_step_mask_freezes_tensors(name):
+    m = zoo.get(name)
+    params = m.layout.init_flat(m.seed)
+    x, y = make_batch(m)
+    mask = np.ones(m.param_count, F32)
+    frozen = [t for t in m.layout.tensors if t.block == 0 and not t.is_head]
+    for t in frozen:
+        mask[t.offset:t.offset + t.size] = 0.0
+    step = jax.jit(make_train_step(m, m.num_blocks))
+    new_p, _, _ = step(jnp.asarray(params), x, y, jnp.asarray(mask),
+                       jnp.float32(0.05))
+    got = np.asarray(new_p)
+    for t in frozen:
+        np.testing.assert_array_equal(got[t.offset:t.offset + t.size],
+                                      params[t.offset:t.offset + t.size])
+
+
+@pytest.mark.parametrize("name", ["mlp"])
+def test_train_step_importance_zero_for_unreached_blocks(name):
+    """Blocks deeper than the exit contribute no gradient -> sq == 0."""
+    m = zoo.get(name)
+    params = jnp.asarray(m.layout.init_flat(m.seed))
+    x, y = make_batch(m)
+    e = 2
+    step = jax.jit(make_train_step(m, e))
+    _, _, sq = step(params, x, y, jnp.ones(m.param_count, F32),
+                    jnp.float32(0.01))
+    sq = np.asarray(sq)
+    for i, t in enumerate(m.layout.tensors):
+        if t.block >= e and not (t.is_head and t.block == e - 1):
+            assert sq[i] == 0.0, t.name
+        if t.block < e and not t.is_head:
+            assert sq[i] > 0.0, t.name
+
+
+@pytest.mark.parametrize("name", ALL_MODELS)
+def test_loss_decreases_over_steps(name):
+    m = zoo.get(name)
+    params = jnp.asarray(m.layout.init_flat(m.seed))
+    x, y = make_batch(m)
+    mask = jnp.ones(m.param_count, F32)
+    step = jax.jit(make_train_step(m, m.num_blocks))
+    first = None
+    for _ in range(8):
+        params, loss, _ = step(params, x, y, mask, jnp.float32(0.02))
+        first = first if first is not None else float(loss)
+    assert float(loss) < first, f"{name}: {first} -> {float(loss)}"
+
+
+@pytest.mark.parametrize("name", ["mlp", "resnet_speech"])
+def test_eval_step_counts(name):
+    m = zoo.get(name)
+    params = jnp.asarray(m.layout.init_flat(m.seed))
+    x, y = make_batch(m)
+    ev = jax.jit(make_eval_step(m))
+    correct, loss_sum = ev(params, x, y)
+    assert 0.0 <= float(correct) <= m.label_len
+    assert float(loss_sum) > 0.0
+
+
+def test_train_step_equals_manual_sgd_mlp():
+    """Full-mask artifact step == hand-rolled jax.grad SGD step."""
+    m = zoo.get("mlp")
+    params = jnp.asarray(m.layout.init_flat(m.seed))
+    x, y = make_batch(m)
+    from compile.kernels import softmax_xent as sx
+
+    def loss_fn(p):
+        return sx.mean_xent(m.forward(m.layout.views(p), x, m.num_blocks), y)
+
+    g = jax.grad(loss_fn)(params)
+    manual = params - 0.03 * g
+    step = jax.jit(make_train_step(m, m.num_blocks))
+    new_p, _, _ = step(params, x, y, jnp.ones(m.param_count, F32),
+                       jnp.float32(0.03))
+    np.testing.assert_allclose(np.asarray(new_p), np.asarray(manual),
+                               rtol=1e-5, atol=1e-6)

@@ -1,0 +1,40 @@
+//! Figures 13 + 17 — FedEL vs FedEL-C vs FedAvg time-to-accuracy. FedEL-C
+//! collapses the end edge to the previous front (disjoint windows, no
+//! overlap between consecutive windows) and loses accuracy.
+
+use fedel::report::bench::{banner, rounds, Workload};
+use fedel::report::Table;
+use fedel::sim::experiment::Experiment;
+
+fn main() -> anyhow::Result<()> {
+    banner("Figures 13/17", "FedEL vs FedEL-C vs FedAvg");
+    for w in [Workload::Cifar10Dev, Workload::TinyIn100Dev, Workload::Speech100Dev] {
+        let mut cfg = w.cfg(42);
+        cfg.rounds = rounds(15, 100);
+        println!("---- {} ----", w.label());
+        let mut exp = Experiment::build(cfg)?;
+        let mut t = Table::new(
+            "time-to-accuracy",
+            &["method", "final_acc", "sim_total_h"],
+        );
+        let mut accs = Vec::new();
+        for name in ["fedavg", "fedel-c", "fedel"] {
+            let res = exp.run(Some(name))?;
+            accs.push((name, res.final_acc));
+            t.row(vec![
+                name.into(),
+                format!("{:.3}", res.final_acc),
+                format!("{:.1}", res.sim_total_secs / 3600.0),
+            ]);
+        }
+        t.print();
+        let get = |n: &str| accs.iter().find(|(m, _)| *m == n).unwrap().1;
+        println!(
+            "shape: fedel {:.3} vs fedel-c {:.3} (paper: FedEL-C lower — windows \
+             must overlap/adjust between rounds)\n",
+            get("fedel"),
+            get("fedel-c")
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Figure 5 — tensor importance across FL clients vs centralized training.
+//! Non-iid clients disagree with each other and with the centralized
+//! importance profile; that disagreement is Limitation #2's driver.
+
+use fedel::elastic::importance::local_importance;
+use fedel::report::bench::{banner, Workload};
+use fedel::report::Table;
+use fedel::sim::experiment::Experiment;
+
+/// Cosine similarity of two importance vectors.
+fn cosine(a: &[f64], b: &[f64]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+    dot / (na * nb).max(1e-12)
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("Figure 5", "tensor importance: FL clients vs centralized");
+    let mut cfg = Workload::Cifar10Dev.cfg(42);
+    cfg.rounds = 1;
+    let mut exp = Experiment::build(cfg)?;
+    let m = exp.engine.manifest().clone();
+    let params = m.load_init()?;
+    let mask = vec![1.0f32; m.param_count];
+    let nb = m.num_blocks;
+
+    // Per-client importance from one full-model probe step each.
+    let mut client_imps: Vec<Vec<f64>> = Vec::new();
+    for c in 0..exp.dataset.clients.len() {
+        let (x, y) = exp.dataset.clients[c].sample_batch(&exp.dataset.spec, &m, 0);
+        let out = exp.engine.train_step(nb, &params, &x, &y, &mask, 0.05)?;
+        client_imps.push(local_importance(&out.sq_grads, 0.05));
+    }
+    // "Centralized" importance: probe on the iid test distribution.
+    let (x, y) = exp.dataset.test_batches[0].clone();
+    let central = local_importance(
+        &exp.engine.train_step(nb, &params, &x, &y, &mask, 0.05)?.sq_grads,
+        0.05,
+    );
+
+    let mut t = Table::new(
+        "importance agreement (cosine similarity)",
+        &["pair", "cosine"],
+    );
+    let mut cross = Vec::new();
+    for i in 0..client_imps.len() {
+        cross.push(cosine(&client_imps[i], &central));
+    }
+    t.row(vec![
+        "mean(client, centralized)".into(),
+        format!("{:.4}", fedel::util::stats::mean(&cross)),
+    ]);
+    let mut pairwise = Vec::new();
+    for i in 0..client_imps.len() {
+        for j in (i + 1)..client_imps.len() {
+            pairwise.push(cosine(&client_imps[i], &client_imps[j]));
+        }
+    }
+    t.row(vec![
+        "mean(client, client)".into(),
+        format!("{:.4}", fedel::util::stats::mean(&pairwise)),
+    ]);
+    t.print();
+
+    // Per-tensor table for the first few tensors (the figure's x-axis).
+    let mut pt = Table::new(
+        "per-tensor importance (normalized)",
+        &["tensor", "client0", "client5", "centralized"],
+    );
+    let norm = |v: &[f64]| -> Vec<f64> {
+        let s: f64 = v.iter().sum();
+        v.iter().map(|x| x / s.max(1e-12)).collect()
+    };
+    let (c0, c5, ce) = (norm(&client_imps[0]), norm(&client_imps[5]), norm(&central));
+    for i in 0..m.tensors.len().min(16) {
+        pt.row(vec![
+            m.tensors[i].name.clone(),
+            format!("{:.4}", c0[i]),
+            format!("{:.4}", c5[i]),
+            format!("{:.4}", ce[i]),
+        ]);
+    }
+    pt.print();
+    println!(
+        "shape (paper Fig 5): clients disagree with centralized importance under \
+         Dirichlet(0.1) non-iid data — cross-client cosine < 1 indicates drift pressure"
+    );
+    Ok(())
+}

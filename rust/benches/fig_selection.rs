@@ -1,0 +1,139 @@
+//! Figures 4, 10, 14, 18, 19, 20 — tensor-selection traces.
+//!
+//! Fig 4: one ElasticTrainer-FL round, Xavier vs Orin — slow clients'
+//! selections crowd to the back of the DNN.
+//! Fig 10/18/19/20: FedEL selections across rounds for one representative
+//! device per type — windows slide over the whole model.
+//! Fig 14: FedEL vs FedEL-C selection behaviour between windows.
+//! Emits CSV series under target/bench_figs/ for plotting.
+
+use std::path::Path;
+
+use fedel::report::bench::{banner, rounds, Workload};
+use fedel::sim::experiment::Experiment;
+use fedel::util::io::write_csv;
+
+fn selection_rows(
+    res: &fedel::fl::server::ExperimentResult,
+    client: usize,
+) -> Vec<Vec<f64>> {
+    res.selections
+        .iter()
+        .filter(|(_, c, _)| *c == client)
+        .flat_map(|(round, _, sel)| {
+            sel.iter().map(move |&t| vec![*round as f64, t as f64])
+        })
+        .collect()
+}
+
+fn ascii_trace(res: &fedel::fl::server::ExperimentResult, client: usize, k: usize, nrounds: usize) {
+    for round in 0..nrounds {
+        let sel: Vec<usize> = res
+            .selections
+            .iter()
+            .filter(|(r, c, _)| *r == round && *c == client)
+            .flat_map(|(_, _, s)| s.iter().copied())
+            .collect();
+        let line: String = (0..k)
+            .map(|t| if sel.contains(&t) { '#' } else { '.' })
+            .collect();
+        println!("  r{round:02} {line}");
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("Figures 4/10/14/18-20", "tensor-selection traces");
+    let out = Path::new("target/bench_figs");
+
+    // ---- Fig 4: ElasticTrainer-FL, one round, Xavier (0) vs Orin (5) ----
+    let mut cfg = Workload::Cifar10Dev.cfg(42);
+    cfg.rounds = 2;
+    cfg.record_selections = true;
+    let mut exp = Experiment::build(cfg)?;
+    let res = exp.run(Some("elastictrainer"))?;
+    let k = exp.ctx.manifest.tensors.len();
+    println!("Fig 4 — ElasticTrainer selections (col=tensor, #=selected):");
+    println!(" Xavier (slow):");
+    ascii_trace(&res, 0, k, 1);
+    println!(" Orin (fast):");
+    ascii_trace(&res, 5, k, 1);
+    write_csv(&out.join("fig4_xavier.csv"), &["round", "tensor"], &selection_rows(&res, 0))?;
+    write_csv(&out.join("fig4_orin.csv"), &["round", "tensor"], &selection_rows(&res, 5))?;
+    let deepest_block = |client: usize| -> (usize, usize) {
+        let blocks: Vec<usize> = res
+            .selections
+            .iter()
+            .filter(|(r, c, _)| *r == 0 && *c == client)
+            .flat_map(|(_, _, s)| s.iter().map(|&t| exp.ctx.manifest.tensors[t].block))
+            .collect();
+        (
+            blocks.iter().copied().min().unwrap_or(0),
+            blocks.iter().copied().max().unwrap_or(0),
+        )
+    };
+    let (xmin, xmax) = deepest_block(0);
+    let (omin, omax) = deepest_block(5);
+    println!(
+        "shape: Xavier selects blocks {xmin}-{xmax}, Orin {omin}-{omax} \
+         (paper Fig 4: slow clients pinned to the back)\n"
+    );
+
+    // ---- Fig 10/18/19/20: FedEL selections across rounds per device type ----
+    for (fig, w) in [
+        ("fig10_tinyin", Workload::TinyIn100Dev),
+        ("fig18_cifar", Workload::Cifar10Dev),
+        ("fig19_speech", Workload::Speech100Dev),
+        ("fig20_reddit", Workload::Reddit100Dev),
+    ] {
+        let mut cfg = w.cfg(42);
+        cfg.rounds = rounds(12, 40);
+        cfg.record_selections = true;
+        let mut exp = Experiment::build(cfg)?;
+        let res = exp.run(Some("fedel"))?;
+        let k = exp.ctx.manifest.tensors.len();
+        // representative devices: one per distinct scale
+        let mut reps: Vec<(String, usize)> = Vec::new();
+        for (i, d) in exp.fleet.iter().enumerate() {
+            if !reps.iter().any(|(n, _)| n == &d.name) {
+                reps.push((d.name.clone(), i));
+            }
+        }
+        println!("{fig} — FedEL selections across rounds ({}):", w.label());
+        for (name, client) in &reps {
+            println!(" device {name} (client {client}):");
+            ascii_trace(&res, *client, k, cfg_rounds_shown());
+            write_csv(
+                &out.join(format!("{fig}_{name}.csv")),
+                &["round", "tensor"],
+                &selection_rows(&res, *client),
+            )?;
+        }
+        println!();
+    }
+
+    // ---- Fig 14: FedEL vs FedEL-C on a slow client ----
+    let mut cfg = Workload::Cifar10Dev.cfg(42);
+    cfg.rounds = rounds(10, 24);
+    cfg.record_selections = true;
+    let mut exp = Experiment::build(cfg)?;
+    let k = exp.ctx.manifest.tensors.len();
+    let fedel = exp.run(Some("fedel"))?;
+    let fedelc = exp.run(Some("fedel-c"))?;
+    println!("Fig 14 — FedEL vs FedEL-C selections (Xavier client 0):");
+    println!(" FedEL:");
+    ascii_trace(&fedel, 0, k, 8);
+    println!(" FedEL-C:");
+    ascii_trace(&fedelc, 0, k, 8);
+    write_csv(&out.join("fig14_fedel.csv"), &["round", "tensor"], &selection_rows(&fedel, 0))?;
+    write_csv(&out.join("fig14_fedelc.csv"), &["round", "tensor"], &selection_rows(&fedelc, 0))?;
+    println!("CSV series written to target/bench_figs/");
+    Ok(())
+}
+
+fn cfg_rounds_shown() -> usize {
+    if fedel::report::bench::full_scale() {
+        24
+    } else {
+        10
+    }
+}

@@ -1,0 +1,38 @@
+//! Figures 12 + 16 — the runtime-threshold ablation: T_th as a fraction of
+//! the fastest device's full-model round time. Paper: smaller T_th slows
+//! convergence (more window movements for everyone).
+
+use fedel::report::bench::{banner, rounds, Workload};
+use fedel::report::Table;
+use fedel::sim::experiment::Experiment;
+
+fn main() -> anyhow::Result<()> {
+    banner("Figures 12/16", "T_th ablation");
+    for w in [Workload::Cifar10Dev, Workload::Speech100Dev] {
+        let mut cfg = w.cfg(42);
+        cfg.rounds = rounds(12, 100);
+        println!("---- {} ----", w.label());
+        let mut t = Table::new(
+            "convergence vs threshold",
+            &["T_th factor", "final_acc", "time_to_90%final (h)", "sim_total_h"],
+        );
+        for factor in [0.5, 0.75, 1.0, 1.25] {
+            let mut cfg_f = cfg.clone();
+            cfg_f.t_th_factor = factor;
+            let mut exp = Experiment::build(cfg_f)?;
+            let res = exp.run(Some("fedel"))?;
+            let tta = res
+                .time_to_accuracy(0.9 * res.final_acc)
+                .unwrap_or(res.sim_total_secs);
+            t.row(vec![
+                format!("{factor}"),
+                format!("{:.3}", res.final_acc),
+                format!("{:.1}", tta / 3600.0),
+                format!("{:.1}", res.sim_total_secs / 3600.0),
+            ]);
+        }
+        t.print();
+    }
+    println!("paper shape: smaller T_th -> slower convergence (more sliding-window passes)");
+    Ok(())
+}

@@ -1,0 +1,103 @@
+//! Micro-benchmarks of the L3 hot paths (criterion-style medians; the
+//! criterion crate is unavailable offline — see util::prop / report::bench
+//! for the in-repo substrates). These feed EXPERIMENTS.md §Perf.
+
+use std::path::Path;
+
+use fedel::elastic::{select, SelectorInput};
+use fedel::fl::aggregate::{AggregateRule, MaskedAggregator};
+use fedel::manifest::tests_support::chain_manifest;
+use fedel::report::bench::{banner, time_median};
+use fedel::report::Table;
+use fedel::runtime::{Engine, PjrtEngine};
+use fedel::timing::{DeviceProfile, TimingCfg, TimingModel};
+
+fn main() -> anyhow::Result<()> {
+    banner("perf_hotpaths", "L3 micro-benchmarks (median wall time)");
+    let mut t = Table::new("hot paths", &["path", "median", "throughput"]);
+
+    // --- DP selector on a large window ---------------------------------
+    let m = chain_manifest(64, 100);
+    let tm = TimingModel::profile(&m, &DeviceProfile::orin(), &TimingCfg::default());
+    let order: Vec<usize> = (0..64).rev().map(|b| 2 * b).collect();
+    let imp: Vec<f64> = (0..64).map(|i| 1.0 + (i % 7) as f64).collect();
+    let budget = tm.full_backward_time() * 0.4;
+    let d = time_median(21, || {
+        let sel = select(&SelectorInput { order: &order, importance: &imp, budget, timing: &tm });
+        std::hint::black_box(sel);
+    });
+    t.row(vec![
+        "DP select (64 tensors, 2048 buckets)".into(),
+        format!("{:.1}us", d.as_secs_f64() * 1e6),
+        String::new(),
+    ]);
+
+    // --- masked aggregation over a 100-client x 400k-param fleet --------
+    let p = 400_640usize;
+    let params = vec![0.5f32; p];
+    let mask = vec![1.0f32; p];
+    let global = vec![0.0f32; p];
+    let d = time_median(9, || {
+        let mut agg = MaskedAggregator::new(p, AggregateRule::Masked);
+        for _ in 0..20 {
+            agg.add(&params, &mask, 1.0, 4, &global);
+        }
+        std::hint::black_box(agg.finish(&global));
+    });
+    let gbps = (20.0 * p as f64 * 8.0) / d.as_secs_f64() / 1e9;
+    t.row(vec![
+        "masked aggregate (20 adds x 400k params)".into(),
+        format!("{:.2}ms", d.as_secs_f64() * 1e3),
+        format!("{gbps:.1} GB/s"),
+    ]);
+
+    // --- mask expansion --------------------------------------------------
+    let tensor_mask = vec![1.0f32; m.tensors.len()];
+    let d = time_median(21, || {
+        std::hint::black_box(m.expand_mask(&tensor_mask));
+    });
+    t.row(vec![
+        format!("expand_mask ({} params)", m.param_count),
+        format!("{:.1}us", d.as_secs_f64() * 1e6),
+        String::new(),
+    ]);
+
+    // --- PJRT engine step (if artifacts exist) --------------------------
+    let art = Path::new("artifacts/mlp");
+    if art.join("manifest.json").exists() {
+        let mut eng = PjrtEngine::open(art)?;
+        let man = eng.manifest().clone();
+        let params = man.load_init()?;
+        let x = vec![0.1f32; man.batch * man.input_shape.iter().product::<usize>()];
+        let y = vec![0i32; man.label_len];
+        let mask = vec![1.0f32; man.param_count];
+        eng.warm(&[man.num_blocks])?;
+        // warm-up execution
+        eng.train_step(man.num_blocks, &params, &x, &y, &mask, 0.05)?;
+        let d = time_median(21, || {
+            let out = eng
+                .train_step(man.num_blocks, &params, &x, &y, &mask, 0.05)
+                .unwrap();
+            std::hint::black_box(out);
+        });
+        let steps_s = 1.0 / d.as_secs_f64();
+        t.row(vec![
+            "PJRT train_step (mlp, full exit)".into(),
+            format!("{:.2}ms", d.as_secs_f64() * 1e3),
+            format!("{steps_s:.0} steps/s"),
+        ]);
+        let d = time_median(21, || {
+            std::hint::black_box(eng.eval_step(&params, &x, &y).unwrap());
+        });
+        t.row(vec![
+            "PJRT eval_step (mlp)".into(),
+            format!("{:.2}ms", d.as_secs_f64() * 1e3),
+            String::new(),
+        ]);
+    } else {
+        eprintln!("artifacts/mlp missing — skipping PJRT micro-benches (run `make artifacts`)");
+    }
+
+    t.print();
+    Ok(())
+}

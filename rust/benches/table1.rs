@@ -1,0 +1,61 @@
+//! Table 1 — time-to-accuracy of FedEL vs all baselines on the paper's
+//! four workloads. Prints paper rows next to measured rows; absolute
+//! numbers differ (synthetic data, scaled models) but the *shape* —
+//! who wins, accuracy ordering, speedup band — is the claim under test.
+
+use fedel::report::bench::{banner, paper_table1, Workload};
+use fedel::report::{render_table1, table1_rows, Table};
+use fedel::sim::experiment::Experiment;
+use fedel::strategies::table1_names;
+
+fn main() -> anyhow::Result<()> {
+    banner("Table 1", "time-to-accuracy, 8 methods x 4 workloads");
+    let only: Option<String> = std::env::var("FEDEL_TABLE1_WORKLOAD").ok();
+
+    for w in Workload::all() {
+        if let Some(f) = &only {
+            if !w.label().to_lowercase().contains(&f.to_lowercase()) {
+                continue;
+            }
+        }
+        println!("---- {} ----", w.label());
+        let mut paper = Table::new("paper (Table 1)", &["Method", "Metric", "Time", "Speedup"]);
+        for (m, metric, hours, sp) in paper_table1(w) {
+            paper.row(vec![
+                m.to_string(),
+                format!("{metric:.2}"),
+                format!("{hours:.1}h"),
+                sp.to_string(),
+            ]);
+        }
+        paper.print();
+
+        let mut exp = Experiment::build(w.cfg(42))?;
+        let mut results = Vec::new();
+        for name in table1_names() {
+            let t0 = std::time::Instant::now();
+            let res = exp.run(Some(name))?;
+            eprintln!(
+                "  [{name}] final_acc={:.3} ppl={:.2} sim={:.1}h wall={:.1}s",
+                res.final_acc,
+                res.final_perplexity(),
+                res.sim_total_secs / 3600.0,
+                t0.elapsed().as_secs_f64()
+            );
+            results.push(res);
+        }
+        let rows = table1_rows(&results, 0.95, w.is_lm());
+        render_table1("measured (this repo)", &rows, w.is_lm()).print();
+
+        // Shape summary, reported not asserted (benches must not panic).
+        let fedavg = &rows[0];
+        let fedel = rows.iter().find(|r| r.method == "fedel").unwrap();
+        let sp = fedel.speedup_vs_fedavg.unwrap_or(1.0);
+        println!(
+            "shape: fedel speedup {sp:.2}x (paper band 1.87-3.87), \
+             fedel acc {:.3} vs fedavg {:.3} (paper: on par or better)\n",
+            fedel.final_acc, fedavg.final_acc
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Table 2 (Appendix B.3) — deviation of FedEL's per-round training time
+//! from the target T_th, per workload, plus the FedAvg round time and the
+//! resulting speedup.
+
+use fedel::report::bench::{banner, Workload};
+use fedel::report::Table;
+use fedel::sim::experiment::Experiment;
+use fedel::util::stats::mean;
+
+fn main() -> anyhow::Result<()> {
+    banner("Table 2", "per-round time deviation from T_th");
+    let mut t = Table::new(
+        "measured vs paper",
+        &["Workload", "FedEL(min)", "T_th(min)", "Diff", "FedAvg(min)", "Speedup",
+          "paper:FedEL", "paper:T_th", "paper:Diff"],
+    );
+    let paper = [
+        (Workload::Cifar10Dev, 38.2, 36.0, "6.1%"),
+        (Workload::TinyIn100Dev, 45.1, 42.2, "6.8%"),
+        (Workload::Speech100Dev, 54.9, 53.2, "3.2%"),
+        (Workload::Reddit100Dev, 48.6, 40.9, "18.9%"),
+    ];
+    for (w, p_fedel, p_tth, p_diff) in paper {
+        let mut exp = Experiment::build(w.cfg(42))?;
+        let fedel = exp.run(Some("fedel"))?;
+        let fedavg = exp.run(Some("fedavg"))?;
+        let fedel_mins: Vec<f64> = fedel
+            .records
+            .iter()
+            .map(|r| (r.round_secs - 30.0) / 60.0) // strip comm constant
+            .collect();
+        let avg_round = mean(
+            &fedavg.records.iter().map(|r| (r.round_secs - 30.0) / 60.0).collect::<Vec<_>>(),
+        );
+        let t_th_min = exp.ctx.t_th / 60.0;
+        let fedel_round = mean(&fedel_mins);
+        let diff = 100.0 * (fedel_round - t_th_min) / t_th_min;
+        t.row(vec![
+            w.model().to_string(),
+            format!("{fedel_round:.1}"),
+            format!("{t_th_min:.1}"),
+            format!("{diff:+.1}%"),
+            format!("{avg_round:.1}"),
+            format!("{:.2}x", avg_round / fedel_round),
+            format!("{p_fedel:.1}"),
+            format!("{p_tth:.1}"),
+            p_diff.to_string(),
+        ]);
+    }
+    t.print();
+    println!("paper: deviations 3.2-6.8% for CNNs, 18.9% for the LM; speedups 1.87-3.87x");
+    Ok(())
+}

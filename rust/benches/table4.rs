@@ -1,0 +1,44 @@
+//! Table 4 (Appendix B.6) — the O₁ convergence-bias term with and without
+//! window rollback. Rollback (resetting the window to the initial window
+//! when the front reaches the model end) should LOWER the mean O₁.
+
+use fedel::report::bench::{banner, rounds, Workload};
+use fedel::report::Table;
+use fedel::sim::experiment::Experiment;
+
+fn main() -> anyhow::Result<()> {
+    banner("Table 4", "O1 bias: rollback vs no-rollback");
+    let mut cfg = Workload::Cifar10Dev.cfg(42);
+    cfg.rounds = rounds(30, 150);
+    let mut exp = Experiment::build(cfg)?;
+
+    let roll = exp.run(Some("fedel"))?;
+    let noroll = exp.run(Some("fedel-norollback"))?;
+
+    let mut t = Table::new(
+        "measured vs paper",
+        &["Method", "O1 mean", "O1 std", "paper:mean", "paper:std"],
+    );
+    t.row(vec![
+        "Rollback".into(),
+        format!("{:.2}", roll.mean_o1()),
+        format!("{:.2}", roll.std_o1()),
+        "63.06".into(),
+        "8.62".into(),
+    ]);
+    t.row(vec![
+        "Not Rollback".into(),
+        format!("{:.2}", noroll.mean_o1()),
+        format!("{:.2}", noroll.std_o1()),
+        "78.18".into(),
+        "2.62".into(),
+    ]);
+    t.print();
+    println!(
+        "shape: rollback mean O1 {} no-rollback ({:.2} vs {:.2}); paper: rollback lower",
+        if roll.mean_o1() < noroll.mean_o1() { "<" } else { ">= (!)" },
+        roll.mean_o1(),
+        noroll.mean_o1()
+    );
+    Ok(())
+}

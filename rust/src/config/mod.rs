@@ -1,0 +1,185 @@
+//! Experiment configuration: one struct drives every table, figure,
+//! example, and the CLI. JSON round-trips for provenance (every result
+//! dump embeds the config that produced it).
+
+use std::path::PathBuf;
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Which fleet to simulate.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FleetSpec {
+    /// The paper's small-scale testbed: 5 Jetson Xavier + 5 Jetson Orin.
+    Small10,
+    /// The paper's large-scale simulation: n clients over device types
+    /// {1, 1/2, 1/3, 1/4}x the base profile.
+    Large(usize),
+    /// Explicit per-client scales.
+    Scales(Vec<f64>),
+}
+
+impl FleetSpec {
+    pub fn parse(s: &str) -> anyhow::Result<FleetSpec> {
+        match s {
+            "small10" => Ok(FleetSpec::Small10),
+            _ if s.starts_with("large") => {
+                let n: usize = s["large".len()..].parse().unwrap_or(100);
+                Ok(FleetSpec::Large(n))
+            }
+            _ if s.contains(',') || s.parse::<f64>().is_ok() => {
+                let scales: Vec<f64> = s
+                    .split(',')
+                    .filter(|p| !p.is_empty())
+                    .map(|p| p.parse().map_err(|e| anyhow::anyhow!("bad scale {p:?}: {e}")))
+                    .collect::<anyhow::Result<_>>()?;
+                Ok(FleetSpec::Scales(scales))
+            }
+            other => anyhow::bail!("unknown fleet {other:?} (small10 | largeN | s1,s2,...)"),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            FleetSpec::Small10 => "small10".into(),
+            FleetSpec::Large(n) => format!("large{n}"),
+            FleetSpec::Scales(v) => v
+                .iter()
+                .map(|s| format!("{s}"))
+                .collect::<Vec<_>>()
+                .join(","),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentCfg {
+    /// Zoo model name, or "mock:<blocks>x<body>" for the pure-rust engine.
+    pub model: String,
+    pub artifacts_dir: PathBuf,
+    pub strategy: String,
+    pub fleet: FleetSpec,
+    pub rounds: usize,
+    pub local_steps: usize,
+    pub lr: f64,
+    /// Dirichlet non-iid concentration (paper: 0.1).
+    pub alpha: f64,
+    /// FedEL importance-blend parameter (paper default 0.6).
+    pub beta: f64,
+    /// T_th = t_th_factor x (fastest device's full-model round time).
+    pub t_th_factor: f64,
+    /// Calibrate the SLOWEST device's full round to this many simulated
+    /// seconds (paper Table 2: 71.8 min for CIFAR10). 0 = no calibration.
+    pub slowest_round_secs: f64,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub comm_secs: f64,
+    pub record_selections: bool,
+    pub verbose: bool,
+}
+
+impl Default for ExperimentCfg {
+    fn default() -> Self {
+        ExperimentCfg {
+            model: "mlp".into(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            strategy: "fedel".into(),
+            fleet: FleetSpec::Small10,
+            rounds: 60,
+            local_steps: 8,
+            lr: 0.05,
+            alpha: 0.1,
+            beta: 0.6,
+            t_th_factor: 1.0,
+            slowest_round_secs: 71.8 * 60.0,
+            seed: 42,
+            eval_every: 5,
+            eval_batches: 16,
+            comm_secs: 30.0,
+            record_selections: false,
+            verbose: false,
+        }
+    }
+}
+
+impl ExperimentCfg {
+    /// Merge CLI args over defaults.
+    pub fn from_args(args: &Args) -> anyhow::Result<ExperimentCfg> {
+        let d = ExperimentCfg::default();
+        Ok(ExperimentCfg {
+            model: args.str_or("model", &d.model),
+            artifacts_dir: PathBuf::from(args.str_or("artifacts", "artifacts")),
+            strategy: args.str_or("strategy", &d.strategy),
+            fleet: FleetSpec::parse(&args.str_or("fleet", "small10"))?,
+            rounds: args.usize_or("rounds", d.rounds),
+            local_steps: args.usize_or("local-steps", d.local_steps),
+            lr: args.f64_or("lr", d.lr),
+            alpha: args.f64_or("alpha", d.alpha),
+            beta: args.f64_or("beta", d.beta),
+            t_th_factor: args.f64_or("t-th-factor", d.t_th_factor),
+            slowest_round_secs: args.f64_or("slowest-round-secs", d.slowest_round_secs),
+            seed: args.u64_or("seed", d.seed),
+            eval_every: args.usize_or("eval-every", d.eval_every),
+            eval_batches: args.usize_or("eval-batches", d.eval_batches),
+            comm_secs: args.f64_or("comm-secs", d.comm_secs),
+            record_selections: args.flag("record-selections"),
+            verbose: args.flag("verbose"),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("strategy", Json::Str(self.strategy.clone())),
+            ("fleet", Json::Str(self.fleet.label())),
+            ("rounds", Json::Num(self.rounds as f64)),
+            ("local_steps", Json::Num(self.local_steps as f64)),
+            ("lr", Json::Num(self.lr)),
+            ("alpha", Json::Num(self.alpha)),
+            ("beta", Json::Num(self.beta)),
+            ("t_th_factor", Json::Num(self.t_th_factor)),
+            ("slowest_round_secs", Json::Num(self.slowest_round_secs)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fleet_spec_parsing() {
+        assert_eq!(FleetSpec::parse("small10").unwrap(), FleetSpec::Small10);
+        assert_eq!(FleetSpec::parse("large100").unwrap(), FleetSpec::Large(100));
+        assert_eq!(
+            FleetSpec::parse("1.0,2.0").unwrap(),
+            FleetSpec::Scales(vec![1.0, 2.0])
+        );
+        assert!(FleetSpec::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn args_override_defaults() {
+        let args = Args::parse(
+            ["--model", "vgg_cifar", "--rounds", "7", "--beta", "0.4"]
+                .iter()
+                .map(|s| s.to_string()),
+            false,
+        );
+        let cfg = ExperimentCfg::from_args(&args).unwrap();
+        assert_eq!(cfg.model, "vgg_cifar");
+        assert_eq!(cfg.rounds, 7);
+        assert_eq!(cfg.beta, 0.4);
+        assert_eq!(cfg.alpha, 0.1); // default preserved
+    }
+
+    #[test]
+    fn json_dump_contains_provenance() {
+        let cfg = ExperimentCfg::default();
+        let j = cfg.to_json();
+        assert_eq!(j.s("strategy").unwrap(), "fedel");
+        assert_eq!(j.f("beta").unwrap(), 0.6);
+    }
+}

@@ -1,0 +1,116 @@
+//! Tensor importance (ElasticTrainer) and FedEL's adjustment module.
+//!
+//! ElasticTrainer scores a tensor by how much loss its update would remove:
+//! I = dL/dw · Δw; with SGD (Δw = -η g) this is η·Σ g² per tensor, which
+//! the train-step artifact already returns as per-tensor Σ g² (the L1
+//! masked-SGD kernel's second output).
+//!
+//! FedEL's adjustment (Sec. 4.2): after aggregation the client estimates
+//! the *global* model's tensor importance from two consecutive global
+//! models, I^g = (w_{r+1} − w_r)² / η, then blends
+//! I ← β·I_local + (1−β)·I^g. Both vectors are normalized to unit sum
+//! before blending — they live on different scales (one is built from
+//! single-client gradients, the other from an aggregated model delta), and
+//! β is only meaningful as a mixing weight over comparable quantities.
+
+use crate::manifest::Manifest;
+
+/// Local ElasticTrainer importance from the artifact's per-tensor Σ g².
+pub fn local_importance(sq_grads: &[f64], lr: f64) -> Vec<f64> {
+    sq_grads.iter().map(|&s| s * lr).collect()
+}
+
+/// FedEL global importance per tensor: Σ over the tensor of (Δw)² / η.
+pub fn global_importance(m: &Manifest, w_new: &[f32], w_old: &[f32], lr: f64) -> Vec<f64> {
+    assert_eq!(w_new.len(), m.param_count);
+    assert_eq!(w_old.len(), m.param_count);
+    m.tensors
+        .iter()
+        .map(|t| {
+            let mut s = 0.0f64;
+            for j in t.offset..t.offset + t.size {
+                let dw = (w_new[j] - w_old[j]) as f64;
+                s += dw * dw;
+            }
+            s / lr
+        })
+        .collect()
+}
+
+fn normalized(v: &[f64]) -> Vec<f64> {
+    let s: f64 = v.iter().sum();
+    if s <= 0.0 {
+        // No signal: uniform.
+        return vec![1.0 / v.len().max(1) as f64; v.len()];
+    }
+    v.iter().map(|&x| x / s).collect()
+}
+
+/// FedEL Sec. 4.2: I = β·I_local + (1−β)·I_global (unit-normalized).
+pub fn blend_importance(local: &[f64], global: &[f64], beta: f64) -> Vec<f64> {
+    assert_eq!(local.len(), global.len());
+    let (l, g) = (normalized(local), normalized(global));
+    l.iter().zip(&g).map(|(&a, &b)| beta * a + (1.0 - beta) * b).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::tests_support::toy_manifest;
+
+    #[test]
+    fn local_importance_scales_with_lr() {
+        let sq = vec![1.0, 4.0, 0.0];
+        assert_eq!(local_importance(&sq, 0.5), vec![0.5, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn global_importance_is_squared_delta_over_lr() {
+        let m = toy_manifest();
+        let w_old = vec![0.0f32; m.param_count];
+        let mut w_new = vec![0.0f32; m.param_count];
+        // change only tensor 2 (block1/w, offset 12..22) by 0.1 each
+        for v in &mut w_new[12..22] {
+            *v = 0.1;
+        }
+        let ig = global_importance(&m, &w_new, &w_old, 0.1);
+        assert_eq!(ig.len(), 4);
+        assert!(ig[0].abs() < 1e-12 && ig[1].abs() < 1e-12 && ig[3].abs() < 1e-12);
+        let want = 10.0 * 0.01f64 / 0.1;
+        assert!((ig[2] - want).abs() < 1e-6, "{} vs {want}", ig[2]);
+    }
+
+    #[test]
+    fn blend_beta_one_is_local_only() {
+        let l = vec![3.0, 1.0];
+        let g = vec![0.0, 10.0];
+        let b = blend_importance(&l, &g, 1.0);
+        assert!((b[0] - 0.75).abs() < 1e-12);
+        assert!((b[1] - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blend_beta_zero_is_global_only() {
+        let l = vec![3.0, 1.0];
+        let g = vec![0.0, 10.0];
+        let b = blend_importance(&l, &g, 0.0);
+        assert_eq!(b, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn blend_is_convex_combination() {
+        let l = vec![1.0, 2.0, 3.0];
+        let g = vec![3.0, 2.0, 1.0];
+        let b = blend_importance(&l, &g, 0.6);
+        assert!((b.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        for &x in &b {
+            assert!(x >= 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_signal_falls_back_to_uniform() {
+        let b = blend_importance(&[0.0, 0.0], &[0.0, 0.0], 0.5);
+        assert_eq!(b, vec![0.5, 0.5]);
+    }
+}

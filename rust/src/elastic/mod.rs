@@ -1,0 +1,9 @@
+//! ElasticTrainer core: tensor importance evaluation + DP tensor selection
+//! under a runtime budget (Eq. 1), extended with FedEL's window bounds
+//! (Sec. 4.1.2) and local/global importance adjustment (Sec. 4.2).
+
+pub mod importance;
+pub mod selector;
+
+pub use importance::{blend_importance, global_importance, local_importance};
+pub use selector::{select, Selection, SelectorInput};

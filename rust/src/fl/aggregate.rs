@@ -1,0 +1,214 @@
+//! Server-side aggregation.
+//!
+//! The paper's stable masked aggregation (Appendix D, Eq. 4):
+//!     w_g(t+1)[k] = Σ_n c_n[k] ⊙ w_n[k],
+//!     c_n[k] = A_n[k] / Σ_m A_m[k]
+//! i.e. each element is averaged over exactly the clients that trained it;
+//! elements nobody trained keep the previous global value.
+//!
+//! Variants: plain FedAvg (data-size weighted average of full models),
+//! FedProx (same aggregation; the prox term acts client-side), and
+//! FedNova normalized averaging (Appendix B.4 / Table 3).
+//!
+//! Updates stream in one at a time — the aggregator keeps only O(P)
+//! accumulators, never the whole fleet's parameters.
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggregateRule {
+    /// Eq. 4 mask-normalized averaging (FedEL & partial-training methods).
+    Masked,
+    /// Data-size-weighted FedAvg over full models (also used by FedProx).
+    FedAvg,
+    /// FedNova: normalize each update by its local step count, rescale by
+    /// the effective step count τ_eff = Σ p_n τ_n.
+    FedNova,
+}
+
+pub struct MaskedAggregator {
+    rule: AggregateRule,
+    num: Vec<f64>,
+    den: Vec<f64>,
+    /// FedNova bookkeeping.
+    tau_eff: f64,
+    weight_sum: f64,
+    pub clients_added: usize,
+}
+
+impl MaskedAggregator {
+    pub fn new(param_count: usize, rule: AggregateRule) -> Self {
+        MaskedAggregator {
+            rule,
+            num: vec![0.0; param_count],
+            den: vec![0.0; param_count],
+            tau_eff: 0.0,
+            weight_sum: 0.0,
+            clients_added: 0,
+        }
+    }
+
+    /// Add one client's trained parameters.
+    ///
+    /// `mask` — element-level training mask (what the client updated);
+    /// `weight` — client weight (data size; 1.0 for uniform);
+    /// `tau` — local SGD steps taken (FedNova); `global` — the round's
+    /// starting global model (FedNova computes deltas against it).
+    pub fn add(
+        &mut self,
+        params: &[f32],
+        mask: &[f32],
+        weight: f64,
+        tau: usize,
+        global: &[f32],
+    ) {
+        assert_eq!(params.len(), self.num.len());
+        assert_eq!(mask.len(), self.num.len());
+        self.clients_added += 1;
+        self.weight_sum += weight;
+        match self.rule {
+            AggregateRule::Masked => {
+                for k in 0..params.len() {
+                    let m = mask[k] as f64 * weight;
+                    self.num[k] += m * params[k] as f64;
+                    self.den[k] += m;
+                }
+            }
+            AggregateRule::FedAvg => {
+                for k in 0..params.len() {
+                    self.num[k] += weight * params[k] as f64;
+                    self.den[k] += weight;
+                }
+            }
+            AggregateRule::FedNova => {
+                let tau = tau.max(1) as f64;
+                self.tau_eff += weight * tau;
+                for k in 0..params.len() {
+                    let m = mask[k] as f64 * weight;
+                    self.num[k] += m * (params[k] as f64 - global[k] as f64) / tau;
+                    self.den[k] += m;
+                }
+            }
+        }
+    }
+
+    /// Produce the next global model; untouched elements keep `global`.
+    pub fn finish(self, global: &[f32]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(global.len());
+        match self.rule {
+            AggregateRule::Masked | AggregateRule::FedAvg => {
+                for k in 0..global.len() {
+                    out.push(if self.den[k] > 0.0 {
+                        (self.num[k] / self.den[k]) as f32
+                    } else {
+                        global[k]
+                    });
+                }
+            }
+            AggregateRule::FedNova => {
+                let tau_eff = if self.weight_sum > 0.0 {
+                    self.tau_eff / self.weight_sum
+                } else {
+                    0.0
+                };
+                for k in 0..global.len() {
+                    out.push(if self.den[k] > 0.0 {
+                        global[k] + (tau_eff * self.num[k] / self.den[k]) as f32
+                    } else {
+                        global[k]
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masked_average_over_coverers_only() {
+        let global = vec![10.0f32; 4];
+        let mut agg = MaskedAggregator::new(4, AggregateRule::Masked);
+        agg.add(&[1.0, 1.0, 0.0, 0.0], &[1.0, 1.0, 0.0, 0.0], 1.0, 1, &global);
+        agg.add(&[3.0, 0.0, 5.0, 0.0], &[1.0, 0.0, 1.0, 0.0], 1.0, 1, &global);
+        let out = agg.finish(&global);
+        assert_eq!(out, vec![2.0, 1.0, 5.0, 10.0]); // last elem untouched
+    }
+
+    #[test]
+    fn fedavg_weighted_by_data_size() {
+        let global = vec![0.0f32; 2];
+        let mut agg = MaskedAggregator::new(2, AggregateRule::FedAvg);
+        agg.add(&[1.0, 1.0], &[1.0, 1.0], 3.0, 1, &global);
+        agg.add(&[5.0, 5.0], &[1.0, 1.0], 1.0, 1, &global);
+        let out = agg.finish(&global);
+        assert_eq!(out, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn aggregation_of_identical_models_is_identity() {
+        let global = vec![0.5f32; 8];
+        let w = vec![0.7f32; 8];
+        for rule in [AggregateRule::Masked, AggregateRule::FedAvg] {
+            let mut agg = MaskedAggregator::new(8, rule);
+            for _ in 0..5 {
+                agg.add(&w, &vec![1.0; 8], 2.0, 3, &global);
+            }
+            let out = agg.finish(&global);
+            for (a, b) in out.iter().zip(&w) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn fednova_normalizes_by_tau() {
+        // client A: 10 steps moved +10; client B: 1 step moved +1.
+        // Plain averaging would favor A; Nova equalizes per-step movement.
+        let global = vec![0.0f32; 1];
+        let mut agg = MaskedAggregator::new(1, AggregateRule::FedNova);
+        agg.add(&[10.0], &[1.0], 1.0, 10, &global);
+        agg.add(&[1.0], &[1.0], 1.0, 1, &global);
+        let out = agg.finish(&global);
+        // d_A = 1.0/step, d_B = 1.0/step -> mean d = 1.0; tau_eff = 5.5
+        assert!((out[0] - 5.5).abs() < 1e-6, "{out:?}");
+    }
+
+    #[test]
+    fn fednova_with_full_masks_equals_fedavg_when_taus_equal() {
+        let global = vec![1.0f32; 3];
+        let a = vec![2.0f32, 3.0, 4.0];
+        let b = vec![4.0f32, 5.0, 6.0];
+        let mask = vec![1.0f32; 3];
+        let mut nova = MaskedAggregator::new(3, AggregateRule::FedNova);
+        nova.add(&a, &mask, 1.0, 5, &global);
+        nova.add(&b, &mask, 1.0, 5, &global);
+        let nova_out = nova.finish(&global);
+        let mut avg = MaskedAggregator::new(3, AggregateRule::FedAvg);
+        avg.add(&a, &mask, 1.0, 5, &global);
+        avg.add(&b, &mask, 1.0, 5, &global);
+        let avg_out = avg.finish(&global);
+        for (x, y) in nova_out.iter().zip(&avg_out) {
+            assert!((x - y).abs() < 1e-5, "{nova_out:?} vs {avg_out:?}");
+        }
+    }
+
+    #[test]
+    fn no_updates_returns_global() {
+        let global = vec![3.0f32; 5];
+        let agg = MaskedAggregator::new(5, AggregateRule::Masked);
+        assert_eq!(agg.finish(&global), global);
+    }
+
+    #[test]
+    fn fractional_masks_weight_contributions() {
+        let global = vec![0.0f32; 1];
+        let mut agg = MaskedAggregator::new(1, AggregateRule::Masked);
+        agg.add(&[1.0], &[1.0], 1.0, 1, &global);
+        agg.add(&[4.0], &[0.5], 1.0, 1, &global);
+        let out = agg.finish(&global);
+        // (1*1 + 0.5*4) / 1.5 = 2.0
+        assert!((out[0] - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,87 @@
+//! O₁ convergence-bias diagnostic (Theorem D.5, Table 4).
+//!
+//! Theorem D.5 bounds the gradient norm with a bias term
+//!     O₁ = 2Ψ Σ_n ( d_θ γ_n(t) − Σ_k (c_n(t))_k ),
+//! where c_n(t) are the per-element aggregation weights of Eq. 4 and
+//! γ_n = max_k (c_n)_k. The term vanishes when every client trains
+//! everything (c_n ≡ 1/N) and grows when selections are narrow or
+//! lopsided — the quantity the rollback ablation (Appendix B.6) compares.
+//!
+//! Computed at tensor granularity (the granularity at which FedEL's masks
+//! are decided): d_θ → K, c_n[k] = m_n[k] / Σ_m m_m[k] over tensors k with
+//! any coverage, with Ψ = 1 (the constant is strategy-independent and
+//! cancels in the rollback comparison).
+
+/// Per-round O₁ from the fleet's tensor-level masks ([client][tensor]).
+pub fn o1_bias(masks: &[Vec<f32>]) -> f64 {
+    if masks.is_empty() {
+        return 0.0;
+    }
+    let k = masks[0].len();
+    let mut cover = vec![0.0f64; k];
+    for m in masks {
+        assert_eq!(m.len(), k);
+        for (c, &v) in cover.iter_mut().zip(m) {
+            *c += v as f64;
+        }
+    }
+    let mut total = 0.0;
+    for m in masks {
+        let mut gamma: f64 = 0.0;
+        let mut sum_c = 0.0;
+        for (j, &v) in m.iter().enumerate() {
+            if cover[j] > 0.0 {
+                let c = v as f64 / cover[j];
+                gamma = gamma.max(c);
+                sum_c += c;
+            }
+        }
+        total += k as f64 * gamma - sum_c;
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_participation_has_zero_bias() {
+        let masks = vec![vec![1.0; 6]; 4];
+        assert!(o1_bias(&masks).abs() < 1e-12);
+    }
+
+    #[test]
+    fn narrow_selections_increase_bias() {
+        // everyone trains everything vs everyone trains one tensor
+        let full = vec![vec![1.0; 6]; 4];
+        let narrow: Vec<Vec<f32>> = (0..4)
+            .map(|n| {
+                let mut m = vec![0.0; 6];
+                m[n % 6] = 1.0;
+                m
+            })
+            .collect();
+        assert!(o1_bias(&narrow) > o1_bias(&full) + 1.0);
+    }
+
+    #[test]
+    fn disjoint_single_coverage_gives_max_gamma() {
+        // one client covers tensor 0 alone: c = 1 -> gamma = 1
+        let masks = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        // each client: gamma = 1, sum_c = 1, K = 2 -> per-client bias 1
+        assert!((o1_bias(&masks) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_input_is_zero() {
+        assert_eq!(o1_bias(&[]), 0.0);
+    }
+
+    #[test]
+    fn balanced_halves_have_less_bias_than_lopsided() {
+        let balanced = vec![vec![1.0, 1.0, 0.0, 0.0], vec![0.0, 0.0, 1.0, 1.0]];
+        let lopsided = vec![vec![1.0, 0.0, 0.0, 0.0], vec![0.0, 1.0, 1.0, 1.0]];
+        assert!(o1_bias(&balanced) <= o1_bias(&lopsided) + 1e-9);
+    }
+}

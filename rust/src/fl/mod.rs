@@ -1,0 +1,10 @@
+//! Federated learning core: masked aggregation (Appendix D Eq. 4), the
+//! O₁ convergence-bias diagnostic (Theorem D.5 / Table 4), and the server
+//! round loop driving engines + strategies.
+
+pub mod aggregate;
+pub mod bias;
+pub mod server;
+
+pub use aggregate::{AggregateRule, MaskedAggregator};
+pub use server::{run_experiment, ExperimentResult, RoundRecord, ServerCfg};

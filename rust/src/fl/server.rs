@@ -1,0 +1,256 @@
+//! The FL server round loop: plan → local train → aggregate → observe.
+//!
+//! Compute is *real* (engine executes the AOT artifacts); wall-clock is
+//! *simulated* from the timing model, exactly like the paper's 100-client
+//! evaluation (DESIGN.md §4). One round:
+//!
+//! 1. the strategy plans per-client work (exit, mask, steps, sim cost),
+//! 2. each planned client trains locally from the current global model
+//!    (FedProx's proximal correction applied between steps when enabled),
+//! 3. the server aggregates with the strategy's rule (Eq. 4 masked /
+//!    FedAvg / FedNova) and advances the simulated clock by the slowest
+//!    participant plus a communication constant,
+//! 4. the strategy observes losses + importance signals; the server
+//!    computes FedEL's global tensor importance from the aggregated model
+//!    delta and the O₁ bias diagnostic from the round's masks.
+
+use crate::data::FedDataset;
+use crate::elastic::importance::global_importance;
+use crate::fl::aggregate::MaskedAggregator;
+use crate::fl::bias::o1_bias;
+use crate::runtime::Engine;
+use crate::strategies::{ClientPlan, FleetCtx, RoundFeedback, Strategy};
+
+/// Server-side experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ServerCfg {
+    pub rounds: usize,
+    pub eval_every: usize,
+    /// Per-round communication/aggregation overhead (simulated seconds).
+    pub comm_secs: f64,
+    /// Record per-round tensor selections (Fig 10/14/18-20 traces).
+    pub record_selections: bool,
+    pub verbose: bool,
+}
+
+impl Default for ServerCfg {
+    fn default() -> Self {
+        ServerCfg {
+            rounds: 50,
+            eval_every: 5,
+            comm_secs: 30.0,
+            record_selections: false,
+            verbose: false,
+        }
+    }
+}
+
+/// Everything measured in one round.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: usize,
+    /// Simulated seconds this round took (slowest participant + comm).
+    pub round_secs: f64,
+    /// Simulated seconds since experiment start, inclusive.
+    pub sim_time: f64,
+    pub mean_train_loss: f64,
+    pub participants: usize,
+    /// Mean fraction of tensors trained across participants.
+    pub mean_coverage: f64,
+    /// O₁ bias diagnostic (Table 4).
+    pub o1: f64,
+    /// Eval (global test set) if this was an eval round.
+    pub eval_acc: Option<f64>,
+    pub eval_loss: Option<f64>,
+    /// Per-client simulated seconds (fig 2 / energy model).
+    pub client_secs: Vec<(usize, f64)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExperimentResult {
+    pub strategy: String,
+    pub records: Vec<RoundRecord>,
+    pub sim_total_secs: f64,
+    pub final_acc: f64,
+    pub final_loss: f64,
+    /// (round, client, selected tensor ids) when record_selections.
+    pub selections: Vec<(usize, usize, Vec<usize>)>,
+}
+
+impl ExperimentResult {
+    /// Simulated seconds to first reach `target` accuracy (time-to-accuracy).
+    pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.eval_acc.map(|a| a >= target).unwrap_or(false))
+            .map(|r| r.sim_time)
+    }
+
+    /// Simulated seconds to first reach `target` perplexity (LM; lower=better).
+    pub fn time_to_perplexity(&self, target: f64) -> Option<f64> {
+        self.records
+            .iter()
+            .find(|r| r.eval_loss.map(|l| l.exp() <= target).unwrap_or(false))
+            .map(|r| r.sim_time)
+    }
+
+    pub fn final_perplexity(&self) -> f64 {
+        self.final_loss.exp()
+    }
+
+    /// (sim_time, accuracy) series for time-to-accuracy plots.
+    pub fn acc_curve(&self) -> Vec<(f64, f64)> {
+        self.records
+            .iter()
+            .filter_map(|r| r.eval_acc.map(|a| (r.sim_time, a)))
+            .collect()
+    }
+
+    pub fn mean_o1(&self) -> f64 {
+        crate::util::stats::mean(&self.records.iter().map(|r| r.o1).collect::<Vec<_>>())
+    }
+
+    pub fn std_o1(&self) -> f64 {
+        crate::util::stats::std_dev(&self.records.iter().map(|r| r.o1).collect::<Vec<_>>())
+    }
+}
+
+fn evaluate(engine: &mut dyn Engine, ds: &FedDataset, params: &[f32]) -> (f64, f64) {
+    let mut acc = crate::runtime::EvalOut::default();
+    for (x, y) in &ds.test_batches {
+        match engine.eval_step(params, x, y) {
+            Ok(e) => acc.merge(&e),
+            Err(err) => panic!("eval failed: {err}"),
+        }
+    }
+    (acc.accuracy(), acc.mean_loss())
+}
+
+/// Run one experiment to completion.
+pub fn run_experiment(
+    engine: &mut dyn Engine,
+    ds: &FedDataset,
+    strategy: &mut dyn Strategy,
+    ctx: &FleetCtx,
+    cfg: &ServerCfg,
+) -> anyhow::Result<ExperimentResult> {
+    let m = engine.manifest().clone();
+    anyhow::ensure!(m.param_count == ctx.manifest.param_count, "engine/ctx manifest mismatch");
+    let mut global = m.load_init().unwrap_or_else(|_| vec![0.0; m.param_count]);
+    let mut records = Vec::with_capacity(cfg.rounds);
+    let mut selections = Vec::new();
+    let mut sim_time = 0.0f64;
+    let prox_mu = strategy.prox_mu();
+
+    for round in 0..cfg.rounds {
+        let plans: Vec<ClientPlan> = strategy.plan_round(round, ctx, &global);
+        anyhow::ensure!(!plans.is_empty(), "strategy planned an empty round");
+
+        let mut agg = MaskedAggregator::new(m.param_count, strategy.aggregate_rule());
+        let mut fb = RoundFeedback::default();
+        let mut tensor_masks: Vec<Vec<f32>> = Vec::with_capacity(plans.len());
+        let mut losses = Vec::with_capacity(plans.len());
+        let mut coverage = Vec::with_capacity(plans.len());
+        let mut round_secs = 0.0f64;
+        let mut client_secs = Vec::with_capacity(plans.len());
+
+        for plan in &plans {
+            let client = &ds.clients[plan.client];
+            let elem_mask = plan.mask.expand(&m);
+            let mut p = global.clone();
+            let mut sq: Vec<f64> = Vec::new();
+            let mut loss_acc = 0.0f64;
+            for step in 0..plan.local_steps {
+                let step_tag = (round * ctx.local_steps + step) as u64;
+                let (x, y) = client.sample_batch(&ds.spec, &m, step_tag);
+                let out = engine.train_step(plan.exit, &p, &x, &y, &elem_mask, ctx.lr as f32)?;
+                p = out.new_params;
+                loss_acc += out.loss as f64;
+                if step == 0 {
+                    sq = out.sq_grads;
+                }
+                if prox_mu > 0.0 {
+                    // FedProx: w <- w - lr*mu*(w - w_global) on trained elems.
+                    let f = (ctx.lr * prox_mu) as f32;
+                    for k in 0..p.len() {
+                        if elem_mask[k] != 0.0 {
+                            p[k] -= f * (p[k] - global[k]);
+                        }
+                    }
+                }
+            }
+            let mean_loss = loss_acc / plan.local_steps.max(1) as f64;
+            agg.add(&p, &elem_mask, client.num_samples as f64, plan.local_steps, &global);
+            fb.per_client.push((plan.client, sq, mean_loss));
+            let cov = plan.mask.tensor_coverage();
+            coverage.push(
+                cov.iter().map(|&c| c as f64).sum::<f64>() / cov.len().max(1) as f64,
+            );
+            tensor_masks.push(cov);
+            losses.push(mean_loss);
+            round_secs = round_secs.max(plan.est_time);
+            client_secs.push((plan.client, plan.est_time));
+            if cfg.record_selections {
+                let sel: Vec<usize> = plan
+                    .mask
+                    .tensor_coverage()
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &c)| c > 0.0)
+                    .map(|(i, _)| i)
+                    .collect();
+                selections.push((round, plan.client, sel));
+            }
+        }
+
+        let new_global = agg.finish(&global);
+        fb.global_importance = global_importance(&m, &new_global, &global, ctx.lr);
+        let o1 = o1_bias(&tensor_masks);
+        strategy.observe(&fb, ctx);
+
+        round_secs += cfg.comm_secs;
+        sim_time += round_secs;
+        global = new_global;
+
+        let do_eval = round % cfg.eval_every == cfg.eval_every - 1 || round + 1 == cfg.rounds;
+        let (eval_acc, eval_loss) = if do_eval {
+            let (a, l) = evaluate(engine, ds, &global);
+            (Some(a), Some(l))
+        } else {
+            (None, None)
+        };
+        if cfg.verbose {
+            if let Some(a) = eval_acc {
+                eprintln!(
+                    "[{}] round {round:4} t={:8.0}s loss={:.4} acc={:.4}",
+                    strategy.name(),
+                    sim_time,
+                    crate::util::stats::mean(&losses),
+                    a
+                );
+            }
+        }
+        records.push(RoundRecord {
+            round,
+            round_secs,
+            sim_time,
+            mean_train_loss: crate::util::stats::mean(&losses),
+            participants: plans.len(),
+            mean_coverage: crate::util::stats::mean(&coverage),
+            o1,
+            eval_acc,
+            eval_loss,
+            client_secs,
+        });
+    }
+
+    let (final_acc, final_loss) = evaluate(engine, ds, &global);
+    Ok(ExperimentResult {
+        strategy: strategy.name().to_string(),
+        records,
+        sim_total_secs: sim_time,
+        final_acc,
+        final_loss,
+        selections,
+    })
+}

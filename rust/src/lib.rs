@@ -1,0 +1,37 @@
+//! # FedEL — Federated Elastic Learning for Heterogeneous Devices
+//!
+//! A production-grade reproduction of the FedEL paper as a three-layer
+//! rust + JAX + Pallas stack. This crate is the L3 coordinator: it loads
+//! AOT-compiled HLO artifacts (built once by `make artifacts`; python is
+//! never on the training path) through the PJRT CPU client, simulates a
+//! heterogeneous device fleet with a calibrated timing model, and
+//! implements the paper's contribution — sliding-window training with
+//! window-bounded ElasticTrainer tensor selection and local/global tensor
+//! importance adjustment — plus every baseline from the evaluation.
+//!
+//! Layering (see DESIGN.md):
+//! * [`manifest`] — the L2→L3 contract (flat layouts, blocks, FLOPs).
+//! * [`runtime`] — PJRT/mock engines executing the artifacts.
+//! * [`timing`] — device profiles + per-tensor `t_g`/`t_w` timing model.
+//! * [`elastic`] — ElasticTrainer importance + DP tensor selection.
+//! * [`window`] — FedEL's sliding window state machine.
+//! * [`data`] — synthetic non-iid datasets (Dirichlet partitioning).
+//! * [`fl`] — server loop, masked aggregation, bias diagnostics.
+//! * [`strategies`] — FedEL + the seven baselines.
+//! * [`metrics`] — time-to-accuracy, memory & energy models.
+//! * [`sim`] — fleet construction and end-to-end experiment runner.
+//! * [`report`] — paper-style table/figure emission.
+
+pub mod config;
+pub mod data;
+pub mod elastic;
+pub mod fl;
+pub mod manifest;
+pub mod metrics;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod strategies;
+pub mod timing;
+pub mod util;
+pub mod window;

@@ -1,0 +1,146 @@
+//! fedel — the FedEL coordinator CLI.
+//!
+//! Subcommands:
+//!   train    — run one FL experiment and print the round log + summary
+//!   compare  — run several strategies on one workload, print a table
+//!   inspect  — dump a model manifest summary
+//!   list     — list AOT-compiled models under artifacts/
+//!
+//! Examples:
+//!   fedel train --model mlp --strategy fedel --fleet small10 --rounds 40
+//!   fedel compare --model mock:8x100 --strategies fedavg,fedel --rounds 20
+//!   fedel inspect --model vgg_cifar
+
+use std::path::Path;
+
+use fedel::config::ExperimentCfg;
+use fedel::manifest;
+use fedel::report::{render_table1, table1_rows, Table};
+use fedel::sim::experiment::Experiment;
+use fedel::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(true);
+    let code = match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("compare") => cmd_compare(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("list") => cmd_list(&args),
+        other => {
+            if let Some(o) = other {
+                eprintln!("unknown subcommand {o:?}");
+            }
+            eprintln!("usage: fedel <train|compare|inspect|list> [--key value ...]");
+            Err(anyhow::anyhow!("bad usage"))
+        }
+    }
+    .map(|_| 0)
+    .unwrap_or_else(|e| {
+        eprintln!("error: {e:#}");
+        1
+    });
+    std::process::exit(code);
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = ExperimentCfg::from_args(args)?;
+    cfg.verbose = true;
+    let out_json = args.get("out").map(|s| s.to_string());
+    args.check_unused()?;
+    println!("config: {}", cfg.to_json());
+    let t0 = std::time::Instant::now();
+    let mut exp = Experiment::build(cfg)?;
+    let res = exp.run(None)?;
+    println!(
+        "\n{}: {} rounds, simulated {}, final acc {:.2}% (ppl {:.2}), wall {:.1}s",
+        res.strategy,
+        res.records.len(),
+        fedel::util::fmt_hours(res.sim_total_secs),
+        100.0 * res.final_acc,
+        res.final_perplexity(),
+        t0.elapsed().as_secs_f64()
+    );
+    if let Some(path) = out_json {
+        let curve: Vec<_> = res
+            .acc_curve()
+            .iter()
+            .map(|&(t, a)| fedel::util::json::Json::from_f64s(&[t, a]))
+            .collect();
+        let j = fedel::util::json::Json::obj(vec![
+            ("strategy", fedel::util::json::Json::Str(res.strategy.clone())),
+            ("config", exp.cfg.to_json()),
+            ("final_acc", fedel::util::json::Json::Num(res.final_acc)),
+            ("sim_total_secs", fedel::util::json::Json::Num(res.sim_total_secs)),
+            ("acc_curve", fedel::util::json::Json::Arr(curve)),
+        ]);
+        std::fs::write(&path, j.to_string_pretty())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let cfg = ExperimentCfg::from_args(args)?;
+    let strategies = args.list_or("strategies", &["fedavg", "fedel"]);
+    args.check_unused()?;
+    let mut exp = Experiment::build(cfg)?;
+    let mut results = Vec::new();
+    for s in &strategies {
+        eprintln!("running {s}...");
+        results.push(exp.run(Some(s))?);
+    }
+    let lm = exp.ctx.manifest.task == manifest::Task::Lm;
+    let rows = table1_rows(&results, 0.95, lm);
+    render_table1(
+        &format!("compare: {} on {}", strategies.join(","), exp.cfg.model),
+        &rows,
+        lm,
+    )
+    .print();
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
+    let model = args.str_or("model", "mlp");
+    let dir = args.str_or("artifacts", "artifacts");
+    args.check_unused()?;
+    let m = manifest::Manifest::load(Path::new(&dir).join(&model).as_path())?;
+    println!(
+        "model {} — task {:?}, {} params, {} tensors, {} blocks, batch {}",
+        m.model, m.task, m.param_count, m.tensors.len(), m.num_blocks, m.batch
+    );
+    let mut t = Table::new("blocks", &["block", "tensors", "params", "MFLOPs(fwd/ex)"]);
+    for b in &m.blocks {
+        let params: usize = b.tensor_ids.iter().map(|&i| m.tensors[i].size).sum();
+        t.row(vec![
+            format!("{}", b.id),
+            format!("{}", b.tensor_ids.len()),
+            format!("{}", params),
+            format!("{:.2}", b.flops_fwd / 1e6),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> anyhow::Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    args.check_unused()?;
+    let models = manifest::discover(Path::new(&dir))?;
+    if models.is_empty() {
+        println!("no models under {dir}/ — run `make artifacts`");
+        return Ok(());
+    }
+    let mut t = Table::new("models", &["name", "task", "params", "blocks", "batch"]);
+    for m in &models {
+        t.row(vec![
+            m.model.clone(),
+            format!("{:?}", m.task),
+            format!("{}", m.param_count),
+            format!("{}", m.num_blocks),
+            format!("{}", m.batch),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

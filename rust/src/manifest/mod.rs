@@ -1,0 +1,369 @@
+//! Model manifest: the L2→L3 contract describing each AOT-compiled model.
+//!
+//! `artifacts/<model>/manifest.json` (written by `python -m compile.aot`)
+//! carries the flat-parameter layout — per-tensor offsets/shapes, block
+//! membership, head flags, and forward-FLOP counts — which is everything
+//! the coordinator needs to build masks, tensor timings, importance
+//! vectors, and aggregation coverage without ever touching python.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One tensor of the flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct TensorInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub block: usize,
+    pub is_head: bool,
+    /// Forward FLOPs (per example) of the op this tensor parameterizes —
+    /// the raw material for the ElasticTrainer timing model.
+    pub flops_fwd: f64,
+}
+
+/// One sliding-window block.
+#[derive(Clone, Debug)]
+pub struct BlockInfo {
+    pub id: usize,
+    pub tensor_ids: Vec<usize>,
+    pub flops_fwd: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub label_len: usize,
+    pub task: Task,
+    pub param_count: usize,
+    pub num_blocks: usize,
+    pub tensors: Vec<TensorInfo>,
+    pub blocks: Vec<BlockInfo>,
+    pub init_sha1: String,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Task {
+    Classification,
+    Lm,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| anyhow::anyhow!("read {dir:?}/manifest.json: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j, dir)
+    }
+
+    pub fn from_json(j: &Json, dir: &Path) -> anyhow::Result<Manifest> {
+        let task = match j.s("task")? {
+            "classification" => Task::Classification,
+            "lm" => Task::Lm,
+            other => anyhow::bail!("unknown task {other:?}"),
+        };
+        let tensors: Vec<TensorInfo> = j
+            .arr("tensors")?
+            .iter()
+            .map(|t| -> anyhow::Result<TensorInfo> {
+                Ok(TensorInfo {
+                    name: t.s("name")?.to_string(),
+                    shape: t.arr("shape")?.iter().filter_map(|x| x.as_usize()).collect(),
+                    offset: t.u("offset")?,
+                    size: t.u("size")?,
+                    block: t.u("block")?,
+                    is_head: t.req("is_head")?.as_bool().unwrap_or(false),
+                    flops_fwd: t.f("flops_fwd")?,
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let blocks: Vec<BlockInfo> = j
+            .arr("blocks")?
+            .iter()
+            .map(|b| -> anyhow::Result<BlockInfo> {
+                Ok(BlockInfo {
+                    id: b.u("id")?,
+                    tensor_ids: b.arr("tensor_ids")?.iter().filter_map(|x| x.as_usize()).collect(),
+                    flops_fwd: b.f("flops_fwd")?,
+                })
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let m = Manifest {
+            model: j.s("model")?.to_string(),
+            dir: dir.to_path_buf(),
+            batch: j.u("batch")?,
+            input_shape: j.arr("input_shape")?.iter().filter_map(|x| x.as_usize()).collect(),
+            num_classes: j.u("num_classes")?,
+            label_len: j.u("label_len")?,
+            task,
+            param_count: j.u("param_count")?,
+            num_blocks: j.u("num_blocks")?,
+            tensors,
+            blocks,
+            init_sha1: j.s("init_sha1").unwrap_or("").to_string(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// Structural invariants every manifest must satisfy.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let mut off = 0usize;
+        for t in &self.tensors {
+            anyhow::ensure!(t.offset == off, "tensor {} offset gap", t.name);
+            anyhow::ensure!(
+                t.size == t.shape.iter().product::<usize>(),
+                "tensor {} size/shape mismatch",
+                t.name
+            );
+            anyhow::ensure!(t.block < self.num_blocks, "tensor {} bad block", t.name);
+            off += t.size;
+        }
+        anyhow::ensure!(off == self.param_count, "param_count mismatch");
+        anyhow::ensure!(self.blocks.len() == self.num_blocks, "blocks len");
+        let mut seen = vec![false; self.tensors.len()];
+        for b in &self.blocks {
+            for &i in &b.tensor_ids {
+                anyhow::ensure!(i < self.tensors.len(), "block tensor id oob");
+                anyhow::ensure!(!seen[i], "tensor {i} in two blocks");
+                seen[i] = true;
+                anyhow::ensure!(self.tensors[i].block == b.id, "block membership");
+            }
+        }
+        anyhow::ensure!(seen.iter().all(|&s| s), "tensor not covered by blocks");
+        Ok(())
+    }
+
+    pub fn train_hlo_path(&self, exit: usize) -> PathBuf {
+        self.dir.join(format!("train_exit_{exit}.hlo.txt"))
+    }
+
+    pub fn eval_hlo_path(&self) -> PathBuf {
+        self.dir.join("eval.hlo.txt")
+    }
+
+    pub fn init_path(&self) -> PathBuf {
+        self.dir.join("init.bin")
+    }
+
+    pub fn load_init(&self) -> anyhow::Result<Vec<f32>> {
+        let v = crate::util::io::read_f32_vec(&self.init_path())?;
+        anyhow::ensure!(v.len() == self.param_count, "init.bin length mismatch");
+        Ok(v)
+    }
+
+    /// Tensor ids of block `b`, body (non-head) only.
+    pub fn body_tensors_of_block(&self, b: usize) -> Vec<usize> {
+        self.blocks[b]
+            .tensor_ids
+            .iter()
+            .copied()
+            .filter(|&i| !self.tensors[i].is_head)
+            .collect()
+    }
+
+    /// Tensor ids of the early-exit head attached to block `b`.
+    pub fn head_tensors_of_block(&self, b: usize) -> Vec<usize> {
+        self.blocks[b]
+            .tensor_ids
+            .iter()
+            .copied()
+            .filter(|&i| self.tensors[i].is_head)
+            .collect()
+    }
+
+    /// Expand a per-tensor [K] mask into the element-level [P] mask the
+    /// train artifact consumes. Fractional values allowed (HeteroFL).
+    pub fn expand_mask(&self, tensor_mask: &[f32]) -> Vec<f32> {
+        assert_eq!(tensor_mask.len(), self.tensors.len());
+        let mut out = vec![0.0f32; self.param_count];
+        for (t, &m) in self.tensors.iter().zip(tensor_mask) {
+            if m != 0.0 {
+                out[t.offset..t.offset + t.size].fill(m);
+            }
+        }
+        out
+    }
+
+    /// Expand a per-tensor *fractional prefix coverage* vector: entry k in
+    /// [0,1] marks the leading fraction of tensor k's elements as
+    /// trainable (HeteroFL-style width scaling at element granularity).
+    pub fn expand_prefix_mask(&self, frac: &[f32]) -> Vec<f32> {
+        assert_eq!(frac.len(), self.tensors.len());
+        let mut out = vec![0.0f32; self.param_count];
+        for (t, &f) in self.tensors.iter().zip(frac) {
+            let n = ((t.size as f64) * f.clamp(0.0, 1.0) as f64).round() as usize;
+            out[t.offset..t.offset + n.min(t.size)].fill(1.0);
+        }
+        out
+    }
+}
+
+/// Discover all model manifests under an artifacts root.
+pub fn discover(root: &Path) -> anyhow::Result<Vec<Manifest>> {
+    let mut out = Vec::new();
+    for entry in std::fs::read_dir(root)? {
+        let dir = entry?.path();
+        if dir.is_dir() && dir.join("manifest.json").exists() {
+            out.push(Manifest::load(&dir)?);
+        }
+    }
+    out.sort_by(|a, b| a.model.cmp(&b.model));
+    Ok(out)
+}
+
+/// Synthetic manifests for tests, benches, and the mock engine — usable
+/// from integration tests and examples, hence not #[cfg(test)].
+pub mod tests_support {
+    use super::*;
+    use std::path::Path;
+
+    /// JSON text of a tiny 2-block manifest (2 body tensors + 2 heads,
+    /// 26 params) exercised by unit tests.
+    pub fn toy_json() -> String {
+        r#"{
+ "model": "toy", "batch": 4, "input_shape": [8], "num_classes": 3,
+ "label_len": 4, "task": "classification", "param_count": 26,
+ "num_tensors": 4, "num_blocks": 2,
+ "tensors": [
+  {"name": "block0/w", "shape": [2, 4], "offset": 0, "size": 8,
+   "block": 0, "is_head": false, "flops_fwd": 64.0},
+  {"name": "head0/w", "shape": [4], "offset": 8, "size": 4,
+   "block": 0, "is_head": true, "flops_fwd": 8.0},
+  {"name": "block1/w", "shape": [2, 5], "offset": 12, "size": 10,
+   "block": 1, "is_head": false, "flops_fwd": 100.0},
+  {"name": "head1/w", "shape": [4], "offset": 22, "size": 4,
+   "block": 1, "is_head": true, "flops_fwd": 8.0}
+ ],
+ "blocks": [
+  {"id": 0, "tensor_ids": [0, 1], "flops_fwd": 64.0},
+  {"id": 1, "tensor_ids": [2, 3], "flops_fwd": 100.0}
+ ],
+ "exits": [1, 2]
+}"#
+        .to_string()
+    }
+
+    /// A toy 2-block manifest (2 body tensors + 2 heads, 26 params).
+    pub fn toy_manifest() -> Manifest {
+        let j = Json::parse(&toy_json()).unwrap();
+        Manifest::from_json(&j, Path::new("/tmp/toy")).unwrap()
+    }
+
+    /// A synthetic chain model with `blocks` blocks; each block has a body
+    /// tensor of `body` params (FLOPs grow with depth: flops_i = base *
+    /// (1 + i/2), ~10 MFLOP so the timing model is FLOP-dominated like the
+    /// real zoo manifests, with cheap heads) and a small head. Used by
+    /// window/DP/strategy tests at realistic scale.
+    pub fn chain_manifest(blocks: usize, body: usize) -> Manifest {
+        let mut tensors = Vec::new();
+        let mut block_list = Vec::new();
+        let mut off = 0usize;
+        for b in 0..blocks {
+            let flops = 1.0e7 * (1.0 + b as f64 / 2.0);
+            tensors.push(Json::obj(vec![
+                ("name", Json::Str(format!("block{b}/w"))),
+                ("shape", Json::from_f64s(&[body as f64])),
+                ("offset", Json::Num(off as f64)),
+                ("size", Json::Num(body as f64)),
+                ("block", Json::Num(b as f64)),
+                ("is_head", Json::Bool(false)),
+                ("flops_fwd", Json::Num(flops)),
+            ]));
+            off += body;
+            tensors.push(Json::obj(vec![
+                ("name", Json::Str(format!("head{b}/w"))),
+                ("shape", Json::from_f64s(&[4.0])),
+                ("offset", Json::Num(off as f64)),
+                ("size", Json::Num(4.0)),
+                ("block", Json::Num(b as f64)),
+                ("is_head", Json::Bool(true)),
+                ("flops_fwd", Json::Num(8.0)),
+            ]));
+            off += 4;
+            block_list.push(Json::obj(vec![
+                ("id", Json::Num(b as f64)),
+                ("tensor_ids", Json::from_f64s(&[(2 * b) as f64, (2 * b + 1) as f64])),
+                ("flops_fwd", Json::Num(flops)),
+            ]));
+        }
+        let j = Json::obj(vec![
+            ("model", Json::Str(format!("chain{blocks}"))),
+            ("batch", Json::Num(4.0)),
+            ("input_shape", Json::from_f64s(&[8.0])),
+            ("num_classes", Json::Num(4.0)),
+            ("label_len", Json::Num(4.0)),
+            ("task", Json::Str("classification".into())),
+            ("param_count", Json::Num(off as f64)),
+            ("num_tensors", Json::Num(tensors.len() as f64)),
+            ("num_blocks", Json::Num(blocks as f64)),
+            ("tensors", Json::Arr(tensors)),
+            ("blocks", Json::Arr(block_list)),
+        ]);
+        Manifest::from_json(&j, Path::new("/tmp/chain")).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::tests_support::{toy_json, toy_manifest as toy};
+    use super::*;
+
+    #[test]
+    fn parses_toy_manifest() {
+        let m = toy();
+        assert_eq!(m.model, "toy");
+        assert_eq!(m.param_count, 26);
+        assert_eq!(m.tensors.len(), 4);
+        assert_eq!(m.num_blocks, 2);
+        assert_eq!(m.task, Task::Classification);
+    }
+
+    #[test]
+    fn block_helpers() {
+        let m = toy();
+        assert_eq!(m.body_tensors_of_block(0), vec![0]);
+        assert_eq!(m.head_tensors_of_block(0), vec![1]);
+        assert_eq!(m.body_tensors_of_block(1), vec![2]);
+    }
+
+    #[test]
+    fn expand_mask_covers_selected_tensors() {
+        let m = toy();
+        let mask = m.expand_mask(&[1.0, 0.0, 0.5, 1.0]);
+        assert_eq!(mask.len(), 26);
+        assert!(mask[0..8].iter().all(|&x| x == 1.0));
+        assert!(mask[8..12].iter().all(|&x| x == 0.0));
+        assert!(mask[12..22].iter().all(|&x| x == 0.5));
+        assert!(mask[22..26].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn expand_prefix_mask_fractional() {
+        let m = toy();
+        let mask = m.expand_prefix_mask(&[0.5, 0.0, 1.0, 0.0]);
+        assert_eq!(mask[0..4], [1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(mask[4..8], [0.0, 0.0, 0.0, 0.0]);
+        assert!(mask[12..22].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn validation_rejects_offset_gap() {
+        let text = toy_json().replace("\"offset\": 8", "\"offset\": 9");
+        let j = Json::parse(&text).unwrap();
+        assert!(Manifest::from_json(&j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_param_count() {
+        let text = toy_json().replace("\"param_count\": 26", "\"param_count\": 27");
+        let j = Json::parse(&text).unwrap();
+        assert!(Manifest::from_json(&j, Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,99 @@
+//! Power / energy model (Fig 9).
+//!
+//! The paper observes that power draw is roughly method-independent (the
+//! GPU runs at full tilt whenever active) while *energy* tracks active
+//! time. We model exactly that: a device burns `power_watts` while
+//! training and `idle_watts` while waiting for the round to finish, so
+//!
+//!   E_round(client) = P_active · t_client + P_idle · (t_round − t_client).
+
+use crate::fl::server::ExperimentResult;
+use crate::timing::DeviceProfile;
+
+#[derive(Clone, Debug, Default)]
+pub struct EnergyReport {
+    /// Mean active power across devices and rounds (W).
+    pub mean_power_w: f64,
+    /// Total fleet energy over the experiment (kJ).
+    pub total_kj: f64,
+    /// Per-device-name totals (kJ).
+    pub per_device: Vec<(String, f64)>,
+}
+
+const IDLE_FRACTION: f64 = 0.25; // idle draw relative to active
+
+/// Fleet energy from an experiment's per-round per-client times.
+pub fn energy_report(res: &ExperimentResult, fleet: &[DeviceProfile]) -> EnergyReport {
+    let mut total_j = 0.0;
+    let mut per: std::collections::BTreeMap<String, f64> = Default::default();
+    let mut power_sum = 0.0;
+    let mut power_n = 0usize;
+    for rec in &res.records {
+        for &(client, secs) in &rec.client_secs {
+            let dev = &fleet[client % fleet.len()];
+            let active = dev.power_watts * secs;
+            let idle = dev.power_watts * IDLE_FRACTION * (rec.round_secs - secs).max(0.0);
+            total_j += active + idle;
+            *per.entry(dev.name.clone()).or_insert(0.0) += (active + idle) / 1e3;
+            power_sum += dev.power_watts;
+            power_n += 1;
+        }
+    }
+    EnergyReport {
+        mean_power_w: if power_n == 0 { 0.0 } else { power_sum / power_n as f64 },
+        total_kj: total_j / 1e3,
+        per_device: per.into_iter().collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::server::{ExperimentResult, RoundRecord};
+
+    fn result_with(times: Vec<(usize, f64)>, round_secs: f64) -> ExperimentResult {
+        ExperimentResult {
+            strategy: "t".into(),
+            records: vec![RoundRecord {
+                round: 0,
+                round_secs,
+                sim_time: round_secs,
+                mean_train_loss: 0.0,
+                participants: times.len(),
+                mean_coverage: 1.0,
+                o1: 0.0,
+                eval_acc: None,
+                eval_loss: None,
+                client_secs: times,
+            }],
+            sim_total_secs: round_secs,
+            final_acc: 0.0,
+            final_loss: 0.0,
+            selections: vec![],
+        }
+    }
+
+    #[test]
+    fn energy_tracks_active_time() {
+        let fleet = vec![DeviceProfile::new("d", 1.0, 10.0)];
+        let short = energy_report(&result_with(vec![(0, 100.0)], 100.0), &fleet);
+        let long = energy_report(&result_with(vec![(0, 200.0)], 200.0), &fleet);
+        assert!(long.total_kj > short.total_kj * 1.9);
+    }
+
+    #[test]
+    fn idle_waiting_costs_less_than_training() {
+        let fleet = vec![DeviceProfile::new("fast", 1.0, 10.0), DeviceProfile::new("slow", 2.0, 10.0)];
+        // fast client finishes at 100s, waits 100s for the slow one
+        let rep = energy_report(&result_with(vec![(0, 100.0), (1, 200.0)], 200.0), &fleet);
+        // fast: 10*100 + 2.5*100 = 1250 J; slow: 10*200 = 2000 J
+        assert!((rep.total_kj - 3.25).abs() < 1e-9, "{}", rep.total_kj);
+    }
+
+    #[test]
+    fn mean_power_is_profile_power() {
+        let fleet = vec![DeviceProfile::new("d", 1.0, 15.0)];
+        let rep = energy_report(&result_with(vec![(0, 50.0)], 50.0), &fleet);
+        assert_eq!(rep.mean_power_w, 15.0);
+    }
+}

@@ -1,0 +1,143 @@
+//! Training-memory model (Fig 8).
+//!
+//! The paper measures device memory with the Jetson Power GUI; we model
+//! the same quantity analytically (DESIGN.md §4):
+//!
+//!   memory = parameters                       (always resident)
+//!          + gradient buffers                 (backward-reachable tensors)
+//!          + activations of forward blocks    (saved for backward)
+//!
+//! The backward-reachable set under a mask is the chain from the exit head
+//! down to the *shallowest selected* tensor (unselected tensors in between
+//! still materialize gradients — Limitation #1); blocks past the exit are
+//! never forwarded, which is where FedEL's window saves activation memory.
+//!
+//! Activation elements per tensor are derived from the manifest:
+//! out_elems ≈ flops_fwd / (2 · fan_in), exact for dense and conv ops.
+
+use crate::manifest::Manifest;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MemoryBreakdown {
+    pub params_bytes: f64,
+    pub grad_bytes: f64,
+    pub act_bytes: f64,
+}
+
+impl MemoryBreakdown {
+    pub fn total(&self) -> f64 {
+        self.params_bytes + self.grad_bytes + self.act_bytes
+    }
+
+    pub fn total_mb(&self) -> f64 {
+        self.total() / (1024.0 * 1024.0)
+    }
+}
+
+/// Activation elements produced by the op of tensor `i` (per example).
+pub fn act_elems(m: &Manifest, i: usize) -> f64 {
+    let t = &m.tensors[i];
+    let fan_in: f64 = if t.shape.len() >= 2 {
+        t.shape[..t.shape.len() - 1].iter().product::<usize>() as f64
+    } else {
+        1.0
+    };
+    (t.flops_fwd / (2.0 * fan_in.max(1.0))).max(t.shape.last().copied().unwrap_or(1) as f64)
+}
+
+/// Memory for one client plan: exit + per-tensor coverage mask [K].
+pub fn memory_bytes(m: &Manifest, exit: usize, tensor_mask: &[f32]) -> MemoryBreakdown {
+    assert_eq!(tensor_mask.len(), m.tensors.len());
+    let f32b = 4.0;
+    let params_bytes = m.param_count as f64 * f32b;
+
+    // Backward-reachable set: find the shallowest selected tensor among
+    // forward-participating tensors (blocks < exit and the exit head);
+    // everything from it to the exit head holds a gradient buffer.
+    let in_forward = |i: usize| -> bool {
+        let t = &m.tensors[i];
+        if t.is_head {
+            t.block == exit - 1
+        } else {
+            t.block < exit
+        }
+    };
+    let selected_offsets: Vec<usize> = (0..m.tensors.len())
+        .filter(|&i| in_forward(i) && tensor_mask[i] > 0.0)
+        .map(|i| m.tensors[i].offset)
+        .collect();
+    let grad_bytes = match selected_offsets.iter().min() {
+        None => 0.0,
+        Some(&min_off) => (0..m.tensors.len())
+            .filter(|&i| in_forward(i) && m.tensors[i].offset >= min_off)
+            .map(|i| m.tensors[i].size as f64 * f32b)
+            .sum(),
+    };
+
+    // Activations: every forward-visited op saves its output.
+    let act_bytes: f64 = (0..m.tensors.len())
+        .filter(|&i| in_forward(i))
+        .map(|i| act_elems(m, i) * m.batch as f64 * f32b)
+        .sum();
+
+    MemoryBreakdown { params_bytes, grad_bytes, act_bytes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::tests_support::chain_manifest;
+
+    #[test]
+    fn full_training_uses_most_memory() {
+        let m = chain_manifest(6, 100);
+        let k = m.tensors.len();
+        let full = memory_bytes(&m, 6, &vec![1.0; k]);
+        let mut partial_mask = vec![0.0f32; k];
+        partial_mask[0] = 1.0; // only block 0 body
+        let partial = memory_bytes(&m, 2, &partial_mask);
+        assert!(full.total() > partial.total());
+        assert!(full.grad_bytes > 0.0 && full.act_bytes > 0.0);
+    }
+
+    #[test]
+    fn early_exit_cuts_activation_memory() {
+        let m = chain_manifest(8, 50);
+        let k = m.tensors.len();
+        let deep = memory_bytes(&m, 8, &vec![1.0; k]);
+        let shallow = memory_bytes(&m, 2, &vec![1.0; k]);
+        assert!(shallow.act_bytes < deep.act_bytes * 0.5);
+    }
+
+    #[test]
+    fn chain_rule_counts_unselected_between() {
+        // selecting only a shallow tensor still allocates grads up the chain
+        let m = chain_manifest(4, 100);
+        let k = m.tensors.len();
+        let mut only_shallow = vec![0.0f32; k];
+        only_shallow[0] = 1.0; // block0 body
+        let a = memory_bytes(&m, 4, &only_shallow);
+        let mut only_deep = vec![0.0f32; k];
+        only_deep[6] = 1.0; // block3 body
+        let b = memory_bytes(&m, 4, &only_deep);
+        assert!(a.grad_bytes > b.grad_bytes, "{} vs {}", a.grad_bytes, b.grad_bytes);
+    }
+
+    #[test]
+    fn empty_selection_no_grad_memory() {
+        let m = chain_manifest(4, 10);
+        let k = m.tensors.len();
+        let br = memory_bytes(&m, 4, &vec![0.0; k]);
+        assert_eq!(br.grad_bytes, 0.0);
+        assert!(br.params_bytes > 0.0);
+    }
+
+    #[test]
+    fn params_memory_constant() {
+        let m = chain_manifest(5, 20);
+        let k = m.tensors.len();
+        let a = memory_bytes(&m, 1, &vec![0.0; k]);
+        let b = memory_bytes(&m, 5, &vec![1.0; k]);
+        assert_eq!(a.params_bytes, b.params_bytes);
+    }
+}

@@ -1,0 +1,8 @@
+//! Measurement models: training memory (Fig 8), power/energy (Fig 9), and
+//! time-to-accuracy bookkeeping.
+
+pub mod energy;
+pub mod memory;
+
+pub use energy::{energy_report, EnergyReport};
+pub use memory::{memory_bytes, MemoryBreakdown};

@@ -1,0 +1,234 @@
+//! Shared bench support: workload presets matching the paper's four
+//! evaluation columns, paper reference numbers for side-by-side printing,
+//! and a scale knob so `cargo bench` finishes in minutes by default while
+//! `FEDEL_BENCH_SCALE=full` reproduces closer-to-paper round counts.
+
+use crate::config::{ExperimentCfg, FleetSpec};
+
+/// Bench scale from the environment: "quick" (default) or "full".
+pub fn full_scale() -> bool {
+    std::env::var("FEDEL_BENCH_SCALE").map(|v| v == "full").unwrap_or(false)
+}
+
+/// Scale a round count by the bench scale.
+pub fn rounds(quick: usize, full: usize) -> usize {
+    if full_scale() {
+        full
+    } else {
+        quick
+    }
+}
+
+/// The paper's four Table-1 workloads. `slowest_round_secs` pins the
+/// simulated clock to Appendix B.3 Table 2's measured FedAvg round times,
+/// so reproduced hours are in the paper's units.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Workload {
+    /// CIFAR10-like VGG, 10-device testbed.
+    Cifar10Dev,
+    /// TinyImageNet-like VGG, 100-device simulation.
+    TinyIn100Dev,
+    /// Google-Speech-like ResNet, 100-device simulation.
+    Speech100Dev,
+    /// Reddit-like LM, 100-device simulation.
+    Reddit100Dev,
+}
+
+impl Workload {
+    pub fn all() -> [Workload; 4] {
+        [
+            Workload::Cifar10Dev,
+            Workload::TinyIn100Dev,
+            Workload::Speech100Dev,
+            Workload::Reddit100Dev,
+        ]
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Workload::Cifar10Dev => "Image Classif. (10 dev, CIFAR10-like)",
+            Workload::TinyIn100Dev => "Image Classif. (100 dev, TinyImageNet-like)",
+            Workload::Speech100Dev => "Speech Recog. (100 dev)",
+            Workload::Reddit100Dev => "NLP next-word (100 dev)",
+        }
+    }
+
+    pub fn model(&self) -> &'static str {
+        match self {
+            Workload::Cifar10Dev => "vgg_cifar",
+            Workload::TinyIn100Dev => "vgg_tinyin",
+            Workload::Speech100Dev => "resnet_speech",
+            Workload::Reddit100Dev => "tinylm_reddit",
+        }
+    }
+
+    pub fn is_lm(&self) -> bool {
+        matches!(self, Workload::Reddit100Dev)
+    }
+
+    /// Paper Appendix B.3 Table 2 FedAvg per-round minutes (slowest dev).
+    pub fn fedavg_round_mins(&self) -> f64 {
+        match self {
+            Workload::Cifar10Dev => 71.8,
+            Workload::TinyIn100Dev => 161.9,
+            Workload::Speech100Dev => 212.9,
+            Workload::Reddit100Dev => 152.1,
+        }
+    }
+
+    /// Paper Appendix B.3 Table 2 T_th minutes.
+    pub fn t_th_mins(&self) -> f64 {
+        match self {
+            Workload::Cifar10Dev => 36.0,
+            Workload::TinyIn100Dev => 42.2,
+            Workload::Speech100Dev => 53.2,
+            Workload::Reddit100Dev => 40.9,
+        }
+    }
+
+    /// Bench-sized experiment config for this workload. `clients_cap`
+    /// subsamples the 100-device fleets at quick scale.
+    pub fn cfg(&self, seed: u64) -> ExperimentCfg {
+        let full = full_scale();
+        let (fleet, rounds, steps) = match self {
+            Workload::Cifar10Dev => (
+                FleetSpec::Small10,
+                if full { 150 } else { 40 },
+                4,
+            ),
+            Workload::TinyIn100Dev => (
+                FleetSpec::Large(if full { 100 } else { 20 }),
+                if full { 120 } else { 16 },
+                4,
+            ),
+            Workload::Speech100Dev => (
+                FleetSpec::Large(if full { 100 } else { 12 }),
+                if full { 120 } else { 10 },
+                4,
+            ),
+            Workload::Reddit100Dev => (
+                FleetSpec::Large(if full { 100 } else { 10 }),
+                if full { 80 } else { 10 },
+                2,
+            ),
+        };
+        ExperimentCfg {
+            model: self.model().into(),
+            artifacts_dir: "artifacts".into(),
+            strategy: "fedel".into(),
+            fleet,
+            rounds,
+            local_steps: steps,
+            lr: if self.is_lm() { 0.1 } else { 0.04 },
+            alpha: 0.1,
+            beta: 0.6,
+            t_th_factor: 1.0,
+            slowest_round_secs: self.fedavg_round_mins() * 60.0,
+            seed,
+            eval_every: (rounds / 8).max(2),
+            eval_batches: if full { 16 } else { 6 },
+            comm_secs: 30.0,
+            record_selections: false,
+            verbose: false,
+        }
+    }
+}
+
+/// Paper Table 1 reference rows: (method, metric, hours, speedup-str).
+/// metric is accuracy% except the NLP column (perplexity).
+pub fn paper_table1(w: Workload) -> Vec<(&'static str, f64, f64, &'static str)> {
+    match w {
+        Workload::Cifar10Dev => vec![
+            ("fedavg", 56.13, 119.8, "N/A"),
+            ("elastictrainer", 40.03, 64.8, "1.84x"),
+            ("heterofl", 53.44, 80.1, "1.49x"),
+            ("depthfl", 54.89, 77.3, "1.54x"),
+            ("pyramidfl", 56.24, 115.7, "1.03x"),
+            ("timelyfl", 53.74, 66.3, "1.81x"),
+            ("fiarse", 56.48, 71.9, "1.66x"),
+            ("fedel", 56.51, 63.8, "1.87x"),
+        ],
+        Workload::TinyIn100Dev => vec![
+            ("fedavg", 33.76, 563.1, "N/A"),
+            ("elastictrainer", 27.65, 158.6, "3.55x"),
+            ("heterofl", 30.56, 248.2, "2.26x"),
+            ("depthfl", 34.14, 198.3, "2.83x"),
+            ("pyramidfl", 34.70, 497.4, "1.13x"),
+            ("timelyfl", 33.53, 198.1, "2.84x"),
+            ("fiarse", 33.98, 191.5, "2.94x"),
+            ("fedel", 34.96, 156.8, "3.59x"),
+        ],
+        Workload::Speech100Dev => vec![
+            ("fedavg", 58.04, 709.8, "N/A"),
+            ("elastictrainer", 47.96, 184.3, "3.84x"),
+            ("heterofl", 51.47, 265.9, "2.66x"),
+            ("depthfl", 54.23, 207.4, "3.42x"),
+            ("pyramidfl", 58.12, 587.4, "1.21x"),
+            ("timelyfl", 56.49, 193.2, "3.67x"),
+            ("fiarse", 58.13, 198.2, "3.58x"),
+            ("fedel", 58.26, 183.3, "3.87x"),
+        ],
+        Workload::Reddit100Dev => vec![
+            ("fedavg", 77.48, 546.4, "N/A"),
+            ("elastictrainer", 81.02, 176.2, "3.10x"),
+            ("heterofl", 80.11, 206.1, "2.65x"),
+            ("depthfl", 78.08, 212.4, "2.57x"),
+            ("pyramidfl", 77.68, 418.2, "1.31x"),
+            ("timelyfl", 80.91, 177.6, "3.07x"),
+            ("fiarse", 77.31, 191.0, "2.86x"),
+            ("fedel", 77.23, 174.5, "3.13x"),
+        ],
+    }
+}
+
+/// Micro-benchmark helper: median wall time of `f` over `iters` runs.
+pub fn time_median<F: FnMut()>(iters: usize, mut f: F) -> std::time::Duration {
+    let mut samples: Vec<std::time::Duration> = (0..iters)
+        .map(|_| {
+            let t0 = std::time::Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    samples.sort();
+    samples[samples.len() / 2]
+}
+
+/// Standard bench banner.
+pub fn banner(id: &str, what: &str) {
+    println!("\n######## {id}: {what} ########");
+    println!(
+        "scale: {} (set FEDEL_BENCH_SCALE=full for paper-scale rounds)\n",
+        if full_scale() { "full" } else { "quick" }
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_cfgs_are_wellformed() {
+        for w in Workload::all() {
+            let cfg = w.cfg(1);
+            assert!(cfg.rounds > 0 && cfg.local_steps > 0);
+            assert_eq!(cfg.slowest_round_secs, w.fedavg_round_mins() * 60.0);
+        }
+    }
+
+    #[test]
+    fn paper_tables_have_all_methods() {
+        for w in Workload::all() {
+            let t = paper_table1(w);
+            assert_eq!(t.len(), 8);
+            assert_eq!(t[0].0, "fedavg");
+            assert_eq!(t[7].0, "fedel");
+        }
+    }
+
+    #[test]
+    fn time_median_measures() {
+        let d = time_median(5, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(d.as_millis() >= 1);
+    }
+}

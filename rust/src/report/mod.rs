@@ -1,0 +1,217 @@
+//! Paper-style reporting: aligned tables with paper-vs-measured rows,
+//! figure data series (CSV), and the Table 1 row assembly (accuracy, time,
+//! speedup vs FedAvg at matched accuracy).
+
+pub mod bench;
+
+use crate::fl::server::ExperimentResult;
+
+/// A plain-text aligned table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+/// One assembled Table-1 row.
+#[derive(Clone, Debug)]
+pub struct Table1Row {
+    pub method: String,
+    pub final_acc: f64,
+    pub final_ppl: f64,
+    /// Simulated seconds to the comparison target (or total if never hit).
+    pub time_secs: f64,
+    pub speedup_vs_fedavg: Option<f64>,
+}
+
+/// Assemble Table-1 rows: time is time-to-target-accuracy where target =
+/// `target_frac` x the FedAvg final accuracy (the paper compares methods
+/// at matched accuracy); methods that never reach the target report their
+/// total time. Speedup = FedAvg time / method time.
+pub fn table1_rows(
+    results: &[ExperimentResult],
+    target_frac: f64,
+    lm: bool,
+) -> Vec<Table1Row> {
+    let fedavg = results
+        .iter()
+        .find(|r| r.strategy == "fedavg")
+        .expect("table1 needs a fedavg run");
+    let (fedavg_time, target) = if lm {
+        let target = fedavg.final_perplexity() / target_frac;
+        let t = fedavg
+            .time_to_perplexity(target)
+            .unwrap_or(fedavg.sim_total_secs);
+        (t, target)
+    } else {
+        let target = fedavg.final_acc * target_frac;
+        let t = fedavg.time_to_accuracy(target).unwrap_or(fedavg.sim_total_secs);
+        (t, target)
+    };
+    results
+        .iter()
+        .map(|r| {
+            let time_secs = if lm {
+                r.time_to_perplexity(target).unwrap_or(r.sim_total_secs)
+            } else {
+                r.time_to_accuracy(target).unwrap_or(r.sim_total_secs)
+            };
+            Table1Row {
+                method: r.strategy.clone(),
+                final_acc: r.final_acc,
+                final_ppl: r.final_perplexity(),
+                time_secs,
+                speedup_vs_fedavg: if r.strategy == "fedavg" {
+                    None
+                } else {
+                    Some(fedavg_time / time_secs.max(1e-9))
+                },
+            }
+        })
+        .collect()
+}
+
+/// Render Table-1 rows in the paper's format.
+pub fn render_table1(title: &str, rows: &[Table1Row], lm: bool) -> Table {
+    let metric = if lm { "Perp.(down)" } else { "Acc.(up)" };
+    let mut t = Table::new(title, &["Method", metric, "Time", "Speedup"]);
+    for r in rows {
+        t.row(vec![
+            r.method.clone(),
+            if lm {
+                format!("{:.2}", r.final_ppl)
+            } else {
+                format!("{:.2}%", 100.0 * r.final_acc)
+            },
+            crate::util::fmt_hours(r.time_secs),
+            crate::util::fmt_speedup(r.speedup_vs_fedavg),
+        ]);
+    }
+    t
+}
+
+/// Print a "paper reports" reference line under a reproduced table.
+pub fn paper_note(lines: &[&str]) {
+    println!("  paper reference:");
+    for l in lines {
+        println!("    {l}");
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::server::RoundRecord;
+
+    fn fake_result(name: &str, times_accs: &[(f64, f64)], final_acc: f64) -> ExperimentResult {
+        let records = times_accs
+            .iter()
+            .enumerate()
+            .map(|(i, &(t, a))| RoundRecord {
+                round: i,
+                round_secs: 0.0,
+                sim_time: t,
+                mean_train_loss: 0.0,
+                participants: 1,
+                mean_coverage: 1.0,
+                o1: 0.0,
+                eval_acc: Some(a),
+                eval_loss: Some(1.0),
+                client_secs: vec![],
+            })
+            .collect();
+        ExperimentResult {
+            strategy: name.into(),
+            records,
+            sim_total_secs: times_accs.last().map(|&(t, _)| t).unwrap_or(0.0),
+            final_acc,
+            final_loss: 1.0,
+            selections: vec![],
+        }
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bb"]);
+        t.row(vec!["xxx".into(), "y".into()]);
+        let s = t.render();
+        assert!(s.contains("demo"));
+        assert!(s.contains("xxx"));
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn ragged_rows_rejected() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn speedup_vs_fedavg_at_matched_accuracy() {
+        let fedavg = fake_result("fedavg", &[(100.0, 0.3), (200.0, 0.6)], 0.6);
+        let fedel = fake_result("fedel", &[(50.0, 0.4), (100.0, 0.62)], 0.62);
+        let rows = table1_rows(&[fedavg, fedel], 0.95, false);
+        assert!(rows[0].speedup_vs_fedavg.is_none());
+        let s = rows[1].speedup_vs_fedavg.unwrap();
+        // fedavg reaches 0.57 at t=200; fedel at t=100 -> 2x
+        assert!((s - 2.0).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn never_reaching_target_uses_total_time() {
+        let fedavg = fake_result("fedavg", &[(100.0, 0.5), (200.0, 0.6)], 0.6);
+        let bad = fake_result("slowpoke", &[(500.0, 0.1)], 0.1);
+        let rows = table1_rows(&[fedavg, bad], 0.95, false);
+        assert_eq!(rows[1].time_secs, 500.0);
+        assert!(rows[1].speedup_vs_fedavg.unwrap() < 1.0);
+    }
+}

@@ -1,0 +1,211 @@
+//! Mock engine: closed-form compute with the exact `Engine` interface.
+//!
+//! Loss is a masked quadratic pulled toward a data-dependent target:
+//!     L(p) = 0.5 / P_e * sum_{k reachable at exit e} (p_k - t_k(x))^2
+//! where t(x) = global_target + delta(x) and "reachable at exit e" mirrors
+//! the early-exit semantics (blocks >= e contribute no gradient; the head
+//! of block e-1 does). Gradients, masked updates, and per-tensor squared
+//! gradients are all exact, so every coordinator policy (DP selection,
+//! sliding window, importance adjustment, aggregation) can be tested
+//! deterministically without PJRT or artifacts.
+
+use crate::manifest::Manifest;
+use crate::util::rng::Rng;
+
+use super::{check_shapes, Engine, EvalOut, TrainOut};
+
+pub struct MockEngine {
+    manifest: Manifest,
+    target: Vec<f32>,
+    /// Strength of the data-dependent target shift (model drift knob).
+    pub data_shift: f32,
+}
+
+impl MockEngine {
+    pub fn new(manifest: Manifest, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let target: Vec<f32> = (0..manifest.param_count).map(|_| rng.normal_f32()).collect();
+        MockEngine { manifest, target, data_shift: 0.25 }
+    }
+
+    /// Which tensors receive gradient at a given exit: all body tensors of
+    /// blocks < exit, plus the head of block exit-1.
+    fn reachable(&self, exit: usize) -> Vec<bool> {
+        self.manifest
+            .tensors
+            .iter()
+            .map(|t| {
+                if t.is_head {
+                    t.block == exit - 1
+                } else {
+                    t.block < exit
+                }
+            })
+            .collect()
+    }
+
+    fn target_for(&self, x: &[f32]) -> Vec<f32> {
+        // Cheap deterministic hash of the batch -> per-tensor shift.
+        let mut h = 0u64;
+        for &v in x.iter().take(16) {
+            h = h.wrapping_mul(0x100000001B3).wrapping_add(v.to_bits() as u64);
+        }
+        let mut rng = Rng::new(h);
+        let mut t = self.target.clone();
+        for ti in &self.manifest.tensors {
+            let shift = rng.normal_f32() * self.data_shift;
+            for v in &mut t[ti.offset..ti.offset + ti.size] {
+                *v += shift;
+            }
+        }
+        t
+    }
+}
+
+impl Engine for MockEngine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn train_step(
+        &mut self,
+        exit: usize,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<TrainOut> {
+        check_shapes(&self.manifest, exit, params, x, y, mask)?;
+        let reach = self.reachable(exit);
+        let target = self.target_for(x);
+        let k = self.manifest.tensors.len();
+        let mut new_params = params.to_vec();
+        let mut sq_grads = vec![0.0f64; k];
+        let mut loss = 0.0f64;
+        let mut n_reach = 0usize;
+        for (i, t) in self.manifest.tensors.iter().enumerate() {
+            if !reach[i] {
+                continue;
+            }
+            n_reach += t.size;
+        }
+        let scale = 1.0 / n_reach.max(1) as f32;
+        for (i, t) in self.manifest.tensors.iter().enumerate() {
+            if !reach[i] {
+                continue;
+            }
+            for j in t.offset..t.offset + t.size {
+                let g = (params[j] - target[j]) * scale;
+                loss += 0.5 * ((params[j] - target[j]) as f64).powi(2) * scale as f64;
+                sq_grads[i] += (g as f64) * (g as f64);
+                new_params[j] = params[j] - lr * mask[j] * g;
+            }
+        }
+        let _ = y;
+        Ok(TrainOut { new_params, loss: loss as f32, sq_grads })
+    }
+
+    fn eval_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> anyhow::Result<EvalOut> {
+        let _ = (x, y);
+        // Distance of the full parameter vector to the *global* target maps
+        // to a pseudo-accuracy in (0, 1]: closer == higher.
+        let p = self.manifest.param_count as f64;
+        let mse: f64 = params
+            .iter()
+            .zip(&self.target)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / p;
+        let rows = self.manifest.label_len as f64;
+        let acc = 1.0 / (1.0 + mse);
+        Ok(EvalOut { correct: acc * rows, loss_sum: mse * rows, rows })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::tests_support::toy_manifest;
+
+    fn engine() -> MockEngine {
+        MockEngine::new(toy_manifest(), 1)
+    }
+
+    fn batch(m: &Manifest) -> (Vec<f32>, Vec<i32>) {
+        let x = vec![0.5f32; m.batch * m.input_shape.iter().product::<usize>()];
+        let y = vec![0i32; m.label_len];
+        (x, y)
+    }
+
+    #[test]
+    fn full_mask_training_reduces_loss() {
+        let mut e = engine();
+        let m = e.manifest().clone();
+        let (x, y) = batch(&m);
+        let mask = vec![1.0f32; m.param_count];
+        let mut p = vec![0.0f32; m.param_count];
+        let mut last = f32::MAX;
+        for _ in 0..50 {
+            let out = e.train_step(m.num_blocks, &p, &x, &y, &mask, 0.5).unwrap();
+            p = out.new_params;
+            assert!(out.loss <= last * 1.0001);
+            last = out.loss;
+        }
+        assert!(last < 0.1, "loss did not converge: {last}");
+    }
+
+    #[test]
+    fn zero_mask_freezes_params() {
+        let mut e = engine();
+        let m = e.manifest().clone();
+        let (x, y) = batch(&m);
+        let p = vec![0.3f32; m.param_count];
+        let out = e.train_step(1, &p, &x, &y, &vec![0.0; m.param_count], 0.5).unwrap();
+        assert_eq!(out.new_params, p);
+        // but gradients (importance) are still reported
+        assert!(out.sq_grads.iter().any(|&s| s > 0.0));
+    }
+
+    #[test]
+    fn exit_limits_gradient_scope() {
+        let mut e = engine();
+        let m = e.manifest().clone();
+        let (x, y) = batch(&m);
+        let p = vec![0.3f32; m.param_count];
+        let out = e.train_step(1, &p, &x, &y, &vec![1.0; m.param_count], 0.5).unwrap();
+        // block 1 body + head1 tensors untouched at exit 1
+        for (i, t) in m.tensors.iter().enumerate() {
+            let moved = (t.offset..t.offset + t.size).any(|j| out.new_params[j] != p[j]);
+            let expect = if t.is_head { t.block == 0 } else { t.block < 1 };
+            assert_eq!(moved, expect, "tensor {i} ({})", t.name);
+        }
+    }
+
+    #[test]
+    fn eval_accuracy_improves_with_training() {
+        let mut e = engine();
+        let m = e.manifest().clone();
+        let (x, y) = batch(&m);
+        let mask = vec![1.0f32; m.param_count];
+        let mut p = vec![0.0f32; m.param_count];
+        let before = e.eval_step(&p, &x, &y).unwrap().accuracy();
+        for _ in 0..60 {
+            p = e.train_step(m.num_blocks, &p, &x, &y, &mask, 0.5).unwrap().new_params;
+        }
+        let after = e.eval_step(&p, &x, &y).unwrap().accuracy();
+        assert!(after > before, "{before} -> {after}");
+    }
+
+    #[test]
+    fn shape_validation_errors() {
+        let mut e = engine();
+        let m = e.manifest().clone();
+        let (x, y) = batch(&m);
+        let p = vec![0.0f32; m.param_count];
+        let mask = vec![1.0f32; m.param_count];
+        assert!(e.train_step(0, &p, &x, &y, &mask, 0.1).is_err());
+        assert!(e.train_step(9, &p, &x, &y, &mask, 0.1).is_err());
+        assert!(e.train_step(1, &p[1..], &x, &y, &mask, 0.1).is_err());
+    }
+}

@@ -1,0 +1,136 @@
+//! Runtime: load + execute the AOT artifacts from the L3 hot path.
+//!
+//! `Engine` is the narrow waist between the FL coordinator and the
+//! compute substrate. `PjrtEngine` (pjrt.rs) is the production engine:
+//! it loads HLO text through the `xla` crate, compiles one executable per
+//! early-exit lazily on the PJRT CPU client, and keeps them cached.
+//! `MockEngine` (mock.rs) is a closed-form pure-rust engine with the same
+//! interface, backing the engine-independent unit/property tests.
+
+pub mod mock;
+pub mod pjrt;
+
+pub use mock::MockEngine;
+pub use pjrt::PjrtEngine;
+
+use crate::manifest::Manifest;
+
+/// Output of one local SGD step through a train_exit_<e> artifact.
+#[derive(Clone, Debug)]
+pub struct TrainOut {
+    pub new_params: Vec<f32>,
+    pub loss: f32,
+    /// Per-tensor sum of squared gradients [K] — the raw material for
+    /// ElasticTrainer tensor importance (importance = lr * sq_grads).
+    pub sq_grads: Vec<f64>,
+}
+
+/// Output of the eval artifact over one batch.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalOut {
+    /// Correct predictions (classification) / correct next tokens (LM).
+    pub correct: f64,
+    /// Summed cross-entropy over rows.
+    pub loss_sum: f64,
+    /// Rows evaluated.
+    pub rows: f64,
+}
+
+impl EvalOut {
+    pub fn accuracy(&self) -> f64 {
+        if self.rows == 0.0 {
+            0.0
+        } else {
+            self.correct / self.rows
+        }
+    }
+
+    pub fn mean_loss(&self) -> f64 {
+        if self.rows == 0.0 {
+            0.0
+        } else {
+            self.loss_sum / self.rows
+        }
+    }
+
+    pub fn perplexity(&self) -> f64 {
+        self.mean_loss().exp()
+    }
+
+    pub fn merge(&mut self, other: &EvalOut) {
+        self.correct += other.correct;
+        self.loss_sum += other.loss_sum;
+        self.rows += other.rows;
+    }
+}
+
+/// The compute interface the coordinator drives. One SGD step at a time:
+/// the *schedule* (which exit, which mask, how many steps) is entirely the
+/// coordinator's business — exactly the paper's split between system
+/// policy (L3) and compute (L1/L2).
+pub trait Engine {
+    fn manifest(&self) -> &Manifest;
+
+    /// One masked SGD step through the early-exit-`exit` artifact
+    /// (`exit` in 1..=num_blocks).
+    fn train_step(
+        &mut self,
+        exit: usize,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<TrainOut>;
+
+    /// Full-model eval over one batch.
+    fn eval_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> anyhow::Result<EvalOut>;
+}
+
+/// Validate raw buffer lengths against the manifest (shared by engines).
+pub(crate) fn check_shapes(
+    m: &Manifest,
+    exit: usize,
+    params: &[f32],
+    x: &[f32],
+    y: &[i32],
+    mask: &[f32],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        (1..=m.num_blocks).contains(&exit),
+        "exit {exit} out of range 1..={}",
+        m.num_blocks
+    );
+    anyhow::ensure!(params.len() == m.param_count, "params len");
+    anyhow::ensure!(mask.len() == m.param_count, "mask len");
+    let x_len: usize = m.batch * m.input_shape.iter().product::<usize>();
+    anyhow::ensure!(x.len() == x_len, "x len {} != {}", x.len(), x_len);
+    anyhow::ensure!(y.len() == m.label_len, "y len");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_out_accumulates() {
+        let mut a = EvalOut { correct: 3.0, loss_sum: 10.0, rows: 10.0 };
+        a.merge(&EvalOut { correct: 2.0, loss_sum: 5.0, rows: 10.0 });
+        assert_eq!(a.accuracy(), 0.25);
+        assert_eq!(a.mean_loss(), 0.75);
+    }
+
+    #[test]
+    fn perplexity_is_exp_mean_loss() {
+        let e = EvalOut { correct: 0.0, loss_sum: 20.0, rows: 10.0 };
+        assert!((e.perplexity() - (2.0f64).exp()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_eval_is_zero() {
+        let e = EvalOut::default();
+        assert_eq!(e.accuracy(), 0.0);
+        assert_eq!(e.mean_loss(), 0.0);
+    }
+}

@@ -1,0 +1,170 @@
+//! PJRT engine: the production compute path.
+//!
+//! Loads `artifacts/<model>/train_exit_<e>.hlo.txt` (HLO *text* — the only
+//! interchange format xla_extension 0.5.1 accepts from jax >= 0.5, see
+//! DESIGN.md §2) and compiles on the PJRT CPU client. Executables are
+//! compiled lazily per exit and cached for the lifetime of the engine, so
+//! a fleet that never uses exit 7 never pays its compile time.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::manifest::Manifest;
+
+use super::{check_shapes, Engine, EvalOut, TrainOut};
+
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    train_exes: HashMap<usize, xla::PjRtLoadedExecutable>,
+    eval_exe: Option<xla::PjRtLoadedExecutable>,
+    /// (exit -> cumulative executions), for the perf report.
+    pub exec_counts: HashMap<usize, u64>,
+    pub compile_secs: f64,
+}
+
+impl PjrtEngine {
+    /// Open the artifacts directory of one model, e.g.
+    /// `artifacts/vgg_cifar`.
+    pub fn open(model_dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(model_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            train_exes: HashMap::new(),
+            eval_exe: None,
+            exec_counts: HashMap::new(),
+            compile_secs: 0.0,
+        })
+    }
+
+    fn compile(&mut self, path: &Path) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
+        self.compile_secs += t0.elapsed().as_secs_f64();
+        Ok(exe)
+    }
+
+    fn ensure_train(&mut self, exit: usize) -> anyhow::Result<()> {
+        if !self.train_exes.contains_key(&exit) {
+            let path = self.manifest.train_hlo_path(exit);
+            let exe = self.compile(&path)?;
+            self.train_exes.insert(exit, exe);
+        }
+        Ok(())
+    }
+
+    fn ensure_eval(&mut self) -> anyhow::Result<()> {
+        if self.eval_exe.is_none() {
+            let path = self.manifest.eval_hlo_path();
+            self.eval_exe = Some(self.compile(&path)?);
+        }
+        Ok(())
+    }
+
+    /// Pre-compile a set of exits (and eval) up front, e.g. before timing.
+    pub fn warm(&mut self, exits: &[usize]) -> anyhow::Result<()> {
+        for &e in exits {
+            self.ensure_train(e)?;
+        }
+        self.ensure_eval()
+    }
+
+    fn lit_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
+        let v = xla::Literal::vec1(data);
+        if dims.len() == 1 {
+            return Ok(v);
+        }
+        v.reshape(dims).map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn train_step(
+        &mut self,
+        exit: usize,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        mask: &[f32],
+        lr: f32,
+    ) -> anyhow::Result<TrainOut> {
+        check_shapes(&self.manifest, exit, params, x, y, mask)?;
+        self.ensure_train(exit)?;
+        *self.exec_counts.entry(exit).or_insert(0) += 1;
+
+        let mut x_dims: Vec<i64> = vec![self.manifest.batch as i64];
+        x_dims.extend(self.manifest.input_shape.iter().map(|&d| d as i64));
+
+        let p_lit = Self::lit_f32(params, &[params.len() as i64])?;
+        let x_lit = Self::lit_f32(x, &x_dims)?;
+        let y_lit = xla::Literal::vec1(y);
+        let m_lit = Self::lit_f32(mask, &[mask.len() as i64])?;
+        let lr_lit = xla::Literal::scalar(lr);
+
+        let exe = self.train_exes.get(&exit).unwrap();
+        let bufs = exe
+            .execute::<xla::Literal>(&[p_lit, x_lit, y_lit, m_lit, lr_lit])
+            .map_err(|e| anyhow::anyhow!("execute train_exit_{exit}: {e:?}"))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let (p_out, loss_out, sq_out) = result
+            .to_tuple3()
+            .map_err(|e| anyhow::anyhow!("tuple3: {e:?}"))?;
+        let new_params: Vec<f32> =
+            p_out.to_vec().map_err(|e| anyhow::anyhow!("params out: {e:?}"))?;
+        let loss: f32 = loss_out
+            .get_first_element()
+            .map_err(|e| anyhow::anyhow!("loss out: {e:?}"))?;
+        let sq: Vec<f32> = sq_out.to_vec().map_err(|e| anyhow::anyhow!("sq out: {e:?}"))?;
+        Ok(TrainOut {
+            new_params,
+            loss,
+            sq_grads: sq.iter().map(|&v| v as f64).collect(),
+        })
+    }
+
+    fn eval_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> anyhow::Result<EvalOut> {
+        let m = &self.manifest;
+        anyhow::ensure!(params.len() == m.param_count, "params len");
+        anyhow::ensure!(y.len() == m.label_len, "y len");
+        self.ensure_eval()?;
+
+        let mut x_dims: Vec<i64> = vec![self.manifest.batch as i64];
+        x_dims.extend(self.manifest.input_shape.iter().map(|&d| d as i64));
+        let p_lit = Self::lit_f32(params, &[params.len() as i64])?;
+        let x_lit = Self::lit_f32(x, &x_dims)?;
+        let y_lit = xla::Literal::vec1(y);
+
+        let exe = self.eval_exe.as_ref().unwrap();
+        let bufs = exe
+            .execute::<xla::Literal>(&[p_lit, x_lit, y_lit])
+            .map_err(|e| anyhow::anyhow!("execute eval: {e:?}"))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+        let (c_out, l_out) = result
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("tuple2: {e:?}"))?;
+        let correct: f32 = c_out.get_first_element().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let loss_sum: f32 = l_out.get_first_element().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        Ok(EvalOut {
+            correct: correct as f64,
+            loss_sum: loss_sum as f64,
+            rows: self.manifest.label_len as f64,
+        })
+    }
+}

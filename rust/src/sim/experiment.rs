@@ -1,0 +1,183 @@
+//! One-call experiment runner: config -> engine + fleet + data + strategy
+//! -> ExperimentResult. Shared by the CLI, examples, and all benches.
+
+use crate::config::ExperimentCfg;
+use crate::data::FedDataset;
+use crate::fl::server::{run_experiment, ExperimentResult, ServerCfg};
+use crate::manifest::tests_support::chain_manifest;
+use crate::manifest::Manifest;
+use crate::runtime::{Engine, MockEngine, PjrtEngine};
+use crate::sim::fleet::{build_fleet, fastest, slowest};
+use crate::strategies::{by_name, FleetCtx};
+use crate::timing::{DeviceProfile, TimingCfg, TimingModel};
+
+/// A fully wired experiment, reusable across strategies (the expensive
+/// parts — engine compile, dataset — are built once).
+pub struct Experiment {
+    pub cfg: ExperimentCfg,
+    pub engine: Box<dyn Engine>,
+    pub fleet: Vec<DeviceProfile>,
+    pub dataset: FedDataset,
+    pub ctx: FleetCtx,
+}
+
+/// Parse "mock:<blocks>x<body>" model names.
+fn mock_spec(model: &str) -> Option<(usize, usize)> {
+    let rest = model.strip_prefix("mock:")?;
+    let (b, s) = rest.split_once('x')?;
+    Some((b.parse().ok()?, s.parse().ok()?))
+}
+
+fn build_engine(cfg: &ExperimentCfg) -> anyhow::Result<Box<dyn Engine>> {
+    if let Some((blocks, body)) = mock_spec(&cfg.model) {
+        let m = chain_manifest(blocks, body);
+        return Ok(Box::new(MockEngine::new(m, cfg.seed)));
+    }
+    let dir = cfg.artifacts_dir.join(&cfg.model);
+    Ok(Box::new(PjrtEngine::open(&dir)?))
+}
+
+impl Experiment {
+    pub fn build(cfg: ExperimentCfg) -> anyhow::Result<Experiment> {
+        let engine = build_engine(&cfg)?;
+        let manifest: Manifest = engine.manifest().clone();
+        let fleet = build_fleet(&cfg.fleet, cfg.seed);
+        anyhow::ensure!(!fleet.is_empty(), "empty fleet");
+
+        // Calibrate the timing model so the slowest device's full round
+        // matches the paper's wall-clock (DESIGN.md §4), then T_th =
+        // factor x the FASTEST device's full-model round (Sec. 5.1).
+        let tcfg = if cfg.slowest_round_secs > 0.0 {
+            TimingCfg::calibrated(
+                &manifest,
+                cfg.local_steps,
+                slowest(&fleet).scale,
+                cfg.slowest_round_secs,
+            )
+        } else {
+            TimingCfg::default()
+        };
+        let timings: Vec<TimingModel> = fleet
+            .iter()
+            .map(|d| TimingModel::profile(&manifest, d, &tcfg))
+            .collect();
+        let fast_tm = TimingModel::profile(&manifest, fastest(&fleet), &tcfg);
+        let t_th = cfg.t_th_factor * fast_tm.full_round_time(&manifest, cfg.local_steps);
+
+        let dataset = FedDataset::build(
+            &manifest,
+            fleet.len(),
+            cfg.alpha,
+            cfg.eval_batches,
+            cfg.seed,
+        );
+        let ctx = FleetCtx {
+            manifest,
+            timings,
+            t_th,
+            local_steps: cfg.local_steps,
+            lr: cfg.lr,
+        };
+        Ok(Experiment { cfg, engine, fleet, dataset, ctx })
+    }
+
+    /// Run one strategy (cfg.strategy unless overridden).
+    pub fn run(&mut self, strategy_override: Option<&str>) -> anyhow::Result<ExperimentResult> {
+        let name = strategy_override.unwrap_or(&self.cfg.strategy).to_string();
+        let mut strategy = by_name(&name, &self.ctx, self.cfg.beta, self.cfg.seed)?;
+        let server_cfg = ServerCfg {
+            rounds: self.cfg.rounds,
+            eval_every: self.cfg.eval_every,
+            comm_secs: self.cfg.comm_secs,
+            record_selections: self.cfg.record_selections,
+            verbose: self.cfg.verbose,
+        };
+        run_experiment(
+            self.engine.as_mut(),
+            &self.dataset,
+            strategy.as_mut(),
+            &self.ctx,
+            &server_cfg,
+        )
+    }
+}
+
+/// Convenience: build + run in one call.
+pub fn run_one(cfg: ExperimentCfg) -> anyhow::Result<ExperimentResult> {
+    Experiment::build(cfg)?.run(None)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FleetSpec;
+
+    fn mock_cfg() -> ExperimentCfg {
+        ExperimentCfg {
+            model: "mock:6x50".into(),
+            strategy: "fedel".into(),
+            fleet: FleetSpec::Scales(vec![1.0, 2.0, 4.0]),
+            rounds: 8,
+            local_steps: 4,
+            lr: 0.3,
+            eval_every: 2,
+            eval_batches: 2,
+            slowest_round_secs: 3600.0,
+            verbose: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn mock_experiment_end_to_end() {
+        let res = run_one(mock_cfg()).unwrap();
+        assert_eq!(res.records.len(), 8);
+        assert!(res.sim_total_secs > 0.0);
+        assert!(res.final_acc > 0.0);
+        // eval accuracy should improve from the first eval to the final
+        // (train losses aren't comparable across FedEL's changing exits)
+        let curve = res.acc_curve();
+        assert!(curve.len() >= 2);
+        assert!(
+            res.final_acc > curve[0].1,
+            "{} -> {}",
+            curve[0].1,
+            res.final_acc
+        );
+    }
+
+    #[test]
+    fn fedel_rounds_are_cheaper_than_fedavg() {
+        let mut cfg = mock_cfg();
+        cfg.strategy = "fedavg".into();
+        let avg = run_one(cfg.clone()).unwrap();
+        cfg.strategy = "fedel".into();
+        let fedel = run_one(cfg).unwrap();
+        let avg_round = avg.records[0].round_secs;
+        let fedel_round = fedel.records[0].round_secs;
+        assert!(
+            fedel_round < avg_round * 0.6,
+            "fedel {fedel_round} vs fedavg {avg_round}"
+        );
+    }
+
+    #[test]
+    fn calibration_pins_slowest_round() {
+        let cfg = mock_cfg();
+        let exp = Experiment::build(cfg).unwrap();
+        // slowest = scale 4.0 (client 2)
+        let t = exp.ctx.full_round_time(2);
+        assert!((t - 3600.0).abs() / 3600.0 < 0.02, "{t}");
+    }
+
+    #[test]
+    fn every_strategy_runs_on_mock() {
+        for name in crate::strategies::table1_names() {
+            let mut cfg = mock_cfg();
+            cfg.strategy = name.into();
+            cfg.rounds = 3;
+            let res = run_one(cfg).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(res.strategy, name);
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Fleet construction: per-client device profiles.
+
+use crate::config::FleetSpec;
+use crate::timing::DeviceProfile;
+use crate::util::rng::Rng;
+
+/// Build the per-client device list for a fleet spec.
+///
+/// * `Small10` — the paper's testbed: clients 0-4 are Jetson Xavier
+///   (2x slower), clients 5-9 are Jetson Orin (the base profile).
+/// * `Large(n)` — the paper's simulation: each client is a uniformly
+///   random draw from the four device types {1, 1/2, 1/3, 1/4}x.
+/// * `Scales` — explicit per-client scale factors.
+pub fn build_fleet(spec: &FleetSpec, seed: u64) -> Vec<DeviceProfile> {
+    match spec {
+        FleetSpec::Small10 => {
+            let mut v = vec![DeviceProfile::xavier(); 5];
+            v.extend(vec![DeviceProfile::orin(); 5]);
+            v
+        }
+        FleetSpec::Large(n) => {
+            let types = DeviceProfile::sim_types();
+            let mut rng = Rng::new(seed ^ 0xF1EE7);
+            (0..*n).map(|_| types[rng.below(types.len())].clone()).collect()
+        }
+        FleetSpec::Scales(scales) => scales
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| DeviceProfile::new(&format!("dev{i}x{s}"), s, 12.0))
+            .collect(),
+    }
+}
+
+/// The fastest (smallest scale) device in a fleet.
+pub fn fastest(fleet: &[DeviceProfile]) -> &DeviceProfile {
+    fleet
+        .iter()
+        .min_by(|a, b| a.scale.partial_cmp(&b.scale).unwrap())
+        .expect("empty fleet")
+}
+
+/// The slowest (largest scale) device in a fleet.
+pub fn slowest(fleet: &[DeviceProfile]) -> &DeviceProfile {
+    fleet
+        .iter()
+        .max_by(|a, b| a.scale.partial_cmp(&b.scale).unwrap())
+        .expect("empty fleet")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small10_is_five_xavier_five_orin() {
+        let f = build_fleet(&FleetSpec::Small10, 0);
+        assert_eq!(f.len(), 10);
+        assert_eq!(f.iter().filter(|d| d.name == "xavier").count(), 5);
+        assert_eq!(f.iter().filter(|d| d.name == "orin").count(), 5);
+        assert_eq!(fastest(&f).name, "orin");
+        assert_eq!(slowest(&f).name, "xavier");
+    }
+
+    #[test]
+    fn large_fleet_uses_all_four_types() {
+        let f = build_fleet(&FleetSpec::Large(100), 7);
+        assert_eq!(f.len(), 100);
+        let mut names: Vec<&str> = f.iter().map(|d| d.name.as_str()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 4, "{names:?}");
+    }
+
+    #[test]
+    fn large_fleet_deterministic_per_seed() {
+        let a = build_fleet(&FleetSpec::Large(20), 3);
+        let b = build_fleet(&FleetSpec::Large(20), 3);
+        let names = |f: &[DeviceProfile]| f.iter().map(|d| d.name.clone()).collect::<Vec<_>>();
+        assert_eq!(names(&a), names(&b));
+    }
+
+    #[test]
+    fn scales_spec_respected() {
+        let f = build_fleet(&FleetSpec::Scales(vec![1.0, 3.5]), 0);
+        assert_eq!(f.len(), 2);
+        assert_eq!(f[1].scale, 3.5);
+    }
+}

@@ -1,0 +1,8 @@
+//! Experiment wiring: fleet construction + the one-call experiment runner
+//! used by the CLI, the examples, and every bench.
+
+pub mod experiment;
+pub mod fleet;
+
+pub use experiment::{run_one, Experiment};
+pub use fleet::build_fleet;

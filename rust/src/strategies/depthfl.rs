@@ -1,0 +1,134 @@
+//! DepthFL (Kim et al.): depth scaling — each client permanently trains a
+//! prefix sub-model (blocks 0..d with an early-exit classifier) sized to
+//! its compute budget. The early-exit artifacts are exactly DepthFL's
+//! sub-models. Paper Table 1 analysis: slow clients only ever train front
+//! layers, so the deep layers never see their data.
+
+use super::{ClientPlan, FleetCtx, MaskSpec, Strategy};
+
+pub struct DepthFl {
+    /// Assigned exit per client (1..=num_blocks).
+    pub depths: Vec<usize>,
+}
+
+/// Per-round cost of training the full prefix sub-model with exit `e`.
+pub(crate) fn prefix_round_time(ctx: &FleetCtx, client: usize, e: usize) -> f64 {
+    let m = &ctx.manifest;
+    let tm = &ctx.timings[client];
+    let mut bwd = 0.0;
+    for b in 0..e {
+        for t in m.body_tensors_of_block(b) {
+            bwd += tm.tensors[t].t_g + tm.tensors[t].t_w;
+        }
+    }
+    for t in m.head_tensors_of_block(e - 1) {
+        bwd += tm.tensors[t].t_g + tm.tensors[t].t_w;
+    }
+    ctx.round_time(client, e, bwd)
+}
+
+/// Mask covering blocks 0..e plus the exit head.
+pub(crate) fn prefix_mask(ctx: &FleetCtx, e: usize) -> Vec<f32> {
+    let m = &ctx.manifest;
+    let mut mask = vec![0.0f32; m.tensors.len()];
+    for (i, t) in m.tensors.iter().enumerate() {
+        if !t.is_head && t.block < e {
+            mask[i] = 1.0;
+        }
+    }
+    for t in m.head_tensors_of_block(e - 1) {
+        mask[t] = 1.0;
+    }
+    mask
+}
+
+impl DepthFl {
+    pub fn new(ctx: &FleetCtx) -> Self {
+        let nb = ctx.manifest.num_blocks;
+        let depths = (0..ctx.n_clients())
+            .map(|c| {
+                (1..=nb)
+                    .rev()
+                    .find(|&e| prefix_round_time(ctx, c, e) <= ctx.t_th)
+                    .unwrap_or(1)
+            })
+            .collect();
+        DepthFl { depths }
+    }
+}
+
+impl Strategy for DepthFl {
+    fn name(&self) -> &'static str {
+        "depthfl"
+    }
+
+    fn plan_round(&mut self, _round: usize, ctx: &FleetCtx, _global: &[f32]) -> Vec<ClientPlan> {
+        (0..ctx.n_clients())
+            .map(|client| {
+                let e = self.depths[client];
+                ClientPlan {
+                    client,
+                    exit: e,
+                    mask: MaskSpec::Tensor(prefix_mask(ctx, e)),
+                    local_steps: ctx.local_steps,
+                    est_time: prefix_round_time(ctx, client, e),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::ctx;
+    use super::*;
+
+    #[test]
+    fn depth_matches_device_speed() {
+        let c = ctx(8, &[1.0, 4.0]);
+        let s = DepthFl::new(&c);
+        assert_eq!(s.depths[0], 8, "fast client trains everything");
+        assert!(s.depths[1] < 8, "slow client gets a shallow sub-model");
+        assert!(s.depths[1] >= 1);
+    }
+
+    #[test]
+    fn cost_fits_threshold() {
+        let c = ctx(8, &[1.0, 2.0, 4.0]);
+        let mut s = DepthFl::new(&c);
+        for p in s.plan_round(0, &c, &[]) {
+            if p.exit > 1 {
+                assert!(p.est_time <= c.t_th + 1e-9, "client {}", p.client);
+            }
+        }
+    }
+
+    #[test]
+    fn mask_is_prefix_plus_head() {
+        let c = ctx(6, &[1.0]);
+        let mask = prefix_mask(&c, 3);
+        for (i, t) in c.manifest.tensors.iter().enumerate() {
+            let expect = if t.is_head { t.block == 2 } else { t.block < 3 };
+            assert_eq!(mask[i] > 0.0, expect, "{}", t.name);
+        }
+    }
+
+    #[test]
+    fn slow_clients_only_train_front_layers() {
+        // the inverse of ElasticTrainer's limitation — DepthFL never
+        // trains the BACK of the model on slow clients.
+        let c = ctx(8, &[4.0]);
+        let mut s = DepthFl::new(&c);
+        let plans = s.plan_round(0, &c, &[]);
+        if let MaskSpec::Tensor(t) = &plans[0].mask {
+            let deepest = t
+                .iter()
+                .enumerate()
+                .filter(|(_, &x)| x > 0.0)
+                .map(|(i, _)| c.manifest.tensors[i].block)
+                .max()
+                .unwrap();
+            assert!(deepest < 7);
+        }
+    }
+}

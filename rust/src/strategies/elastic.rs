@@ -1,0 +1,148 @@
+//! ElasticTrainer-in-FL (the paper's Section 3 straw man): every client
+//! runs the original ElasticTrainer with a uniform T_th — DP tensor
+//! selection over the WHOLE model, output layer fixed at the end — and
+//! FedAvg-style rounds otherwise. Reproduces Limitation #1: slow clients'
+//! selections crowd to the back of the DNN (Fig 4), and Limitation #2:
+//! purely local importance amplifies drift.
+
+use crate::elastic::{importance::local_importance, select, SelectorInput};
+
+use super::{ClientPlan, FleetCtx, MaskSpec, RoundFeedback, Strategy};
+
+pub struct ElasticFl {
+    /// Last observed per-client local importance [n_clients][K].
+    imp: Vec<Vec<f64>>,
+}
+
+impl ElasticFl {
+    pub fn new(ctx: &FleetCtx) -> Self {
+        let k = ctx.manifest.tensors.len();
+        ElasticFl { imp: vec![vec![1.0; k]; ctx.n_clients()] }
+    }
+}
+
+impl Strategy for ElasticFl {
+    fn name(&self) -> &'static str {
+        "elastictrainer"
+    }
+
+    fn plan_round(&mut self, _round: usize, ctx: &FleetCtx, _global: &[f32]) -> Vec<ClientPlan> {
+        let m = &ctx.manifest;
+        let k = m.tensors.len();
+        let nb = m.num_blocks;
+        let order = ctx.window_order(0, nb);
+        (0..ctx.n_clients())
+            .map(|client| {
+                let imp: Vec<f64> = order.iter().map(|&t| self.imp[client][t]).collect();
+                let budget = ctx.step_backward_budget(client, nb);
+                let sel = select(&SelectorInput {
+                    order: &order,
+                    importance: &imp,
+                    budget,
+                    timing: &ctx.timings[client],
+                });
+                let mut mask = vec![0.0f32; k];
+                for &t in &sel.tensors {
+                    mask[t] = 1.0;
+                }
+                let est_time = ctx.round_time(client, nb, sel.backward_time);
+                ClientPlan {
+                    client,
+                    exit: nb,
+                    mask: MaskSpec::Tensor(mask),
+                    local_steps: ctx.local_steps,
+                    est_time,
+                }
+            })
+            .collect()
+    }
+
+    fn observe(&mut self, fb: &RoundFeedback, ctx: &FleetCtx) {
+        for (client, sq, _) in &fb.per_client {
+            self.imp[*client] = local_importance(sq, ctx.lr);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::ctx;
+    use super::*;
+
+    #[test]
+    fn respects_budget_on_slow_devices() {
+        // est_time <= max(T_th, unavoidable fwd cost) + floor slack; the
+        // full-model fwd of a 4x straggler alone exceeds T_th (the paper's
+        // Appendix B.3 soft-overshoot regime).
+        let c = ctx(8, &[1.0, 4.0]);
+        let mut s = ElasticFl::new(&c);
+        let plans = s.plan_round(0, &c, &[]);
+        for p in &plans {
+            let fwd = c.timings[p.client].forward_time(&c.manifest, p.exit)
+                * c.local_steps as f64;
+            let cap = c.t_th.max(fwd) + crate::strategies::MIN_BUDGET_FRAC * c.t_th;
+            assert!(
+                p.est_time <= cap * 1.05,
+                "client {} time {} > cap {cap} (T_th {})",
+                p.client,
+                p.est_time,
+                c.t_th
+            );
+        }
+    }
+
+    #[test]
+    fn slow_clients_select_fewer_tensors() {
+        let c = ctx(8, &[1.0, 4.0]);
+        let mut s = ElasticFl::new(&c);
+        let plans = s.plan_round(0, &c, &[]);
+        let count = |p: &ClientPlan| match &p.mask {
+            MaskSpec::Tensor(t) => t.iter().filter(|&&x| x > 0.0).count(),
+            _ => 0,
+        };
+        assert!(count(&plans[1]) < count(&plans[0]));
+    }
+
+    #[test]
+    fn slow_client_selection_crowds_to_back_blocks() {
+        // Limitation #1: the slow client's selected tensors sit in deep blocks.
+        let c = ctx(8, &[1.0, 4.0]);
+        let mut s = ElasticFl::new(&c);
+        let plans = s.plan_round(0, &c, &[]);
+        if let MaskSpec::Tensor(t) = &plans[1].mask {
+            let selected_blocks: Vec<usize> = t
+                .iter()
+                .enumerate()
+                .filter(|(_, &x)| x > 0.0)
+                .map(|(i, _)| c.manifest.tensors[i].block)
+                .collect();
+            assert!(!selected_blocks.is_empty());
+            assert!(
+                selected_blocks.iter().all(|&b| b >= 4),
+                "slow client trained shallow blocks: {selected_blocks:?}"
+            );
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn importance_updates_steer_selection() {
+        let c = ctx(6, &[1.0]);
+        let mut s = ElasticFl::new(&c);
+        let k = c.manifest.tensors.len();
+        // claim only tensor of block 5 (deep, cheap to chain) matters
+        let mut sq = vec![0.0; k];
+        sq[10] = 100.0;
+        s.observe(
+            &RoundFeedback { per_client: vec![(0, sq, 1.0)], global_importance: vec![0.0; k] },
+            &c,
+        );
+        let plans = s.plan_round(1, &c, &[]);
+        if let MaskSpec::Tensor(t) = &plans[0].mask {
+            assert!(t[10] > 0.0, "high-importance tensor not selected");
+        } else {
+            panic!()
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! FedAvg (McMahan et al.) — the classic baseline: every client trains the
+//! full model every round; the server waits for the slowest device.
+//! Doubles as FedProx (prox_mu > 0, same schedule, proximal local steps)
+//! and FedNova (normalized aggregation) for Table 3.
+
+use crate::fl::AggregateRule;
+
+use super::{ClientPlan, FleetCtx, MaskSpec, Strategy};
+
+pub struct FedAvg {
+    rule: AggregateRule,
+    mu: f64,
+}
+
+impl FedAvg {
+    pub fn new(rule: AggregateRule, mu: f64) -> Self {
+        FedAvg { rule, mu }
+    }
+}
+
+impl Strategy for FedAvg {
+    fn name(&self) -> &'static str {
+        match (self.rule, self.mu > 0.0) {
+            (AggregateRule::FedNova, _) => "fednova",
+            (_, true) => "fedprox",
+            _ => "fedavg",
+        }
+    }
+
+    fn plan_round(&mut self, _round: usize, ctx: &FleetCtx, _global: &[f32]) -> Vec<ClientPlan> {
+        let k = ctx.manifest.tensors.len();
+        (0..ctx.n_clients())
+            .map(|client| ClientPlan {
+                client,
+                exit: ctx.manifest.num_blocks,
+                mask: MaskSpec::Tensor(vec![1.0; k]),
+                local_steps: ctx.local_steps,
+                est_time: ctx.full_round_time(client),
+            })
+            .collect()
+    }
+
+    fn aggregate_rule(&self) -> AggregateRule {
+        self.rule
+    }
+
+    fn prox_mu(&self) -> f64 {
+        self.mu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::ctx;
+    use super::*;
+
+    #[test]
+    fn everyone_trains_everything() {
+        let c = ctx(4, &[1.0, 2.0, 3.0]);
+        let mut s = FedAvg::new(AggregateRule::FedAvg, 0.0);
+        let plans = s.plan_round(0, &c, &[]);
+        assert_eq!(plans.len(), 3);
+        for p in &plans {
+            assert_eq!(p.exit, 4);
+            match &p.mask {
+                MaskSpec::Tensor(t) => assert!(t.iter().all(|&x| x == 1.0)),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn round_time_dominated_by_slowest() {
+        let c = ctx(4, &[1.0, 3.0]);
+        let mut s = FedAvg::new(AggregateRule::FedAvg, 0.0);
+        let plans = s.plan_round(0, &c, &[]);
+        assert!(plans[1].est_time > plans[0].est_time * 2.9);
+    }
+
+    #[test]
+    fn names_reflect_variants() {
+        assert_eq!(FedAvg::new(AggregateRule::FedAvg, 0.0).name(), "fedavg");
+        assert_eq!(FedAvg::new(AggregateRule::FedAvg, 0.01).name(), "fedprox");
+        assert_eq!(FedAvg::new(AggregateRule::FedNova, 0.0).name(), "fednova");
+    }
+}

@@ -1,0 +1,132 @@
+//! FIARSE (Wu et al.): importance-aware submodel extraction. Each client
+//! trains the top-magnitude fraction of EVERY tensor (submodels are
+//! extracted by parameter-magnitude threshold across the whole model, so
+//! coverage spans the full depth — that is why the paper reports FIARSE
+//! accuracy on par with FedAvg). Crucially — the paper's Table 1 analysis
+//! — FIARSE's output layer is FIXED at the model's end and it has no early
+//! exits: the backward chain runs the full depth regardless of the
+//! submodel fraction, so a straggler pays Σ t_g over every tensor plus its
+//! fraction of Σ t_w, and its round time cannot fall below the full
+//! forward+chain cost. That unavoidable floor is what keeps FIARSE slower
+//! than FedEL on slow clients.
+//!
+//! At our element granularity the per-tensor magnitude threshold is
+//! approximated by a fractional prefix mask with the same coverage ratio.
+
+use super::{ClientPlan, FleetCtx, MaskSpec, Strategy};
+
+/// Minimum submodel fraction for extreme stragglers.
+const MIN_FRAC: f64 = 0.3;
+
+pub struct Fiarse {
+    /// Per-client submodel fraction r_n (chosen once from the budget).
+    pub fractions: Vec<f64>,
+}
+
+impl Fiarse {
+    pub fn new(ctx: &FleetCtx) -> Self {
+        let m = &ctx.manifest;
+        let fractions = (0..ctx.n_clients())
+            .map(|c| {
+                let tm = &ctx.timings[c];
+                let step_budget = ctx.t_th / ctx.local_steps as f64;
+                let fwd = tm.forward_time(m, m.num_blocks);
+                let chain: f64 = tm.tensors.iter().map(|t| t.t_g).sum();
+                let tw: f64 = tm.tensors.iter().map(|t| t.t_w).sum();
+                (((step_budget - fwd - chain) / tw).clamp(MIN_FRAC, 1.0) * 100.0).round()
+                    / 100.0
+            })
+            .collect();
+        Fiarse { fractions }
+    }
+
+    fn round_time(ctx: &FleetCtx, client: usize, frac: f64) -> f64 {
+        let m = &ctx.manifest;
+        let tm = &ctx.timings[client];
+        let chain: f64 = tm.tensors.iter().map(|t| t.t_g).sum();
+        let tw: f64 = tm.tensors.iter().map(|t| t.t_w).sum();
+        (tm.forward_time(m, m.num_blocks) + chain + frac * tw) * ctx.local_steps as f64
+    }
+}
+
+impl Strategy for Fiarse {
+    fn name(&self) -> &'static str {
+        "fiarse"
+    }
+
+    fn plan_round(&mut self, _round: usize, ctx: &FleetCtx, _global: &[f32]) -> Vec<ClientPlan> {
+        let m = &ctx.manifest;
+        let k = m.tensors.len();
+        (0..ctx.n_clients())
+            .map(|client| {
+                let r = self.fractions[client];
+                let mut frac = vec![r as f32; k];
+                // the fixed output layer always trains fully
+                for t in m.head_tensors_of_block(m.num_blocks - 1) {
+                    frac[t] = 1.0;
+                }
+                ClientPlan {
+                    client,
+                    exit: m.num_blocks,
+                    mask: MaskSpec::Prefix(frac),
+                    local_steps: ctx.local_steps,
+                    est_time: Self::round_time(ctx, client, r),
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::ctx;
+    use super::*;
+
+    #[test]
+    fn fractions_scale_with_device_speed() {
+        let c = ctx(8, &[1.0, 2.0, 4.0]);
+        let s = Fiarse::new(&c);
+        assert!(s.fractions[0] >= s.fractions[1]);
+        assert!(s.fractions[1] >= s.fractions[2]);
+        assert!(s.fractions[2] >= MIN_FRAC);
+    }
+
+    #[test]
+    fn coverage_spans_full_depth() {
+        let c = ctx(8, &[4.0]);
+        let mut s = Fiarse::new(&c);
+        let plans = s.plan_round(0, &c, &[]);
+        if let MaskSpec::Prefix(f) = &plans[0].mask {
+            // every tensor gets nonzero coverage — no starved depth range
+            assert!(f.iter().all(|&x| x > 0.0));
+        } else {
+            panic!()
+        }
+        assert_eq!(plans[0].exit, 8, "no early exits in FIARSE");
+    }
+
+    #[test]
+    fn straggler_round_time_has_chain_floor() {
+        // even at the minimum fraction, the full-depth chain keeps FIARSE
+        // rounds above the pure-forward cost — the paper's critique.
+        let c = ctx(8, &[4.0]);
+        let mut s = Fiarse::new(&c);
+        let plans = s.plan_round(0, &c, &[]);
+        let tm = &c.timings[0];
+        let chain: f64 = tm.tensors.iter().map(|t| t.t_g).sum();
+        let floor = (tm.forward_time(&c.manifest, 8) + chain) * c.local_steps as f64;
+        assert!(plans[0].est_time >= floor);
+    }
+
+    #[test]
+    fn output_head_fully_covered() {
+        let c = ctx(6, &[2.0]);
+        let mut s = Fiarse::new(&c);
+        let plans = s.plan_round(0, &c, &[]);
+        if let MaskSpec::Prefix(f) = &plans[0].mask {
+            for t in c.manifest.head_tensors_of_block(5) {
+                assert_eq!(f[t], 1.0);
+            }
+        }
+    }
+}

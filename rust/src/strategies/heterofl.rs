@@ -1,0 +1,113 @@
+//! HeteroFL (Diao et al.): width scaling — each client trains a
+//! channel-scaled sub-network matched to its compute budget.
+//!
+//! Width levels follow the original (p ∈ {1, 1/2, 1/4, 1/8}); a client
+//! takes the widest level whose scaled cost fits T_th. Cost model: conv /
+//! dense FLOPs scale ~p² (both fan-in and fan-out shrink), bias/1-D ops
+//! scale ~p. At our element-granularity masking a width-p sub-network is a
+//! *prefix* mask: the leading p² fraction of each weight tensor, the
+//! leading p fraction of each 1-D tensor, with output heads keeping full
+//! fan-out (fraction p, input-scaled only) — the paper's "uneven scaling"
+//! that disturbs aggregation (Table 1 analysis) appears exactly here.
+
+use super::{ClientPlan, FleetCtx, MaskSpec, Strategy};
+
+const LEVELS: [f64; 4] = [1.0, 0.5, 0.25, 0.125];
+
+pub struct HeteroFl {
+    /// Chosen width level per client.
+    pub widths: Vec<f64>,
+}
+
+impl HeteroFl {
+    pub fn new(ctx: &FleetCtx) -> Self {
+        let widths = (0..ctx.n_clients())
+            .map(|c| {
+                let full = ctx.full_round_time(c);
+                LEVELS
+                    .iter()
+                    .copied()
+                    .find(|p| full * p * p <= ctx.t_th)
+                    .unwrap_or(LEVELS[LEVELS.len() - 1])
+            })
+            .collect();
+        HeteroFl { widths }
+    }
+
+    fn prefix_fractions(ctx: &FleetCtx, p: f64) -> Vec<f32> {
+        ctx.manifest
+            .tensors
+            .iter()
+            .map(|t| {
+                if t.is_head || t.shape.len() < 2 {
+                    p as f32
+                } else {
+                    (p * p) as f32
+                }
+            })
+            .collect()
+    }
+}
+
+impl Strategy for HeteroFl {
+    fn name(&self) -> &'static str {
+        "heterofl"
+    }
+
+    fn plan_round(&mut self, _round: usize, ctx: &FleetCtx, _global: &[f32]) -> Vec<ClientPlan> {
+        (0..ctx.n_clients())
+            .map(|client| {
+                let p = self.widths[client];
+                ClientPlan {
+                    client,
+                    exit: ctx.manifest.num_blocks,
+                    mask: MaskSpec::Prefix(Self::prefix_fractions(ctx, p)),
+                    local_steps: ctx.local_steps,
+                    est_time: ctx.full_round_time(client) * p * p,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::ctx;
+    use super::*;
+
+    #[test]
+    fn fast_client_full_width_slow_client_narrow() {
+        let c = ctx(6, &[1.0, 4.0]);
+        let s = HeteroFl::new(&c);
+        assert_eq!(s.widths[0], 1.0);
+        assert!(s.widths[1] <= 0.5, "slow client width {}", s.widths[1]);
+    }
+
+    #[test]
+    fn scaled_cost_fits_threshold() {
+        let c = ctx(6, &[1.0, 2.0, 3.0, 4.0]);
+        let mut s = HeteroFl::new(&c);
+        for p in s.plan_round(0, &c, &[]) {
+            assert!(p.est_time <= c.t_th + 1e-9);
+        }
+    }
+
+    #[test]
+    fn weight_tensors_masked_quadratically() {
+        let c = ctx(4, &[2.0]);
+        let mut s = HeteroFl::new(&c);
+        let p = s.widths[0];
+        let plans = s.plan_round(0, &c, &[]);
+        if let MaskSpec::Prefix(f) = &plans[0].mask {
+            for (t, &frac) in c.manifest.tensors.iter().zip(f) {
+                if t.is_head || t.shape.len() < 2 {
+                    assert!((frac as f64 - p).abs() < 1e-6);
+                } else {
+                    assert!((frac as f64 - p * p).abs() < 1e-6);
+                }
+            }
+        } else {
+            panic!()
+        }
+    }
+}

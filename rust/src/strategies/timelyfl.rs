@@ -1,0 +1,86 @@
+//! TimelyFL (Zhang et al.): heterogeneity-aware asynchronous FL with
+//! adaptive partial training. Every client gets the same wall-clock
+//! deadline (T_th); each round it trains the deepest prefix sub-model that
+//! fits the deadline — recomputed every round, so workloads adapt — and
+//! the server aggregates whatever arrived by the deadline. The round
+//! always costs exactly the deadline.
+
+use super::depthfl::{prefix_mask, prefix_round_time};
+use super::{ClientPlan, FleetCtx, MaskSpec, Strategy};
+
+pub struct TimelyFl {
+    nb: usize,
+}
+
+impl TimelyFl {
+    pub fn new(ctx: &FleetCtx) -> Self {
+        TimelyFl { nb: ctx.manifest.num_blocks }
+    }
+}
+
+impl Strategy for TimelyFl {
+    fn name(&self) -> &'static str {
+        "timelyfl"
+    }
+
+    fn plan_round(&mut self, _round: usize, ctx: &FleetCtx, _global: &[f32]) -> Vec<ClientPlan> {
+        (0..ctx.n_clients())
+            .map(|client| {
+                // deepest prefix that fits the deadline; if even exit 1 is
+                // too slow, shed local steps instead (partial epoch).
+                let e = (1..=self.nb)
+                    .rev()
+                    .find(|&e| prefix_round_time(ctx, client, e) <= ctx.t_th)
+                    .unwrap_or(1);
+                let full = prefix_round_time(ctx, client, e);
+                let steps = if full <= ctx.t_th {
+                    ctx.local_steps
+                } else {
+                    ((ctx.local_steps as f64 * ctx.t_th / full).floor() as usize).max(1)
+                };
+                ClientPlan {
+                    client,
+                    exit: e,
+                    mask: MaskSpec::Tensor(prefix_mask(ctx, e)),
+                    local_steps: steps,
+                    // async deadline: the round costs T_th regardless.
+                    est_time: ctx.t_th,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::ctx;
+    use super::*;
+
+    #[test]
+    fn every_round_costs_the_deadline() {
+        let c = ctx(8, &[1.0, 2.0, 4.0]);
+        let mut s = TimelyFl::new(&c);
+        for p in s.plan_round(0, &c, &[]) {
+            assert_eq!(p.est_time, c.t_th);
+        }
+    }
+
+    #[test]
+    fn slow_clients_get_shallower_prefixes() {
+        let c = ctx(8, &[1.0, 4.0]);
+        let mut s = TimelyFl::new(&c);
+        let plans = s.plan_round(0, &c, &[]);
+        assert!(plans[1].exit < plans[0].exit);
+        assert_eq!(plans[0].exit, 8);
+    }
+
+    #[test]
+    fn extreme_straggler_sheds_steps_not_participation() {
+        let c = ctx(8, &[40.0]);
+        let mut s = TimelyFl::new(&c);
+        let plans = s.plan_round(0, &c, &[]);
+        assert_eq!(plans.len(), 1, "TimelyFL keeps everyone participating");
+        assert!(plans[0].local_steps < c.local_steps);
+        assert!(plans[0].local_steps >= 1);
+    }
+}

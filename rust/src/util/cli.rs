@@ -1,0 +1,164 @@
+//! CLI argument parsing substrate (offline registry has no clap).
+//!
+//! Supports: `prog <subcommand> --flag --key value --key=value positional`.
+//! Each binary declares its options by querying an [`Args`] after parsing;
+//! unknown keys produce an error listing what was accepted, so typos fail
+//! loudly instead of silently running a default experiment.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    kv: BTreeMap<String, String>,
+    flags: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse process args; `expect_subcommand` treats the first bare word
+    /// as a subcommand.
+    pub fn parse(raw: impl IntoIterator<Item = String>, expect_subcommand: bool) -> Args {
+        let mut a = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.kv.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    a.kv.insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    a.flags.push(stripped.to_string());
+                }
+            } else if expect_subcommand && a.subcommand.is_none() && a.positional.is_empty() {
+                a.subcommand = Some(tok);
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn from_env(expect_subcommand: bool) -> Args {
+        Args::parse(std::env::args().skip(1), expect_subcommand)
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.kv.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.parse_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.parse_or(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.parse_or(key, default)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("warning: --{key} value {s:?} unparseable; using default");
+                default
+            }),
+        }
+    }
+
+    /// Error if the command line carried keys nobody asked about.
+    pub fn check_unused(&self) -> anyhow::Result<()> {
+        let seen = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .kv
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !seen.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unknown arguments: {:?} (accepted: {:?})", unknown, *seen)
+        }
+    }
+
+    /// Comma-separated list value.
+    pub fn list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(s) => s.split(',').filter(|p| !p.is_empty()).map(String::from).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str], sub: bool) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()), sub)
+    }
+
+    #[test]
+    fn parses_subcommand_kv_flags_positional() {
+        let a = parse(
+            &["train", "extra", "--model", "mlp", "--rounds=20", "--verbose"],
+            true,
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.usize_or("rounds", 0), 20);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[], false);
+        assert_eq!(a.usize_or("n", 7), 7);
+        assert_eq!(a.f64_or("beta", 0.6), 0.6);
+        assert_eq!(a.str_or("model", "mlp"), "mlp");
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "val"], false);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("val"));
+    }
+
+    #[test]
+    fn unused_detection() {
+        let a = parse(&["--known", "1", "--typo", "2"], false);
+        let _ = a.get("known");
+        assert!(a.check_unused().is_err());
+        let _ = a.get("typo");
+        assert!(a.check_unused().is_ok());
+    }
+
+    #[test]
+    fn list_values() {
+        let a = parse(&["--models", "mlp,vgg_cifar"], false);
+        assert_eq!(a.list_or("models", &[]), vec!["mlp", "vgg_cifar"]);
+        assert_eq!(a.list_or("other", &["x"]), vec!["x"]);
+    }
+}

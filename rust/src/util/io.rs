@@ -1,0 +1,79 @@
+//! Binary/file I/O helpers: f32 little-endian vectors (init.bin, metric
+//! dumps) and small CSV emission for figure data series.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Read a little-endian f32 vector (e.g. artifacts/<model>/init.bin).
+pub fn read_f32_vec(path: &Path) -> anyhow::Result<Vec<f32>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("open {path:?}: {e}"))?
+        .read_to_end(&mut bytes)?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "{path:?} not a multiple of 4 bytes");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Write a little-endian f32 vector.
+pub fn write_f32_vec(path: &Path, data: &[f32]) -> anyhow::Result<()> {
+    let mut f = std::fs::File::create(path)?;
+    let mut buf = Vec::with_capacity(data.len() * 4);
+    for x in data {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Write a CSV file: header row + numeric rows (figure data series).
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut out = String::new();
+    out.push_str(&header.join(","));
+    out.push('\n');
+    for row in rows {
+        let cells: Vec<String> = row.iter().map(|x| format!("{x}")).collect();
+        out.push_str(&cells.join(","));
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_vec_round_trip() {
+        let dir = std::env::temp_dir().join("fedel_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("v.bin");
+        let data = vec![1.5f32, -2.0, 0.0, f32::MAX];
+        write_f32_vec(&p, &data).unwrap();
+        assert_eq!(read_f32_vec(&p).unwrap(), data);
+    }
+
+    #[test]
+    fn csv_emission() {
+        let dir = std::env::temp_dir().join("fedel_io_test");
+        let p = dir.join("t.csv");
+        write_csv(&p, &["a", "b"], &[vec![1.0, 2.0], vec![3.5, 4.0]]).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3.5,4\n");
+    }
+
+    #[test]
+    fn rejects_ragged_binary() {
+        let dir = std::env::temp_dir().join("fedel_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, [1u8, 2, 3]).unwrap();
+        assert!(read_f32_vec(&p).is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! PRNG, JSON, CLI parsing, statistics, property testing, binary I/O.
+
+pub mod cli;
+pub mod io;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+/// Format a duration in simulated hours the way the paper's tables do.
+pub fn fmt_hours(secs: f64) -> String {
+    format!("{:.1}h", secs / 3600.0)
+}
+
+/// Format a speedup column ("N/A" for the baseline itself).
+pub fn fmt_speedup(x: Option<f64>) -> String {
+    match x {
+        None => "N/A".to_string(),
+        Some(v) => format!("{v:.2}x"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hours_formatting() {
+        assert_eq!(fmt_hours(3600.0), "1.0h");
+        assert_eq!(fmt_hours(119.8 * 3600.0), "119.8h");
+    }
+
+    #[test]
+    fn speedup_formatting() {
+        assert_eq!(fmt_speedup(None), "N/A");
+        assert_eq!(fmt_speedup(Some(3.87)), "3.87x");
+    }
+}

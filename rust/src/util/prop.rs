@@ -1,0 +1,126 @@
+//! Property-testing substrate (offline registry has no proptest).
+//!
+//! A small randomized-testing harness: generate N random cases from a seed,
+//! run the property, and on failure greedily shrink the failing input via a
+//! user-supplied shrinker before reporting. Deterministic: failures print
+//! the case seed so they can be replayed exactly.
+
+use super::rng::Rng;
+
+/// Run `prop` against `cases` random inputs drawn by `gen`.
+/// Panics with the minimal (greedily shrunk) counterexample.
+pub fn check<T, G, P, S>(name: &str, cases: usize, mut gen: G, mut prop: P, shrink: S)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: Fn(&T) -> Vec<T>,
+{
+    let base_seed = 0xFED_E1u64;
+    for case in 0..cases {
+        let mut rng = Rng::new(base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: keep taking the first failing shrink candidate.
+            let mut cur = input.clone();
+            let mut cur_msg = msg;
+            let mut budget = 1000;
+            'outer: while budget > 0 {
+                for cand in shrink(&cur) {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            panic!(
+                "property {name:?} failed (case {case}, replay seed {seed:#x})\n\
+                 shrunk input: {cur:#?}\nreason: {cur_msg}"
+            );
+        }
+    }
+}
+
+/// No-op shrinker for types where shrinking isn't worth it.
+pub fn no_shrink<T: Clone>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+/// Shrinker for Vec<T>: halves, then single-element removals (capped).
+pub fn shrink_vec<T: Clone>(v: &Vec<T>) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.is_empty() {
+        return out;
+    }
+    out.push(v[..v.len() / 2].to_vec());
+    out.push(v[v.len() / 2..].to_vec());
+    for i in 0..v.len().min(16) {
+        let mut c = v.clone();
+        c.remove(i);
+        out.push(c);
+    }
+    out
+}
+
+/// Shrinker for numeric scalars toward zero.
+pub fn shrink_usize(x: &usize) -> Vec<usize> {
+    let x = *x;
+    let mut out = Vec::new();
+    if x > 0 {
+        out.push(x / 2);
+        out.push(x - 1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            "sum-commutes",
+            50,
+            |r| (r.below(100) as i64, r.below(100) as i64),
+            |&(a, b)| {
+                count += 1;
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+            no_shrink,
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics() {
+        check(
+            "always-small",
+            100,
+            |r| r.below(1000),
+            |&x| if x < 5 { Ok(()) } else { Err(format!("{x} too big")) },
+            shrink_usize,
+        );
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller() {
+        let v = vec![1, 2, 3, 4];
+        for c in shrink_vec(&v) {
+            assert!(c.len() < v.len());
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Statistics substrate: summary stats, confidence intervals, box-plot
+//! five-number summaries (Figure 21), and simple vector helpers used by the
+//! report/bench layer.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample standard deviation (0.0 for n < 2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Population variance.
+pub fn var_pop(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Linear-interpolated quantile, q in [0, 1].
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// 95% CI half-width using the normal approximation (t-table for small n).
+pub fn ci95_half_width(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    // two-sided 97.5% t quantiles for df = 1..=30, then z.
+    const T: [f64; 30] = [
+        12.706, 4.303, 3.182, 2.776, 2.571, 2.447, 2.365, 2.306, 2.262, 2.228,
+        2.201, 2.179, 2.160, 2.145, 2.131, 2.120, 2.110, 2.101, 2.093, 2.086,
+        2.080, 2.074, 2.069, 2.064, 2.060, 2.056, 2.052, 2.048, 2.045, 2.042,
+    ];
+    let df = xs.len() - 1;
+    let t = if df <= 30 { T[df - 1] } else { 1.96 };
+    t * std_dev(xs) / (xs.len() as f64).sqrt()
+}
+
+/// Five-number box-plot summary (Figure 21): min, q1, median, q3, max.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BoxStats {
+    pub min: f64,
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub max: f64,
+}
+
+pub fn box_stats(xs: &[f64]) -> BoxStats {
+    BoxStats {
+        min: quantile(xs, 0.0),
+        q1: quantile(xs, 0.25),
+        median: quantile(xs, 0.5),
+        q3: quantile(xs, 0.75),
+        max: quantile(xs, 1.0),
+    }
+}
+
+/// Welch's t statistic for two independent samples (Fig 21 significance).
+pub fn welch_t(a: &[f64], b: &[f64]) -> f64 {
+    let (ma, mb) = (mean(a), mean(b));
+    let (va, vb) = (std_dev(a).powi(2), std_dev(b).powi(2));
+    let denom = (va / a.len() as f64 + vb / b.len() as f64).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (ma - mb) / denom
+    }
+}
+
+/// Exponential moving average over a series (metric smoothing).
+pub fn ema(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = None;
+    for &x in xs {
+        let v = match acc {
+            None => x,
+            Some(prev) => alpha * x + (1.0 - alpha) * prev,
+        };
+        out.push(v);
+        acc = Some(v);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.13809).abs() < 1e-4);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 4.0);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!((quantile(&xs, 0.25) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn box_stats_ordered() {
+        let xs = [5.0, 1.0, 3.0, 2.0, 4.0];
+        let b = box_stats(&xs);
+        assert!(b.min <= b.q1 && b.q1 <= b.median);
+        assert!(b.median <= b.q3 && b.q3 <= b.max);
+        assert_eq!(b.min, 1.0);
+        assert_eq!(b.max, 5.0);
+        assert_eq!(b.median, 3.0);
+    }
+
+    #[test]
+    fn ci_shrinks_with_n() {
+        let a: Vec<f64> = (0..5).map(|i| i as f64).collect();
+        let b: Vec<f64> = (0..50).map(|i| (i % 5) as f64).collect();
+        assert!(ci95_half_width(&a) > ci95_half_width(&b));
+    }
+
+    #[test]
+    fn welch_t_zero_for_identical() {
+        let a = [1.0, 2.0, 3.0];
+        assert_eq!(welch_t(&a, &a), 0.0);
+        let b = [11.0, 12.0, 13.0];
+        assert!(welch_t(&b, &a) > 5.0);
+    }
+
+    #[test]
+    fn ema_first_is_input() {
+        let xs = [10.0, 0.0, 0.0];
+        let e = ema(&xs, 0.5);
+        assert_eq!(e[0], 10.0);
+        assert_eq!(e[1], 5.0);
+        assert_eq!(e[2], 2.5);
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(std_dev(&[]), 0.0);
+        assert_eq!(std_dev(&[1.0]), 0.0);
+        assert_eq!(ci95_half_width(&[1.0]), 0.0);
+    }
+}

@@ -1,0 +1,323 @@
+//! FedEL's sliding window (Sec. 4.1): the state machine that decides which
+//! contiguous run of blocks a client trains each round.
+//!
+//! The window `[end, front)` holds the trainable blocks; the early-exit
+//! head of block `front-1` is the round's output layer. Per round:
+//!
+//! * **End-edge movement** (Fig 7c): blocks at the shallow edge whose
+//!   tensors went unselected last round are culled (frozen), shrinking the
+//!   window — either the window was too large for the budget, or
+//!   ElasticTrainer found nothing important there.
+//! * **Front-edge movement** (Fig 7a): the front advances to include the
+//!   next run of blocks whose cumulative training time `Σ T^b` just
+//!   exceeds `T_th`; reaching the model's end with budget left over still
+//!   counts as a movement.
+//! * **Reset / rollback** (Fig 7b): when the front edge is already at the
+//!   model's end, the window rolls back to the initial window so earlier
+//!   layers get revisited (Appendix B.6 shows this lowers the O₁ bias
+//!   term). `WindowPolicy::NoRollback` disables this for the Table 4
+//!   ablation; `WindowPolicy::Collapsed` is FedEL-C (end edge jumps to the
+//!   old front every round, Fig 13/14).
+
+/// Variant knobs for ablations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WindowPolicy {
+    /// Full FedEL: end-edge culling + reset when the front reaches the end.
+    FedEl,
+    /// FedEL-C (Fig 13): the end edge collapses to the previous front, so
+    /// consecutive windows are disjoint.
+    Collapsed,
+    /// Table 4 "Not Rollback": the front never resets; once it reaches the
+    /// model end the window pins to the final run of blocks.
+    NoRollback,
+}
+
+/// The window over blocks `[end, front)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Window {
+    pub end: usize,
+    pub front: usize,
+}
+
+impl Window {
+    pub fn blocks(&self) -> std::ops::Range<usize> {
+        self.end..self.front
+    }
+
+    pub fn len(&self) -> usize {
+        self.front - self.end
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.front == self.end
+    }
+
+    pub fn contains(&self, b: usize) -> bool {
+        (self.end..self.front).contains(&b)
+    }
+}
+
+/// Per-round block costs on ONE device: `train[b]` is the paper's
+/// `T^b = Σ_k (t_g^k + t_w^k)` and `fwd[b]` the forward time of block `b`
+/// (both already multiplied by the local step count).
+///
+/// The forward vector is a deliberate refinement of the paper's
+/// block-time rule: Eq. 1's budget constraint is `T_fw + T_bw(A) ≤ T_th`,
+/// and a window with exit at block `front-1` pays forward time for EVERY
+/// block below the front (including frozen ones below the end edge). If
+/// window sizing ignores that term — summing only `Σ T^b` as Sec. 4.1
+/// literally states — a straggler's initial window is so deep that the DP
+/// can never afford the gradient chain back to the window's shallow end,
+/// and front blocks starve. Counting `fwd` makes every window's full
+/// training cost land just above `T_th`, which is what the rule is for.
+#[derive(Clone, Debug)]
+pub struct BlockCosts {
+    pub train: Vec<f64>,
+    pub fwd: Vec<f64>,
+}
+
+impl BlockCosts {
+    pub fn uniform(nb: usize) -> BlockCosts {
+        BlockCosts { train: vec![1.0; nb], fwd: vec![0.0; nb] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.train.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.train.is_empty()
+    }
+
+    /// Forward time through all blocks `< front`.
+    fn fwd_prefix(&self, front: usize) -> f64 {
+        self.fwd[..front].iter().sum()
+    }
+}
+
+/// Per-client sliding-window state.
+#[derive(Clone, Debug)]
+pub struct WindowState {
+    pub win: Window,
+    pub policy: WindowPolicy,
+    /// Rounds since the state was created (for diagnostics/traces).
+    pub rounds: usize,
+    /// How many times the window rolled back to the initial window.
+    pub resets: usize,
+}
+
+/// The initial window: blocks from 0 until the cumulative cost (block
+/// training time + the window's forward prefix) first reaches `t_th`
+/// (Sec. 4.1 with the T_fw refinement documented on [`BlockCosts`]).
+pub fn initial_window(costs: &BlockCosts, t_th: f64) -> Window {
+    let nb = costs.len();
+    let mut acc_train = 0.0;
+    for b in 0..nb {
+        acc_train += costs.train[b];
+        if acc_train + costs.fwd_prefix(b + 1) >= t_th {
+            return Window { end: 0, front: b + 1 };
+        }
+    }
+    Window { end: 0, front: nb }
+}
+
+impl WindowState {
+    pub fn new(costs: &BlockCosts, t_th: f64, policy: WindowPolicy) -> Self {
+        WindowState { win: initial_window(costs, t_th), policy, rounds: 0, resets: 0 }
+    }
+
+    /// Advance the window for the next round.
+    ///
+    /// `block_selected[b]` — whether any tensor of block `b` was selected
+    /// by ElasticTrainer in the round just finished (drives the end edge).
+    pub fn advance(&mut self, costs: &BlockCosts, t_th: f64, block_selected: &[bool]) {
+        let nb = costs.len();
+        debug_assert_eq!(block_selected.len(), nb);
+        self.rounds += 1;
+
+        match self.policy {
+            WindowPolicy::Collapsed => {
+                // FedEL-C: next window starts exactly at the old front.
+                if self.win.front >= nb {
+                    self.win = initial_window(costs, t_th);
+                    self.resets += 1;
+                    return;
+                }
+                let end = self.win.front;
+                let front = front_advance(costs, end, t_th);
+                self.win = Window { end, front };
+            }
+            WindowPolicy::FedEl | WindowPolicy::NoRollback => {
+                // End edge: cull unselected blocks from the shallow side
+                // (keep at least one block in the window).
+                let mut end = self.win.end;
+                while end + 1 < self.win.front && !block_selected[end] {
+                    end += 1;
+                }
+                // Front edge.
+                if self.win.front >= nb {
+                    match self.policy {
+                        WindowPolicy::FedEl => {
+                            self.win = initial_window(costs, t_th);
+                            self.resets += 1;
+                        }
+                        _ => {
+                            // NoRollback: pin to the final run of blocks
+                            // worth ~T_th ending at the model end.
+                            let end = rear_window_start(costs, t_th);
+                            self.win = Window { end, front: nb };
+                        }
+                    }
+                    return;
+                }
+                let front = front_advance(costs, self.win.front, t_th);
+                self.win = Window { end: end.min(front - 1), front };
+            }
+        }
+    }
+}
+
+/// Front-edge movement: from `from`, include blocks until the added
+/// training time plus the new window's forward prefix reaches `t_th`
+/// (always at least one block; stops at the model end).
+fn front_advance(costs: &BlockCosts, from: usize, t_th: f64) -> usize {
+    let nb = costs.len();
+    let mut acc = 0.0;
+    let mut front = from;
+    while front < nb {
+        acc += costs.train[front];
+        front += 1;
+        if acc + costs.fwd_prefix(front) >= t_th {
+            break;
+        }
+    }
+    front.max(from + 1).min(nb)
+}
+
+/// Start of a rear window of ~`t_th` cumulative cost ending at the model
+/// end (NoRollback terminal state).
+fn rear_window_start(costs: &BlockCosts, t_th: f64) -> usize {
+    let nb = costs.len();
+    let mut acc = costs.fwd_prefix(nb);
+    for b in (0..nb).rev() {
+        acc += costs.train[b];
+        if acc >= t_th {
+            return b;
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform(nb: usize) -> BlockCosts {
+        BlockCosts::uniform(nb)
+    }
+
+    #[test]
+    fn initial_window_covers_budget() {
+        let bt = uniform(8);
+        let w = initial_window(&bt, 3.0);
+        assert_eq!(w, Window { end: 0, front: 3 });
+        // threshold smaller than one block -> single block
+        assert_eq!(initial_window(&bt, 0.5).front, 1);
+        // threshold bigger than the whole model -> all blocks
+        assert_eq!(initial_window(&bt, 100.0).front, 8);
+    }
+
+    #[test]
+    fn front_advances_by_budget_worth_of_blocks() {
+        let bt = uniform(8);
+        let mut st = WindowState::new(&bt, 3.0, WindowPolicy::FedEl);
+        assert_eq!(st.win, Window { end: 0, front: 3 });
+        st.advance(&bt, 3.0, &[true; 8]);
+        assert_eq!(st.win.front, 6);
+        // all blocks selected -> end edge unchanged
+        assert_eq!(st.win.end, 0);
+    }
+
+    #[test]
+    fn end_edge_culls_unselected_blocks() {
+        let bt = uniform(8);
+        let mut st = WindowState::new(&bt, 3.0, WindowPolicy::FedEl);
+        let mut sel = vec![true; 8];
+        sel[0] = false;
+        sel[1] = false;
+        st.advance(&bt, 3.0, &sel);
+        assert_eq!(st.win.end, 2, "unselected shallow blocks culled");
+        assert_eq!(st.win.front, 6);
+    }
+
+    #[test]
+    fn reset_when_front_reaches_end() {
+        let bt = uniform(6);
+        let mut st = WindowState::new(&bt, 2.0, WindowPolicy::FedEl);
+        // round 1: front 2 -> 4; round 2: front 4 -> 6; round 3: reset
+        st.advance(&bt, 2.0, &[true; 6]);
+        st.advance(&bt, 2.0, &[true; 6]);
+        assert_eq!(st.win.front, 6);
+        st.advance(&bt, 2.0, &[true; 6]);
+        assert_eq!(st.win, Window { end: 0, front: 2 });
+        assert_eq!(st.resets, 1);
+    }
+
+    #[test]
+    fn no_rollback_pins_to_rear_window() {
+        let bt = uniform(6);
+        let mut st = WindowState::new(&bt, 2.0, WindowPolicy::NoRollback);
+        for _ in 0..3 {
+            st.advance(&bt, 2.0, &[true; 6]);
+        }
+        assert_eq!(st.win, Window { end: 4, front: 6 });
+        assert_eq!(st.resets, 0);
+        // stays pinned
+        st.advance(&bt, 2.0, &[true; 6]);
+        assert_eq!(st.win, Window { end: 4, front: 6 });
+    }
+
+    #[test]
+    fn collapsed_windows_are_disjoint() {
+        let bt = uniform(8);
+        let mut st = WindowState::new(&bt, 3.0, WindowPolicy::Collapsed);
+        let w0 = st.win;
+        st.advance(&bt, 3.0, &[true; 8]);
+        let w1 = st.win;
+        assert_eq!(w1.end, w0.front);
+        assert!(w1.front > w1.end);
+    }
+
+    #[test]
+    fn window_always_nonempty() {
+        let bt = uniform(5);
+        let mut st = WindowState::new(&bt, 1.0, WindowPolicy::FedEl);
+        // nothing ever selected: end edge must not cross the front.
+        for _ in 0..20 {
+            st.advance(&bt, 1.0, &[false; 5]);
+            assert!(st.win.front > st.win.end, "{:?}", st.win);
+            assert!(st.win.front <= 5);
+        }
+    }
+
+    #[test]
+    fn fast_device_big_threshold_covers_model_every_round() {
+        let bt = uniform(4);
+        let mut st = WindowState::new(&bt, 10.0, WindowPolicy::FedEl);
+        assert_eq!(st.win, Window { end: 0, front: 4 });
+        st.advance(&bt, 10.0, &[true; 4]);
+        // front was at end -> reset to initial == full model again
+        assert_eq!(st.win, Window { end: 0, front: 4 });
+    }
+
+    #[test]
+    fn heterogeneous_block_times_respected() {
+        let bt = BlockCosts { train: vec![0.5, 0.5, 4.0, 1.0, 1.0], fwd: vec![0.0; 5] };
+        let w = initial_window(&bt, 2.0);
+        assert_eq!(w.front, 3); // 0.5+0.5 < 2.0 <= 0.5+0.5+4.0
+        let mut st = WindowState::new(&bt, 2.0, WindowPolicy::FedEl);
+        st.advance(&bt, 2.0, &[true; 5]);
+        // from block 3: 1.0 + 1.0 == 2.0 -> front = 5
+        assert_eq!(st.win.front, 5);
+    }
+}

@@ -1,0 +1,211 @@
+//! Integration tests over the mock engine: full FL experiments exercising
+//! every module boundary (config -> fleet -> timing -> strategy -> server
+//! -> aggregation -> metrics) without PJRT or artifacts.
+
+use fedel::config::{ExperimentCfg, FleetSpec};
+use fedel::metrics::energy::energy_report;
+use fedel::metrics::memory::memory_bytes;
+use fedel::report::{table1_rows, Table1Row};
+use fedel::sim::experiment::{run_one, Experiment};
+use fedel::strategies::table1_names;
+
+fn mock_cfg(strategy: &str, rounds: usize) -> ExperimentCfg {
+    ExperimentCfg {
+        model: "mock:8x60".into(),
+        strategy: strategy.into(),
+        fleet: FleetSpec::Scales(vec![1.0, 1.0, 2.0, 2.0, 4.0]),
+        rounds,
+        local_steps: 4,
+        lr: 0.3,
+        eval_every: 3,
+        eval_batches: 2,
+        slowest_round_secs: 3600.0,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn all_strategies_complete_and_report() {
+    for name in table1_names() {
+        let res = run_one(mock_cfg(name, 6)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(res.records.len(), 6, "{name}");
+        assert!(res.sim_total_secs > 0.0, "{name}");
+        assert!(res.final_acc.is_finite(), "{name}");
+        for r in &res.records {
+            assert!(r.participants > 0, "{name} round {} empty", r.round);
+            assert!(r.round_secs > 0.0);
+            assert!(r.mean_coverage >= 0.0 && r.mean_coverage <= 1.0);
+        }
+    }
+}
+
+#[test]
+fn sim_clock_is_monotone_and_cumulative() {
+    let res = run_one(mock_cfg("fedel", 10)).unwrap();
+    let mut last = 0.0;
+    for r in &res.records {
+        assert!(r.sim_time > last);
+        assert!((r.sim_time - last - r.round_secs).abs() < 1e-6);
+        last = r.sim_time;
+    }
+}
+
+#[test]
+fn fedavg_round_time_is_slowest_client_time() {
+    let res = run_one(mock_cfg("fedavg", 3)).unwrap();
+    for r in &res.records {
+        let max_client = r
+            .client_secs
+            .iter()
+            .map(|&(_, t)| t)
+            .fold(0.0f64, f64::max);
+        assert!((r.round_secs - 30.0 - max_client).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn fedel_beats_fedavg_wallclock_on_heterogeneous_fleet() {
+    let avg = run_one(mock_cfg("fedavg", 8)).unwrap();
+    let fedel = run_one(mock_cfg("fedel", 8)).unwrap();
+    assert!(
+        fedel.sim_total_secs < 0.6 * avg.sim_total_secs,
+        "fedel {} vs fedavg {}",
+        fedel.sim_total_secs,
+        avg.sim_total_secs
+    );
+}
+
+#[test]
+fn timelyfl_rounds_cost_exactly_the_deadline() {
+    let mut exp = Experiment::build(mock_cfg("timelyfl", 4)).unwrap();
+    let res = exp.run(None).unwrap();
+    for r in &res.records {
+        assert!((r.round_secs - 30.0 - exp.ctx.t_th).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn pyramidfl_subsamples_clients() {
+    let res = run_one(mock_cfg("pyramidfl", 6)).unwrap();
+    assert!(res.records.iter().all(|r| r.participants < 5));
+}
+
+#[test]
+fn o1_bias_zero_for_fedavg_positive_for_partial_methods() {
+    let avg = run_one(mock_cfg("fedavg", 4)).unwrap();
+    for r in &avg.records {
+        assert!(r.o1.abs() < 1e-9, "fedavg round {} o1 {}", r.round, r.o1);
+    }
+    let fedel = run_one(mock_cfg("fedel", 6)).unwrap();
+    assert!(fedel.mean_o1() > 0.0);
+}
+
+#[test]
+fn rollback_o1_is_spikier_than_norollback() {
+    // Table 4's robust signature: rollback keeps revisiting layers, so its
+    // per-round O1 fluctuates (paper std 8.62) while no-rollback pins all
+    // windows and stabilizes (paper std 2.62). The MEAN comparison is
+    // fleet/workload-dependent and is reported (not asserted) by
+    // benches/table4.rs on the paper's actual workload.
+    let roll = run_one(mock_cfg("fedel", 24)).unwrap();
+    let noroll = run_one(mock_cfg("fedel-norollback", 24)).unwrap();
+    assert!(
+        roll.std_o1() > noroll.std_o1(),
+        "rollback std {} vs norollback std {}",
+        roll.std_o1(),
+        noroll.std_o1()
+    );
+    assert!(roll.mean_o1().is_finite() && noroll.mean_o1() > 0.0);
+}
+
+#[test]
+fn record_selections_produces_traces() {
+    let mut cfg = mock_cfg("fedel", 4);
+    cfg.record_selections = true;
+    let res = run_one(cfg).unwrap();
+    assert!(!res.selections.is_empty());
+    for (round, client, sel) in &res.selections {
+        assert!(*round < 4);
+        assert!(*client < 5);
+        assert!(!sel.is_empty());
+    }
+}
+
+#[test]
+fn experiments_are_deterministic_per_seed() {
+    let a = run_one(mock_cfg("fedel", 5)).unwrap();
+    let b = run_one(mock_cfg("fedel", 5)).unwrap();
+    assert_eq!(a.final_acc, b.final_acc);
+    assert_eq!(a.sim_total_secs, b.sim_total_secs);
+    let mut cfg = mock_cfg("fedel", 5);
+    cfg.seed = 43;
+    let c = run_one(cfg).unwrap();
+    assert_ne!(a.final_acc, c.final_acc);
+}
+
+#[test]
+fn table1_rows_assemble_from_results() {
+    let avg = run_one(mock_cfg("fedavg", 6)).unwrap();
+    let fedel = run_one(mock_cfg("fedel", 6)).unwrap();
+    let rows: Vec<Table1Row> = table1_rows(&[avg, fedel], 0.9, false);
+    assert_eq!(rows.len(), 2);
+    assert!(rows[0].speedup_vs_fedavg.is_none());
+    assert!(rows[1].speedup_vs_fedavg.unwrap() > 1.0);
+}
+
+#[test]
+fn memory_model_orders_strategies_sensibly() {
+    let mut exp = Experiment::build(mock_cfg("fedel", 2)).unwrap();
+    let m = exp.ctx.manifest.clone();
+    let global = vec![0.0f32; m.param_count];
+    let k = m.tensors.len();
+    // FedAvg full footprint vs FedEL's windowed footprint on the slowest client
+    let full = memory_bytes(&m, m.num_blocks, &vec![1.0; k]);
+    let mut fedel = fedel::strategies::by_name("fedel", &exp.ctx, 0.6, 1).unwrap();
+    let plans = fedel.plan_round(0, &exp.ctx, &global);
+    let straggler = plans.iter().find(|p| p.client == 4).unwrap();
+    let win = memory_bytes(&m, straggler.exit, &straggler.mask.tensor_coverage());
+    assert!(win.total() < full.total());
+    let _ = exp.run(None).unwrap();
+}
+
+#[test]
+fn energy_report_tracks_active_time_differences() {
+    let mut exp = Experiment::build(mock_cfg("fedavg", 4)).unwrap();
+    let avg = exp.run(Some("fedavg")).unwrap();
+    let fedel = exp.run(Some("fedel")).unwrap();
+    let e_avg = energy_report(&avg, &exp.fleet);
+    let e_fedel = energy_report(&fedel, &exp.fleet);
+    assert!(
+        e_fedel.total_kj < e_avg.total_kj,
+        "fedel {} kJ vs fedavg {} kJ",
+        e_fedel.total_kj,
+        e_avg.total_kj
+    );
+}
+
+#[test]
+fn beta_extremes_run_without_error() {
+    for beta in [0.0, 1.0] {
+        let mut cfg = mock_cfg("fedel", 4);
+        cfg.beta = beta;
+        let res = run_one(cfg).unwrap();
+        assert!(res.final_acc.is_finite());
+    }
+}
+
+#[test]
+fn single_client_fleet_works() {
+    let mut cfg = mock_cfg("fedel", 4);
+    cfg.fleet = FleetSpec::Scales(vec![1.0]);
+    let res = run_one(cfg).unwrap();
+    assert_eq!(res.records[0].participants, 1);
+}
+
+#[test]
+fn extreme_straggler_fleet_works() {
+    let mut cfg = mock_cfg("fedel", 5);
+    cfg.fleet = FleetSpec::Scales(vec![1.0, 20.0]);
+    let res = run_one(cfg).unwrap();
+    assert!(res.final_acc.is_finite());
+}

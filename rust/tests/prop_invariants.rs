@@ -1,0 +1,380 @@
+//! Property-based invariants (in-repo prop harness, see util::prop):
+//! randomized inputs for the DP selector, sliding window, aggregation,
+//! masks, and the JSON substrate.
+
+use fedel::elastic::{blend_importance, select, SelectorInput};
+use fedel::fl::aggregate::{AggregateRule, MaskedAggregator};
+use fedel::fl::bias::o1_bias;
+use fedel::manifest::tests_support::chain_manifest;
+use fedel::timing::{DeviceProfile, TimingCfg, TimingModel};
+use fedel::util::json::Json;
+use fedel::util::prop::{check, no_shrink, shrink_vec};
+use fedel::util::rng::Rng;
+use fedel::window::{initial_window, BlockCosts, WindowPolicy, WindowState};
+
+#[test]
+fn prop_selector_never_exceeds_budget() {
+    let m = chain_manifest(12, 30);
+    let tm = TimingModel::profile(&m, &DeviceProfile::orin(), &TimingCfg::default());
+    let order: Vec<usize> = (0..12).rev().map(|b| 2 * b).collect();
+    let full = tm.full_backward_time();
+    check(
+        "selector-budget",
+        150,
+        |r: &mut Rng| {
+            let imp: Vec<f64> = (0..12).map(|_| r.f64() * 10.0).collect();
+            let budget = r.f64() * full;
+            (imp, budget)
+        },
+        |(imp, budget)| {
+            let sel = select(&SelectorInput { order: &order, importance: imp, budget: *budget, timing: &tm });
+            if sel.backward_time <= budget + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("backward {} > budget {budget}", sel.backward_time))
+            }
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_selector_selected_subset_of_order() {
+    let m = chain_manifest(10, 20);
+    let tm = TimingModel::profile(&m, &DeviceProfile::orin(), &TimingCfg::default());
+    let full = tm.full_backward_time();
+    check(
+        "selector-subset",
+        100,
+        |r: &mut Rng| {
+            // random contiguous window
+            let end = r.below(9);
+            let front = end + 1 + r.below(10 - end - 1).max(0);
+            let front = front.min(10).max(end + 1);
+            (end, front, r.f64() * full)
+        },
+        |&(end, front, budget)| {
+            let order: Vec<usize> = (end..front).rev().map(|b| 2 * b).collect();
+            let imp = vec![1.0; order.len()];
+            let sel = select(&SelectorInput { order: &order, importance: &imp, budget, timing: &tm });
+            for t in &sel.tensors {
+                if !order.contains(t) {
+                    return Err(format!("tensor {t} outside window [{end},{front})"));
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_selector_monotone_in_budget() {
+    let m = chain_manifest(8, 25);
+    let tm = TimingModel::profile(&m, &DeviceProfile::orin(), &TimingCfg::default());
+    let order: Vec<usize> = (0..8).rev().map(|b| 2 * b).collect();
+    let full = tm.full_backward_time();
+    check(
+        "selector-monotone",
+        60,
+        |r: &mut Rng| {
+            let imp: Vec<f64> = (0..8).map(|_| 0.1 + r.f64()).collect();
+            let b1 = r.f64() * full;
+            (imp, b1)
+        },
+        |(imp, b1)| {
+            let s1 = select(&SelectorInput { order: &order, importance: imp, budget: *b1, timing: &tm });
+            let s2 = select(&SelectorInput { order: &order, importance: imp, budget: b1 * 2.0, timing: &tm });
+            if s2.importance + 1e-9 >= s1.importance {
+                Ok(())
+            } else {
+                Err(format!("importance dropped: {} -> {}", s1.importance, s2.importance))
+            }
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_selector_near_optimal_vs_bruteforce() {
+    // exhaustive check on small windows: the DP's captured importance must
+    // be within bucket-quantization slack of the true optimum under the
+    // exact Fig-3 cost model.
+    let m = chain_manifest(8, 20);
+    let tm = TimingModel::profile(&m, &DeviceProfile::orin(), &TimingCfg::default());
+    let full = tm.full_backward_time();
+    check(
+        "selector-vs-bruteforce",
+        40,
+        |r: &mut Rng| {
+            let n = 3 + r.below(5); // 3..=7 candidates
+            let blocks: Vec<usize> = (0..n).collect();
+            let order: Vec<usize> = blocks.iter().rev().map(|&b| 2 * b).collect();
+            let imp: Vec<f64> = (0..n).map(|_| 0.1 + r.f64() * 5.0).collect();
+            let budget = r.f64() * full * 0.8;
+            (order, imp, budget)
+        },
+        |(order, imp, budget)| {
+            let n = order.len();
+            let sel = select(&SelectorInput {
+                order,
+                importance: imp,
+                budget: *budget,
+                timing: &tm,
+            });
+            // brute force: all subsets, exact cost via backward_time_for
+            let mut best = 0.0f64;
+            for bits in 0u32..(1 << n) {
+                let picked: Vec<bool> = (0..n).map(|i| bits >> i & 1 == 1).collect();
+                let cost = tm.backward_time_for(order, &picked);
+                if cost <= *budget {
+                    let v: f64 = (0..n).filter(|&i| picked[i]).map(|i| imp[i]).sum();
+                    best = best.max(v);
+                }
+            }
+            // allow quantization slack: one bucket of time can exclude one
+            // tensor; bound the gap by the largest single importance.
+            let max_imp = imp.iter().cloned().fold(0.0, f64::max);
+            if sel.importance + max_imp + 1e-9 >= best {
+                Ok(())
+            } else {
+                Err(format!("dp {} << brute {best}", sel.importance))
+            }
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_window_always_valid() {
+    check(
+        "window-valid",
+        200,
+        |r: &mut Rng| {
+            let nb = 2 + r.below(14);
+            let costs: Vec<f64> = (0..nb).map(|_| 0.1 + r.f64() * 5.0).collect();
+            let fwd: Vec<f64> = (0..nb).map(|_| r.f64()).collect();
+            let t_th = 0.5 + r.f64() * 20.0;
+            let policy = match r.below(3) {
+                0 => WindowPolicy::FedEl,
+                1 => WindowPolicy::Collapsed,
+                _ => WindowPolicy::NoRollback,
+            };
+            let sels: Vec<u64> = (0..30).map(|_| r.next_u64()).collect();
+            (costs, fwd, t_th, policy, sels)
+        },
+        |(costs, fwd, t_th, policy, sels)| {
+            let nb = costs.len();
+            let bc = BlockCosts { train: costs.clone(), fwd: fwd.clone() };
+            let mut st = WindowState::new(&bc, *t_th, *policy);
+            for &bits in sels {
+                if st.win.end >= st.win.front || st.win.front > nb {
+                    return Err(format!("invalid window {:?}", st.win));
+                }
+                let block_sel: Vec<bool> = (0..nb).map(|b| bits >> (b % 64) & 1 == 1).collect();
+                st.advance(&bc, *t_th, &block_sel);
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_window_front_covers_model_over_time() {
+    // under FedEl policy every block index is eventually inside a window
+    check(
+        "window-coverage",
+        80,
+        |r: &mut Rng| {
+            let nb = 3 + r.below(10);
+            let costs: Vec<f64> = (0..nb).map(|_| 0.5 + r.f64() * 2.0).collect();
+            let t_th = 1.0 + r.f64() * 4.0;
+            (costs, t_th)
+        },
+        |(costs, t_th)| {
+            let nb = costs.len();
+            let bc = BlockCosts { train: costs.clone(), fwd: vec![0.0; nb] };
+            let mut st = WindowState::new(&bc, *t_th, WindowPolicy::FedEl);
+            let mut seen = vec![false; nb];
+            for _ in 0..10 * nb {
+                for b in st.win.blocks() {
+                    seen[b] = true;
+                }
+                st.advance(&bc, *t_th, &vec![true; nb]);
+            }
+            if seen.iter().all(|&s| s) {
+                Ok(())
+            } else {
+                Err(format!("blocks never windowed: {seen:?}"))
+            }
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_masked_aggregation_convex_hull() {
+    // every aggregated element lies within [min, max] of contributions
+    // (or equals the previous global when uncovered)
+    check(
+        "aggregation-hull",
+        100,
+        |r: &mut Rng| {
+            let p = 1 + r.below(40);
+            let n = 1 + r.below(6);
+            let global: Vec<f32> = (0..p).map(|_| r.normal_f32()).collect();
+            let clients: Vec<(Vec<f32>, Vec<f32>)> = (0..n)
+                .map(|_| {
+                    let params: Vec<f32> = (0..p).map(|_| r.normal_f32()).collect();
+                    let mask: Vec<f32> = (0..p).map(|_| (r.below(2)) as f32).collect();
+                    (params, mask)
+                })
+                .collect();
+            (global, clients)
+        },
+        |(global, clients)| {
+            let p = global.len();
+            let mut agg = MaskedAggregator::new(p, AggregateRule::Masked);
+            for (params, mask) in clients {
+                agg.add(params, mask, 1.0, 1, global);
+            }
+            let out = agg.finish(global);
+            for k in 0..p {
+                let contrib: Vec<f32> = clients
+                    .iter()
+                    .filter(|(_, m)| m[k] > 0.0)
+                    .map(|(w, _)| w[k])
+                    .collect();
+                if contrib.is_empty() {
+                    if out[k] != global[k] {
+                        return Err(format!("uncovered elem {k} changed"));
+                    }
+                } else {
+                    let lo = contrib.iter().cloned().fold(f32::MAX, f32::min) - 1e-4;
+                    let hi = contrib.iter().cloned().fold(f32::MIN, f32::max) + 1e-4;
+                    if out[k] < lo || out[k] > hi {
+                        return Err(format!("elem {k}={} outside [{lo},{hi}]", out[k]));
+                    }
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_o1_nonnegative_and_zero_iff_uniform() {
+    check(
+        "o1-sign",
+        100,
+        |r: &mut Rng| {
+            let k = 1 + r.below(12);
+            let n = 1 + r.below(6);
+            let masks: Vec<Vec<f32>> = (0..n)
+                .map(|_| (0..k).map(|_| r.below(2) as f32).collect())
+                .collect();
+            masks
+        },
+        |masks| {
+            let v = o1_bias(masks);
+            if v < -1e-9 {
+                return Err(format!("negative bias {v}"));
+            }
+            Ok(())
+        },
+        shrink_vec,
+    );
+}
+
+#[test]
+fn prop_blend_is_normalized_convex() {
+    check(
+        "blend-convex",
+        100,
+        |r: &mut Rng| {
+            let k = 1 + r.below(20);
+            let l: Vec<f64> = (0..k).map(|_| r.f64() * 5.0).collect();
+            let g: Vec<f64> = (0..k).map(|_| r.f64() * 5.0).collect();
+            (l, g, r.f64())
+        },
+        |(l, g, beta)| {
+            let b = blend_importance(l, g, *beta);
+            let s: f64 = b.iter().sum();
+            if (s - 1.0).abs() > 1e-6 {
+                return Err(format!("sum {s} != 1"));
+            }
+            if b.iter().any(|&x| x < -1e-12) {
+                return Err("negative blended importance".into());
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn random_json(r: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { r.below(4) } else { r.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(r.below(2) == 0),
+            2 => Json::Num((r.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => Json::Str(format!("s{}", r.below(1000))),
+            4 => Json::Arr((0..r.below(4)).map(|_| random_json(r, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..r.below(4))
+                    .map(|i| (format!("k{i}"), random_json(r, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    check(
+        "json-roundtrip",
+        200,
+        |r: &mut Rng| random_json(r, 3),
+        |j| {
+            let text = j.to_string();
+            let back = Json::parse(&text).map_err(|e| format!("{e}"))?;
+            if &back == j {
+                Ok(())
+            } else {
+                Err(format!("{j} -> {text} -> {back}"))
+            }
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_initial_window_cost_just_exceeds_threshold() {
+    check(
+        "initial-window-tight",
+        150,
+        |r: &mut Rng| {
+            let nb = 2 + r.below(12);
+            let costs: Vec<f64> = (0..nb).map(|_| 0.1 + r.f64() * 3.0).collect();
+            let total: f64 = costs.iter().sum();
+            (costs, r.f64() * total * 1.2)
+        },
+        |(costs, t_th)| {
+            let bc = BlockCosts { train: costs.clone(), fwd: vec![0.0; costs.len()] };
+            let w = initial_window(&bc, *t_th);
+            let sum: f64 = costs[..w.front].iter().sum();
+            // either the window covers the whole model (t_th too big) or
+            // its cost reached t_th and removing the last block would not
+            if w.front < costs.len() {
+                if sum < *t_th {
+                    return Err(format!("window sum {sum} < t_th {t_th}"));
+                }
+                let prev: f64 = costs[..w.front - 1].iter().sum();
+                if prev >= *t_th {
+                    return Err(format!("window not minimal: prev {prev} >= {t_th}"));
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}

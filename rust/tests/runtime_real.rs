@@ -1,0 +1,153 @@
+//! Integration tests over the REAL PJRT engine + AOT artifacts. Skipped
+//! (pass trivially) when `make artifacts` hasn't run.
+
+use std::path::{Path, PathBuf};
+
+use fedel::runtime::{Engine, PjrtEngine};
+
+fn art(model: &str) -> Option<PathBuf> {
+    let p = Path::new("artifacts").join(model);
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("skipping: artifacts/{model} missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn batch(m: &fedel::manifest::Manifest, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = fedel::util::rng::Rng::new(seed);
+    let n: usize = m.batch * m.input_shape.iter().product::<usize>();
+    let x: Vec<f32> = match m.task {
+        fedel::manifest::Task::Lm => {
+            (0..n).map(|_| rng.below(m.num_classes) as f32).collect()
+        }
+        _ => (0..n).map(|_| rng.normal_f32()).collect(),
+    };
+    let y: Vec<i32> = (0..m.label_len).map(|_| rng.below(m.num_classes) as i32).collect();
+    (x, y)
+}
+
+#[test]
+fn mlp_train_step_decreases_loss() {
+    let Some(dir) = art("mlp") else { return };
+    let mut eng = PjrtEngine::open(&dir).unwrap();
+    let m = eng.manifest().clone();
+    let mut p = m.load_init().unwrap();
+    let (x, y) = batch(&m, 1);
+    let mask = vec![1.0f32; m.param_count];
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..10 {
+        let out = eng.train_step(m.num_blocks, &p, &x, &y, &mask, 0.05).unwrap();
+        p = out.new_params;
+        first.get_or_insert(out.loss);
+        last = out.loss;
+    }
+    assert!(last < first.unwrap(), "{first:?} -> {last}");
+}
+
+#[test]
+fn mlp_mask_freezes_exactly_the_masked_elements() {
+    let Some(dir) = art("mlp") else { return };
+    let mut eng = PjrtEngine::open(&dir).unwrap();
+    let m = eng.manifest().clone();
+    let p = m.load_init().unwrap();
+    let (x, y) = batch(&m, 2);
+    let mut mask = vec![1.0f32; m.param_count];
+    // freeze every tensor of block 0
+    for t in &m.tensors {
+        if t.block == 0 {
+            mask[t.offset..t.offset + t.size].fill(0.0);
+        }
+    }
+    let out = eng.train_step(m.num_blocks, &p, &x, &y, &mask, 0.1).unwrap();
+    for t in &m.tensors {
+        let range = t.offset..t.offset + t.size;
+        let moved = range.clone().any(|j| out.new_params[j] != p[j]);
+        if t.block == 0 {
+            assert!(!moved, "frozen tensor {} moved", t.name);
+        }
+    }
+}
+
+#[test]
+fn mlp_exit_semantics_match_manifest() {
+    let Some(dir) = art("mlp") else { return };
+    let mut eng = PjrtEngine::open(&dir).unwrap();
+    let m = eng.manifest().clone();
+    let p = m.load_init().unwrap();
+    let (x, y) = batch(&m, 3);
+    let mask = vec![1.0f32; m.param_count];
+    let exit = 2;
+    let out = eng.train_step(exit, &p, &x, &y, &mask, 0.1).unwrap();
+    // sq grads zero for unreached blocks; positive for reached body
+    for (i, t) in m.tensors.iter().enumerate() {
+        let reached = if t.is_head { t.block == exit - 1 } else { t.block < exit };
+        if reached && !t.is_head {
+            assert!(out.sq_grads[i] > 0.0, "{} unexpectedly zero", t.name);
+        }
+        if !reached && !(t.is_head && t.block == exit - 1) {
+            assert_eq!(out.sq_grads[i], 0.0, "{} unexpectedly nonzero", t.name);
+        }
+    }
+}
+
+#[test]
+fn eval_step_counts_rows() {
+    let Some(dir) = art("mlp") else { return };
+    let mut eng = PjrtEngine::open(&dir).unwrap();
+    let m = eng.manifest().clone();
+    let p = m.load_init().unwrap();
+    let (x, y) = batch(&m, 4);
+    let e = eng.eval_step(&p, &x, &y).unwrap();
+    assert_eq!(e.rows, m.label_len as f64);
+    assert!(e.correct >= 0.0 && e.correct <= e.rows);
+    assert!(e.loss_sum > 0.0);
+}
+
+#[test]
+fn all_models_smoke_one_step() {
+    for model in ["mlp", "vgg_cifar", "vgg_tinyin", "resnet_speech", "tinylm_reddit"] {
+        let Some(dir) = art(model) else { continue };
+        let mut eng = PjrtEngine::open(&dir).unwrap();
+        let m = eng.manifest().clone();
+        let p = m.load_init().unwrap();
+        let (x, y) = batch(&m, 5);
+        let mask = vec![1.0f32; m.param_count];
+        // shallowest and deepest exits
+        for exit in [1, m.num_blocks] {
+            let out = eng
+                .train_step(exit, &p, &x, &y, &mask, 0.02)
+                .unwrap_or_else(|e| panic!("{model} exit {exit}: {e}"));
+            assert!(out.loss.is_finite(), "{model} exit {exit}");
+            assert_eq!(out.new_params.len(), m.param_count);
+        }
+        let e = eng.eval_step(&p, &x, &y).unwrap();
+        assert!(e.loss_sum.is_finite());
+    }
+}
+
+#[test]
+fn init_matches_manifest_sha() {
+    for model in ["mlp", "vgg_cifar"] {
+        let Some(dir) = art(model) else { continue };
+        let m = fedel::manifest::Manifest::load(&dir).unwrap();
+        let init = m.load_init().unwrap();
+        assert_eq!(init.len(), m.param_count);
+        assert!(init.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn lazy_compile_only_touches_used_exits() {
+    let Some(dir) = art("mlp") else { return };
+    let mut eng = PjrtEngine::open(&dir).unwrap();
+    let m = eng.manifest().clone();
+    let p = m.load_init().unwrap();
+    let (x, y) = batch(&m, 6);
+    let mask = vec![1.0f32; m.param_count];
+    eng.train_step(1, &p, &x, &y, &mask, 0.01).unwrap();
+    assert_eq!(eng.exec_counts.len(), 1);
+    assert_eq!(eng.exec_counts.get(&1), Some(&1));
+}

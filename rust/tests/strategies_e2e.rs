@@ -1,0 +1,134 @@
+//! Strategy-level end-to-end behaviour on the mock engine: the paper's
+//! qualitative claims as executable checks.
+
+use fedel::config::{ExperimentCfg, FleetSpec};
+use fedel::sim::experiment::{run_one, Experiment};
+
+fn cfg(strategy: &str) -> ExperimentCfg {
+    ExperimentCfg {
+        model: "mock:8x60".into(),
+        strategy: strategy.into(),
+        fleet: FleetSpec::Scales(vec![1.0, 1.0, 2.0, 2.0, 4.0, 4.0]),
+        rounds: 20,
+        local_steps: 4,
+        lr: 0.4,
+        eval_every: 4,
+        eval_batches: 2,
+        slowest_round_secs: 3600.0,
+        ..Default::default()
+    }
+}
+
+/// Round time of the method relative to FedAvg's.
+fn relative_round_time(name: &str) -> f64 {
+    let avg = run_one(cfg("fedavg")).unwrap();
+    let m = run_one(cfg(name)).unwrap();
+    m.records[2].round_secs / avg.records[2].round_secs
+}
+
+#[test]
+fn partial_methods_shrink_rounds() {
+    for name in ["elastictrainer", "heterofl", "depthfl", "timelyfl", "fedel"] {
+        let r = relative_round_time(name);
+        assert!(r < 0.75, "{name} relative round time {r}");
+    }
+}
+
+#[test]
+fn pyramidfl_does_not_shrink_rounds_much() {
+    // the paper's observation: client selection alone barely reduces
+    // wall-clock because a selected straggler still costs full time
+    let r = relative_round_time("pyramidfl");
+    assert!(r > 0.5, "pyramidfl shrank rounds too much: {r}");
+}
+
+#[test]
+fn fedel_eval_accuracy_not_worse_than_elastic() {
+    // Limitation #1/#2 fix: with the mock quadratic objective, FedEL's
+    // sliding window trains shallow tensors the plain ElasticTrainer
+    // starves, so its pseudo-accuracy (distance to target over ALL
+    // coordinates) should be at least as good.
+    let elastic = run_one(cfg("elastictrainer")).unwrap();
+    let fedel = run_one(cfg("fedel")).unwrap();
+    assert!(
+        fedel.final_acc >= elastic.final_acc * 0.98,
+        "fedel {} vs elastic {}",
+        fedel.final_acc,
+        elastic.final_acc
+    );
+}
+
+#[test]
+fn depthfl_assigns_stable_depths() {
+    let mut exp = Experiment::build(cfg("depthfl")).unwrap();
+    let res = exp.run(None).unwrap();
+    // all rounds have the same per-round structure (fixed sub-models)
+    let t0 = res.records[0].round_secs;
+    for r in &res.records {
+        assert!((r.round_secs - t0).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn fedel_round_times_hover_near_t_th() {
+    let mut exp = Experiment::build(cfg("fedel")).unwrap();
+    let res = exp.run(None).unwrap();
+    let t_th = exp.ctx.t_th;
+    let mean_round = fedel::util::stats::mean(
+        &res.records.iter().map(|r| r.round_secs - 30.0).collect::<Vec<_>>(),
+    );
+    // Appendix B.3: FedEL deviates from T_th by 3-19%
+    assert!(
+        mean_round < t_th * 1.6 && mean_round > t_th * 0.3,
+        "mean round {mean_round} vs T_th {t_th}"
+    );
+}
+
+#[test]
+fn prox_variants_stay_closer_to_global() {
+    // FedProx's proximal term should reduce client drift: final model of
+    // fedprox+fedel stays closer to its starting point per round than
+    // plain fedel under identical seeds (weak proxy: both converge).
+    let plain = run_one(cfg("fedel")).unwrap();
+    let prox = run_one(cfg("fedprox+fedel")).unwrap();
+    assert!(prox.final_acc.is_finite() && plain.final_acc.is_finite());
+    assert!(prox.final_acc > 0.0);
+}
+
+#[test]
+fn fednova_fedel_converges() {
+    let res = run_one(cfg("fednova+fedel")).unwrap();
+    let curve = res.acc_curve();
+    assert!(res.final_acc >= curve[0].1, "{curve:?}");
+}
+
+#[test]
+fn coverage_grows_over_rounds_for_fedel() {
+    // union of trained tensors grows as windows slide
+    let mut c = cfg("fedel");
+    c.record_selections = true;
+    let res = run_one(c).unwrap();
+    // restrict to a straggler (client 4, scale 4.0): its per-round window
+    // is a strict subset, so the union must keep growing as windows slide
+    let union_at = |upto: usize| -> usize {
+        let mut seen = std::collections::BTreeSet::new();
+        for (r, c, sel) in &res.selections {
+            if *r <= upto && *c == 4 {
+                seen.extend(sel.iter().copied());
+            }
+        }
+        seen.len()
+    };
+    assert!(union_at(19) > union_at(0), "{} vs {}", union_at(19), union_at(0));
+}
+
+#[test]
+fn heterofl_coverage_is_fractional() {
+    let mut c = cfg("heterofl");
+    c.record_selections = true;
+    let mut exp = Experiment::build(c).unwrap();
+    let res = exp.run(None).unwrap();
+    // slow clients train a strict subset of elements -> mean_coverage < 1
+    assert!(res.records[0].mean_coverage < 1.0);
+    assert!(res.records[0].mean_coverage > 0.0);
+}

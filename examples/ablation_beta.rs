@@ -1,13 +1,22 @@
 //! β ablation example (Fig 11): sweep the importance-blend parameter on
 //! the quickstart workload and print the accuracy-vs-β curve.
 //!
-//!   cargo run --release --example ablation_beta
+//! An optional first argument pins the executor thread count (default: one
+//! worker per core, where the engine supports concurrent sessions). The
+//! sweep is bitwise-reproducible at any setting — client execution joins
+//! in plan order by design.
+//!
+//!   cargo run --release --features pjrt --example ablation_beta [-- threads]
 
 use fedel::config::{ExperimentCfg, FleetSpec};
 use fedel::report::Table;
 use fedel::sim::experiment::Experiment;
 
 fn main() -> anyhow::Result<()> {
+    let threads: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
     let base = ExperimentCfg {
         model: "mlp".into(),
         fleet: FleetSpec::Small10,
@@ -16,6 +25,7 @@ fn main() -> anyhow::Result<()> {
         lr: 0.05,
         eval_every: 5,
         eval_batches: 8,
+        exec_threads: threads,
         ..Default::default()
     };
     let mut t = Table::new("beta ablation (mlp, small10)", &["beta", "final_acc", "sim_h"]);

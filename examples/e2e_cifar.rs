@@ -7,13 +7,18 @@
 //! every local step executes an AOT-compiled HLO artifact (Pallas masked
 //! SGD + Pallas softmax-xent inside) through the PJRT CPU client, while
 //! the wall clock is simulated from the calibrated Jetson timing model.
-//! Logs the loss/accuracy curve to target/e2e_cifar_curve.csv.
+//! Each round's clients execute through engine sessions (PJRT rounds run
+//! sequentially until concurrent xla-wrapper use is validated — see
+//! Engine::parallel_sessions). Logs the loss/accuracy curve to
+//! target/e2e_cifar_curve.csv and a machine-readable per-round log to
+//! target/e2e_cifar_<strategy>.jsonl via the JSONL observer.
 //!
-//!   make artifacts && cargo run --release --example e2e_cifar [-- rounds]
+//!   make artifacts && cargo run --release --features pjrt --example e2e_cifar [-- rounds]
 
 use std::path::Path;
 
 use fedel::config::{ExperimentCfg, FleetSpec};
+use fedel::fl::observer::JsonlObserver;
 use fedel::metrics::energy::energy_report;
 use fedel::report::{render_table1, table1_rows};
 use fedel::sim::experiment::Experiment;
@@ -48,7 +53,14 @@ fn main() -> anyhow::Result<()> {
     let mut results = Vec::new();
     for name in ["fedavg", "fedel"] {
         let t0 = std::time::Instant::now();
-        let res = exp.run(Some(name))?;
+        let jsonl_path = format!("target/e2e_cifar_{name}.jsonl");
+        let mut jsonl = JsonlObserver::create(Path::new(&jsonl_path))?;
+        let res = exp.run_observed(Some(name), &mut jsonl)?;
+        // Log loss is worth a warning, not worth discarding the run.
+        match jsonl.take_error() {
+            Some(e) => eprintln!("   WARNING: round log {jsonl_path} lost: {e}"),
+            None => println!("   round log streamed to {jsonl_path}"),
+        }
         println!(
             "== {name}: final acc {:.2}%, simulated {}, wall {:.0}s",
             100.0 * res.final_acc,

@@ -1,12 +1,45 @@
 //! Large-scale simulation: 100 heterogeneous clients over the paper's four
 //! device types {1, 1/2, 1/3, 1/4}x, TinyImageNet-like VGG. Mirrors the
-//! paper's Sec. 5.1 large-scale scenario.
+//! paper's Sec. 5.1 large-scale scenario. Local training of the 100
+//! clients fans out across host cores on engines with validated
+//! concurrent sessions (results are identical to a sequential run; PJRT
+//! is gated sequential until validated), and progress is reported
+//! through a custom `RoundObserver` instead of the old `verbose` flag.
 //!
-//!   cargo run --release --example fleet_100 [-- rounds] [-- clients]
+//!   cargo run --release --features pjrt --example fleet_100 [-- rounds] [-- clients]
 
 use fedel::config::{ExperimentCfg, FleetSpec};
+use fedel::fl::observer::RoundObserver;
+use fedel::fl::server::{ClientOutcome, RoundRecord};
 use fedel::report::{render_table1, table1_rows};
 use fedel::sim::experiment::Experiment;
+use fedel::strategies::ClientPlan;
+
+/// Per-round progress line: participants, straggler cost, eval when run.
+struct Progress {
+    clients_done: usize,
+}
+
+impl RoundObserver for Progress {
+    fn on_round_start(&mut self, _round: usize, _plans: &[ClientPlan]) {
+        self.clients_done = 0;
+    }
+
+    fn on_client_done(&mut self, _round: usize, _plan: &ClientPlan, _out: &ClientOutcome) {
+        self.clients_done += 1;
+    }
+
+    fn on_round_end(&mut self, r: &RoundRecord) {
+        let eval = r
+            .eval_acc
+            .map(|a| format!(" acc={:.3}", a))
+            .unwrap_or_default();
+        eprintln!(
+            "round {:3}: {:3} clients trained, round {:6.0}s (incl comm), t={:9.0}s{eval}",
+            r.round, self.clients_done, r.round_secs, r.sim_time
+        );
+    }
+}
 
 fn main() -> anyhow::Result<()> {
     let mut args = std::env::args().skip(1);
@@ -22,7 +55,7 @@ fn main() -> anyhow::Result<()> {
         eval_every: 5,
         eval_batches: 8,
         slowest_round_secs: 161.9 * 60.0, // paper Table 2 TinyImageNet round
-        verbose: true,
+        exec_threads: 0,                  // one worker per host core
         ..Default::default()
     };
     println!("fleet_100: {clients} clients x {rounds} rounds, vgg_tinyin");
@@ -38,7 +71,8 @@ fn main() -> anyhow::Result<()> {
     let mut results = Vec::new();
     for name in ["fedavg", "timelyfl", "fedel"] {
         let t0 = std::time::Instant::now();
-        let res = exp.run(Some(name))?;
+        let mut progress = Progress { clients_done: 0 };
+        let res = exp.run_observed(Some(name), &mut progress)?;
         println!(
             "== {name}: final acc {:.2}%, simulated {}, wall {:.0}s",
             100.0 * res.final_acc,

@@ -1,7 +1,12 @@
 //! Quickstart: FedEL vs FedAvg on the fast MLP workload, 10-device
 //! heterogeneous fleet. Runs in a few seconds on the prebuilt artifacts:
 //!
-//!   make artifacts && cargo run --release --example quickstart
+//!   make artifacts && cargo run --release --features pjrt --example quickstart
+//!
+//! Each round's clients train through per-worker engine sessions — in
+//! parallel on engines with validated concurrent sessions (the mock
+//! engine today; PJRT is gated sequential until validated), and with
+//! bitwise-identical results at any `exec_threads` setting.
 
 use fedel::config::{ExperimentCfg, FleetSpec};
 use fedel::report::{render_table1, table1_rows};
@@ -16,6 +21,7 @@ fn main() -> anyhow::Result<()> {
         lr: 0.05,
         eval_every: 4,
         eval_batches: 8,
+        exec_threads: 0, // parallel client execution, one worker per core
         ..Default::default()
     };
     println!("quickstart: {} rounds of FL on `mlp`, 5 Xavier + 5 Orin", cfg.rounds);

@@ -5,6 +5,7 @@
 use fedel::elastic::importance::local_importance;
 use fedel::report::bench::{banner, Workload};
 use fedel::report::Table;
+use fedel::runtime::{Engine, TrainSession};
 use fedel::sim::experiment::Experiment;
 
 /// Cosine similarity of two importance vectors.
@@ -19,23 +20,25 @@ fn main() -> anyhow::Result<()> {
     banner("Figure 5", "tensor importance: FL clients vs centralized");
     let mut cfg = Workload::Cifar10Dev.cfg(42);
     cfg.rounds = 1;
-    let mut exp = Experiment::build(cfg)?;
+    let exp = Experiment::build(cfg)?;
     let m = exp.engine.manifest().clone();
     let params = m.load_init()?;
     let mask = vec![1.0f32; m.param_count];
     let nb = m.num_blocks;
 
-    // Per-client importance from one full-model probe step each.
+    // Per-client importance from one full-model probe step each, through
+    // one engine session.
+    let mut session = exp.engine.session();
     let mut client_imps: Vec<Vec<f64>> = Vec::new();
     for c in 0..exp.dataset.clients.len() {
         let (x, y) = exp.dataset.clients[c].sample_batch(&exp.dataset.spec, &m, 0);
-        let out = exp.engine.train_step(nb, &params, &x, &y, &mask, 0.05)?;
+        let out = session.train_step(nb, &params, &x, &y, &mask, 0.05)?;
         client_imps.push(local_importance(&out.sq_grads, 0.05));
     }
     // "Centralized" importance: probe on the iid test distribution.
     let (x, y) = exp.dataset.test_batches[0].clone();
     let central = local_importance(
-        &exp.engine.train_step(nb, &params, &x, &y, &mask, 0.05)?.sq_grads,
+        &session.train_step(nb, &params, &x, &y, &mask, 0.05)?.sq_grads,
         0.05,
     );
 

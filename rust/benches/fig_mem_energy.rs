@@ -6,8 +6,9 @@ use fedel::metrics::energy::energy_report;
 use fedel::metrics::memory::memory_bytes;
 use fedel::report::bench::{banner, rounds, Workload};
 use fedel::report::Table;
+use fedel::runtime::Engine;
 use fedel::sim::experiment::Experiment;
-use fedel::strategies::{by_name, table1_names};
+use fedel::strategies::{by_name, table1_names, Strategy};
 use fedel::util::stats::mean;
 
 fn main() -> anyhow::Result<()> {

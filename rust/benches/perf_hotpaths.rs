@@ -2,14 +2,13 @@
 //! criterion crate is unavailable offline — see util::prop / report::bench
 //! for the in-repo substrates). These feed EXPERIMENTS.md §Perf.
 
-use std::path::Path;
-
+use fedel::config::{ExperimentCfg, FleetSpec};
 use fedel::elastic::{select, SelectorInput};
 use fedel::fl::aggregate::{AggregateRule, MaskedAggregator};
 use fedel::manifest::tests_support::chain_manifest;
 use fedel::report::bench::{banner, time_median};
 use fedel::report::Table;
-use fedel::runtime::{Engine, PjrtEngine};
+use fedel::sim::experiment::Experiment;
 use fedel::timing::{DeviceProfile, TimingCfg, TimingModel};
 
 fn main() -> anyhow::Result<()> {
@@ -62,42 +61,113 @@ fn main() -> anyhow::Result<()> {
         String::new(),
     ]);
 
-    // --- PJRT engine step (if artifacts exist) --------------------------
-    let art = Path::new("artifacts/mlp");
-    if art.join("manifest.json").exists() {
-        let mut eng = PjrtEngine::open(art)?;
-        let man = eng.manifest().clone();
-        let params = man.load_init()?;
-        let x = vec![0.1f32; man.batch * man.input_shape.iter().product::<usize>()];
-        let y = vec![0i32; man.label_len];
-        let mask = vec![1.0f32; man.param_count];
-        eng.warm(&[man.num_blocks])?;
-        // warm-up execution
-        eng.train_step(man.num_blocks, &params, &x, &y, &mask, 0.05)?;
-        let d = time_median(21, || {
-            let out = eng
-                .train_step(man.num_blocks, &params, &x, &y, &mask, 0.05)
-                .unwrap();
-            std::hint::black_box(out);
-        });
-        let steps_s = 1.0 / d.as_secs_f64();
-        t.row(vec![
-            "PJRT train_step (mlp, full exit)".into(),
-            format!("{:.2}ms", d.as_secs_f64() * 1e3),
-            format!("{steps_s:.0} steps/s"),
-        ]);
-        let d = time_median(21, || {
-            std::hint::black_box(eng.eval_step(&params, &x, &y).unwrap());
-        });
-        t.row(vec![
-            "PJRT eval_step (mlp)".into(),
-            format!("{:.2}ms", d.as_secs_f64() * 1e3),
-            String::new(),
-        ]);
-    } else {
-        eprintln!("artifacts/mlp missing — skipping PJRT micro-benches (run `make artifacts`)");
-    }
+    // --- round throughput: sequential vs parallel client fan-out --------
+    // 32-client fedavg rounds on the mock engine; the only difference
+    // between the two runs is exec_threads (1 vs one-per-core). Results
+    // are bitwise identical — this measures pure host wall-clock.
+    round_throughput(&mut t, "mock:8x100", 32, 32)?;
+    round_throughput(&mut t, "mock:8x20000", 32, 4)?;
+
+    pjrt_benches(&mut t)?;
 
     t.print();
+    Ok(())
+}
+
+/// Wall-clock of full experiment rounds at exec_threads = 1 vs 0, printed
+/// with the parallel speedup.
+fn round_throughput(
+    t: &mut Table,
+    model: &str,
+    clients: usize,
+    local_steps: usize,
+) -> anyhow::Result<()> {
+    let cfg = |threads: usize| ExperimentCfg {
+        model: model.into(),
+        strategy: "fedavg".into(),
+        fleet: FleetSpec::Scales(vec![1.0; clients]),
+        rounds: 2,
+        local_steps,
+        lr: 0.1,
+        eval_every: 1000, // eval only on the final round
+        eval_batches: 1,
+        slowest_round_secs: 3600.0,
+        exec_threads: threads,
+        ..Default::default()
+    };
+    let mut seq = Experiment::build(cfg(1))?;
+    let d_seq = time_median(5, || {
+        std::hint::black_box(seq.run(None).unwrap());
+    });
+    let mut par = Experiment::build(cfg(0))?;
+    let d_par = time_median(5, || {
+        std::hint::black_box(par.run(None).unwrap());
+    });
+    let speedup = d_seq.as_secs_f64() / d_par.as_secs_f64().max(1e-12);
+    t.row(vec![
+        format!("{model} round x{clients} clients, 1 thread"),
+        format!("{:.2}ms", d_seq.as_secs_f64() * 1e3),
+        String::new(),
+    ]);
+    t.row(vec![
+        format!("{model} round x{clients} clients, all cores"),
+        format!("{:.2}ms", d_par.as_secs_f64() * 1e3),
+        format!("{speedup:.2}x speedup"),
+    ]);
+    println!(
+        "round throughput [{model}, {clients} clients]: sequential {:.2}ms, parallel {:.2}ms -> {speedup:.2}x",
+        d_seq.as_secs_f64() * 1e3,
+        d_par.as_secs_f64() * 1e3,
+    );
+    Ok(())
+}
+
+// --- PJRT engine step (needs the `pjrt` feature + artifacts) ------------
+#[cfg(feature = "pjrt")]
+fn pjrt_benches(t: &mut Table) -> anyhow::Result<()> {
+    use fedel::runtime::{Engine, PjrtEngine, TrainSession};
+    use std::path::Path;
+
+    let art = Path::new("artifacts/mlp");
+    if !art.join("manifest.json").exists() {
+        eprintln!("artifacts/mlp missing — skipping PJRT micro-benches (run `make artifacts`)");
+        return Ok(());
+    }
+    let eng = PjrtEngine::open(art)?;
+    let man = eng.manifest().clone();
+    let params = man.load_init()?;
+    let x = vec![0.1f32; man.batch * man.input_shape.iter().product::<usize>()];
+    let y = vec![0i32; man.label_len];
+    let mask = vec![1.0f32; man.param_count];
+    eng.warm(&[man.num_blocks])?;
+    let mut sess = eng.session();
+    // warm-up execution
+    sess.train_step(man.num_blocks, &params, &x, &y, &mask, 0.05)?;
+    let d = time_median(21, || {
+        let out = sess
+            .train_step(man.num_blocks, &params, &x, &y, &mask, 0.05)
+            .unwrap();
+        std::hint::black_box(out);
+    });
+    let steps_s = 1.0 / d.as_secs_f64();
+    t.row(vec![
+        "PJRT train_step (mlp, full exit)".into(),
+        format!("{:.2}ms", d.as_secs_f64() * 1e3),
+        format!("{steps_s:.0} steps/s"),
+    ]);
+    let d = time_median(21, || {
+        std::hint::black_box(sess.eval_step(&params, &x, &y).unwrap());
+    });
+    t.row(vec![
+        "PJRT eval_step (mlp)".into(),
+        format!("{:.2}ms", d.as_secs_f64() * 1e3),
+        String::new(),
+    ]);
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_benches(_t: &mut Table) -> anyhow::Result<()> {
+    eprintln!("pjrt feature disabled — skipping PJRT micro-benches (build with --features pjrt)");
     Ok(())
 }

@@ -75,6 +75,10 @@ pub struct ExperimentCfg {
     pub eval_every: usize,
     pub eval_batches: usize,
     pub comm_secs: f64,
+    /// Host threads for the per-round client fan-out: 0 = one per core,
+    /// 1 = sequential, n = dedicated n-thread pool. Purely a wall-clock
+    /// knob — results are bitwise-identical at any setting.
+    pub exec_threads: usize,
     pub record_selections: bool,
     pub verbose: bool,
 }
@@ -97,6 +101,7 @@ impl Default for ExperimentCfg {
             eval_every: 5,
             eval_batches: 16,
             comm_secs: 30.0,
+            exec_threads: 0,
             record_selections: false,
             verbose: false,
         }
@@ -123,6 +128,7 @@ impl ExperimentCfg {
             eval_every: args.usize_or("eval-every", d.eval_every),
             eval_batches: args.usize_or("eval-batches", d.eval_batches),
             comm_secs: args.f64_or("comm-secs", d.comm_secs),
+            exec_threads: args.usize_or("threads", d.exec_threads),
             record_selections: args.flag("record-selections"),
             verbose: args.flag("verbose"),
         })
@@ -141,6 +147,7 @@ impl ExperimentCfg {
             ("t_th_factor", Json::Num(self.t_th_factor)),
             ("slowest_round_secs", Json::Num(self.slowest_round_secs)),
             ("seed", Json::Num(self.seed as f64)),
+            ("threads", Json::Num(self.exec_threads as f64)),
         ])
     }
 }

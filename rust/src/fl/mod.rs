@@ -1,10 +1,19 @@
 //! Federated learning core: masked aggregation (Appendix D Eq. 4), the
-//! O₁ convergence-bias diagnostic (Theorem D.5 / Table 4), and the server
-//! round loop driving engines + strategies.
+//! O₁ convergence-bias diagnostic (Theorem D.5 / Table 4), the staged
+//! server round loop (plan → execute-parallel → aggregate → observe)
+//! driving engine sessions + strategies, and the observer seam reporters
+//! hang off.
 
 pub mod aggregate;
 pub mod bias;
+pub mod observer;
 pub mod server;
 
 pub use aggregate::{AggregateRule, MaskedAggregator};
-pub use server::{run_experiment, ExperimentResult, RoundRecord, ServerCfg};
+pub use observer::{
+    ConsoleObserver, JsonlObserver, NullObserver, ObserverSet, RoundObserver, SelectionTrace,
+};
+pub use server::{
+    execute_plans, run_experiment, ClientOutcome, ExecPool, ExperimentResult, RoundInputs,
+    RoundRecord, ServerCfg,
+};

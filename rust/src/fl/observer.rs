@@ -1,0 +1,292 @@
+//! RoundObserver: the server's reporting seam.
+//!
+//! The round loop used to carry ad-hoc `verbose`/`record_selections`
+//! flags; every new reporting need meant another flag threaded through
+//! `ServerCfg`. Observers invert that: the server emits a small set of
+//! callbacks (round planned, client executed, eval measured, round
+//! closed) and reporters subscribe. Ordering contract — part of the
+//! parallel-determinism invariant: all callbacks fire on the coordinator
+//! thread, and `on_client_done` fires in *plan order* even when clients
+//! executed concurrently, so an observer's view is identical at any
+//! thread count.
+//!
+//! Shipped implementations:
+//! * [`NullObserver`] — the default no-op.
+//! * [`ConsoleObserver`] — the CLI's `--verbose` round log.
+//! * [`SelectionTrace`] — per-client tensor-selection traces
+//!   (Fig 10/14/18-20), previously the `record_selections` flag.
+//! * [`JsonlObserver`] — one JSON object per round to any writer, for
+//!   machine-readable experiment logs.
+//! * [`ObserverSet`] — fan-out to several observers.
+
+use std::io::Write;
+
+use crate::fl::server::{ClientOutcome, ExperimentResult, RoundRecord};
+use crate::strategies::ClientPlan;
+
+/// Callbacks the server emits while running an experiment. All methods
+/// default to no-ops so implementations override only what they need.
+pub trait RoundObserver {
+    /// A round was planned; `plans` is the execution order.
+    fn on_round_start(&mut self, _round: usize, _plans: &[ClientPlan]) {}
+
+    /// One client's local training finished. Fired on the coordinator
+    /// thread in plan order, after the parallel fan-out joined.
+    fn on_client_done(&mut self, _round: usize, _plan: &ClientPlan, _outcome: &ClientOutcome) {}
+
+    /// The global model was evaluated on the held-out test set.
+    fn on_eval(&mut self, _round: usize, _acc: f64, _loss: f64) {}
+
+    /// The round closed; `record` holds everything measured.
+    fn on_round_end(&mut self, _record: &RoundRecord) {}
+
+    /// The experiment finished (after the final eval).
+    fn on_experiment_end(&mut self, _result: &ExperimentResult) {}
+}
+
+/// Default observer: ignores everything.
+pub struct NullObserver;
+
+impl RoundObserver for NullObserver {}
+
+/// Fan-out to several observers, in push order.
+#[derive(Default)]
+pub struct ObserverSet<'a> {
+    obs: Vec<&'a mut dyn RoundObserver>,
+}
+
+impl<'a> ObserverSet<'a> {
+    pub fn new() -> Self {
+        ObserverSet { obs: Vec::new() }
+    }
+
+    pub fn push(&mut self, o: &'a mut dyn RoundObserver) {
+        self.obs.push(o);
+    }
+}
+
+impl RoundObserver for ObserverSet<'_> {
+    fn on_round_start(&mut self, round: usize, plans: &[ClientPlan]) {
+        for o in &mut self.obs {
+            o.on_round_start(round, plans);
+        }
+    }
+
+    fn on_client_done(&mut self, round: usize, plan: &ClientPlan, outcome: &ClientOutcome) {
+        for o in &mut self.obs {
+            o.on_client_done(round, plan, outcome);
+        }
+    }
+
+    fn on_eval(&mut self, round: usize, acc: f64, loss: f64) {
+        for o in &mut self.obs {
+            o.on_eval(round, acc, loss);
+        }
+    }
+
+    fn on_round_end(&mut self, record: &RoundRecord) {
+        for o in &mut self.obs {
+            o.on_round_end(record);
+        }
+    }
+
+    fn on_experiment_end(&mut self, result: &ExperimentResult) {
+        for o in &mut self.obs {
+            o.on_experiment_end(result);
+        }
+    }
+}
+
+/// The CLI round log (previously `ServerCfg::verbose`): one line per eval
+/// round on stderr.
+pub struct ConsoleObserver {
+    strategy: String,
+}
+
+impl ConsoleObserver {
+    pub fn new(strategy: &str) -> Self {
+        ConsoleObserver { strategy: strategy.to_string() }
+    }
+}
+
+impl RoundObserver for ConsoleObserver {
+    fn on_round_end(&mut self, r: &RoundRecord) {
+        if let Some(a) = r.eval_acc {
+            eprintln!(
+                "[{}] round {:4} t={:8.0}s loss={:.4} acc={:.4}",
+                self.strategy, r.round, r.sim_time, r.mean_train_loss, a
+            );
+        }
+    }
+}
+
+/// Records (round, client, selected tensor ids) traces — previously the
+/// `ServerCfg::record_selections` flag.
+#[derive(Default)]
+pub struct SelectionTrace {
+    selections: Vec<(usize, usize, Vec<usize>)>,
+}
+
+impl SelectionTrace {
+    pub fn into_inner(self) -> Vec<(usize, usize, Vec<usize>)> {
+        self.selections
+    }
+}
+
+impl RoundObserver for SelectionTrace {
+    fn on_client_done(&mut self, round: usize, plan: &ClientPlan, _outcome: &ClientOutcome) {
+        let sel: Vec<usize> = plan
+            .mask
+            .tensor_coverage()
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0.0)
+            .map(|(i, _)| i)
+            .collect();
+        self.selections.push((round, plan.client, sel));
+    }
+}
+
+/// Streams one JSON object per round (plus a final summary object) to any
+/// writer — the machine-readable counterpart of [`ConsoleObserver`].
+///
+/// Writes are best-effort during the run (a logging failure never aborts
+/// training); the first io error is retained and must be checked with
+/// [`JsonlObserver::take_error`] after the experiment if the log matters.
+pub struct JsonlObserver<W: Write> {
+    out: W,
+    error: Option<std::io::Error>,
+}
+
+impl JsonlObserver<std::io::BufWriter<std::fs::File>> {
+    /// Convenience: create/truncate a `.jsonl` file at `path`.
+    pub fn create(path: &std::path::Path) -> anyhow::Result<Self> {
+        let f = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("create {path:?}: {e}"))?;
+        Ok(JsonlObserver::new(std::io::BufWriter::new(f)))
+    }
+}
+
+impl<W: Write> JsonlObserver<W> {
+    pub fn new(out: W) -> Self {
+        JsonlObserver { out, error: None }
+    }
+
+    /// The first write/flush error encountered, if any.
+    pub fn take_error(&mut self) -> Option<std::io::Error> {
+        self.error.take()
+    }
+
+    fn record(&mut self, r: std::io::Result<()>) {
+        if let Err(e) = r {
+            self.error.get_or_insert(e);
+        }
+    }
+}
+
+impl<W: Write> RoundObserver for JsonlObserver<W> {
+    fn on_round_end(&mut self, r: &RoundRecord) {
+        let res = writeln!(self.out, "{}", r.to_json());
+        self.record(res);
+    }
+
+    fn on_experiment_end(&mut self, res: &ExperimentResult) {
+        use crate::util::json::Json;
+        let j = Json::obj(vec![
+            ("summary", Json::Bool(true)),
+            ("strategy", Json::Str(res.strategy.clone())),
+            ("rounds", Json::Num(res.records.len() as f64)),
+            ("sim_total_secs", Json::Num(res.sim_total_secs)),
+            ("final_acc", Json::Num(res.final_acc)),
+            ("final_loss", Json::Num(res.final_loss)),
+        ]);
+        let w = writeln!(self.out, "{j}");
+        self.record(w);
+        let f = self.out.flush();
+        self.record(f);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::strategies::MaskSpec;
+
+    fn plan(client: usize) -> ClientPlan {
+        ClientPlan {
+            client,
+            exit: 1,
+            mask: MaskSpec::Tensor(vec![1.0, 0.0, 1.0]),
+            local_steps: 1,
+            est_time: 1.0,
+        }
+    }
+
+    fn outcome(client: usize) -> ClientOutcome {
+        ClientOutcome {
+            client,
+            params: vec![0.0],
+            sq_grads: vec![0.0],
+            mean_loss: 0.5,
+        }
+    }
+
+    #[test]
+    fn selection_trace_records_nonzero_tensors() {
+        let mut t = SelectionTrace::default();
+        t.on_client_done(3, &plan(7), &outcome(7));
+        let sel = t.into_inner();
+        assert_eq!(sel, vec![(3, 7, vec![0, 2])]);
+    }
+
+    #[test]
+    fn observer_set_fans_out_in_order() {
+        #[derive(Default)]
+        struct Counter(Vec<usize>, usize);
+        impl RoundObserver for Counter {
+            fn on_client_done(&mut self, _r: usize, p: &ClientPlan, _o: &ClientOutcome) {
+                self.0.push(p.client);
+            }
+            fn on_round_end(&mut self, _r: &RoundRecord) {
+                self.1 += 1;
+            }
+        }
+        let mut a = Counter::default();
+        let mut b = Counter::default();
+        {
+            let mut set = ObserverSet::new();
+            set.push(&mut a);
+            set.push(&mut b);
+            set.on_client_done(0, &plan(2), &outcome(2));
+            set.on_client_done(0, &plan(5), &outcome(5));
+        }
+        assert_eq!(a.0, vec![2, 5]);
+        assert_eq!(b.0, vec![2, 5]);
+        assert_eq!(a.1, 0);
+    }
+
+    #[test]
+    fn jsonl_observer_emits_parseable_lines() {
+        let mut buf: Vec<u8> = Vec::new();
+        {
+            let mut o = JsonlObserver::new(&mut buf);
+            let r = RoundRecord {
+                round: 0,
+                round_secs: 10.0,
+                sim_time: 10.0,
+                mean_train_loss: 1.5,
+                participants: 2,
+                mean_coverage: 0.75,
+                o1: 0.0,
+                eval_acc: Some(0.5),
+                eval_loss: Some(1.0),
+                client_secs: vec![(0, 4.0), (1, 10.0)],
+            };
+            o.on_round_end(&r);
+        }
+        let text = String::from_utf8(buf).unwrap();
+        let j = crate::util::json::Json::parse(text.trim()).unwrap();
+        assert_eq!(j.f("round").unwrap(), 0.0);
+        assert_eq!(j.f("eval_acc").unwrap(), 0.5);
+    }
+}

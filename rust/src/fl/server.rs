@@ -1,25 +1,39 @@
-//! The FL server round loop: plan → local train → aggregate → observe.
+//! The FL server round loop, as four composable stages:
 //!
-//! Compute is *real* (engine executes the AOT artifacts); wall-clock is
-//! *simulated* from the timing model, exactly like the paper's 100-client
-//! evaluation (DESIGN.md §4). One round:
+//! 1. **plan** — the strategy emits per-client work (exit, mask, steps,
+//!    simulated cost) from the current global model.
+//! 2. **execute** — [`execute_plans`] fans the plans out across a rayon
+//!    thread pool; every worker drives its own [`TrainSession`] from the
+//!    shared [`Engine`], and results join back in *plan order*. Compute
+//!    is *real* (sessions execute the AOT artifacts); wall-clock is
+//!    *simulated* from the timing model, exactly like the paper's
+//!    100-client evaluation (DESIGN.md §4). FedProx's proximal correction
+//!    is applied client-side between steps when enabled.
+//! 3. **aggregate** — the server folds outcomes (still in plan order)
+//!    with the strategy's rule (Eq. 4 masked / FedAvg / FedNova) and
+//!    advances the simulated clock by the slowest participant plus a
+//!    communication constant.
+//! 4. **observe** — the strategy sees losses + importance signals
+//!    (FedEL's global tensor importance from the aggregated delta, the O₁
+//!    bias diagnostic from the round's masks); [`RoundObserver`]s see the
+//!    round record, per-client outcomes, and evals.
 //!
-//! 1. the strategy plans per-client work (exit, mask, steps, sim cost),
-//! 2. each planned client trains locally from the current global model
-//!    (FedProx's proximal correction applied between steps when enabled),
-//! 3. the server aggregates with the strategy's rule (Eq. 4 masked /
-//!    FedAvg / FedNova) and advances the simulated clock by the slowest
-//!    participant plus a communication constant,
-//! 4. the strategy observes losses + importance signals; the server
-//!    computes FedEL's global tensor importance from the aggregated model
-//!    delta and the O₁ bias diagnostic from the round's masks.
+//! Determinism invariant: because a session's output is a pure function
+//! of its inputs and aggregation folds in plan order on the coordinator
+//! thread, an experiment produces bitwise-identical [`ExperimentResult`]s
+//! at any `exec_threads` setting (proved by `tests/determinism.rs`).
+
+use rayon::prelude::*;
 
 use crate::data::FedDataset;
 use crate::elastic::importance::global_importance;
 use crate::fl::aggregate::MaskedAggregator;
 use crate::fl::bias::o1_bias;
-use crate::runtime::Engine;
+use crate::fl::observer::RoundObserver;
+use crate::manifest::Manifest;
+use crate::runtime::{Engine, TrainSession};
 use crate::strategies::{ClientPlan, FleetCtx, RoundFeedback, Strategy};
+use crate::util::json::Json;
 
 /// Server-side experiment configuration.
 #[derive(Clone, Debug)]
@@ -28,20 +42,15 @@ pub struct ServerCfg {
     pub eval_every: usize,
     /// Per-round communication/aggregation overhead (simulated seconds).
     pub comm_secs: f64,
-    /// Record per-round tensor selections (Fig 10/14/18-20 traces).
-    pub record_selections: bool,
-    pub verbose: bool,
+    /// Host threads for the client fan-out: 0 = one per core (rayon
+    /// default pool), 1 = fully sequential, n = a dedicated n-thread pool.
+    /// Results are identical at any setting.
+    pub exec_threads: usize,
 }
 
 impl Default for ServerCfg {
     fn default() -> Self {
-        ServerCfg {
-            rounds: 50,
-            eval_every: 5,
-            comm_secs: 30.0,
-            record_selections: false,
-            verbose: false,
-        }
+        ServerCfg { rounds: 50, eval_every: 5, comm_secs: 30.0, exec_threads: 0 }
     }
 }
 
@@ -66,6 +75,41 @@ pub struct RoundRecord {
     pub client_secs: Vec<(usize, f64)>,
 }
 
+impl RoundRecord {
+    /// Flat JSON object (one line of a `.jsonl` experiment log).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("round", Json::Num(self.round as f64)),
+            ("round_secs", Json::Num(self.round_secs)),
+            ("sim_time", Json::Num(self.sim_time)),
+            ("mean_train_loss", Json::Num(self.mean_train_loss)),
+            ("participants", Json::Num(self.participants as f64)),
+            ("mean_coverage", Json::Num(self.mean_coverage)),
+            ("o1", Json::Num(self.o1)),
+            ("eval_acc", self.eval_acc.map(Json::Num).unwrap_or(Json::Null)),
+            ("eval_loss", self.eval_loss.map(Json::Num).unwrap_or(Json::Null)),
+        ])
+    }
+}
+
+/// One client's finished local training, exactly as the execute stage
+/// hands it to aggregation and observers.
+#[derive(Clone, Debug)]
+pub struct ClientOutcome {
+    /// Which client trained (always equals the matching plan's `client`;
+    /// kept for observer sanity checks). Other plan facts — exit, mask,
+    /// est_time — are NOT duplicated here: read them from the plan.
+    pub client: usize,
+    /// Locally-trained parameters (started from the round's global).
+    /// The element mask the client trained under is NOT carried here —
+    /// it is re-derivable from the plan (`plan.mask.expand`), and keeping
+    /// it would double the join barrier's peak memory.
+    pub params: Vec<f32>,
+    /// Per-tensor Σ g² from the first local step (importance signal).
+    pub sq_grads: Vec<f64>,
+    pub mean_loss: f64,
+}
+
 #[derive(Clone, Debug)]
 pub struct ExperimentResult {
     pub strategy: String,
@@ -73,7 +117,14 @@ pub struct ExperimentResult {
     pub sim_total_secs: f64,
     pub final_acc: f64,
     pub final_loss: f64,
-    /// (round, client, selected tensor ids) when record_selections.
+    /// Final global model parameters (the determinism tests compare these
+    /// bitwise across thread counts).
+    pub final_params: Vec<f32>,
+    /// (round, client, selected tensor ids). Empty as returned by
+    /// [`run_experiment`] (and as seen by `on_experiment_end` observers);
+    /// `Experiment::run_observed` merges a
+    /// [`crate::fl::observer::SelectionTrace`]'s recordings in afterwards
+    /// when `record_selections` is set.
     pub selections: Vec<(usize, usize, Vec<usize>)>,
 }
 
@@ -115,37 +166,185 @@ impl ExperimentResult {
     }
 }
 
-fn evaluate(engine: &mut dyn Engine, ds: &FedDataset, params: &[f32]) -> (f64, f64) {
+/// Evaluate the global model over the held-out test set.
+fn evaluate(
+    session: &mut dyn TrainSession,
+    ds: &FedDataset,
+    params: &[f32],
+) -> anyhow::Result<(f64, f64)> {
     let mut acc = crate::runtime::EvalOut::default();
     for (x, y) in &ds.test_batches {
-        match engine.eval_step(params, x, y) {
-            Ok(e) => acc.merge(&e),
-            Err(err) => panic!("eval failed: {err}"),
+        let e = session
+            .eval_step(params, x, y)
+            .map_err(|err| anyhow::anyhow!("eval failed: {err}"))?;
+        acc.merge(&e);
+    }
+    Ok((acc.accuracy(), acc.mean_loss()))
+}
+
+/// Read-only inputs shared by every client of one round's execute stage.
+pub struct RoundInputs<'a> {
+    pub ds: &'a FedDataset,
+    pub ctx: &'a FleetCtx,
+    /// Global model at the start of the round.
+    pub global: &'a [f32],
+    pub round: usize,
+    /// FedProx proximal coefficient (0 = off).
+    pub prox_mu: f64,
+}
+
+/// How the execute stage schedules clients across host threads.
+pub enum ExecPool<'p> {
+    /// One client at a time on the coordinator thread.
+    Sequential,
+    /// rayon's global pool (one worker per core).
+    Global,
+    /// A caller-owned dedicated pool (built once per experiment).
+    Dedicated(&'p rayon::ThreadPool),
+}
+
+impl ExecPool<'_> {
+    /// Build the pool for a `ServerCfg::exec_threads` setting. A dedicated
+    /// pool is constructed once here, not per round.
+    fn build(threads: usize) -> anyhow::Result<Option<rayon::ThreadPool>> {
+        match threads {
+            0 | 1 => Ok(None),
+            n => rayon::ThreadPoolBuilder::new()
+                .num_threads(n)
+                .build()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("thread pool ({n} threads): {e}")),
         }
     }
-    (acc.accuracy(), acc.mean_loss())
+
+    fn from_cfg(threads: usize, dedicated: Option<&rayon::ThreadPool>) -> ExecPool<'_> {
+        match (threads, dedicated) {
+            (1, _) => ExecPool::Sequential,
+            (_, Some(pool)) => ExecPool::Dedicated(pool),
+            _ => ExecPool::Global,
+        }
+    }
+}
+
+/// Execute stage, single client: local SGD from the round's global model
+/// through one session. Pure in its inputs — no shared mutable state.
+fn execute_plan(
+    session: &mut dyn TrainSession,
+    inp: &RoundInputs<'_>,
+    m: &Manifest,
+    plan: &ClientPlan,
+) -> anyhow::Result<ClientOutcome> {
+    let client = &inp.ds.clients[plan.client];
+    let elem_mask = plan.mask.expand(m);
+    let mut p = inp.global.to_vec();
+    let mut sq: Vec<f64> = Vec::new();
+    let mut loss_acc = 0.0f64;
+    for step in 0..plan.local_steps {
+        let step_tag = (inp.round * inp.ctx.local_steps + step) as u64;
+        let (x, y) = client.sample_batch(&inp.ds.spec, m, step_tag);
+        let out = session.train_step(plan.exit, &p, &x, &y, &elem_mask, inp.ctx.lr as f32)?;
+        p = out.new_params;
+        loss_acc += out.loss as f64;
+        if step == 0 {
+            sq = out.sq_grads;
+        }
+        if inp.prox_mu > 0.0 {
+            // FedProx: w <- w - lr*mu*(w - w_global) on trained elems.
+            let f = (inp.ctx.lr * inp.prox_mu) as f32;
+            for k in 0..p.len() {
+                if elem_mask[k] != 0.0 {
+                    p[k] -= f * (p[k] - inp.global[k]);
+                }
+            }
+        }
+    }
+    Ok(ClientOutcome {
+        client: plan.client,
+        params: p,
+        sq_grads: sq,
+        mean_loss: loss_acc / plan.local_steps.max(1) as f64,
+    })
+}
+
+/// Execute stage, whole round: fan the plans out over the pool and join in
+/// plan order. Each worker drives its own session; outcomes are
+/// bitwise-independent of the scheduling mode.
+pub fn execute_plans(
+    engine: &dyn Engine,
+    inp: &RoundInputs<'_>,
+    plans: &[ClientPlan],
+    pool: ExecPool<'_>,
+) -> anyhow::Result<Vec<ClientOutcome>> {
+    let m = engine.manifest();
+    if matches!(pool, ExecPool::Sequential) || plans.len() <= 1 || !engine.parallel_sessions() {
+        let mut session = engine.session();
+        return plans
+            .iter()
+            .map(|plan| execute_plan(session.as_mut(), inp, m, plan))
+            .collect();
+    }
+    let fan_out = || {
+        // Collect per-plan results positionally (slice par_iter is an
+        // indexed iterator, so Vec order == plan order), then surface the
+        // first error in plan order — not in completion order — so even
+        // failures are deterministic.
+        let results: Vec<anyhow::Result<ClientOutcome>> = plans
+            .par_iter()
+            .map_init(
+                || engine.session(),
+                |session, plan| execute_plan(session.as_mut(), inp, m, plan),
+            )
+            .collect();
+        results.into_iter().collect::<anyhow::Result<Vec<ClientOutcome>>>()
+    };
+    match pool {
+        ExecPool::Dedicated(pool) => pool.install(fan_out),
+        _ => fan_out(),
+    }
 }
 
 /// Run one experiment to completion.
 pub fn run_experiment(
-    engine: &mut dyn Engine,
+    engine: &dyn Engine,
     ds: &FedDataset,
     strategy: &mut dyn Strategy,
     ctx: &FleetCtx,
     cfg: &ServerCfg,
+    observer: &mut dyn RoundObserver,
 ) -> anyhow::Result<ExperimentResult> {
     let m = engine.manifest().clone();
     anyhow::ensure!(m.param_count == ctx.manifest.param_count, "engine/ctx manifest mismatch");
+    anyhow::ensure!(cfg.eval_every > 0, "eval_every must be >= 1");
     let mut global = m.load_init().unwrap_or_else(|_| vec![0.0; m.param_count]);
     let mut records = Vec::with_capacity(cfg.rounds);
-    let mut selections = Vec::new();
     let mut sim_time = 0.0f64;
     let prox_mu = strategy.prox_mu();
+    // Eval reuses one coordinator-side session across rounds; a dedicated
+    // executor pool (exec_threads > 1) is likewise built once — and not at
+    // all for engines whose sessions aren't validated for concurrency.
+    let mut eval_session = engine.session();
+    let dedicated_pool = if engine.parallel_sessions() {
+        ExecPool::build(cfg.exec_threads)?
+    } else {
+        None
+    };
 
     for round in 0..cfg.rounds {
+        // -- plan ---------------------------------------------------------
         let plans: Vec<ClientPlan> = strategy.plan_round(round, ctx, &global);
         anyhow::ensure!(!plans.is_empty(), "strategy planned an empty round");
+        observer.on_round_start(round, &plans);
 
+        // -- execute (parallel fan-out, joined in plan order) --------------
+        let inputs = RoundInputs { ds, ctx, global: &global, round, prox_mu };
+        let outcomes = execute_plans(
+            engine,
+            &inputs,
+            &plans,
+            ExecPool::from_cfg(cfg.exec_threads, dedicated_pool.as_ref()),
+        )?;
+
+        // -- aggregate (deterministic fold in plan order) ------------------
         let mut agg = MaskedAggregator::new(m.param_count, strategy.aggregate_rule());
         let mut fb = RoundFeedback::default();
         let mut tensor_masks: Vec<Vec<f32>> = Vec::with_capacity(plans.len());
@@ -153,57 +352,32 @@ pub fn run_experiment(
         let mut coverage = Vec::with_capacity(plans.len());
         let mut round_secs = 0.0f64;
         let mut client_secs = Vec::with_capacity(plans.len());
-
-        for plan in &plans {
-            let client = &ds.clients[plan.client];
+        for (plan, out) in plans.iter().zip(&outcomes) {
+            let weight = ds.clients[plan.client].num_samples as f64;
+            // Re-expand the element mask from the plan rather than carrying
+            // it through the join barrier: an O(P) write per client here is
+            // the same order as agg.add itself, while carrying it would
+            // hold N extra param-sized buffers at the barrier.
             let elem_mask = plan.mask.expand(&m);
-            let mut p = global.clone();
-            let mut sq: Vec<f64> = Vec::new();
-            let mut loss_acc = 0.0f64;
-            for step in 0..plan.local_steps {
-                let step_tag = (round * ctx.local_steps + step) as u64;
-                let (x, y) = client.sample_batch(&ds.spec, &m, step_tag);
-                let out = engine.train_step(plan.exit, &p, &x, &y, &elem_mask, ctx.lr as f32)?;
-                p = out.new_params;
-                loss_acc += out.loss as f64;
-                if step == 0 {
-                    sq = out.sq_grads;
-                }
-                if prox_mu > 0.0 {
-                    // FedProx: w <- w - lr*mu*(w - w_global) on trained elems.
-                    let f = (ctx.lr * prox_mu) as f32;
-                    for k in 0..p.len() {
-                        if elem_mask[k] != 0.0 {
-                            p[k] -= f * (p[k] - global[k]);
-                        }
-                    }
-                }
-            }
-            let mean_loss = loss_acc / plan.local_steps.max(1) as f64;
-            agg.add(&p, &elem_mask, client.num_samples as f64, plan.local_steps, &global);
-            fb.per_client.push((plan.client, sq, mean_loss));
+            agg.add(&out.params, &elem_mask, weight, plan.local_steps, &global);
             let cov = plan.mask.tensor_coverage();
             coverage.push(
                 cov.iter().map(|&c| c as f64).sum::<f64>() / cov.len().max(1) as f64,
             );
             tensor_masks.push(cov);
-            losses.push(mean_loss);
+            losses.push(out.mean_loss);
             round_secs = round_secs.max(plan.est_time);
             client_secs.push((plan.client, plan.est_time));
-            if cfg.record_selections {
-                let sel: Vec<usize> = plan
-                    .mask
-                    .tensor_coverage()
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, &c)| c > 0.0)
-                    .map(|(i, _)| i)
-                    .collect();
-                selections.push((round, plan.client, sel));
-            }
+            observer.on_client_done(round, plan, out);
+        }
+        let new_global = agg.finish(&global);
+        // Consume the outcomes into the strategy feedback (moves sq_grads,
+        // no clone) now that observers are done borrowing them.
+        for (plan, out) in plans.iter().zip(outcomes) {
+            fb.per_client.push((plan.client, out.sq_grads, out.mean_loss));
         }
 
-        let new_global = agg.finish(&global);
+        // -- observe -------------------------------------------------------
         fb.global_importance = global_importance(&m, &new_global, &global, ctx.lr);
         let o1 = o1_bias(&tensor_masks);
         strategy.observe(&fb, ctx);
@@ -214,23 +388,13 @@ pub fn run_experiment(
 
         let do_eval = round % cfg.eval_every == cfg.eval_every - 1 || round + 1 == cfg.rounds;
         let (eval_acc, eval_loss) = if do_eval {
-            let (a, l) = evaluate(engine, ds, &global);
+            let (a, l) = evaluate(eval_session.as_mut(), ds, &global)?;
+            observer.on_eval(round, a, l);
             (Some(a), Some(l))
         } else {
             (None, None)
         };
-        if cfg.verbose {
-            if let Some(a) = eval_acc {
-                eprintln!(
-                    "[{}] round {round:4} t={:8.0}s loss={:.4} acc={:.4}",
-                    strategy.name(),
-                    sim_time,
-                    crate::util::stats::mean(&losses),
-                    a
-                );
-            }
-        }
-        records.push(RoundRecord {
+        let record = RoundRecord {
             round,
             round_secs,
             sim_time,
@@ -241,16 +405,27 @@ pub fn run_experiment(
             eval_acc,
             eval_loss,
             client_secs,
-        });
+        };
+        observer.on_round_end(&record);
+        records.push(record);
     }
 
-    let (final_acc, final_loss) = evaluate(engine, ds, &global);
-    Ok(ExperimentResult {
+    // The last round always evaluated (do_eval is forced on it), so reuse
+    // that score instead of re-running the whole test set on identical
+    // params; the fallback only fires for rounds == 0.
+    let (final_acc, final_loss) = match records.last().and_then(|r| r.eval_acc.zip(r.eval_loss)) {
+        Some((a, l)) => (a, l),
+        None => evaluate(eval_session.as_mut(), ds, &global)?,
+    };
+    let result = ExperimentResult {
         strategy: strategy.name().to_string(),
         records,
         sim_total_secs: sim_time,
         final_acc,
         final_loss,
-        selections,
-    })
+        final_params: global,
+        selections: Vec::new(),
+    };
+    observer.on_experiment_end(&result);
+    Ok(result)
 }

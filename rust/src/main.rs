@@ -8,12 +8,14 @@
 //!
 //! Examples:
 //!   fedel train --model mlp --strategy fedel --fleet small10 --rounds 40
+//!   fedel train --model mock:8x100 --threads 1 --jsonl rounds.jsonl
 //!   fedel compare --model mock:8x100 --strategies fedavg,fedel --rounds 20
 //!   fedel inspect --model vgg_cifar
 
 use std::path::Path;
 
 use fedel::config::ExperimentCfg;
+use fedel::fl::observer::JsonlObserver;
 use fedel::manifest;
 use fedel::report::{render_table1, table1_rows, Table};
 use fedel::sim::experiment::Experiment;
@@ -46,11 +48,26 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let mut cfg = ExperimentCfg::from_args(args)?;
     cfg.verbose = true;
     let out_json = args.get("out").map(|s| s.to_string());
+    let out_jsonl = args.get("jsonl").map(|s| s.to_string());
     args.check_unused()?;
     println!("config: {}", cfg.to_json());
     let t0 = std::time::Instant::now();
     let mut exp = Experiment::build(cfg)?;
-    let res = exp.run(None)?;
+    // A failed round log must not discard a completed run: remember the
+    // error, print the results regardless, and fail the exit code at the
+    // end.
+    let mut log_err: Option<String> = None;
+    let res = if let Some(path) = &out_jsonl {
+        let mut jsonl = JsonlObserver::create(Path::new(path))?;
+        let res = exp.run_observed(None, &mut jsonl)?;
+        match jsonl.take_error() {
+            Some(e) => log_err = Some(format!("writing {path}: {e}")),
+            None => println!("round log streamed to {path}"),
+        }
+        res
+    } else {
+        exp.run(None)?
+    };
     println!(
         "\n{}: {} rounds, simulated {}, final acc {:.2}% (ppl {:.2}), wall {:.1}s",
         res.strategy,
@@ -75,6 +92,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         ]);
         std::fs::write(&path, j.to_string_pretty())?;
         println!("wrote {path}");
+    }
+    if let Some(e) = log_err {
+        anyhow::bail!("round log lost: {e}");
     }
     Ok(())
 }

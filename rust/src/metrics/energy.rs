@@ -69,6 +69,7 @@ mod tests {
             sim_total_secs: round_secs,
             final_acc: 0.0,
             final_loss: 0.0,
+            final_params: vec![],
             selections: vec![],
         }
     }

@@ -128,6 +128,7 @@ impl Workload {
             eval_every: (rounds / 8).max(2),
             eval_batches: if full { 16 } else { 6 },
             comm_secs: 30.0,
+            exec_threads: 0,
             record_selections: false,
             verbose: false,
         }

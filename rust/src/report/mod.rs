@@ -175,6 +175,7 @@ mod tests {
             sim_total_secs: times_accs.last().map(|&(t, _)| t).unwrap_or(0.0),
             final_acc,
             final_loss: 1.0,
+            final_params: vec![],
             selections: vec![],
         }
     }

@@ -1,4 +1,5 @@
-//! Mock engine: closed-form compute with the exact `Engine` interface.
+//! Mock engine: closed-form compute with the exact `Engine`/`TrainSession`
+//! interface.
 //!
 //! Loss is a masked quadratic pulled toward a data-dependent target:
 //!     L(p) = 0.5 / P_e * sum_{k reachable at exit e} (p_k - t_k(x))^2
@@ -8,11 +9,16 @@
 //! gradients are all exact, so every coordinator policy (DP selection,
 //! sliding window, importance adjustment, aggregation) can be tested
 //! deterministically without PJRT or artifacts.
+//!
+//! The engine itself is immutable shared state (manifest + global target);
+//! each [`MockSession`] owns a per-session scratch buffer for the
+//! data-dependent target, so concurrent sessions never contend and a
+//! step's output is a pure function of its arguments.
 
 use crate::manifest::Manifest;
 use crate::util::rng::Rng;
 
-use super::{check_shapes, Engine, EvalOut, TrainOut};
+use super::{check_shapes, Engine, EvalOut, TrainOut, TrainSession};
 
 pub struct MockEngine {
     manifest: Manifest,
@@ -44,21 +50,23 @@ impl MockEngine {
             .collect()
     }
 
-    fn target_for(&self, x: &[f32]) -> Vec<f32> {
+    /// Write the data-dependent target t(x) into `out` (fully overwritten:
+    /// session scratch must not leak state between steps).
+    fn fill_target_for(&self, x: &[f32], out: &mut Vec<f32>) {
         // Cheap deterministic hash of the batch -> per-tensor shift.
         let mut h = 0u64;
         for &v in x.iter().take(16) {
             h = h.wrapping_mul(0x100000001B3).wrapping_add(v.to_bits() as u64);
         }
         let mut rng = Rng::new(h);
-        let mut t = self.target.clone();
+        out.clear();
+        out.extend_from_slice(&self.target);
         for ti in &self.manifest.tensors {
             let shift = rng.normal_f32() * self.data_shift;
-            for v in &mut t[ti.offset..ti.offset + ti.size] {
+            for v in &mut out[ti.offset..ti.offset + ti.size] {
                 *v += shift;
             }
         }
-        t
     }
 }
 
@@ -67,6 +75,20 @@ impl Engine for MockEngine {
         &self.manifest
     }
 
+    fn session(&self) -> Box<dyn TrainSession + '_> {
+        Box::new(MockSession { engine: self, target_scratch: Vec::new() })
+    }
+}
+
+/// One mock execution stream: borrows the engine's immutable target and
+/// keeps a private scratch buffer so parallel sessions never allocate or
+/// contend on the hot path.
+pub struct MockSession<'a> {
+    engine: &'a MockEngine,
+    target_scratch: Vec<f32>,
+}
+
+impl TrainSession for MockSession<'_> {
     fn train_step(
         &mut self,
         exit: usize,
@@ -76,22 +98,24 @@ impl Engine for MockEngine {
         mask: &[f32],
         lr: f32,
     ) -> anyhow::Result<TrainOut> {
-        check_shapes(&self.manifest, exit, params, x, y, mask)?;
-        let reach = self.reachable(exit);
-        let target = self.target_for(x);
-        let k = self.manifest.tensors.len();
+        let e = self.engine;
+        check_shapes(&e.manifest, exit, params, x, y, mask)?;
+        let reach = e.reachable(exit);
+        e.fill_target_for(x, &mut self.target_scratch);
+        let target = &self.target_scratch;
+        let k = e.manifest.tensors.len();
         let mut new_params = params.to_vec();
         let mut sq_grads = vec![0.0f64; k];
         let mut loss = 0.0f64;
         let mut n_reach = 0usize;
-        for (i, t) in self.manifest.tensors.iter().enumerate() {
+        for (i, t) in e.manifest.tensors.iter().enumerate() {
             if !reach[i] {
                 continue;
             }
             n_reach += t.size;
         }
         let scale = 1.0 / n_reach.max(1) as f32;
-        for (i, t) in self.manifest.tensors.iter().enumerate() {
+        for (i, t) in e.manifest.tensors.iter().enumerate() {
             if !reach[i] {
                 continue;
             }
@@ -108,16 +132,17 @@ impl Engine for MockEngine {
 
     fn eval_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> anyhow::Result<EvalOut> {
         let _ = (x, y);
+        let e = self.engine;
         // Distance of the full parameter vector to the *global* target maps
         // to a pseudo-accuracy in (0, 1]: closer == higher.
-        let p = self.manifest.param_count as f64;
+        let p = e.manifest.param_count as f64;
         let mse: f64 = params
             .iter()
-            .zip(&self.target)
+            .zip(&e.target)
             .map(|(&a, &b)| ((a - b) as f64).powi(2))
             .sum::<f64>()
             / p;
-        let rows = self.manifest.label_len as f64;
+        let rows = e.manifest.label_len as f64;
         let acc = 1.0 / (1.0 + mse);
         Ok(EvalOut { correct: acc * rows, loss_sum: mse * rows, rows })
     }
@@ -140,14 +165,15 @@ mod tests {
 
     #[test]
     fn full_mask_training_reduces_loss() {
-        let mut e = engine();
+        let e = engine();
         let m = e.manifest().clone();
         let (x, y) = batch(&m);
         let mask = vec![1.0f32; m.param_count];
         let mut p = vec![0.0f32; m.param_count];
+        let mut s = e.session();
         let mut last = f32::MAX;
         for _ in 0..50 {
-            let out = e.train_step(m.num_blocks, &p, &x, &y, &mask, 0.5).unwrap();
+            let out = s.train_step(m.num_blocks, &p, &x, &y, &mask, 0.5).unwrap();
             p = out.new_params;
             assert!(out.loss <= last * 1.0001);
             last = out.loss;
@@ -157,11 +183,12 @@ mod tests {
 
     #[test]
     fn zero_mask_freezes_params() {
-        let mut e = engine();
+        let e = engine();
         let m = e.manifest().clone();
         let (x, y) = batch(&m);
         let p = vec![0.3f32; m.param_count];
-        let out = e.train_step(1, &p, &x, &y, &vec![0.0; m.param_count], 0.5).unwrap();
+        let mut s = e.session();
+        let out = s.train_step(1, &p, &x, &y, &vec![0.0; m.param_count], 0.5).unwrap();
         assert_eq!(out.new_params, p);
         // but gradients (importance) are still reported
         assert!(out.sq_grads.iter().any(|&s| s > 0.0));
@@ -169,11 +196,12 @@ mod tests {
 
     #[test]
     fn exit_limits_gradient_scope() {
-        let mut e = engine();
+        let e = engine();
         let m = e.manifest().clone();
         let (x, y) = batch(&m);
         let p = vec![0.3f32; m.param_count];
-        let out = e.train_step(1, &p, &x, &y, &vec![1.0; m.param_count], 0.5).unwrap();
+        let mut s = e.session();
+        let out = s.train_step(1, &p, &x, &y, &vec![1.0; m.param_count], 0.5).unwrap();
         // block 1 body + head1 tensors untouched at exit 1
         for (i, t) in m.tensors.iter().enumerate() {
             let moved = (t.offset..t.offset + t.size).any(|j| out.new_params[j] != p[j]);
@@ -184,28 +212,52 @@ mod tests {
 
     #[test]
     fn eval_accuracy_improves_with_training() {
-        let mut e = engine();
+        let e = engine();
         let m = e.manifest().clone();
         let (x, y) = batch(&m);
         let mask = vec![1.0f32; m.param_count];
         let mut p = vec![0.0f32; m.param_count];
-        let before = e.eval_step(&p, &x, &y).unwrap().accuracy();
+        let mut s = e.session();
+        let before = s.eval_step(&p, &x, &y).unwrap().accuracy();
         for _ in 0..60 {
-            p = e.train_step(m.num_blocks, &p, &x, &y, &mask, 0.5).unwrap().new_params;
+            p = s.train_step(m.num_blocks, &p, &x, &y, &mask, 0.5).unwrap().new_params;
         }
-        let after = e.eval_step(&p, &x, &y).unwrap().accuracy();
+        let after = s.eval_step(&p, &x, &y).unwrap().accuracy();
         assert!(after > before, "{before} -> {after}");
     }
 
     #[test]
     fn shape_validation_errors() {
-        let mut e = engine();
+        let e = engine();
         let m = e.manifest().clone();
         let (x, y) = batch(&m);
         let p = vec![0.0f32; m.param_count];
         let mask = vec![1.0f32; m.param_count];
-        assert!(e.train_step(0, &p, &x, &y, &mask, 0.1).is_err());
-        assert!(e.train_step(9, &p, &x, &y, &mask, 0.1).is_err());
-        assert!(e.train_step(1, &p[1..], &x, &y, &mask, 0.1).is_err());
+        let mut s = e.session();
+        assert!(s.train_step(0, &p, &x, &y, &mask, 0.1).is_err());
+        assert!(s.train_step(9, &p, &x, &y, &mask, 0.1).is_err());
+        assert!(s.train_step(1, &p[1..], &x, &y, &mask, 0.1).is_err());
+    }
+
+    #[test]
+    fn scratch_reuse_does_not_change_results() {
+        // A reused session (sequential path) and a fresh session (parallel
+        // path) must produce identical outputs for the same call.
+        let e = engine();
+        let m = e.manifest().clone();
+        let (x, y) = batch(&m);
+        let (x2, y2) = {
+            let mut x2 = x.clone();
+            x2[0] = -1.5;
+            (x2, y.clone())
+        };
+        let p = vec![0.2f32; m.param_count];
+        let mask = vec![1.0f32; m.param_count];
+        let mut reused = e.session();
+        reused.train_step(m.num_blocks, &p, &x2, &y2, &mask, 0.3).unwrap();
+        let a = reused.train_step(m.num_blocks, &p, &x, &y, &mask, 0.3).unwrap();
+        let b = e.session().train_step(m.num_blocks, &p, &x, &y, &mask, 0.3).unwrap();
+        assert_eq!(a.new_params, b.new_params);
+        assert_eq!(a.sq_grads, b.sq_grads);
     }
 }

@@ -1,16 +1,39 @@
 //! Runtime: load + execute the AOT artifacts from the L3 hot path.
 //!
-//! `Engine` is the narrow waist between the FL coordinator and the
-//! compute substrate. `PjrtEngine` (pjrt.rs) is the production engine:
-//! it loads HLO text through the `xla` crate, compiles one executable per
-//! early-exit lazily on the PJRT CPU client, and keeps them cached.
-//! `MockEngine` (mock.rs) is a closed-form pure-rust engine with the same
-//! interface, backing the engine-independent unit/property tests.
+//! The compute interface is split in two:
+//!
+//! * [`Engine`] is an immutable, `Send + Sync` *factory*: it owns the
+//!   expensive shared substrate (manifest, compiled-executable cache,
+//!   PJRT client / mock targets) and hands out sessions. One engine is
+//!   built per experiment and shared by reference across worker threads.
+//! * [`TrainSession`] owns all mutable per-client execution state
+//!   (per-session executable handles on PJRT, scratch buffers on the
+//!   mock engine) and exposes the actual `train_step`/`eval_step` calls.
+//!   Sessions are `Send` but not shared: each worker in the server's
+//!   parallel fan-out spawns its own via [`Engine::session`].
+//!
+//! The *schedule* (which exit, which mask, how many steps) is entirely
+//! the coordinator's business — exactly the paper's split between system
+//! policy (L3) and compute (L1/L2). The design invariant on top of the
+//! split: a session's outputs depend only on the call arguments, never on
+//! which session or thread runs them, so the server can fan a round out
+//! over N threads and still aggregate bitwise-identical results in plan
+//! order (see `fl::server` and `tests/determinism.rs`).
+//!
+//! `PjrtEngine` (pjrt.rs, behind the `pjrt` cargo feature) is the
+//! production engine: it loads HLO text through the `xla` crate, compiles
+//! one executable per early-exit lazily on the PJRT CPU client, and keeps
+//! them cached behind a mutex; sessions clone cheap `Arc` handles so the
+//! lock is never held during execution. `MockEngine` (mock.rs) is a
+//! closed-form pure-rust engine with the same interface, backing the
+//! engine-independent unit/property tests.
 
 pub mod mock;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 pub use mock::MockEngine;
+#[cfg(feature = "pjrt")]
 pub use pjrt::PjrtEngine;
 
 use crate::manifest::Manifest;
@@ -64,13 +87,29 @@ impl EvalOut {
     }
 }
 
-/// The compute interface the coordinator drives. One SGD step at a time:
-/// the *schedule* (which exit, which mask, how many steps) is entirely the
-/// coordinator's business — exactly the paper's split between system
-/// policy (L3) and compute (L1/L2).
-pub trait Engine {
+/// Shared, thread-safe compute substrate. The server holds one engine per
+/// experiment and spawns one [`TrainSession`] per worker when executing a
+/// round in parallel.
+pub trait Engine: Send + Sync {
     fn manifest(&self) -> &Manifest;
 
+    /// Spawn an independent execution session borrowing this engine's
+    /// shared state. Cheap: sessions lazily acquire executable handles /
+    /// scratch buffers on first use.
+    fn session(&self) -> Box<dyn TrainSession + '_>;
+
+    /// Whether concurrent sessions are validated for this engine. The
+    /// server's executor falls back to sequential when false, regardless
+    /// of its thread setting — correctness beats wall-clock.
+    fn parallel_sessions(&self) -> bool {
+        true
+    }
+}
+
+/// One client-execution stream: owns every piece of mutable compute state
+/// so concurrent sessions never contend. Outputs must be a pure function
+/// of the arguments (the parallel-determinism invariant).
+pub trait TrainSession: Send {
     /// One masked SGD step through the early-exit-`exit` artifact
     /// (`exit` in 1..=num_blocks).
     fn train_step(
@@ -112,6 +151,7 @@ pub(crate) fn check_shapes(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::manifest::tests_support::toy_manifest;
 
     #[test]
     fn eval_out_accumulates() {
@@ -132,5 +172,35 @@ mod tests {
         let e = EvalOut::default();
         assert_eq!(e.accuracy(), 0.0);
         assert_eq!(e.mean_loss(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_sessions_agree_bitwise() {
+        // Two sessions spawned from one shared engine reference must give
+        // identical outputs for identical inputs — the invariant the
+        // parallel round executor is built on.
+        let e = MockEngine::new(toy_manifest(), 1);
+        let engine: &dyn Engine = &e;
+        let m = engine.manifest().clone();
+        let x = vec![0.5f32; m.batch * m.input_shape.iter().product::<usize>()];
+        let y = vec![0i32; m.label_len];
+        let p = vec![0.1f32; m.param_count];
+        let mask = vec![1.0f32; m.param_count];
+        let mut s1 = engine.session();
+        let mut s2 = engine.session();
+        let a = s1.train_step(m.num_blocks, &p, &x, &y, &mask, 0.2).unwrap();
+        // s2 first runs an unrelated step: session history must not leak.
+        s2.train_step(1, &p, &x, &y, &mask, 0.9).unwrap();
+        let b = s2.train_step(m.num_blocks, &p, &x, &y, &mask, 0.2).unwrap();
+        assert_eq!(a.new_params, b.new_params);
+        assert_eq!(a.loss, b.loss);
+        assert_eq!(a.sq_grads, b.sq_grads);
+    }
+
+    #[test]
+    fn sessions_are_send() {
+        fn assert_send<T: Send>(_: T) {}
+        let e = MockEngine::new(toy_manifest(), 1);
+        assert_send(e.session());
     }
 }

@@ -1,28 +1,54 @@
-//! PJRT engine: the production compute path.
+//! PJRT engine: the production compute path (behind the `pjrt` feature).
 //!
 //! Loads `artifacts/<model>/train_exit_<e>.hlo.txt` (HLO *text* — the only
 //! interchange format xla_extension 0.5.1 accepts from jax >= 0.5, see
 //! DESIGN.md §2) and compiles on the PJRT CPU client. Executables are
-//! compiled lazily per exit and cached for the lifetime of the engine, so
-//! a fleet that never uses exit 7 never pays its compile time.
+//! compiled lazily per exit, cached for the lifetime of the engine behind
+//! a mutex, and handed to sessions as `Arc` handles: a session holds its
+//! own handle map, and the engine lock is never held across an execution
+//! *or a compile* (double-checked locking), so a cache miss on one exit
+//! never stalls sessions running other exits. A fleet
+//! that never uses exit 7 never pays its compile time; N parallel
+//! sessions executing the same exit share one compiled artifact.
 
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::manifest::Manifest;
 
-use super::{check_shapes, Engine, EvalOut, TrainOut};
+use super::{check_shapes, Engine, EvalOut, TrainOut, TrainSession};
+
+/// Lazily-built shared state: the compile cache plus perf counters.
+struct PjrtShared {
+    train_exes: HashMap<usize, Arc<xla::PjRtLoadedExecutable>>,
+    eval_exe: Option<Arc<xla::PjRtLoadedExecutable>>,
+    /// (exit -> cumulative executions), for the perf report.
+    exec_counts: HashMap<usize, u64>,
+    compile_secs: f64,
+}
 
 pub struct PjrtEngine {
     client: xla::PjRtClient,
     manifest: Manifest,
-    train_exes: HashMap<usize, xla::PjRtLoadedExecutable>,
-    eval_exe: Option<xla::PjRtLoadedExecutable>,
-    /// (exit -> cumulative executions), for the perf report.
-    pub exec_counts: HashMap<usize, u64>,
-    pub compile_secs: f64,
+    shared: Mutex<PjrtShared>,
 }
+
+// SAFETY: the PJRT C API requires clients and loaded executables to be
+// thread-safe (concurrent Execute calls on one executable are the norm on
+// the CPU plugin); the `xla` crate simply never declares it. All
+// lazily-mutated rust-side state lives behind `shared`'s Mutex.
+//
+// RESIDUAL RISK: the xla crate's own wrapper internals have not been
+// validated for concurrent use against a real xla_extension build, which
+// is why `parallel_sessions()` below keeps the server's fan-out
+// sequential. These impls still hand out Send sessions (the TrainSession
+// contract requires it), so code driving sessions concurrently outside
+// the server executor runs ahead of that validation — see the ROADMAP
+// follow-up before flipping the gate or doing so.
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
 
 impl PjrtEngine {
     /// Open the artifacts directory of one model, e.g.
@@ -33,14 +59,16 @@ impl PjrtEngine {
         Ok(PjrtEngine {
             client,
             manifest,
-            train_exes: HashMap::new(),
-            eval_exe: None,
-            exec_counts: HashMap::new(),
-            compile_secs: 0.0,
+            shared: Mutex::new(PjrtShared {
+                train_exes: HashMap::new(),
+                eval_exe: None,
+                exec_counts: HashMap::new(),
+                compile_secs: 0.0,
+            }),
         })
     }
 
-    fn compile(&mut self, path: &Path) -> anyhow::Result<xla::PjRtLoadedExecutable> {
+    fn compile(&self, path: &Path) -> anyhow::Result<(Arc<xla::PjRtLoadedExecutable>, f64)> {
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(path)
             .map_err(|e| anyhow::anyhow!("parse {path:?}: {e:?}"))?;
@@ -49,33 +77,54 @@ impl PjrtEngine {
             .client
             .compile(&comp)
             .map_err(|e| anyhow::anyhow!("compile {path:?}: {e:?}"))?;
-        self.compile_secs += t0.elapsed().as_secs_f64();
-        Ok(exe)
+        Ok((Arc::new(exe), t0.elapsed().as_secs_f64()))
     }
 
-    fn ensure_train(&mut self, exit: usize) -> anyhow::Result<()> {
-        if !self.train_exes.contains_key(&exit) {
-            let path = self.manifest.train_hlo_path(exit);
-            let exe = self.compile(&path)?;
-            self.train_exes.insert(exit, exe);
+    /// Get-or-compile the train executable for `exit` (no exec counting —
+    /// shared by `warm` and the counting fetch path). Compilation happens
+    /// OUTSIDE the lock so concurrent sessions executing cached exits (or
+    /// compiling other exits) never stall behind a multi-second compile;
+    /// two sessions racing on the same uncached exit may both compile, but
+    /// only the first insert wins and all sessions share that artifact.
+    fn ensure_train(&self, exit: usize) -> anyhow::Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.shared.lock().unwrap().train_exes.get(&exit) {
+            return Ok(exe.clone());
         }
-        Ok(())
+        let (exe, secs) = self.compile(&self.manifest.train_hlo_path(exit))?;
+        let mut sh = self.shared.lock().unwrap();
+        sh.compile_secs += secs;
+        Ok(sh.train_exes.entry(exit).or_insert(exe).clone())
     }
 
-    fn ensure_eval(&mut self) -> anyhow::Result<()> {
-        if self.eval_exe.is_none() {
-            let path = self.manifest.eval_hlo_path();
-            self.eval_exe = Some(self.compile(&path)?);
+    fn eval_exe(&self) -> anyhow::Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = &self.shared.lock().unwrap().eval_exe {
+            return Ok(exe.clone());
         }
-        Ok(())
+        // Same double-checked pattern as ensure_train: compile unlocked.
+        let (exe, secs) = self.compile(&self.manifest.eval_hlo_path())?;
+        let mut sh = self.shared.lock().unwrap();
+        sh.compile_secs += secs;
+        Ok(sh.eval_exe.get_or_insert(exe).clone())
     }
 
     /// Pre-compile a set of exits (and eval) up front, e.g. before timing.
-    pub fn warm(&mut self, exits: &[usize]) -> anyhow::Result<()> {
+    pub fn warm(&self, exits: &[usize]) -> anyhow::Result<()> {
         for &e in exits {
             self.ensure_train(e)?;
         }
-        self.ensure_eval()
+        self.eval_exe().map(|_| ())
+    }
+
+    /// Snapshot of (exit -> cumulative executions), for the perf report.
+    /// Sessions count locally and merge on drop (the hot path never locks
+    /// for counting), so live sessions' steps appear only once dropped.
+    pub fn exec_counts(&self) -> HashMap<usize, u64> {
+        self.shared.lock().unwrap().exec_counts.clone()
+    }
+
+    /// Cumulative lazy-compilation wall time in seconds.
+    pub fn compile_secs(&self) -> f64 {
+        self.shared.lock().unwrap().compile_secs
     }
 
     fn lit_f32(data: &[f32], dims: &[i64]) -> anyhow::Result<xla::Literal> {
@@ -92,6 +141,68 @@ impl Engine for PjrtEngine {
         &self.manifest
     }
 
+    fn session(&self) -> Box<dyn TrainSession + '_> {
+        Box::new(PjrtSession {
+            engine: self,
+            train_exes: HashMap::new(),
+            eval_exe: None,
+            local_counts: HashMap::new(),
+        })
+    }
+
+    /// Concurrent execution rests on the PJRT plugin contract, but the
+    /// `xla` crate's own wrapper state has not been validated against a
+    /// real xla_extension build (ROADMAP follow-up) — keep PJRT rounds
+    /// sequential until it has.
+    fn parallel_sessions(&self) -> bool {
+        false
+    }
+}
+
+/// One PJRT execution stream: owns per-session executable handles and a
+/// local execution counter, so the engine's cache lock is only taken on
+/// the first use of each exit (and once more when the session drops, to
+/// merge its counts).
+pub struct PjrtSession<'a> {
+    engine: &'a PjrtEngine,
+    train_exes: HashMap<usize, Arc<xla::PjRtLoadedExecutable>>,
+    eval_exe: Option<Arc<xla::PjRtLoadedExecutable>>,
+    /// (exit -> executions by this session), merged into the engine on drop.
+    local_counts: HashMap<usize, u64>,
+}
+
+// SAFETY: see `PjrtEngine` — loaded executables are thread-safe by PJRT
+// contract; the session merely moves `Arc` handles between threads.
+unsafe impl Send for PjrtSession<'_> {}
+
+impl PjrtSession<'_> {
+    fn train_handle(&mut self, exit: usize) -> anyhow::Result<Arc<xla::PjRtLoadedExecutable>> {
+        let exe = match self.train_exes.get(&exit) {
+            Some(exe) => exe.clone(),
+            None => {
+                let exe = self.engine.ensure_train(exit)?;
+                self.train_exes.insert(exit, exe.clone());
+                exe
+            }
+        };
+        *self.local_counts.entry(exit).or_insert(0) += 1;
+        Ok(exe)
+    }
+}
+
+impl Drop for PjrtSession<'_> {
+    fn drop(&mut self) {
+        if self.local_counts.is_empty() {
+            return;
+        }
+        let mut sh = self.engine.shared.lock().unwrap();
+        for (exit, n) in self.local_counts.drain() {
+            *sh.exec_counts.entry(exit).or_insert(0) += n;
+        }
+    }
+}
+
+impl TrainSession for PjrtSession<'_> {
     fn train_step(
         &mut self,
         exit: usize,
@@ -101,20 +212,19 @@ impl Engine for PjrtEngine {
         mask: &[f32],
         lr: f32,
     ) -> anyhow::Result<TrainOut> {
-        check_shapes(&self.manifest, exit, params, x, y, mask)?;
-        self.ensure_train(exit)?;
-        *self.exec_counts.entry(exit).or_insert(0) += 1;
+        let m = &self.engine.manifest;
+        check_shapes(m, exit, params, x, y, mask)?;
+        let exe = self.train_handle(exit)?;
 
-        let mut x_dims: Vec<i64> = vec![self.manifest.batch as i64];
-        x_dims.extend(self.manifest.input_shape.iter().map(|&d| d as i64));
+        let mut x_dims: Vec<i64> = vec![m.batch as i64];
+        x_dims.extend(m.input_shape.iter().map(|&d| d as i64));
 
-        let p_lit = Self::lit_f32(params, &[params.len() as i64])?;
-        let x_lit = Self::lit_f32(x, &x_dims)?;
+        let p_lit = PjrtEngine::lit_f32(params, &[params.len() as i64])?;
+        let x_lit = PjrtEngine::lit_f32(x, &x_dims)?;
         let y_lit = xla::Literal::vec1(y);
-        let m_lit = Self::lit_f32(mask, &[mask.len() as i64])?;
+        let m_lit = PjrtEngine::lit_f32(mask, &[mask.len() as i64])?;
         let lr_lit = xla::Literal::scalar(lr);
 
-        let exe = self.train_exes.get(&exit).unwrap();
         let bufs = exe
             .execute::<xla::Literal>(&[p_lit, x_lit, y_lit, m_lit, lr_lit])
             .map_err(|e| anyhow::anyhow!("execute train_exit_{exit}: {e:?}"))?;
@@ -138,18 +248,24 @@ impl Engine for PjrtEngine {
     }
 
     fn eval_step(&mut self, params: &[f32], x: &[f32], y: &[i32]) -> anyhow::Result<EvalOut> {
-        let m = &self.manifest;
+        let m = &self.engine.manifest;
         anyhow::ensure!(params.len() == m.param_count, "params len");
         anyhow::ensure!(y.len() == m.label_len, "y len");
-        self.ensure_eval()?;
+        let exe = match &self.eval_exe {
+            Some(exe) => exe.clone(),
+            None => {
+                let exe = self.engine.eval_exe()?;
+                self.eval_exe = Some(exe.clone());
+                exe
+            }
+        };
 
-        let mut x_dims: Vec<i64> = vec![self.manifest.batch as i64];
-        x_dims.extend(self.manifest.input_shape.iter().map(|&d| d as i64));
-        let p_lit = Self::lit_f32(params, &[params.len() as i64])?;
-        let x_lit = Self::lit_f32(x, &x_dims)?;
+        let mut x_dims: Vec<i64> = vec![m.batch as i64];
+        x_dims.extend(m.input_shape.iter().map(|&d| d as i64));
+        let p_lit = PjrtEngine::lit_f32(params, &[params.len() as i64])?;
+        let x_lit = PjrtEngine::lit_f32(x, &x_dims)?;
         let y_lit = xla::Literal::vec1(y);
 
-        let exe = self.eval_exe.as_ref().unwrap();
         let bufs = exe
             .execute::<xla::Literal>(&[p_lit, x_lit, y_lit])
             .map_err(|e| anyhow::anyhow!("execute eval: {e:?}"))?;
@@ -164,7 +280,7 @@ impl Engine for PjrtEngine {
         Ok(EvalOut {
             correct: correct as f64,
             loss_sum: loss_sum as f64,
-            rows: self.manifest.label_len as f64,
+            rows: m.label_len as f64,
         })
     }
 }

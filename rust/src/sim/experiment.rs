@@ -1,12 +1,18 @@
 //! One-call experiment runner: config -> engine + fleet + data + strategy
 //! -> ExperimentResult. Shared by the CLI, examples, and all benches.
+//!
+//! [`Experiment::run`] executes with the config's observers (console log
+//! when `verbose`, selection traces when `record_selections`);
+//! [`Experiment::run_observed`] additionally attaches a caller-supplied
+//! [`RoundObserver`] (progress bars, JSONL reporters, ...).
 
 use crate::config::ExperimentCfg;
 use crate::data::FedDataset;
+use crate::fl::observer::{ConsoleObserver, NullObserver, ObserverSet, RoundObserver, SelectionTrace};
 use crate::fl::server::{run_experiment, ExperimentResult, ServerCfg};
 use crate::manifest::tests_support::chain_manifest;
 use crate::manifest::Manifest;
-use crate::runtime::{Engine, MockEngine, PjrtEngine};
+use crate::runtime::{Engine, MockEngine};
 use crate::sim::fleet::{build_fleet, fastest, slowest};
 use crate::strategies::{by_name, FleetCtx};
 use crate::timing::{DeviceProfile, TimingCfg, TimingModel};
@@ -33,8 +39,22 @@ fn build_engine(cfg: &ExperimentCfg) -> anyhow::Result<Box<dyn Engine>> {
         let m = chain_manifest(blocks, body);
         return Ok(Box::new(MockEngine::new(m, cfg.seed)));
     }
+    build_pjrt_engine(cfg)
+}
+
+#[cfg(feature = "pjrt")]
+fn build_pjrt_engine(cfg: &ExperimentCfg) -> anyhow::Result<Box<dyn Engine>> {
     let dir = cfg.artifacts_dir.join(&cfg.model);
-    Ok(Box::new(PjrtEngine::open(&dir)?))
+    Ok(Box::new(crate::runtime::PjrtEngine::open(&dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn build_pjrt_engine(cfg: &ExperimentCfg) -> anyhow::Result<Box<dyn Engine>> {
+    anyhow::bail!(
+        "model {:?} needs the PJRT engine — rebuild with `--features pjrt` \
+         (this build supports only mock:<blocks>x<body> models)",
+        cfg.model
+    )
 }
 
 impl Experiment {
@@ -83,22 +103,47 @@ impl Experiment {
 
     /// Run one strategy (cfg.strategy unless overridden).
     pub fn run(&mut self, strategy_override: Option<&str>) -> anyhow::Result<ExperimentResult> {
+        self.run_observed(strategy_override, &mut NullObserver)
+    }
+
+    /// Run one strategy with an extra caller-supplied observer on top of
+    /// the config-driven ones (console log, selection trace).
+    pub fn run_observed(
+        &mut self,
+        strategy_override: Option<&str>,
+        extra: &mut dyn RoundObserver,
+    ) -> anyhow::Result<ExperimentResult> {
         let name = strategy_override.unwrap_or(&self.cfg.strategy).to_string();
         let mut strategy = by_name(&name, &self.ctx, self.cfg.beta, self.cfg.seed)?;
         let server_cfg = ServerCfg {
             rounds: self.cfg.rounds,
             eval_every: self.cfg.eval_every,
             comm_secs: self.cfg.comm_secs,
-            record_selections: self.cfg.record_selections,
-            verbose: self.cfg.verbose,
+            exec_threads: self.cfg.exec_threads,
         };
-        run_experiment(
-            self.engine.as_mut(),
+        let mut console = self.cfg.verbose.then(|| ConsoleObserver::new(&name));
+        let mut trace = self.cfg.record_selections.then(SelectionTrace::default);
+        let mut observers = ObserverSet::new();
+        if let Some(c) = console.as_mut() {
+            observers.push(c);
+        }
+        if let Some(t) = trace.as_mut() {
+            observers.push(t);
+        }
+        observers.push(extra);
+        let mut res = run_experiment(
+            self.engine.as_ref(),
             &self.dataset,
             strategy.as_mut(),
             &self.ctx,
             &server_cfg,
-        )
+            &mut observers,
+        )?;
+        drop(observers);
+        if let Some(t) = trace {
+            res.selections = t.into_inner();
+        }
+        Ok(res)
     }
 }
 
@@ -134,6 +179,7 @@ mod tests {
         assert_eq!(res.records.len(), 8);
         assert!(res.sim_total_secs > 0.0);
         assert!(res.final_acc > 0.0);
+        assert_eq!(res.final_params.len(), 6 * 50 + 6 * 4);
         // eval accuracy should improve from the first eval to the final
         // (train losses aren't comparable across FedEL's changing exits)
         let curve = res.acc_curve();
@@ -178,6 +224,17 @@ mod tests {
             cfg.rounds = 3;
             let res = run_one(cfg).unwrap_or_else(|e| panic!("{name}: {e}"));
             assert_eq!(res.strategy, name);
+        }
+    }
+
+    #[test]
+    fn non_mock_model_errors_without_pjrt_feature() {
+        #[cfg(not(feature = "pjrt"))]
+        {
+            let mut cfg = mock_cfg();
+            cfg.model = "definitely_missing_model".into();
+            let err = Experiment::build(cfg).unwrap_err().to_string();
+            assert!(err.contains("pjrt"), "{err}");
         }
     }
 }

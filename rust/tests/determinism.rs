@@ -1,0 +1,119 @@
+//! Parallel-vs-sequential determinism: the session-based executor must
+//! produce bitwise-identical `ExperimentResult`s at any thread count.
+//! This is the design invariant of the Engine/TrainSession split — local
+//! training fans out across workers, but sessions are pure functions of
+//! their inputs and the server aggregates/observes in plan order.
+
+use fedel::config::{ExperimentCfg, FleetSpec};
+use fedel::fl::observer::RoundObserver;
+use fedel::fl::server::ClientOutcome;
+use fedel::sim::experiment::{run_one, Experiment};
+use fedel::strategies::ClientPlan;
+
+fn cfg(strategy: &str, threads: usize) -> ExperimentCfg {
+    ExperimentCfg {
+        model: "mock:6x50".into(),
+        strategy: strategy.into(),
+        fleet: FleetSpec::Scales(vec![1.0, 1.5, 2.0, 2.5, 3.0, 4.0, 1.0, 2.0]),
+        rounds: 6,
+        local_steps: 4,
+        lr: 0.3,
+        eval_every: 2,
+        eval_batches: 2,
+        slowest_round_secs: 3600.0,
+        exec_threads: threads,
+        ..Default::default()
+    }
+}
+
+fn assert_identical(
+    a: &fedel::fl::server::ExperimentResult,
+    b: &fedel::fl::server::ExperimentResult,
+    label: &str,
+) {
+    assert_eq!(a.final_params, b.final_params, "{label}: global params diverged");
+    assert_eq!(a.final_acc.to_bits(), b.final_acc.to_bits(), "{label}: final_acc");
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{label}: final_loss");
+    assert_eq!(
+        a.sim_total_secs.to_bits(),
+        b.sim_total_secs.to_bits(),
+        "{label}: sim_total_secs"
+    );
+    assert_eq!(a.records.len(), b.records.len(), "{label}: record count");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(
+            ra.mean_train_loss.to_bits(),
+            rb.mean_train_loss.to_bits(),
+            "{label}: round {} loss",
+            ra.round
+        );
+        assert_eq!(ra.sim_time.to_bits(), rb.sim_time.to_bits(), "{label}: round {} clock", ra.round);
+        assert_eq!(ra.o1.to_bits(), rb.o1.to_bits(), "{label}: round {} o1", ra.round);
+        assert_eq!(
+            ra.eval_acc.map(f64::to_bits),
+            rb.eval_acc.map(f64::to_bits),
+            "{label}: round {} eval",
+            ra.round
+        );
+        assert_eq!(ra.client_secs, rb.client_secs, "{label}: round {} clients", ra.round);
+    }
+}
+
+#[test]
+fn fedel_is_bitwise_identical_across_thread_counts() {
+    let seq = run_one(cfg("fedel", 1)).unwrap();
+    let four = run_one(cfg("fedel", 4)).unwrap();
+    let all_cores = run_one(cfg("fedel", 0)).unwrap();
+    assert_identical(&seq, &four, "1 vs 4 threads");
+    assert_identical(&seq, &all_cores, "1 thread vs all cores");
+}
+
+#[test]
+fn every_strategy_is_deterministic_under_parallelism() {
+    for name in fedel::strategies::table1_names() {
+        let mut c = cfg(name, 1);
+        c.rounds = 3;
+        let seq = run_one(c).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let mut c = cfg(name, 3);
+        c.rounds = 3;
+        let par = run_one(c).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_identical(&seq, &par, name);
+    }
+}
+
+#[test]
+fn selection_traces_match_across_thread_counts() {
+    let mut a = cfg("fedel", 1);
+    a.record_selections = true;
+    let mut b = cfg("fedel", 4);
+    b.record_selections = true;
+    let seq = run_one(a).unwrap();
+    let par = run_one(b).unwrap();
+    assert!(!seq.selections.is_empty());
+    assert_eq!(seq.selections, par.selections);
+}
+
+#[test]
+fn observers_see_clients_in_plan_order_even_when_parallel() {
+    #[derive(Default)]
+    struct Order {
+        planned: Vec<Vec<usize>>,
+        done: Vec<Vec<usize>>,
+    }
+    impl RoundObserver for Order {
+        fn on_round_start(&mut self, _round: usize, plans: &[ClientPlan]) {
+            self.planned.push(plans.iter().map(|p| p.client).collect());
+            self.done.push(Vec::new());
+        }
+        fn on_client_done(&mut self, _round: usize, plan: &ClientPlan, out: &ClientOutcome) {
+            assert_eq!(plan.client, out.client);
+            self.done.last_mut().unwrap().push(plan.client);
+        }
+    }
+    let mut obs = Order::default();
+    let mut exp = Experiment::build(cfg("fedel", 0)).unwrap();
+    exp.run_observed(None, &mut obs).unwrap();
+    assert_eq!(obs.planned.len(), 6);
+    assert!(obs.planned.iter().all(|r| !r.is_empty()));
+    assert_eq!(obs.planned, obs.done, "per-client callbacks must fire in plan order");
+}

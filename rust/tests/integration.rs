@@ -7,7 +7,7 @@ use fedel::metrics::energy::energy_report;
 use fedel::metrics::memory::memory_bytes;
 use fedel::report::{table1_rows, Table1Row};
 use fedel::sim::experiment::{run_one, Experiment};
-use fedel::strategies::table1_names;
+use fedel::strategies::{table1_names, Strategy};
 
 fn mock_cfg(strategy: &str, rounds: usize) -> ExperimentCfg {
     ExperimentCfg {

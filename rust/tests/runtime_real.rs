@@ -1,9 +1,11 @@
-//! Integration tests over the REAL PJRT engine + AOT artifacts. Skipped
-//! (pass trivially) when `make artifacts` hasn't run.
+//! Integration tests over the REAL PJRT engine + AOT artifacts. Compiled
+//! only with the `pjrt` feature; skipped (pass trivially) when
+//! `make artifacts` hasn't run.
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 
-use fedel::runtime::{Engine, PjrtEngine};
+use fedel::runtime::{Engine, PjrtEngine, TrainSession};
 
 fn art(model: &str) -> Option<PathBuf> {
     let p = Path::new("artifacts").join(model);
@@ -31,15 +33,16 @@ fn batch(m: &fedel::manifest::Manifest, seed: u64) -> (Vec<f32>, Vec<i32>) {
 #[test]
 fn mlp_train_step_decreases_loss() {
     let Some(dir) = art("mlp") else { return };
-    let mut eng = PjrtEngine::open(&dir).unwrap();
+    let eng = PjrtEngine::open(&dir).unwrap();
     let m = eng.manifest().clone();
+    let mut sess = eng.session();
     let mut p = m.load_init().unwrap();
     let (x, y) = batch(&m, 1);
     let mask = vec![1.0f32; m.param_count];
     let mut first = None;
     let mut last = 0.0;
     for _ in 0..10 {
-        let out = eng.train_step(m.num_blocks, &p, &x, &y, &mask, 0.05).unwrap();
+        let out = sess.train_step(m.num_blocks, &p, &x, &y, &mask, 0.05).unwrap();
         p = out.new_params;
         first.get_or_insert(out.loss);
         last = out.loss;
@@ -50,8 +53,9 @@ fn mlp_train_step_decreases_loss() {
 #[test]
 fn mlp_mask_freezes_exactly_the_masked_elements() {
     let Some(dir) = art("mlp") else { return };
-    let mut eng = PjrtEngine::open(&dir).unwrap();
+    let eng = PjrtEngine::open(&dir).unwrap();
     let m = eng.manifest().clone();
+    let mut sess = eng.session();
     let p = m.load_init().unwrap();
     let (x, y) = batch(&m, 2);
     let mut mask = vec![1.0f32; m.param_count];
@@ -61,7 +65,7 @@ fn mlp_mask_freezes_exactly_the_masked_elements() {
             mask[t.offset..t.offset + t.size].fill(0.0);
         }
     }
-    let out = eng.train_step(m.num_blocks, &p, &x, &y, &mask, 0.1).unwrap();
+    let out = sess.train_step(m.num_blocks, &p, &x, &y, &mask, 0.1).unwrap();
     for t in &m.tensors {
         let range = t.offset..t.offset + t.size;
         let moved = range.clone().any(|j| out.new_params[j] != p[j]);
@@ -74,13 +78,14 @@ fn mlp_mask_freezes_exactly_the_masked_elements() {
 #[test]
 fn mlp_exit_semantics_match_manifest() {
     let Some(dir) = art("mlp") else { return };
-    let mut eng = PjrtEngine::open(&dir).unwrap();
+    let eng = PjrtEngine::open(&dir).unwrap();
     let m = eng.manifest().clone();
+    let mut sess = eng.session();
     let p = m.load_init().unwrap();
     let (x, y) = batch(&m, 3);
     let mask = vec![1.0f32; m.param_count];
     let exit = 2;
-    let out = eng.train_step(exit, &p, &x, &y, &mask, 0.1).unwrap();
+    let out = sess.train_step(exit, &p, &x, &y, &mask, 0.1).unwrap();
     // sq grads zero for unreached blocks; positive for reached body
     for (i, t) in m.tensors.iter().enumerate() {
         let reached = if t.is_head { t.block == exit - 1 } else { t.block < exit };
@@ -96,11 +101,12 @@ fn mlp_exit_semantics_match_manifest() {
 #[test]
 fn eval_step_counts_rows() {
     let Some(dir) = art("mlp") else { return };
-    let mut eng = PjrtEngine::open(&dir).unwrap();
+    let eng = PjrtEngine::open(&dir).unwrap();
     let m = eng.manifest().clone();
+    let mut sess = eng.session();
     let p = m.load_init().unwrap();
     let (x, y) = batch(&m, 4);
-    let e = eng.eval_step(&p, &x, &y).unwrap();
+    let e = sess.eval_step(&p, &x, &y).unwrap();
     assert_eq!(e.rows, m.label_len as f64);
     assert!(e.correct >= 0.0 && e.correct <= e.rows);
     assert!(e.loss_sum > 0.0);
@@ -110,20 +116,21 @@ fn eval_step_counts_rows() {
 fn all_models_smoke_one_step() {
     for model in ["mlp", "vgg_cifar", "vgg_tinyin", "resnet_speech", "tinylm_reddit"] {
         let Some(dir) = art(model) else { continue };
-        let mut eng = PjrtEngine::open(&dir).unwrap();
+        let eng = PjrtEngine::open(&dir).unwrap();
         let m = eng.manifest().clone();
+        let mut sess = eng.session();
         let p = m.load_init().unwrap();
         let (x, y) = batch(&m, 5);
         let mask = vec![1.0f32; m.param_count];
         // shallowest and deepest exits
         for exit in [1, m.num_blocks] {
-            let out = eng
+            let out = sess
                 .train_step(exit, &p, &x, &y, &mask, 0.02)
                 .unwrap_or_else(|e| panic!("{model} exit {exit}: {e}"));
             assert!(out.loss.is_finite(), "{model} exit {exit}");
             assert_eq!(out.new_params.len(), m.param_count);
         }
-        let e = eng.eval_step(&p, &x, &y).unwrap();
+        let e = sess.eval_step(&p, &x, &y).unwrap();
         assert!(e.loss_sum.is_finite());
     }
 }
@@ -142,12 +149,36 @@ fn init_matches_manifest_sha() {
 #[test]
 fn lazy_compile_only_touches_used_exits() {
     let Some(dir) = art("mlp") else { return };
-    let mut eng = PjrtEngine::open(&dir).unwrap();
+    let eng = PjrtEngine::open(&dir).unwrap();
     let m = eng.manifest().clone();
+    let mut sess = eng.session();
     let p = m.load_init().unwrap();
     let (x, y) = batch(&m, 6);
     let mask = vec![1.0f32; m.param_count];
-    eng.train_step(1, &p, &x, &y, &mask, 0.01).unwrap();
-    assert_eq!(eng.exec_counts.len(), 1);
-    assert_eq!(eng.exec_counts.get(&1), Some(&1));
+    sess.train_step(1, &p, &x, &y, &mask, 0.01).unwrap();
+    drop(sess); // sessions merge their exec counts into the engine on drop
+    let counts = eng.exec_counts();
+    assert_eq!(counts.len(), 1);
+    assert_eq!(counts.get(&1), Some(&1));
+}
+
+#[test]
+fn concurrent_sessions_share_compile_cache() {
+    let Some(dir) = art("mlp") else { return };
+    let eng = PjrtEngine::open(&dir).unwrap();
+    let m = eng.manifest().clone();
+    let p = m.load_init().unwrap();
+    let (x, y) = batch(&m, 7);
+    let mask = vec![1.0f32; m.param_count];
+    let compile_before = {
+        let mut s = eng.session();
+        s.train_step(1, &p, &x, &y, &mask, 0.01).unwrap();
+        eng.compile_secs()
+    };
+    // a second session reuses the cached executable: no new compile time
+    let mut s2 = eng.session();
+    s2.train_step(1, &p, &x, &y, &mask, 0.01).unwrap();
+    drop(s2);
+    assert_eq!(eng.compile_secs(), compile_before);
+    assert_eq!(eng.exec_counts().get(&1), Some(&2));
 }

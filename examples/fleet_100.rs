@@ -1,18 +1,29 @@
-//! Large-scale simulation: 100 heterogeneous clients over the paper's four
-//! device types {1, 1/2, 1/3, 1/4}x, TinyImageNet-like VGG. Mirrors the
-//! paper's Sec. 5.1 large-scale scenario. Local training of the 100
-//! clients fans out across host cores on engines with validated
-//! concurrent sessions (results are identical to a sequential run; PJRT
-//! is gated sequential until validated), and progress is reported
-//! through a custom `RoundObserver` instead of the old `verbose` flag.
+//! Large-scale simulation with fault tolerance: 100 heterogeneous clients
+//! over the paper's four device types {1, 1/2, 1/3, 1/4}x, mirroring the
+//! paper's Sec. 5.1 large-scale scenario. Local training fans out across
+//! host cores (results identical to a sequential run), and the whole
+//! campaign is persisted through the run store:
 //!
-//!   cargo run --release --features pjrt --example fleet_100 [-- rounds] [-- clients]
+//! 1. a fedavg baseline runs to completion, checkpointed,
+//! 2. a fedel run is **killed mid-flight** (simulated crash between
+//!    checkpoints),
+//! 3. `resume_run` picks it back up from the store and finishes it,
+//! 4. the resumed result is asserted **bitwise-identical** to an
+//!    uninterrupted run, and
+//! 5. the two stored runs are compared on time-to-accuracy.
+//!
+//!   cargo run --release --example fleet_100 [-- rounds] [-- clients] [-- model]
+//!
+//! The default model is the pure-rust mock engine; pass e.g. vgg_tinyin
+//! with `--features pjrt` + artifacts for the paper's TinyImageNet VGG.
 
 use fedel::config::{ExperimentCfg, FleetSpec};
 use fedel::fl::observer::RoundObserver;
 use fedel::fl::server::{ClientOutcome, RoundRecord};
-use fedel::report::{render_table1, table1_rows};
-use fedel::sim::experiment::Experiment;
+use fedel::report::{render_table1, runs_compare, table1_rows};
+use fedel::sim::experiment::{resume_run, Experiment};
+use fedel::store::checkpoint::CheckpointObserver;
+use fedel::store::RunStore;
 use fedel::strategies::ClientPlan;
 
 /// Per-round progress line: participants, straggler cost, eval when run.
@@ -43,10 +54,12 @@ impl RoundObserver for Progress {
 
 fn main() -> anyhow::Result<()> {
     let mut args = std::env::args().skip(1);
-    let rounds: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(40);
+    let rounds: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(20);
     let clients: usize = args.next().and_then(|s| s.parse().ok()).unwrap_or(100);
+    let model = args.next().unwrap_or_else(|| "mock:8x100".into());
+    anyhow::ensure!(rounds >= 4, "fleet_100 needs >= 4 rounds for the kill+resume demo");
     let cfg = ExperimentCfg {
-        model: "vgg_tinyin".into(),
+        model,
         fleet: FleetSpec::Large(clients),
         rounds,
         local_steps: 4,
@@ -58,8 +71,14 @@ fn main() -> anyhow::Result<()> {
         exec_threads: 0,                  // one worker per host core
         ..Default::default()
     };
-    println!("fleet_100: {clients} clients x {rounds} rounds, vgg_tinyin");
-    let mut exp = Experiment::build(cfg)?;
+    let store_dir = std::env::temp_dir().join(format!("fedel-fleet100-{}", std::process::id()));
+    let store = RunStore::open(&store_dir)?;
+    println!(
+        "fleet_100: {clients} clients x {rounds} rounds, {} — store at {}",
+        cfg.model,
+        store_dir.display()
+    );
+    let mut exp = Experiment::build(cfg.clone())?;
 
     // device-type census
     let mut census: std::collections::BTreeMap<String, usize> = Default::default();
@@ -68,18 +87,83 @@ fn main() -> anyhow::Result<()> {
     }
     println!("fleet census: {census:?}");
 
+    // -- 1. fedavg baseline, stored + checkpointed every 5 rounds ----------
+    let fedavg_id;
     let mut results = Vec::new();
-    for name in ["fedavg", "timelyfl", "fedel"] {
+    {
         let t0 = std::time::Instant::now();
-        let mut progress = Progress { clients_done: 0 };
-        let res = exp.run_observed(Some(name), &mut progress)?;
+        let mut ckpt = CheckpointObserver::create(&store, &exp.cfg, "fedavg", 5)?;
+        fedavg_id = ckpt.run_id().to_string();
+        let res = exp.run_from(Some("fedavg"), &mut ckpt, None)?;
+        anyhow::ensure!(ckpt.take_error().is_none(), "fedavg checkpointing failed");
         println!(
-            "== {name}: final acc {:.2}%, simulated {}, wall {:.0}s",
+            "== fedavg ({fedavg_id}): final acc {:.2}%, simulated {}, wall {:.0}s",
             100.0 * res.final_acc,
             fedel::util::fmt_hours(res.sim_total_secs),
             t0.elapsed().as_secs_f64()
         );
         results.push(res);
+    }
+
+    // -- 2. fedel, killed mid-flight (between checkpoints) ------------------
+    // Checkpoints land every 2 rounds; the kill hits an odd round, so the
+    // resume has to recompute the round after the last checkpoint —
+    // exactly what a real crash leaves behind.
+    let kill_at = (rounds / 2) | 1;
+    let fedel_id;
+    {
+        let mut killed_cfg = cfg.clone();
+        killed_cfg.halt_after = Some(kill_at);
+        let mut killed_exp = Experiment::build(killed_cfg)?;
+        let mut ckpt = CheckpointObserver::create(&store, &killed_exp.cfg, "fedel", 2)?;
+        fedel_id = ckpt.run_id().to_string();
+        let err = killed_exp
+            .run_from(Some("fedel"), &mut ckpt, None)
+            .expect_err("halt_after must abort the run");
+        println!("== fedel ({fedel_id}) killed mid-flight: {err}");
+    }
+
+    // -- 3. resume from the store ------------------------------------------
+    {
+        let t0 = std::time::Instant::now();
+        let mut progress = Progress { clients_done: 0 };
+        let resumed = resume_run(&store, &fedel_id, 2, &mut progress)?;
+        println!(
+            "== fedel ({fedel_id}) resumed: final acc {:.2}%, simulated {}, wall {:.0}s",
+            100.0 * resumed.final_acc,
+            fedel::util::fmt_hours(resumed.sim_total_secs),
+            t0.elapsed().as_secs_f64()
+        );
+
+        // -- 4. bitwise identity vs an uninterrupted run --------------------
+        let uninterrupted = Experiment::build(cfg.clone())?.run(Some("fedel"))?;
+        anyhow::ensure!(
+            resumed.final_params == uninterrupted.final_params,
+            "kill+resume diverged from the uninterrupted run"
+        );
+        anyhow::ensure!(resumed.records.len() == uninterrupted.records.len());
+        for (a, b) in resumed.records.iter().zip(&uninterrupted.records) {
+            anyhow::ensure!(
+                a.sim_time.to_bits() == b.sim_time.to_bits()
+                    && a.mean_train_loss.to_bits() == b.mean_train_loss.to_bits()
+                    && a.eval_acc.map(f64::to_bits) == b.eval_acc.map(f64::to_bits),
+                "round {} diverged after resume",
+                a.round
+            );
+        }
+        println!("== kill+resume verified bitwise-identical to an uninterrupted run");
+        results.push(resumed);
+    }
+
+    // -- 5. compare the two stored runs on time-to-accuracy ----------------
+    let (table, speedup) = runs_compare(
+        &store.load_manifest(&fedel_id)?,
+        &store.load_manifest(&fedavg_id)?,
+        None,
+    );
+    table.print();
+    if let Some(s) = speedup {
+        println!("time-to-accuracy: {fedel_id} is {s:.2}x vs {fedavg_id}");
     }
     render_table1("fleet_100 summary", &table1_rows(&results, 0.95, false), false).print();
     Ok(())

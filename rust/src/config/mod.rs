@@ -81,6 +81,10 @@ pub struct ExperimentCfg {
     pub exec_threads: usize,
     pub record_selections: bool,
     pub verbose: bool,
+    /// Abort after this many rounds (simulated kill, for fault-tolerance
+    /// demos/tests — see `ServerCfg::halt_after`). Not part of the stored
+    /// config snapshot: a resumed run always runs to completion.
+    pub halt_after: Option<usize>,
 }
 
 impl Default for ExperimentCfg {
@@ -104,6 +108,7 @@ impl Default for ExperimentCfg {
             exec_threads: 0,
             record_selections: false,
             verbose: false,
+            halt_after: None,
         }
     }
 }
@@ -131,12 +136,18 @@ impl ExperimentCfg {
             exec_threads: args.usize_or("threads", d.exec_threads),
             record_selections: args.flag("record-selections"),
             verbose: args.flag("verbose"),
+            halt_after: args.get("halt-after").and_then(|s| s.parse().ok()),
         })
     }
 
+    /// Config snapshot: every field an experiment rebuild needs
+    /// (`from_json` inverts it). Presentation flags (verbose,
+    /// record_selections) and the halt_after kill-switch stay out — they
+    /// describe a process invocation, not the experiment.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("model", Json::Str(self.model.clone())),
+            ("artifacts_dir", Json::Str(self.artifacts_dir.display().to_string())),
             ("strategy", Json::Str(self.strategy.clone())),
             ("fleet", Json::Str(self.fleet.label())),
             ("rounds", Json::Num(self.rounds as f64)),
@@ -146,9 +157,53 @@ impl ExperimentCfg {
             ("beta", Json::Num(self.beta)),
             ("t_th_factor", Json::Num(self.t_th_factor)),
             ("slowest_round_secs", Json::Num(self.slowest_round_secs)),
-            ("seed", Json::Num(self.seed as f64)),
+            // u64 seeds don't survive the f64 JSON number path above 2^53;
+            // like the store's RNG words, they ride a string.
+            ("seed", Json::Str(format!("{}", self.seed))),
+            ("eval_every", Json::Num(self.eval_every as f64)),
+            ("eval_batches", Json::Num(self.eval_batches as f64)),
+            ("comm_secs", Json::Num(self.comm_secs)),
             ("threads", Json::Num(self.exec_threads as f64)),
         ])
+    }
+
+    /// Rebuild a config from a [`ExperimentCfg::to_json`] snapshot.
+    /// Missing keys fall back to defaults (older snapshots keep loading as
+    /// the schema grows); a malformed fleet label is the one hard error.
+    pub fn from_json(j: &Json) -> anyhow::Result<ExperimentCfg> {
+        let d = ExperimentCfg::default();
+        let s = |key: &str, dv: &str| {
+            j.get(key).and_then(Json::as_str).unwrap_or(dv).to_string()
+        };
+        let f = |key: &str, dv: f64| j.get(key).and_then(Json::as_f64).unwrap_or(dv);
+        let u = |key: &str, dv: usize| j.get(key).and_then(Json::as_usize).unwrap_or(dv);
+        Ok(ExperimentCfg {
+            model: s("model", &d.model),
+            artifacts_dir: PathBuf::from(s("artifacts_dir", "artifacts")),
+            strategy: s("strategy", &d.strategy),
+            fleet: FleetSpec::parse(&s("fleet", &d.fleet.label()))?,
+            rounds: u("rounds", d.rounds),
+            local_steps: u("local_steps", d.local_steps),
+            lr: f("lr", d.lr),
+            alpha: f("alpha", d.alpha),
+            beta: f("beta", d.beta),
+            t_th_factor: f("t_th_factor", d.t_th_factor),
+            slowest_round_secs: f("slowest_round_secs", d.slowest_round_secs),
+            seed: match j.get("seed") {
+                Some(Json::Str(s)) => s
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("config snapshot: bad seed {s:?}: {e}"))?,
+                Some(Json::Num(x)) => *x as u64, // pre-string snapshots
+                _ => d.seed,
+            },
+            eval_every: u("eval_every", d.eval_every),
+            eval_batches: u("eval_batches", d.eval_batches),
+            comm_secs: f("comm_secs", d.comm_secs),
+            exec_threads: u("threads", d.exec_threads),
+            record_selections: false,
+            verbose: false,
+            halt_after: None,
+        })
     }
 }
 
@@ -188,5 +243,62 @@ mod tests {
         let j = cfg.to_json();
         assert_eq!(j.s("strategy").unwrap(), "fedel");
         assert_eq!(j.f("beta").unwrap(), 0.6);
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_json_text() {
+        let cfg = ExperimentCfg {
+            model: "mock:8x100".into(),
+            strategy: "pyramidfl".into(),
+            fleet: FleetSpec::Scales(vec![1.0, 2.5, 4.0]),
+            rounds: 17,
+            local_steps: 3,
+            lr: 0.0125,
+            alpha: 0.3,
+            beta: 0.45,
+            t_th_factor: 1.5,
+            slowest_round_secs: 1234.5,
+            seed: 77,
+            eval_every: 3,
+            eval_batches: 5,
+            comm_secs: 12.25,
+            exec_threads: 2,
+            ..Default::default()
+        };
+        let text = cfg.to_json().to_string_pretty();
+        let back = ExperimentCfg::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.model, cfg.model);
+        assert_eq!(back.strategy, cfg.strategy);
+        assert_eq!(back.fleet, cfg.fleet);
+        assert_eq!(back.rounds, cfg.rounds);
+        assert_eq!(back.local_steps, cfg.local_steps);
+        assert_eq!(back.lr.to_bits(), cfg.lr.to_bits());
+        assert_eq!(back.alpha.to_bits(), cfg.alpha.to_bits());
+        assert_eq!(back.beta.to_bits(), cfg.beta.to_bits());
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.eval_every, cfg.eval_every);
+        assert_eq!(back.eval_batches, cfg.eval_batches);
+        assert_eq!(back.comm_secs.to_bits(), cfg.comm_secs.to_bits());
+        assert_eq!(back.exec_threads, cfg.exec_threads);
+    }
+
+    #[test]
+    fn seed_survives_beyond_f64_integer_range() {
+        // 2^53 + 1 is unrepresentable as f64 — the string path must keep
+        // it exact, or resumed runs would rebuild a different fleet.
+        let cfg = ExperimentCfg { seed: (1u64 << 53) + 1, ..Default::default() };
+        let text = cfg.to_json().to_string_pretty();
+        let back = ExperimentCfg::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.seed, (1u64 << 53) + 1);
+    }
+
+    #[test]
+    fn from_json_defaults_missing_keys() {
+        let j = Json::parse(r#"{"model": "mock:4x10", "fleet": "large20"}"#).unwrap();
+        let cfg = ExperimentCfg::from_json(&j).unwrap();
+        assert_eq!(cfg.model, "mock:4x10");
+        assert_eq!(cfg.fleet, FleetSpec::Large(20));
+        assert_eq!(cfg.rounds, ExperimentCfg::default().rounds);
+        assert!(ExperimentCfg::from_json(&Json::parse(r#"{"fleet": "bogus"}"#).unwrap()).is_err());
     }
 }

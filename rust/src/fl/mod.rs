@@ -12,8 +12,9 @@ pub mod server;
 pub use aggregate::{AggregateRule, MaskedAggregator};
 pub use observer::{
     ConsoleObserver, JsonlObserver, NullObserver, ObserverSet, RoundObserver, SelectionTrace,
+    ServerState,
 };
 pub use server::{
-    execute_plans, run_experiment, ClientOutcome, ExecPool, ExperimentResult, RoundInputs,
-    RoundRecord, ServerCfg,
+    execute_plans, execute_plans_streaming, run_experiment, run_experiment_from, ClientOutcome,
+    ExecPool, ExperimentResult, ResumeState, RoundInputs, RoundRecord, ServerCfg,
 };

@@ -22,7 +22,23 @@
 use std::io::Write;
 
 use crate::fl::server::{ClientOutcome, ExperimentResult, RoundRecord};
-use crate::strategies::ClientPlan;
+use crate::strategies::{ClientPlan, Strategy};
+
+/// The server's post-round state, exposed once per round after
+/// `on_round_end` — the seam checkpointing rides on ([`crate::store`]).
+/// Everything here plus the round records is exactly what
+/// [`crate::fl::server::ResumeState`] needs to continue the run.
+pub struct ServerState<'a> {
+    /// Rounds completed so far (the round that just closed is
+    /// `completed - 1`).
+    pub completed: usize,
+    /// Simulated seconds elapsed, inclusive of the round just closed.
+    pub sim_time: f64,
+    /// Global model after the round's aggregation.
+    pub global: &'a [f32],
+    /// The strategy, for [`Strategy::policy_state`] snapshots.
+    pub strategy: &'a dyn Strategy,
+}
 
 /// Callbacks the server emits while running an experiment. All methods
 /// default to no-ops so implementations override only what they need.
@@ -39,6 +55,10 @@ pub trait RoundObserver {
 
     /// The round closed; `record` holds everything measured.
     fn on_round_end(&mut self, _record: &RoundRecord) {}
+
+    /// The post-round server state (global model, clock, policy), fired
+    /// after `on_round_end`. Checkpointing observers persist from here.
+    fn on_server_state(&mut self, _state: &ServerState<'_>) {}
 
     /// The experiment finished (after the final eval).
     fn on_experiment_end(&mut self, _result: &ExperimentResult) {}
@@ -87,6 +107,12 @@ impl RoundObserver for ObserverSet<'_> {
     fn on_round_end(&mut self, record: &RoundRecord) {
         for o in &mut self.obs {
             o.on_round_end(record);
+        }
+    }
+
+    fn on_server_state(&mut self, state: &ServerState<'_>) {
+        for o in &mut self.obs {
+            o.on_server_state(state);
         }
     }
 
@@ -192,15 +218,13 @@ impl<W: Write> RoundObserver for JsonlObserver<W> {
 
     fn on_experiment_end(&mut self, res: &ExperimentResult) {
         use crate::util::json::Json;
-        let j = Json::obj(vec![
-            ("summary", Json::Bool(true)),
-            ("strategy", Json::Str(res.strategy.clone())),
-            ("rounds", Json::Num(res.records.len() as f64)),
-            ("sim_total_secs", Json::Num(res.sim_total_secs)),
-            ("final_acc", Json::Num(res.final_acc)),
-            ("final_loss", Json::Num(res.final_loss)),
-        ]);
-        let w = writeln!(self.out, "{j}");
+        // The run store's canonical summary schema, tagged so log readers
+        // can tell the summary line from round lines.
+        let mut kv = vec![("summary".to_string(), Json::Bool(true))];
+        if let Json::Obj(rest) = crate::store::schema::result_summary_to_json(res) {
+            kv.extend(rest);
+        }
+        let w = writeln!(self.out, "{}", Json::Obj(kv));
         self.record(w);
         let f = self.out.flush();
         self.record(f);

@@ -2,26 +2,31 @@
 //!
 //! 1. **plan** — the strategy emits per-client work (exit, mask, steps,
 //!    simulated cost) from the current global model.
-//! 2. **execute** — [`execute_plans`] fans the plans out across a rayon
-//!    thread pool; every worker drives its own [`TrainSession`] from the
-//!    shared [`Engine`], and results join back in *plan order*. Compute
-//!    is *real* (sessions execute the AOT artifacts); wall-clock is
-//!    *simulated* from the timing model, exactly like the paper's
-//!    100-client evaluation (DESIGN.md §4). FedProx's proximal correction
-//!    is applied client-side between steps when enabled.
-//! 3. **aggregate** — the server folds outcomes (still in plan order)
-//!    with the strategy's rule (Eq. 4 masked / FedAvg / FedNova) and
-//!    advances the simulated clock by the slowest participant plus a
-//!    communication constant.
+//! 2. **execute** — [`execute_plans_streaming`] fans the plans out across
+//!    a rayon thread pool; every worker drives its own [`TrainSession`]
+//!    from the shared [`Engine`]. Compute is *real* (sessions execute the
+//!    AOT artifacts); wall-clock is *simulated* from the timing model,
+//!    exactly like the paper's 100-client evaluation (DESIGN.md §4).
+//!    FedProx's proximal correction is applied client-side between steps
+//!    when enabled.
+//! 3. **aggregate** — outcomes stream back through an order buffer and
+//!    fold into the strategy's rule (Eq. 4 masked / FedAvg / FedNova) in
+//!    *plan order* the moment their turn arrives, so the join barrier
+//!    holds only the out-of-order backlog — never every participant's
+//!    full parameter vector. The server then advances the simulated clock
+//!    by the slowest participant plus a communication constant.
 //! 4. **observe** — the strategy sees losses + importance signals
 //!    (FedEL's global tensor importance from the aggregated delta, the O₁
 //!    bias diagnostic from the round's masks); [`RoundObserver`]s see the
-//!    round record, per-client outcomes, and evals.
+//!    round record, per-client outcomes, evals, and finally the post-round
+//!    server state (the checkpointing seam, [`crate::store`]).
 //!
 //! Determinism invariant: because a session's output is a pure function
 //! of its inputs and aggregation folds in plan order on the coordinator
 //! thread, an experiment produces bitwise-identical [`ExperimentResult`]s
-//! at any `exec_threads` setting (proved by `tests/determinism.rs`).
+//! at any `exec_threads` setting (proved by `tests/determinism.rs`) — and
+//! a run resumed from a [`ResumeState`] checkpoint is bitwise-identical
+//! to one that was never interrupted (proved by `tests/resume.rs`).
 
 use rayon::prelude::*;
 
@@ -29,7 +34,7 @@ use crate::data::FedDataset;
 use crate::elastic::importance::global_importance;
 use crate::fl::aggregate::MaskedAggregator;
 use crate::fl::bias::o1_bias;
-use crate::fl::observer::RoundObserver;
+use crate::fl::observer::{RoundObserver, ServerState};
 use crate::manifest::Manifest;
 use crate::runtime::{Engine, TrainSession};
 use crate::strategies::{ClientPlan, FleetCtx, RoundFeedback, Strategy};
@@ -46,11 +51,23 @@ pub struct ServerCfg {
     /// default pool), 1 = fully sequential, n = a dedicated n-thread pool.
     /// Results are identical at any setting.
     pub exec_threads: usize,
+    /// Abort (with an error) after this many completed rounds — simulates
+    /// a mid-flight kill for the fault-tolerance tests and demos: whatever
+    /// a [`crate::store::checkpoint::CheckpointObserver`] persisted up to
+    /// that point is exactly what a crashed process would have left on
+    /// disk. `None` = run to completion.
+    pub halt_after: Option<usize>,
 }
 
 impl Default for ServerCfg {
     fn default() -> Self {
-        ServerCfg { rounds: 50, eval_every: 5, comm_secs: 30.0, exec_threads: 0 }
+        ServerCfg {
+            rounds: 50,
+            eval_every: 5,
+            comm_secs: 30.0,
+            exec_threads: 0,
+            halt_after: None,
+        }
     }
 }
 
@@ -76,19 +93,11 @@ pub struct RoundRecord {
 }
 
 impl RoundRecord {
-    /// Flat JSON object (one line of a `.jsonl` experiment log).
+    /// Flat JSON object (one line of a `.jsonl` experiment log) — the run
+    /// store's canonical round schema ([`crate::store::schema`]), so logs
+    /// and checkpoints serialize identically.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("round", Json::Num(self.round as f64)),
-            ("round_secs", Json::Num(self.round_secs)),
-            ("sim_time", Json::Num(self.sim_time)),
-            ("mean_train_loss", Json::Num(self.mean_train_loss)),
-            ("participants", Json::Num(self.participants as f64)),
-            ("mean_coverage", Json::Num(self.mean_coverage)),
-            ("o1", Json::Num(self.o1)),
-            ("eval_acc", self.eval_acc.map(Json::Num).unwrap_or(Json::Null)),
-            ("eval_loss", self.eval_loss.map(Json::Num).unwrap_or(Json::Null)),
-        ])
+        crate::store::schema::round_record_to_json(self)
     }
 }
 
@@ -131,18 +140,18 @@ pub struct ExperimentResult {
 impl ExperimentResult {
     /// Simulated seconds to first reach `target` accuracy (time-to-accuracy).
     pub fn time_to_accuracy(&self, target: f64) -> Option<f64> {
-        self.records
-            .iter()
-            .find(|r| r.eval_acc.map(|a| a >= target).unwrap_or(false))
-            .map(|r| r.sim_time)
+        crate::store::schema::time_to_accuracy(&self.records, target)
     }
 
     /// Simulated seconds to first reach `target` perplexity (LM; lower=better).
     pub fn time_to_perplexity(&self, target: f64) -> Option<f64> {
-        self.records
-            .iter()
-            .find(|r| r.eval_loss.map(|l| l.exp() <= target).unwrap_or(false))
-            .map(|r| r.sim_time)
+        crate::store::schema::time_to_perplexity(&self.records, target)
+    }
+
+    /// Full result dump (summary + eval curve + every round record) in the
+    /// run store's schema ([`crate::store::schema`]).
+    pub fn to_json(&self) -> Json {
+        crate::store::schema::result_to_json(self)
     }
 
     pub fn final_perplexity(&self) -> f64 {
@@ -166,18 +175,46 @@ impl ExperimentResult {
     }
 }
 
-/// Evaluate the global model over the held-out test set.
+/// Evaluate the global model over the held-out test set. Eval batches fan
+/// out across parallel sessions just like client plans (the coordinator's
+/// long-lived session serves the sequential paths); per-batch results
+/// merge in *batch order* on the coordinator thread, so the score is
+/// thread-count-invariant like everything else in the round loop.
 fn evaluate(
-    session: &mut dyn TrainSession,
+    engine: &dyn Engine,
+    coordinator: &mut dyn TrainSession,
+    pool: ExecPool<'_>,
     ds: &FedDataset,
     params: &[f32],
 ) -> anyhow::Result<(f64, f64)> {
     let mut acc = crate::runtime::EvalOut::default();
-    for (x, y) in &ds.test_batches {
-        let e = session
-            .eval_step(params, x, y)
-            .map_err(|err| anyhow::anyhow!("eval failed: {err}"))?;
-        acc.merge(&e);
+    let parallel = !matches!(pool, ExecPool::Sequential)
+        && engine.parallel_sessions()
+        && ds.test_batches.len() > 1;
+    if parallel {
+        let fan_out = || {
+            ds.test_batches
+                .par_iter()
+                .map_init(
+                    || engine.session(),
+                    |session, (x, y)| session.eval_step(params, x, y),
+                )
+                .collect::<Vec<_>>()
+        };
+        let evals = match pool {
+            ExecPool::Dedicated(pool) => pool.install(fan_out),
+            _ => fan_out(),
+        };
+        for e in evals {
+            acc.merge(&e.map_err(|err| anyhow::anyhow!("eval failed: {err}"))?);
+        }
+    } else {
+        for (x, y) in &ds.test_batches {
+            let e = coordinator
+                .eval_step(params, x, y)
+                .map_err(|err| anyhow::anyhow!("eval failed: {err}"))?;
+            acc.merge(&e);
+        }
     }
     Ok((acc.accuracy(), acc.mean_loss()))
 }
@@ -266,40 +303,113 @@ fn execute_plan(
     })
 }
 
-/// Execute stage, whole round: fan the plans out over the pool and join in
-/// plan order. Each worker drives its own session; outcomes are
-/// bitwise-independent of the scheduling mode.
+/// Execute stage, whole round, streaming: fan the plans out over the pool
+/// and hand each outcome to `fold` in *plan order* the moment its turn
+/// arrives. Outcomes that finish ahead of their turn wait in an order
+/// buffer; folded outcomes are freed immediately, so the join barrier's
+/// peak memory is the out-of-order backlog — in practice a few sessions'
+/// worth — instead of every participant's full parameter vector. Errors
+/// surface in plan order too, not completion order, so even failures are
+/// deterministic at any thread count.
+pub fn execute_plans_streaming(
+    engine: &dyn Engine,
+    inp: &RoundInputs<'_>,
+    plans: &[ClientPlan],
+    pool: ExecPool<'_>,
+    mut fold: impl FnMut(usize, ClientOutcome) -> anyhow::Result<()>,
+) -> anyhow::Result<()> {
+    let m = engine.manifest();
+    if matches!(pool, ExecPool::Sequential) || plans.len() <= 1 || !engine.parallel_sessions() {
+        let mut session = engine.session();
+        for (i, plan) in plans.iter().enumerate() {
+            fold(i, execute_plan(session.as_mut(), inp, m, plan)?)?;
+        }
+        return Ok(());
+    }
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, anyhow::Result<ClientOutcome>)>();
+    std::thread::scope(|scope| {
+        scope.spawn(move || {
+            let fan_out = || {
+                plans.par_iter().enumerate().for_each_init(
+                    || (engine.session(), tx.clone()),
+                    |(session, tx), (i, plan)| {
+                        // A failed send means the coordinator already bailed
+                        // on an earlier plan; this outcome is discarded.
+                        let _ = tx.send((i, execute_plan(session.as_mut(), inp, m, plan)));
+                    },
+                );
+            };
+            match pool {
+                ExecPool::Dedicated(pool) => pool.install(fan_out),
+                _ => fan_out(),
+            }
+        });
+        let mut backlog: std::collections::BTreeMap<usize, anyhow::Result<ClientOutcome>> =
+            std::collections::BTreeMap::new();
+        let mut next = 0usize;
+        for (i, res) in rx {
+            backlog.insert(i, res);
+            while let Some(res) = backlog.remove(&next) {
+                fold(next, res?)?;
+                next += 1;
+            }
+        }
+        anyhow::ensure!(next == plans.len(), "executor lost {} outcomes", plans.len() - next);
+        Ok(())
+    })
+}
+
+/// Execute stage, collected: like [`execute_plans_streaming`] but joining
+/// every outcome into a plan-ordered `Vec` (the pre-streaming API, still
+/// the right call when the caller genuinely needs the whole round at
+/// once). Outcomes are bitwise-independent of the scheduling mode.
 pub fn execute_plans(
     engine: &dyn Engine,
     inp: &RoundInputs<'_>,
     plans: &[ClientPlan],
     pool: ExecPool<'_>,
 ) -> anyhow::Result<Vec<ClientOutcome>> {
-    let m = engine.manifest();
-    if matches!(pool, ExecPool::Sequential) || plans.len() <= 1 || !engine.parallel_sessions() {
-        let mut session = engine.session();
-        return plans
-            .iter()
-            .map(|plan| execute_plan(session.as_mut(), inp, m, plan))
-            .collect();
-    }
-    let fan_out = || {
-        // Collect per-plan results positionally (slice par_iter is an
-        // indexed iterator, so Vec order == plan order), then surface the
-        // first error in plan order — not in completion order — so even
-        // failures are deterministic.
-        let results: Vec<anyhow::Result<ClientOutcome>> = plans
-            .par_iter()
-            .map_init(
-                || engine.session(),
-                |session, plan| execute_plan(session.as_mut(), inp, m, plan),
-            )
-            .collect();
-        results.into_iter().collect::<anyhow::Result<Vec<ClientOutcome>>>()
-    };
-    match pool {
-        ExecPool::Dedicated(pool) => pool.install(fan_out),
-        _ => fan_out(),
+    let mut out = Vec::with_capacity(plans.len());
+    execute_plans_streaming(engine, inp, plans, pool, |_, o| {
+        out.push(o);
+        Ok(())
+    })?;
+    Ok(out)
+}
+
+/// Where to pick an experiment up from: everything the round loop needs to
+/// continue as if it had never stopped. Built by
+/// [`crate::store::checkpoint::resume_state`] from a stored checkpoint, or
+/// by [`ResumeState::warm_start`] to seed a fresh run from stored
+/// parameters.
+pub struct ResumeState {
+    /// Rounds already completed; the loop starts at this round index.
+    pub completed: usize,
+    /// Simulated seconds elapsed over the completed rounds.
+    pub sim_time: f64,
+    /// Global model after round `completed - 1` (or the warm-start seed).
+    pub global: Vec<f32>,
+    /// [`Strategy::policy_state`] snapshot taken at the same point
+    /// (`Json::Null` = fresh strategy).
+    pub policy_state: Json,
+    /// Records of the completed rounds, prepended to the result so a
+    /// resumed [`ExperimentResult`] is indistinguishable from an
+    /// uninterrupted one.
+    pub prior_records: Vec<RoundRecord>,
+}
+
+impl ResumeState {
+    /// Warm start: a brand-new experiment (round 0, fresh clock, fresh
+    /// strategy) whose global model is seeded from stored parameters
+    /// instead of the artifact init.
+    pub fn warm_start(global: Vec<f32>) -> ResumeState {
+        ResumeState {
+            completed: 0,
+            sim_time: 0.0,
+            global,
+            policy_state: Json::Null,
+            prior_records: Vec::new(),
+        }
     }
 }
 
@@ -312,12 +422,58 @@ pub fn run_experiment(
     cfg: &ServerCfg,
     observer: &mut dyn RoundObserver,
 ) -> anyhow::Result<ExperimentResult> {
+    run_experiment_from(engine, ds, strategy, ctx, cfg, observer, None)
+}
+
+/// Run one experiment, optionally continuing from a [`ResumeState`].
+/// Observers see only the rounds executed by *this* call; the result's
+/// record stream covers the whole experiment including prior rounds.
+pub fn run_experiment_from(
+    engine: &dyn Engine,
+    ds: &FedDataset,
+    strategy: &mut dyn Strategy,
+    ctx: &FleetCtx,
+    cfg: &ServerCfg,
+    observer: &mut dyn RoundObserver,
+    resume: Option<ResumeState>,
+) -> anyhow::Result<ExperimentResult> {
     let m = engine.manifest().clone();
     anyhow::ensure!(m.param_count == ctx.manifest.param_count, "engine/ctx manifest mismatch");
     anyhow::ensure!(cfg.eval_every > 0, "eval_every must be >= 1");
-    let mut global = m.load_init().unwrap_or_else(|_| vec![0.0; m.param_count]);
-    let mut records = Vec::with_capacity(cfg.rounds);
-    let mut sim_time = 0.0f64;
+    let (mut global, mut records, mut sim_time, start_round) = match resume {
+        Some(r) => {
+            anyhow::ensure!(
+                r.global.len() == m.param_count,
+                "resume params hold {} elements, manifest wants {}",
+                r.global.len(),
+                m.param_count
+            );
+            anyhow::ensure!(
+                r.completed <= cfg.rounds,
+                "resume point (round {}) is beyond the configured {} rounds",
+                r.completed,
+                cfg.rounds
+            );
+            anyhow::ensure!(
+                r.prior_records.len() == r.completed,
+                "resume carries {} records for {} completed rounds",
+                r.prior_records.len(),
+                r.completed
+            );
+            // Null = fresh strategy (warm start); only real snapshots are
+            // restored.
+            if !matches!(r.policy_state, Json::Null) {
+                strategy.restore_policy_state(&r.policy_state)?;
+            }
+            (r.global, r.prior_records, r.sim_time, r.completed)
+        }
+        None => (
+            m.load_init().unwrap_or_else(|_| vec![0.0; m.param_count]),
+            Vec::with_capacity(cfg.rounds),
+            0.0f64,
+            0,
+        ),
+    };
     let prox_mu = strategy.prox_mu();
     // Eval reuses one coordinator-side session across rounds; a dedicated
     // executor pool (exec_threads > 1) is likewise built once — and not at
@@ -329,22 +485,16 @@ pub fn run_experiment(
         None
     };
 
-    for round in 0..cfg.rounds {
+    for round in start_round..cfg.rounds {
         // -- plan ---------------------------------------------------------
         let plans: Vec<ClientPlan> = strategy.plan_round(round, ctx, &global);
         anyhow::ensure!(!plans.is_empty(), "strategy planned an empty round");
         observer.on_round_start(round, &plans);
 
-        // -- execute (parallel fan-out, joined in plan order) --------------
+        // -- execute + aggregate: outcomes stream back in plan order and
+        //    fold straight into the aggregator, so the join barrier never
+        //    holds the whole fleet's parameters ------------------------------
         let inputs = RoundInputs { ds, ctx, global: &global, round, prox_mu };
-        let outcomes = execute_plans(
-            engine,
-            &inputs,
-            &plans,
-            ExecPool::from_cfg(cfg.exec_threads, dedicated_pool.as_ref()),
-        )?;
-
-        // -- aggregate (deterministic fold in plan order) ------------------
         let mut agg = MaskedAggregator::new(m.param_count, strategy.aggregate_rule());
         let mut fb = RoundFeedback::default();
         let mut tensor_masks: Vec<Vec<f32>> = Vec::with_capacity(plans.len());
@@ -352,30 +502,36 @@ pub fn run_experiment(
         let mut coverage = Vec::with_capacity(plans.len());
         let mut round_secs = 0.0f64;
         let mut client_secs = Vec::with_capacity(plans.len());
-        for (plan, out) in plans.iter().zip(&outcomes) {
-            let weight = ds.clients[plan.client].num_samples as f64;
-            // Re-expand the element mask from the plan rather than carrying
-            // it through the join barrier: an O(P) write per client here is
-            // the same order as agg.add itself, while carrying it would
-            // hold N extra param-sized buffers at the barrier.
-            let elem_mask = plan.mask.expand(&m);
-            agg.add(&out.params, &elem_mask, weight, plan.local_steps, &global);
-            let cov = plan.mask.tensor_coverage();
-            coverage.push(
-                cov.iter().map(|&c| c as f64).sum::<f64>() / cov.len().max(1) as f64,
-            );
-            tensor_masks.push(cov);
-            losses.push(out.mean_loss);
-            round_secs = round_secs.max(plan.est_time);
-            client_secs.push((plan.client, plan.est_time));
-            observer.on_client_done(round, plan, out);
-        }
+        execute_plans_streaming(
+            engine,
+            &inputs,
+            &plans,
+            ExecPool::from_cfg(cfg.exec_threads, dedicated_pool.as_ref()),
+            |i, out| {
+                let plan = &plans[i];
+                let weight = ds.clients[plan.client].num_samples as f64;
+                // Re-expand the element mask from the plan rather than
+                // carrying it through the join: an O(P) write per client
+                // here is the same order as agg.add itself, while carrying
+                // it would double each buffered outcome's footprint.
+                let elem_mask = plan.mask.expand(&m);
+                agg.add(&out.params, &elem_mask, weight, plan.local_steps, &global);
+                let cov = plan.mask.tensor_coverage();
+                coverage
+                    .push(cov.iter().map(|&c| c as f64).sum::<f64>() / cov.len().max(1) as f64);
+                tensor_masks.push(cov);
+                losses.push(out.mean_loss);
+                round_secs = round_secs.max(plan.est_time);
+                client_secs.push((plan.client, plan.est_time));
+                observer.on_client_done(round, plan, &out);
+                // Consume the outcome into the strategy feedback (moves
+                // sq_grads, no clone) now that the observer released it;
+                // the params buffer drops right here.
+                fb.per_client.push((plan.client, out.sq_grads, out.mean_loss));
+                Ok(())
+            },
+        )?;
         let new_global = agg.finish(&global);
-        // Consume the outcomes into the strategy feedback (moves sq_grads,
-        // no clone) now that observers are done borrowing them.
-        for (plan, out) in plans.iter().zip(outcomes) {
-            fb.per_client.push((plan.client, out.sq_grads, out.mean_loss));
-        }
 
         // -- observe -------------------------------------------------------
         fb.global_importance = global_importance(&m, &new_global, &global, ctx.lr);
@@ -388,7 +544,13 @@ pub fn run_experiment(
 
         let do_eval = round % cfg.eval_every == cfg.eval_every - 1 || round + 1 == cfg.rounds;
         let (eval_acc, eval_loss) = if do_eval {
-            let (a, l) = evaluate(eval_session.as_mut(), ds, &global)?;
+            let (a, l) = evaluate(
+                engine,
+                eval_session.as_mut(),
+                ExecPool::from_cfg(cfg.exec_threads, dedicated_pool.as_ref()),
+                ds,
+                &global,
+            )?;
             observer.on_eval(round, a, l);
             (Some(a), Some(l))
         } else {
@@ -408,6 +570,18 @@ pub fn run_experiment(
         };
         observer.on_round_end(&record);
         records.push(record);
+        observer.on_server_state(&ServerState {
+            completed: round + 1,
+            sim_time,
+            global: &global,
+            strategy: &*strategy,
+        });
+        if cfg.halt_after == Some(round + 1) && round + 1 < cfg.rounds {
+            anyhow::bail!(
+                "halted after round {} (simulated interruption — resume from the run store)",
+                round + 1
+            );
+        }
     }
 
     // The last round always evaluated (do_eval is forced on it), so reuse
@@ -415,7 +589,13 @@ pub fn run_experiment(
     // params; the fallback only fires for rounds == 0.
     let (final_acc, final_loss) = match records.last().and_then(|r| r.eval_acc.zip(r.eval_loss)) {
         Some((a, l)) => (a, l),
-        None => evaluate(eval_session.as_mut(), ds, &global)?,
+        None => evaluate(
+            engine,
+            eval_session.as_mut(),
+            ExecPool::from_cfg(cfg.exec_threads, dedicated_pool.as_ref()),
+            ds,
+            &global,
+        )?,
     };
     let result = ExperimentResult {
         strategy: strategy.name().to_string(),

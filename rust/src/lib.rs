@@ -20,6 +20,7 @@
 //! * [`strategies`] — FedEL + the seven baselines.
 //! * [`metrics`] — time-to-accuracy, memory & energy models.
 //! * [`sim`] — fleet construction and end-to-end experiment runner.
+//! * [`store`] — persistent run store: checkpoints, resume, warm start.
 //! * [`report`] — paper-style table/figure emission.
 
 pub mod config;
@@ -31,6 +32,7 @@ pub mod metrics;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod store;
 pub mod strategies;
 pub mod timing;
 pub mod util;

@@ -3,22 +3,32 @@
 //! Subcommands:
 //!   train    — run one FL experiment and print the round log + summary
 //!   compare  — run several strategies on one workload, print a table
+//!   runs     — the persistent run store: list / show / resume / compare
 //!   inspect  — dump a model manifest summary
 //!   list     — list AOT-compiled models under artifacts/
 //!
 //! Examples:
 //!   fedel train --model mlp --strategy fedel --fleet small10 --rounds 40
 //!   fedel train --model mock:8x100 --threads 1 --jsonl rounds.jsonl
+//!   fedel train --model mock:8x100 --store runs --checkpoint-every 5
+//!   fedel train --model mock:8x100 --store runs --warm-start fedel-s42
+//!   fedel runs list --store runs
+//!   fedel runs resume fedel-s42 --store runs
+//!   fedel runs compare fedel-s42 fedavg-s42 --store runs
 //!   fedel compare --model mock:8x100 --strategies fedavg,fedel --rounds 20
 //!   fedel inspect --model vgg_cifar
 
 use std::path::Path;
 
 use fedel::config::ExperimentCfg;
-use fedel::fl::observer::JsonlObserver;
+use fedel::fl::observer::{ConsoleObserver, JsonlObserver, ObserverSet};
+use fedel::fl::server::ResumeState;
 use fedel::manifest;
-use fedel::report::{render_table1, table1_rows, Table};
-use fedel::sim::experiment::Experiment;
+use fedel::report::{render_table1, runs_compare, table1_rows, Table};
+use fedel::sim::experiment::{resume_run, Experiment};
+use fedel::store::checkpoint::CheckpointObserver;
+use fedel::store::schema::RunStatus;
+use fedel::store::RunStore;
 use fedel::util::cli::Args;
 
 fn main() {
@@ -26,13 +36,14 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
         Some("compare") => cmd_compare(&args),
+        Some("runs") => cmd_runs(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("list") => cmd_list(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}");
             }
-            eprintln!("usage: fedel <train|compare|inspect|list> [--key value ...]");
+            eprintln!("usage: fedel <train|compare|runs|inspect|list> [--key value ...]");
             Err(anyhow::anyhow!("bad usage"))
         }
     }
@@ -49,25 +60,67 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.verbose = true;
     let out_json = args.get("out").map(|s| s.to_string());
     let out_jsonl = args.get("jsonl").map(|s| s.to_string());
+    let store_dir = args.get("store").map(|s| s.to_string());
+    let every = args.usize_or("checkpoint-every", 5);
+    let warm = args.get("warm-start").map(|s| s.to_string());
     args.check_unused()?;
     println!("config: {}", cfg.to_json());
     let t0 = std::time::Instant::now();
     let mut exp = Experiment::build(cfg)?;
+
+    // Optional persistence: a run store makes the experiment durable
+    // (checkpointed every k rounds, resumable via `runs resume`) and lets
+    // --warm-start seed the global model from any stored run.
+    let store = store_dir.map(RunStore::open).transpose()?;
+    let strategy_name = exp.cfg.strategy.clone();
+    let mut ckpt = match &store {
+        Some(s) => {
+            let c = CheckpointObserver::create(s, &exp.cfg, &strategy_name, every)?;
+            println!("run id: {} (store {})", c.run_id(), s.root().display());
+            Some(c)
+        }
+        None => None,
+    };
+    let resume = match &warm {
+        Some(src) => {
+            let s = store
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("--warm-start needs --store"))?;
+            println!("warm start: seeding global model from run {src}");
+            Some(ResumeState::warm_start(s.latest_params(src)?))
+        }
+        None => None,
+    };
+
     // A failed round log must not discard a completed run: remember the
     // error, print the results regardless, and fail the exit code at the
     // end.
     let mut log_err: Option<String> = None;
-    let res = if let Some(path) = &out_jsonl {
-        let mut jsonl = JsonlObserver::create(Path::new(path))?;
-        let res = exp.run_observed(None, &mut jsonl)?;
-        match jsonl.take_error() {
+    let mut jsonl = match &out_jsonl {
+        Some(path) => Some(JsonlObserver::create(Path::new(path))?),
+        None => None,
+    };
+    let res = {
+        let mut observers = ObserverSet::new();
+        if let Some(j) = jsonl.as_mut() {
+            observers.push(j);
+        }
+        if let Some(c) = ckpt.as_mut() {
+            observers.push(c);
+        }
+        exp.run_from(None, &mut observers, resume)?
+    };
+    if let (Some(j), Some(path)) = (jsonl.as_mut(), &out_jsonl) {
+        match j.take_error() {
             Some(e) => log_err = Some(format!("writing {path}: {e}")),
             None => println!("round log streamed to {path}"),
         }
-        res
-    } else {
-        exp.run(None)?
-    };
+    }
+    if let Some(c) = ckpt.as_mut() {
+        if let Some(e) = c.take_error() {
+            log_err.get_or_insert(format!("checkpointing run {}: {e}", c.run_id()));
+        }
+    }
     println!(
         "\n{}: {} rounds, simulated {}, final acc {:.2}% (ppl {:.2}), wall {:.1}s",
         res.strategy,
@@ -78,23 +131,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         t0.elapsed().as_secs_f64()
     );
     if let Some(path) = out_json {
-        let curve: Vec<_> = res
-            .acc_curve()
-            .iter()
-            .map(|&(t, a)| fedel::util::json::Json::from_f64s(&[t, a]))
-            .collect();
-        let j = fedel::util::json::Json::obj(vec![
-            ("strategy", fedel::util::json::Json::Str(res.strategy.clone())),
-            ("config", exp.cfg.to_json()),
-            ("final_acc", fedel::util::json::Json::Num(res.final_acc)),
-            ("sim_total_secs", fedel::util::json::Json::Num(res.sim_total_secs)),
-            ("acc_curve", fedel::util::json::Json::Arr(curve)),
-        ]);
+        // The store's result schema, with the config snapshot spliced in
+        // for provenance.
+        let mut j = res.to_json();
+        if let fedel::util::json::Json::Obj(kv) = &mut j {
+            kv.insert(0, ("config".to_string(), exp.cfg.to_json()));
+        }
         std::fs::write(&path, j.to_string_pretty())?;
         println!("wrote {path}");
     }
     if let Some(e) = log_err {
-        anyhow::bail!("round log lost: {e}");
+        anyhow::bail!("run output lost: {e}");
     }
     Ok(())
 }
@@ -118,6 +165,116 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
     )
     .print();
     Ok(())
+}
+
+/// The run-store subcommand family: `runs <list|show|resume|compare> ...`.
+fn cmd_runs(args: &Args) -> anyhow::Result<()> {
+    let store = RunStore::open(args.str_or("store", "runs"))?;
+    let action = args.positional.first().map(|s| s.as_str()).unwrap_or("list");
+    match action {
+        "list" => {
+            args.check_unused()?;
+            let runs = store.list()?;
+            if runs.is_empty() {
+                println!("no stored runs under {}", store.root().display());
+                return Ok(());
+            }
+            let mut t = Table::new(
+                &format!("runs ({})", store.root().display()),
+                &["id", "strategy", "model", "status", "rounds", "final acc", "sim total"],
+            );
+            for m in &runs {
+                let status = match (m.status, &m.checkpoint) {
+                    (RunStatus::Running, Some(_)) => "resumable".to_string(),
+                    (s, _) => s.as_str().to_string(),
+                };
+                t.row(vec![
+                    m.id.clone(),
+                    m.strategy.clone(),
+                    m.config.model.clone(),
+                    status,
+                    format!("{}/{}", m.records.len(), m.config.rounds),
+                    m.final_acc()
+                        .map(|a| format!("{:.2}%", 100.0 * a))
+                        .unwrap_or_else(|| "n/a".into()),
+                    fedel::util::fmt_hours(m.sim_time()),
+                ]);
+            }
+            t.print();
+        }
+        "show" => {
+            let id = run_id_arg(args, "show")?;
+            args.check_unused()?;
+            let m = store.load_manifest(&id)?;
+            println!("run {} [{}]", m.id, m.status.as_str());
+            println!("config: {}", m.config.to_json());
+            if let Some(ck) = &m.checkpoint {
+                println!(
+                    "checkpoint: round {} @ {} ({})",
+                    ck.completed,
+                    fedel::util::fmt_hours(ck.sim_time),
+                    ck.params.digest
+                );
+            }
+            if let Some(f) = &m.final_state {
+                println!(
+                    "final: acc {:.2}%, loss {:.4}, simulated {} ({})",
+                    100.0 * f.final_acc,
+                    f.final_loss,
+                    fedel::util::fmt_hours(f.sim_total_secs),
+                    f.params.digest
+                );
+            }
+            let mut t = Table::new("eval curve", &["round", "sim time", "acc", "loss"]);
+            for r in m.records.iter().filter(|r| r.eval_acc.is_some()) {
+                t.row(vec![
+                    format!("{}", r.round),
+                    fedel::util::fmt_hours(r.sim_time),
+                    format!("{:.4}", r.eval_acc.unwrap_or(0.0)),
+                    format!("{:.4}", r.eval_loss.unwrap_or(0.0)),
+                ]);
+            }
+            t.print();
+        }
+        "resume" => {
+            let id = run_id_arg(args, "resume")?;
+            let every = args.usize_or("checkpoint-every", 5);
+            args.check_unused()?;
+            let mut console = ConsoleObserver::new(&format!("resume:{id}"));
+            let res = resume_run(&store, &id, every, &mut console)?;
+            println!(
+                "run {id} resumed to completion: {} rounds, simulated {}, final acc {:.2}%",
+                res.records.len(),
+                fedel::util::fmt_hours(res.sim_total_secs),
+                100.0 * res.final_acc
+            );
+        }
+        "compare" => {
+            let (a, b) = match &args.positional[..] {
+                [_, a, b] => (a.clone(), b.clone()),
+                _ => anyhow::bail!("usage: fedel runs compare <run-a> <run-b> [--target acc]"),
+            };
+            let target = args.get("target").and_then(|s| s.parse().ok());
+            args.check_unused()?;
+            let ma = store.load_manifest(&a)?;
+            let mb = store.load_manifest(&b)?;
+            let (table, speedup) = runs_compare(&ma, &mb, target);
+            table.print();
+            match speedup {
+                Some(s) => println!("time-to-accuracy: {a} is {s:.2}x vs {b}"),
+                None => println!("time-to-accuracy: at least one run never reaches the target"),
+            }
+        }
+        other => anyhow::bail!("unknown runs action {other:?} (list | show | resume | compare)"),
+    }
+    Ok(())
+}
+
+fn run_id_arg(args: &Args, action: &str) -> anyhow::Result<String> {
+    args.positional
+        .get(1)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("usage: fedel runs {action} <run-id> [--store dir]"))
 }
 
 fn cmd_inspect(args: &Args) -> anyhow::Result<()> {

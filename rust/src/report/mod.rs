@@ -138,6 +138,47 @@ pub fn render_table1(title: &str, rows: &[Table1Row], lm: bool) -> Table {
     t
 }
 
+/// Compare two *stored* runs at matched accuracy ([`crate::store`]): one
+/// row per run with final accuracy, simulated total, and time-to-target,
+/// where target = `target` or 95% of the lesser final accuracy. The
+/// second return value is the speedup of `a` over `b` at the target
+/// (None when either run never reaches it).
+pub fn runs_compare(
+    a: &crate::store::schema::RunManifest,
+    b: &crate::store::schema::RunManifest,
+    target: Option<f64>,
+) -> (Table, Option<f64>) {
+    use crate::store::schema::time_to_accuracy;
+    let lesser = a.final_acc().unwrap_or(0.0).min(b.final_acc().unwrap_or(0.0));
+    let target = target.unwrap_or(0.95 * lesser);
+    let mut t = Table::new(
+        &format!("runs compare @ acc {:.3}", target),
+        &["run", "strategy", "rounds", "final acc", "sim total", "time-to-target"],
+    );
+    let times: Vec<Option<f64>> = [a, b]
+        .iter()
+        .map(|m| {
+            let tta = time_to_accuracy(&m.records, target);
+            t.row(vec![
+                m.id.clone(),
+                m.strategy.clone(),
+                format!("{}", m.records.len()),
+                m.final_acc()
+                    .map(|x| format!("{:.2}%", 100.0 * x))
+                    .unwrap_or_else(|| "n/a".into()),
+                crate::util::fmt_hours(m.sim_time()),
+                tta.map(crate::util::fmt_hours).unwrap_or_else(|| "never".into()),
+            ]);
+            tta
+        })
+        .collect();
+    let speedup = match (times[0], times[1]) {
+        (Some(ta), Some(tb)) => Some(tb / ta.max(1e-9)),
+        _ => None,
+    };
+    (t, speedup)
+}
+
 /// Print a "paper reports" reference line under a reproduced table.
 pub fn paper_note(lines: &[&str]) {
     println!("  paper reference:");
@@ -205,6 +246,34 @@ mod tests {
         let s = rows[1].speedup_vs_fedavg.unwrap();
         // fedavg reaches 0.57 at t=200; fedel at t=100 -> 2x
         assert!((s - 2.0).abs() < 1e-9, "{s}");
+    }
+
+    #[test]
+    fn runs_compare_reports_time_to_accuracy_delta() {
+        use crate::store::schema::{RunManifest, RunStatus, SCHEMA_VERSION};
+        let man = |id: &str, strategy: &str, curve: &[(f64, f64)], final_acc: f64| RunManifest {
+            schema_version: SCHEMA_VERSION,
+            id: id.into(),
+            created_unix: 0,
+            updated_unix: 0,
+            status: RunStatus::Running,
+            strategy: strategy.into(),
+            config: Default::default(),
+            records: fake_result(strategy, curve, final_acc).records,
+            checkpoint: None,
+            final_state: None,
+        };
+        // both reach 95% of the lesser final acc (0.95*0.6=0.57): fedavg
+        // at t=200, fedel at t=100 -> fedel is 2x faster.
+        let a = man("fedel-s1", "fedel", &[(50.0, 0.4), (100.0, 0.62)], 0.62);
+        let b = man("fedavg-s1", "fedavg", &[(100.0, 0.3), (200.0, 0.6)], 0.6);
+        let (t, speedup) = runs_compare(&a, &b, None);
+        assert_eq!(t.rows.len(), 2);
+        assert!((speedup.unwrap() - 2.0).abs() < 1e-9, "{speedup:?}");
+        // a target nobody reaches -> no speedup, "never" rows
+        let (t, none) = runs_compare(&a, &b, Some(0.99));
+        assert!(none.is_none());
+        assert!(t.rows.iter().all(|r| r.last().unwrap() == "never"));
     }
 
     #[test]

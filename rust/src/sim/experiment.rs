@@ -4,16 +4,23 @@
 //! [`Experiment::run`] executes with the config's observers (console log
 //! when `verbose`, selection traces when `record_selections`);
 //! [`Experiment::run_observed`] additionally attaches a caller-supplied
-//! [`RoundObserver`] (progress bars, JSONL reporters, ...).
+//! [`RoundObserver`] (progress bars, JSONL reporters, checkpointers, ...);
+//! [`Experiment::run_from`] also takes a [`ResumeState`] (stored
+//! checkpoint or warm start). [`resume_run`] is the whole fault-tolerance
+//! path in one call: stored run id -> rebuilt experiment -> continued,
+//! still-checkpointed execution, bitwise-identical to a run that was
+//! never interrupted.
 
 use crate::config::ExperimentCfg;
 use crate::data::FedDataset;
 use crate::fl::observer::{ConsoleObserver, NullObserver, ObserverSet, RoundObserver, SelectionTrace};
-use crate::fl::server::{run_experiment, ExperimentResult, ServerCfg};
+use crate::fl::server::{run_experiment_from, ExperimentResult, ResumeState, ServerCfg};
 use crate::manifest::tests_support::chain_manifest;
 use crate::manifest::Manifest;
 use crate::runtime::{Engine, MockEngine};
 use crate::sim::fleet::{build_fleet, fastest, slowest};
+use crate::store::checkpoint::CheckpointObserver;
+use crate::store::RunStore;
 use crate::strategies::{by_name, FleetCtx};
 use crate::timing::{DeviceProfile, TimingCfg, TimingModel};
 
@@ -113,6 +120,19 @@ impl Experiment {
         strategy_override: Option<&str>,
         extra: &mut dyn RoundObserver,
     ) -> anyhow::Result<ExperimentResult> {
+        self.run_from(strategy_override, extra, None)
+    }
+
+    /// Run one strategy, optionally continuing from a [`ResumeState`]
+    /// (checkpoint resume or warm start). Selection traces, when enabled,
+    /// cover only the rounds executed by this call — traces are not part
+    /// of checkpoints.
+    pub fn run_from(
+        &mut self,
+        strategy_override: Option<&str>,
+        extra: &mut dyn RoundObserver,
+        resume: Option<ResumeState>,
+    ) -> anyhow::Result<ExperimentResult> {
         let name = strategy_override.unwrap_or(&self.cfg.strategy).to_string();
         let mut strategy = by_name(&name, &self.ctx, self.cfg.beta, self.cfg.seed)?;
         let server_cfg = ServerCfg {
@@ -120,6 +140,7 @@ impl Experiment {
             eval_every: self.cfg.eval_every,
             comm_secs: self.cfg.comm_secs,
             exec_threads: self.cfg.exec_threads,
+            halt_after: self.cfg.halt_after,
         };
         let mut console = self.cfg.verbose.then(|| ConsoleObserver::new(&name));
         let mut trace = self.cfg.record_selections.then(SelectionTrace::default);
@@ -131,13 +152,14 @@ impl Experiment {
             observers.push(t);
         }
         observers.push(extra);
-        let mut res = run_experiment(
+        let mut res = run_experiment_from(
             self.engine.as_ref(),
             &self.dataset,
             strategy.as_mut(),
             &self.ctx,
             &server_cfg,
             &mut observers,
+            resume,
         )?;
         drop(observers);
         if let Some(t) = trace {
@@ -145,6 +167,38 @@ impl Experiment {
         }
         Ok(res)
     }
+}
+
+/// Resume an interrupted stored run to completion: rebuild the experiment
+/// from the manifest's config snapshot, restore global parameters + policy
+/// state (+ strategy RNG) from the latest checkpoint, and continue the
+/// round loop — checkpointing every `every` rounds into the same run. The
+/// result is bitwise-identical to a run that was never interrupted
+/// (`tests/resume.rs`).
+pub fn resume_run(
+    store: &RunStore,
+    id: &str,
+    every: usize,
+    extra: &mut dyn RoundObserver,
+) -> anyhow::Result<ExperimentResult> {
+    let mut manifest = store.load_manifest(id)?;
+    let resume = crate::store::checkpoint::resume_state(store, &manifest)?;
+    // Anything recorded past the checkpoint will be recomputed (and, by
+    // the determinism invariant, recomputed identically).
+    manifest.records.truncate(resume.completed);
+    let name = manifest.strategy.clone();
+    let mut exp = Experiment::build(manifest.config.clone())?;
+    let mut ckpt = CheckpointObserver::resume(store, manifest, every);
+    let res = {
+        let mut set = ObserverSet::new();
+        set.push(&mut ckpt);
+        set.push(extra);
+        exp.run_from(Some(&name), &mut set, Some(resume))?
+    };
+    if let Some(e) = ckpt.take_error() {
+        anyhow::bail!("run {id} resumed, but persisting its state failed: {e}");
+    }
+    Ok(res)
 }
 
 /// Convenience: build + run in one call.

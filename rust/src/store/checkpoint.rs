@@ -1,0 +1,152 @@
+//! CheckpointObserver: the bridge between the server's observer seam and
+//! the run store. It accumulates round records as they close and, every k
+//! rounds, persists a [`Checkpoint`] — global parameters as a
+//! content-addressed blob plus the strategy's policy snapshot — with an
+//! atomic manifest rewrite. A killed process therefore leaves exactly its
+//! last checkpoint on disk, and [`resume_state`] turns that back into the
+//! [`ResumeState`] the round loop continues from.
+//!
+//! Persistence failures follow the [`crate::fl::observer::JsonlObserver`]
+//! idiom: best-effort during the run (a full disk never aborts training),
+//! with the first error retained for callers that need the checkpoints to
+//! have landed ([`CheckpointObserver::take_error`]).
+
+use crate::config::ExperimentCfg;
+use crate::fl::observer::{RoundObserver, ServerState};
+use crate::fl::server::{ExperimentResult, ResumeState, RoundRecord};
+use crate::store::schema::{Checkpoint, FinalState, RunManifest, RunStatus, SCHEMA_VERSION};
+use crate::store::RunStore;
+
+fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+pub struct CheckpointObserver<'s> {
+    store: &'s RunStore,
+    manifest: RunManifest,
+    every: usize,
+    error: Option<anyhow::Error>,
+}
+
+impl<'s> CheckpointObserver<'s> {
+    /// Register a brand-new run (fresh id from strategy + seed) and
+    /// persist its initial, empty manifest so the run is visible in
+    /// `runs list` from round 0.
+    pub fn create(
+        store: &'s RunStore,
+        cfg: &ExperimentCfg,
+        strategy: &str,
+        every: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(every >= 1, "checkpoint interval must be >= 1");
+        let mut config = cfg.clone();
+        config.strategy = strategy.to_string();
+        let now = unix_now();
+        let manifest = RunManifest {
+            schema_version: SCHEMA_VERSION,
+            id: store.fresh_run_id(strategy, cfg.seed),
+            created_unix: now,
+            updated_unix: now,
+            status: RunStatus::Running,
+            strategy: strategy.to_string(),
+            config,
+            records: Vec::new(),
+            checkpoint: None,
+            final_state: None,
+        };
+        store.save_manifest(&manifest)?;
+        Ok(CheckpointObserver { store, manifest, every, error: None })
+    }
+
+    /// Continue checkpointing an existing run (the resume path); the
+    /// manifest should already be truncated to its checkpoint.
+    pub fn resume(store: &'s RunStore, manifest: RunManifest, every: usize) -> Self {
+        CheckpointObserver { store, manifest, every: every.max(1), error: None }
+    }
+
+    pub fn run_id(&self) -> &str {
+        &self.manifest.id
+    }
+
+    /// The first persistence error, if any. Callers that rely on the
+    /// checkpoints (tests, `runs resume`) must check this after the run.
+    pub fn take_error(&mut self) -> Option<anyhow::Error> {
+        self.error.take()
+    }
+
+    fn record(&mut self, r: anyhow::Result<()>) {
+        if let Err(e) = r {
+            self.error.get_or_insert(e);
+        }
+    }
+}
+
+impl RoundObserver for CheckpointObserver<'_> {
+    fn on_round_end(&mut self, record: &RoundRecord) {
+        self.manifest.records.push(record.clone());
+    }
+
+    fn on_server_state(&mut self, st: &ServerState<'_>) {
+        if st.completed % self.every != 0 {
+            return;
+        }
+        let r = self.store.put_params(st.global).and_then(|params| {
+            self.manifest.checkpoint = Some(Checkpoint {
+                completed: st.completed,
+                sim_time: st.sim_time,
+                params,
+                policy_state: st.strategy.policy_state(),
+            });
+            self.manifest.updated_unix = unix_now();
+            self.store.save_manifest(&self.manifest)
+        });
+        self.record(r);
+    }
+
+    fn on_experiment_end(&mut self, res: &ExperimentResult) {
+        let r = self.store.put_params(&res.final_params).and_then(|params| {
+            self.manifest.status = RunStatus::Complete;
+            self.manifest.final_state = Some(FinalState {
+                final_acc: res.final_acc,
+                final_loss: res.final_loss,
+                sim_total_secs: res.sim_total_secs,
+                params,
+            });
+            self.manifest.updated_unix = unix_now();
+            self.store.save_manifest(&self.manifest)
+        });
+        self.record(r);
+    }
+}
+
+/// Rebuild the [`ResumeState`] of a stored run from its latest checkpoint:
+/// global parameters from the blob store, policy (+ RNG) state from the
+/// snapshot, and the completed rounds' records.
+pub fn resume_state(store: &RunStore, manifest: &RunManifest) -> anyhow::Result<ResumeState> {
+    anyhow::ensure!(
+        manifest.status == RunStatus::Running,
+        "run {} already completed — warm-start a new run from it instead",
+        manifest.id
+    );
+    let ck = manifest
+        .checkpoint
+        .as_ref()
+        .ok_or_else(|| anyhow::anyhow!("run {} has no checkpoint to resume from", manifest.id))?;
+    anyhow::ensure!(
+        manifest.records.len() >= ck.completed,
+        "run {}: manifest holds {} records but its checkpoint is at round {}",
+        manifest.id,
+        manifest.records.len(),
+        ck.completed
+    );
+    Ok(ResumeState {
+        completed: ck.completed,
+        sim_time: ck.sim_time,
+        global: store.get_params(&ck.params)?,
+        policy_state: ck.policy_state.clone(),
+        prior_records: manifest.records[..ck.completed].to_vec(),
+    })
+}

@@ -1,0 +1,284 @@
+//! Persistent run store: checkpointed, resumable, comparable experiments.
+//!
+//! FedEL's headline metric is time-to-accuracy over long multi-round
+//! campaigns; real deployments treat interruption as the norm. This
+//! subsystem makes run state durable and first-class:
+//!
+//! ```text
+//! <root>/
+//!   runs/<id>/manifest.json   versioned RunManifest (schema.rs): config
+//!                             snapshot, round records, latest checkpoint,
+//!                             final summary
+//!   blobs/<sha256-hex>        content-addressed blobs (global parameter
+//!                             vectors, f32 little-endian) — identical
+//!                             snapshots dedup across rounds and runs
+//! ```
+//!
+//! * [`checkpoint::CheckpointObserver`] hangs off the server's observer
+//!   seam and persists every k rounds (atomically: tmp + rename).
+//! * [`checkpoint::resume_state`] turns a stored checkpoint back into a
+//!   [`crate::fl::server::ResumeState`]; resumed runs are
+//!   bitwise-identical to uninterrupted ones (`tests/resume.rs`).
+//! * [`RunStore::latest_params`] is the warm-start seam: any stored run
+//!   can seed a new experiment's global model.
+//!
+//! CLI: `fedel runs list | show <id> | resume <id> | compare <a> <b>`.
+
+pub mod checkpoint;
+pub mod schema;
+
+use std::path::{Path, PathBuf};
+
+use crate::util::sha256;
+use self::schema::{BlobRef, RunManifest};
+
+/// Media type of a little-endian f32 parameter-vector blob (the same
+/// encoding as the artifacts' `init.bin`).
+pub const MEDIA_PARAMS_F32LE: &str = "application/x-fedel-params.f32le";
+
+/// A store rooted at one directory; see the module docs for the layout.
+pub struct RunStore {
+    root: PathBuf,
+}
+
+impl RunStore {
+    /// Open a store, creating the directory skeleton if absent.
+    pub fn open(root: impl Into<PathBuf>) -> anyhow::Result<RunStore> {
+        let root = root.into();
+        for sub in ["runs", "blobs"] {
+            let dir = root.join(sub);
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| anyhow::anyhow!("create {dir:?}: {e}"))?;
+        }
+        Ok(RunStore { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn run_dir(&self, id: &str) -> PathBuf {
+        self.root.join("runs").join(id)
+    }
+
+    fn blob_path(&self, hex: &str) -> PathBuf {
+        self.root.join("blobs").join(hex)
+    }
+
+    // -- runs ---------------------------------------------------------------
+
+    /// Allocate a fresh, human-readable run id: `<strategy>-s<seed>`,
+    /// suffixed `-2`, `-3`, ... when taken.
+    pub fn fresh_run_id(&self, strategy: &str, seed: u64) -> String {
+        let base = format!("{strategy}-s{seed}");
+        if !self.run_dir(&base).exists() {
+            return base;
+        }
+        let mut n = 2usize;
+        loop {
+            let id = format!("{base}-{n}");
+            if !self.run_dir(&id).exists() {
+                return id;
+            }
+            n += 1;
+        }
+    }
+
+    /// Persist a manifest atomically (tmp + rename): a crash mid-write
+    /// leaves the previous manifest intact, never a torn one.
+    pub fn save_manifest(&self, m: &RunManifest) -> anyhow::Result<()> {
+        let dir = self.run_dir(&m.id);
+        std::fs::create_dir_all(&dir).map_err(|e| anyhow::anyhow!("create {dir:?}: {e}"))?;
+        let tmp = dir.join("manifest.json.tmp");
+        std::fs::write(&tmp, m.to_json().to_string_pretty())
+            .map_err(|e| anyhow::anyhow!("write {tmp:?}: {e}"))?;
+        let path = dir.join("manifest.json");
+        std::fs::rename(&tmp, &path).map_err(|e| anyhow::anyhow!("rename to {path:?}: {e}"))?;
+        Ok(())
+    }
+
+    pub fn load_manifest(&self, id: &str) -> anyhow::Result<RunManifest> {
+        let path = self.run_dir(id).join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("no stored run {id:?} ({path:?}: {e})"))?;
+        let j = crate::util::json::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        RunManifest::from_json(&j).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))
+    }
+
+    /// All stored runs, oldest first (creation time, then id). Unreadable
+    /// manifests (torn external copies, future schema versions) are
+    /// skipped with a warning — one bad directory must not take the whole
+    /// store's listing down.
+    pub fn list(&self) -> anyhow::Result<Vec<RunManifest>> {
+        let dir = self.root.join("runs");
+        let mut out = Vec::new();
+        for entry in
+            std::fs::read_dir(&dir).map_err(|e| anyhow::anyhow!("read {dir:?}: {e}"))?
+        {
+            let entry = entry?;
+            if !entry.path().join("manifest.json").exists() {
+                continue;
+            }
+            match self.load_manifest(&entry.file_name().to_string_lossy()) {
+                Ok(m) => out.push(m),
+                Err(e) => eprintln!("warning: skipping unreadable run: {e}"),
+            }
+        }
+        out.sort_by(|a, b| {
+            a.created_unix.cmp(&b.created_unix).then_with(|| a.id.cmp(&b.id))
+        });
+        Ok(out)
+    }
+
+    // -- blobs --------------------------------------------------------------
+
+    /// Store bytes under their content address; already-present digests
+    /// are not rewritten, so identical snapshots dedup for free.
+    pub fn put_blob(&self, bytes: &[u8], media_type: &str) -> anyhow::Result<BlobRef> {
+        let hex = sha256::hex(bytes);
+        let path = self.blob_path(&hex);
+        if !path.exists() {
+            let tmp = self.blob_path(&format!("{hex}.tmp"));
+            std::fs::write(&tmp, bytes).map_err(|e| anyhow::anyhow!("write {tmp:?}: {e}"))?;
+            std::fs::rename(&tmp, &path)
+                .map_err(|e| anyhow::anyhow!("rename to {path:?}: {e}"))?;
+        }
+        Ok(BlobRef {
+            digest: format!("sha256:{hex}"),
+            size: bytes.len() as u64,
+            media_type: media_type.to_string(),
+        })
+    }
+
+    /// Fetch a blob, verifying size and digest (a store is only useful if
+    /// corruption is loud).
+    pub fn get_blob(&self, r: &BlobRef) -> anyhow::Result<Vec<u8>> {
+        let hex = r
+            .digest
+            .strip_prefix("sha256:")
+            .ok_or_else(|| anyhow::anyhow!("unsupported digest {:?}", r.digest))?;
+        let path = self.blob_path(hex);
+        let bytes =
+            std::fs::read(&path).map_err(|e| anyhow::anyhow!("read blob {path:?}: {e}"))?;
+        anyhow::ensure!(
+            bytes.len() as u64 == r.size,
+            "blob {hex}: {} bytes on disk, descriptor says {}",
+            bytes.len(),
+            r.size
+        );
+        anyhow::ensure!(sha256::hex(&bytes) == hex, "blob {hex}: content digest mismatch");
+        Ok(bytes)
+    }
+
+    /// Store a global parameter vector (little-endian f32 — bitwise exact).
+    pub fn put_params(&self, params: &[f32]) -> anyhow::Result<BlobRef> {
+        let mut bytes = Vec::with_capacity(params.len() * 4);
+        for x in params {
+            bytes.extend_from_slice(&x.to_le_bytes());
+        }
+        self.put_blob(&bytes, MEDIA_PARAMS_F32LE)
+    }
+
+    pub fn get_params(&self, r: &BlobRef) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            r.media_type == MEDIA_PARAMS_F32LE,
+            "blob {} is {:?}, not a parameter vector",
+            r.digest,
+            r.media_type
+        );
+        let bytes = self.get_blob(r)?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "params blob not a multiple of 4 bytes");
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Warm-start source: a stored run's newest global parameters — the
+    /// final model if complete, else the latest checkpoint.
+    pub fn latest_params(&self, id: &str) -> anyhow::Result<Vec<f32>> {
+        let m = self.load_manifest(id)?;
+        let blob = m
+            .final_state
+            .as_ref()
+            .map(|f| &f.params)
+            .or_else(|| m.checkpoint.as_ref().map(|c| &c.params))
+            .ok_or_else(|| anyhow::anyhow!("run {id} has no stored parameters yet"))?;
+        self.get_params(blob)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("fedel-store-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn blob_round_trip_and_dedup() {
+        let dir = scratch("blob");
+        let store = RunStore::open(&dir).unwrap();
+        let a = store.put_blob(b"hello", "text/plain").unwrap();
+        let b = store.put_blob(b"hello", "text/plain").unwrap();
+        assert_eq!(a, b, "identical content must share one address");
+        assert_eq!(store.get_blob(&a).unwrap(), b"hello");
+        let blobs: Vec<_> = std::fs::read_dir(dir.join("blobs")).unwrap().collect();
+        assert_eq!(blobs.len(), 1, "dedup must not write twice");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn params_round_trip_bitwise() {
+        let dir = scratch("params");
+        let store = RunStore::open(&dir).unwrap();
+        let params = vec![0.1f32, -0.0, f32::MIN_POSITIVE, 1.0e30, -7.25];
+        let r = store.put_params(&params).unwrap();
+        let back = store.get_params(&r).unwrap();
+        assert_eq!(params.len(), back.len());
+        for (a, b) in params.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let dir = scratch("corrupt");
+        let store = RunStore::open(&dir).unwrap();
+        let r = store.put_blob(b"precious", "text/plain").unwrap();
+        let hex = r.digest.strip_prefix("sha256:").unwrap();
+        std::fs::write(store.blob_path(hex), b"precioms").unwrap();
+        let err = store.get_blob(&r).unwrap_err();
+        assert!(err.to_string().contains("digest mismatch"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fresh_run_ids_never_collide() {
+        let dir = scratch("ids");
+        let store = RunStore::open(&dir).unwrap();
+        let a = store.fresh_run_id("fedel", 42);
+        assert_eq!(a, "fedel-s42");
+        std::fs::create_dir_all(store.run_dir(&a)).unwrap();
+        let b = store.fresh_run_id("fedel", 42);
+        assert_eq!(b, "fedel-s42-2");
+        std::fs::create_dir_all(store.run_dir(&b)).unwrap();
+        assert_eq!(store.fresh_run_id("fedel", 42), "fedel-s42-3");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wrong_media_type_rejected_for_params() {
+        let dir = scratch("media");
+        let store = RunStore::open(&dir).unwrap();
+        let r = store.put_blob(&[0u8; 8], "text/plain").unwrap();
+        assert!(store.get_params(&r).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

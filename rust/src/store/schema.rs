@@ -1,0 +1,476 @@
+//! The run store's versioned, serde-style schema (the offline registry has
+//! no serde, so the types (de)serialize explicitly over [`crate::util::json`]).
+//!
+//! One [`RunManifest`] per stored run (`runs/<id>/manifest.json`) carries
+//! the config snapshot, the full round-record stream, the latest
+//! [`Checkpoint`] (resume point), and the [`FinalState`] once complete.
+//! Bulk data — global parameter vectors — never lives in the manifest:
+//! it is content-addressed into `blobs/<sha256>` and referenced by
+//! [`BlobRef`] (the OCI descriptor idiom: digest + size + media type), so
+//! identical snapshots dedup across rounds and runs.
+//!
+//! Round-trip exactness is a design requirement, not a nicety: resumed
+//! runs must be bitwise-identical to uninterrupted ones, so every f64
+//! rides the JSON writer's shortest round-trip Display, f32 parameters
+//! ride little-endian blobs, and u64 RNG words ride strings. These same
+//! functions back `RoundRecord::to_json` / `ExperimentResult::to_json`
+//! and the JSONL observer, so logs, result dumps, and checkpoints share
+//! one serialization path.
+
+use crate::config::ExperimentCfg;
+use crate::fl::server::{ExperimentResult, RoundRecord};
+use crate::util::json::Json;
+
+/// Bump on any incompatible manifest change; `RunManifest::from_json`
+/// rejects versions it does not understand.
+pub const SCHEMA_VERSION: usize = 1;
+
+/// Content-addressed reference to a blob in the store.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlobRef {
+    /// `sha256:<lowercase hex>` of the blob's bytes.
+    pub digest: String,
+    /// Byte length (integrity-checked on read).
+    pub size: u64,
+    /// What the bytes are (e.g. [`crate::store::MEDIA_PARAMS_F32LE`]).
+    pub media_type: String,
+}
+
+impl BlobRef {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("digest", Json::Str(self.digest.clone())),
+            ("size", Json::Num(self.size as f64)),
+            ("mediaType", Json::Str(self.media_type.clone())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<BlobRef> {
+        Ok(BlobRef {
+            digest: j.s("digest")?.to_string(),
+            size: j.f("size")? as u64,
+            media_type: j.s("mediaType")?.to_string(),
+        })
+    }
+}
+
+/// Lifecycle of a stored run. A crashed process leaves `Running` behind —
+/// that plus a checkpoint is exactly what "resumable" means.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunStatus {
+    Running,
+    Complete,
+}
+
+impl RunStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RunStatus::Running => "running",
+            RunStatus::Complete => "complete",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<RunStatus> {
+        match s {
+            "running" => Ok(RunStatus::Running),
+            "complete" => Ok(RunStatus::Complete),
+            other => anyhow::bail!("unknown run status {other:?}"),
+        }
+    }
+}
+
+/// A resume point: everything [`crate::fl::server::run_experiment_from`]
+/// needs beyond the config snapshot and round records.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Rounds completed when the checkpoint was taken.
+    pub completed: usize,
+    /// Simulated clock at that point.
+    pub sim_time: f64,
+    /// Global parameters after round `completed - 1`.
+    pub params: BlobRef,
+    /// [`crate::strategies::Strategy::policy_state`] snapshot (includes
+    /// any strategy RNG state; `Null` for stateless strategies).
+    pub policy_state: Json,
+}
+
+impl Checkpoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("completed", Json::Num(self.completed as f64)),
+            ("sim_time", Json::Num(self.sim_time)),
+            ("params", self.params.to_json()),
+            ("policy_state", self.policy_state.clone()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Checkpoint> {
+        Ok(Checkpoint {
+            completed: j.u("completed")?,
+            sim_time: j.f("sim_time")?,
+            params: BlobRef::from_json(j.req("params")?)?,
+            policy_state: j.get("policy_state").cloned().unwrap_or(Json::Null),
+        })
+    }
+}
+
+/// Terminal summary of a completed run; `params` is the final global model
+/// (the warm-start seed of choice).
+#[derive(Clone, Debug)]
+pub struct FinalState {
+    pub final_acc: f64,
+    pub final_loss: f64,
+    pub sim_total_secs: f64,
+    pub params: BlobRef,
+}
+
+impl FinalState {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("final_acc", Json::Num(self.final_acc)),
+            ("final_loss", Json::Num(self.final_loss)),
+            ("sim_total_secs", Json::Num(self.sim_total_secs)),
+            ("params", self.params.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<FinalState> {
+        Ok(FinalState {
+            final_acc: j.f("final_acc")?,
+            final_loss: j.f("final_loss")?,
+            sim_total_secs: j.f("sim_total_secs")?,
+            params: BlobRef::from_json(j.req("params")?)?,
+        })
+    }
+}
+
+/// Everything the store knows about one run: `runs/<id>/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct RunManifest {
+    pub schema_version: usize,
+    pub id: String,
+    pub created_unix: u64,
+    pub updated_unix: u64,
+    pub status: RunStatus,
+    /// Resolved strategy (the config's unless overridden at launch).
+    pub strategy: String,
+    /// Config snapshot — enough to rebuild the engine, fleet, dataset, and
+    /// strategy deterministically ([`ExperimentCfg::from_json`]).
+    pub config: ExperimentCfg,
+    /// Round records up to the latest persisted point.
+    pub records: Vec<RoundRecord>,
+    pub checkpoint: Option<Checkpoint>,
+    pub final_state: Option<FinalState>,
+}
+
+impl RunManifest {
+    /// Final accuracy: the terminal summary if complete, else the newest
+    /// eval on record.
+    pub fn final_acc(&self) -> Option<f64> {
+        self.final_state
+            .as_ref()
+            .map(|f| f.final_acc)
+            .or_else(|| self.records.iter().rev().find_map(|r| r.eval_acc))
+    }
+
+    /// Simulated seconds covered by the persisted records.
+    pub fn sim_time(&self) -> f64 {
+        self.records.last().map(|r| r.sim_time).unwrap_or(0.0)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::Num(self.schema_version as f64)),
+            ("id", Json::Str(self.id.clone())),
+            ("created_unix", Json::Num(self.created_unix as f64)),
+            ("updated_unix", Json::Num(self.updated_unix as f64)),
+            ("status", Json::Str(self.status.as_str().to_string())),
+            ("strategy", Json::Str(self.strategy.clone())),
+            ("config", self.config.to_json()),
+            (
+                "records",
+                Json::Arr(self.records.iter().map(round_record_to_json).collect()),
+            ),
+            (
+                "checkpoint",
+                self.checkpoint.as_ref().map(Checkpoint::to_json).unwrap_or(Json::Null),
+            ),
+            (
+                "final_state",
+                self.final_state.as_ref().map(FinalState::to_json).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<RunManifest> {
+        let version = j.u("schema_version")?;
+        anyhow::ensure!(
+            version == SCHEMA_VERSION,
+            "run manifest schema v{version} unsupported (this build reads v{SCHEMA_VERSION})"
+        );
+        let opt = |key: &str| match j.get(key) {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(v),
+        };
+        Ok(RunManifest {
+            schema_version: version,
+            id: j.s("id")?.to_string(),
+            created_unix: j.f("created_unix")? as u64,
+            updated_unix: j.f("updated_unix")? as u64,
+            status: RunStatus::parse(j.s("status")?)?,
+            strategy: j.s("strategy")?.to_string(),
+            config: ExperimentCfg::from_json(j.req("config")?)?,
+            records: j
+                .arr("records")?
+                .iter()
+                .map(round_record_from_json)
+                .collect::<anyhow::Result<_>>()?,
+            checkpoint: opt("checkpoint").map(Checkpoint::from_json).transpose()?,
+            final_state: opt("final_state").map(FinalState::from_json).transpose()?,
+        })
+    }
+}
+
+// -- round records ----------------------------------------------------------
+
+/// Canonical [`RoundRecord`] serialization (manifests, JSONL logs, result
+/// dumps all use this one function).
+pub fn round_record_to_json(r: &RoundRecord) -> Json {
+    Json::obj(vec![
+        ("round", Json::Num(r.round as f64)),
+        ("round_secs", Json::Num(r.round_secs)),
+        ("sim_time", Json::Num(r.sim_time)),
+        ("mean_train_loss", Json::Num(r.mean_train_loss)),
+        ("participants", Json::Num(r.participants as f64)),
+        ("mean_coverage", Json::Num(r.mean_coverage)),
+        ("o1", Json::Num(r.o1)),
+        ("eval_acc", r.eval_acc.map(Json::Num).unwrap_or(Json::Null)),
+        ("eval_loss", r.eval_loss.map(Json::Num).unwrap_or(Json::Null)),
+        (
+            "client_secs",
+            Json::Arr(
+                r.client_secs
+                    .iter()
+                    .map(|&(c, t)| Json::Arr(vec![Json::Num(c as f64), Json::Num(t)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+pub fn round_record_from_json(j: &Json) -> anyhow::Result<RoundRecord> {
+    let eval = |key: &str| match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("round record {key} not a number")),
+    };
+    let client_secs = j
+        .arr("client_secs")?
+        .iter()
+        .map(|pair| {
+            let pair = pair.as_arr().filter(|p| p.len() == 2);
+            let pair = pair.ok_or_else(|| anyhow::anyhow!("client_secs entry not a pair"))?;
+            let c = pair[0]
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("client_secs client not a number"))?;
+            let t = pair[1]
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("client_secs seconds not a number"))?;
+            Ok((c, t))
+        })
+        .collect::<anyhow::Result<_>>()?;
+    Ok(RoundRecord {
+        round: j.u("round")?,
+        round_secs: j.f("round_secs")?,
+        sim_time: j.f("sim_time")?,
+        mean_train_loss: j.f("mean_train_loss")?,
+        participants: j.u("participants")?,
+        mean_coverage: j.f("mean_coverage")?,
+        o1: j.f("o1")?,
+        eval_acc: eval("eval_acc")?,
+        eval_loss: eval("eval_loss")?,
+        client_secs,
+    })
+}
+
+// -- results ----------------------------------------------------------------
+
+/// Terminal result summary (the JSONL observer's closing line and the
+/// head of [`result_to_json`]).
+pub fn result_summary_to_json(res: &ExperimentResult) -> Json {
+    Json::obj(vec![
+        ("strategy", Json::Str(res.strategy.clone())),
+        ("rounds", Json::Num(res.records.len() as f64)),
+        ("sim_total_secs", Json::Num(res.sim_total_secs)),
+        ("final_acc", Json::Num(res.final_acc)),
+        ("final_loss", Json::Num(res.final_loss)),
+    ])
+}
+
+/// Full result dump: summary, eval curve, and every round record.
+pub fn result_to_json(res: &ExperimentResult) -> Json {
+    let mut kv = match result_summary_to_json(res) {
+        Json::Obj(kv) => kv,
+        _ => unreachable!("summary is an object"),
+    };
+    kv.push((
+        "acc_curve".to_string(),
+        Json::Arr(res.acc_curve().iter().map(|&(t, a)| Json::from_f64s(&[t, a])).collect()),
+    ));
+    kv.push((
+        "records".to_string(),
+        Json::Arr(res.records.iter().map(round_record_to_json).collect()),
+    ));
+    Json::Obj(kv)
+}
+
+// -- curve queries ----------------------------------------------------------
+
+/// Simulated seconds until the eval curve first reaches `target` accuracy
+/// (the paper's time-to-accuracy; works on stored records and live results
+/// alike).
+pub fn time_to_accuracy(records: &[RoundRecord], target: f64) -> Option<f64> {
+    records
+        .iter()
+        .find(|r| r.eval_acc.map(|a| a >= target).unwrap_or(false))
+        .map(|r| r.sim_time)
+}
+
+/// Simulated seconds until the eval curve first reaches `target`
+/// perplexity (LM tasks; lower is better).
+pub fn time_to_perplexity(records: &[RoundRecord], target: f64) -> Option<f64> {
+    records
+        .iter()
+        .find(|r| r.eval_loss.map(|l| l.exp() <= target).unwrap_or(false))
+        .map(|r| r.sim_time)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(round: usize, eval: Option<f64>) -> RoundRecord {
+        RoundRecord {
+            round,
+            round_secs: 100.25 + round as f64,
+            sim_time: 130.5 * (round + 1) as f64 + 0.1,
+            mean_train_loss: 1.0 / (round + 1) as f64,
+            participants: 3,
+            mean_coverage: 0.625,
+            o1: 0.037,
+            eval_acc: eval,
+            eval_loss: eval.map(|a| 1.0 - a),
+            client_secs: vec![(0, 10.125), (2, 100.25 + round as f64)],
+        }
+    }
+
+    fn assert_records_bitwise_eq(a: &RoundRecord, b: &RoundRecord) {
+        assert_eq!(a.round, b.round);
+        assert_eq!(a.round_secs.to_bits(), b.round_secs.to_bits());
+        assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits());
+        assert_eq!(a.mean_train_loss.to_bits(), b.mean_train_loss.to_bits());
+        assert_eq!(a.participants, b.participants);
+        assert_eq!(a.mean_coverage.to_bits(), b.mean_coverage.to_bits());
+        assert_eq!(a.o1.to_bits(), b.o1.to_bits());
+        assert_eq!(a.eval_acc.map(f64::to_bits), b.eval_acc.map(f64::to_bits));
+        assert_eq!(a.eval_loss.map(f64::to_bits), b.eval_loss.map(f64::to_bits));
+        assert_eq!(a.client_secs.len(), b.client_secs.len());
+        for ((ca, ta), (cb, tb)) in a.client_secs.iter().zip(&b.client_secs) {
+            assert_eq!(ca, cb);
+            assert_eq!(ta.to_bits(), tb.to_bits());
+        }
+    }
+
+    #[test]
+    fn round_record_round_trips_bitwise_through_text() {
+        // Awkward f64s on purpose: round-trip exactness is what resume
+        // determinism stands on.
+        for r in [
+            record(0, None),
+            record(7, Some(0.1 + 0.2)),
+            record(3, Some(1.0 / 3.0)),
+        ] {
+            let text = round_record_to_json(&r).to_string_pretty();
+            let back = round_record_from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_records_bitwise_eq(&r, &back);
+        }
+    }
+
+    fn manifest() -> RunManifest {
+        RunManifest {
+            schema_version: SCHEMA_VERSION,
+            id: "fedel-s42".into(),
+            created_unix: 1_700_000_000,
+            updated_unix: 1_700_000_123,
+            status: RunStatus::Running,
+            strategy: "fedel".into(),
+            config: ExperimentCfg { model: "mock:6x50".into(), ..Default::default() },
+            records: vec![record(0, None), record(1, Some(0.5))],
+            checkpoint: Some(Checkpoint {
+                completed: 2,
+                sim_time: 261.1,
+                params: BlobRef {
+                    digest: "sha256:00ff".into(),
+                    size: 16,
+                    media_type: crate::store::MEDIA_PARAMS_F32LE.into(),
+                },
+                policy_state: Json::obj(vec![("x", Json::from_f64s(&[1.5, -2.25]))]),
+            }),
+            final_state: None,
+        }
+    }
+
+    #[test]
+    fn manifest_round_trips() {
+        let m = manifest();
+        let text = m.to_json().to_string_pretty();
+        let back = RunManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.id, m.id);
+        assert_eq!(back.status, RunStatus::Running);
+        assert_eq!(back.strategy, "fedel");
+        assert_eq!(back.config.model, "mock:6x50");
+        assert_eq!(back.records.len(), 2);
+        assert_records_bitwise_eq(&back.records[1], &m.records[1]);
+        let ck = back.checkpoint.unwrap();
+        assert_eq!(ck.completed, 2);
+        assert_eq!(ck.params, m.checkpoint.as_ref().unwrap().params);
+        assert_eq!(ck.policy_state, m.checkpoint.as_ref().unwrap().policy_state);
+        assert!(back.final_state.is_none());
+    }
+
+    #[test]
+    fn unknown_schema_version_rejected() {
+        let mut m = manifest();
+        m.schema_version = SCHEMA_VERSION + 1;
+        let text = m.to_json().to_string_pretty();
+        let err = RunManifest::from_json(&Json::parse(&text).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("schema"), "{err}");
+    }
+
+    #[test]
+    fn final_acc_prefers_final_state_then_latest_eval() {
+        let mut m = manifest();
+        assert_eq!(m.final_acc(), Some(0.5));
+        m.final_state = Some(FinalState {
+            final_acc: 0.9,
+            final_loss: 0.1,
+            sim_total_secs: 1e4,
+            params: m.checkpoint.as_ref().unwrap().params.clone(),
+        });
+        assert_eq!(m.final_acc(), Some(0.9));
+        m.final_state = None;
+        m.records.clear();
+        assert_eq!(m.final_acc(), None);
+    }
+
+    #[test]
+    fn time_to_accuracy_walks_the_curve() {
+        let records =
+            vec![record(0, None), record(1, Some(0.4)), record(2, Some(0.6)), record(3, Some(0.7))];
+        assert_eq!(time_to_accuracy(&records, 0.5), Some(records[2].sim_time));
+        assert_eq!(time_to_accuracy(&records, 0.9), None);
+        assert_eq!(time_to_accuracy(&records, 0.0), Some(records[1].sim_time));
+    }
+}

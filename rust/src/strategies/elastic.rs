@@ -6,6 +6,7 @@
 //! purely local importance amplifies drift.
 
 use crate::elastic::{importance::local_importance, select, SelectorInput};
+use crate::util::json::Json;
 
 use super::{ClientPlan, FleetCtx, MaskSpec, RoundFeedback, Strategy};
 
@@ -61,6 +62,31 @@ impl Strategy for ElasticFl {
         for (client, sq, _) in &fb.per_client {
             self.imp[*client] = local_importance(sq, ctx.lr);
         }
+    }
+
+    fn policy_state(&self) -> Json {
+        Json::obj(vec![(
+            "imp",
+            Json::Arr(self.imp.iter().map(|v| Json::from_f64s(v)).collect()),
+        )])
+    }
+
+    fn restore_policy_state(&mut self, state: &Json) -> anyhow::Result<()> {
+        if matches!(state, Json::Null) {
+            return Ok(()); // fresh strategy (warm start)
+        }
+        let imp: Vec<Vec<f64>> = state
+            .arr("imp")?
+            .iter()
+            .map(Json::to_f64_vec)
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(
+            imp.len() == self.imp.len()
+                && imp.iter().zip(&self.imp).all(|(a, b)| a.len() == b.len()),
+            "elastictrainer snapshot: importance shape mismatch"
+        );
+        self.imp = imp;
+        Ok(())
     }
 }
 

@@ -14,7 +14,8 @@
 
 use crate::elastic::{blend_importance, importance::local_importance, select, SelectorInput};
 use crate::fl::AggregateRule;
-use crate::window::{BlockCosts, WindowPolicy, WindowState};
+use crate::util::json::Json;
+use crate::window::{BlockCosts, Window, WindowPolicy, WindowState};
 
 use super::{ClientPlan, FleetCtx, MaskSpec, RoundFeedback, Strategy};
 
@@ -162,6 +163,83 @@ impl Strategy for FedEl {
     fn prox_mu(&self) -> f64 {
         self.mu
     }
+
+    fn policy_state(&self) -> Json {
+        let windows = Json::Arr(
+            self.windows
+                .iter()
+                .map(|w| match w {
+                    None => Json::Null,
+                    Some(st) => Json::obj(vec![
+                        ("end", Json::Num(st.win.end as f64)),
+                        ("front", Json::Num(st.win.front as f64)),
+                        ("rounds", Json::Num(st.rounds as f64)),
+                        ("resets", Json::Num(st.resets as f64)),
+                    ]),
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("windows", windows),
+            (
+                "local_imp",
+                Json::Arr(self.local_imp.iter().map(|v| Json::from_f64s(v)).collect()),
+            ),
+            ("global_imp", Json::from_f64s(&self.global_imp)),
+            (
+                "last_block_sel",
+                Json::Arr(self.last_block_sel.iter().map(|v| Json::from_bools(v)).collect()),
+            ),
+        ])
+    }
+
+    fn restore_policy_state(&mut self, state: &Json) -> anyhow::Result<()> {
+        if matches!(state, Json::Null) {
+            return Ok(()); // fresh strategy (warm start)
+        }
+        let n = self.windows.len();
+        let k = self.global_imp.len();
+        let nb = self.last_block_sel.first().map(|b| b.len()).unwrap_or(0);
+        let windows = state.arr("windows")?;
+        anyhow::ensure!(windows.len() == n, "fedel snapshot: fleet size mismatch");
+        let windows: Vec<Option<WindowState>> = windows
+            .iter()
+            .map(|w| match w {
+                Json::Null => Ok(None),
+                w => Ok(Some(WindowState {
+                    win: Window { end: w.u("end")?, front: w.u("front")? },
+                    policy: self.policy,
+                    rounds: w.u("rounds")?,
+                    resets: w.u("resets")?,
+                })),
+            })
+            .collect::<anyhow::Result<_>>()?;
+        let local_imp: Vec<Vec<f64>> = state
+            .arr("local_imp")?
+            .iter()
+            .map(Json::to_f64_vec)
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(
+            local_imp.len() == n && local_imp.iter().all(|v| v.len() == k),
+            "fedel snapshot: importance shape mismatch"
+        );
+        let global_imp = state.req("global_imp")?.to_f64_vec()?;
+        anyhow::ensure!(global_imp.len() == k, "fedel snapshot: global importance len");
+        let last_block_sel: Vec<Vec<bool>> = state
+            .arr("last_block_sel")?
+            .iter()
+            .map(Json::to_bool_vec)
+            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(
+            last_block_sel.len() == n && last_block_sel.iter().all(|v| v.len() == nb),
+            "fedel snapshot: block selection shape mismatch"
+        );
+        self.windows = windows;
+        self.local_imp = local_imp;
+        self.global_imp = global_imp;
+        self.last_block_sel = last_block_sel;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -290,6 +368,54 @@ mod tests {
         let e0 = s.plan_round(0, &c, &[])[0].exit;
         let e1 = s.plan_round(1, &c, &[])[0].exit;
         assert!(e1 > e0, "collapsed window must move strictly forward: {e0} -> {e1}");
+    }
+
+    #[test]
+    fn policy_state_round_trips_through_json_text() {
+        // Warm a strategy through several rounds, snapshot, push the
+        // snapshot through the actual JSON writer+parser (what the run
+        // store does), restore onto a fresh strategy, and check both plan
+        // identically from there on — the resume invariant at policy level.
+        let cx = ctx(8, &[1.0, 2.0, 4.0]);
+        let k = cx.manifest.tensors.len();
+        let mut a = fedel(&cx);
+        for round in 0..4 {
+            let plans = a.plan_round(round, &cx, &[]);
+            let sq: Vec<f64> = (0..k).map(|i| 0.1 + (i % 3) as f64 * 0.7).collect();
+            a.observe(
+                &RoundFeedback {
+                    per_client: plans.iter().map(|p| (p.client, sq.clone(), 1.0)).collect(),
+                    global_importance: (0..k).map(|i| 0.5 + (i % 5) as f64 * 0.3).collect(),
+                },
+                &cx,
+            );
+        }
+        let text = a.policy_state().to_string_pretty();
+        let snap = crate::util::json::Json::parse(&text).unwrap();
+        let mut b = fedel(&cx);
+        b.restore_policy_state(&snap).unwrap();
+        for round in 4..7 {
+            let pa = a.plan_round(round, &cx, &[]);
+            let pb = b.plan_round(round, &cx, &[]);
+            assert_eq!(pa.len(), pb.len());
+            for (x, y) in pa.iter().zip(&pb) {
+                assert_eq!(x.client, y.client);
+                assert_eq!(x.exit, y.exit, "round {round}");
+                assert_eq!(x.est_time.to_bits(), y.est_time.to_bits(), "round {round}");
+                assert_eq!(x.mask.tensor_coverage(), y.mask.tensor_coverage(), "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn restore_rejects_wrong_fleet_size() {
+        let cx = ctx(8, &[1.0, 2.0]);
+        let other = ctx(8, &[1.0]);
+        let mut a = fedel(&cx);
+        a.plan_round(0, &cx, &[]);
+        let snap = a.policy_state();
+        let mut b = fedel(&other);
+        assert!(b.restore_policy_state(&snap).is_err());
     }
 
     #[test]

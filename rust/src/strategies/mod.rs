@@ -18,6 +18,7 @@ pub mod timelyfl;
 
 use crate::manifest::Manifest;
 use crate::timing::TimingModel;
+use crate::util::json::Json;
 
 /// How a plan's tensor mask is expressed.
 #[derive(Clone, Debug)]
@@ -151,6 +152,30 @@ pub trait Strategy {
     fn prox_mu(&self) -> f64 {
         0.0
     }
+
+    /// Snapshot the policy's round-dependent mutable state for
+    /// checkpointing ([`crate::store`]). `Json::Null` means "stateless":
+    /// strategies whose plans are a pure function of construction inputs
+    /// (ctx, seed) keep the default. Stateful strategies must round-trip
+    /// every field that influences future plans *bitwise* — f64 survives
+    /// the JSON writer exactly (shortest round-trip Display); u64 RNG
+    /// words go through strings.
+    fn policy_state(&self) -> Json {
+        Json::Null
+    }
+
+    /// Restore a [`Strategy::policy_state`] snapshot onto an
+    /// identically-constructed strategy (same ctx/seed/variant), so a
+    /// resumed experiment plans exactly what the uninterrupted one would
+    /// have. `Null` restores nothing.
+    fn restore_policy_state(&mut self, state: &Json) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            matches!(state, Json::Null),
+            "{} is stateless but got a non-null policy snapshot",
+            self.name()
+        );
+        Ok(())
+    }
 }
 
 /// Construct a strategy by table-row name.
@@ -236,6 +261,18 @@ mod tests {
             assert_eq!(s.name(), n);
         }
         assert!(by_name("nope", &c, 0.6, 1).is_err());
+    }
+
+    #[test]
+    fn stateless_strategies_round_trip_null_state() {
+        let c = ctx(4, &[1.0, 2.0]);
+        for n in ["fedavg", "heterofl", "depthfl", "timelyfl", "fiarse"] {
+            let mut s = by_name(n, &c, 0.6, 1).unwrap();
+            let st = s.policy_state();
+            assert_eq!(st, Json::Null, "{n} should be stateless");
+            s.restore_policy_state(&st).unwrap();
+            assert!(s.restore_policy_state(&Json::Num(1.0)).is_err(), "{n}");
+        }
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! FedAvg, speedup only 1.03–1.3× — comes from selection not shrinking
 //! per-client work: a selected straggler still costs its full round time.
 
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 use super::{ClientPlan, FleetCtx, MaskSpec, RoundFeedback, Strategy};
@@ -87,6 +88,42 @@ impl Strategy for PyramidFl {
     fn aggregate_rule(&self) -> crate::fl::AggregateRule {
         crate::fl::AggregateRule::FedAvg
     }
+
+    fn policy_state(&self) -> Json {
+        Json::obj(vec![
+            ("losses", Json::from_f64s(&self.losses)),
+            ("seen", Json::from_bools(&self.seen)),
+            // xoshiro words exceed f64's integer range: ship as strings.
+            (
+                "rng",
+                Json::Arr(self.rng.state().iter().map(|w| Json::Str(format!("{w}"))).collect()),
+            ),
+        ])
+    }
+
+    fn restore_policy_state(&mut self, state: &Json) -> anyhow::Result<()> {
+        if matches!(state, Json::Null) {
+            return Ok(()); // fresh strategy (warm start)
+        }
+        let losses = state.req("losses")?.to_f64_vec()?;
+        anyhow::ensure!(losses.len() == self.losses.len(), "pyramidfl snapshot: fleet size");
+        let seen = state.req("seen")?.to_bool_vec()?;
+        anyhow::ensure!(seen.len() == self.seen.len(), "pyramidfl snapshot: fleet size");
+        let words = state.arr("rng")?;
+        anyhow::ensure!(words.len() == 4, "pyramidfl snapshot: rng state must be 4 words");
+        let mut s = [0u64; 4];
+        for (slot, w) in s.iter_mut().zip(words) {
+            *slot = w
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("pyramidfl snapshot: rng word not a string"))?
+                .parse::<u64>()
+                .map_err(|e| anyhow::anyhow!("pyramidfl snapshot: bad rng word: {e}"))?;
+        }
+        self.losses = losses;
+        self.seen = seen;
+        self.rng = Rng::from_state(s);
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -123,6 +160,32 @@ mod tests {
             s.observe(&fb, &c);
         }
         assert!(participated.iter().all(|&p| p), "{participated:?}");
+    }
+
+    #[test]
+    fn policy_state_restores_rng_stream_exactly() {
+        // The exploration RNG must continue bit-for-bit after a restore:
+        // run a few rounds, snapshot through JSON text, restore onto a
+        // fresh strategy, and check the *random* exploration picks match.
+        let c = ctx(4, &[1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 1.2, 1.7, 2.2]);
+        let mut a = PyramidFl::new(&c, 11);
+        for round in 0..3 {
+            let plans = a.plan_round(round, &c, &[]);
+            let fb = RoundFeedback {
+                per_client: plans.iter().map(|p| (p.client, vec![], 0.4)).collect(),
+                global_importance: vec![],
+            };
+            a.observe(&fb, &c);
+        }
+        let text = a.policy_state().to_string_pretty();
+        let snap = Json::parse(&text).unwrap();
+        let mut b = PyramidFl::new(&c, 11);
+        b.restore_policy_state(&snap).unwrap();
+        for round in 3..8 {
+            let pa: Vec<usize> = a.plan_round(round, &c, &[]).iter().map(|p| p.client).collect();
+            let pb: Vec<usize> = b.plan_round(round, &c, &[]).iter().map(|p| p.client).collect();
+            assert_eq!(pa, pb, "round {round}: exploration picks diverged");
+        }
     }
 
     #[test]

@@ -110,6 +110,31 @@ impl Json {
         Json::Arr(v.iter().map(|s| Json::Str(s.to_string())).collect())
     }
 
+    pub fn from_bools(v: &[bool]) -> Json {
+        Json::Arr(v.iter().map(|&b| Json::Bool(b)).collect())
+    }
+
+    // -- schema decode helpers ----------------------------------------------
+
+    /// Array of numbers -> Vec<f64> (f64 round-trips the writer bitwise:
+    /// Display prints the shortest representation that parses back exact).
+    pub fn to_f64_vec(&self) -> anyhow::Result<Vec<f64>> {
+        self.as_arr()
+            .ok_or_else(|| anyhow::anyhow!("not an array"))?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("array element not a number")))
+            .collect()
+    }
+
+    /// Array of booleans -> Vec<bool>.
+    pub fn to_bool_vec(&self) -> anyhow::Result<Vec<bool>> {
+        self.as_arr()
+            .ok_or_else(|| anyhow::anyhow!("not an array"))?
+            .iter()
+            .map(|x| x.as_bool().ok_or_else(|| anyhow::anyhow!("array element not a bool")))
+            .collect()
+    }
+
     // -- parse -------------------------------------------------------------
 
     pub fn parse(text: &str) -> Result<Json, JsonError> {

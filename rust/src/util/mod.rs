@@ -6,6 +6,7 @@ pub mod io;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sha256;
 pub mod stats;
 
 /// Format a duration in simulated hours the way the paper's tables do.

@@ -1,0 +1,222 @@
+//! Fault tolerance: a run killed mid-flight and resumed from the store is
+//! bitwise-identical to one that was never interrupted — extending
+//! `tests/determinism.rs`' invariant across process boundaries. The kill
+//! lands *between* checkpoints on purpose, so every resume recomputes at
+//! least one round from the stored global params + policy (+ RNG) state.
+
+use std::path::PathBuf;
+
+use fedel::config::{ExperimentCfg, FleetSpec};
+use fedel::fl::observer::NullObserver;
+use fedel::fl::server::{ExperimentResult, ResumeState};
+use fedel::sim::experiment::{resume_run, Experiment};
+use fedel::store::checkpoint::CheckpointObserver;
+use fedel::store::schema::RunStatus;
+use fedel::store::RunStore;
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedel-resume-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn cfg(strategy: &str, threads: usize) -> ExperimentCfg {
+    ExperimentCfg {
+        model: "mock:6x50".into(),
+        strategy: strategy.into(),
+        fleet: FleetSpec::Scales(vec![1.0, 1.5, 2.0, 2.5, 3.0, 4.0]),
+        rounds: 8,
+        local_steps: 4,
+        lr: 0.3,
+        eval_every: 2,
+        eval_batches: 2,
+        slowest_round_secs: 3600.0,
+        exec_threads: threads,
+        ..Default::default()
+    }
+}
+
+fn assert_identical(a: &ExperimentResult, b: &ExperimentResult, label: &str) {
+    assert_eq!(a.final_params, b.final_params, "{label}: global params diverged");
+    assert_eq!(a.final_acc.to_bits(), b.final_acc.to_bits(), "{label}: final_acc");
+    assert_eq!(a.final_loss.to_bits(), b.final_loss.to_bits(), "{label}: final_loss");
+    assert_eq!(
+        a.sim_total_secs.to_bits(),
+        b.sim_total_secs.to_bits(),
+        "{label}: sim_total_secs"
+    );
+    assert_eq!(a.records.len(), b.records.len(), "{label}: record count");
+    for (ra, rb) in a.records.iter().zip(&b.records) {
+        assert_eq!(ra.round, rb.round, "{label}: round index");
+        assert_eq!(
+            ra.round_secs.to_bits(),
+            rb.round_secs.to_bits(),
+            "{label}: round {} secs",
+            ra.round
+        );
+        assert_eq!(
+            ra.mean_train_loss.to_bits(),
+            rb.mean_train_loss.to_bits(),
+            "{label}: round {} loss",
+            ra.round
+        );
+        assert_eq!(
+            ra.sim_time.to_bits(),
+            rb.sim_time.to_bits(),
+            "{label}: round {} clock",
+            ra.round
+        );
+        assert_eq!(ra.o1.to_bits(), rb.o1.to_bits(), "{label}: round {} o1", ra.round);
+        assert_eq!(ra.mean_coverage.to_bits(), rb.mean_coverage.to_bits(), "{label}");
+        assert_eq!(ra.participants, rb.participants, "{label}");
+        assert_eq!(
+            ra.eval_acc.map(f64::to_bits),
+            rb.eval_acc.map(f64::to_bits),
+            "{label}: round {} eval",
+            ra.round
+        );
+        assert_eq!(
+            ra.eval_loss.map(f64::to_bits),
+            rb.eval_loss.map(f64::to_bits),
+            "{label}: round {} eval loss",
+            ra.round
+        );
+        assert_eq!(ra.client_secs, rb.client_secs, "{label}: round {} clients", ra.round);
+    }
+}
+
+/// Kill a checkpointed run after round 5 (checkpoints land at 2 and 4),
+/// resume it, and demand bitwise identity with an uninterrupted run.
+fn kill_and_resume(strategy: &str, kill_threads: usize, resume_threads: usize) {
+    let label = format!("{strategy} killed@{kill_threads}t resumed@{resume_threads}t");
+    let dir = scratch(&format!("{strategy}-{kill_threads}-{resume_threads}"));
+    let store = RunStore::open(&dir).unwrap();
+
+    let baseline = Experiment::build(cfg(strategy, resume_threads))
+        .unwrap()
+        .run(None)
+        .unwrap();
+
+    let mut killed_cfg = cfg(strategy, kill_threads);
+    killed_cfg.halt_after = Some(5);
+    let mut exp = Experiment::build(killed_cfg).unwrap();
+    let mut ckpt = CheckpointObserver::create(&store, &exp.cfg, strategy, 2).unwrap();
+    let id = ckpt.run_id().to_string();
+    let err = exp.run_from(None, &mut ckpt, None).unwrap_err();
+    assert!(err.to_string().contains("halted"), "{err}");
+    assert!(ckpt.take_error().is_none(), "{label}: checkpointing failed");
+
+    // What a crashed process leaves on disk: the round-4 checkpoint and
+    // exactly 4 records (round 5 happened but was never persisted).
+    let man = store.load_manifest(&id).unwrap();
+    assert_eq!(man.status, RunStatus::Running, "{label}");
+    assert_eq!(man.checkpoint.as_ref().unwrap().completed, 4, "{label}");
+    assert_eq!(man.records.len(), 4, "{label}");
+
+    let resumed = resume_run(&store, &id, 2, &mut NullObserver).unwrap();
+    assert_identical(&baseline, &resumed, &label);
+
+    let man = store.load_manifest(&id).unwrap();
+    assert_eq!(man.status, RunStatus::Complete, "{label}");
+    assert_eq!(man.records.len(), 8, "{label}");
+    let fin = man.final_state.as_ref().unwrap();
+    assert_eq!(fin.final_acc.to_bits(), baseline.final_acc.to_bits(), "{label}");
+    assert_eq!(
+        store.get_params(&fin.params).unwrap(),
+        baseline.final_params,
+        "{label}: stored final params"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn fedel_kill_and_resume_is_bitwise_identical() {
+    kill_and_resume("fedel", 1, 1);
+}
+
+#[test]
+fn resume_is_identical_across_thread_counts() {
+    // Kill under one executor config, resume under another: the store's
+    // state is thread-count-agnostic, like everything else.
+    kill_and_resume("fedel", 2, 1);
+    kill_and_resume("fedel", 1, 2);
+    kill_and_resume("fedel", 0, 2);
+}
+
+#[test]
+fn stateless_and_rng_strategies_survive_resume() {
+    // fedavg: no policy state at all; pyramidfl: client-selection RNG must
+    // continue bit-for-bit; elastictrainer: per-client importance state.
+    for strategy in ["fedavg", "pyramidfl", "elastictrainer"] {
+        kill_and_resume(strategy, 1, 1);
+    }
+}
+
+#[test]
+fn warm_start_seeds_from_stored_run() {
+    let dir = scratch("warm");
+    let store = RunStore::open(&dir).unwrap();
+
+    // donor: a completed, stored fedavg run
+    let mut exp = Experiment::build(cfg("fedavg", 1)).unwrap();
+    let mut ckpt = CheckpointObserver::create(&store, &exp.cfg, "fedavg", 4).unwrap();
+    let id = ckpt.run_id().to_string();
+    let donor = exp.run_from(None, &mut ckpt, None).unwrap();
+    assert!(ckpt.take_error().is_none());
+
+    // stored parameters round-trip bitwise
+    let stored = store.latest_params(&id).unwrap();
+    assert_eq!(stored, donor.final_params);
+
+    // a warm-started run begins where the donor's model left off: its
+    // first eval already sits at donor-final level, far above a cold run
+    let mut short = cfg("fedavg", 1);
+    short.rounds = 2;
+    short.eval_every = 1;
+    let warm = Experiment::build(short.clone())
+        .unwrap()
+        .run_from(None, &mut NullObserver, Some(ResumeState::warm_start(stored)))
+        .unwrap();
+    let cold = Experiment::build(short)
+        .unwrap()
+        .run_from(None, &mut NullObserver, None)
+        .unwrap();
+    let warm_first = warm.records[0].eval_acc.unwrap();
+    let cold_first = cold.records[0].eval_acc.unwrap();
+    assert!(
+        warm_first > cold_first,
+        "warm start should begin ahead: warm {warm_first} vs cold {cold_first}"
+    );
+
+    // Stateful strategies must warm-start too: the Null policy snapshot
+    // means "fresh strategy", not an error.
+    for strategy in ["fedel", "pyramidfl", "elastictrainer"] {
+        let mut c = cfg(strategy, 1);
+        c.rounds = 2;
+        let donor_params = store.latest_params(&id).unwrap();
+        Experiment::build(c)
+            .unwrap()
+            .run_from(None, &mut NullObserver, Some(ResumeState::warm_start(donor_params)))
+            .unwrap_or_else(|e| panic!("{strategy} warm start failed: {e}"));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn resume_refuses_completed_or_checkpointless_runs() {
+    let dir = scratch("refuse");
+    let store = RunStore::open(&dir).unwrap();
+    let mut exp = Experiment::build(cfg("fedavg", 1)).unwrap();
+    let mut ckpt = CheckpointObserver::create(&store, &exp.cfg, "fedavg", 2).unwrap();
+    let id = ckpt.run_id().to_string();
+
+    // no checkpoint yet -> not resumable
+    let err = resume_run(&store, &id, 2, &mut NullObserver).unwrap_err();
+    assert!(err.to_string().contains("no checkpoint"), "{err}");
+
+    // completed -> not resumable either
+    exp.run_from(None, &mut ckpt, None).unwrap();
+    let err = resume_run(&store, &id, 2, &mut NullObserver).unwrap_err();
+    assert!(err.to_string().contains("completed"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,78 @@
+//! Campaign demo: a strategy × seed grid as one crash-safe unit of work.
+//!
+//! Reproducing FedEL's tables means sweeping grids of experiments; this
+//! example runs a 2-strategy × 2-seed grid on the mock engine through the
+//! campaign runner and demonstrates the full fault-tolerance story:
+//!
+//! 1. the campaign is **killed mid-flight** — each in-flight cell aborts
+//!    between checkpoints (`halt_after`), exactly like a crashed process,
+//! 2. a second `run_campaign` call with the same spec resumes it:
+//!    finished cells are skipped, killed cells continue from their
+//!    checkpoints through the `ResumeState` machinery,
+//! 3. the whole grid is reported N-way on time-to-accuracy, as a table
+//!    and as the `--json` schema dashboards consume.
+//!
+//!   cargo run --release --example campaign_sweep [-- rounds]
+
+use fedel::config::ExperimentCfg;
+use fedel::sim::campaign::{report, run_campaign, status_table, CampaignCfg};
+use fedel::store::RunStore;
+
+fn main() -> anyhow::Result<()> {
+    let rounds: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    anyhow::ensure!(rounds >= 4, "campaign_sweep needs >= 4 rounds for the kill+resume demo");
+
+    let base = ExperimentCfg {
+        model: "mock:8x100".into(),
+        fleet: fedel::config::FleetSpec::Large(20),
+        rounds,
+        local_steps: 4,
+        lr: 0.1,
+        eval_every: 2,
+        eval_batches: 4,
+        slowest_round_secs: 71.8 * 60.0,
+        exec_threads: 1, // campaign workers already fan out across cores
+        ..Default::default()
+    };
+    let mut cfg = CampaignCfg::new("sweep", base);
+    cfg.strategies = vec!["fedavg".into(), "fedel".into()];
+    cfg.seeds = vec![1, 2];
+    cfg.checkpoint_every = 2;
+    cfg.verbose = true;
+
+    let store_dir = std::env::temp_dir().join(format!("fedel-campaign-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&store_dir);
+    let store = RunStore::open(&store_dir)?;
+    println!(
+        "campaign sweep: {} cells x {rounds} rounds — store at {}",
+        cfg.cells()?.len(),
+        store_dir.display()
+    );
+
+    // -- 1. kill the whole campaign mid-flight ------------------------------
+    // Every cell aborts after an odd round, between its even-numbered
+    // checkpoints — what a pulled plug leaves behind.
+    let mut killed = cfg.clone();
+    killed.halt_after = Some((rounds / 2) | 1);
+    let out = run_campaign(&store, &killed)?;
+    let (_, _, failed, _) = out.counts();
+    println!("\n== campaign killed mid-flight: {failed} cell(s) halted between checkpoints");
+    status_table(&store, &store.load_campaign("sweep")?).print();
+
+    // -- 2. resume: same spec, no kill switch -------------------------------
+    let out = run_campaign(&store, &cfg)?;
+    anyhow::ensure!(out.complete(), "resumed campaign must finish: {out:?}");
+    let (skipped, completed, _, _) = out.counts();
+    println!("== campaign resumed: {completed} cell(s) continued, {skipped} skipped");
+    status_table(&store, &store.load_campaign("sweep")?).print();
+
+    // -- 3. whole-grid time-to-accuracy report ------------------------------
+    let manifest = store.load_campaign("sweep")?;
+    let rep = report(&store, &manifest, None, None)?;
+    rep.table().print();
+    println!("--json form:\n{}", rep.to_json().to_string_pretty());
+    Ok(())
+}

@@ -10,6 +10,7 @@ use fedel::report::bench::{banner, time_median};
 use fedel::report::Table;
 use fedel::sim::experiment::Experiment;
 use fedel::timing::{DeviceProfile, TimingCfg, TimingModel};
+use fedel::window::{BlockCosts, WindowPolicy, WindowState};
 
 fn main() -> anyhow::Result<()> {
     banner("perf_hotpaths", "L3 micro-benchmarks (median wall time)");
@@ -61,6 +62,45 @@ fn main() -> anyhow::Result<()> {
         String::new(),
     ]);
 
+    // --- sliding-window walk: cached vs recomputed forward prefix -------
+    // BlockCosts now precomputes the forward prefix sums once; before,
+    // initial_window/front_advance re-summed fwd[..front] at every
+    // candidate front — O(nb^2) per client per round. The naive walk
+    // below hand-rolls that old arithmetic for comparison.
+    let nb = 512;
+    let rounds = 256;
+    let train: Vec<f64> = (0..nb).map(|b| 1.0 + (b % 5) as f64 * 0.25).collect();
+    let fwd: Vec<f64> = (0..nb).map(|b| 0.1 + (b % 3) as f64 * 0.05).collect();
+    let costs = BlockCosts::new(train.clone(), fwd.clone());
+    let t_th = 64.0;
+    let sel = vec![true; nb];
+    let d_cached = time_median(15, || {
+        let mut st = WindowState::new(&costs, t_th, WindowPolicy::FedEl);
+        for _ in 0..rounds {
+            st.advance(&costs, t_th, &sel);
+        }
+        std::hint::black_box(st.win);
+    });
+    let d_naive = time_median(15, || {
+        std::hint::black_box(naive_window_walk(&train, &fwd, t_th, rounds));
+    });
+    let win_speedup = d_naive.as_secs_f64() / d_cached.as_secs_f64().max(1e-12);
+    t.row(vec![
+        format!("window walk ({nb} blocks x {rounds} rounds), cached prefix"),
+        format!("{:.1}us", d_cached.as_secs_f64() * 1e6),
+        String::new(),
+    ]);
+    t.row(vec![
+        format!("window walk ({nb} blocks x {rounds} rounds), naive prefix"),
+        format!("{:.1}us", d_naive.as_secs_f64() * 1e6),
+        format!("{win_speedup:.1}x win"),
+    ]);
+    println!(
+        "window walk [{nb} blocks x {rounds} rounds]: cached {:.1}us, naive {:.1}us -> {win_speedup:.1}x",
+        d_cached.as_secs_f64() * 1e6,
+        d_naive.as_secs_f64() * 1e6,
+    );
+
     // --- round throughput: sequential vs parallel client fan-out --------
     // 32-client fedavg rounds on the mock engine; the only difference
     // between the two runs is exec_threads (1 vs one-per-core). Results
@@ -72,6 +112,48 @@ fn main() -> anyhow::Result<()> {
 
     t.print();
     Ok(())
+}
+
+/// The pre-prefix-sum window walk: FedEl policy with every block selected
+/// (front advance + rollback), recomputing the forward prefix by
+/// summation at every candidate front exactly as the old
+/// `BlockCosts::fwd_prefix` did.
+fn naive_window_walk(train: &[f64], fwd: &[f64], t_th: f64, rounds: usize) -> (usize, usize) {
+    let nb = train.len();
+    let fwd_prefix = |front: usize| -> f64 { fwd[..front].iter().sum() };
+    let initial = || {
+        let mut acc = 0.0;
+        for b in 0..nb {
+            acc += train[b];
+            if acc + fwd_prefix(b + 1) >= t_th {
+                return b + 1;
+            }
+        }
+        nb
+    };
+    let advance = |from: usize| {
+        let mut acc = 0.0;
+        let mut front = from;
+        while front < nb {
+            acc += train[front];
+            front += 1;
+            if acc + fwd_prefix(front) >= t_th {
+                break;
+            }
+        }
+        front.max(from + 1).min(nb)
+    };
+    let mut front = initial();
+    let mut resets = 0usize;
+    for _ in 0..rounds {
+        if front >= nb {
+            front = initial();
+            resets += 1;
+        } else {
+            front = advance(front);
+        }
+    }
+    (front, resets)
 }
 
 /// Wall-clock of full experiment rounds at exec_threads = 1 vs 0, printed

@@ -140,6 +140,24 @@ impl ExperimentCfg {
         })
     }
 
+    /// The grid axes a campaign sweeps ([`crate::sim::campaign`]): this
+    /// config with one cell's strategy / seed / fleet / T_th applied.
+    pub fn with_axes(
+        &self,
+        strategy: &str,
+        seed: u64,
+        fleet: &FleetSpec,
+        t_th_factor: f64,
+    ) -> ExperimentCfg {
+        ExperimentCfg {
+            strategy: strategy.to_string(),
+            seed,
+            fleet: fleet.clone(),
+            t_th_factor,
+            ..self.clone()
+        }
+    }
+
     /// Config snapshot: every field an experiment rebuild needs
     /// (`from_json` inverts it). Presentation flags (verbose,
     /// record_selections) and the halt_after kill-switch stay out — they

@@ -3,7 +3,8 @@
 //! Subcommands:
 //!   train    — run one FL experiment and print the round log + summary
 //!   compare  — run several strategies on one workload, print a table
-//!   runs     — the persistent run store: list / show / resume / compare
+//!   runs     — the persistent run store: list / show / resume / compare / gc
+//!   campaign — grids of stored runs: run / status / report
 //!   inspect  — dump a model manifest summary
 //!   list     — list AOT-compiled models under artifacts/
 //!
@@ -14,17 +15,24 @@
 //!   fedel train --model mock:8x100 --store runs --warm-start fedel-s42
 //!   fedel runs list --store runs
 //!   fedel runs resume fedel-s42 --store runs
-//!   fedel runs compare fedel-s42 fedavg-s42 --store runs
+//!   fedel runs compare fedel-s42 timelyfl-s42 fedavg-s42 --store runs --json -
+//!   fedel runs gc --store runs
+//!   fedel campaign run --name sweep --store runs --model mock:8x100 \
+//!       --strategies fedavg,fedel --seeds 1,2 --rounds 20
+//!   fedel campaign run --name sweep --store runs        # resume after a kill
+//!   fedel campaign report --name sweep --store runs --json report.json
 //!   fedel compare --model mock:8x100 --strategies fedavg,fedel --rounds 20
 //!   fedel inspect --model vgg_cifar
 
 use std::path::Path;
+use std::time::Duration;
 
-use fedel::config::ExperimentCfg;
+use fedel::config::{ExperimentCfg, FleetSpec};
 use fedel::fl::observer::{ConsoleObserver, JsonlObserver, ObserverSet};
 use fedel::fl::server::ResumeState;
 use fedel::manifest;
-use fedel::report::{render_table1, runs_compare, table1_rows, Table};
+use fedel::report::{compare_runs, render_table1, table1_rows, CompareReport, Table};
+use fedel::sim::campaign::{self, CampaignCfg};
 use fedel::sim::experiment::{resume_run, Experiment};
 use fedel::store::checkpoint::CheckpointObserver;
 use fedel::store::schema::RunStatus;
@@ -37,13 +45,14 @@ fn main() {
         Some("train") => cmd_train(&args),
         Some("compare") => cmd_compare(&args),
         Some("runs") => cmd_runs(&args),
+        Some("campaign") => cmd_campaign(&args),
         Some("inspect") => cmd_inspect(&args),
         Some("list") => cmd_list(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}");
             }
-            eprintln!("usage: fedel <train|compare|runs|inspect|list> [--key value ...]");
+            eprintln!("usage: fedel <train|compare|runs|campaign|inspect|list> [--key value ...]");
             Err(anyhow::anyhow!("bad usage"))
         }
     }
@@ -167,7 +176,7 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// The run-store subcommand family: `runs <list|show|resume|compare> ...`.
+/// The run-store subcommand family: `runs <list|show|resume|compare|gc> ...`.
 fn cmd_runs(args: &Args) -> anyhow::Result<()> {
     let store = RunStore::open(args.str_or("store", "runs"))?;
     let action = args.positional.first().map(|s| s.as_str()).unwrap_or("list");
@@ -250,24 +259,197 @@ fn cmd_runs(args: &Args) -> anyhow::Result<()> {
             );
         }
         "compare" => {
-            let (a, b) = match &args.positional[..] {
-                [_, a, b] => (a.clone(), b.clone()),
-                _ => anyhow::bail!("usage: fedel runs compare <run-a> <run-b> [--target acc]"),
-            };
+            let ids = &args.positional[1..];
             let target = args.get("target").and_then(|s| s.parse().ok());
+            let json_out = args.get("json").map(|s| s.to_string());
             args.check_unused()?;
-            let ma = store.load_manifest(&a)?;
-            let mb = store.load_manifest(&b)?;
-            let (table, speedup) = runs_compare(&ma, &mb, target);
-            table.print();
-            match speedup {
-                Some(s) => println!("time-to-accuracy: {a} is {s:.2}x vs {b}"),
-                None => println!("time-to-accuracy: at least one run never reaches the target"),
+            anyhow::ensure!(
+                ids.len() >= 2,
+                "usage: fedel runs compare <run-a> <run-b> [<run-c> ...] \
+                 [--target acc] [--json path|-]\n\
+                 (speedups are reported vs the LAST run listed)"
+            );
+            let mut manifests = Vec::with_capacity(ids.len());
+            for id in ids {
+                manifests.push(store.load_manifest(id).map_err(|_| {
+                    anyhow::anyhow!(
+                        "unknown run id {id:?} under {} — `fedel runs list` shows what's stored",
+                        store.root().display()
+                    )
+                })?);
             }
+            let refs: Vec<&fedel::store::schema::RunManifest> = manifests.iter().collect();
+            let report = compare_runs(&refs, target, refs.len() - 1);
+            emit_compare_report(&report, json_out.as_deref())?;
         }
-        other => anyhow::bail!("unknown runs action {other:?} (list | show | resume | compare)"),
+        "gc" => {
+            let dry = args.flag("dry-run");
+            let min_age = args.u64_or("min-age-secs", 60);
+            args.check_unused()?;
+            let r = store.gc_blobs(Duration::from_secs(min_age), dry)?;
+            println!(
+                "gc {}: {} live blob(s) kept, {} orphan(s){} ({} bytes)",
+                store.root().display(),
+                r.live,
+                r.swept,
+                if dry { " would be swept (--dry-run)" } else { " swept" },
+                r.swept_bytes
+            );
+        }
+        other => {
+            anyhow::bail!("unknown runs action {other:?} (list | show | resume | compare | gc)")
+        }
     }
     Ok(())
+}
+
+/// Print an N-way comparison, optionally also as JSON (`-` = stdout).
+fn emit_compare_report(report: &CompareReport, json_out: Option<&str>) -> anyhow::Result<()> {
+    match json_out {
+        Some("-") => println!("{}", report.to_json().to_string_pretty()),
+        Some(path) => {
+            std::fs::write(path, report.to_json().to_string_pretty())?;
+            report.table().print();
+            println!("wrote {path}");
+        }
+        None => {
+            report.table().print();
+            for r in &report.rows {
+                if r.id == report.baseline {
+                    continue;
+                }
+                match r.speedup_vs_baseline {
+                    Some(s) => println!(
+                        "time-to-accuracy: {} is {s:.2}x vs {}",
+                        r.id, report.baseline
+                    ),
+                    None => println!(
+                        "time-to-accuracy: {} or {} never reaches the target",
+                        r.id, report.baseline
+                    ),
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The campaign subcommand family: `campaign <run|status|report> ...`.
+fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
+    let store = RunStore::open(args.str_or("store", "runs"))?;
+    let action = args.positional.first().map(|s| s.as_str()).unwrap_or("run");
+    match action {
+        "run" => {
+            let name = args.str_or("name", "campaign");
+            let mut cfg = campaign_cfg_from_args(&store, &name, args)?;
+            cfg.workers = args.usize_or("workers", 0);
+            cfg.halt_after = args.get("halt-after").and_then(|s| s.parse().ok());
+            cfg.halt_after_cells = args.get("halt-after-cells").and_then(|s| s.parse().ok());
+            cfg.verbose = true;
+            args.check_unused()?;
+            let n_cells = cfg.cells()?.len();
+            println!(
+                "campaign {name}: {n_cells} cell(s) = {} strategies x {} seeds x {} fleets x {} T_th (store {})",
+                cfg.strategies.len(),
+                cfg.seeds.len(),
+                cfg.fleets.len(),
+                cfg.t_th_factors.len(),
+                store.root().display()
+            );
+            let outcome = campaign::run_campaign(&store, &cfg)?;
+            campaign::status_table(&store, &store.load_campaign(&name)?).print();
+            let (skipped, completed, failed, pending) = outcome.counts();
+            println!(
+                "campaign {name}: {completed} executed, {skipped} already complete, \
+                 {failed} failed, {pending} pending"
+            );
+            for f in outcome.failures() {
+                if let fedel::sim::campaign::CellRun::Failed(msg) = &f.status {
+                    eprintln!("  cell {} failed: {msg}", f.label);
+                }
+            }
+            anyhow::ensure!(
+                outcome.complete(),
+                "campaign {name} incomplete — rerun `fedel campaign run --name {name} --store {}` to resume",
+                store.root().display()
+            );
+            Ok(())
+        }
+        "status" => {
+            let name = args.str_or("name", "campaign");
+            args.check_unused()?;
+            campaign::status_table(&store, &store.load_campaign(&name)?).print();
+            Ok(())
+        }
+        "report" => {
+            let name = args.str_or("name", "campaign");
+            let target = args.get("target").and_then(|s| s.parse().ok());
+            let baseline = args.get("baseline").map(|s| s.to_string());
+            let json_out = args.get("json").map(|s| s.to_string());
+            args.check_unused()?;
+            let m = store.load_campaign(&name)?;
+            let report = campaign::report(&store, &m, target, baseline.as_deref())?;
+            emit_compare_report(&report, json_out.as_deref())
+        }
+        other => anyhow::bail!("unknown campaign action {other:?} (run | status | report)"),
+    }
+}
+
+/// Resolve the grid: a stored campaign resumes from its spec snapshot
+/// when no grid args are given; otherwise the args rebuild the spec,
+/// which must match the stored one exactly (same name = same grid).
+fn campaign_cfg_from_args(
+    store: &RunStore,
+    name: &str,
+    args: &Args,
+) -> anyhow::Result<CampaignCfg> {
+    let grid_keys = ["model", "strategies", "seeds", "fleets", "t-th", "rounds"];
+    let respecified = grid_keys.iter().any(|k| args.get(k).is_some());
+    if store.campaign_exists(name) && !respecified {
+        let m = store.load_campaign(name)?;
+        let mut cfg = CampaignCfg::from_spec_json(name, &m.spec)?;
+        cfg.checkpoint_every = args.usize_or("checkpoint-every", cfg.checkpoint_every);
+        return Ok(cfg);
+    }
+    let base = ExperimentCfg::from_args(args)?;
+    let mut cfg = CampaignCfg::new(name.to_string(), base);
+    // Consumed here, before the spec comparison below: rerunning the
+    // exact creation command (same --checkpoint-every) must compare equal.
+    cfg.checkpoint_every = args.usize_or("checkpoint-every", cfg.checkpoint_every);
+    if let Some(s) = args.get("strategies") {
+        cfg.strategies = s.split(',').filter(|p| !p.is_empty()).map(String::from).collect();
+    }
+    if let Some(s) = args.get("seeds") {
+        cfg.seeds = s
+            .split(',')
+            .filter(|p| !p.is_empty())
+            .map(|p| p.parse().map_err(|e| anyhow::anyhow!("bad seed {p:?}: {e}")))
+            .collect::<anyhow::Result<_>>()?;
+    }
+    if let Some(s) = args.get("fleets") {
+        // ';'-separated: Scales fleet specs use ',' internally
+        cfg.fleets = s
+            .split(';')
+            .filter(|p| !p.is_empty())
+            .map(FleetSpec::parse)
+            .collect::<anyhow::Result<_>>()?;
+    }
+    if let Some(s) = args.get("t-th") {
+        cfg.t_th_factors = s
+            .split(',')
+            .filter(|p| !p.is_empty())
+            .map(|p| p.parse().map_err(|e| anyhow::anyhow!("bad t_th {p:?}: {e}")))
+            .collect::<anyhow::Result<_>>()?;
+    }
+    if store.campaign_exists(name) {
+        let m = store.load_campaign(name)?;
+        anyhow::ensure!(
+            cfg.spec_to_json() == m.spec,
+            "campaign {name:?} already exists with a different spec — resume it \
+             without grid args (`fedel campaign run --name {name}`) or pick a new name"
+        );
+    }
+    Ok(cfg)
 }
 
 fn run_id_arg(args: &Args, action: &str) -> anyhow::Result<String> {

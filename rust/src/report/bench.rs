@@ -131,6 +131,7 @@ impl Workload {
             exec_threads: 0,
             record_selections: false,
             verbose: false,
+            halt_after: None,
         }
     }
 }

@@ -138,45 +138,140 @@ pub fn render_table1(title: &str, rows: &[Table1Row], lm: bool) -> Table {
     t
 }
 
-/// Compare two *stored* runs at matched accuracy ([`crate::store`]): one
-/// row per run with final accuracy, simulated total, and time-to-target,
-/// where target = `target` or 95% of the lesser final accuracy. The
-/// second return value is the speedup of `a` over `b` at the target
-/// (None when either run never reaches it).
+/// One run's row in an N-way comparison of stored runs.
+#[derive(Clone, Debug)]
+pub struct CompareRow {
+    pub id: String,
+    pub strategy: String,
+    pub rounds: usize,
+    pub final_acc: Option<f64>,
+    pub sim_total_secs: f64,
+    /// Simulated seconds to the report's target accuracy (None = never).
+    pub time_to_target: Option<f64>,
+    /// Baseline's time-to-target / this run's (None when either never
+    /// reaches the target; 1.0 for the baseline itself).
+    pub speedup_vs_baseline: Option<f64>,
+}
+
+/// N-way comparison of stored runs at matched accuracy — the paper's
+/// time-to-accuracy methodology over whole grids. Built by
+/// [`compare_runs`]; renders as a table for the terminal or as JSON
+/// (`--json`) for dashboards and `campaign report`.
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    /// Accuracy every run is timed to.
+    pub target: f64,
+    /// Run id of the speedup baseline.
+    pub baseline: String,
+    pub rows: Vec<CompareRow>,
+}
+
+/// Compare N *stored* runs ([`crate::store`]) at matched accuracy: one
+/// row per run with final accuracy, simulated total, time-to-target, and
+/// speedup vs `manifests[baseline]`, where target = `target` or 95% of
+/// the least final accuracy across the runs (the two-run behavior,
+/// generalized).
+pub fn compare_runs(
+    manifests: &[&crate::store::schema::RunManifest],
+    target: Option<f64>,
+    baseline: usize,
+) -> CompareReport {
+    use crate::store::schema::time_to_accuracy;
+    assert!(!manifests.is_empty(), "compare_runs needs at least one run");
+    assert!(baseline < manifests.len(), "baseline index out of range");
+    let least = manifests
+        .iter()
+        .map(|m| m.final_acc().unwrap_or(0.0))
+        .fold(f64::INFINITY, f64::min);
+    let target = target.unwrap_or(0.95 * least);
+    let base_time = time_to_accuracy(&manifests[baseline].records, target);
+    let rows = manifests
+        .iter()
+        .map(|m| {
+            let tta = time_to_accuracy(&m.records, target);
+            CompareRow {
+                id: m.id.clone(),
+                strategy: m.strategy.clone(),
+                rounds: m.records.len(),
+                final_acc: m.final_acc(),
+                sim_total_secs: m.sim_time(),
+                time_to_target: tta,
+                speedup_vs_baseline: match (base_time, tta) {
+                    (Some(tb), Some(t)) => Some(tb / t.max(1e-9)),
+                    _ => None,
+                },
+            }
+        })
+        .collect();
+    CompareReport { target, baseline: manifests[baseline].id.clone(), rows }
+}
+
+impl CompareReport {
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            &format!("runs compare @ acc {:.3} (baseline {})", self.target, self.baseline),
+            &["run", "strategy", "rounds", "final acc", "sim total", "time-to-target", "speedup"],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.id.clone(),
+                r.strategy.clone(),
+                format!("{}", r.rounds),
+                r.final_acc
+                    .map(|x| format!("{:.2}%", 100.0 * x))
+                    .unwrap_or_else(|| "n/a".into()),
+                crate::util::fmt_hours(r.sim_total_secs),
+                r.time_to_target
+                    .map(crate::util::fmt_hours)
+                    .unwrap_or_else(|| "never".into()),
+                crate::util::fmt_speedup(r.speedup_vs_baseline),
+            ]);
+        }
+        t
+    }
+
+    /// Machine-readable form (`runs compare --json`, `campaign report
+    /// --json`): target, baseline, and one object per run.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("target_acc", Json::Num(self.target)),
+            ("baseline", Json::Str(self.baseline.clone())),
+            (
+                "runs",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", Json::Str(r.id.clone())),
+                                ("strategy", Json::Str(r.strategy.clone())),
+                                ("rounds", Json::Num(r.rounds as f64)),
+                                ("final_acc", opt(r.final_acc)),
+                                ("sim_total_secs", Json::Num(r.sim_total_secs)),
+                                ("time_to_target_secs", opt(r.time_to_target)),
+                                ("speedup_vs_baseline", opt(r.speedup_vs_baseline)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Two-run convenience over [`compare_runs`], preserved for callers that
+/// want the original pairwise shape: the returned speedup is of `a` over
+/// `b` at the target (None when either run never reaches it).
 pub fn runs_compare(
     a: &crate::store::schema::RunManifest,
     b: &crate::store::schema::RunManifest,
     target: Option<f64>,
 ) -> (Table, Option<f64>) {
-    use crate::store::schema::time_to_accuracy;
-    let lesser = a.final_acc().unwrap_or(0.0).min(b.final_acc().unwrap_or(0.0));
-    let target = target.unwrap_or(0.95 * lesser);
-    let mut t = Table::new(
-        &format!("runs compare @ acc {:.3}", target),
-        &["run", "strategy", "rounds", "final acc", "sim total", "time-to-target"],
-    );
-    let times: Vec<Option<f64>> = [a, b]
-        .iter()
-        .map(|m| {
-            let tta = time_to_accuracy(&m.records, target);
-            t.row(vec![
-                m.id.clone(),
-                m.strategy.clone(),
-                format!("{}", m.records.len()),
-                m.final_acc()
-                    .map(|x| format!("{:.2}%", 100.0 * x))
-                    .unwrap_or_else(|| "n/a".into()),
-                crate::util::fmt_hours(m.sim_time()),
-                tta.map(crate::util::fmt_hours).unwrap_or_else(|| "never".into()),
-            ]);
-            tta
-        })
-        .collect();
-    let speedup = match (times[0], times[1]) {
-        (Some(ta), Some(tb)) => Some(tb / ta.max(1e-9)),
-        _ => None,
-    };
-    (t, speedup)
+    let report = compare_runs(&[a, b], target, 1);
+    let speedup = report.rows[0].speedup_vs_baseline;
+    (report.table(), speedup)
 }
 
 /// Print a "paper reports" reference line under a reproduced table.
@@ -273,7 +368,64 @@ mod tests {
         // a target nobody reaches -> no speedup, "never" rows
         let (t, none) = runs_compare(&a, &b, Some(0.99));
         assert!(none.is_none());
-        assert!(t.rows.iter().all(|r| r.last().unwrap() == "never"));
+        assert!(t.rows.iter().all(|r| r[5] == "never"));
+    }
+
+    fn stored_manifest(
+        id: &str,
+        strategy: &str,
+        curve: &[(f64, f64)],
+        final_acc: f64,
+    ) -> crate::store::schema::RunManifest {
+        use crate::store::schema::{RunManifest, RunStatus, SCHEMA_VERSION};
+        RunManifest {
+            schema_version: SCHEMA_VERSION,
+            id: id.into(),
+            created_unix: 0,
+            updated_unix: 0,
+            status: RunStatus::Running,
+            strategy: strategy.into(),
+            config: Default::default(),
+            records: fake_result(strategy, curve, final_acc).records,
+            checkpoint: None,
+            final_state: None,
+        }
+    }
+
+    #[test]
+    fn compare_runs_generalizes_to_n_with_baseline() {
+        let a = stored_manifest("fedel-s1", "fedel", &[(50.0, 0.4), (100.0, 0.62)], 0.62);
+        let b = stored_manifest("timelyfl-s1", "timelyfl", &[(150.0, 0.58)], 0.58);
+        let c = stored_manifest("fedavg-s1", "fedavg", &[(100.0, 0.3), (200.0, 0.6)], 0.6);
+        // least final acc = 0.58 -> target 0.551; fedel hits at 100,
+        // timelyfl at 150, fedavg (baseline) at 200
+        let report = compare_runs(&[&a, &b, &c], None, 2);
+        assert_eq!(report.baseline, "fedavg-s1");
+        assert_eq!(report.rows.len(), 3);
+        assert!((report.rows[0].speedup_vs_baseline.unwrap() - 2.0).abs() < 1e-9);
+        assert!((report.rows[1].speedup_vs_baseline.unwrap() - 200.0 / 150.0).abs() < 1e-9);
+        assert!((report.rows[2].speedup_vs_baseline.unwrap() - 1.0).abs() < 1e-9);
+        assert_eq!(report.table().rows.len(), 3);
+    }
+
+    #[test]
+    fn compare_report_json_round_trips_through_text() {
+        use crate::util::json::Json;
+        let a = stored_manifest("fedel-s1", "fedel", &[(50.0, 0.4), (100.0, 0.62)], 0.62);
+        let b = stored_manifest("fedavg-s1", "fedavg", &[(100.0, 0.3), (200.0, 0.6)], 0.6);
+        let report = compare_runs(&[&a, &b], Some(0.57), 1);
+        let j = Json::parse(&report.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.f("target_acc").unwrap(), 0.57);
+        assert_eq!(j.s("baseline").unwrap(), "fedavg-s1");
+        let runs = j.arr("runs").unwrap();
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].s("strategy").unwrap(), "fedel");
+        assert_eq!(runs[0].f("time_to_target_secs").unwrap(), 100.0);
+        assert!((runs[0].f("speedup_vs_baseline").unwrap() - 2.0).abs() < 1e-9);
+        // a run that never reaches the target serializes nulls, not 0s
+        let strict = compare_runs(&[&a, &b], Some(0.99), 1);
+        let j = Json::parse(&strict.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.arr("runs").unwrap()[0].get("time_to_target_secs"), Some(&Json::Null));
     }
 
     #[test]

@@ -1,0 +1,659 @@
+//! Campaign runner: grids of experiments as one crash-safe unit of work.
+//!
+//! Reproducing FedEL's headline tables means sweeping strategy × seed ×
+//! fleet × T_th grids against the baselines — dozens of runs per figure.
+//! A [`CampaignCfg`] names such a grid; [`run_campaign`] expands it into
+//! deterministic cells, fans the cells out across a bounded worker pool,
+//! and writes every run through the shared, lockfile-guarded
+//! [`RunStore`]. The campaign itself is as durable as its runs:
+//!
+//! * The cell → run-id assignment persists in
+//!   `campaigns/<name>.json` ([`crate::store::schema::CampaignManifest`]),
+//!   atomically rewritten under the store lock as workers claim cells.
+//! * A killed campaign resumes by running it again (same name, same or no
+//!   grid args): **complete cells are skipped**, cells with a checkpoint
+//!   continue through the existing [`crate::fl::server::ResumeState`]
+//!   machinery (bitwise-identical to never having stopped,
+//!   `tests/campaign.rs`), and cells that died before their first
+//!   checkpoint replay from round 0 into the same run.
+//! * Two kill switches mirror `ServerCfg::halt_after` for drills and
+//!   tests: `halt_after` kills each executing cell after k rounds, and
+//!   `halt_after_cells` stops the campaign after n cells finish.
+//!
+//! Reporting rides the N-way [`crate::report::compare_runs`]:
+//! [`report`] assembles the whole grid's time-to-accuracy table (and
+//! `--json` form) from the stored manifests.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::{ExperimentCfg, FleetSpec};
+use crate::fl::observer::NullObserver;
+use crate::report::{compare_runs, CompareReport, Table};
+use crate::sim::experiment::{resume_run, Experiment};
+use crate::store::checkpoint::CheckpointObserver;
+use crate::store::schema::{CampaignManifest, CellState, RunStatus, CAMPAIGN_SCHEMA_VERSION};
+use crate::store::RunStore;
+use crate::util::json::Json;
+use crate::util::unix_now;
+
+/// A grid of experiments over one base config. Every axis must be
+/// non-empty; the cross product expands in a fixed order (strategies
+/// outermost, then seeds, fleets, T_th factors), so cell indices and
+/// labels are deterministic — which is what lets an interrupted campaign
+/// find its cells again.
+#[derive(Clone, Debug)]
+pub struct CampaignCfg {
+    pub name: String,
+    /// Shared knobs (model, rounds, lr, ...); the grid axes override its
+    /// strategy / seed / fleet / t_th_factor per cell.
+    pub base: ExperimentCfg,
+    pub strategies: Vec<String>,
+    pub seeds: Vec<u64>,
+    pub fleets: Vec<FleetSpec>,
+    pub t_th_factors: Vec<f64>,
+    /// Checkpoint cadence inside each cell (rounds).
+    pub checkpoint_every: usize,
+    /// Concurrent cells; 0 = one per host core. Purely a wall-clock knob:
+    /// cells are independent deterministic experiments, so results are
+    /// identical at any worker count.
+    pub workers: usize,
+    /// Kill switch, per cell: every cell *executed* by this invocation
+    /// aborts after this many rounds (resumed cells run to completion —
+    /// their config snapshot is authoritative). Not part of the spec
+    /// snapshot.
+    pub halt_after: Option<usize>,
+    /// Kill switch, campaign-level: stop claiming cells once this many
+    /// have been executed to completion by this invocation. Not part of
+    /// the spec snapshot.
+    pub halt_after_cells: Option<usize>,
+    /// Per-cell progress lines on stderr.
+    pub verbose: bool,
+}
+
+impl CampaignCfg {
+    /// A 1×1×1×1 grid over the base config's own values; widen the axes
+    /// from there.
+    pub fn new(name: impl Into<String>, base: ExperimentCfg) -> CampaignCfg {
+        CampaignCfg {
+            name: name.into(),
+            strategies: vec![base.strategy.clone()],
+            seeds: vec![base.seed],
+            fleets: vec![base.fleet.clone()],
+            t_th_factors: vec![base.t_th_factor],
+            base,
+            checkpoint_every: 5,
+            workers: 0,
+            halt_after: None,
+            halt_after_cells: None,
+            verbose: false,
+        }
+    }
+
+    /// The grid, expanded in deterministic order.
+    pub fn cells(&self) -> anyhow::Result<Vec<CampaignCell>> {
+        anyhow::ensure!(
+            !self.strategies.is_empty()
+                && !self.seeds.is_empty()
+                && !self.fleets.is_empty()
+                && !self.t_th_factors.is_empty(),
+            "campaign {:?}: every grid axis needs at least one value",
+            self.name
+        );
+        anyhow::ensure!(self.checkpoint_every >= 1, "checkpoint interval must be >= 1");
+        let mut cells = Vec::new();
+        for strategy in &self.strategies {
+            for &seed in &self.seeds {
+                for fleet in &self.fleets {
+                    for &t_th in &self.t_th_factors {
+                        cells.push(CampaignCell {
+                            index: cells.len(),
+                            strategy: strategy.clone(),
+                            seed,
+                            fleet: fleet.clone(),
+                            t_th_factor: t_th,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(cells)
+    }
+
+    /// The experiment a cell runs: the base config with the cell's axis
+    /// values (plus this invocation's kill switch) applied.
+    pub fn cell_cfg(&self, cell: &CampaignCell) -> ExperimentCfg {
+        let mut cfg =
+            self.base.with_axes(&cell.strategy, cell.seed, &cell.fleet, cell.t_th_factor);
+        cfg.halt_after = self.halt_after;
+        cfg.verbose = false;
+        cfg.record_selections = false;
+        cfg
+    }
+
+    /// Grid spec snapshot for the campaign manifest. Process knobs
+    /// (workers, kill switches, verbosity) stay out, like
+    /// `ExperimentCfg::to_json` keeps `halt_after` out of run snapshots.
+    pub fn spec_to_json(&self) -> Json {
+        Json::obj(vec![
+            ("base", self.base.to_json()),
+            (
+                "strategies",
+                Json::Arr(self.strategies.iter().map(|s| Json::Str(s.clone())).collect()),
+            ),
+            // u64 seeds ride strings, like everywhere else in the schema
+            (
+                "seeds",
+                Json::Arr(self.seeds.iter().map(|s| Json::Str(format!("{s}"))).collect()),
+            ),
+            (
+                "fleets",
+                Json::Arr(self.fleets.iter().map(|f| Json::Str(f.label())).collect()),
+            ),
+            ("t_th_factors", Json::from_f64s(&self.t_th_factors)),
+            ("checkpoint_every", Json::Num(self.checkpoint_every as f64)),
+        ])
+    }
+
+    /// Rebuild a grid from a manifest's spec snapshot (the bare
+    /// `campaign run --name <x>` resume path).
+    pub fn from_spec_json(name: &str, j: &Json) -> anyhow::Result<CampaignCfg> {
+        let strategies = j
+            .arr("strategies")?
+            .iter()
+            .map(|s| {
+                s.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| anyhow::anyhow!("spec strategy not a string"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let seeds = j
+            .arr("seeds")?
+            .iter()
+            .map(|s| match s {
+                Json::Str(s) => s.parse().map_err(|e| anyhow::anyhow!("spec seed {s:?}: {e}")),
+                Json::Num(x) => Ok(*x as u64),
+                other => anyhow::bail!("spec seed {other:?} not a number or string"),
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let fleets = j
+            .arr("fleets")?
+            .iter()
+            .map(|s| {
+                FleetSpec::parse(
+                    s.as_str().ok_or_else(|| anyhow::anyhow!("spec fleet not a string"))?,
+                )
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let t_th_factors = j
+            .arr("t_th_factors")?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("spec t_th not a number")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(CampaignCfg {
+            name: name.to_string(),
+            base: ExperimentCfg::from_json(j.req("base")?)?,
+            strategies,
+            seeds,
+            fleets,
+            t_th_factors,
+            checkpoint_every: j.u("checkpoint_every").unwrap_or(5),
+            workers: 0,
+            halt_after: None,
+            halt_after_cells: None,
+            verbose: false,
+        })
+    }
+}
+
+/// One point of the grid.
+#[derive(Clone, Debug)]
+pub struct CampaignCell {
+    pub index: usize,
+    pub strategy: String,
+    pub seed: u64,
+    pub fleet: FleetSpec,
+    pub t_th_factor: f64,
+}
+
+impl CampaignCell {
+    /// Deterministic human-readable cell name, unique within the grid.
+    pub fn label(&self) -> String {
+        format!(
+            "{}-s{}-f{}-t{}",
+            self.strategy,
+            self.seed,
+            self.fleet.label(),
+            self.t_th_factor
+        )
+    }
+}
+
+/// How one cell ended up after a `run_campaign` invocation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CellRun {
+    /// Already complete in the store; untouched.
+    Skipped,
+    /// Executed (fresh, replayed, or resumed) to completion.
+    Completed,
+    /// Failed — including a `halt_after` kill, whose checkpoints make the
+    /// cell resumable by the next invocation.
+    Failed(String),
+    /// Not executed by this invocation: never claimed (campaign halted
+    /// before a worker got to it), or a concurrent campaign process owns
+    /// the cell's run.
+    Pending,
+}
+
+#[derive(Clone, Debug)]
+pub struct CellOutcome {
+    pub index: usize,
+    pub label: String,
+    pub run_id: Option<String>,
+    pub status: CellRun,
+}
+
+#[derive(Clone, Debug)]
+pub struct CampaignOutcome {
+    pub cells: Vec<CellOutcome>,
+    /// `halt_after_cells` tripped.
+    pub halted: bool,
+}
+
+impl CampaignOutcome {
+    /// Every cell is done (complete in the store), whether this
+    /// invocation executed it or a previous one did.
+    pub fn complete(&self) -> bool {
+        self.cells
+            .iter()
+            .all(|c| matches!(c.status, CellRun::Skipped | CellRun::Completed))
+    }
+
+    /// (skipped, completed, failed, pending) counts.
+    pub fn counts(&self) -> (usize, usize, usize, usize) {
+        let mut n = (0, 0, 0, 0);
+        for c in &self.cells {
+            match c.status {
+                CellRun::Skipped => n.0 += 1,
+                CellRun::Completed => n.1 += 1,
+                CellRun::Failed(_) => n.2 += 1,
+                CellRun::Pending => n.3 += 1,
+            }
+        }
+        n
+    }
+
+    pub fn failures(&self) -> impl Iterator<Item = &CellOutcome> {
+        self.cells.iter().filter(|c| matches!(c.status, CellRun::Failed(_)))
+    }
+}
+
+/// Load the campaign's persisted state, or register it on first run. A
+/// pre-existing campaign must agree on the expanded grid — resuming with
+/// a *different* grid under the same name is almost certainly a mistake,
+/// so it fails loudly instead of silently re-mapping cells.
+fn load_or_create_manifest(
+    store: &RunStore,
+    cfg: &CampaignCfg,
+    cells: &[CampaignCell],
+) -> anyhow::Result<CampaignManifest> {
+    let labels: Vec<String> = cells.iter().map(CampaignCell::label).collect();
+    if store.campaign_exists(&cfg.name) {
+        let m = store.load_campaign(&cfg.name)?;
+        let have: Vec<&str> = m.cells.iter().map(|c| c.label.as_str()).collect();
+        let want: Vec<&str> = labels.iter().map(String::as_str).collect();
+        anyhow::ensure!(
+            have == want,
+            "campaign {:?} already exists with a different grid \
+             ({} cells vs {} requested) — pick a new --name or rerun with \
+             the stored spec (bare `campaign run --name {}`)",
+            cfg.name,
+            have.len(),
+            want.len(),
+            cfg.name
+        );
+        Ok(m)
+    } else {
+        let now = unix_now();
+        let m = CampaignManifest {
+            schema_version: CAMPAIGN_SCHEMA_VERSION,
+            name: cfg.name.clone(),
+            created_unix: now,
+            updated_unix: now,
+            spec: cfg.spec_to_json(),
+            cells: labels
+                .into_iter()
+                .map(|label| CellState { label, run_id: None })
+                .collect(),
+        };
+        store.save_campaign(&m)?;
+        Ok(m)
+    }
+}
+
+/// Execute one cell to completion, whatever state the store left it in.
+/// Returns the cell's run id and how it ended up. The campaign manifest
+/// on *disk* is the source of truth for cell→run assignments — it is
+/// re-read here and claimed via the store's locked compare-and-swap, so
+/// two campaign processes driving the same grid never clobber each
+/// other's assignments or double-run a cell.
+fn run_cell(
+    store: &RunStore,
+    cfg: &CampaignCfg,
+    cell: &CampaignCell,
+) -> anyhow::Result<(String, CellRun)> {
+    let assigned = store.load_campaign(&cfg.name)?.cells[cell.index].run_id.clone();
+    if let Some(id) = assigned {
+        match store.load_manifest(&id) {
+            Ok(m) if m.status == RunStatus::Complete => return Ok((id, CellRun::Skipped)),
+            Ok(m) if m.checkpoint.is_some() => {
+                // Mid-flight kill with a checkpoint: the existing
+                // ResumeState machinery continues it bitwise-identically.
+                resume_run(store, &id, cfg.checkpoint_every, &mut NullObserver)?;
+                return Ok((id, CellRun::Completed));
+            }
+            Ok(mut m) => {
+                // Claimed, then died before the first checkpoint: replay
+                // from round 0 into the same run. The stored config
+                // snapshot is authoritative; only this invocation's kill
+                // switch is layered on.
+                m.records.clear();
+                m.checkpoint = None;
+                m.status = RunStatus::Running;
+                let strategy = m.strategy.clone();
+                let mut exp_cfg = m.config.clone();
+                exp_cfg.halt_after = cfg.halt_after;
+                let mut exp = Experiment::build(exp_cfg)?;
+                let mut ckpt = CheckpointObserver::resume(store, m, cfg.checkpoint_every);
+                exp.run_from(Some(&strategy), &mut ckpt, None)?;
+                if let Some(e) = ckpt.take_error() {
+                    anyhow::bail!("cell {}: persisting run state failed: {e}", cell.label());
+                }
+                return Ok((id, CellRun::Completed));
+            }
+            Err(_) => {
+                // Run directory hand-deleted since the assignment was
+                // recorded: put a fresh run in its place. The CAS expects
+                // the dead id, so a concurrent reassigner wins at most
+                // once; if we lose, the winner's run is authoritative and
+                // may be executing right now in another process — leave
+                // it to them.
+                let fresh = store.fresh_run_id(&cell.strategy, cell.seed)?;
+                let winner =
+                    store.claim_campaign_cell(&cfg.name, cell.index, Some(id.as_str()), &fresh)?;
+                if winner != fresh {
+                    return Ok((winner, CellRun::Pending));
+                }
+                return run_fresh_cell(store, cfg, cell, fresh);
+            }
+        }
+    }
+    // Unassigned: allocate and claim *before* the first round executes,
+    // so a kill at any later point still finds the cell's run. If a
+    // concurrent campaign process claimed the cell between our read and
+    // the CAS, defer to its run (our reserved id stays an empty dir).
+    let id = store.fresh_run_id(&cell.strategy, cell.seed)?;
+    let winner = store.claim_campaign_cell(&cfg.name, cell.index, None, &id)?;
+    if winner != id {
+        return Ok((winner, CellRun::Pending));
+    }
+    run_fresh_cell(store, cfg, cell, id)
+}
+
+/// Fresh execution of a cell into an already-claimed run id.
+fn run_fresh_cell(
+    store: &RunStore,
+    cfg: &CampaignCfg,
+    cell: &CampaignCell,
+    id: String,
+) -> anyhow::Result<(String, CellRun)> {
+    let exp_cfg = cfg.cell_cfg(cell);
+    let mut exp = Experiment::build(exp_cfg)?;
+    let mut ckpt = CheckpointObserver::create_as(
+        store,
+        &exp.cfg,
+        &cell.strategy,
+        cfg.checkpoint_every,
+        id.clone(),
+    )?;
+    exp.run_from(Some(&cell.strategy), &mut ckpt, None)?;
+    if let Some(e) = ckpt.take_error() {
+        anyhow::bail!("cell {}: persisting run state failed: {e}", cell.label());
+    }
+    Ok((id, CellRun::Completed))
+}
+
+/// Run (or resume) a campaign: expand the grid, reconcile it with the
+/// store's persisted state, and drive every not-yet-complete cell across
+/// a bounded worker pool. Returns the per-cell outcome; the campaign is
+/// done when [`CampaignOutcome::complete`] — otherwise running it again
+/// picks up exactly where this invocation stopped.
+pub fn run_campaign(store: &RunStore, cfg: &CampaignCfg) -> anyhow::Result<CampaignOutcome> {
+    let cells = cfg.cells()?;
+    // Validates grid agreement and registers the campaign; per-cell
+    // assignments are re-read from disk by the workers, never from this
+    // snapshot.
+    let manifest = load_or_create_manifest(store, cfg, &cells)?;
+    let outcomes: Mutex<Vec<CellOutcome>> = Mutex::new(
+        cells
+            .iter()
+            .map(|c| CellOutcome {
+                index: c.index,
+                label: c.label(),
+                run_id: manifest.cells[c.index].run_id.clone(),
+                status: CellRun::Pending,
+            })
+            .collect(),
+    );
+    let queue: Mutex<VecDeque<CampaignCell>> = Mutex::new(cells.iter().cloned().collect());
+    let stop = AtomicBool::new(false);
+    let executed = AtomicUsize::new(0);
+    let requested = match cfg.workers {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    };
+    // cells() guarantees at least one cell, so the clamp is well-formed
+    let workers = requested.clamp(1, cells.len());
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let cell = {
+                    let mut q = queue.lock().expect("campaign queue lock poisoned");
+                    q.pop_front()
+                };
+                let Some(cell) = cell else { break };
+                let label = cell.label();
+                let status = match run_cell(store, cfg, &cell) {
+                    Ok((id, status)) => {
+                        if cfg.verbose {
+                            let verb = match status {
+                                CellRun::Skipped => "already complete",
+                                CellRun::Pending => "owned by another campaign process",
+                                _ => "done",
+                            };
+                            eprintln!("[campaign {}] cell {label} -> {id}: {verb}", cfg.name);
+                        }
+                        {
+                            let mut out =
+                                outcomes.lock().expect("campaign outcomes lock poisoned");
+                            out[cell.index].run_id = Some(id);
+                        }
+                        status
+                    }
+                    Err(e) => {
+                        if cfg.verbose {
+                            eprintln!("[campaign {}] cell {label} FAILED: {e:#}", cfg.name);
+                        }
+                        CellRun::Failed(format!("{e:#}"))
+                    }
+                };
+                let was_executed = status == CellRun::Completed;
+                outcomes.lock().expect("campaign outcomes lock poisoned")[cell.index].status =
+                    status;
+                if was_executed {
+                    let n = executed.fetch_add(1, Ordering::SeqCst) + 1;
+                    if cfg.halt_after_cells == Some(n) {
+                        stop.store(true, Ordering::SeqCst);
+                    }
+                }
+            });
+        }
+    });
+
+    Ok(CampaignOutcome {
+        cells: outcomes.into_inner().expect("campaign outcomes lock poisoned"),
+        halted: stop.load(Ordering::SeqCst),
+    })
+}
+
+/// One table row per cell: assignment, store status, progress, accuracy.
+pub fn status_table(store: &RunStore, m: &CampaignManifest) -> Table {
+    let mut t = Table::new(
+        &format!("campaign {} ({} cells)", m.name, m.cells.len()),
+        &["cell", "run", "status", "rounds", "final acc"],
+    );
+    for cell in &m.cells {
+        let (run, status, rounds, acc) = match &cell.run_id {
+            None => ("-".to_string(), "pending".to_string(), "-".to_string(), "-".to_string()),
+            Some(id) => match store.load_manifest(id) {
+                Err(_) => (id.clone(), "missing".to_string(), "-".into(), "-".into()),
+                Ok(r) => {
+                    let status = match (r.status, &r.checkpoint) {
+                        (RunStatus::Complete, _) => "complete",
+                        (RunStatus::Running, Some(_)) => "resumable",
+                        (RunStatus::Running, None) => "incomplete",
+                    };
+                    (
+                        id.clone(),
+                        status.to_string(),
+                        format!("{}/{}", r.records.len(), r.config.rounds),
+                        r.final_acc()
+                            .map(|a| format!("{:.2}%", 100.0 * a))
+                            .unwrap_or_else(|| "n/a".into()),
+                    )
+                }
+            },
+        };
+        t.row(vec![cell.label.clone(), run, status, rounds, acc]);
+    }
+    t
+}
+
+/// Whole-grid comparison: every cell with a stored run, through the
+/// N-way [`compare_runs`]. The baseline is `baseline` (a run id, cell
+/// label, or strategy name) when given, else the first cell running
+/// "fedavg" (the paper's reference), else the first cell.
+pub fn report(
+    store: &RunStore,
+    m: &CampaignManifest,
+    target: Option<f64>,
+    baseline: Option<&str>,
+) -> anyhow::Result<CompareReport> {
+    let mut manifests = Vec::new();
+    let mut labels = Vec::new();
+    for cell in &m.cells {
+        if let Some(id) = &cell.run_id {
+            if let Ok(run) = store.load_manifest(id) {
+                manifests.push(run);
+                labels.push(cell.label.as_str());
+            }
+        }
+    }
+    anyhow::ensure!(
+        !manifests.is_empty(),
+        "campaign {:?} has no stored runs to report on yet",
+        m.name
+    );
+    let base_idx = match baseline {
+        Some(want) => manifests
+            .iter()
+            .zip(&labels)
+            .position(|(r, &label)| r.id == want || label == want || r.strategy == want)
+            .ok_or_else(|| {
+                anyhow::anyhow!("baseline {want:?} matches no cell run id, label, or strategy")
+            })?,
+        None => manifests
+            .iter()
+            .position(|r| r.strategy == "fedavg")
+            .unwrap_or(0),
+    };
+    let refs: Vec<&crate::store::schema::RunManifest> = manifests.iter().collect();
+    Ok(compare_runs(&refs, target, base_idx))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> CampaignCfg {
+        let base = ExperimentCfg {
+            model: "mock:4x20".into(),
+            rounds: 4,
+            ..Default::default()
+        };
+        let mut cfg = CampaignCfg::new("unit", base);
+        cfg.strategies = vec!["fedavg".into(), "fedel".into()];
+        cfg.seeds = vec![1, 2];
+        cfg
+    }
+
+    #[test]
+    fn cells_expand_deterministically() {
+        let cfg = grid();
+        let cells = cfg.cells().unwrap();
+        assert_eq!(cells.len(), 4);
+        let labels: Vec<String> = cells.iter().map(CampaignCell::label).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "fedavg-s1-fsmall10-t1",
+                "fedavg-s2-fsmall10-t1",
+                "fedel-s1-fsmall10-t1",
+                "fedel-s2-fsmall10-t1",
+            ]
+        );
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.index, i);
+        }
+        // empty axis rejected
+        let mut bad = grid();
+        bad.seeds.clear();
+        assert!(bad.cells().is_err());
+    }
+
+    #[test]
+    fn cell_cfg_applies_axes_and_kill_switch() {
+        let mut cfg = grid();
+        cfg.halt_after = Some(2);
+        let cells = cfg.cells().unwrap();
+        let c = cfg.cell_cfg(&cells[3]);
+        assert_eq!(c.strategy, "fedel");
+        assert_eq!(c.seed, 2);
+        assert_eq!(c.halt_after, Some(2));
+        assert_eq!(c.model, "mock:4x20");
+    }
+
+    #[test]
+    fn spec_round_trips_through_json_text() {
+        let mut cfg = grid();
+        cfg.fleets = vec![FleetSpec::Small10, FleetSpec::Scales(vec![1.0, 2.5])];
+        cfg.t_th_factors = vec![0.8, 1.25];
+        cfg.seeds = vec![(1u64 << 53) + 1, 7];
+        let text = cfg.spec_to_json().to_string_pretty();
+        let back = CampaignCfg::from_spec_json("unit", &Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.strategies, cfg.strategies);
+        assert_eq!(back.seeds, cfg.seeds, "u64 seeds must survive the string path");
+        assert_eq!(back.fleets, cfg.fleets);
+        assert_eq!(back.t_th_factors, cfg.t_th_factors);
+        assert_eq!(back.base.model, cfg.base.model);
+        assert_eq!(
+            back.cells().unwrap().iter().map(CampaignCell::label).collect::<Vec<_>>(),
+            cfg.cells().unwrap().iter().map(CampaignCell::label).collect::<Vec<_>>()
+        );
+    }
+}

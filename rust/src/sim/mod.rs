@@ -1,8 +1,11 @@
-//! Experiment wiring: fleet construction + the one-call experiment runner
-//! used by the CLI, the examples, and every bench.
+//! Experiment wiring: fleet construction, the one-call experiment runner
+//! used by the CLI, the examples, and every bench, and the campaign
+//! runner for whole strategy × seed × fleet × T_th grids.
 
+pub mod campaign;
 pub mod experiment;
 pub mod fleet;
 
+pub use campaign::{run_campaign, CampaignCfg};
 pub use experiment::{run_one, Experiment};
 pub use fleet::build_fleet;

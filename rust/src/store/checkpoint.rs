@@ -16,13 +16,7 @@ use crate::fl::observer::{RoundObserver, ServerState};
 use crate::fl::server::{ExperimentResult, ResumeState, RoundRecord};
 use crate::store::schema::{Checkpoint, FinalState, RunManifest, RunStatus, SCHEMA_VERSION};
 use crate::store::RunStore;
-
-fn unix_now() -> u64 {
-    std::time::SystemTime::now()
-        .duration_since(std::time::UNIX_EPOCH)
-        .map(|d| d.as_secs())
-        .unwrap_or(0)
-}
+use crate::util::unix_now;
 
 pub struct CheckpointObserver<'s> {
     store: &'s RunStore,
@@ -32,14 +26,28 @@ pub struct CheckpointObserver<'s> {
 }
 
 impl<'s> CheckpointObserver<'s> {
-    /// Register a brand-new run (fresh id from strategy + seed) and
-    /// persist its initial, empty manifest so the run is visible in
-    /// `runs list` from round 0.
+    /// Register a brand-new run (fresh id from strategy + seed, allocated
+    /// under the store lock) and persist its initial, empty manifest so
+    /// the run is visible in `runs list` from round 0.
     pub fn create(
         store: &'s RunStore,
         cfg: &ExperimentCfg,
         strategy: &str,
         every: usize,
+    ) -> anyhow::Result<Self> {
+        let id = store.fresh_run_id(strategy, cfg.seed)?;
+        CheckpointObserver::create_as(store, cfg, strategy, every, id)
+    }
+
+    /// Like [`CheckpointObserver::create`] but with a caller-supplied run
+    /// id — the campaign runner allocates ids up front so the cell→run
+    /// assignment is recorded before the first round executes.
+    pub fn create_as(
+        store: &'s RunStore,
+        cfg: &ExperimentCfg,
+        strategy: &str,
+        every: usize,
+        id: String,
     ) -> anyhow::Result<Self> {
         anyhow::ensure!(every >= 1, "checkpoint interval must be >= 1");
         let mut config = cfg.clone();
@@ -47,7 +55,7 @@ impl<'s> CheckpointObserver<'s> {
         let now = unix_now();
         let manifest = RunManifest {
             schema_version: SCHEMA_VERSION,
-            id: store.fresh_run_id(strategy, cfg.seed),
+            id,
             created_unix: now,
             updated_unix: now,
             status: RunStatus::Running,

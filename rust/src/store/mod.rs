@@ -22,19 +22,109 @@
 //! * [`RunStore::latest_params`] is the warm-start seam: any stored run
 //!   can seed a new experiment's global model.
 //!
-//! CLI: `fedel runs list | show <id> | resume <id> | compare <a> <b>`.
+//! Concurrency: one store may be written by several threads *and*
+//! processes at once (the campaign runner, parallel sweeps, a human
+//! running `fedel train` against the same `--store`). Mutations that
+//! race — run-id allocation, campaign-manifest rewrites, blob GC — are
+//! serialized through an advisory lockfile (`<root>/.lock`, created with
+//! `O_EXCL`, removed on drop, reclaimed when stale); everything else is
+//! made safe by construction: manifests and blobs are written to
+//! uniquely-named temporaries and renamed into place, and blobs are
+//! immutable once published.
+//!
+//! CLI: `fedel runs list | show <id> | resume <id> | compare <a> ... | gc`.
 
 pub mod checkpoint;
 pub mod schema;
 
+use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
 
 use crate::util::sha256;
-use self::schema::{BlobRef, RunManifest};
+use self::schema::{BlobRef, CampaignManifest, RunManifest};
 
 /// Media type of a little-endian f32 parameter-vector blob (the same
 /// encoding as the artifacts' `init.bin`).
 pub const MEDIA_PARAMS_F32LE: &str = "application/x-fedel-params.f32le";
+
+/// A crashed process can strand `.lock`; holders keep it for microseconds
+/// (id allocation, one small file rename) — long operations like gc
+/// heartbeat via [`StoreLock::refresh`] — so a lockfile this old is
+/// abandoned and gets reclaimed.
+const LOCK_STALE: Duration = Duration::from_secs(30);
+
+/// How long a contender waits for the lock before giving up loudly.
+const LOCK_WAIT: Duration = Duration::from_secs(20);
+
+/// Held advisory store lock; released (unlinked) on drop. The file holds
+/// a per-acquisition token, and release/reclaim are token-checked /
+/// rename-based, so a contender can never unlink a lock another holder
+/// legitimately owns.
+pub struct StoreLock {
+    path: PathBuf,
+    token: String,
+}
+
+impl StoreLock {
+    /// Re-stamp the lockfile's mtime. Holders that legitimately exceed
+    /// [`LOCK_STALE`] (gc over a huge store) must call this periodically
+    /// or a contender will reclaim the lock out from under them.
+    pub fn refresh(&self) {
+        let _ = std::fs::write(&self.path, &self.token);
+    }
+}
+
+impl Drop for StoreLock {
+    fn drop(&mut self) {
+        // Only unlink a lock that is still ours: if a contender reclaimed
+        // it as stale and re-acquired, the file now holds their token and
+        // removing it would admit a third holder.
+        if std::fs::read_to_string(&self.path).map(|t| t == self.token).unwrap_or(false) {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// A unique temporary file name: scratch writes from concurrent
+/// threads/processes must never interleave on one path, or a rename could
+/// publish a torn file.
+fn tmp_name(stem: &str) -> String {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    format!(
+        "{stem}.tmp-{}-{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
+/// Write `bytes` to `path` atomically via a uniquely-named sibling tmp.
+fn write_atomic(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("no file name in {path:?}"))?
+        .to_string_lossy()
+        .to_string();
+    let tmp = path.with_file_name(tmp_name(&file_name));
+    std::fs::write(&tmp, bytes).map_err(|e| anyhow::anyhow!("write {tmp:?}: {e}"))?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        anyhow::anyhow!("rename to {path:?}: {e}")
+    })?;
+    Ok(())
+}
+
+/// What `RunStore::gc_blobs` did (or would do, under `dry_run`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GcReport {
+    /// Blobs still referenced by at least one manifest.
+    pub live: usize,
+    /// Orphaned blobs swept (or that would be, under `dry_run`).
+    pub swept: usize,
+    /// Bytes those orphans occupy.
+    pub swept_bytes: u64,
+}
 
 /// A store rooted at one directory; see the module docs for the layout.
 pub struct RunStore {
@@ -45,7 +135,7 @@ impl RunStore {
     /// Open a store, creating the directory skeleton if absent.
     pub fn open(root: impl Into<PathBuf>) -> anyhow::Result<RunStore> {
         let root = root.into();
-        for sub in ["runs", "blobs"] {
+        for sub in ["runs", "blobs", "campaigns"] {
             let dir = root.join(sub);
             std::fs::create_dir_all(&dir)
                 .map_err(|e| anyhow::anyhow!("create {dir:?}: {e}"))?;
@@ -65,36 +155,92 @@ impl RunStore {
         self.root.join("blobs").join(hex)
     }
 
+    fn campaign_path(&self, name: &str) -> PathBuf {
+        self.root.join("campaigns").join(format!("{name}.json"))
+    }
+
+    // -- locking ------------------------------------------------------------
+
+    /// Take the store-wide advisory lock. `O_EXCL` creation is atomic on
+    /// every platform we care about, across threads and processes alike;
+    /// contenders spin with a short sleep, reclaim abandoned locks older
+    /// than [`LOCK_STALE`], and give up after [`LOCK_WAIT`].
+    ///
+    /// Stale reclaim is rename-based: `rename` succeeds for exactly one
+    /// contender (the others see the file gone), so several contenders
+    /// observing the same abandoned lock can never all "remove and
+    /// re-create" their way into concurrent ownership.
+    pub fn lock(&self) -> anyhow::Result<StoreLock> {
+        let path = self.root.join(".lock");
+        // pid + counter, for humans debugging a stuck store and for the
+        // token-checked release.
+        let token = tmp_name("holder");
+        let deadline = Instant::now() + LOCK_WAIT;
+        loop {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = write!(f, "{token}");
+                    return Ok(StoreLock { path, token });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = std::fs::metadata(&path)
+                        .and_then(|m| m.modified())
+                        .ok()
+                        .and_then(|t| t.elapsed().ok())
+                        .map(|age| age >= LOCK_STALE)
+                        .unwrap_or(false);
+                    if stale {
+                        // Claim the corpse by renaming it to a unique
+                        // graveyard name; exactly one contender wins.
+                        let grave = path.with_file_name(tmp_name(".lock.stale"));
+                        if std::fs::rename(&path, &grave).is_ok() {
+                            let _ = std::fs::remove_file(&grave);
+                        }
+                        continue;
+                    }
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "store lock {path:?} held for over {LOCK_WAIT:?} — \
+                         remove it by hand if its owner is gone"
+                    );
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(anyhow::anyhow!("create lock {path:?}: {e}")),
+            }
+        }
+    }
+
     // -- runs ---------------------------------------------------------------
 
     /// Allocate a fresh, human-readable run id: `<strategy>-s<seed>`,
-    /// suffixed `-2`, `-3`, ... when taken.
-    pub fn fresh_run_id(&self, strategy: &str, seed: u64) -> String {
+    /// suffixed `-2`, `-3`, ... when taken. Allocation *reserves* the id
+    /// by creating `runs/<id>/` while holding the store lock, so
+    /// concurrent writers — threads or whole processes — can never both
+    /// observe the same id free and clobber each other's run directory.
+    pub fn fresh_run_id(&self, strategy: &str, seed: u64) -> anyhow::Result<String> {
+        let _lock = self.lock()?;
         let base = format!("{strategy}-s{seed}");
-        if !self.run_dir(&base).exists() {
-            return base;
-        }
+        let mut id = base.clone();
         let mut n = 2usize;
         loop {
-            let id = format!("{base}-{n}");
-            if !self.run_dir(&id).exists() {
-                return id;
+            let dir = self.run_dir(&id);
+            if !dir.exists() {
+                std::fs::create_dir_all(&dir)
+                    .map_err(|e| anyhow::anyhow!("reserve {dir:?}: {e}"))?;
+                return Ok(id);
             }
+            id = format!("{base}-{n}");
             n += 1;
         }
     }
 
-    /// Persist a manifest atomically (tmp + rename): a crash mid-write
-    /// leaves the previous manifest intact, never a torn one.
+    /// Persist a manifest atomically (uniquely-named tmp + rename): a
+    /// crash mid-write leaves the previous manifest intact, never a torn
+    /// one, and concurrent writers never share a scratch path.
     pub fn save_manifest(&self, m: &RunManifest) -> anyhow::Result<()> {
         let dir = self.run_dir(&m.id);
         std::fs::create_dir_all(&dir).map_err(|e| anyhow::anyhow!("create {dir:?}: {e}"))?;
-        let tmp = dir.join("manifest.json.tmp");
-        std::fs::write(&tmp, m.to_json().to_string_pretty())
-            .map_err(|e| anyhow::anyhow!("write {tmp:?}: {e}"))?;
-        let path = dir.join("manifest.json");
-        std::fs::rename(&tmp, &path).map_err(|e| anyhow::anyhow!("rename to {path:?}: {e}"))?;
-        Ok(())
+        write_atomic(&dir.join("manifest.json"), m.to_json().to_string_pretty().as_bytes())
     }
 
     pub fn load_manifest(&self, id: &str) -> anyhow::Result<RunManifest> {
@@ -135,14 +281,14 @@ impl RunStore {
 
     /// Store bytes under their content address; already-present digests
     /// are not rewritten, so identical snapshots dedup for free.
+    /// Concurrent writers of the same content are harmless: each writes
+    /// its own uniquely-named tmp, and whichever rename lands last
+    /// replaces identical bytes with identical bytes.
     pub fn put_blob(&self, bytes: &[u8], media_type: &str) -> anyhow::Result<BlobRef> {
         let hex = sha256::hex(bytes);
         let path = self.blob_path(&hex);
         if !path.exists() {
-            let tmp = self.blob_path(&format!("{hex}.tmp"));
-            std::fs::write(&tmp, bytes).map_err(|e| anyhow::anyhow!("write {tmp:?}: {e}"))?;
-            std::fs::rename(&tmp, &path)
-                .map_err(|e| anyhow::anyhow!("rename to {path:?}: {e}"))?;
+            write_atomic(&path, bytes)?;
         }
         Ok(BlobRef {
             digest: format!("sha256:{hex}"),
@@ -207,6 +353,177 @@ impl RunStore {
             .ok_or_else(|| anyhow::anyhow!("run {id} has no stored parameters yet"))?;
         self.get_params(blob)
     }
+
+    // -- gc -----------------------------------------------------------------
+
+    /// Mark-and-sweep orphaned blobs: hand-deleting `runs/<id>/` leaves
+    /// its content-addressed parameter snapshots stranded under `blobs/`
+    /// forever; this walks every *readable* manifest, marks the digests
+    /// they reference (checkpoints and final states), and sweeps the rest.
+    ///
+    /// Safety properties:
+    /// * Runs with an unreadable manifest abort the sweep — a torn or
+    ///   future-schema manifest might reference any blob, so deleting
+    ///   around it would be guessing.
+    /// * Blobs (and abandoned `.tmp-` scratch files) younger than
+    ///   `min_age` are spared: a concurrent writer publishes the blob
+    ///   *before* the manifest that references it, so a grace window keeps
+    ///   the sweep from racing in between.
+    /// * The store lock is held throughout, serializing gc against id
+    ///   allocation and other sweeps.
+    pub fn gc_blobs(&self, min_age: Duration, dry_run: bool) -> anyhow::Result<GcReport> {
+        let lock = self.lock()?;
+        // gc over a huge store can legitimately outlive LOCK_STALE;
+        // heartbeat the lockfile so contenders don't reclaim it mid-sweep.
+        let mut heartbeat = 0usize;
+        let mut live: std::collections::BTreeSet<String> = Default::default();
+        let runs_dir = self.root.join("runs");
+        for entry in std::fs::read_dir(&runs_dir)
+            .map_err(|e| anyhow::anyhow!("read {runs_dir:?}: {e}"))?
+        {
+            heartbeat += 1;
+            if heartbeat % 64 == 0 {
+                lock.refresh();
+            }
+            let entry = entry?;
+            if !entry.path().join("manifest.json").exists() {
+                continue;
+            }
+            let id = entry.file_name().to_string_lossy().to_string();
+            let m = self
+                .load_manifest(&id)
+                .map_err(|e| anyhow::anyhow!("gc aborted, run {id:?} unreadable: {e}"))?;
+            for blob in m
+                .checkpoint
+                .iter()
+                .map(|c| &c.params)
+                .chain(m.final_state.iter().map(|f| &f.params))
+            {
+                if let Some(hex) = blob.digest.strip_prefix("sha256:") {
+                    live.insert(hex.to_string());
+                }
+            }
+        }
+        let mut report = GcReport::default();
+        let blobs_dir = self.root.join("blobs");
+        for entry in std::fs::read_dir(&blobs_dir)
+            .map_err(|e| anyhow::anyhow!("read {blobs_dir:?}: {e}"))?
+        {
+            heartbeat += 1;
+            if heartbeat % 64 == 0 {
+                lock.refresh();
+            }
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().to_string();
+            if live.contains(&name) {
+                report.live += 1;
+                continue;
+            }
+            let meta = entry.metadata()?;
+            // Zero grace means sweep unconditionally; otherwise an
+            // unreadable or future mtime counts as young (skip — never
+            // guess toward deletion).
+            let young = !min_age.is_zero()
+                && meta
+                    .modified()
+                    .ok()
+                    .and_then(|t| t.elapsed().ok())
+                    .map(|age| age < min_age)
+                    .unwrap_or(true);
+            if young {
+                // Could be a blob a concurrent writer just published (or
+                // is about to reference); count neither way, sweep later.
+                continue;
+            }
+            report.swept += 1;
+            report.swept_bytes += meta.len();
+            if !dry_run {
+                let path = entry.path();
+                std::fs::remove_file(&path)
+                    .map_err(|e| anyhow::anyhow!("sweep {path:?}: {e}"))?;
+            }
+        }
+        Ok(report)
+    }
+
+    // -- campaigns ----------------------------------------------------------
+
+    /// Persist a campaign manifest atomically, serialized through the
+    /// store lock (several campaign workers record cell→run assignments
+    /// into one file).
+    pub fn save_campaign(&self, m: &CampaignManifest) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !m.name.is_empty()
+                && m.name
+                    .chars()
+                    .all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.')),
+            "campaign name {:?} must be [A-Za-z0-9._-]+",
+            m.name
+        );
+        let _lock = self.lock()?;
+        write_atomic(&self.campaign_path(&m.name), m.to_json().to_string_pretty().as_bytes())
+    }
+
+    /// Atomically claim a campaign cell for `run_id` — a compare-and-swap
+    /// through the store lock, so concurrent campaign *processes* can
+    /// never overwrite each other's cell→run assignments. The manifest is
+    /// re-read from disk here (not trusted from the caller's memory); the
+    /// claim lands only if the cell's stored assignment equals `expect`
+    /// (or is unassigned). Returns the cell's authoritative assignment
+    /// after the call — `run_id` if the claim won, the standing winner if
+    /// not.
+    pub fn claim_campaign_cell(
+        &self,
+        name: &str,
+        index: usize,
+        expect: Option<&str>,
+        run_id: &str,
+    ) -> anyhow::Result<String> {
+        let _lock = self.lock()?;
+        let mut m = self.load_campaign(name)?;
+        anyhow::ensure!(
+            index < m.cells.len(),
+            "campaign {name:?} has {} cells, no index {index}",
+            m.cells.len()
+        );
+        match &m.cells[index].run_id {
+            Some(current) if Some(current.as_str()) != expect => return Ok(current.clone()),
+            _ => {}
+        }
+        m.cells[index].run_id = Some(run_id.to_string());
+        m.updated_unix = crate::util::unix_now();
+        write_atomic(&self.campaign_path(name), m.to_json().to_string_pretty().as_bytes())?;
+        Ok(run_id.to_string())
+    }
+
+    pub fn load_campaign(&self, name: &str) -> anyhow::Result<CampaignManifest> {
+        let path = self.campaign_path(name);
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("no stored campaign {name:?} ({path:?}: {e})"))?;
+        let j = crate::util::json::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
+        CampaignManifest::from_json(&j).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))
+    }
+
+    pub fn campaign_exists(&self, name: &str) -> bool {
+        self.campaign_path(name).exists()
+    }
+
+    /// Names of all stored campaigns, sorted.
+    pub fn list_campaigns(&self) -> anyhow::Result<Vec<String>> {
+        let dir = self.root.join("campaigns");
+        let mut out = Vec::new();
+        for entry in
+            std::fs::read_dir(&dir).map_err(|e| anyhow::anyhow!("read {dir:?}: {e}"))?
+        {
+            let name = entry?.file_name().to_string_lossy().to_string();
+            if let Some(stem) = name.strip_suffix(".json") {
+                out.push(stem.to_string());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -263,13 +580,184 @@ mod tests {
     fn fresh_run_ids_never_collide() {
         let dir = scratch("ids");
         let store = RunStore::open(&dir).unwrap();
-        let a = store.fresh_run_id("fedel", 42);
+        let a = store.fresh_run_id("fedel", 42).unwrap();
         assert_eq!(a, "fedel-s42");
-        std::fs::create_dir_all(store.run_dir(&a)).unwrap();
-        let b = store.fresh_run_id("fedel", 42);
+        // allocation reserves the directory itself — no create needed
+        assert!(store.run_dir(&a).exists(), "allocation must reserve the id");
+        let b = store.fresh_run_id("fedel", 42).unwrap();
         assert_eq!(b, "fedel-s42-2");
-        std::fs::create_dir_all(store.run_dir(&b)).unwrap();
-        assert_eq!(store.fresh_run_id("fedel", 42), "fedel-s42-3");
+        assert_eq!(store.fresh_run_id("fedel", 42).unwrap(), "fedel-s42-3");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lock_excludes_and_releases() {
+        let dir = scratch("lock");
+        let store = RunStore::open(&dir).unwrap();
+        let held = store.lock().unwrap();
+        assert!(dir.join(".lock").exists());
+        drop(held);
+        assert!(!dir.join(".lock").exists(), "lock must release on drop");
+        // reacquirable after release
+        drop(store.lock().unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_lock_is_reclaimed() {
+        let dir = scratch("stale");
+        let store = RunStore::open(&dir).unwrap();
+        // Simulate a crashed holder: a lockfile whose mtime is ancient.
+        let path = dir.join(".lock");
+        std::fs::write(&path, b"dead").unwrap();
+        let old = std::time::SystemTime::now() - (LOCK_STALE + Duration::from_secs(5));
+        let f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.set_modified(old).unwrap();
+        drop(f);
+        let _held = store.lock().expect("stale lock must be reclaimed");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn manifest_with_params(
+        store: &RunStore,
+        id: &str,
+        ck: Option<&[f32]>,
+        fin: Option<&[f32]>,
+    ) -> RunManifest {
+        use crate::store::schema::{Checkpoint, FinalState, RunStatus, SCHEMA_VERSION};
+        RunManifest {
+            schema_version: SCHEMA_VERSION,
+            id: id.to_string(),
+            created_unix: 0,
+            updated_unix: 0,
+            status: if fin.is_some() { RunStatus::Complete } else { RunStatus::Running },
+            strategy: "fedavg".into(),
+            config: Default::default(),
+            records: Vec::new(),
+            checkpoint: ck.map(|p| Checkpoint {
+                completed: 1,
+                sim_time: 1.0,
+                params: store.put_params(p).unwrap(),
+                policy_state: crate::util::json::Json::Null,
+            }),
+            final_state: fin.map(|p| FinalState {
+                final_acc: 0.5,
+                final_loss: 0.5,
+                sim_total_secs: 2.0,
+                params: store.put_params(p).unwrap(),
+            }),
+        }
+    }
+
+    #[test]
+    fn gc_sweeps_orphans_and_keeps_referenced() {
+        let dir = scratch("gc");
+        let store = RunStore::open(&dir).unwrap();
+        let keep = manifest_with_params(&store, "keep-s1", Some(&[1.0, 2.0]), Some(&[3.0, 4.0]));
+        store.save_manifest(&keep).unwrap();
+        let doomed =
+            manifest_with_params(&store, "doomed-s1", Some(&[5.0, 6.0]), Some(&[7.0, 8.0]));
+        store.save_manifest(&doomed).unwrap();
+        // hand-delete the second run: its two blobs are now orphans
+        std::fs::remove_dir_all(store.run_dir("doomed-s1")).unwrap();
+
+        // dry run reports but deletes nothing
+        let dry = store.gc_blobs(Duration::ZERO, true).unwrap();
+        assert_eq!((dry.live, dry.swept), (2, 2), "{dry:?}");
+        assert!(dry.swept_bytes > 0);
+        assert_eq!(std::fs::read_dir(dir.join("blobs")).unwrap().count(), 4);
+
+        let report = store.gc_blobs(Duration::ZERO, false).unwrap();
+        assert_eq!((report.live, report.swept), (2, 2), "{report:?}");
+        assert_eq!(std::fs::read_dir(dir.join("blobs")).unwrap().count(), 2);
+        // referenced blobs still fetch + verify
+        assert_eq!(
+            store.get_params(&keep.final_state.as_ref().unwrap().params).unwrap(),
+            vec![3.0, 4.0]
+        );
+        // idempotent
+        let again = store.gc_blobs(Duration::ZERO, false).unwrap();
+        assert_eq!((again.live, again.swept), (2, 0), "{again:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_grace_window_spares_young_orphans() {
+        let dir = scratch("gc-young");
+        let store = RunStore::open(&dir).unwrap();
+        store.put_blob(b"unreferenced-but-fresh", "text/plain").unwrap();
+        let report = store.gc_blobs(Duration::from_secs(3600), false).unwrap();
+        assert_eq!(report.swept, 0, "young orphans must survive the grace window");
+        assert_eq!(std::fs::read_dir(dir.join("blobs")).unwrap().count(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_aborts_on_unreadable_manifest() {
+        let dir = scratch("gc-unreadable");
+        let store = RunStore::open(&dir).unwrap();
+        store.put_blob(b"maybe-referenced", "text/plain").unwrap();
+        let bad = store.run_dir("torn-s1");
+        std::fs::create_dir_all(&bad).unwrap();
+        std::fs::write(bad.join("manifest.json"), b"{ torn").unwrap();
+        let err = store.gc_blobs(Duration::ZERO, false).unwrap_err();
+        assert!(err.to_string().contains("unreadable"), "{err}");
+        assert_eq!(
+            std::fs::read_dir(dir.join("blobs")).unwrap().count(),
+            1,
+            "gc must not sweep past an unreadable manifest"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn campaign_cell_claims_are_first_writer_wins() {
+        use crate::store::schema::{CampaignManifest, CellState, CAMPAIGN_SCHEMA_VERSION};
+        let dir = scratch("claim");
+        let store = RunStore::open(&dir).unwrap();
+        let m = CampaignManifest {
+            schema_version: CAMPAIGN_SCHEMA_VERSION,
+            name: "sweep".into(),
+            created_unix: 0,
+            updated_unix: 0,
+            spec: crate::util::json::Json::Null,
+            cells: vec![
+                CellState { label: "a".into(), run_id: None },
+                CellState { label: "b".into(), run_id: None },
+            ],
+        };
+        store.save_campaign(&m).unwrap();
+        // first claim lands and persists
+        assert_eq!(store.claim_campaign_cell("sweep", 0, None, "fedavg-s1").unwrap(), "fedavg-s1");
+        assert_eq!(
+            store.load_campaign("sweep").unwrap().cells[0].run_id.as_deref(),
+            Some("fedavg-s1")
+        );
+        // a competing claim (e.g. from a second campaign process) is told
+        // who won instead of overwriting
+        assert_eq!(
+            store.claim_campaign_cell("sweep", 0, None, "fedavg-s1-2").unwrap(),
+            "fedavg-s1"
+        );
+        // other cells are untouched and claimable
+        assert_eq!(store.claim_campaign_cell("sweep", 1, None, "fedel-s1").unwrap(), "fedel-s1");
+        // CAS on the old id reassigns (the hand-deleted-run path)...
+        assert_eq!(
+            store.claim_campaign_cell("sweep", 0, Some("fedavg-s1"), "fedavg-s1-9").unwrap(),
+            "fedavg-s1-9"
+        );
+        // ...but a stale expectation loses to the standing winner
+        assert_eq!(
+            store.claim_campaign_cell("sweep", 0, Some("fedavg-s1"), "fedavg-s1-7").unwrap(),
+            "fedavg-s1-9"
+        );
+        let back = store.load_campaign("sweep").unwrap();
+        assert_eq!(back.cells[0].run_id.as_deref(), Some("fedavg-s1-9"));
+        assert_eq!(back.cells[1].run_id.as_deref(), Some("fedel-s1"));
+        assert!(
+            store.claim_campaign_cell("sweep", 2, None, "x").is_err(),
+            "bad index must error"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

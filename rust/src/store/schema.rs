@@ -231,6 +231,97 @@ impl RunManifest {
     }
 }
 
+// -- campaigns ---------------------------------------------------------------
+
+/// Bump on any incompatible campaign-manifest change (independent of the
+/// run-manifest version: the two files evolve separately).
+pub const CAMPAIGN_SCHEMA_VERSION: usize = 1;
+
+/// One grid cell's persisted assignment: the deterministic label plus the
+/// run id it was allocated (None until a worker first touches the cell).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CellState {
+    pub label: String,
+    pub run_id: Option<String>,
+}
+
+impl CellState {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            (
+                "run_id",
+                self.run_id.as_ref().map(|s| Json::Str(s.clone())).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<CellState> {
+        Ok(CellState {
+            label: j.s("label")?.to_string(),
+            run_id: match j.get("run_id") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("cell run_id not a string"))?
+                        .to_string(),
+                ),
+            },
+        })
+    }
+}
+
+/// Everything the store knows about one campaign:
+/// `campaigns/<name>.json`. The `spec` snapshot is the grid definition
+/// ([`crate::sim::campaign::CampaignCfg`] serialization) so a bare
+/// `campaign run --name <x>` can resume without respecifying the grid;
+/// `cells` is the persisted cell→run assignment that makes resumption
+/// find each cell's runs again.
+#[derive(Clone, Debug)]
+pub struct CampaignManifest {
+    pub schema_version: usize,
+    pub name: String,
+    pub created_unix: u64,
+    pub updated_unix: u64,
+    /// Grid spec snapshot (opaque to the store, owned by sim::campaign).
+    pub spec: Json,
+    pub cells: Vec<CellState>,
+}
+
+impl CampaignManifest {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema_version", Json::Num(self.schema_version as f64)),
+            ("name", Json::Str(self.name.clone())),
+            ("created_unix", Json::Num(self.created_unix as f64)),
+            ("updated_unix", Json::Num(self.updated_unix as f64)),
+            ("spec", self.spec.clone()),
+            ("cells", Json::Arr(self.cells.iter().map(CellState::to_json).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<CampaignManifest> {
+        let version = j.u("schema_version")?;
+        anyhow::ensure!(
+            version == CAMPAIGN_SCHEMA_VERSION,
+            "campaign manifest schema v{version} unsupported \
+             (this build reads v{CAMPAIGN_SCHEMA_VERSION})"
+        );
+        Ok(CampaignManifest {
+            schema_version: version,
+            name: j.s("name")?.to_string(),
+            created_unix: j.f("created_unix")? as u64,
+            updated_unix: j.f("updated_unix")? as u64,
+            spec: j.req("spec")?.clone(),
+            cells: j
+                .arr("cells")?
+                .iter()
+                .map(CellState::from_json)
+                .collect::<anyhow::Result<_>>()?,
+        })
+    }
+}
+
 // -- round records ----------------------------------------------------------
 
 /// Canonical [`RoundRecord`] serialization (manifests, JSONL logs, result
@@ -463,6 +554,33 @@ mod tests {
         m.final_state = None;
         m.records.clear();
         assert_eq!(m.final_acc(), None);
+    }
+
+    #[test]
+    fn campaign_manifest_round_trips() {
+        let m = CampaignManifest {
+            schema_version: CAMPAIGN_SCHEMA_VERSION,
+            name: "sweep1".into(),
+            created_unix: 1_700_000_000,
+            updated_unix: 1_700_000_001,
+            spec: Json::obj(vec![("strategies", Json::from_strs(&["fedavg", "fedel"]))]),
+            cells: vec![
+                CellState { label: "fedavg-s1".into(), run_id: Some("fedavg-s1".into()) },
+                CellState { label: "fedel-s1".into(), run_id: None },
+            ],
+        };
+        let text = m.to_json().to_string_pretty();
+        let back = CampaignManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.name, "sweep1");
+        assert_eq!(back.cells, m.cells);
+        assert_eq!(back.spec, m.spec);
+
+        let mut future = m.clone();
+        future.schema_version = CAMPAIGN_SCHEMA_VERSION + 1;
+        let err =
+            CampaignManifest::from_json(&Json::parse(&future.to_json().to_string_pretty()).unwrap())
+                .unwrap_err();
+        assert!(err.to_string().contains("schema"), "{err}");
     }
 
     #[test]

@@ -51,9 +51,11 @@ impl FedEl {
         let block_round: Vec<BlockCosts> = ctx
             .timings
             .iter()
-            .map(|tm| BlockCosts {
-                train: tm.block_train.iter().map(|t| t * steps).collect(),
-                fwd: tm.block_fwd.iter().map(|t| t * steps).collect(),
+            .map(|tm| {
+                BlockCosts::new(
+                    tm.block_train.iter().map(|t| t * steps).collect(),
+                    tm.block_fwd.iter().map(|t| t * steps).collect(),
+                )
             })
             .collect();
         FedEl {

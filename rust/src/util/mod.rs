@@ -9,6 +9,15 @@ pub mod rng;
 pub mod sha256;
 pub mod stats;
 
+/// Seconds since the unix epoch (0 if the clock is before it) — the
+/// timestamp every store manifest carries.
+pub fn unix_now() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
 /// Format a duration in simulated hours the way the paper's tables do.
 pub fn fmt_hours(secs: f64) -> String {
     format!("{:.1}h", secs / 3600.0)

@@ -72,13 +72,33 @@ impl Window {
 /// training cost land just above `T_th`, which is what the rule is for.
 #[derive(Clone, Debug)]
 pub struct BlockCosts {
-    pub train: Vec<f64>,
-    pub fwd: Vec<f64>,
+    train: Vec<f64>,
+    /// `fwd_pre[k]` = forward time through all blocks `< k` (len nb + 1).
+    /// Precomputed once at construction: the window walkers query a
+    /// forward prefix for every candidate front, and recomputing it by
+    /// summation made `initial_window`/`front_advance` O(nb²) per client
+    /// per round (`perf_hotpaths` benches the difference).
+    fwd_pre: Vec<f64>,
 }
 
 impl BlockCosts {
+    /// `train[b]` and `fwd[b]` per block; the forward prefix sums are
+    /// accumulated here, left to right, exactly as the old per-query
+    /// summation did — so window decisions are bitwise-unchanged.
+    pub fn new(train: Vec<f64>, fwd: Vec<f64>) -> BlockCosts {
+        assert_eq!(train.len(), fwd.len(), "train/fwd cost length mismatch");
+        let mut fwd_pre = Vec::with_capacity(fwd.len() + 1);
+        let mut acc = 0.0f64;
+        fwd_pre.push(0.0);
+        for x in fwd {
+            acc += x;
+            fwd_pre.push(acc);
+        }
+        BlockCosts { train, fwd_pre }
+    }
+
     pub fn uniform(nb: usize) -> BlockCosts {
-        BlockCosts { train: vec![1.0; nb], fwd: vec![0.0; nb] }
+        BlockCosts::new(vec![1.0; nb], vec![0.0; nb])
     }
 
     pub fn len(&self) -> usize {
@@ -89,9 +109,14 @@ impl BlockCosts {
         self.train.is_empty()
     }
 
-    /// Forward time through all blocks `< front`.
+    pub fn train(&self) -> &[f64] {
+        &self.train
+    }
+
+    /// Forward time through all blocks `< front` — O(1) table lookup.
+    #[inline]
     fn fwd_prefix(&self, front: usize) -> f64 {
-        self.fwd[..front].iter().sum()
+        self.fwd_pre[front]
     }
 }
 
@@ -312,7 +337,7 @@ mod tests {
 
     #[test]
     fn heterogeneous_block_times_respected() {
-        let bt = BlockCosts { train: vec![0.5, 0.5, 4.0, 1.0, 1.0], fwd: vec![0.0; 5] };
+        let bt = BlockCosts::new(vec![0.5, 0.5, 4.0, 1.0, 1.0], vec![0.0; 5]);
         let w = initial_window(&bt, 2.0);
         assert_eq!(w.front, 3); // 0.5+0.5 < 2.0 <= 0.5+0.5+4.0
         let mut st = WindowState::new(&bt, 2.0, WindowPolicy::FedEl);

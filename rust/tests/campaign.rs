@@ -1,0 +1,199 @@
+//! Campaign crash safety: a grid killed mid-flight — at the campaign
+//! level (workers stop claiming cells) and at the cell level
+//! (`halt_after` kills rounds between checkpoints) — resumes to
+//! completion with previously-finished cells skipped, and every cell's
+//! stored records and parameters bitwise-identical to an uninterrupted
+//! campaign's. Extends `tests/resume.rs`' invariant from one run to whole
+//! grids.
+
+use std::path::PathBuf;
+
+use fedel::config::ExperimentCfg;
+use fedel::sim::campaign::{report, run_campaign, CampaignCfg, CellRun};
+use fedel::store::schema::{RunManifest, RunStatus};
+use fedel::store::RunStore;
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("fedel-campaign-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// 2 strategies x 2 seeds on the mock engine, one worker so the
+/// campaign-level kill lands on a deterministic cell boundary.
+fn grid(name: &str) -> CampaignCfg {
+    let base = ExperimentCfg {
+        model: "mock:6x50".into(),
+        fleet: fedel::config::FleetSpec::Scales(vec![1.0, 2.0, 4.0]),
+        rounds: 6,
+        local_steps: 2,
+        lr: 0.3,
+        eval_every: 2,
+        eval_batches: 2,
+        slowest_round_secs: 3600.0,
+        exec_threads: 1,
+        ..Default::default()
+    };
+    let mut cfg = CampaignCfg::new(name, base);
+    cfg.strategies = vec!["fedavg".into(), "fedel".into()];
+    cfg.seeds = vec![1, 2];
+    cfg.checkpoint_every = 2;
+    cfg.workers = 1;
+    cfg
+}
+
+/// The stored run behind each cell label, via the campaign manifest.
+fn cell_runs(store: &RunStore, name: &str) -> Vec<(String, RunManifest)> {
+    let m = store.load_campaign(name).unwrap();
+    m.cells
+        .iter()
+        .map(|c| {
+            let id = c.run_id.as_ref().unwrap_or_else(|| panic!("cell {} unassigned", c.label));
+            (c.label.clone(), store.load_manifest(id).unwrap())
+        })
+        .collect()
+}
+
+fn assert_stores_identical(a: &RunStore, b: &RunStore, name: &str) {
+    let runs_a = cell_runs(a, name);
+    let runs_b = cell_runs(b, name);
+    assert_eq!(runs_a.len(), runs_b.len());
+    for ((label_a, ma), (label_b, mb)) in runs_a.iter().zip(&runs_b) {
+        assert_eq!(label_a, label_b);
+        assert_eq!(ma.status, RunStatus::Complete, "{label_a}");
+        assert_eq!(mb.status, RunStatus::Complete, "{label_a}");
+        assert_eq!(ma.records.len(), mb.records.len(), "{label_a}: record count");
+        for (ra, rb) in ma.records.iter().zip(&mb.records) {
+            assert_eq!(ra.round, rb.round, "{label_a}");
+            assert_eq!(
+                ra.sim_time.to_bits(),
+                rb.sim_time.to_bits(),
+                "{label_a}: round {} clock",
+                ra.round
+            );
+            assert_eq!(
+                ra.mean_train_loss.to_bits(),
+                rb.mean_train_loss.to_bits(),
+                "{label_a}: round {} loss",
+                ra.round
+            );
+            assert_eq!(
+                ra.eval_acc.map(f64::to_bits),
+                rb.eval_acc.map(f64::to_bits),
+                "{label_a}: round {} eval",
+                ra.round
+            );
+        }
+        let fa = ma.final_state.as_ref().unwrap();
+        let fb = mb.final_state.as_ref().unwrap();
+        assert_eq!(fa.final_acc.to_bits(), fb.final_acc.to_bits(), "{label_a}");
+        assert_eq!(
+            a.get_params(&fa.params).unwrap(),
+            b.get_params(&fb.params).unwrap(),
+            "{label_a}: final params diverged"
+        );
+    }
+}
+
+#[test]
+fn campaign_runs_grid_reports_and_is_idempotent() {
+    let dir = scratch("idempotent");
+    let store = RunStore::open(&dir).unwrap();
+    let cfg = grid("sweep");
+
+    let outcome = run_campaign(&store, &cfg).unwrap();
+    assert!(outcome.complete(), "{outcome:?}");
+    assert!(outcome.cells.iter().all(|c| c.status == CellRun::Completed));
+    assert_eq!(outcome.cells.len(), 4);
+
+    // every cell's run is stored and complete
+    for (label, m) in cell_runs(&store, "sweep") {
+        assert_eq!(m.status, RunStatus::Complete, "{label}");
+        assert_eq!(m.records.len(), 6, "{label}");
+    }
+
+    // the whole-grid report defaults its baseline to the fedavg cell
+    let man = store.load_campaign("sweep").unwrap();
+    let rep = report(&store, &man, None, None).unwrap();
+    assert_eq!(rep.rows.len(), 4);
+    assert_eq!(rep.baseline, man.cells[0].run_id.clone().unwrap());
+    // an explicit strategy baseline resolves too
+    let rep = report(&store, &man, None, Some("fedel")).unwrap();
+    assert!(rep.baseline.starts_with("fedel"));
+
+    // running the finished campaign again touches nothing
+    let again = run_campaign(&store, &cfg).unwrap();
+    assert!(again.complete());
+    assert!(again.cells.iter().all(|c| c.status == CellRun::Skipped), "{again:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The acceptance drill: kill the campaign after two cells, then kill the
+/// remaining cells mid-round via `halt_after`, then resume everything —
+/// completed cells skipped, killed cells continued from their
+/// checkpoints, results bitwise-identical to a never-interrupted campaign.
+#[test]
+fn killed_campaign_resumes_skipping_completed_cells_bitwise_identically() {
+    let reference_dir = scratch("reference");
+    let reference = RunStore::open(&reference_dir).unwrap();
+    let uninterrupted = run_campaign(&reference, &grid("sweep")).unwrap();
+    assert!(uninterrupted.complete());
+
+    let dir = scratch("killed");
+    let store = RunStore::open(&dir).unwrap();
+
+    // phase 1: the campaign process dies after two cells finished
+    let mut phase1 = grid("sweep");
+    phase1.halt_after_cells = Some(2);
+    let out = run_campaign(&store, &phase1).unwrap();
+    assert!(out.halted);
+    // (skipped, completed, failed, pending)
+    assert_eq!(out.counts(), (0, 2, 0, 2), "{out:?}");
+
+    // phase 2: the remaining cells get killed *inside* a round span —
+    // after round 3, between the round-2 and round-4 checkpoints
+    let mut phase2 = grid("sweep");
+    phase2.halt_after = Some(3);
+    let out = run_campaign(&store, &phase2).unwrap();
+    assert!(!out.complete());
+    assert_eq!(out.counts(), (2, 0, 2, 0), "{out:?}");
+    for c in out.failures() {
+        match &c.status {
+            CellRun::Failed(msg) => assert!(msg.contains("halted"), "{msg}"),
+            other => panic!("{other:?}"),
+        }
+    }
+    // what the kill left on disk: checkpoints at round 2, 2 records
+    let man = store.load_campaign("sweep").unwrap();
+    for cell in &man.cells[2..] {
+        let run = store.load_manifest(cell.run_id.as_ref().unwrap()).unwrap();
+        assert_eq!(run.status, RunStatus::Running, "{}", cell.label);
+        assert_eq!(run.checkpoint.as_ref().unwrap().completed, 2, "{}", cell.label);
+        assert_eq!(run.records.len(), 2, "{}", cell.label);
+    }
+
+    // phase 3: plain resume — completed cells skipped, killed cells
+    // continued from their checkpoints to completion
+    let out = run_campaign(&store, &grid("sweep")).unwrap();
+    assert!(out.complete(), "{out:?}");
+    assert_eq!(out.counts(), (2, 2, 0, 0), "{out:?}");
+
+    assert_stores_identical(&reference, &store, "sweep");
+    let _ = std::fs::remove_dir_all(&reference_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn same_name_different_grid_is_rejected() {
+    let dir = scratch("mismatch");
+    let store = RunStore::open(&dir).unwrap();
+    let mut small = grid("sweep");
+    small.halt_after_cells = Some(1);
+    run_campaign(&store, &small).unwrap();
+
+    let mut other = grid("sweep");
+    other.seeds = vec![7, 8];
+    let err = run_campaign(&store, &other).unwrap_err();
+    assert!(err.to_string().contains("different grid"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

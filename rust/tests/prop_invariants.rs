@@ -165,7 +165,7 @@ fn prop_window_always_valid() {
         },
         |(costs, fwd, t_th, policy, sels)| {
             let nb = costs.len();
-            let bc = BlockCosts { train: costs.clone(), fwd: fwd.clone() };
+            let bc = BlockCosts::new(costs.clone(), fwd.clone());
             let mut st = WindowState::new(&bc, *t_th, *policy);
             for &bits in sels {
                 if st.win.end >= st.win.front || st.win.front > nb {
@@ -194,7 +194,7 @@ fn prop_window_front_covers_model_over_time() {
         },
         |(costs, t_th)| {
             let nb = costs.len();
-            let bc = BlockCosts { train: costs.clone(), fwd: vec![0.0; nb] };
+            let bc = BlockCosts::new(costs.clone(), vec![0.0; nb]);
             let mut st = WindowState::new(&bc, *t_th, WindowPolicy::FedEl);
             let mut seen = vec![false; nb];
             for _ in 0..10 * nb {
@@ -359,7 +359,7 @@ fn prop_initial_window_cost_just_exceeds_threshold() {
             (costs, r.f64() * total * 1.2)
         },
         |(costs, t_th)| {
-            let bc = BlockCosts { train: costs.clone(), fwd: vec![0.0; costs.len()] };
+            let bc = BlockCosts::new(costs.clone(), vec![0.0; costs.len()]);
             let w = initial_window(&bc, *t_th);
             let sum: f64 = costs[..w.front].iter().sum();
             // either the window covers the whole model (t_th too big) or

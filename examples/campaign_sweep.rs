@@ -1,21 +1,26 @@
-//! Campaign demo: a strategy × seed grid as one crash-safe unit of work.
+//! Campaign demo: a typed-parameter-space sweep as one crash-safe unit.
 //!
 //! Reproducing FedEL's tables means sweeping grids of experiments; this
-//! example runs a 2-strategy × 2-seed grid on the mock engine through the
-//! campaign runner and demonstrates the full fault-tolerance story:
+//! example sweeps strategy × seed × FedEL's importance-harmonization
+//! weight (`strategy.fedel.harmonize_weight`, a registry-declared
+//! tunable — no per-knob code anywhere) on the mock engine and
+//! demonstrates the full fault-tolerance story:
 //!
 //! 1. the campaign is **killed mid-flight** — each in-flight cell aborts
 //!    between checkpoints (`halt_after`), exactly like a crashed process,
 //! 2. a second `run_campaign` call with the same spec resumes it:
 //!    finished cells are skipped, killed cells continue from their
 //!    checkpoints through the `ResumeState` machinery,
-//! 3. the whole grid is reported N-way on time-to-accuracy, as a table
-//!    and as the `--json` schema dashboards consume.
+//! 3. the whole grid is reported N-way on time-to-accuracy, and then
+//!    collapsed over the seed axis into the paper's Table-3 shape
+//!    (mean ± std per remaining cell) — as tables and as the `--json`
+//!    schema dashboards consume.
 //!
 //!   cargo run --release --example campaign_sweep [-- rounds]
 
 use fedel::config::ExperimentCfg;
-use fedel::sim::campaign::{report, run_campaign, status_table, CampaignCfg};
+use fedel::report::Target;
+use fedel::sim::campaign::{grouped_report, report, run_campaign, status_table, CampaignCfg};
 use fedel::store::RunStore;
 
 fn main() -> anyhow::Result<()> {
@@ -38,8 +43,10 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let mut cfg = CampaignCfg::new("sweep", base);
-    cfg.strategies = vec!["fedavg".into(), "fedel".into()];
-    cfg.seeds = vec![1, 2];
+    cfg.axis("strategy=fedavg,fedel")?;
+    cfg.axis("seed=1,2")?;
+    // A strategy-declared tunable, swept like any other key.
+    cfg.axis("strategy.fedel.harmonize_weight=0.3,0.6")?;
     cfg.checkpoint_every = 2;
     cfg.verbose = true;
 
@@ -71,8 +78,12 @@ fn main() -> anyhow::Result<()> {
 
     // -- 3. whole-grid time-to-accuracy report ------------------------------
     let manifest = store.load_campaign("sweep")?;
-    let rep = report(&store, &manifest, None, None)?;
+    let rep = report(&store, &manifest, Target::Default, None)?;
     rep.table().print();
-    println!("--json form:\n{}", rep.to_json().to_string_pretty());
+
+    // -- 4. Table-3 shape: collapse the seed axis ---------------------------
+    let agg = grouped_report(&store, &manifest, "seed", Target::Default, None)?;
+    agg.table().print();
+    println!("--json form:\n{}", agg.to_json().to_string_pretty());
     Ok(())
 }

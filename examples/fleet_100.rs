@@ -20,7 +20,7 @@
 use fedel::config::{ExperimentCfg, FleetSpec};
 use fedel::fl::observer::RoundObserver;
 use fedel::fl::server::{ClientOutcome, RoundRecord};
-use fedel::report::{render_table1, runs_compare, table1_rows};
+use fedel::report::{render_table1, runs_compare, table1_rows, Target};
 use fedel::sim::experiment::{resume_run, Experiment};
 use fedel::store::checkpoint::CheckpointObserver;
 use fedel::store::RunStore;
@@ -159,7 +159,7 @@ fn main() -> anyhow::Result<()> {
     let (table, speedup) = runs_compare(
         &store.load_manifest(&fedel_id)?,
         &store.load_manifest(&fedavg_id)?,
-        None,
+        Target::Default,
     );
     table.print();
     if let Some(s) = speedup {

@@ -1,6 +1,13 @@
 //! Experiment configuration: one struct drives every table, figure,
 //! example, and the CLI. JSON round-trips for provenance (every result
 //! dump embeds the config that produced it).
+//!
+//! The [`params`] submodule is the typed key registry over this struct
+//! (`train.lr`, `data.alpha`, `strategy.fedel.harmonize_weight`, ...):
+//! anything registered there is settable via `--set key=value` and
+//! sweepable via `campaign run --sweep key=v1,v2`.
+
+pub mod params;
 
 use std::path::PathBuf;
 
@@ -79,6 +86,12 @@ pub struct ExperimentCfg {
     /// 1 = sequential, n = dedicated n-thread pool. Purely a wall-clock
     /// knob — results are bitwise-identical at any setting.
     pub exec_threads: usize,
+    /// Strategy-declared tunables, keyed by their full registry key
+    /// (`strategy.<strategy>.<param>` -> value), kept sorted for stable
+    /// serialization. Populated via `--set`/`--sweep`; anything unset
+    /// falls back to the declaration's default
+    /// ([`crate::strategies::registry`]).
+    pub strategy_params: Vec<(String, f64)>,
     pub record_selections: bool,
     pub verbose: bool,
     /// Abort after this many rounds (simulated kill, for fault-tolerance
@@ -106,6 +119,7 @@ impl Default for ExperimentCfg {
             eval_batches: 16,
             comm_secs: 30.0,
             exec_threads: 0,
+            strategy_params: Vec::new(),
             record_selections: false,
             verbose: false,
             halt_after: None,
@@ -114,10 +128,12 @@ impl Default for ExperimentCfg {
 }
 
 impl ExperimentCfg {
-    /// Merge CLI args over defaults.
+    /// Merge CLI args over defaults. Repeated `--set key=value` bindings
+    /// apply last (the CLI layer of the overlay precedence base < axis <
+    /// `--set`), so they win over the per-field flags.
     pub fn from_args(args: &Args) -> anyhow::Result<ExperimentCfg> {
         let d = ExperimentCfg::default();
-        Ok(ExperimentCfg {
+        let mut cfg = ExperimentCfg {
             model: args.str_or("model", &d.model),
             artifacts_dir: PathBuf::from(args.str_or("artifacts", "artifacts")),
             strategy: args.str_or("strategy", &d.strategy),
@@ -134,28 +150,17 @@ impl ExperimentCfg {
             eval_batches: args.usize_or("eval-batches", d.eval_batches),
             comm_secs: args.f64_or("comm-secs", d.comm_secs),
             exec_threads: args.usize_or("threads", d.exec_threads),
+            strategy_params: Vec::new(),
             record_selections: args.flag("record-selections"),
             verbose: args.flag("verbose"),
             halt_after: args.get("halt-after").and_then(|s| s.parse().ok()),
-        })
-    }
-
-    /// The grid axes a campaign sweeps ([`crate::sim::campaign`]): this
-    /// config with one cell's strategy / seed / fleet / T_th applied.
-    pub fn with_axes(
-        &self,
-        strategy: &str,
-        seed: u64,
-        fleet: &FleetSpec,
-        t_th_factor: f64,
-    ) -> ExperimentCfg {
-        ExperimentCfg {
-            strategy: strategy.to_string(),
-            seed,
-            fleet: fleet.clone(),
-            t_th_factor,
-            ..self.clone()
+        };
+        let sets = args.all("set");
+        if !sets.is_empty() {
+            let space = params::ParamSpace::shared();
+            params::SpecOverlay::parse(space, &sets)?.apply(space, &mut cfg)?;
         }
+        Ok(cfg)
     }
 
     /// Config snapshot: every field an experiment rebuild needs
@@ -163,7 +168,7 @@ impl ExperimentCfg {
     /// record_selections) and the halt_after kill-switch stay out — they
     /// describe a process invocation, not the experiment.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut kv = vec![
             ("model", Json::Str(self.model.clone())),
             ("artifacts_dir", Json::Str(self.artifacts_dir.display().to_string())),
             ("strategy", Json::Str(self.strategy.clone())),
@@ -182,7 +187,21 @@ impl ExperimentCfg {
             ("eval_batches", Json::Num(self.eval_batches as f64)),
             ("comm_secs", Json::Num(self.comm_secs)),
             ("threads", Json::Num(self.exec_threads as f64)),
-        ])
+        ];
+        // Omitted when empty so pre-registry snapshots compare and
+        // round-trip unchanged.
+        if !self.strategy_params.is_empty() {
+            kv.push((
+                "strategy_params",
+                Json::Obj(
+                    self.strategy_params
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(kv)
     }
 
     /// Rebuild a config from a [`ExperimentCfg::to_json`] snapshot.
@@ -218,6 +237,21 @@ impl ExperimentCfg {
             eval_batches: u("eval_batches", d.eval_batches),
             comm_secs: f("comm_secs", d.comm_secs),
             exec_threads: u("threads", d.exec_threads),
+            strategy_params: match j.get("strategy_params") {
+                Some(Json::Obj(kv)) => {
+                    let mut bag = kv
+                        .iter()
+                        .map(|(k, v)| {
+                            v.as_f64().map(|x| (k.clone(), x)).ok_or_else(|| {
+                                anyhow::anyhow!("config snapshot: strategy param {k:?} not a number")
+                            })
+                        })
+                        .collect::<anyhow::Result<Vec<_>>>()?;
+                    bag.sort_by(|a, b| a.0.cmp(&b.0));
+                    bag
+                }
+                _ => Vec::new(),
+            },
             record_selections: false,
             verbose: false,
             halt_after: None,
@@ -308,6 +342,42 @@ mod tests {
         let text = cfg.to_json().to_string_pretty();
         let back = ExperimentCfg::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.seed, (1u64 << 53) + 1);
+    }
+
+    #[test]
+    fn strategy_params_round_trip_and_set_overrides_flags() {
+        let cfg = ExperimentCfg {
+            strategy_params: vec![
+                ("strategy.fedel.harmonize_weight".to_string(), 0.25),
+                ("strategy.pyramidfl.frac".to_string(), 0.8),
+            ],
+            ..Default::default()
+        };
+        let back =
+            ExperimentCfg::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back.strategy_params, cfg.strategy_params);
+        // empty bag stays out of the snapshot entirely
+        let j = ExperimentCfg::default().to_json();
+        assert!(j.get("strategy_params").is_none());
+
+        // --set is the last layer: it wins over the per-field flag
+        let args = Args::parse(
+            ["--lr", "0.5", "--set", "train.lr=0.125", "--set", "data.alpha=0.3"]
+                .iter()
+                .map(|s| s.to_string()),
+            false,
+        );
+        let cfg = ExperimentCfg::from_args(&args).unwrap();
+        assert_eq!(cfg.lr, 0.125);
+        assert_eq!(cfg.alpha, 0.3);
+        // unknown --set keys error with a suggestion instead of a bare bail
+        let args = Args::parse(
+            ["--set", "data.alhpa=0.3"].iter().map(|s| s.to_string()),
+            false,
+        );
+        let err = ExperimentCfg::from_args(&args).unwrap_err().to_string();
+        assert!(err.contains("did you mean"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,572 @@
+//! The typed parameter space over [`ExperimentCfg`]: every sweepable /
+//! settable knob is a registered key with a type, bounds, and help text.
+//!
+//! * [`ParamSpace`] is the key registry: fixed keys for the config's own
+//!   fields (`train.lr`, `data.alpha`, `seed`, `fleet`, ...) plus one
+//!   dynamic key per tunable each strategy declares in
+//!   [`crate::strategies::registry`] (`strategy.fedel.harmonize_weight`).
+//!   Unknown keys fail with the full roster and a nearest-match hint.
+//! * [`ParamValue`] is a parsed, typed value with a **canonical string
+//!   rendering** — f64 renders via the shortest-round-trip `Display`, so
+//!   `render -> parse` is exact and cell labels / manifests built from
+//!   rendered values are stable identities.
+//! * [`SpecOverlay`] is an ordered list of `key=value` bindings. Overlays
+//!   layer with defined precedence — base config < campaign axis < CLI
+//!   `--set` — by applying later layers after earlier ones; *within* one
+//!   layer a key may be bound at most once, which is what makes layer
+//!   application order-independent (`tests/params.rs` proves both).
+//! * [`SweepAxis`] is one campaign grid dimension: a key plus the list of
+//!   values to sweep (`--sweep data.alpha=0.1,0.5`).
+
+use std::fmt;
+
+use crate::config::{ExperimentCfg, FleetSpec};
+use crate::strategies::registry::{self, StrategyRegistry};
+use crate::util::json::Json;
+
+/// The type a registered key parses to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamType {
+    Str,
+    F64,
+    U64,
+    Usize,
+    Fleet,
+}
+
+impl ParamType {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ParamType::Str => "str",
+            ParamType::F64 => "f64",
+            ParamType::U64 => "u64",
+            ParamType::Usize => "usize",
+            ParamType::Fleet => "fleet",
+        }
+    }
+}
+
+/// A parsed, typed value. `render()` is canonical: rendering and
+/// re-parsing under the same key yields an identical value (f64 rides the
+/// shortest round-trip `Display`, u64 stays decimal, fleets use their
+/// label form).
+#[derive(Clone, Debug, PartialEq)]
+pub enum ParamValue {
+    Str(String),
+    F64(f64),
+    U64(u64),
+    Usize(usize),
+    Fleet(FleetSpec),
+}
+
+impl ParamValue {
+    pub fn render(&self) -> String {
+        match self {
+            ParamValue::Str(s) => s.clone(),
+            ParamValue::F64(x) => format!("{x}"),
+            ParamValue::U64(x) => format!("{x}"),
+            ParamValue::Usize(x) => format!("{x}"),
+            ParamValue::Fleet(f) => f.label(),
+        }
+    }
+}
+
+impl fmt::Display for ParamValue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render())
+    }
+}
+
+/// Which piece of state a key reads/writes.
+#[derive(Clone, Debug)]
+enum Slot {
+    Model,
+    Fleet,
+    Seed,
+    Strategy,
+    Rounds,
+    LocalSteps,
+    Lr,
+    Alpha,
+    EvalEvery,
+    EvalBatches,
+    TThFactor,
+    CommSecs,
+    SlowestRoundSecs,
+    /// A strategy-declared tunable living in the config's parameter bag
+    /// under its full key.
+    StrategyParam { default: f64, min: f64, max: f64 },
+}
+
+/// One registered key.
+#[derive(Clone, Debug)]
+pub struct KeyDef {
+    pub key: String,
+    pub ty: ParamType,
+    pub help: String,
+    slot: Slot,
+}
+
+impl KeyDef {
+    fn fixed(key: &str, ty: ParamType, help: &str, slot: Slot) -> KeyDef {
+        KeyDef { key: key.to_string(), ty, help: help.to_string(), slot }
+    }
+
+    /// Parse + validate a raw string for this key.
+    pub fn parse(&self, raw: &str) -> anyhow::Result<ParamValue> {
+        let bad = |what: &str| anyhow::anyhow!("{}: {what} (got {raw:?})", self.key);
+        let v = match self.ty {
+            ParamType::Str => ParamValue::Str(raw.to_string()),
+            ParamType::Fleet => ParamValue::Fleet(FleetSpec::parse(raw)?),
+            ParamType::F64 => {
+                ParamValue::F64(raw.parse().map_err(|_| bad("expected a number"))?)
+            }
+            ParamType::U64 => {
+                ParamValue::U64(raw.parse().map_err(|_| bad("expected an unsigned integer"))?)
+            }
+            ParamType::Usize => {
+                ParamValue::Usize(raw.parse().map_err(|_| bad("expected an unsigned integer"))?)
+            }
+        };
+        self.validate(&v)?;
+        Ok(v)
+    }
+
+    /// Range/semantic validation (also applied when values arrive already
+    /// typed, e.g. from spec JSON).
+    pub fn validate(&self, v: &ParamValue) -> anyhow::Result<()> {
+        let err = |what: String| Err(anyhow::anyhow!("{}: {what}", self.key));
+        match (&self.slot, v) {
+            (Slot::Strategy, ParamValue::Str(s)) => {
+                registry::builtin().require(s)?;
+            }
+            (Slot::Rounds, ParamValue::Usize(n))
+            | (Slot::LocalSteps, ParamValue::Usize(n))
+            | (Slot::EvalEvery, ParamValue::Usize(n))
+            | (Slot::EvalBatches, ParamValue::Usize(n)) => {
+                if *n == 0 {
+                    return err("must be >= 1".into());
+                }
+            }
+            (Slot::Lr, ParamValue::F64(x))
+            | (Slot::Alpha, ParamValue::F64(x))
+            | (Slot::TThFactor, ParamValue::F64(x)) => {
+                if !x.is_finite() || *x <= 0.0 {
+                    return err(format!("must be > 0 (got {x})"));
+                }
+            }
+            (Slot::CommSecs, ParamValue::F64(x)) | (Slot::SlowestRoundSecs, ParamValue::F64(x)) => {
+                if !x.is_finite() || *x < 0.0 {
+                    return err(format!("must be >= 0 (got {x})"));
+                }
+            }
+            (Slot::StrategyParam { min, max, .. }, ParamValue::F64(x)) => {
+                if x.is_nan() || *x < *min || *x > *max {
+                    return err(format!("{x} out of bounds [{min}, {max}]"));
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Read this key's current value off a config.
+    pub fn get(&self, cfg: &ExperimentCfg) -> ParamValue {
+        match &self.slot {
+            Slot::Model => ParamValue::Str(cfg.model.clone()),
+            Slot::Fleet => ParamValue::Fleet(cfg.fleet.clone()),
+            Slot::Seed => ParamValue::U64(cfg.seed),
+            Slot::Strategy => ParamValue::Str(cfg.strategy.clone()),
+            Slot::Rounds => ParamValue::Usize(cfg.rounds),
+            Slot::LocalSteps => ParamValue::Usize(cfg.local_steps),
+            Slot::Lr => ParamValue::F64(cfg.lr),
+            Slot::Alpha => ParamValue::F64(cfg.alpha),
+            Slot::EvalEvery => ParamValue::Usize(cfg.eval_every),
+            Slot::EvalBatches => ParamValue::Usize(cfg.eval_batches),
+            Slot::TThFactor => ParamValue::F64(cfg.t_th_factor),
+            Slot::CommSecs => ParamValue::F64(cfg.comm_secs),
+            Slot::SlowestRoundSecs => ParamValue::F64(cfg.slowest_round_secs),
+            Slot::StrategyParam { default, .. } => ParamValue::F64(
+                cfg.strategy_params
+                    .iter()
+                    .find(|(k, _)| *k == self.key)
+                    .map(|(_, v)| *v)
+                    .unwrap_or(*default),
+            ),
+        }
+    }
+
+    /// Write a (validated) value onto a config. The value must carry this
+    /// key's type — overlays built through [`KeyDef::parse`] always do.
+    pub fn apply(&self, cfg: &mut ExperimentCfg, v: &ParamValue) -> anyhow::Result<()> {
+        self.validate(v)?;
+        let type_err = || {
+            anyhow::anyhow!(
+                "{}: expected a {} value, got {v:?}",
+                self.key,
+                self.ty.as_str()
+            )
+        };
+        match (&self.slot, v) {
+            (Slot::Model, ParamValue::Str(s)) => cfg.model = s.clone(),
+            (Slot::Fleet, ParamValue::Fleet(f)) => cfg.fleet = f.clone(),
+            (Slot::Seed, ParamValue::U64(x)) => cfg.seed = *x,
+            (Slot::Strategy, ParamValue::Str(s)) => cfg.strategy = s.clone(),
+            (Slot::Rounds, ParamValue::Usize(n)) => cfg.rounds = *n,
+            (Slot::LocalSteps, ParamValue::Usize(n)) => cfg.local_steps = *n,
+            (Slot::Lr, ParamValue::F64(x)) => cfg.lr = *x,
+            (Slot::Alpha, ParamValue::F64(x)) => cfg.alpha = *x,
+            (Slot::EvalEvery, ParamValue::Usize(n)) => cfg.eval_every = *n,
+            (Slot::EvalBatches, ParamValue::Usize(n)) => cfg.eval_batches = *n,
+            (Slot::TThFactor, ParamValue::F64(x)) => cfg.t_th_factor = *x,
+            (Slot::CommSecs, ParamValue::F64(x)) => cfg.comm_secs = *x,
+            (Slot::SlowestRoundSecs, ParamValue::F64(x)) => cfg.slowest_round_secs = *x,
+            (Slot::StrategyParam { .. }, ParamValue::F64(x)) => {
+                match cfg.strategy_params.iter_mut().find(|(k, _)| *k == self.key) {
+                    Some(entry) => entry.1 = *x,
+                    None => {
+                        cfg.strategy_params.push((self.key.clone(), *x));
+                        cfg.strategy_params.sort_by(|a, b| a.0.cmp(&b.0));
+                    }
+                }
+            }
+            _ => return Err(type_err()),
+        }
+        Ok(())
+    }
+}
+
+/// The key registry: fixed config fields + every strategy-declared
+/// tunable. Cheap to build; [`ParamSpace::shared`] caches one.
+pub struct ParamSpace {
+    keys: Vec<KeyDef>,
+}
+
+impl ParamSpace {
+    pub fn new() -> ParamSpace {
+        use ParamType::*;
+        let mut keys = vec![
+            KeyDef::fixed("model", Str, "zoo model name, or mock:<blocks>x<body>", Slot::Model),
+            KeyDef::fixed("fleet", Fleet, "small10 | largeN | s1,s2,...", Slot::Fleet),
+            KeyDef::fixed("seed", U64, "experiment seed (fleet, data split, init)", Slot::Seed),
+            KeyDef::fixed("strategy", Str, "registered strategy name", Slot::Strategy),
+            KeyDef::fixed("train.rounds", Usize, "federated rounds", Slot::Rounds),
+            KeyDef::fixed("train.local_steps", Usize, "local steps per round", Slot::LocalSteps),
+            KeyDef::fixed("train.lr", F64, "client learning rate", Slot::Lr),
+            KeyDef::fixed(
+                "data.alpha",
+                F64,
+                "Dirichlet non-iid concentration (paper: 0.1)",
+                Slot::Alpha,
+            ),
+            KeyDef::fixed("eval.every", Usize, "evaluate every k rounds", Slot::EvalEvery),
+            KeyDef::fixed("eval.batches", Usize, "eval batches per evaluation", Slot::EvalBatches),
+            KeyDef::fixed(
+                "time.t_th_factor",
+                F64,
+                "T_th as a factor of the fastest device's full round",
+                Slot::TThFactor,
+            ),
+            KeyDef::fixed("time.comm_secs", F64, "per-round communication cost", Slot::CommSecs),
+            KeyDef::fixed(
+                "time.slowest_round_secs",
+                F64,
+                "calibrate the slowest device's full round to this (0 = off)",
+                Slot::SlowestRoundSecs,
+            ),
+        ];
+        for def in registry::builtin().defs() {
+            for p in &def.params {
+                keys.push(KeyDef {
+                    key: StrategyRegistry::param_key(def.name, p.name),
+                    ty: ParamType::F64,
+                    help: p.help.to_string(),
+                    slot: Slot::StrategyParam { default: p.default, min: p.min, max: p.max },
+                });
+            }
+        }
+        ParamSpace { keys }
+    }
+
+    /// The process-wide space (the registry it derives from is static).
+    pub fn shared() -> &'static ParamSpace {
+        static SPACE: std::sync::OnceLock<ParamSpace> = std::sync::OnceLock::new();
+        SPACE.get_or_init(ParamSpace::new)
+    }
+
+    pub fn keys(&self) -> &[KeyDef] {
+        &self.keys
+    }
+
+    /// Look a key up, or fail with the full roster and a nearest-match
+    /// suggestion — a typo should never read as "feature missing".
+    pub fn resolve(&self, key: &str) -> anyhow::Result<&KeyDef> {
+        if let Some(def) = self.keys.iter().find(|d| d.key == key) {
+            return Ok(def);
+        }
+        let names: Vec<&str> = self.keys.iter().map(|d| d.key.as_str()).collect();
+        let hint = crate::util::nearest_match(key, &names)
+            .map(|n| format!(" — did you mean {n:?}?"))
+            .unwrap_or_default();
+        anyhow::bail!(
+            "unknown parameter key {key:?}{hint}\nregistered keys:\n  {}",
+            names.join("\n  ")
+        )
+    }
+}
+
+impl Default for ParamSpace {
+    fn default() -> Self {
+        ParamSpace::new()
+    }
+}
+
+/// One `key=value` binding.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Binding {
+    pub key: String,
+    pub value: ParamValue,
+}
+
+impl Binding {
+    /// Parse `key=value` against the space.
+    pub fn parse(space: &ParamSpace, spec: &str) -> anyhow::Result<Binding> {
+        let (key, raw) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("binding {spec:?} is not key=value"))?;
+        let def = space.resolve(key)?;
+        Ok(Binding { key: def.key.clone(), value: def.parse(raw)? })
+    }
+
+    /// Canonical `key=value` rendering (inverse of [`Binding::parse`]).
+    pub fn render(&self) -> String {
+        format!("{}={}", self.key, self.value.render())
+    }
+}
+
+/// Deterministic label for a list of bindings — the campaign's cell
+/// identity ("base" for an empty list).
+pub fn bindings_label(bindings: &[Binding]) -> String {
+    if bindings.is_empty() {
+        return "base".to_string();
+    }
+    bindings.iter().map(Binding::render).collect::<Vec<_>>().join(",")
+}
+
+/// An ordered list of bindings forming one precedence layer. A key may be
+/// bound at most once per overlay, so applying an overlay is
+/// order-independent; layers stack by applying one overlay after another
+/// (base config < campaign axis < CLI `--set`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SpecOverlay {
+    pub bindings: Vec<Binding>,
+}
+
+impl SpecOverlay {
+    pub fn new() -> SpecOverlay {
+        SpecOverlay { bindings: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bindings.is_empty()
+    }
+
+    /// Parse `key=value` specs (e.g. repeated `--set` values) into one
+    /// layer, rejecting duplicate keys.
+    pub fn parse(space: &ParamSpace, specs: &[&str]) -> anyhow::Result<SpecOverlay> {
+        let mut overlay = SpecOverlay::new();
+        for spec in specs {
+            overlay.push(Binding::parse(space, spec)?)?;
+        }
+        Ok(overlay)
+    }
+
+    /// Add a binding; a key already bound in this layer is an error (two
+    /// values for one key in one layer has no defined winner).
+    pub fn push(&mut self, b: Binding) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.bindings.iter().any(|x| x.key == b.key),
+            "key {:?} bound twice in one layer",
+            b.key
+        );
+        self.bindings.push(b);
+        Ok(())
+    }
+
+    /// Apply every binding onto a config.
+    pub fn apply(&self, space: &ParamSpace, cfg: &mut ExperimentCfg) -> anyhow::Result<()> {
+        for b in &self.bindings {
+            space.resolve(&b.key)?.apply(cfg, &b.value)?;
+        }
+        Ok(())
+    }
+
+    /// Manifest form: an array of canonical `key=value` strings.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.bindings.iter().map(|b| Json::Str(b.render())).collect())
+    }
+
+    pub fn from_json(space: &ParamSpace, j: &Json) -> anyhow::Result<SpecOverlay> {
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("overlay is not an array of key=value strings"))?;
+        let mut overlay = SpecOverlay::new();
+        for v in arr {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("overlay entry {v:?} is not a string"))?;
+            overlay.push(Binding::parse(space, s)?)?;
+        }
+        Ok(overlay)
+    }
+}
+
+/// One campaign grid dimension: a registered key and the values it sweeps.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SweepAxis {
+    pub key: String,
+    pub values: Vec<ParamValue>,
+}
+
+impl SweepAxis {
+    /// Parse `key=v1,v2,...`. Fleet-typed keys split on ';' instead
+    /// (fleet specs like `1,2.5,4` use commas internally):
+    /// `--sweep "fleet=small10;large20"`.
+    pub fn parse(space: &ParamSpace, spec: &str) -> anyhow::Result<SweepAxis> {
+        let (key, raw) = spec
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("sweep axis {spec:?} is not key=v1,v2,..."))?;
+        let def = space.resolve(key)?;
+        let sep = if def.ty == ParamType::Fleet { ';' } else { ',' };
+        let mut values = Vec::new();
+        for part in raw.split(sep).filter(|p| !p.is_empty()) {
+            let v = def.parse(part)?;
+            anyhow::ensure!(
+                !values.contains(&v),
+                "sweep axis {key}: value {part:?} listed twice",
+            );
+            values.push(v);
+        }
+        anyhow::ensure!(!values.is_empty(), "sweep axis {key} has no values");
+        Ok(SweepAxis { key: def.key.clone(), values })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("key", Json::Str(self.key.clone())),
+            (
+                "values",
+                Json::Arr(self.values.iter().map(|v| Json::Str(v.render())).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(space: &ParamSpace, j: &Json) -> anyhow::Result<SweepAxis> {
+        let key = j.s("key")?;
+        let def = space.resolve(key)?;
+        let mut values = Vec::new();
+        for v in j.arr("values")? {
+            let s = v
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("axis {key}: value {v:?} not a string"))?;
+            values.push(def.parse(s)?);
+        }
+        anyhow::ensure!(!values.is_empty(), "sweep axis {key} has no values");
+        Ok(SweepAxis { key: def.key.clone(), values })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_and_strategy_keys_resolve() {
+        let space = ParamSpace::shared();
+        for key in ["train.lr", "data.alpha", "seed", "fleet", "strategy"] {
+            space.resolve(key).unwrap();
+        }
+        let def = space.resolve("strategy.fedel.harmonize_weight").unwrap();
+        assert_eq!(def.ty, ParamType::F64);
+        assert!(space.resolve("strategy.pyramidfl.frac").is_ok());
+    }
+
+    #[test]
+    fn unknown_key_lists_roster_and_suggests() {
+        let err = ParamSpace::shared().resolve("data.alhpa").unwrap_err().to_string();
+        assert!(err.contains("did you mean \"data.alpha\""), "{err}");
+        assert!(err.contains("train.lr"), "roster missing from {err}");
+    }
+
+    #[test]
+    fn bindings_parse_apply_and_render_canonically() {
+        let space = ParamSpace::shared();
+        let mut cfg = ExperimentCfg::default();
+        for spec in [
+            "train.lr=0.125",
+            "data.alpha=0.5",
+            "seed=18014398509481985", // 2^54 + 1: u64 path, not f64
+            "fleet=1,2.5,4",
+            "strategy.fedel.harmonize_weight=0.4",
+        ] {
+            let b = Binding::parse(space, spec).unwrap();
+            assert_eq!(b.render(), *spec, "canonical rendering");
+            space.resolve(&b.key).unwrap().apply(&mut cfg, &b.value).unwrap();
+        }
+        assert_eq!(cfg.lr, 0.125);
+        assert_eq!(cfg.alpha, 0.5);
+        assert_eq!(cfg.seed, (1u64 << 54) + 1);
+        assert_eq!(cfg.fleet, FleetSpec::Scales(vec![1.0, 2.5, 4.0]));
+        assert_eq!(
+            cfg.strategy_params,
+            vec![("strategy.fedel.harmonize_weight".to_string(), 0.4)]
+        );
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let space = ParamSpace::shared();
+        assert!(Binding::parse(space, "train.rounds=0").is_err());
+        assert!(Binding::parse(space, "train.lr=-1").is_err());
+        assert!(Binding::parse(space, "train.lr=abc").is_err());
+        assert!(Binding::parse(space, "strategy=bogus").is_err());
+        assert!(Binding::parse(space, "strategy.fedel.harmonize_weight=2").is_err());
+        assert!(Binding::parse(space, "no-equals").is_err());
+    }
+
+    #[test]
+    fn overlay_rejects_duplicate_keys_within_a_layer() {
+        let space = ParamSpace::shared();
+        let err = SpecOverlay::parse(space, &["train.lr=0.1", "train.lr=0.2"]).unwrap_err();
+        assert!(err.to_string().contains("bound twice"), "{err}");
+    }
+
+    #[test]
+    fn sweep_axis_parses_commas_and_fleet_semicolons() {
+        let space = ParamSpace::shared();
+        let a = SweepAxis::parse(space, "data.alpha=0.1,0.5").unwrap();
+        assert_eq!(a.values, vec![ParamValue::F64(0.1), ParamValue::F64(0.5)]);
+        let f = SweepAxis::parse(space, "fleet=small10;1,2.5").unwrap();
+        assert_eq!(
+            f.values,
+            vec![
+                ParamValue::Fleet(FleetSpec::Small10),
+                ParamValue::Fleet(FleetSpec::Scales(vec![1.0, 2.5]))
+            ]
+        );
+        assert!(SweepAxis::parse(space, "data.alpha=").is_err());
+        assert!(SweepAxis::parse(space, "data.alpha=0.1,0.1").is_err());
+        let axis_json = a.to_json();
+        assert_eq!(SweepAxis::from_json(space, &axis_json).unwrap(), a);
+    }
+
+    #[test]
+    fn strategy_param_get_reads_bag_or_default() {
+        let space = ParamSpace::shared();
+        let def = space.resolve("strategy.pyramidfl.frac").unwrap();
+        let mut cfg = ExperimentCfg::default();
+        assert_eq!(def.get(&cfg), ParamValue::F64(0.6));
+        def.apply(&mut cfg, &ParamValue::F64(0.8)).unwrap();
+        assert_eq!(def.get(&cfg), ParamValue::F64(0.8));
+    }
+}

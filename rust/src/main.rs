@@ -10,33 +10,40 @@
 //!
 //! Examples:
 //!   fedel train --model mlp --strategy fedel --fleet small10 --rounds 40
+//!   fedel train --model mock:8x100 --set strategy.fedel.harmonize_weight=0.4
+//!   fedel train --list-strategies
 //!   fedel train --model mock:8x100 --threads 1 --jsonl rounds.jsonl
-//!   fedel train --model mock:8x100 --store runs --checkpoint-every 5
+//!   fedel train --model mock:8x100 --store runs --checkpoint-every 5 --checkpoint-secs 300
 //!   fedel train --model mock:8x100 --store runs --warm-start fedel-s42
 //!   fedel runs list --store runs
 //!   fedel runs resume fedel-s42 --store runs
 //!   fedel runs compare fedel-s42 timelyfl-s42 fedavg-s42 --store runs --json -
 //!   fedel runs gc --store runs
 //!   fedel campaign run --name sweep --store runs --model mock:8x100 \
-//!       --strategies fedavg,fedel --seeds 1,2 --rounds 20
+//!       --sweep strategy=fedavg,fedel --sweep seed=1,2,3 \
+//!       --sweep data.alpha=0.1,0.5 --rounds 20
 //!   fedel campaign run --name sweep --store runs        # resume after a kill
-//!   fedel campaign report --name sweep --store runs --json report.json
+//!   fedel campaign report --name sweep --store runs --over seed --json report.json
 //!   fedel compare --model mock:8x100 --strategies fedavg,fedel --rounds 20
 //!   fedel inspect --model vgg_cifar
 
 use std::path::Path;
 use std::time::Duration;
 
-use fedel::config::{ExperimentCfg, FleetSpec};
+use fedel::config::params::ParamSpace;
+use fedel::config::ExperimentCfg;
 use fedel::fl::observer::{ConsoleObserver, JsonlObserver, ObserverSet};
 use fedel::fl::server::ResumeState;
 use fedel::manifest;
-use fedel::report::{compare_runs, render_table1, table1_rows, CompareReport, Table};
+use fedel::report::{
+    compare_runs, render_table1, table1_rows, CompareReport, GroupedReport, Table, Target,
+};
 use fedel::sim::campaign::{self, CampaignCfg};
 use fedel::sim::experiment::{resume_run, Experiment};
 use fedel::store::checkpoint::CheckpointObserver;
 use fedel::store::schema::RunStatus;
 use fedel::store::RunStore;
+use fedel::strategies::registry;
 use fedel::util::cli::Args;
 
 fn main() {
@@ -64,13 +71,46 @@ fn main() {
     std::process::exit(code);
 }
 
+/// Print the strategy registry (names, declared tunables, summaries) and
+/// every sweepable parameter key.
+fn list_strategies() {
+    let mut t = Table::new("registered strategies", &["name", "tunables", "summary"]);
+    for def in registry::builtin().defs() {
+        let params = if def.params.is_empty() {
+            "-".to_string()
+        } else {
+            def.params
+                .iter()
+                .map(|p| format!("{}={} [{}..{}]", p.name, p.default, p.min, p.max))
+                .collect::<Vec<_>>()
+                .join(", ")
+        };
+        t.row(vec![def.name.to_string(), params, def.summary.to_string()]);
+    }
+    t.print();
+    let mut k = Table::new(
+        "parameter keys (--set key=value; campaign run --sweep key=v1,v2)",
+        &["key", "type", "help"],
+    );
+    for def in ParamSpace::shared().keys() {
+        k.row(vec![def.key.clone(), def.ty.as_str().to_string(), def.help.clone()]);
+    }
+    k.print();
+}
+
 fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    if args.flag("list-strategies") {
+        args.check_unused()?;
+        list_strategies();
+        return Ok(());
+    }
     let mut cfg = ExperimentCfg::from_args(args)?;
     cfg.verbose = true;
     let out_json = args.get("out").map(|s| s.to_string());
     let out_jsonl = args.get("jsonl").map(|s| s.to_string());
     let store_dir = args.get("store").map(|s| s.to_string());
     let every = args.usize_or("checkpoint-every", 5);
+    let ckpt_secs = parse_opt_f64(args, "checkpoint-secs")?;
     let warm = args.get("warm-start").map(|s| s.to_string());
     args.check_unused()?;
     println!("config: {}", cfg.to_json());
@@ -84,7 +124,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let strategy_name = exp.cfg.strategy.clone();
     let mut ckpt = match &store {
         Some(s) => {
-            let c = CheckpointObserver::create(s, &exp.cfg, &strategy_name, every)?;
+            let c = CheckpointObserver::create(s, &exp.cfg, &strategy_name, every)?
+                .every_secs(ckpt_secs);
             println!("run id: {} (store {})", c.run_id(), s.root().display());
             Some(c)
         }
@@ -260,13 +301,13 @@ fn cmd_runs(args: &Args) -> anyhow::Result<()> {
         }
         "compare" => {
             let ids = &args.positional[1..];
-            let target = args.get("target").and_then(|s| s.parse().ok());
+            let target = target_from_args(args)?;
             let json_out = args.get("json").map(|s| s.to_string());
             args.check_unused()?;
             anyhow::ensure!(
                 ids.len() >= 2,
                 "usage: fedel runs compare <run-a> <run-b> [<run-c> ...] \
-                 [--target acc] [--json path|-]\n\
+                 [--target acc | --target-loss loss] [--json path|-]\n\
                  (speedups are reported vs the LAST run listed)"
             );
             let mut manifests = Vec::with_capacity(ids.len());
@@ -301,6 +342,29 @@ fn cmd_runs(args: &Args) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// Parse an optional f64 option loudly (a typo'd value must not silently
+/// fall back to a default).
+fn parse_opt_f64(args: &Args, key: &str) -> anyhow::Result<Option<f64>> {
+    args.get(key)
+        .map(|s| {
+            s.parse()
+                .map_err(|e| anyhow::anyhow!("--{key} value {s:?}: {e}"))
+        })
+        .transpose()
+}
+
+/// Resolve `--target` (accuracy) / `--target-loss` into a [`Target`].
+fn target_from_args(args: &Args) -> anyhow::Result<Target> {
+    let acc = parse_opt_f64(args, "target")?;
+    let loss = parse_opt_f64(args, "target-loss")?;
+    match (acc, loss) {
+        (Some(_), Some(_)) => anyhow::bail!("--target and --target-loss are mutually exclusive"),
+        (Some(a), None) => Ok(Target::Acc(a)),
+        (None, Some(l)) => Ok(Target::Loss(l)),
+        (None, None) => Ok(Target::Default),
+    }
 }
 
 /// Print an N-way comparison, optionally also as JSON (`-` = stdout).
@@ -348,14 +412,20 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
             cfg.verbose = true;
             args.check_unused()?;
             let n_cells = cfg.cells()?.len();
+            let grid = if cfg.axes.is_empty() {
+                "base config only".to_string()
+            } else {
+                cfg.axes
+                    .iter()
+                    .map(|a| format!("{}[{}]", a.key, a.values.len()))
+                    .collect::<Vec<_>>()
+                    .join(" x ")
+            };
             println!(
-                "campaign {name}: {n_cells} cell(s) = {} strategies x {} seeds x {} fleets x {} T_th (store {})",
-                cfg.strategies.len(),
-                cfg.seeds.len(),
-                cfg.fleets.len(),
-                cfg.t_th_factors.len(),
+                "campaign {name}: {n_cells} cell(s) = {grid} (store {})",
                 store.root().display()
             );
+            warn_crossed_strategy_axes(&cfg);
             let outcome = campaign::run_campaign(&store, &cfg)?;
             campaign::status_table(&store, &store.load_campaign(&name)?).print();
             let (skipped, completed, failed, pending) = outcome.counts();
@@ -383,28 +453,98 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
         }
         "report" => {
             let name = args.str_or("name", "campaign");
-            let target = args.get("target").and_then(|s| s.parse().ok());
+            let target = target_from_args(args)?;
             let baseline = args.get("baseline").map(|s| s.to_string());
+            let over = args.get("over").map(|s| s.to_string());
             let json_out = args.get("json").map(|s| s.to_string());
             args.check_unused()?;
             let m = store.load_campaign(&name)?;
-            let report = campaign::report(&store, &m, target, baseline.as_deref())?;
-            emit_compare_report(&report, json_out.as_deref())
+            match over {
+                // Table-3 shape: collapse one axis into mean ± std.
+                Some(over) => {
+                    let rep =
+                        campaign::grouped_report(&store, &m, &over, target, baseline.as_deref())?;
+                    emit_grouped_report(&rep, json_out.as_deref())
+                }
+                None => {
+                    let report = campaign::report(&store, &m, target, baseline.as_deref())?;
+                    emit_compare_report(&report, json_out.as_deref())
+                }
+            }
         }
         other => anyhow::bail!("unknown campaign action {other:?} (run | status | report)"),
     }
 }
 
+/// A strategy-scoped axis (`strategy.<s>.<p>`) crossed with strategies
+/// that don't own the key expands cells that ignore it — bitwise
+/// duplicates of each other, silently multiplying baseline compute. The
+/// cross product is still what was asked for (and keeps labels uniform),
+/// but say so once up front.
+fn warn_crossed_strategy_axes(cfg: &CampaignCfg) {
+    let swept: Vec<String> = cfg
+        .axes
+        .iter()
+        .find(|a| a.key == "strategy")
+        .map(|a| a.values.iter().map(|v| v.render()).collect())
+        .unwrap_or_else(|| vec![cfg.base.strategy.clone()]);
+    for axis in &cfg.axes {
+        let Some(owner) = axis
+            .key
+            .strip_prefix("strategy.")
+            .and_then(|rest| rest.split_once('.'))
+            .map(|(owner, _)| owner)
+        else {
+            continue;
+        };
+        let ignoring: Vec<&str> = swept
+            .iter()
+            .map(String::as_str)
+            .filter(|s| *s != owner)
+            .collect();
+        if !ignoring.is_empty() {
+            eprintln!(
+                "note: axis {} only affects {owner:?} cells — [{}] cells ignore it and \
+                 run identical duplicates across its {} value(s)",
+                axis.key,
+                ignoring.join(", "),
+                axis.values.len()
+            );
+        }
+    }
+}
+
+/// Print a grouped (mean ± std) report, optionally as JSON (`-` = stdout).
+fn emit_grouped_report(report: &GroupedReport, json_out: Option<&str>) -> anyhow::Result<()> {
+    match json_out {
+        Some("-") => println!("{}", report.to_json().to_string_pretty()),
+        Some(path) => {
+            std::fs::write(path, report.to_json().to_string_pretty())?;
+            report.table().print();
+            println!("wrote {path}");
+        }
+        None => report.table().print(),
+    }
+    Ok(())
+}
+
 /// Resolve the grid: a stored campaign resumes from its spec snapshot
 /// when no grid args are given; otherwise the args rebuild the spec,
 /// which must match the stored one exactly (same name = same grid).
+///
+/// `--sweep key=v1,v2` (repeatable) is the generic axis syntax — any
+/// registered parameter key, including strategy tunables. The PR-3-era
+/// flags (`--strategies`, `--seeds`, `--fleets`, `--t-th`) remain as
+/// sugar for the equivalent axes, appended in their original nesting
+/// order ahead of any `--sweep` axes.
 fn campaign_cfg_from_args(
     store: &RunStore,
     name: &str,
     args: &Args,
 ) -> anyhow::Result<CampaignCfg> {
-    let grid_keys = ["model", "strategies", "seeds", "fleets", "t-th", "rounds"];
-    let respecified = grid_keys.iter().any(|k| args.get(k).is_some());
+    let grid_keys = ["model", "strategies", "seeds", "fleets", "t-th", "rounds", "set"];
+    let respecified =
+        grid_keys.iter().any(|k| args.get(k).is_some()) || !args.all("sweep").is_empty();
     if store.campaign_exists(name) && !respecified {
         let m = store.load_campaign(name)?;
         let mut cfg = CampaignCfg::from_spec_json(name, &m.spec)?;
@@ -416,35 +556,40 @@ fn campaign_cfg_from_args(
     // Consumed here, before the spec comparison below: rerunning the
     // exact creation command (same --checkpoint-every) must compare equal.
     cfg.checkpoint_every = args.usize_or("checkpoint-every", cfg.checkpoint_every);
+    // The --set layer: already applied onto `base` by from_args, and
+    // recorded in the spec so it reapplies after each cell's axis
+    // bindings (precedence base < axis < set) and survives bare resumes.
+    let sets = args.all("set");
+    if !sets.is_empty() {
+        cfg.set = fedel::config::params::SpecOverlay::parse(ParamSpace::shared(), &sets)?;
+    }
+    // Legacy four-axis sugar, in the original nesting order.
     if let Some(s) = args.get("strategies") {
-        cfg.strategies = s.split(',').filter(|p| !p.is_empty()).map(String::from).collect();
+        cfg.axis(&format!("strategy={s}"))?;
     }
     if let Some(s) = args.get("seeds") {
-        cfg.seeds = s
-            .split(',')
-            .filter(|p| !p.is_empty())
-            .map(|p| p.parse().map_err(|e| anyhow::anyhow!("bad seed {p:?}: {e}")))
-            .collect::<anyhow::Result<_>>()?;
+        cfg.axis(&format!("seed={s}"))?;
     }
     if let Some(s) = args.get("fleets") {
-        // ';'-separated: Scales fleet specs use ',' internally
-        cfg.fleets = s
-            .split(';')
-            .filter(|p| !p.is_empty())
-            .map(FleetSpec::parse)
-            .collect::<anyhow::Result<_>>()?;
+        // ';'-separated, same as the fleet sweep syntax
+        cfg.axis(&format!("fleet={s}"))?;
     }
     if let Some(s) = args.get("t-th") {
-        cfg.t_th_factors = s
-            .split(',')
-            .filter(|p| !p.is_empty())
-            .map(|p| p.parse().map_err(|e| anyhow::anyhow!("bad t_th {p:?}: {e}")))
-            .collect::<anyhow::Result<_>>()?;
+        cfg.axis(&format!("time.t_th_factor={s}"))?;
+    }
+    for spec in args.all("sweep") {
+        cfg.axis(spec)?;
     }
     if store.campaign_exists(name) {
         let m = store.load_campaign(name)?;
+        // A v1 manifest can never textually match a v2 spec; compare via
+        // the expanded grid instead (run_campaign migrates + re-checks).
+        let equivalent = cfg.spec_to_json() == m.spec
+            || CampaignCfg::from_spec_json(name, &m.spec).is_ok_and(|stored| {
+                stored.spec_to_json() == cfg.spec_to_json()
+            });
         anyhow::ensure!(
-            cfg.spec_to_json() == m.spec,
+            equivalent,
             "campaign {name:?} already exists with a different spec — resume it \
              without grid args (`fedel campaign run --name {name}`) or pick a new name"
         );

@@ -129,6 +129,7 @@ impl Workload {
             eval_batches: if full { 16 } else { 6 },
             comm_secs: 30.0,
             exec_threads: 0,
+            strategy_params: Vec::new(),
             record_selections: false,
             verbose: false,
             halt_after: None,

@@ -138,6 +138,55 @@ pub fn render_table1(title: &str, rows: &[Table1Row], lm: bool) -> Table {
     t
 }
 
+/// What a comparison times runs to. `Default` resolves to 95% of the
+/// least final accuracy across the compared runs (the paper's
+/// matched-accuracy methodology); `Loss` supports LM-style workloads
+/// where the eval curve is a loss (perplexity = e^loss, so a perplexity
+/// target p is `Target::Loss(p.ln())`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Target {
+    Acc(f64),
+    Loss(f64),
+    Default,
+}
+
+/// Which metric a resolved target is expressed in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TargetMetric {
+    Acc,
+    Loss,
+}
+
+impl TargetMetric {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TargetMetric::Acc => "acc",
+            TargetMetric::Loss => "loss",
+        }
+    }
+
+    /// The JSON key the resolved target value rides under (`target_acc`
+    /// is the pre-loss schema key, kept stable for dashboards).
+    pub fn json_key(&self) -> &'static str {
+        match self {
+            TargetMetric::Acc => "target_acc",
+            TargetMetric::Loss => "target_loss",
+        }
+    }
+}
+
+/// Time-to-target over a record stream, per metric.
+pub fn time_to_target(
+    records: &[crate::fl::server::RoundRecord],
+    metric: TargetMetric,
+    target: f64,
+) -> Option<f64> {
+    match metric {
+        TargetMetric::Acc => crate::store::schema::time_to_accuracy(records, target),
+        TargetMetric::Loss => crate::store::schema::time_to_loss(records, target),
+    }
+}
+
 /// One run's row in an N-way comparison of stored runs.
 #[derive(Clone, Debug)]
 pub struct CompareRow {
@@ -146,49 +195,53 @@ pub struct CompareRow {
     pub rounds: usize,
     pub final_acc: Option<f64>,
     pub sim_total_secs: f64,
-    /// Simulated seconds to the report's target accuracy (None = never).
+    /// Simulated seconds to the report's target (None = never reached).
     pub time_to_target: Option<f64>,
     /// Baseline's time-to-target / this run's (None when either never
     /// reaches the target; 1.0 for the baseline itself).
     pub speedup_vs_baseline: Option<f64>,
 }
 
-/// N-way comparison of stored runs at matched accuracy — the paper's
+/// N-way comparison of stored runs at a matched target — the paper's
 /// time-to-accuracy methodology over whole grids. Built by
 /// [`compare_runs`]; renders as a table for the terminal or as JSON
 /// (`--json`) for dashboards and `campaign report`.
 #[derive(Clone, Debug)]
 pub struct CompareReport {
-    /// Accuracy every run is timed to.
+    pub metric: TargetMetric,
+    /// Resolved target every run is timed to.
     pub target: f64,
     /// Run id of the speedup baseline.
     pub baseline: String,
     pub rows: Vec<CompareRow>,
 }
 
-/// Compare N *stored* runs ([`crate::store`]) at matched accuracy: one
+/// Compare N *stored* runs ([`crate::store`]) at a matched target: one
 /// row per run with final accuracy, simulated total, time-to-target, and
-/// speedup vs `manifests[baseline]`, where target = `target` or 95% of
-/// the least final accuracy across the runs (the two-run behavior,
-/// generalized).
+/// speedup vs `manifests[baseline]`.
 pub fn compare_runs(
     manifests: &[&crate::store::schema::RunManifest],
-    target: Option<f64>,
+    target: Target,
     baseline: usize,
 ) -> CompareReport {
-    use crate::store::schema::time_to_accuracy;
     assert!(!manifests.is_empty(), "compare_runs needs at least one run");
     assert!(baseline < manifests.len(), "baseline index out of range");
-    let least = manifests
-        .iter()
-        .map(|m| m.final_acc().unwrap_or(0.0))
-        .fold(f64::INFINITY, f64::min);
-    let target = target.unwrap_or(0.95 * least);
-    let base_time = time_to_accuracy(&manifests[baseline].records, target);
+    let (metric, target) = match target {
+        Target::Acc(a) => (TargetMetric::Acc, a),
+        Target::Loss(l) => (TargetMetric::Loss, l),
+        Target::Default => {
+            let least = manifests
+                .iter()
+                .map(|m| m.final_acc().unwrap_or(0.0))
+                .fold(f64::INFINITY, f64::min);
+            (TargetMetric::Acc, 0.95 * least)
+        }
+    };
+    let base_time = time_to_target(&manifests[baseline].records, metric, target);
     let rows = manifests
         .iter()
         .map(|m| {
-            let tta = time_to_accuracy(&m.records, target);
+            let tta = time_to_target(&m.records, metric, target);
             CompareRow {
                 id: m.id.clone(),
                 strategy: m.strategy.clone(),
@@ -203,13 +256,18 @@ pub fn compare_runs(
             }
         })
         .collect();
-    CompareReport { target, baseline: manifests[baseline].id.clone(), rows }
+    CompareReport { metric, target, baseline: manifests[baseline].id.clone(), rows }
 }
 
 impl CompareReport {
     pub fn table(&self) -> Table {
         let mut t = Table::new(
-            &format!("runs compare @ acc {:.3} (baseline {})", self.target, self.baseline),
+            &format!(
+                "runs compare @ {} {:.3} (baseline {})",
+                self.metric.as_str(),
+                self.target,
+                self.baseline
+            ),
             &["run", "strategy", "rounds", "final acc", "sim total", "time-to-target", "speedup"],
         );
         for r in &self.rows {
@@ -236,7 +294,8 @@ impl CompareReport {
         use crate::util::json::Json;
         let opt = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
         Json::obj(vec![
-            ("target_acc", Json::Num(self.target)),
+            (self.metric.json_key(), Json::Num(self.target)),
+            ("metric", Json::Str(self.metric.as_str().to_string())),
             ("baseline", Json::Str(self.baseline.clone())),
             (
                 "runs",
@@ -267,11 +326,144 @@ impl CompareReport {
 pub fn runs_compare(
     a: &crate::store::schema::RunManifest,
     b: &crate::store::schema::RunManifest,
-    target: Option<f64>,
+    target: Target,
 ) -> (Table, Option<f64>) {
     let report = compare_runs(&[a, b], target, 1);
     let speedup = report.rows[0].speedup_vs_baseline;
     (report.table(), speedup)
+}
+
+// -- grouped (Table-3-shape) reports ----------------------------------------
+
+/// Mean ± sample std over the values that exist (seeds that reached the
+/// target, cells that stored a final accuracy, ...).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Agg {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+}
+
+/// Aggregate a sample; None for an empty one.
+pub fn aggregate(xs: &[f64]) -> Option<Agg> {
+    if xs.is_empty() {
+        return None;
+    }
+    Some(Agg { n: xs.len(), mean: crate::util::stats::mean(xs), std: crate::util::stats::std_dev(xs) })
+}
+
+impl Agg {
+    fn fmt_with(&self, f: impl Fn(f64) -> String) -> String {
+        format!("{} ± {}", f(self.mean), f(self.std))
+    }
+
+    fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("mean", Json::Num(self.mean)),
+            ("std", Json::Num(self.std)),
+            ("n", Json::Num(self.n as f64)),
+        ])
+    }
+}
+
+/// One aggregated row: a grid cell group (every axis binding except the
+/// collapsed one) with mean ± std statistics over the collapsed axis.
+#[derive(Clone, Debug)]
+pub struct GroupRow {
+    /// Remaining-axes bindings label (`strategy=fedel,data.alpha=0.1`).
+    pub label: String,
+    /// Member cells that have a stored run.
+    pub cells: usize,
+    pub final_acc: Option<Agg>,
+    /// Over the members that reach the target (`n` says how many did).
+    pub time_to_target: Option<Agg>,
+    /// Over members whose *matched* baseline member (same bindings, the
+    /// baseline strategy, same collapsed-axis value) also reaches it.
+    pub speedup_vs_baseline: Option<Agg>,
+}
+
+/// The paper's Table-3 shape: a campaign grid collapsed over one axis
+/// (typically `seed`), mean ± std per remaining cell. Built by
+/// [`crate::sim::campaign::grouped_report`].
+#[derive(Clone, Debug)]
+pub struct GroupedReport {
+    pub metric: TargetMetric,
+    pub target: f64,
+    /// The collapsed axis key.
+    pub over: String,
+    /// Baseline strategy for the speedup columns (None when the grid has
+    /// no `strategy` axis to match against).
+    pub baseline: Option<String>,
+    pub rows: Vec<GroupRow>,
+}
+
+impl GroupedReport {
+    pub fn table(&self) -> Table {
+        let base = self
+            .baseline
+            .as_deref()
+            .map(|b| format!(", speedup vs {b}"))
+            .unwrap_or_default();
+        let mut t = Table::new(
+            &format!(
+                "mean ± std over {} @ {} {:.3}{base}",
+                self.over,
+                self.metric.as_str(),
+                self.target
+            ),
+            &["group", "n", "final acc", "time-to-target", "speedup"],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                r.label.clone(),
+                format!("{}", r.cells),
+                r.final_acc
+                    .map(|a| a.fmt_with(|x| format!("{:.2}%", 100.0 * x)))
+                    .unwrap_or_else(|| "n/a".into()),
+                r.time_to_target
+                    .map(|a| format!("{} (n={})", a.fmt_with(crate::util::fmt_hours), a.n))
+                    .unwrap_or_else(|| "never".into()),
+                r.speedup_vs_baseline
+                    .map(|a| a.fmt_with(|x| format!("{x:.2}x")))
+                    .unwrap_or_else(|| "N/A".into()),
+            ]);
+        }
+        t
+    }
+
+    /// Machine-readable form; extends the [`CompareReport::to_json`]
+    /// schema with per-group aggregates.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let opt = |a: &Option<Agg>| a.as_ref().map(Agg::to_json).unwrap_or(Json::Null);
+        Json::obj(vec![
+            (self.metric.json_key(), Json::Num(self.target)),
+            ("metric", Json::Str(self.metric.as_str().to_string())),
+            ("aggregated_over", Json::Str(self.over.clone())),
+            (
+                "baseline_strategy",
+                self.baseline.as_ref().map(|b| Json::Str(b.clone())).unwrap_or(Json::Null),
+            ),
+            (
+                "groups",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("label", Json::Str(r.label.clone())),
+                                ("n", Json::Num(r.cells as f64)),
+                                ("final_acc", opt(&r.final_acc)),
+                                ("time_to_target_secs", opt(&r.time_to_target)),
+                                ("speedup_vs_baseline", opt(&r.speedup_vs_baseline)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 /// Print a "paper reports" reference line under a reproduced table.
@@ -362,13 +554,80 @@ mod tests {
         // at t=200, fedel at t=100 -> fedel is 2x faster.
         let a = man("fedel-s1", "fedel", &[(50.0, 0.4), (100.0, 0.62)], 0.62);
         let b = man("fedavg-s1", "fedavg", &[(100.0, 0.3), (200.0, 0.6)], 0.6);
-        let (t, speedup) = runs_compare(&a, &b, None);
+        let (t, speedup) = runs_compare(&a, &b, Target::Default);
         assert_eq!(t.rows.len(), 2);
         assert!((speedup.unwrap() - 2.0).abs() < 1e-9, "{speedup:?}");
         // a target nobody reaches -> no speedup, "never" rows
-        let (t, none) = runs_compare(&a, &b, Some(0.99));
+        let (t, none) = runs_compare(&a, &b, Target::Acc(0.99));
         assert!(none.is_none());
         assert!(t.rows.iter().all(|r| r[5] == "never"));
+    }
+
+    #[test]
+    fn loss_targets_walk_the_loss_curve() {
+        // fake_result sets eval_loss = 1.0 on every eval point, so a loss
+        // target of 1.0 is reached at the first eval and 0.5 never.
+        let a = stored_manifest("fedel-s1", "fedel", &[(50.0, 0.4), (100.0, 0.62)], 0.62);
+        let b = stored_manifest("fedavg-s1", "fedavg", &[(100.0, 0.3), (200.0, 0.6)], 0.6);
+        let report = compare_runs(&[&a, &b], Target::Loss(1.0), 1);
+        assert_eq!(report.metric, TargetMetric::Loss);
+        assert_eq!(report.rows[0].time_to_target, Some(50.0));
+        assert_eq!(report.rows[1].time_to_target, Some(100.0));
+        assert!((report.rows[0].speedup_vs_baseline.unwrap() - 2.0).abs() < 1e-9);
+        let j = crate::util::json::Json::parse(&report.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.f("target_loss").unwrap(), 1.0);
+        assert_eq!(j.s("metric").unwrap(), "loss");
+        let never = compare_runs(&[&a, &b], Target::Loss(0.5), 1);
+        assert!(never.rows.iter().all(|r| r.time_to_target.is_none()));
+    }
+
+    #[test]
+    fn aggregate_mean_std_over_samples() {
+        assert_eq!(aggregate(&[]), None);
+        let one = aggregate(&[3.0]).unwrap();
+        assert_eq!((one.n, one.mean, one.std), (1, 3.0, 0.0));
+        let a = aggregate(&[1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(a.n, 3);
+        assert!((a.mean - 2.0).abs() < 1e-12);
+        assert!((a.std - 1.0).abs() < 1e-12, "{}", a.std);
+    }
+
+    #[test]
+    fn grouped_report_renders_and_serializes() {
+        let rep = GroupedReport {
+            metric: TargetMetric::Acc,
+            target: 0.57,
+            over: "seed".into(),
+            baseline: Some("fedavg".into()),
+            rows: vec![
+                GroupRow {
+                    label: "strategy=fedel".into(),
+                    cells: 3,
+                    final_acc: aggregate(&[0.6, 0.62, 0.61]),
+                    time_to_target: aggregate(&[100.0, 110.0]),
+                    speedup_vs_baseline: aggregate(&[2.0, 1.8]),
+                },
+                GroupRow {
+                    label: "strategy=slowpoke".into(),
+                    cells: 3,
+                    final_acc: aggregate(&[0.1, 0.2, 0.15]),
+                    time_to_target: None,
+                    speedup_vs_baseline: None,
+                },
+            ],
+        };
+        let t = rep.table();
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.rows[0][3].contains("±"), "{}", t.rows[0][3]);
+        assert_eq!(t.rows[1][3], "never");
+        let j = crate::util::json::Json::parse(&rep.to_json().to_string_pretty()).unwrap();
+        assert_eq!(j.s("aggregated_over").unwrap(), "seed");
+        let groups = j.arr("groups").unwrap();
+        assert_eq!(groups.len(), 2);
+        let tta = groups[0].req("time_to_target_secs").unwrap();
+        assert_eq!(tta.f("n").unwrap(), 2.0);
+        assert!((tta.f("mean").unwrap() - 105.0).abs() < 1e-9);
+        assert_eq!(groups[1].get("speedup_vs_baseline"), Some(&crate::util::json::Json::Null));
     }
 
     fn stored_manifest(
@@ -399,7 +658,7 @@ mod tests {
         let c = stored_manifest("fedavg-s1", "fedavg", &[(100.0, 0.3), (200.0, 0.6)], 0.6);
         // least final acc = 0.58 -> target 0.551; fedel hits at 100,
         // timelyfl at 150, fedavg (baseline) at 200
-        let report = compare_runs(&[&a, &b, &c], None, 2);
+        let report = compare_runs(&[&a, &b, &c], Target::Default, 2);
         assert_eq!(report.baseline, "fedavg-s1");
         assert_eq!(report.rows.len(), 3);
         assert!((report.rows[0].speedup_vs_baseline.unwrap() - 2.0).abs() < 1e-9);
@@ -413,7 +672,7 @@ mod tests {
         use crate::util::json::Json;
         let a = stored_manifest("fedel-s1", "fedel", &[(50.0, 0.4), (100.0, 0.62)], 0.62);
         let b = stored_manifest("fedavg-s1", "fedavg", &[(100.0, 0.3), (200.0, 0.6)], 0.6);
-        let report = compare_runs(&[&a, &b], Some(0.57), 1);
+        let report = compare_runs(&[&a, &b], Target::Acc(0.57), 1);
         let j = Json::parse(&report.to_json().to_string_pretty()).unwrap();
         assert_eq!(j.f("target_acc").unwrap(), 0.57);
         assert_eq!(j.s("baseline").unwrap(), "fedavg-s1");
@@ -423,7 +682,7 @@ mod tests {
         assert_eq!(runs[0].f("time_to_target_secs").unwrap(), 100.0);
         assert!((runs[0].f("speedup_vs_baseline").unwrap() - 2.0).abs() < 1e-9);
         // a run that never reaches the target serializes nulls, not 0s
-        let strict = compare_runs(&[&a, &b], Some(0.99), 1);
+        let strict = compare_runs(&[&a, &b], Target::Acc(0.99), 1);
         let j = Json::parse(&strict.to_json().to_string_pretty()).unwrap();
         assert_eq!(j.arr("runs").unwrap()[0].get("time_to_target_secs"), Some(&Json::Null));
     }

@@ -1,58 +1,78 @@
 //! Campaign runner: grids of experiments as one crash-safe unit of work.
 //!
-//! Reproducing FedEL's headline tables means sweeping strategy × seed ×
-//! fleet × T_th grids against the baselines — dozens of runs per figure.
-//! A [`CampaignCfg`] names such a grid; [`run_campaign`] expands it into
-//! deterministic cells, fans the cells out across a bounded worker pool,
-//! and writes every run through the shared, lockfile-guarded
-//! [`RunStore`]. The campaign itself is as durable as its runs:
+//! Reproducing FedEL's headline tables means sweeping knobs against the
+//! baselines — dozens of runs per figure. A [`CampaignCfg`] names such a
+//! grid over the **typed parameter space** ([`crate::config::params`]):
+//! each [`SweepAxis`] sweeps one registered key (`strategy`, `seed`,
+//! `data.alpha`, `strategy.fedel.harmonize_weight`, ...), so any knob —
+//! including strategy-declared tunables — is sweepable with no per-knob
+//! code. [`run_campaign`] expands the axes into deterministic cells, fans
+//! them out across a bounded worker pool, and writes every run through
+//! the shared, lockfile-guarded [`RunStore`]. Per-cell configs resolve
+//! with defined precedence: base config < axis bindings < the campaign's
+//! `--set` overlay.
+//!
+//! The campaign itself is as durable as its runs:
 //!
 //! * The cell → run-id assignment persists in
 //!   `campaigns/<name>.json` ([`crate::store::schema::CampaignManifest`]),
 //!   atomically rewritten under the store lock as workers claim cells.
+//!   Cell identity is the rendered axis overlay
+//!   (`strategy=fedavg,seed=1`), deterministic across invocations.
 //! * A killed campaign resumes by running it again (same name, same or no
 //!   grid args): **complete cells are skipped**, cells with a checkpoint
 //!   continue through the existing [`crate::fl::server::ResumeState`]
 //!   machinery (bitwise-identical to never having stopped,
 //!   `tests/campaign.rs`), and cells that died before their first
 //!   checkpoint replay from round 0 into the same run.
+//! * Campaign manifests written by the fixed-four-axes era (schema v1)
+//!   migrate in place on the next `campaign run`: the spec converts to
+//!   axes form, labels are rewritten, and run assignments survive — old
+//!   campaigns stay resumable (`tests/campaign.rs`).
 //! * Two kill switches mirror `ServerCfg::halt_after` for drills and
 //!   tests: `halt_after` kills each executing cell after k rounds, and
 //!   `halt_after_cells` stops the campaign after n cells finish.
 //!
-//! Reporting rides the N-way [`crate::report::compare_runs`]:
-//! [`report`] assembles the whole grid's time-to-accuracy table (and
-//! `--json` form) from the stored manifests.
+//! Reporting rides the N-way [`crate::report::compare_runs`] ([`report`])
+//! and, for the paper's Table-3 shape, [`grouped_report`] collapses one
+//! axis (typically `seed`) into mean ± std per remaining cell.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::config::{ExperimentCfg, FleetSpec};
+use crate::config::params::{bindings_label, Binding, ParamSpace, ParamValue, SpecOverlay, SweepAxis};
+use crate::config::ExperimentCfg;
 use crate::fl::observer::NullObserver;
-use crate::report::{compare_runs, CompareReport, Table};
+use crate::report::{
+    aggregate, compare_runs, time_to_target, CompareReport, GroupRow, GroupedReport, Table,
+    Target, TargetMetric,
+};
 use crate::sim::experiment::{resume_run, Experiment};
 use crate::store::checkpoint::CheckpointObserver;
-use crate::store::schema::{CampaignManifest, CellState, RunStatus, CAMPAIGN_SCHEMA_VERSION};
+use crate::store::schema::{
+    CampaignManifest, CellState, RunManifest, RunStatus, CAMPAIGN_SCHEMA_VERSION,
+};
 use crate::store::RunStore;
 use crate::util::json::Json;
 use crate::util::unix_now;
 
-/// A grid of experiments over one base config. Every axis must be
-/// non-empty; the cross product expands in a fixed order (strategies
-/// outermost, then seeds, fleets, T_th factors), so cell indices and
-/// labels are deterministic — which is what lets an interrupted campaign
-/// find its cells again.
+/// A grid of experiments over one base config: the cross product of the
+/// sweep axes, expanded in a fixed order (first axis outermost), so cell
+/// indices and labels are deterministic — which is what lets an
+/// interrupted campaign find its cells again.
 #[derive(Clone, Debug)]
 pub struct CampaignCfg {
     pub name: String,
-    /// Shared knobs (model, rounds, lr, ...); the grid axes override its
-    /// strategy / seed / fleet / t_th_factor per cell.
+    /// Shared knobs; each cell applies its axis bindings (then the `set`
+    /// overlay) on top.
     pub base: ExperimentCfg,
-    pub strategies: Vec<String>,
-    pub seeds: Vec<u64>,
-    pub fleets: Vec<FleetSpec>,
-    pub t_th_factors: Vec<f64>,
+    /// Grid dimensions over registered parameter keys. Empty = one cell
+    /// running the base config as-is.
+    pub axes: Vec<SweepAxis>,
+    /// The CLI `--set` layer, applied after the axis bindings in every
+    /// cell (precedence: base < axis < set).
+    pub set: SpecOverlay,
     /// Checkpoint cadence inside each cell (rounds).
     pub checkpoint_every: usize,
     /// Concurrent cells; 0 = one per host core. Purely a wall-clock knob:
@@ -73,16 +93,14 @@ pub struct CampaignCfg {
 }
 
 impl CampaignCfg {
-    /// A 1×1×1×1 grid over the base config's own values; widen the axes
-    /// from there.
+    /// An axis-less campaign (one cell, the base config); add dimensions
+    /// with [`CampaignCfg::axis`].
     pub fn new(name: impl Into<String>, base: ExperimentCfg) -> CampaignCfg {
         CampaignCfg {
             name: name.into(),
-            strategies: vec![base.strategy.clone()],
-            seeds: vec![base.seed],
-            fleets: vec![base.fleet.clone()],
-            t_th_factors: vec![base.t_th_factor],
             base,
+            axes: Vec::new(),
+            set: SpecOverlay::new(),
             checkpoint_every: 5,
             workers: 0,
             halt_after: None,
@@ -91,142 +109,173 @@ impl CampaignCfg {
         }
     }
 
-    /// The grid, expanded in deterministic order.
-    pub fn cells(&self) -> anyhow::Result<Vec<CampaignCell>> {
+    /// Add one sweep axis from a `key=v1,v2,...` spec (the `--sweep`
+    /// syntax; fleet values split on ';').
+    pub fn axis(&mut self, spec: &str) -> anyhow::Result<&mut CampaignCfg> {
+        self.push_axis(SweepAxis::parse(ParamSpace::shared(), spec)?)?;
+        Ok(self)
+    }
+
+    fn push_axis(&mut self, axis: SweepAxis) -> anyhow::Result<()> {
         anyhow::ensure!(
-            !self.strategies.is_empty()
-                && !self.seeds.is_empty()
-                && !self.fleets.is_empty()
-                && !self.t_th_factors.is_empty(),
-            "campaign {:?}: every grid axis needs at least one value",
-            self.name
+            !self.axes.iter().any(|a| a.key == axis.key),
+            "campaign {:?}: axis {:?} specified twice",
+            self.name,
+            axis.key
         );
+        self.axes.push(axis);
+        Ok(())
+    }
+
+    /// The grid, expanded in deterministic order (first axis outermost).
+    pub fn cells(&self) -> anyhow::Result<Vec<CampaignCell>> {
         anyhow::ensure!(self.checkpoint_every >= 1, "checkpoint interval must be >= 1");
-        let mut cells = Vec::new();
-        for strategy in &self.strategies {
-            for &seed in &self.seeds {
-                for fleet in &self.fleets {
-                    for &t_th in &self.t_th_factors {
-                        cells.push(CampaignCell {
-                            index: cells.len(),
-                            strategy: strategy.clone(),
-                            seed,
-                            fleet: fleet.clone(),
-                            t_th_factor: t_th,
-                        });
-                    }
+        for axis in &self.axes {
+            anyhow::ensure!(
+                !axis.values.is_empty(),
+                "campaign {:?}: axis {:?} has no values",
+                self.name,
+                axis.key
+            );
+            anyhow::ensure!(
+                self.axes.iter().filter(|a| a.key == axis.key).count() == 1,
+                "campaign {:?}: axis {:?} specified twice",
+                self.name,
+                axis.key
+            );
+        }
+        let mut cells = vec![CampaignCell { index: 0, bindings: Vec::new() }];
+        for axis in &self.axes {
+            let mut next = Vec::with_capacity(cells.len() * axis.values.len());
+            for cell in &cells {
+                for v in &axis.values {
+                    let mut bindings = cell.bindings.clone();
+                    bindings.push(Binding { key: axis.key.clone(), value: v.clone() });
+                    next.push(CampaignCell { index: next.len(), bindings });
                 }
             }
+            cells = next;
+        }
+        for (i, c) in cells.iter_mut().enumerate() {
+            c.index = i;
         }
         Ok(cells)
     }
 
-    /// The experiment a cell runs: the base config with the cell's axis
-    /// values (plus this invocation's kill switch) applied.
-    pub fn cell_cfg(&self, cell: &CampaignCell) -> ExperimentCfg {
-        let mut cfg =
-            self.base.with_axes(&cell.strategy, cell.seed, &cell.fleet, cell.t_th_factor);
+    /// The experiment a cell runs: base config, the cell's axis bindings,
+    /// then the `set` overlay (plus this invocation's kill switch).
+    pub fn cell_cfg(&self, cell: &CampaignCell) -> anyhow::Result<ExperimentCfg> {
+        let space = ParamSpace::shared();
+        let mut cfg = self.base.clone();
+        for b in &cell.bindings {
+            space.resolve(&b.key)?.apply(&mut cfg, &b.value)?;
+        }
+        self.set.apply(space, &mut cfg)?;
         cfg.halt_after = self.halt_after;
         cfg.verbose = false;
         cfg.record_selections = false;
-        cfg
+        Ok(cfg)
     }
 
-    /// Grid spec snapshot for the campaign manifest. Process knobs
-    /// (workers, kill switches, verbosity) stay out, like
+    /// Grid spec snapshot for the campaign manifest (schema v2). Process
+    /// knobs (workers, kill switches, verbosity) stay out, like
     /// `ExperimentCfg::to_json` keeps `halt_after` out of run snapshots.
     pub fn spec_to_json(&self) -> Json {
         Json::obj(vec![
             ("base", self.base.to_json()),
-            (
-                "strategies",
-                Json::Arr(self.strategies.iter().map(|s| Json::Str(s.clone())).collect()),
-            ),
-            // u64 seeds ride strings, like everywhere else in the schema
-            (
-                "seeds",
-                Json::Arr(self.seeds.iter().map(|s| Json::Str(format!("{s}"))).collect()),
-            ),
-            (
-                "fleets",
-                Json::Arr(self.fleets.iter().map(|f| Json::Str(f.label())).collect()),
-            ),
-            ("t_th_factors", Json::from_f64s(&self.t_th_factors)),
+            ("set", self.set.to_json()),
+            ("axes", Json::Arr(self.axes.iter().map(SweepAxis::to_json).collect())),
             ("checkpoint_every", Json::Num(self.checkpoint_every as f64)),
         ])
     }
 
     /// Rebuild a grid from a manifest's spec snapshot (the bare
-    /// `campaign run --name <x>` resume path).
+    /// `campaign run --name <x>` resume path). Accepts both the current
+    /// axes form and the v1 fixed-four-axes form, which converts to the
+    /// equivalent `strategy` / `seed` / `fleet` / `time.t_th_factor`
+    /// axes in the original nesting order — cell index i maps to cell i.
     pub fn from_spec_json(name: &str, j: &Json) -> anyhow::Result<CampaignCfg> {
-        let strategies = j
-            .arr("strategies")?
-            .iter()
-            .map(|s| {
-                s.as_str()
-                    .map(str::to_string)
-                    .ok_or_else(|| anyhow::anyhow!("spec strategy not a string"))
-            })
-            .collect::<anyhow::Result<Vec<_>>>()?;
-        let seeds = j
-            .arr("seeds")?
-            .iter()
-            .map(|s| match s {
-                Json::Str(s) => s.parse().map_err(|e| anyhow::anyhow!("spec seed {s:?}: {e}")),
-                Json::Num(x) => Ok(*x as u64),
-                other => anyhow::bail!("spec seed {other:?} not a number or string"),
-            })
-            .collect::<anyhow::Result<Vec<_>>>()?;
-        let fleets = j
-            .arr("fleets")?
-            .iter()
-            .map(|s| {
-                FleetSpec::parse(
-                    s.as_str().ok_or_else(|| anyhow::anyhow!("spec fleet not a string"))?,
-                )
-            })
-            .collect::<anyhow::Result<Vec<_>>>()?;
-        let t_th_factors = j
-            .arr("t_th_factors")?
-            .iter()
-            .map(|x| x.as_f64().ok_or_else(|| anyhow::anyhow!("spec t_th not a number")))
-            .collect::<anyhow::Result<Vec<_>>>()?;
-        Ok(CampaignCfg {
-            name: name.to_string(),
-            base: ExperimentCfg::from_json(j.req("base")?)?,
-            strategies,
-            seeds,
-            fleets,
-            t_th_factors,
-            checkpoint_every: j.u("checkpoint_every").unwrap_or(5),
-            workers: 0,
-            halt_after: None,
-            halt_after_cells: None,
-            verbose: false,
-        })
+        let mut cfg = CampaignCfg::new(name.to_string(), ExperimentCfg::from_json(j.req("base")?)?);
+        cfg.checkpoint_every = j.u("checkpoint_every").unwrap_or(5);
+        if j.get("strategies").is_some() {
+            // v1 spec: four fixed arrays.
+            let strategies = j
+                .arr("strategies")?
+                .iter()
+                .map(|s| {
+                    s.as_str()
+                        .map(|s| ParamValue::Str(s.to_string()))
+                        .ok_or_else(|| anyhow::anyhow!("spec strategy not a string"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let seeds = j
+                .arr("seeds")?
+                .iter()
+                .map(|s| match s {
+                    Json::Str(s) => s
+                        .parse()
+                        .map(ParamValue::U64)
+                        .map_err(|e| anyhow::anyhow!("spec seed {s:?}: {e}")),
+                    Json::Num(x) => Ok(ParamValue::U64(*x as u64)),
+                    other => anyhow::bail!("spec seed {other:?} not a number or string"),
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let fleets = j
+                .arr("fleets")?
+                .iter()
+                .map(|s| {
+                    let s = s
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("spec fleet not a string"))?;
+                    Ok(ParamValue::Fleet(crate::config::FleetSpec::parse(s)?))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let t_ths = j
+                .arr("t_th_factors")?
+                .iter()
+                .map(|x| {
+                    x.as_f64()
+                        .map(ParamValue::F64)
+                        .ok_or_else(|| anyhow::anyhow!("spec t_th not a number"))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            for (key, values) in [
+                ("strategy", strategies),
+                ("seed", seeds),
+                ("fleet", fleets),
+                ("time.t_th_factor", t_ths),
+            ] {
+                anyhow::ensure!(!values.is_empty(), "v1 spec axis {key} is empty");
+                cfg.push_axis(SweepAxis { key: key.to_string(), values })?;
+            }
+            return Ok(cfg);
+        }
+        let space = ParamSpace::shared();
+        cfg.set = match j.get("set") {
+            None => SpecOverlay::new(),
+            Some(v) => SpecOverlay::from_json(space, v)?,
+        };
+        for axis in j.arr("axes")? {
+            cfg.push_axis(SweepAxis::from_json(space, axis)?)?;
+        }
+        Ok(cfg)
     }
 }
 
-/// One point of the grid.
+/// One point of the grid: its index in expansion order and the axis
+/// bindings that define it.
 #[derive(Clone, Debug)]
 pub struct CampaignCell {
     pub index: usize,
-    pub strategy: String,
-    pub seed: u64,
-    pub fleet: FleetSpec,
-    pub t_th_factor: f64,
+    pub bindings: Vec<Binding>,
 }
 
 impl CampaignCell {
-    /// Deterministic human-readable cell name, unique within the grid.
+    /// Deterministic cell identity, unique within the grid: the rendered
+    /// axis overlay (`strategy=fedavg,seed=1`; "base" for an axis-less
+    /// campaign).
     pub fn label(&self) -> String {
-        format!(
-            "{}-s{}-f{}-t{}",
-            self.strategy,
-            self.seed,
-            self.fleet.label(),
-            self.t_th_factor
-        )
+        bindings_label(&self.bindings)
     }
 }
 
@@ -289,10 +338,44 @@ impl CampaignOutcome {
     }
 }
 
+/// Upgrade a v1 campaign manifest in place: the spec converts to axes
+/// form and every cell label is rewritten to the overlay rendering, with
+/// run assignments preserved by index (v1 expansion order == the
+/// converted axes' expansion order). Runs as one locked transaction
+/// ([`RunStore::update_campaign`]) so a concurrent campaign process
+/// claiming cells — or migrating too — can never lose writes: the
+/// manifest is re-read under the lock, and a raced migration that
+/// already upgraded it is a no-op.
+fn migrate_campaign(store: &RunStore, name: &str) -> anyhow::Result<CampaignManifest> {
+    store.update_campaign(name, |mut m| {
+        if m.schema_version >= CAMPAIGN_SCHEMA_VERSION {
+            return Ok(m); // another process migrated between our load and lock
+        }
+        let cfg = CampaignCfg::from_spec_json(&m.name, &m.spec)
+            .map_err(|e| anyhow::anyhow!("campaign {:?}: migrating v1 spec: {e}", m.name))?;
+        let cells = cfg.cells()?;
+        anyhow::ensure!(
+            cells.len() == m.cells.len(),
+            "campaign {:?}: v1 manifest has {} cells but its spec expands to {}",
+            m.name,
+            m.cells.len(),
+            cells.len()
+        );
+        for (cell, state) in cells.iter().zip(m.cells.iter_mut()) {
+            state.label = cell.label();
+        }
+        m.spec = cfg.spec_to_json();
+        m.schema_version = CAMPAIGN_SCHEMA_VERSION;
+        m.updated_unix = unix_now();
+        Ok(m)
+    })
+}
+
 /// Load the campaign's persisted state, or register it on first run. A
 /// pre-existing campaign must agree on the expanded grid — resuming with
 /// a *different* grid under the same name is almost certainly a mistake,
-/// so it fails loudly instead of silently re-mapping cells.
+/// so it fails loudly instead of silently re-mapping cells. Manifests
+/// from older schema versions are migrated first.
 fn load_or_create_manifest(
     store: &RunStore,
     cfg: &CampaignCfg,
@@ -300,7 +383,10 @@ fn load_or_create_manifest(
 ) -> anyhow::Result<CampaignManifest> {
     let labels: Vec<String> = cells.iter().map(CampaignCell::label).collect();
     if store.campaign_exists(&cfg.name) {
-        let m = store.load_campaign(&cfg.name)?;
+        let mut m = store.load_campaign(&cfg.name)?;
+        if m.schema_version < CAMPAIGN_SCHEMA_VERSION {
+            m = migrate_campaign(store, &cfg.name)?;
+        }
         let have: Vec<&str> = m.cells.iter().map(|c| c.label.as_str()).collect();
         let want: Vec<&str> = labels.iter().map(String::as_str).collect();
         anyhow::ensure!(
@@ -379,13 +465,14 @@ fn run_cell(
                 // once; if we lose, the winner's run is authoritative and
                 // may be executing right now in another process — leave
                 // it to them.
-                let fresh = store.fresh_run_id(&cell.strategy, cell.seed)?;
+                let exp_cfg = cfg.cell_cfg(cell)?;
+                let fresh = store.fresh_run_id(&exp_cfg.strategy, exp_cfg.seed)?;
                 let winner =
                     store.claim_campaign_cell(&cfg.name, cell.index, Some(id.as_str()), &fresh)?;
                 if winner != fresh {
                     return Ok((winner, CellRun::Pending));
                 }
-                return run_fresh_cell(store, cfg, cell, fresh);
+                return run_fresh_cell(store, cfg, cell, exp_cfg, fresh);
             }
         }
     }
@@ -393,12 +480,13 @@ fn run_cell(
     // so a kill at any later point still finds the cell's run. If a
     // concurrent campaign process claimed the cell between our read and
     // the CAS, defer to its run (our reserved id stays an empty dir).
-    let id = store.fresh_run_id(&cell.strategy, cell.seed)?;
+    let exp_cfg = cfg.cell_cfg(cell)?;
+    let id = store.fresh_run_id(&exp_cfg.strategy, exp_cfg.seed)?;
     let winner = store.claim_campaign_cell(&cfg.name, cell.index, None, &id)?;
     if winner != id {
         return Ok((winner, CellRun::Pending));
     }
-    run_fresh_cell(store, cfg, cell, id)
+    run_fresh_cell(store, cfg, cell, exp_cfg, id)
 }
 
 /// Fresh execution of a cell into an already-claimed run id.
@@ -406,18 +494,19 @@ fn run_fresh_cell(
     store: &RunStore,
     cfg: &CampaignCfg,
     cell: &CampaignCell,
+    exp_cfg: ExperimentCfg,
     id: String,
 ) -> anyhow::Result<(String, CellRun)> {
-    let exp_cfg = cfg.cell_cfg(cell);
+    let strategy = exp_cfg.strategy.clone();
     let mut exp = Experiment::build(exp_cfg)?;
     let mut ckpt = CheckpointObserver::create_as(
         store,
         &exp.cfg,
-        &cell.strategy,
+        &strategy,
         cfg.checkpoint_every,
         id.clone(),
     )?;
-    exp.run_from(Some(&cell.strategy), &mut ckpt, None)?;
+    exp.run_from(Some(&strategy), &mut ckpt, None)?;
     if let Some(e) = ckpt.take_error() {
         anyhow::bail!("cell {}: persisting run state failed: {e}", cell.label());
     }
@@ -453,7 +542,7 @@ pub fn run_campaign(store: &RunStore, cfg: &CampaignCfg) -> anyhow::Result<Campa
         0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         n => n,
     };
-    // cells() guarantees at least one cell, so the clamp is well-formed
+    // cells() always yields at least one cell, so the clamp is well-formed
     let workers = requested.clamp(1, cells.len());
 
     std::thread::scope(|scope| {
@@ -551,7 +640,7 @@ pub fn status_table(store: &RunStore, m: &CampaignManifest) -> Table {
 pub fn report(
     store: &RunStore,
     m: &CampaignManifest,
-    target: Option<f64>,
+    target: Target,
     baseline: Option<&str>,
 ) -> anyhow::Result<CompareReport> {
     let mut manifests = Vec::new();
@@ -582,8 +671,151 @@ pub fn report(
             .position(|r| r.strategy == "fedavg")
             .unwrap_or(0),
     };
-    let refs: Vec<&crate::store::schema::RunManifest> = manifests.iter().collect();
+    let refs: Vec<&RunManifest> = manifests.iter().collect();
     Ok(compare_runs(&refs, target, base_idx))
+}
+
+/// The paper's Table-3 shape: collapse one axis (`over`, typically
+/// `seed`) into mean ± std per remaining cell — final accuracy,
+/// time-to-target, and speedup vs the matched baseline cell (same
+/// remaining bindings, the baseline strategy, same collapsed-axis value).
+/// `baseline` names a strategy on the grid's `strategy` axis; it defaults
+/// to "fedavg" when swept, else speedup columns are N/A.
+pub fn grouped_report(
+    store: &RunStore,
+    m: &CampaignManifest,
+    over: &str,
+    target: Target,
+    baseline: Option<&str>,
+) -> anyhow::Result<GroupedReport> {
+    let cfg = CampaignCfg::from_spec_json(&m.name, &m.spec)?;
+    anyhow::ensure!(
+        cfg.axes.iter().any(|a| a.key == over),
+        "campaign {:?} has no {over:?} axis to aggregate over (axes: {})",
+        m.name,
+        cfg.axes.iter().map(|a| a.key.as_str()).collect::<Vec<_>>().join(", ")
+    );
+    let cells = cfg.cells()?;
+    anyhow::ensure!(
+        cells.len() == m.cells.len(),
+        "campaign {:?}: manifest has {} cells but its spec expands to {}",
+        m.name,
+        m.cells.len(),
+        cells.len()
+    );
+
+    // Stored runs by cell index; a label -> index map for baseline lookup.
+    let mut runs: Vec<Option<RunManifest>> = Vec::with_capacity(cells.len());
+    let mut index_of = std::collections::HashMap::new();
+    for cell in &cells {
+        index_of.insert(cell.label(), cell.index);
+        runs.push(
+            m.cells[cell.index]
+                .run_id
+                .as_ref()
+                .and_then(|id| store.load_manifest(id).ok()),
+        );
+    }
+    anyhow::ensure!(
+        runs.iter().any(Option::is_some),
+        "campaign {:?} has no stored runs to report on yet",
+        m.name
+    );
+
+    // Resolve the target once, over every stored run (compare_runs'
+    // Default rule, grid-wide).
+    let (metric, target) = match target {
+        Target::Acc(a) => (TargetMetric::Acc, a),
+        Target::Loss(l) => (TargetMetric::Loss, l),
+        Target::Default => {
+            let least = runs
+                .iter()
+                .flatten()
+                .map(|r| r.final_acc().unwrap_or(0.0))
+                .fold(f64::INFINITY, f64::min);
+            (TargetMetric::Acc, 0.95 * least)
+        }
+    };
+
+    // Baseline strategy: explicit, else "fedavg" if the strategy axis
+    // sweeps it, else none (no speedup columns).
+    let strategy_axis = cfg.axes.iter().find(|a| a.key == "strategy");
+    let baseline = match baseline {
+        Some(b) => {
+            let axis = strategy_axis.ok_or_else(|| {
+                anyhow::anyhow!("campaign {:?} has no strategy axis to take a baseline from", m.name)
+            })?;
+            anyhow::ensure!(
+                axis.values.iter().any(|v| v.render() == b),
+                "baseline strategy {b:?} is not on the strategy axis",
+            );
+            Some(b.to_string())
+        }
+        None => strategy_axis
+            .and_then(|a| a.values.iter().find(|v| v.render() == "fedavg"))
+            .map(|v| v.render()),
+    };
+
+    // The matched baseline cell of a member: same bindings, with the
+    // strategy binding swapped for the baseline strategy.
+    let baseline_tta = |cell: &CampaignCell| -> Option<f64> {
+        let base = baseline.as_deref()?;
+        let mut bindings = cell.bindings.clone();
+        let slot = bindings.iter_mut().find(|b| b.key == "strategy")?;
+        slot.value = ParamValue::Str(base.to_string());
+        let idx = *index_of.get(&bindings_label(&bindings))?;
+        runs[idx]
+            .as_ref()
+            .and_then(|r| time_to_target(&r.records, metric, target))
+    };
+
+    // Group cells by their bindings minus the collapsed axis, in
+    // first-seen (expansion) order.
+    let mut order: Vec<String> = Vec::new();
+    let mut groups: std::collections::HashMap<String, Vec<usize>> = std::collections::HashMap::new();
+    for cell in &cells {
+        let rest: Vec<Binding> =
+            cell.bindings.iter().filter(|b| b.key != over).cloned().collect();
+        let label = bindings_label(&rest);
+        if !groups.contains_key(&label) {
+            order.push(label.clone());
+        }
+        groups.entry(label).or_default().push(cell.index);
+    }
+
+    let rows = order
+        .into_iter()
+        .map(|label| {
+            let members = &groups[&label];
+            let mut accs = Vec::new();
+            let mut ttas = Vec::new();
+            let mut speedups = Vec::new();
+            let mut stored = 0;
+            for &idx in members {
+                let Some(run) = &runs[idx] else { continue };
+                stored += 1;
+                if let Some(a) = run.final_acc() {
+                    accs.push(a);
+                }
+                let tta = time_to_target(&run.records, metric, target);
+                if let Some(t) = tta {
+                    ttas.push(t);
+                    if let Some(tb) = baseline_tta(&cells[idx]) {
+                        speedups.push(tb / t.max(1e-9));
+                    }
+                }
+            }
+            GroupRow {
+                label,
+                cells: stored,
+                final_acc: aggregate(&accs),
+                time_to_target: aggregate(&ttas),
+                speedup_vs_baseline: aggregate(&speedups),
+            }
+        })
+        .collect();
+
+    Ok(GroupedReport { metric, target, over: over.to_string(), baseline, rows })
 }
 
 #[cfg(test)]
@@ -597,8 +829,8 @@ mod tests {
             ..Default::default()
         };
         let mut cfg = CampaignCfg::new("unit", base);
-        cfg.strategies = vec!["fedavg".into(), "fedel".into()];
-        cfg.seeds = vec![1, 2];
+        cfg.axis("strategy=fedavg,fedel").unwrap();
+        cfg.axis("seed=1,2").unwrap();
         cfg
     }
 
@@ -611,49 +843,102 @@ mod tests {
         assert_eq!(
             labels,
             vec![
-                "fedavg-s1-fsmall10-t1",
-                "fedavg-s2-fsmall10-t1",
-                "fedel-s1-fsmall10-t1",
-                "fedel-s2-fsmall10-t1",
+                "strategy=fedavg,seed=1",
+                "strategy=fedavg,seed=2",
+                "strategy=fedel,seed=1",
+                "strategy=fedel,seed=2",
             ]
         );
         for (i, c) in cells.iter().enumerate() {
             assert_eq!(c.index, i);
         }
-        // empty axis rejected
-        let mut bad = grid();
-        bad.seeds.clear();
-        assert!(bad.cells().is_err());
+        // an axis-less campaign is one base cell
+        let solo = CampaignCfg::new("solo", ExperimentCfg::default());
+        let cells = solo.cells().unwrap();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].label(), "base");
+        // duplicate axes rejected
+        let mut dup = grid();
+        assert!(dup.axis("seed=3").is_err());
     }
 
     #[test]
-    fn cell_cfg_applies_axes_and_kill_switch() {
+    fn cell_cfg_applies_axes_set_and_kill_switch() {
         let mut cfg = grid();
         cfg.halt_after = Some(2);
+        cfg.axis("data.alpha=0.1,0.5").unwrap();
+        cfg.axis("strategy.fedel.harmonize_weight=0.4,0.8").unwrap();
         let cells = cfg.cells().unwrap();
-        let c = cfg.cell_cfg(&cells[3]);
+        assert_eq!(cells.len(), 16);
+        let c = cfg.cell_cfg(&cells[15]).unwrap();
         assert_eq!(c.strategy, "fedel");
         assert_eq!(c.seed, 2);
+        assert_eq!(c.alpha, 0.5);
+        assert_eq!(
+            c.strategy_params,
+            vec![("strategy.fedel.harmonize_weight".to_string(), 0.8)]
+        );
         assert_eq!(c.halt_after, Some(2));
         assert_eq!(c.model, "mock:4x20");
+        // the --set layer wins over an axis binding for the same key
+        let space = ParamSpace::shared();
+        let mut with_set = grid();
+        with_set.set = SpecOverlay::parse(space, &["seed=9", "train.lr=0.25"]).unwrap();
+        let cells = with_set.cells().unwrap();
+        let c = with_set.cell_cfg(&cells[0]).unwrap();
+        assert_eq!(c.seed, 9, "--set beats the seed axis");
+        assert_eq!(c.lr, 0.25);
     }
 
     #[test]
     fn spec_round_trips_through_json_text() {
         let mut cfg = grid();
-        cfg.fleets = vec![FleetSpec::Small10, FleetSpec::Scales(vec![1.0, 2.5])];
-        cfg.t_th_factors = vec![0.8, 1.25];
-        cfg.seeds = vec![(1u64 << 53) + 1, 7];
+        cfg.axis("fleet=small10;1,2.5").unwrap();
+        cfg.axis("time.t_th_factor=0.8,1.25").unwrap();
+        cfg.axis("strategy.fedel.harmonize_weight=0.4,0.6").unwrap();
+        cfg.set = SpecOverlay::parse(ParamSpace::shared(), &["train.lr=0.125"]).unwrap();
         let text = cfg.spec_to_json().to_string_pretty();
         let back = CampaignCfg::from_spec_json("unit", &Json::parse(&text).unwrap()).unwrap();
-        assert_eq!(back.strategies, cfg.strategies);
-        assert_eq!(back.seeds, cfg.seeds, "u64 seeds must survive the string path");
-        assert_eq!(back.fleets, cfg.fleets);
-        assert_eq!(back.t_th_factors, cfg.t_th_factors);
+        assert_eq!(back.axes, cfg.axes);
+        assert_eq!(back.set, cfg.set);
         assert_eq!(back.base.model, cfg.base.model);
         assert_eq!(
             back.cells().unwrap().iter().map(CampaignCell::label).collect::<Vec<_>>(),
             cfg.cells().unwrap().iter().map(CampaignCell::label).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn v1_spec_converts_to_equivalent_axes() {
+        // A spec exactly as PR-3-era code persisted it.
+        let v1 = Json::parse(
+            r#"{
+                "base": {"model": "mock:4x20", "rounds": 4, "seed": "42"},
+                "strategies": ["fedavg", "fedel"],
+                "seeds": ["1", "2"],
+                "fleets": ["small10"],
+                "t_th_factors": [1],
+                "checkpoint_every": 2
+            }"#,
+        )
+        .unwrap();
+        let cfg = CampaignCfg::from_spec_json("legacy", &v1).unwrap();
+        assert_eq!(cfg.checkpoint_every, 2);
+        assert_eq!(cfg.axes.len(), 4);
+        let labels: Vec<String> =
+            cfg.cells().unwrap().iter().map(CampaignCell::label).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "strategy=fedavg,seed=1,fleet=small10,time.t_th_factor=1",
+                "strategy=fedavg,seed=2,fleet=small10,time.t_th_factor=1",
+                "strategy=fedel,seed=1,fleet=small10,time.t_th_factor=1",
+                "strategy=fedel,seed=2,fleet=small10,time.t_th_factor=1",
+            ]
+        );
+        // converted specs re-serialize in v2 form
+        let v2 = cfg.spec_to_json();
+        assert!(v2.get("strategies").is_none());
+        assert_eq!(v2.arr("axes").unwrap().len(), 4);
     }
 }

@@ -21,7 +21,7 @@ use crate::runtime::{Engine, MockEngine};
 use crate::sim::fleet::{build_fleet, fastest, slowest};
 use crate::store::checkpoint::CheckpointObserver;
 use crate::store::RunStore;
-use crate::strategies::{by_name, FleetCtx};
+use crate::strategies::FleetCtx;
 use crate::timing::{DeviceProfile, TimingCfg, TimingModel};
 
 /// A fully wired experiment, reusable across strategies (the expensive
@@ -134,7 +134,16 @@ impl Experiment {
         resume: Option<ResumeState>,
     ) -> anyhow::Result<ExperimentResult> {
         let name = strategy_override.unwrap_or(&self.cfg.strategy).to_string();
-        let mut strategy = by_name(&name, &self.ctx, self.cfg.beta, self.cfg.seed)?;
+        // Built through the registry so the config's parameter bag
+        // (`--set strategy.<s>.<p>=v`, swept axes) reaches the builder;
+        // cfg.beta keeps seeding the FedEL family's harmonize_weight.
+        let mut strategy = crate::strategies::registry::builtin().build(
+            &name,
+            &self.ctx,
+            self.cfg.seed,
+            self.cfg.beta,
+            &self.cfg.strategy_params,
+        )?;
         let server_cfg = ServerCfg {
             rounds: self.cfg.rounds,
             eval_every: self.cfg.eval_every,

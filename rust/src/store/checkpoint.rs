@@ -22,6 +22,14 @@ pub struct CheckpointObserver<'s> {
     store: &'s RunStore,
     manifest: RunManifest,
     every: usize,
+    /// Optional wall-clock cadence (`--checkpoint-secs`): also persist
+    /// whenever this much real time has passed since the last persisted
+    /// checkpoint. The round cadence still applies; whichever trips first
+    /// wins. Wall-clock checkpoints never affect results — they only
+    /// bound how much recomputation a kill can cost, which matters for
+    /// PJRT workloads whose round cost varies.
+    secs: Option<f64>,
+    last_persist: std::time::Instant,
     error: Option<anyhow::Error>,
 }
 
@@ -66,13 +74,37 @@ impl<'s> CheckpointObserver<'s> {
             final_state: None,
         };
         store.save_manifest(&manifest)?;
-        Ok(CheckpointObserver { store, manifest, every, error: None })
+        Ok(CheckpointObserver {
+            store,
+            manifest,
+            every,
+            secs: None,
+            last_persist: std::time::Instant::now(),
+            error: None,
+        })
     }
 
     /// Continue checkpointing an existing run (the resume path); the
     /// manifest should already be truncated to its checkpoint.
     pub fn resume(store: &'s RunStore, manifest: RunManifest, every: usize) -> Self {
-        CheckpointObserver { store, manifest, every: every.max(1), error: None }
+        CheckpointObserver {
+            store,
+            manifest,
+            every: every.max(1),
+            secs: None,
+            last_persist: std::time::Instant::now(),
+            error: None,
+        }
+    }
+
+    /// Add a wall-clock cadence on top of the round cadence
+    /// (`--checkpoint-secs`): checkpoint after any round when `secs` of
+    /// real time have elapsed since the last persisted checkpoint. Useful
+    /// when round cost varies (real PJRT workloads) and a pure round
+    /// count would leave long uncovered stretches.
+    pub fn every_secs(mut self, secs: Option<f64>) -> Self {
+        self.secs = secs;
+        self
     }
 
     pub fn run_id(&self) -> &str {
@@ -98,9 +130,15 @@ impl RoundObserver for CheckpointObserver<'_> {
     }
 
     fn on_server_state(&mut self, st: &ServerState<'_>) {
-        if st.completed % self.every != 0 {
+        let round_due = st.completed % self.every == 0;
+        let clock_due = self
+            .secs
+            .map(|s| self.last_persist.elapsed().as_secs_f64() >= s)
+            .unwrap_or(false);
+        if !round_due && !clock_due {
             return;
         }
+        self.last_persist = std::time::Instant::now();
         let r = self.store.put_params(st.global).and_then(|params| {
             self.manifest.checkpoint = Some(Checkpoint {
                 completed: st.completed,

@@ -464,6 +464,29 @@ impl RunStore {
         write_atomic(&self.campaign_path(&m.name), m.to_json().to_string_pretty().as_bytes())
     }
 
+    /// Load-mutate-store a campaign manifest as **one locked
+    /// transaction**: the manifest is re-read from disk under the store
+    /// lock, transformed, and written back before the lock releases — so
+    /// the update can never erase a concurrent writer's changes (the
+    /// schema-migration path uses this; a plain load → mutate →
+    /// [`RunStore::save_campaign`] would race `claim_campaign_cell` and
+    /// lose cell claims). `f` sees the authoritative manifest; returning
+    /// it unchanged is a no-op rewrite.
+    pub fn update_campaign<F>(&self, name: &str, f: F) -> anyhow::Result<CampaignManifest>
+    where
+        F: FnOnce(CampaignManifest) -> anyhow::Result<CampaignManifest>,
+    {
+        let _lock = self.lock()?;
+        let m = f(self.load_campaign(name)?)?;
+        anyhow::ensure!(
+            m.name == name,
+            "update_campaign must not rename {name:?} to {:?}",
+            m.name
+        );
+        write_atomic(&self.campaign_path(name), m.to_json().to_string_pretty().as_bytes())?;
+        Ok(m)
+    }
+
     /// Atomically claim a campaign cell for `run_id` — a compare-and-swap
     /// through the store lock, so concurrent campaign *processes* can
     /// never overwrite each other's cell→run assignments. The manifest is
@@ -758,6 +781,46 @@ mod tests {
             store.claim_campaign_cell("sweep", 2, None, "x").is_err(),
             "bad index must error"
         );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn update_campaign_transforms_the_authoritative_on_disk_state() {
+        use crate::store::schema::{CampaignManifest, CellState, CAMPAIGN_SCHEMA_VERSION};
+        let dir = scratch("update-campaign");
+        let store = RunStore::open(&dir).unwrap();
+        let stale = CampaignManifest {
+            schema_version: CAMPAIGN_SCHEMA_VERSION,
+            name: "sweep".into(),
+            created_unix: 0,
+            updated_unix: 0,
+            spec: crate::util::json::Json::Null,
+            cells: vec![CellState { label: "a".into(), run_id: None }],
+        };
+        store.save_campaign(&stale).unwrap();
+        // a claim lands after our (stale) load above...
+        store.claim_campaign_cell("sweep", 0, None, "fedavg-s1").unwrap();
+        // ...and an update must see it: the closure gets the on-disk
+        // manifest, not whatever the caller last loaded, so transforming
+        // labels/spec can never erase the concurrent claim.
+        let updated = store
+            .update_campaign("sweep", |mut m| {
+                assert_eq!(m.cells[0].run_id.as_deref(), Some("fedavg-s1"));
+                m.cells[0].label = "relabeled".into();
+                Ok(m)
+            })
+            .unwrap();
+        assert_eq!(updated.cells[0].run_id.as_deref(), Some("fedavg-s1"));
+        let back = store.load_campaign("sweep").unwrap();
+        assert_eq!(back.cells[0].label, "relabeled");
+        assert_eq!(back.cells[0].run_id.as_deref(), Some("fedavg-s1"));
+        // a renaming closure is rejected before anything is written
+        assert!(store
+            .update_campaign("sweep", |mut m| {
+                m.name = "other".into();
+                Ok(m)
+            })
+            .is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -235,7 +235,19 @@ impl RunManifest {
 
 /// Bump on any incompatible campaign-manifest change (independent of the
 /// run-manifest version: the two files evolve separately).
-pub const CAMPAIGN_SCHEMA_VERSION: usize = 1;
+///
+/// v1 -> v2: the spec's four fixed grid axes
+/// (`strategies`/`seeds`/`fleets`/`t_th_factors`) became generic
+/// `axes: [{key, values}]` over the typed parameter space, and cell
+/// labels derive from the resolved overlay (`strategy=fedavg,seed=1`)
+/// instead of the `fedavg-s1-...` format. v1 manifests still load;
+/// [`crate::sim::campaign`] migrates them in place on the next run so
+/// existing campaigns stay resumable.
+pub const CAMPAIGN_SCHEMA_VERSION: usize = 2;
+
+/// Oldest campaign schema [`CampaignManifest::from_json`] still accepts
+/// (the campaign runner upgrades anything older than current on load).
+pub const CAMPAIGN_SCHEMA_MIN: usize = 1;
 
 /// One grid cell's persisted assignment: the deterministic label plus the
 /// run id it was allocated (None until a worker first touches the cell).
@@ -303,9 +315,9 @@ impl CampaignManifest {
     pub fn from_json(j: &Json) -> anyhow::Result<CampaignManifest> {
         let version = j.u("schema_version")?;
         anyhow::ensure!(
-            version == CAMPAIGN_SCHEMA_VERSION,
+            (CAMPAIGN_SCHEMA_MIN..=CAMPAIGN_SCHEMA_VERSION).contains(&version),
             "campaign manifest schema v{version} unsupported \
-             (this build reads v{CAMPAIGN_SCHEMA_VERSION})"
+             (this build reads v{CAMPAIGN_SCHEMA_MIN}..v{CAMPAIGN_SCHEMA_VERSION})"
         );
         Ok(CampaignManifest {
             schema_version: version,
@@ -435,6 +447,15 @@ pub fn time_to_perplexity(records: &[RoundRecord], target: f64) -> Option<f64> {
     records
         .iter()
         .find(|r| r.eval_loss.map(|l| l.exp() <= target).unwrap_or(false))
+        .map(|r| r.sim_time)
+}
+
+/// Simulated seconds until the eval curve first reaches `target` loss
+/// (lower is better; perplexity targets are `target.ln()` here).
+pub fn time_to_loss(records: &[RoundRecord], target: f64) -> Option<f64> {
+    records
+        .iter()
+        .find(|r| r.eval_loss.map(|l| l <= target).unwrap_or(false))
         .map(|r| r.sim_time)
 }
 
@@ -581,6 +602,31 @@ mod tests {
             CampaignManifest::from_json(&Json::parse(&future.to_json().to_string_pretty()).unwrap())
                 .unwrap_err();
         assert!(err.to_string().contains("schema"), "{err}");
+    }
+
+    #[test]
+    fn campaign_manifest_accepts_v1_rejects_future() {
+        let m = CampaignManifest {
+            schema_version: 1,
+            name: "old".into(),
+            created_unix: 0,
+            updated_unix: 0,
+            spec: Json::obj(vec![("strategies", Json::from_strs(&["fedavg"]))]),
+            cells: vec![CellState { label: "fedavg-s1-fsmall10-t1".into(), run_id: None }],
+        };
+        let back = CampaignManifest::from_json(&Json::parse(&m.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back.schema_version, 1, "v1 loads unmodified; migration is the runner's job");
+    }
+
+    #[test]
+    fn time_to_loss_walks_the_loss_curve() {
+        // record() sets eval_loss = 1.0 - eval_acc
+        let records =
+            vec![record(0, None), record(1, Some(0.4)), record(2, Some(0.6)), record(3, Some(0.7))];
+        assert_eq!(time_to_loss(&records, 0.45), Some(records[2].sim_time));
+        assert_eq!(time_to_loss(&records, 0.05), None);
+        assert_eq!(time_to_loss(&records, 0.6), Some(records[1].sim_time));
     }
 
     #[test]

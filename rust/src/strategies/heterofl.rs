@@ -20,15 +20,19 @@ pub struct HeteroFl {
 }
 
 impl HeteroFl {
-    pub fn new(ctx: &FleetCtx) -> Self {
+    /// `min_width` (registry param `strategy.heterofl.min_width`) floors
+    /// the fallback for stragglers that fit no standard level — the
+    /// original's 1/8 by default.
+    pub fn new(ctx: &FleetCtx, min_width: f64) -> Self {
         let widths = (0..ctx.n_clients())
             .map(|c| {
                 let full = ctx.full_round_time(c);
                 LEVELS
                     .iter()
                     .copied()
+                    .filter(|&p| p >= min_width)
                     .find(|p| full * p * p <= ctx.t_th)
-                    .unwrap_or(LEVELS[LEVELS.len() - 1])
+                    .unwrap_or(min_width)
             })
             .collect();
         HeteroFl { widths }
@@ -78,7 +82,7 @@ mod tests {
     #[test]
     fn fast_client_full_width_slow_client_narrow() {
         let c = ctx(6, &[1.0, 4.0]);
-        let s = HeteroFl::new(&c);
+        let s = HeteroFl::new(&c, 0.125);
         assert_eq!(s.widths[0], 1.0);
         assert!(s.widths[1] <= 0.5, "slow client width {}", s.widths[1]);
     }
@@ -86,7 +90,7 @@ mod tests {
     #[test]
     fn scaled_cost_fits_threshold() {
         let c = ctx(6, &[1.0, 2.0, 3.0, 4.0]);
-        let mut s = HeteroFl::new(&c);
+        let mut s = HeteroFl::new(&c, 0.125);
         for p in s.plan_round(0, &c, &[]) {
             assert!(p.est_time <= c.t_th + 1e-9);
         }
@@ -95,7 +99,7 @@ mod tests {
     #[test]
     fn weight_tensors_masked_quadratically() {
         let c = ctx(4, &[2.0]);
-        let mut s = HeteroFl::new(&c);
+        let mut s = HeteroFl::new(&c, 0.125);
         let p = s.widths[0];
         let plans = s.plan_round(0, &c, &[]);
         if let MaskSpec::Prefix(f) = &plans[0].mask {

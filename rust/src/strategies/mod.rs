@@ -14,6 +14,7 @@ pub mod fedel;
 pub mod fiarse;
 pub mod heterofl;
 pub mod pyramidfl;
+pub mod registry;
 pub mod timelyfl;
 
 use crate::manifest::Manifest;
@@ -178,26 +179,12 @@ pub trait Strategy {
     }
 }
 
-/// Construct a strategy by table-row name.
+/// Construct a strategy by table-row name with default tunables — a thin
+/// wrapper over [`registry::builtin`] for callers without a full config
+/// (benches, quick tests). `beta` feeds the FedEL family's
+/// `harmonize_weight`; everything else takes its registered default.
 pub fn by_name(name: &str, ctx: &FleetCtx, beta: f64, seed: u64) -> anyhow::Result<Box<dyn Strategy>> {
-    use crate::window::WindowPolicy;
-    Ok(match name {
-        "fedavg" => Box::new(fedavg::FedAvg::new(crate::fl::AggregateRule::FedAvg, 0.0)),
-        "fedprox" => Box::new(fedavg::FedAvg::new(crate::fl::AggregateRule::FedAvg, 0.01)),
-        "fednova" => Box::new(fedavg::FedAvg::new(crate::fl::AggregateRule::FedNova, 0.0)),
-        "elastictrainer" => Box::new(elastic::ElasticFl::new(ctx)),
-        "heterofl" => Box::new(heterofl::HeteroFl::new(ctx)),
-        "depthfl" => Box::new(depthfl::DepthFl::new(ctx)),
-        "pyramidfl" => Box::new(pyramidfl::PyramidFl::new(ctx, seed)),
-        "timelyfl" => Box::new(timelyfl::TimelyFl::new(ctx)),
-        "fiarse" => Box::new(fiarse::Fiarse::new(ctx)),
-        "fedel" => Box::new(fedel::FedEl::new(ctx, beta, WindowPolicy::FedEl, crate::fl::AggregateRule::Masked, 0.0)),
-        "fedel-c" => Box::new(fedel::FedEl::new(ctx, beta, WindowPolicy::Collapsed, crate::fl::AggregateRule::Masked, 0.0)),
-        "fedel-norollback" => Box::new(fedel::FedEl::new(ctx, beta, WindowPolicy::NoRollback, crate::fl::AggregateRule::Masked, 0.0)),
-        "fedprox+fedel" => Box::new(fedel::FedEl::new(ctx, beta, WindowPolicy::FedEl, crate::fl::AggregateRule::Masked, 0.01)),
-        "fednova+fedel" => Box::new(fedel::FedEl::new(ctx, beta, WindowPolicy::FedEl, crate::fl::AggregateRule::FedNova, 0.0)),
-        other => anyhow::bail!("unknown strategy {other:?}"),
-    })
+    registry::builtin().build(name, ctx, seed, beta, &[])
 }
 
 /// All Table-1 row names in paper order.

@@ -22,10 +22,13 @@ pub struct PyramidFl {
 }
 
 impl PyramidFl {
-    pub fn new(ctx: &FleetCtx, seed: u64) -> Self {
+    /// `frac` / `explore` are the registry params
+    /// `strategy.pyramidfl.{frac,explore}`: the admission fraction and the
+    /// random-exploration share of it (paper defaults 0.6 / 0.1).
+    pub fn new(ctx: &FleetCtx, seed: u64, frac: f64, explore: f64) -> Self {
         PyramidFl {
-            frac: 0.6,
-            explore: 0.1,
+            frac,
+            explore,
             losses: vec![f64::MAX; ctx.n_clients()],
             seen: vec![false; ctx.n_clients()],
             rng: Rng::new(seed ^ 0x9147),
@@ -134,7 +137,7 @@ mod tests {
     #[test]
     fn selects_a_strict_subset() {
         let c = ctx(4, &[1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 1.2, 1.7, 2.2]);
-        let mut s = PyramidFl::new(&c, 3);
+        let mut s = PyramidFl::new(&c, 3, 0.6, 0.1);
         let plans = s.plan_round(0, &c, &[]);
         assert!(plans.len() < 10 && !plans.is_empty());
         let mut ids: Vec<usize> = plans.iter().map(|p| p.client).collect();
@@ -146,7 +149,7 @@ mod tests {
     #[test]
     fn unseen_clients_get_explored_first() {
         let c = ctx(4, &[1.0, 2.0, 3.0, 4.0]);
-        let mut s = PyramidFl::new(&c, 5);
+        let mut s = PyramidFl::new(&c, 5, 0.6, 0.1);
         let mut participated = vec![false; 4];
         for round in 0..6 {
             let plans = s.plan_round(round, &c, &[]);
@@ -168,7 +171,7 @@ mod tests {
         // run a few rounds, snapshot through JSON text, restore onto a
         // fresh strategy, and check the *random* exploration picks match.
         let c = ctx(4, &[1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 1.2, 1.7, 2.2]);
-        let mut a = PyramidFl::new(&c, 11);
+        let mut a = PyramidFl::new(&c, 11, 0.6, 0.1);
         for round in 0..3 {
             let plans = a.plan_round(round, &c, &[]);
             let fb = RoundFeedback {
@@ -179,7 +182,7 @@ mod tests {
         }
         let text = a.policy_state().to_string_pretty();
         let snap = Json::parse(&text).unwrap();
-        let mut b = PyramidFl::new(&c, 11);
+        let mut b = PyramidFl::new(&c, 11, 0.6, 0.1);
         b.restore_policy_state(&snap).unwrap();
         for round in 3..8 {
             let pa: Vec<usize> = a.plan_round(round, &c, &[]).iter().map(|p| p.client).collect();
@@ -191,7 +194,7 @@ mod tests {
     #[test]
     fn high_loss_clients_rank_higher() {
         let c = ctx(4, &[1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0]);
-        let mut s = PyramidFl::new(&c, 7);
+        let mut s = PyramidFl::new(&c, 7, 0.6, 0.1);
         s.explore = 0.0;
         s.frac = 0.3;
         // everyone seen; client 9 has the largest loss

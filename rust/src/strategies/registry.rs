@@ -1,0 +1,385 @@
+//! The strategy registry: the one place a policy (or ablation) plugs into
+//! the framework.
+//!
+//! Each [`StrategyDef`] names a strategy, documents it, **declares its
+//! tunable parameters** (name, default, bounds, help), and provides the
+//! builder that turns resolved parameter values into a boxed
+//! [`Strategy`]. Everything else derives from the registration:
+//!
+//! * [`crate::config::params::ParamSpace`] exposes each declared tunable
+//!   as a typed key `strategy.<strategy>.<param>`, so it is settable via
+//!   `--set` and sweepable via `--sweep` with no further Rust changes,
+//! * `train --list-strategies` prints the registry,
+//! * unknown strategy names fail with the full list and a nearest-match
+//!   suggestion.
+//!
+//! Parameter values flow in through [`crate::config::ExperimentCfg`]'s
+//! `strategy_params` bag (full keys -> f64); anything undeclared there is
+//! rejected at parse time by the param space, so builders can trust
+//! [`ResolvedParams`] to hold exactly their declared names.
+
+use std::sync::OnceLock;
+
+use super::{fedavg, fedel, FleetCtx, Strategy};
+use crate::fl::AggregateRule;
+use crate::window::WindowPolicy;
+
+/// One declared tunable of a strategy.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamSpec {
+    /// Short name; the settable key is `strategy.<strategy>.<name>`.
+    pub name: &'static str,
+    pub default: f64,
+    /// Inclusive bounds, validated at parse *and* build time.
+    pub min: f64,
+    pub max: f64,
+    pub help: &'static str,
+}
+
+/// Declared tunables resolved against a config's parameter bag: every
+/// declared name is present (bag value if bound, else the default).
+pub struct ResolvedParams {
+    vals: Vec<(&'static str, f64)>,
+}
+
+impl ResolvedParams {
+    /// Value of a declared parameter. Panics on an undeclared name — that
+    /// is a builder bug, not an input error.
+    pub fn get(&self, name: &str) -> f64 {
+        self.vals
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or_else(|| panic!("strategy builder read undeclared param {name:?}"))
+    }
+}
+
+type BuildFn = fn(&FleetCtx, u64, &ResolvedParams) -> Box<dyn Strategy>;
+
+/// One registered strategy.
+pub struct StrategyDef {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub params: Vec<ParamSpec>,
+    build: BuildFn,
+}
+
+/// All registered strategies, in Table-1-then-ablations order.
+pub struct StrategyRegistry {
+    defs: Vec<StrategyDef>,
+}
+
+/// FedEL's importance-harmonization weight β (Sec. 4.2): blended
+/// importance I = β·I_local + (1−β)·I^g. Declared by every FedEL-family
+/// row; the legacy `--beta` config field seeds its default at build time.
+const HARMONIZE: ParamSpec = ParamSpec {
+    name: "harmonize_weight",
+    default: 0.6,
+    min: 0.0,
+    max: 1.0,
+    help: "FedEL importance blend β: I = β·I_local + (1−β)·I_global",
+};
+
+const MU: ParamSpec = ParamSpec {
+    name: "mu",
+    default: 0.01,
+    min: 0.0,
+    max: 10.0,
+    help: "FedProx proximal coefficient μ (client-side pull to the global model)",
+};
+
+fn defs() -> Vec<StrategyDef> {
+    vec![
+        StrategyDef {
+            name: "fedavg",
+            summary: "full-model synchronous baseline (McMahan et al.)",
+            params: vec![],
+            build: |_, _, _| Box::new(fedavg::FedAvg::new(AggregateRule::FedAvg, 0.0)),
+        },
+        StrategyDef {
+            name: "elastictrainer",
+            summary: "importance-ranked tensor selection under a time budget",
+            params: vec![],
+            build: |ctx, _, _| Box::new(super::elastic::ElasticFl::new(ctx)),
+        },
+        StrategyDef {
+            name: "heterofl",
+            summary: "width-scaled sub-networks matched to device budgets (Diao et al.)",
+            params: vec![ParamSpec {
+                name: "min_width",
+                default: 0.125,
+                min: 0.01,
+                max: 1.0,
+                help: "narrowest width level a straggler may fall back to",
+            }],
+            build: |ctx, _, p| Box::new(super::heterofl::HeteroFl::new(ctx, p.get("min_width"))),
+        },
+        StrategyDef {
+            name: "depthfl",
+            summary: "depth-scaled sub-models via early exits (Kim et al.)",
+            params: vec![],
+            build: |ctx, _, _| Box::new(super::depthfl::DepthFl::new(ctx)),
+        },
+        StrategyDef {
+            name: "pyramidfl",
+            summary: "utility-ranked client selection, full-model training (Li et al.)",
+            params: vec![
+                ParamSpec {
+                    name: "frac",
+                    default: 0.6,
+                    min: 0.01,
+                    max: 1.0,
+                    help: "fraction of clients admitted per round",
+                },
+                ParamSpec {
+                    name: "explore",
+                    default: 0.1,
+                    min: 0.0,
+                    max: 0.99,
+                    help: "fraction of the admission budget spent on random exploration",
+                },
+            ],
+            build: |ctx, seed, p| {
+                Box::new(super::pyramidfl::PyramidFl::new(
+                    ctx,
+                    seed,
+                    p.get("frac"),
+                    p.get("explore"),
+                ))
+            },
+        },
+        StrategyDef {
+            name: "timelyfl",
+            summary: "deadline-driven adaptive partial training (Zhang et al.)",
+            params: vec![ParamSpec {
+                name: "deadline_frac",
+                default: 1.0,
+                min: 0.05,
+                max: 4.0,
+                help: "per-round deadline as a fraction of T_th (soft-training ratio)",
+            }],
+            build: |ctx, _, p| {
+                Box::new(super::timelyfl::TimelyFl::new(ctx, p.get("deadline_frac")))
+            },
+        },
+        StrategyDef {
+            name: "fiarse",
+            summary: "magnitude-thresholded submodel extraction (FIARSE)",
+            params: vec![],
+            build: |ctx, _, _| Box::new(super::fiarse::Fiarse::new(ctx)),
+        },
+        StrategyDef {
+            name: "fedel",
+            summary: "sliding-window elastic training + importance harmonization (the paper)",
+            params: vec![HARMONIZE],
+            build: |ctx, _, p| {
+                Box::new(fedel::FedEl::new(
+                    ctx,
+                    p.get("harmonize_weight"),
+                    WindowPolicy::FedEl,
+                    AggregateRule::Masked,
+                    0.0,
+                ))
+            },
+        },
+        StrategyDef {
+            name: "fedel-c",
+            summary: "FedEL ablation: collapsed (non-sliding) window",
+            params: vec![HARMONIZE],
+            build: |ctx, _, p| {
+                Box::new(fedel::FedEl::new(
+                    ctx,
+                    p.get("harmonize_weight"),
+                    WindowPolicy::Collapsed,
+                    AggregateRule::Masked,
+                    0.0,
+                ))
+            },
+        },
+        StrategyDef {
+            name: "fedel-norollback",
+            summary: "FedEL ablation: no end-of-model window rollback",
+            params: vec![HARMONIZE],
+            build: |ctx, _, p| {
+                Box::new(fedel::FedEl::new(
+                    ctx,
+                    p.get("harmonize_weight"),
+                    WindowPolicy::NoRollback,
+                    AggregateRule::Masked,
+                    0.0,
+                ))
+            },
+        },
+        StrategyDef {
+            name: "fedprox",
+            summary: "FedAvg + proximal regularization (Li et al.)",
+            params: vec![MU],
+            build: |_, _, p| Box::new(fedavg::FedAvg::new(AggregateRule::FedAvg, p.get("mu"))),
+        },
+        StrategyDef {
+            name: "fednova",
+            summary: "FedAvg with normalized averaging (Wang et al.)",
+            params: vec![],
+            build: |_, _, _| Box::new(fedavg::FedAvg::new(AggregateRule::FedNova, 0.0)),
+        },
+        StrategyDef {
+            name: "fedprox+fedel",
+            summary: "FedEL with client-side proximal regularization",
+            params: vec![HARMONIZE, MU],
+            build: |ctx, _, p| {
+                Box::new(fedel::FedEl::new(
+                    ctx,
+                    p.get("harmonize_weight"),
+                    WindowPolicy::FedEl,
+                    AggregateRule::Masked,
+                    p.get("mu"),
+                ))
+            },
+        },
+        StrategyDef {
+            name: "fednova+fedel",
+            summary: "FedEL under normalized averaging",
+            params: vec![HARMONIZE],
+            build: |ctx, _, p| {
+                Box::new(fedel::FedEl::new(
+                    ctx,
+                    p.get("harmonize_weight"),
+                    WindowPolicy::FedEl,
+                    AggregateRule::FedNova,
+                    0.0,
+                ))
+            },
+        },
+    ]
+}
+
+/// The process-wide registry (construction is cheap but allocation-happy;
+/// share one).
+pub fn builtin() -> &'static StrategyRegistry {
+    static REG: OnceLock<StrategyRegistry> = OnceLock::new();
+    REG.get_or_init(|| StrategyRegistry { defs: defs() })
+}
+
+impl StrategyRegistry {
+    pub fn defs(&self) -> &[StrategyDef] {
+        &self.defs
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.defs.iter().map(|d| d.name).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Option<&StrategyDef> {
+        self.defs.iter().find(|d| d.name == name)
+    }
+
+    /// Lookup that fails with the full roster and a nearest-match hint.
+    pub fn require(&self, name: &str) -> anyhow::Result<&StrategyDef> {
+        self.get(name).ok_or_else(|| {
+            let names = self.names();
+            let hint = crate::util::nearest_match(name, &names)
+                .map(|n| format!(" — did you mean {n:?}?"))
+                .unwrap_or_default();
+            anyhow::anyhow!("unknown strategy {name:?}{hint} (registered: {})", names.join(", "))
+        })
+    }
+
+    /// The full settable key of a declared parameter.
+    pub fn param_key(strategy: &str, param: &str) -> String {
+        format!("strategy.{strategy}.{param}")
+    }
+
+    /// The [`ParamSpec`] behind `strategy.<strategy>.<param>`, or an error
+    /// naming what that strategy actually declares.
+    pub fn param_spec(&self, strategy: &str, param: &str) -> anyhow::Result<&ParamSpec> {
+        let def = self.require(strategy)?;
+        def.params.iter().find(|p| p.name == param).ok_or_else(|| {
+            let declared: Vec<&str> = def.params.iter().map(|p| p.name).collect();
+            anyhow::anyhow!(
+                "strategy {strategy:?} declares no param {param:?} (declared: [{}])",
+                declared.join(", ")
+            )
+        })
+    }
+
+    /// Build a strategy with its declared params resolved from a config's
+    /// parameter bag (`strategy.<name>.<param>` -> f64). `beta` is the
+    /// legacy `--beta` config field: it seeds `harmonize_weight`'s default
+    /// so pre-registry callers keep working; an explicit bag binding wins.
+    pub fn build(
+        &self,
+        name: &str,
+        ctx: &FleetCtx,
+        seed: u64,
+        beta: f64,
+        bag: &[(String, f64)],
+    ) -> anyhow::Result<Box<dyn Strategy>> {
+        let def = self.require(name)?;
+        let mut vals = Vec::with_capacity(def.params.len());
+        for p in &def.params {
+            let key = StrategyRegistry::param_key(name, p.name);
+            let fallback = if p.name == HARMONIZE.name { beta } else { p.default };
+            let v = bag
+                .iter()
+                .find(|(k, _)| *k == key)
+                .map(|(_, v)| *v)
+                .unwrap_or(fallback);
+            anyhow::ensure!(
+                v >= p.min && v <= p.max,
+                "{key} = {v} out of bounds [{}, {}]",
+                p.min,
+                p.max
+            );
+            vals.push((p.name, v));
+        }
+        Ok((def.build)(ctx, seed, &ResolvedParams { vals }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::ctx;
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_table1_row_and_ablation() {
+        let reg = builtin();
+        let c = ctx(4, &[1.0, 2.0]);
+        for name in reg.names() {
+            reg.build(name, &c, 1, 0.6, &[]).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+        for name in super::super::table1_names() {
+            let s = reg.build(name, &c, 1, 0.6, &[]).unwrap();
+            assert_eq!(s.name(), name);
+        }
+    }
+
+    #[test]
+    fn unknown_strategy_suggests_nearest() {
+        let err = builtin().require("fedell").unwrap_err().to_string();
+        assert!(err.contains("did you mean \"fedel\""), "{err}");
+        assert!(err.contains("fedavg"), "roster missing: {err}");
+    }
+
+    #[test]
+    fn out_of_bounds_bag_value_rejected_at_build() {
+        let c = ctx(4, &[1.0, 2.0]);
+        let err = builtin()
+            .build("fedel", &c, 1, 0.6, &[("strategy.fedel.harmonize_weight".to_string(), 1.5)])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of bounds"), "{err}");
+        // an in-bounds binding builds fine even when the legacy beta differs
+        let bag = vec![("strategy.fedel.harmonize_weight".to_string(), 0.25)];
+        builtin().build("fedel", &c, 1, 0.9, &bag).unwrap();
+    }
+
+    #[test]
+    fn param_spec_lookup_validates_both_levels() {
+        let reg = builtin();
+        assert_eq!(reg.param_spec("fedel", "harmonize_weight").unwrap().default, 0.6);
+        let err = reg.param_spec("fedel", "mu").unwrap_err().to_string();
+        assert!(err.contains("declares no param"), "{err}");
+        assert!(reg.param_spec("nope", "x").is_err());
+    }
+}

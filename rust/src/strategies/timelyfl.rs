@@ -10,11 +10,18 @@ use super::{ClientPlan, FleetCtx, MaskSpec, Strategy};
 
 pub struct TimelyFl {
     nb: usize,
+    /// Per-round deadline as a fraction of T_th (registry param
+    /// `strategy.timelyfl.deadline_frac`; 1.0 = the shared threshold).
+    deadline_frac: f64,
 }
 
 impl TimelyFl {
-    pub fn new(ctx: &FleetCtx) -> Self {
-        TimelyFl { nb: ctx.manifest.num_blocks }
+    pub fn new(ctx: &FleetCtx, deadline_frac: f64) -> Self {
+        TimelyFl { nb: ctx.manifest.num_blocks, deadline_frac }
+    }
+
+    fn deadline(&self, ctx: &FleetCtx) -> f64 {
+        self.deadline_frac * ctx.t_th
     }
 }
 
@@ -24,27 +31,28 @@ impl Strategy for TimelyFl {
     }
 
     fn plan_round(&mut self, _round: usize, ctx: &FleetCtx, _global: &[f32]) -> Vec<ClientPlan> {
+        let deadline = self.deadline(ctx);
         (0..ctx.n_clients())
             .map(|client| {
                 // deepest prefix that fits the deadline; if even exit 1 is
                 // too slow, shed local steps instead (partial epoch).
                 let e = (1..=self.nb)
                     .rev()
-                    .find(|&e| prefix_round_time(ctx, client, e) <= ctx.t_th)
+                    .find(|&e| prefix_round_time(ctx, client, e) <= deadline)
                     .unwrap_or(1);
                 let full = prefix_round_time(ctx, client, e);
-                let steps = if full <= ctx.t_th {
+                let steps = if full <= deadline {
                     ctx.local_steps
                 } else {
-                    ((ctx.local_steps as f64 * ctx.t_th / full).floor() as usize).max(1)
+                    ((ctx.local_steps as f64 * deadline / full).floor() as usize).max(1)
                 };
                 ClientPlan {
                     client,
                     exit: e,
                     mask: MaskSpec::Tensor(prefix_mask(ctx, e)),
                     local_steps: steps,
-                    // async deadline: the round costs T_th regardless.
-                    est_time: ctx.t_th,
+                    // async deadline: the round costs the deadline regardless.
+                    est_time: deadline,
                 }
             })
             .collect()
@@ -59,16 +67,29 @@ mod tests {
     #[test]
     fn every_round_costs_the_deadline() {
         let c = ctx(8, &[1.0, 2.0, 4.0]);
-        let mut s = TimelyFl::new(&c);
+        let mut s = TimelyFl::new(&c, 1.0);
         for p in s.plan_round(0, &c, &[]) {
             assert_eq!(p.est_time, c.t_th);
         }
     }
 
     #[test]
+    fn deadline_frac_tightens_the_deadline() {
+        let c = ctx(8, &[1.0, 2.0, 4.0]);
+        let mut full = TimelyFl::new(&c, 1.0);
+        let mut tight = TimelyFl::new(&c, 0.5);
+        let plans_full = full.plan_round(0, &c, &[]);
+        let plans_tight = tight.plan_round(0, &c, &[]);
+        for (f, t) in plans_full.iter().zip(&plans_tight) {
+            assert_eq!(t.est_time, 0.5 * c.t_th);
+            assert!(t.exit <= f.exit, "tighter deadline must not deepen exits");
+        }
+    }
+
+    #[test]
     fn slow_clients_get_shallower_prefixes() {
         let c = ctx(8, &[1.0, 4.0]);
-        let mut s = TimelyFl::new(&c);
+        let mut s = TimelyFl::new(&c, 1.0);
         let plans = s.plan_round(0, &c, &[]);
         assert!(plans[1].exit < plans[0].exit);
         assert_eq!(plans[0].exit, 8);
@@ -77,7 +98,7 @@ mod tests {
     #[test]
     fn extreme_straggler_sheds_steps_not_participation() {
         let c = ctx(8, &[40.0]);
-        let mut s = TimelyFl::new(&c);
+        let mut s = TimelyFl::new(&c, 1.0);
         let plans = s.plan_round(0, &c, &[]);
         assert_eq!(plans.len(), 1, "TimelyFL keeps everyone participating");
         assert!(plans[0].local_steps < c.local_steps);

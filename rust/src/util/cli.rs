@@ -12,6 +12,10 @@ pub struct Args {
     pub subcommand: Option<String>,
     pub positional: Vec<String>,
     kv: BTreeMap<String, String>,
+    /// Every `--key value` occurrence in command-line order; repeatable
+    /// options (`--set`, `--sweep`) read all of them via [`Args::all`],
+    /// while `kv` keeps the last-wins view for single-valued options.
+    pairs: Vec<(String, String)>,
     flags: Vec<String>,
     consumed: std::cell::RefCell<Vec<String>>,
 }
@@ -26,8 +30,11 @@ impl Args {
             if let Some(stripped) = tok.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
                     a.kv.insert(k.to_string(), v.to_string());
+                    a.pairs.push((k.to_string(), v.to_string()));
                 } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    a.kv.insert(stripped.to_string(), it.next().unwrap());
+                    let v = it.next().unwrap();
+                    a.kv.insert(stripped.to_string(), v.clone());
+                    a.pairs.push((stripped.to_string(), v));
                 } else {
                     a.flags.push(stripped.to_string());
                 }
@@ -56,6 +63,17 @@ impl Args {
     pub fn get(&self, key: &str) -> Option<&str> {
         self.mark(key);
         self.kv.get(key).map(|s| s.as_str())
+    }
+
+    /// Every value a repeatable `--key value` option was given, in
+    /// command-line order (`--set a=1 --set b=2` -> ["a=1", "b=2"]).
+    pub fn all(&self, key: &str) -> Vec<&str> {
+        self.mark(key);
+        self.pairs
+            .iter()
+            .filter(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     pub fn str_or(&self, key: &str, default: &str) -> String {
@@ -153,6 +171,14 @@ mod tests {
         assert!(a.check_unused().is_err());
         let _ = a.get("typo");
         assert!(a.check_unused().is_ok());
+    }
+
+    #[test]
+    fn repeated_options_keep_every_value_in_order() {
+        let a = parse(&["--set", "a=1", "--other", "x", "--set", "b=2", "--set=c=3"], false);
+        assert_eq!(a.all("set"), vec!["a=1", "b=2", "c=3"]);
+        assert_eq!(a.get("set"), Some("c=3"), "kv keeps the last-wins view");
+        assert!(a.all("missing").is_empty());
     }
 
     #[test]

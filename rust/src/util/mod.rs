@@ -31,9 +31,47 @@ pub fn fmt_speedup(x: Option<f64>) -> String {
     }
 }
 
+/// The candidate closest to `input` by edit distance, for "did you mean"
+/// hints on unknown CLI names/keys. None when nothing is plausibly close
+/// (distance > half the input length, minimum 2).
+pub fn nearest_match<'a>(input: &str, candidates: &[&'a str]) -> Option<&'a str> {
+    let cutoff = (input.len() / 2).max(2);
+    candidates
+        .iter()
+        .map(|c| (edit_distance(input, c), *c))
+        .filter(|(d, _)| *d <= cutoff)
+        .min_by_key(|(d, _)| *d)
+        .map(|(_, c)| c)
+}
+
+/// Levenshtein distance (two-row DP; inputs are short CLI tokens).
+pub fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn edit_distance_and_nearest_match() {
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
+        assert_eq!(edit_distance("alpha", "alpha"), 0);
+        assert_eq!(nearest_match("data.alhpa", &["data.alpha", "train.lr"]), Some("data.alpha"));
+        assert_eq!(nearest_match("zzzzzzzz", &["data.alpha", "train.lr"]), None);
+    }
 
     #[test]
     fn hours_formatting() {

@@ -4,14 +4,19 @@
 //! completion with previously-finished cells skipped, and every cell's
 //! stored records and parameters bitwise-identical to an uninterrupted
 //! campaign's. Extends `tests/resume.rs`' invariant from one run to whole
-//! grids.
+//! grids, across the generic `--sweep` axes (including strategy-declared
+//! tunables) and across the v1 -> v2 campaign-manifest migration.
 
 use std::path::PathBuf;
 
 use fedel::config::ExperimentCfg;
-use fedel::sim::campaign::{report, run_campaign, CampaignCfg, CellRun};
-use fedel::store::schema::{RunManifest, RunStatus};
+use fedel::report::Target;
+use fedel::sim::campaign::{
+    grouped_report, report, run_campaign, CampaignCfg, CampaignCell, CellRun,
+};
+use fedel::store::schema::{CampaignManifest, CellState, RunManifest, RunStatus};
 use fedel::store::RunStore;
+use fedel::util::json::Json;
 
 fn scratch(tag: &str) -> PathBuf {
     let dir = std::env::temp_dir().join(format!("fedel-campaign-{}-{tag}", std::process::id()));
@@ -35,8 +40,8 @@ fn grid(name: &str) -> CampaignCfg {
         ..Default::default()
     };
     let mut cfg = CampaignCfg::new(name, base);
-    cfg.strategies = vec!["fedavg".into(), "fedel".into()];
-    cfg.seeds = vec![1, 2];
+    cfg.axis("strategy=fedavg,fedel").unwrap();
+    cfg.axis("seed=1,2").unwrap();
     cfg.checkpoint_every = 2;
     cfg.workers = 1;
     cfg
@@ -106,20 +111,35 @@ fn campaign_runs_grid_reports_and_is_idempotent() {
     assert!(outcome.cells.iter().all(|c| c.status == CellRun::Completed));
     assert_eq!(outcome.cells.len(), 4);
 
-    // every cell's run is stored and complete
+    // every cell's run is stored and complete, under its overlay label
     for (label, m) in cell_runs(&store, "sweep") {
         assert_eq!(m.status, RunStatus::Complete, "{label}");
         assert_eq!(m.records.len(), 6, "{label}");
+        assert!(label.starts_with("strategy="), "{label}");
     }
 
     // the whole-grid report defaults its baseline to the fedavg cell
     let man = store.load_campaign("sweep").unwrap();
-    let rep = report(&store, &man, None, None).unwrap();
+    let rep = report(&store, &man, Target::Default, None).unwrap();
     assert_eq!(rep.rows.len(), 4);
     assert_eq!(rep.baseline, man.cells[0].run_id.clone().unwrap());
     // an explicit strategy baseline resolves too
-    let rep = report(&store, &man, None, Some("fedel")).unwrap();
+    let rep = report(&store, &man, Target::Default, Some("fedel")).unwrap();
     assert!(rep.baseline.starts_with("fedel"));
+
+    // Table-3 shape: collapse the seed axis into mean ± std per strategy
+    let agg = grouped_report(&store, &man, "seed", Target::Default, None).unwrap();
+    assert_eq!(agg.over, "seed");
+    assert_eq!(agg.baseline.as_deref(), Some("fedavg"));
+    assert_eq!(agg.rows.len(), 2, "{agg:?}");
+    assert_eq!(agg.rows[0].label, "strategy=fedavg");
+    assert_eq!(agg.rows[1].label, "strategy=fedel");
+    for row in &agg.rows {
+        assert_eq!(row.cells, 2, "{row:?}");
+        assert_eq!(row.final_acc.unwrap().n, 2, "{row:?}");
+    }
+    // collapsing a non-axis errors loudly
+    assert!(grouped_report(&store, &man, "data.alpha", Target::Default, None).is_err());
 
     // running the finished campaign again touches nothing
     let again = run_campaign(&store, &cfg).unwrap();
@@ -192,8 +212,229 @@ fn same_name_different_grid_is_rejected() {
     run_campaign(&store, &small).unwrap();
 
     let mut other = grid("sweep");
-    other.seeds = vec![7, 8];
+    other.axes[1] = fedel::config::params::SweepAxis::parse(
+        fedel::config::params::ParamSpace::shared(),
+        "seed=7,8",
+    )
+    .unwrap();
     let err = run_campaign(&store, &other).unwrap_err();
     assert!(err.to_string().contains("different grid"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The tentpole acceptance drill: a campaign sweeping a strategy-declared
+/// tunable (`strategy.fedel.harmonize_weight`) and a data parameter
+/// (`data.alpha`) alongside strategy and seed axes — entirely through
+/// registered keys — runs, kill-resumes bitwise-identically, and the
+/// grouped report collapses the seed axis into mean ± std per cell with
+/// per-seed-matched speedups vs the fedavg baseline.
+#[test]
+fn swept_strategy_and_data_params_kill_resume_and_aggregate() {
+    fn sweep_grid(name: &str) -> CampaignCfg {
+        let base = ExperimentCfg {
+            model: "mock:4x20".into(),
+            fleet: fedel::config::FleetSpec::Scales(vec![1.0, 3.0]),
+            rounds: 4,
+            local_steps: 2,
+            lr: 0.3,
+            eval_every: 2,
+            eval_batches: 2,
+            slowest_round_secs: 3600.0,
+            exec_threads: 1,
+            ..Default::default()
+        };
+        let mut cfg = CampaignCfg::new(name, base);
+        cfg.axis("strategy=fedavg,fedel").unwrap();
+        cfg.axis("seed=1,2").unwrap();
+        cfg.axis("data.alpha=0.1,0.5").unwrap();
+        cfg.axis("strategy.fedel.harmonize_weight=0.2,0.8").unwrap();
+        cfg.checkpoint_every = 2;
+        cfg.workers = 2;
+        cfg
+    }
+
+    let reference_dir = scratch("sweep-ref");
+    let reference = RunStore::open(&reference_dir).unwrap();
+    assert!(run_campaign(&reference, &sweep_grid("table3")).unwrap().complete());
+
+    // the swept values actually land in the stored per-cell configs
+    for (label, m) in cell_runs(&reference, "table3") {
+        let alpha: f64 = if label.contains("data.alpha=0.1") { 0.1 } else { 0.5 };
+        assert_eq!(m.config.alpha, alpha, "{label}");
+        let hw = if label.contains("harmonize_weight=0.2") { 0.2 } else { 0.8 };
+        assert_eq!(
+            m.config.strategy_params,
+            vec![("strategy.fedel.harmonize_weight".to_string(), hw)],
+            "{label}"
+        );
+    }
+    // the harmonize_weight axis changes fedel's results (the knob reaches
+    // the policy, not just the manifest)
+    let runs = cell_runs(&reference, "table3");
+    let fedel_02 = runs
+        .iter()
+        .find(|(l, _)| l.contains("strategy=fedel") && l.contains("seed=1")
+            && l.contains("alpha=0.1") && l.contains("=0.2"))
+        .unwrap();
+    let fedel_08 = runs
+        .iter()
+        .find(|(l, _)| l.contains("strategy=fedel") && l.contains("seed=1")
+            && l.contains("alpha=0.1") && l.contains("=0.8"))
+        .unwrap();
+    // Any divergent signal proves the knob reached the selector: round
+    // losses, eval curve, or the final global model.
+    let differs = fedel_02
+        .1
+        .records
+        .iter()
+        .zip(&fedel_08.1.records)
+        .any(|(a, b)| {
+            a.mean_train_loss.to_bits() != b.mean_train_loss.to_bits()
+                || a.eval_acc.map(f64::to_bits) != b.eval_acc.map(f64::to_bits)
+        })
+        || reference
+            .get_params(&fedel_02.1.final_state.as_ref().unwrap().params)
+            .unwrap()
+            != reference
+                .get_params(&fedel_08.1.final_state.as_ref().unwrap().params)
+                .unwrap();
+    assert!(differs, "harmonize_weight sweep did not reach the policy");
+
+    // kill mid-round, resume, compare bitwise
+    let dir = scratch("sweep-killed");
+    let store = RunStore::open(&dir).unwrap();
+    let mut killed = sweep_grid("table3");
+    killed.halt_after = Some(3);
+    let out = run_campaign(&store, &killed).unwrap();
+    assert!(!out.complete());
+    let out = run_campaign(&store, &sweep_grid("table3")).unwrap();
+    assert!(out.complete(), "{out:?}");
+    assert_stores_identical(&reference, &store, "table3");
+
+    // Table-3 aggregation: 16 cells collapse over seed into 8 groups of 2
+    let man = reference.load_campaign("table3").unwrap();
+    let agg = grouped_report(&reference, &man, "seed", Target::Default, None).unwrap();
+    assert_eq!(agg.rows.len(), 8, "{agg:?}");
+    assert_eq!(agg.baseline.as_deref(), Some("fedavg"));
+    for row in &agg.rows {
+        assert_eq!(row.cells, 2, "{row:?}");
+        let acc = row.final_acc.expect("every cell stores a final accuracy");
+        assert_eq!(acc.n, 2);
+        assert!(acc.std >= 0.0);
+        let tta = row.time_to_target.expect("default target is reachable");
+        assert_eq!(tta.n, 2, "{row:?}");
+        let speedup = row.speedup_vs_baseline.expect("fedavg baseline is on the grid");
+        assert_eq!(speedup.n, 2, "{row:?}");
+        if row.label.starts_with("strategy=fedavg") {
+            assert!((speedup.mean - 1.0).abs() < 1e-9, "baseline speedup is 1.0: {row:?}");
+            assert!(speedup.std.abs() < 1e-9, "{row:?}");
+        }
+    }
+    // JSON form carries the aggregates
+    let j = Json::parse(&agg.to_json().to_string_pretty()).unwrap();
+    assert_eq!(j.s("aggregated_over").unwrap(), "seed");
+    assert_eq!(j.arr("groups").unwrap().len(), 8);
+
+    let _ = std::fs::remove_dir_all(&reference_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Campaigns persisted by the PR-3-era schema (v1: four fixed axes,
+/// `fedavg-s1-fsmall10-t1` labels) migrate in place on the next run and
+/// resume bitwise-identically: spec converts to axes form, labels are
+/// rewritten, run assignments survive.
+#[test]
+fn v1_campaign_manifest_migrates_and_resumes_bitwise_identically() {
+    // The four-axis grid exactly as a v1 campaign would have expanded it.
+    fn v1_equivalent_spec(cfg: &CampaignCfg) -> Json {
+        Json::obj(vec![
+            ("base", cfg.base.to_json()),
+            ("strategies", Json::from_strs(&["fedavg", "fedel"])),
+            (
+                "seeds",
+                Json::Arr(vec![Json::Str("1".into()), Json::Str("2".into())]),
+            ),
+            ("fleets", Json::from_strs(&["1,2,4"])),
+            ("t_th_factors", Json::from_f64s(&[1.0])),
+            ("checkpoint_every", Json::Num(cfg.checkpoint_every as f64)),
+        ])
+    }
+
+    // Grid matching tests::grid() but with the fleet + T_th axes the v1
+    // schema always carried (singletons, same resolved configs).
+    fn four_axis_grid(name: &str) -> CampaignCfg {
+        let mut cfg = grid(name);
+        cfg.base.fleet = fedel::config::FleetSpec::Scales(vec![1.0, 2.0, 4.0]);
+        cfg.axis("fleet=1,2,4").unwrap();
+        cfg.axis("time.t_th_factor=1").unwrap();
+        cfg
+    }
+
+    let reference_dir = scratch("migrate-ref");
+    let reference = RunStore::open(&reference_dir).unwrap();
+    assert!(run_campaign(&reference, &four_axis_grid("legacy")).unwrap().complete());
+
+    // phase 1: half-run the campaign, kill mid-round
+    let dir = scratch("migrate");
+    let store = RunStore::open(&dir).unwrap();
+    let mut phase1 = four_axis_grid("legacy");
+    phase1.halt_after = Some(3);
+    let out = run_campaign(&store, &phase1).unwrap();
+    assert!(!out.complete());
+
+    // phase 2: rewrite the manifest exactly as the v1 schema stored it —
+    // v1 spec shape, v1-style labels, run assignments kept
+    let m2 = store.load_campaign("legacy").unwrap();
+    let cfg = four_axis_grid("legacy");
+    let v1_labels: Vec<String> = ["fedavg-s1", "fedavg-s2", "fedel-s1", "fedel-s2"]
+        .iter()
+        .map(|p| format!("{p}-f1,2,4-t1"))
+        .collect();
+    let downgraded = CampaignManifest {
+        schema_version: 1,
+        name: m2.name.clone(),
+        created_unix: m2.created_unix,
+        updated_unix: m2.updated_unix,
+        spec: v1_equivalent_spec(&cfg),
+        cells: m2
+            .cells
+            .iter()
+            .zip(&v1_labels)
+            .map(|(c, label)| CellState { label: label.clone(), run_id: c.run_id.clone() })
+            .collect(),
+    };
+    store.save_campaign(&downgraded).unwrap();
+    assert_eq!(store.load_campaign("legacy").unwrap().schema_version, 1);
+
+    // phase 3: bare resume from the stored spec, the `campaign run
+    // --name legacy` path — migrates, then continues from checkpoints
+    let stored = store.load_campaign("legacy").unwrap();
+    let resumed_cfg = CampaignCfg::from_spec_json("legacy", &stored.spec).unwrap();
+    let out = run_campaign(&store, &resumed_cfg).unwrap();
+    assert!(out.complete(), "{out:?}");
+
+    // the manifest is upgraded in place: v2, overlay labels, same runs
+    let migrated = store.load_campaign("legacy").unwrap();
+    assert_eq!(
+        migrated.schema_version,
+        fedel::store::schema::CAMPAIGN_SCHEMA_VERSION
+    );
+    let labels: Vec<&str> = migrated.cells.iter().map(|c| c.label.as_str()).collect();
+    assert_eq!(
+        labels,
+        four_axis_grid("legacy")
+            .cells()
+            .unwrap()
+            .iter()
+            .map(CampaignCell::label)
+            .collect::<Vec<_>>()
+    );
+    for (old, new) in m2.cells.iter().zip(&migrated.cells) {
+        assert_eq!(old.run_id, new.run_id, "run assignments must survive migration");
+    }
+    assert!(migrated.spec.get("strategies").is_none(), "spec upgraded to axes form");
+
+    assert_stores_identical(&reference, &store, "legacy");
+    let _ = std::fs::remove_dir_all(&reference_dir);
     let _ = std::fs::remove_dir_all(&dir);
 }

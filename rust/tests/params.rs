@@ -1,0 +1,191 @@
+//! Property tests for the typed parameter space: overlays round-trip
+//! through manifest JSON exactly, and overlay precedence (base < axis <
+//! `--set`) is order-independent within a layer.
+
+use fedel::config::params::{Binding, ParamSpace, ParamValue, SpecOverlay, SweepAxis};
+use fedel::config::{ExperimentCfg, FleetSpec};
+use fedel::util::json::Json;
+use fedel::util::prop::{check, no_shrink, shrink_vec};
+use fedel::util::rng::Rng;
+
+/// A random typed value for a registered key.
+fn random_value(rng: &mut Rng, key: &str) -> ParamValue {
+    match key {
+        "model" => ParamValue::Str(format!("mock:{}x{}", 1 + rng.below(8), 1 + rng.below(200))),
+        "strategy" => {
+            let names = ["fedavg", "fedel", "timelyfl", "pyramidfl", "heterofl"];
+            ParamValue::Str(names[rng.below(names.len())].to_string())
+        }
+        "fleet" => match rng.below(3) {
+            0 => ParamValue::Fleet(FleetSpec::Small10),
+            1 => ParamValue::Fleet(FleetSpec::Large(1 + rng.below(200))),
+            _ => ParamValue::Fleet(FleetSpec::Scales(
+                (0..1 + rng.below(4)).map(|_| (1 + rng.below(8)) as f64 / 2.0).collect(),
+            )),
+        },
+        "seed" => ParamValue::U64(rng.next_u64()),
+        "train.rounds" | "train.local_steps" | "eval.every" | "eval.batches" => {
+            ParamValue::Usize(1 + rng.below(64))
+        }
+        // Positive floats with awkward mantissas: exactness is the point.
+        "train.lr" | "data.alpha" | "time.t_th_factor" => {
+            ParamValue::F64(rng.f64().max(f64::MIN_POSITIVE) * 3.0f64.powi(rng.below(5) as i32))
+        }
+        "time.comm_secs" | "time.slowest_round_secs" => ParamValue::F64(rng.f64() * 1e4),
+        // strategy.<s>.<p> keys: [0.05, 0.9] sits inside every declared
+        // bound in the registry (tightest: deadline_frac >= 0.05,
+        // explore <= 0.99), while still exercising awkward mantissas.
+        _ => ParamValue::F64(0.05 + rng.f64() * 0.85),
+    }
+}
+
+/// A random overlay: a distinct-key subset of the registered space.
+fn random_overlay(rng: &mut Rng) -> Vec<Binding> {
+    let space = ParamSpace::shared();
+    let nkeys = space.keys().len();
+    let picks = 1 + rng.below(nkeys.min(8));
+    let mut idxs = rng.choose_k(nkeys, picks);
+    idxs.sort();
+    idxs.iter()
+        .map(|&i| {
+            let key = space.keys()[i].key.clone();
+            let value = random_value(rng, &key);
+            Binding { key, value }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_overlay_round_trips_through_manifest_json() {
+    check(
+        "overlay json round-trip",
+        200,
+        random_overlay,
+        |bindings| {
+            let space = ParamSpace::shared();
+            let mut overlay = SpecOverlay::new();
+            for b in bindings {
+                overlay.push(b.clone()).map_err(|e| e.to_string())?;
+            }
+            // through text, exactly as campaigns/<name>.json stores it
+            let text = overlay.to_json().to_string_pretty();
+            let back = SpecOverlay::from_json(space, &Json::parse(&text).map_err(|e| e.to_string())?)
+                .map_err(|e| e.to_string())?;
+            if back != overlay {
+                return Err(format!("{back:?} != {overlay:?}"));
+            }
+            // and the applied configs agree bitwise (render/parse is exact)
+            let mut a = ExperimentCfg::default();
+            let mut b = ExperimentCfg::default();
+            overlay.apply(space, &mut a).map_err(|e| e.to_string())?;
+            back.apply(space, &mut b).map_err(|e| e.to_string())?;
+            let (ja, jb) = (a.to_json().to_string_pretty(), b.to_json().to_string_pretty());
+            if ja != jb {
+                return Err(format!("configs diverged:\n{ja}\n---\n{jb}"));
+            }
+            Ok(())
+        },
+        shrink_vec,
+    );
+}
+
+#[test]
+fn prop_overlay_precedence_is_order_independent_within_layers() {
+    // (axis layer, set layer, shuffle seed): applying base -> axis -> set
+    // must resolve identically under any permutation *within* each layer,
+    // and set-layer bindings must win over axis bindings for shared keys.
+    let gen = |rng: &mut Rng| {
+        let axis = random_overlay(rng);
+        let mut set = random_overlay(rng);
+        // make overlap likely: retag half the axis keys into the set layer
+        for b in axis.iter().take(axis.len() / 2) {
+            if !set.iter().any(|s| s.key == b.key) {
+                set.push(Binding { key: b.key.clone(), value: random_value(rng, &b.key) });
+            }
+        }
+        (axis, set, rng.next_u64())
+    };
+    check(
+        "overlay precedence",
+        120,
+        gen,
+        |(axis, set, shuffle_seed)| {
+            let space = ParamSpace::shared();
+            let resolve = |axis: &[Binding], set: &[Binding]| -> Result<String, String> {
+                let mut cfg = ExperimentCfg::default();
+                for layer in [axis, set] {
+                    let mut overlay = SpecOverlay::new();
+                    for b in layer {
+                        overlay.push(b.clone()).map_err(|e| e.to_string())?;
+                    }
+                    overlay.apply(space, &mut cfg).map_err(|e| e.to_string())?;
+                }
+                Ok(cfg.to_json().to_string_pretty())
+            };
+            let reference = resolve(axis, set)?;
+            let mut rng = Rng::new(*shuffle_seed);
+            for _ in 0..4 {
+                let (mut a, mut s) = (axis.clone(), set.clone());
+                rng.shuffle(&mut a);
+                rng.shuffle(&mut s);
+                let shuffled = resolve(&a, &s)?;
+                if shuffled != reference {
+                    return Err(format!(
+                        "layer-internal order changed the resolved config:\n{reference}\n---\n{shuffled}"
+                    ));
+                }
+            }
+            // the set layer wins on every shared key
+            let mut cfg = ExperimentCfg::default();
+            let mut overlay = SpecOverlay::new();
+            for b in axis {
+                overlay.push(b.clone()).map_err(|e| e.to_string())?;
+            }
+            overlay.apply(space, &mut cfg).map_err(|e| e.to_string())?;
+            let mut set_overlay = SpecOverlay::new();
+            for b in set {
+                set_overlay.push(b.clone()).map_err(|e| e.to_string())?;
+            }
+            set_overlay.apply(space, &mut cfg).map_err(|e| e.to_string())?;
+            for b in set {
+                let def = space.resolve(&b.key).map_err(|e| e.to_string())?;
+                if def.get(&cfg) != b.value {
+                    return Err(format!("set binding {} lost to the axis layer", b.render()));
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn sweep_axis_values_round_trip_through_spec_json() {
+    let space = ParamSpace::shared();
+    check(
+        "axis json round-trip",
+        100,
+        |rng: &mut Rng| {
+            let keys = ["seed", "data.alpha", "train.lr", "strategy.fedel.harmonize_weight"];
+            let key = keys[rng.below(keys.len())];
+            let mut values = Vec::new();
+            for _ in 0..1 + rng.below(5) {
+                let v = random_value(rng, key);
+                if !values.contains(&v) {
+                    values.push(v);
+                }
+            }
+            SweepAxis { key: key.to_string(), values }
+        },
+        |axis| {
+            let text = axis.to_json().to_string_pretty();
+            let back = SweepAxis::from_json(space, &Json::parse(&text).map_err(|e| e.to_string())?)
+                .map_err(|e| e.to_string())?;
+            if back != *axis {
+                return Err(format!("{back:?} != {axis:?}"));
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}

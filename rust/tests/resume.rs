@@ -220,3 +220,34 @@ fn resume_refuses_completed_or_checkpointless_runs() {
     assert!(err.to_string().contains("completed"), "{err}");
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// `--checkpoint-secs`: with a zero-second wall-clock cadence every round
+/// persists a checkpoint, even when the round cadence alone would only
+/// fire at the very end — and a kill between *round*-cadence points is
+/// then still resumable from the latest round.
+#[test]
+fn wall_clock_cadence_checkpoints_between_round_cadence_points() {
+    let dir = scratch("wallclock");
+    let store = RunStore::open(&dir).unwrap();
+
+    let mut halted = cfg("fedavg", 1);
+    halted.halt_after = Some(5);
+    let mut exp = Experiment::build(halted).unwrap();
+    // round cadence alone would checkpoint only at round 1000...
+    let mut ckpt = CheckpointObserver::create(&store, &exp.cfg, "fedavg", 1000)
+        .unwrap()
+        .every_secs(Some(0.0)); // ...but 0s of wall clock always elapsed
+    let id = ckpt.run_id().to_string();
+    let err = exp.run_from(None, &mut ckpt, None).unwrap_err();
+    assert!(err.to_string().contains("halted"), "{err}");
+    assert!(ckpt.take_error().is_none());
+
+    let man = store.load_manifest(&id).unwrap();
+    assert_eq!(man.checkpoint.as_ref().unwrap().completed, 5, "wall-clock cadence missed rounds");
+
+    // and the wall-clock checkpoint is a real resume point
+    let baseline = Experiment::build(cfg("fedavg", 1)).unwrap().run(None).unwrap();
+    let resumed = resume_run(&store, &id, 2, &mut NullObserver).unwrap();
+    assert_identical(&baseline, &resumed, "wall-clock resume");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -38,7 +38,8 @@ fn main() -> anyhow::Result<()> {
     ]);
     for beta in [0.0, 0.2, 0.4, 0.6, 0.8, 1.0] {
         let mut cfg = base.clone();
-        cfg.beta = beta;
+        cfg.strategy_params
+            .push(("strategy.fedel.harmonize_weight".to_string(), beta));
         let mut exp = Experiment::build(cfg)?;
         let res = exp.run(Some("fedel"))?;
         t.row(vec![

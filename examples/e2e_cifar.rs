@@ -36,7 +36,6 @@ fn main() -> anyhow::Result<()> {
         local_steps: 4,
         lr: 0.04,
         alpha: 0.1,
-        beta: 0.6,
         eval_every: 10,
         eval_batches: 12,
         slowest_round_secs: 71.8 * 60.0, // paper Table 2 FedAvg CIFAR round
@@ -67,7 +66,7 @@ fn main() -> anyhow::Result<()> {
             fedel::util::fmt_hours(res.sim_total_secs),
             t0.elapsed().as_secs_f64()
         );
-        let er = energy_report(&res, &exp.fleet);
+        let er = energy_report(&res, &exp.fleet)?;
         println!(
             "   fleet energy {:.0} kJ at mean power {:.1} W",
             er.total_kj, er.mean_power_w

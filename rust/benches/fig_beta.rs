@@ -25,7 +25,9 @@ fn main() -> anyhow::Result<()> {
         ]);
         for beta in [0.0, 0.2, 0.4, 0.6, 0.8, 1.0] {
             let mut cfg_b = cfg.clone();
-            cfg_b.beta = beta;
+            cfg_b
+                .strategy_params
+                .push(("strategy.fedel.harmonize_weight".to_string(), beta));
             let mut exp_b = Experiment::build(cfg_b)?;
             let res = exp_b.run(Some("fedel"))?;
             t.row(vec![

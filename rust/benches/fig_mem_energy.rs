@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     for name in table1_names() {
         // Memory: average the analytic model over the strategy's first
         // round of plans (mask + exit determine the footprint).
-        let mut strat = by_name(name, &exp.ctx, exp.cfg.beta, exp.cfg.seed)?;
+        let mut strat = by_name(name, &exp.ctx, 0.6, exp.cfg.seed)?;
         let global = exp.engine.manifest().load_init()?;
         let plans = strat.plan_round(0, &exp.ctx, &global);
         let m = exp.engine.manifest().clone();
@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
 
         // Energy: full experiment run.
         let res = exp.run(Some(name))?;
-        let er = energy_report(&res, &exp.fleet);
+        let er = energy_report(&res, &exp.fleet)?;
 
         if name == "fedavg" {
             fedavg_mem = mem;

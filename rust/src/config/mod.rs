@@ -71,8 +71,6 @@ pub struct ExperimentCfg {
     pub lr: f64,
     /// Dirichlet non-iid concentration (paper: 0.1).
     pub alpha: f64,
-    /// FedEL importance-blend parameter (paper default 0.6).
-    pub beta: f64,
     /// T_th = t_th_factor x (fastest device's full-model round time).
     pub t_th_factor: f64,
     /// Calibrate the SLOWEST device's full round to this many simulated
@@ -81,7 +79,19 @@ pub struct ExperimentCfg {
     pub seed: u64,
     pub eval_every: usize,
     pub eval_batches: usize,
+    /// Flat per-round communication seconds — the degenerate
+    /// [`CommModel`](crate::timing::CommModel), in effect whenever no
+    /// bandwidth key below is set.
     pub comm_secs: f64,
+    /// Client upload bandwidth (Mbit/s). Setting any of the three
+    /// bandwidth keys switches to the payload-priced CommModel, where
+    /// per-client transfer time = masked-payload bytes / bandwidth +
+    /// latency. 0 = unset.
+    pub comm_up_mbps: f64,
+    /// Client download bandwidth (Mbit/s); 0 = unset.
+    pub comm_down_mbps: f64,
+    /// Per-transfer link latency (seconds); 0 = unset.
+    pub comm_latency_secs: f64,
     /// Host threads for the per-round client fan-out: 0 = one per core,
     /// 1 = sequential, n = dedicated n-thread pool. Purely a wall-clock
     /// knob — results are bitwise-identical at any setting.
@@ -111,13 +121,15 @@ impl Default for ExperimentCfg {
             local_steps: 8,
             lr: 0.05,
             alpha: 0.1,
-            beta: 0.6,
             t_th_factor: 1.0,
             slowest_round_secs: 71.8 * 60.0,
             seed: 42,
             eval_every: 5,
             eval_batches: 16,
             comm_secs: 30.0,
+            comm_up_mbps: 0.0,
+            comm_down_mbps: 0.0,
+            comm_latency_secs: 0.0,
             exec_threads: 0,
             strategy_params: Vec::new(),
             record_selections: false,
@@ -142,25 +154,55 @@ impl ExperimentCfg {
             local_steps: args.usize_or("local-steps", d.local_steps),
             lr: args.f64_or("lr", d.lr),
             alpha: args.f64_or("alpha", d.alpha),
-            beta: args.f64_or("beta", d.beta),
             t_th_factor: args.f64_or("t-th-factor", d.t_th_factor),
             slowest_round_secs: args.f64_or("slowest-round-secs", d.slowest_round_secs),
             seed: args.u64_or("seed", d.seed),
             eval_every: args.usize_or("eval-every", d.eval_every),
             eval_batches: args.usize_or("eval-batches", d.eval_batches),
             comm_secs: args.f64_or("comm-secs", d.comm_secs),
+            comm_up_mbps: args.f64_or("comm-up-mbps", d.comm_up_mbps),
+            comm_down_mbps: args.f64_or("comm-down-mbps", d.comm_down_mbps),
+            comm_latency_secs: args.f64_or("comm-latency-secs", d.comm_latency_secs),
             exec_threads: args.usize_or("threads", d.exec_threads),
             strategy_params: Vec::new(),
             record_selections: args.flag("record-selections"),
             verbose: args.flag("verbose"),
             halt_after: args.get("halt-after").and_then(|s| s.parse().ok()),
         };
+        // `--beta` is a deprecated alias for the FedEL family's
+        // harmonize_weight tunables: fold it into the parameter bag (the
+        // one path strategy tunables flow through since the legacy field
+        // was removed). Applied before --set so explicit bindings win.
+        if let Some(raw) = args.get("beta") {
+            let beta: f64 = raw
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--beta value {raw:?}: {e}"))?;
+            eprintln!(
+                "note: --beta is deprecated — use --set strategy.<s>.harmonize_weight={beta}"
+            );
+            fold_beta_into_bag(&mut cfg.strategy_params, beta);
+        }
         let sets = args.all("set");
         if !sets.is_empty() {
             let space = params::ParamSpace::shared();
             params::SpecOverlay::parse(space, &sets)?.apply(space, &mut cfg)?;
         }
         Ok(cfg)
+    }
+
+    /// The communication model this config asks for: payload-priced
+    /// bandwidth when any `comm.*_mbps` / `comm.latency_secs` key is set,
+    /// else the flat `time.comm_secs` constant.
+    pub fn comm_model(&self) -> crate::timing::CommModel {
+        if self.comm_up_mbps > 0.0 || self.comm_down_mbps > 0.0 || self.comm_latency_secs > 0.0 {
+            crate::timing::CommModel::Bandwidth {
+                up_mbps: self.comm_up_mbps,
+                down_mbps: self.comm_down_mbps,
+                latency_secs: self.comm_latency_secs,
+            }
+        } else {
+            crate::timing::CommModel::Constant(self.comm_secs)
+        }
     }
 
     /// Config snapshot: every field an experiment rebuild needs
@@ -177,7 +219,6 @@ impl ExperimentCfg {
             ("local_steps", Json::Num(self.local_steps as f64)),
             ("lr", Json::Num(self.lr)),
             ("alpha", Json::Num(self.alpha)),
-            ("beta", Json::Num(self.beta)),
             ("t_th_factor", Json::Num(self.t_th_factor)),
             ("slowest_round_secs", Json::Num(self.slowest_round_secs)),
             // u64 seeds don't survive the f64 JSON number path above 2^53;
@@ -188,6 +229,18 @@ impl ExperimentCfg {
             ("comm_secs", Json::Num(self.comm_secs)),
             ("threads", Json::Num(self.exec_threads as f64)),
         ];
+        // Bandwidth keys are omitted at their 0 ("unset") defaults so
+        // pre-CommModel snapshots — and campaign specs built from them —
+        // compare and round-trip unchanged.
+        for (key, v) in [
+            ("comm_up_mbps", self.comm_up_mbps),
+            ("comm_down_mbps", self.comm_down_mbps),
+            ("comm_latency_secs", self.comm_latency_secs),
+        ] {
+            if v != 0.0 {
+                kv.push((key, Json::Num(v)));
+            }
+        }
         // Omitted when empty so pre-registry snapshots compare and
         // round-trip unchanged.
         if !self.strategy_params.is_empty() {
@@ -214,7 +267,7 @@ impl ExperimentCfg {
         };
         let f = |key: &str, dv: f64| j.get(key).and_then(Json::as_f64).unwrap_or(dv);
         let u = |key: &str, dv: usize| j.get(key).and_then(Json::as_usize).unwrap_or(dv);
-        Ok(ExperimentCfg {
+        let mut cfg = ExperimentCfg {
             model: s("model", &d.model),
             artifacts_dir: PathBuf::from(s("artifacts_dir", "artifacts")),
             strategy: s("strategy", &d.strategy),
@@ -223,7 +276,6 @@ impl ExperimentCfg {
             local_steps: u("local_steps", d.local_steps),
             lr: f("lr", d.lr),
             alpha: f("alpha", d.alpha),
-            beta: f("beta", d.beta),
             t_th_factor: f("t_th_factor", d.t_th_factor),
             slowest_round_secs: f("slowest_round_secs", d.slowest_round_secs),
             seed: match j.get("seed") {
@@ -236,6 +288,9 @@ impl ExperimentCfg {
             eval_every: u("eval_every", d.eval_every),
             eval_batches: u("eval_batches", d.eval_batches),
             comm_secs: f("comm_secs", d.comm_secs),
+            comm_up_mbps: f("comm_up_mbps", 0.0),
+            comm_down_mbps: f("comm_down_mbps", 0.0),
+            comm_latency_secs: f("comm_latency_secs", 0.0),
             exec_threads: u("threads", d.exec_threads),
             strategy_params: match j.get("strategy_params") {
                 Some(Json::Obj(kv)) => {
@@ -255,8 +310,32 @@ impl ExperimentCfg {
             record_selections: false,
             verbose: false,
             halt_after: None,
-        })
+        };
+        // Legacy snapshots carried a top-level `beta` that seeded the
+        // FedEL family's harmonize_weight; fold it into the bag so runs
+        // stored before the field's removal rebuild (and resume)
+        // identically. Explicit bag bindings win, as they did then.
+        if let Some(beta) = j.get("beta").and_then(Json::as_f64) {
+            fold_beta_into_bag(&mut cfg.strategy_params, beta);
+        }
+        Ok(cfg)
     }
+}
+
+/// Bind every registered `harmonize_weight` tunable (the FedEL family) to
+/// `beta`, leaving already-present bindings untouched — the deprecated
+/// `--beta` alias and the legacy config-snapshot field both land here.
+fn fold_beta_into_bag(bag: &mut Vec<(String, f64)>, beta: f64) {
+    use crate::strategies::registry;
+    for def in registry::builtin().defs() {
+        for p in def.params.iter().filter(|p| p.name == "harmonize_weight") {
+            let key = registry::StrategyRegistry::param_key(def.name, p.name);
+            if !bag.iter().any(|(k, _)| *k == key) {
+                bag.push((key, beta));
+            }
+        }
+    }
+    bag.sort_by(|a, b| a.0.cmp(&b.0));
 }
 
 #[cfg(test)]
@@ -277,16 +356,55 @@ mod tests {
     #[test]
     fn args_override_defaults() {
         let args = Args::parse(
-            ["--model", "vgg_cifar", "--rounds", "7", "--beta", "0.4"]
-                .iter()
-                .map(|s| s.to_string()),
+            ["--model", "vgg_cifar", "--rounds", "7"].iter().map(|s| s.to_string()),
             false,
         );
         let cfg = ExperimentCfg::from_args(&args).unwrap();
         assert_eq!(cfg.model, "vgg_cifar");
         assert_eq!(cfg.rounds, 7);
-        assert_eq!(cfg.beta, 0.4);
         assert_eq!(cfg.alpha, 0.1); // default preserved
+    }
+
+    #[test]
+    fn deprecated_beta_flag_folds_into_the_bag() {
+        let args = Args::parse(["--beta", "0.4"].iter().map(|s| s.to_string()), false);
+        let cfg = ExperimentCfg::from_args(&args).unwrap();
+        let get = |k: &str| cfg.strategy_params.iter().find(|(key, _)| key == k).map(|(_, v)| *v);
+        assert_eq!(get("strategy.fedel.harmonize_weight"), Some(0.4));
+        assert_eq!(get("strategy.fedel-c.harmonize_weight"), Some(0.4));
+        // an explicit --set wins over the alias
+        let args = Args::parse(
+            ["--beta", "0.4", "--set", "strategy.fedel.harmonize_weight=0.9"]
+                .iter()
+                .map(|s| s.to_string()),
+            false,
+        );
+        let cfg = ExperimentCfg::from_args(&args).unwrap();
+        let get = |k: &str| cfg.strategy_params.iter().find(|(key, _)| key == k).map(|(_, v)| *v);
+        assert_eq!(get("strategy.fedel.harmonize_weight"), Some(0.9));
+        assert_eq!(get("strategy.fedel-norollback.harmonize_weight"), Some(0.4));
+    }
+
+    #[test]
+    fn legacy_beta_snapshot_key_folds_on_load() {
+        // A pre-removal snapshot: top-level beta, no strategy_params.
+        let j = Json::parse(r#"{"model": "mock:4x10", "beta": 0.45}"#).unwrap();
+        let cfg = ExperimentCfg::from_json(&j).unwrap();
+        assert!(cfg
+            .strategy_params
+            .iter()
+            .any(|(k, v)| k == "strategy.fedel.harmonize_weight" && *v == 0.45));
+        // an explicit bag binding beats the legacy field, like it always did
+        let j = Json::parse(
+            r#"{"beta": 0.45,
+                "strategy_params": {"strategy.fedel.harmonize_weight": 0.2}}"#,
+        )
+        .unwrap();
+        let cfg = ExperimentCfg::from_json(&j).unwrap();
+        assert!(cfg
+            .strategy_params
+            .iter()
+            .any(|(k, v)| k == "strategy.fedel.harmonize_weight" && *v == 0.2));
     }
 
     #[test]
@@ -294,7 +412,28 @@ mod tests {
         let cfg = ExperimentCfg::default();
         let j = cfg.to_json();
         assert_eq!(j.s("strategy").unwrap(), "fedel");
-        assert_eq!(j.f("beta").unwrap(), 0.6);
+        assert!(j.get("beta").is_none(), "legacy field must stay out of new snapshots");
+    }
+
+    #[test]
+    fn comm_model_resolution_and_snapshot_stability() {
+        use crate::timing::CommModel;
+        let cfg = ExperimentCfg::default();
+        assert_eq!(cfg.comm_model(), CommModel::Constant(30.0));
+        // unset bandwidth keys stay out of the snapshot (old specs compare equal)
+        assert!(cfg.to_json().get("comm_up_mbps").is_none());
+        let cfg = ExperimentCfg { comm_up_mbps: 20.0, comm_latency_secs: 0.05, ..Default::default() };
+        match cfg.comm_model() {
+            CommModel::Bandwidth { up_mbps, down_mbps, latency_secs } => {
+                assert_eq!((up_mbps, down_mbps, latency_secs), (20.0, 0.0, 0.05));
+            }
+            other => panic!("{other:?}"),
+        }
+        let back = ExperimentCfg::from_json(&Json::parse(&cfg.to_json().to_string_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(back.comm_up_mbps, 20.0);
+        assert_eq!(back.comm_latency_secs, 0.05);
+        assert_eq!(back.comm_down_mbps, 0.0);
     }
 
     #[test]
@@ -307,7 +446,6 @@ mod tests {
             local_steps: 3,
             lr: 0.0125,
             alpha: 0.3,
-            beta: 0.45,
             t_th_factor: 1.5,
             slowest_round_secs: 1234.5,
             seed: 77,
@@ -326,7 +464,6 @@ mod tests {
         assert_eq!(back.local_steps, cfg.local_steps);
         assert_eq!(back.lr.to_bits(), cfg.lr.to_bits());
         assert_eq!(back.alpha.to_bits(), cfg.alpha.to_bits());
-        assert_eq!(back.beta.to_bits(), cfg.beta.to_bits());
         assert_eq!(back.seed, cfg.seed);
         assert_eq!(back.eval_every, cfg.eval_every);
         assert_eq!(back.eval_batches, cfg.eval_batches);

@@ -92,6 +92,9 @@ enum Slot {
     EvalBatches,
     TThFactor,
     CommSecs,
+    CommUpMbps,
+    CommDownMbps,
+    CommLatencySecs,
     SlowestRoundSecs,
     /// A strategy-declared tunable living in the config's parameter bag
     /// under its full key.
@@ -155,7 +158,11 @@ impl KeyDef {
                     return err(format!("must be > 0 (got {x})"));
                 }
             }
-            (Slot::CommSecs, ParamValue::F64(x)) | (Slot::SlowestRoundSecs, ParamValue::F64(x)) => {
+            (Slot::CommSecs, ParamValue::F64(x))
+            | (Slot::CommUpMbps, ParamValue::F64(x))
+            | (Slot::CommDownMbps, ParamValue::F64(x))
+            | (Slot::CommLatencySecs, ParamValue::F64(x))
+            | (Slot::SlowestRoundSecs, ParamValue::F64(x)) => {
                 if !x.is_finite() || *x < 0.0 {
                     return err(format!("must be >= 0 (got {x})"));
                 }
@@ -185,6 +192,9 @@ impl KeyDef {
             Slot::EvalBatches => ParamValue::Usize(cfg.eval_batches),
             Slot::TThFactor => ParamValue::F64(cfg.t_th_factor),
             Slot::CommSecs => ParamValue::F64(cfg.comm_secs),
+            Slot::CommUpMbps => ParamValue::F64(cfg.comm_up_mbps),
+            Slot::CommDownMbps => ParamValue::F64(cfg.comm_down_mbps),
+            Slot::CommLatencySecs => ParamValue::F64(cfg.comm_latency_secs),
             Slot::SlowestRoundSecs => ParamValue::F64(cfg.slowest_round_secs),
             Slot::StrategyParam { default, .. } => ParamValue::F64(
                 cfg.strategy_params
@@ -220,6 +230,9 @@ impl KeyDef {
             (Slot::EvalBatches, ParamValue::Usize(n)) => cfg.eval_batches = *n,
             (Slot::TThFactor, ParamValue::F64(x)) => cfg.t_th_factor = *x,
             (Slot::CommSecs, ParamValue::F64(x)) => cfg.comm_secs = *x,
+            (Slot::CommUpMbps, ParamValue::F64(x)) => cfg.comm_up_mbps = *x,
+            (Slot::CommDownMbps, ParamValue::F64(x)) => cfg.comm_down_mbps = *x,
+            (Slot::CommLatencySecs, ParamValue::F64(x)) => cfg.comm_latency_secs = *x,
             (Slot::SlowestRoundSecs, ParamValue::F64(x)) => cfg.slowest_round_secs = *x,
             (Slot::StrategyParam { .. }, ParamValue::F64(x)) => {
                 match cfg.strategy_params.iter_mut().find(|(k, _)| *k == self.key) {
@@ -267,7 +280,31 @@ impl ParamSpace {
                 "T_th as a factor of the fastest device's full round",
                 Slot::TThFactor,
             ),
-            KeyDef::fixed("time.comm_secs", F64, "per-round communication cost", Slot::CommSecs),
+            KeyDef::fixed(
+                "time.comm_secs",
+                F64,
+                "flat per-round communication cost (the degenerate CommModel)",
+                Slot::CommSecs,
+            ),
+            KeyDef::fixed(
+                "comm.up_mbps",
+                F64,
+                "client upload bandwidth, Mbit/s (any comm.* key > 0 switches to \
+                 the payload-priced CommModel; 0 = that direction free)",
+                Slot::CommUpMbps,
+            ),
+            KeyDef::fixed(
+                "comm.down_mbps",
+                F64,
+                "client download bandwidth, Mbit/s",
+                Slot::CommDownMbps,
+            ),
+            KeyDef::fixed(
+                "comm.latency_secs",
+                F64,
+                "per-transfer link latency, seconds",
+                Slot::CommLatencySecs,
+            ),
             KeyDef::fixed(
                 "time.slowest_round_secs",
                 F64,
@@ -558,6 +595,32 @@ mod tests {
         assert!(SweepAxis::parse(space, "data.alpha=0.1,0.1").is_err());
         let axis_json = a.to_json();
         assert_eq!(SweepAxis::from_json(space, &axis_json).unwrap(), a);
+    }
+
+    #[test]
+    fn comm_keys_resolve_and_apply() {
+        let space = ParamSpace::shared();
+        let mut cfg = ExperimentCfg::default();
+        for spec in ["comm.up_mbps=20", "comm.down_mbps=100", "comm.latency_secs=0.05"] {
+            let b = Binding::parse(space, spec).unwrap();
+            space.resolve(&b.key).unwrap().apply(&mut cfg, &b.value).unwrap();
+        }
+        assert_eq!(cfg.comm_up_mbps, 20.0);
+        assert_eq!(cfg.comm_down_mbps, 100.0);
+        assert_eq!(cfg.comm_latency_secs, 0.05);
+        assert!(Binding::parse(space, "comm.up_mbps=-1").is_err());
+        // sweepable like any other key
+        let axis = SweepAxis::parse(space, "comm.up_mbps=5,50").unwrap();
+        assert_eq!(axis.values.len(), 2);
+    }
+
+    #[test]
+    fn async_strategy_tunables_are_registered_keys() {
+        let space = ParamSpace::shared();
+        assert!(space.resolve("strategy.fedasync.alpha").is_ok());
+        assert!(space.resolve("strategy.fedasync.staleness_exp").is_ok());
+        assert!(space.resolve("strategy.fedbuff.buffer_k").is_ok());
+        assert!(Binding::parse(space, "strategy.fedbuff.buffer_k=0.5").is_err());
     }
 
     #[test]

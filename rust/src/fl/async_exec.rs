@@ -1,0 +1,622 @@
+//! Event-driven asynchronous execution: the runtime behind the
+//! `fedasync` / `fedbuff` strategy rows.
+//!
+//! The synchronous round loop ([`crate::fl::server`]) advances its clock
+//! by the slowest participant — the exact straggler tax FedEL attacks.
+//! Asynchronous FL sidesteps the barrier instead: every client trains the
+//! full model **at its own device pace**, and the server folds updates in
+//! as they arrive. This module simulates that with a discrete-event
+//! clock:
+//!
+//! * each client always has exactly one dispatch in flight, whose finish
+//!   time = dispatch time + download + compute + upload under the
+//!   experiment's [`CommModel`](crate::timing::CommModel);
+//! * events (upload completions) process in simulated-time order, ties
+//!   broken by client id, so the event sequence is a pure function of the
+//!   inputs;
+//! * the server aggregates per the strategy's [`AsyncSpec`]:
+//!   [`AsyncMode::PerArrival`] mixes every arrival immediately with a
+//!   staleness-decayed weight (FedAsync), [`AsyncMode::Buffered`] flushes
+//!   a data-size-weighted delta average every K arrivals (FedBuff). One
+//!   aggregation = one [`RoundRecord`], carrying the folded arrivals'
+//!   staleness statistics.
+//!
+//! Both of the repo's execution invariants carry over:
+//!
+//! * **Thread-count determinism** — training outcomes are pure functions
+//!   of (start params, client, iteration tag); parallelism only ever
+//!   executes already-dispatched work, and aggregation runs on the
+//!   coordinator in event order, so results are bitwise-identical at any
+//!   `exec_threads` (`tests/determinism.rs`). Steady-state dispatches are
+//!   serial by nature — each depends on the latest aggregated global —
+//!   so only the initial fleet-wide fan-out parallelizes.
+//! * **Kill/resume identity** — the runner's full execution state
+//!   (in-flight client clocks + dispatch versions, the referenced global
+//!   versions, the staleness buffer) snapshots to JSON after every
+//!   aggregation and rides `Checkpoint::async_state`
+//!   ([`crate::store::schema::Checkpoint`]); a resumed run re-executes
+//!   in-flight dispatches from their recorded start versions and
+//!   continues the event sequence exactly (`tests/resume.rs`).
+
+use crate::data::FedDataset;
+use crate::fl::bias::o1_bias;
+use crate::fl::observer::{RoundObserver, ServerState};
+use crate::fl::server::{
+    evaluate, execute_plan, execute_plans_streaming, plan_payload_bytes, ClientOutcome, ExecPool,
+    ExperimentResult, ResumeState, RoundInputs, RoundRecord, ServerCfg,
+};
+use crate::manifest::Manifest;
+use crate::runtime::{Engine, TrainSession};
+use crate::strategies::{full_model_plan, AsyncMode, AsyncSpec, ClientPlan, FleetCtx, Strategy};
+use crate::util::json::Json;
+
+/// One client's dispatch currently in flight.
+struct InFlight {
+    /// Client-local iteration index — the batch-sampling tag base, so a
+    /// client's data stream continues deterministically across dispatches
+    /// (and across kill/resume).
+    iter: usize,
+    /// Server version (aggregation count) whose global the dispatch
+    /// started from; staleness at aggregation = current version − this.
+    version: usize,
+    /// Simulated completion time (download + compute + upload).
+    finish: f64,
+    plan: ClientPlan,
+    /// Lazily executed; `None` until the event loop materializes it.
+    outcome: Option<ClientOutcome>,
+}
+
+/// An arrived update waiting in the FedBuff buffer.
+struct BufEntry {
+    version: usize,
+    plan: ClientPlan,
+    outcome: ClientOutcome,
+}
+
+/// The runner's mutable simulation state — everything a checkpoint must
+/// capture beyond the global model and the record stream.
+struct AsyncState {
+    /// One slot per client (index == client id).
+    inflight: Vec<InFlight>,
+    /// Global params by version, for every version still referenced by an
+    /// in-flight dispatch or a buffered update (GC'd as references drop).
+    versions: std::collections::BTreeMap<usize, Vec<f32>>,
+    /// FedBuff's pending arrivals (always empty for FedAsync).
+    buffer: Vec<BufEntry>,
+}
+
+impl AsyncState {
+    /// Drop version params nothing references anymore.
+    fn gc_versions(&mut self) {
+        let live: std::collections::BTreeSet<usize> = self
+            .inflight
+            .iter()
+            .map(|f| f.version)
+            .chain(self.buffer.iter().map(|b| b.version))
+            .collect();
+        self.versions.retain(|v, _| live.contains(v));
+    }
+
+    /// The earliest-finishing in-flight client — ties break by client id,
+    /// the deterministic event order the module doc promises.
+    fn next_event(&self) -> usize {
+        self.inflight
+            .iter()
+            .enumerate()
+            .min_by(|(ca, a), (cb, b)| a.finish.total_cmp(&b.finish).then(ca.cmp(cb)))
+            .map(|(c, _)| c)
+            .expect("async runner with an empty fleet")
+    }
+
+    /// Serialize for `Checkpoint::async_state`. f32 params ride JSON f64
+    /// numbers (exact: f32→f64 is lossless and the writer's shortest
+    /// round-trip Display preserves every f64), so resumed state is
+    /// bit-identical.
+    fn to_json(&self, mode: &AsyncMode) -> Json {
+        Json::obj(vec![
+            ("mode", Json::Str(mode_tag(mode).to_string())),
+            (
+                "inflight",
+                Json::Arr(
+                    self.inflight
+                        .iter()
+                        .enumerate()
+                        .map(|(client, f)| {
+                            Json::obj(vec![
+                                ("client", Json::Num(client as f64)),
+                                ("iter", Json::Num(f.iter as f64)),
+                                ("version", Json::Num(f.version as f64)),
+                                ("finish", Json::Num(f.finish)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "versions",
+                Json::Arr(
+                    self.versions
+                        .iter()
+                        .map(|(v, params)| {
+                            Json::obj(vec![
+                                ("version", Json::Num(*v as f64)),
+                                ("params", f32s_to_json(params)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "buffer",
+                Json::Arr(
+                    self.buffer
+                        .iter()
+                        .map(|b| {
+                            Json::obj(vec![
+                                ("client", Json::Num(b.outcome.client as f64)),
+                                ("version", Json::Num(b.version as f64)),
+                                ("mean_loss", Json::Num(b.outcome.mean_loss)),
+                                ("sq_grads", Json::from_f64s(&b.outcome.sq_grads)),
+                                ("params", f32s_to_json(&b.outcome.params)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Rebuild from a checkpoint snapshot. In-flight *outcomes* are not
+    /// stored — they re-execute deterministically from the recorded start
+    /// version and iteration tag.
+    fn from_json(j: &Json, ctx: &FleetCtx, mode: &AsyncMode) -> anyhow::Result<AsyncState> {
+        let got = j.s("mode")?;
+        anyhow::ensure!(
+            got == mode_tag(mode),
+            "checkpoint was taken in async mode {got:?} but the strategy runs {:?}",
+            mode_tag(mode)
+        );
+        let n = ctx.n_clients();
+        let mut inflight: Vec<Option<InFlight>> = (0..n).map(|_| None).collect();
+        for f in j.arr("inflight")? {
+            let client = f.u("client")?;
+            anyhow::ensure!(client < n, "async state: in-flight client {client} out of range");
+            anyhow::ensure!(
+                inflight[client].is_none(),
+                "async state: client {client} in flight twice"
+            );
+            inflight[client] = Some(InFlight {
+                iter: f.u("iter")?,
+                version: f.u("version")?,
+                finish: f.f("finish")?,
+                plan: full_model_plan(ctx, client),
+                outcome: None,
+            });
+        }
+        let inflight: Vec<InFlight> = inflight
+            .into_iter()
+            .enumerate()
+            .map(|(c, f)| f.ok_or_else(|| anyhow::anyhow!("async state: client {c} not in flight")))
+            .collect::<anyhow::Result<_>>()?;
+        let mut versions = std::collections::BTreeMap::new();
+        for v in j.arr("versions")? {
+            let params = json_to_f32s(v.req("params")?, "version params")?;
+            anyhow::ensure!(
+                params.len() == ctx.manifest.param_count,
+                "async state: version params hold {} elements, manifest wants {}",
+                params.len(),
+                ctx.manifest.param_count
+            );
+            versions.insert(v.u("version")?, params);
+        }
+        let mut buffer = Vec::new();
+        for b in j.arr("buffer")? {
+            let client = b.u("client")?;
+            anyhow::ensure!(client < n, "async state: buffered client {client} out of range");
+            buffer.push(BufEntry {
+                version: b.u("version")?,
+                plan: full_model_plan(ctx, client),
+                outcome: ClientOutcome {
+                    client,
+                    params: json_to_f32s(b.req("params")?, "buffered params")?,
+                    sq_grads: b.req("sq_grads")?.to_f64_vec()?,
+                    mean_loss: b.f("mean_loss")?,
+                },
+            });
+        }
+        let state = AsyncState { inflight, versions, buffer };
+        for f in &state.inflight {
+            anyhow::ensure!(
+                state.versions.contains_key(&f.version),
+                "async state: in-flight version {} has no stored params",
+                f.version
+            );
+        }
+        for b in &state.buffer {
+            anyhow::ensure!(
+                b.outcome.params.len() == ctx.manifest.param_count,
+                "async state: buffered params hold {} elements, manifest wants {}",
+                b.outcome.params.len(),
+                ctx.manifest.param_count
+            );
+        }
+        Ok(state)
+    }
+}
+
+fn mode_tag(mode: &AsyncMode) -> &'static str {
+    match mode {
+        AsyncMode::PerArrival { .. } => "per_arrival",
+        AsyncMode::Buffered { .. } => "buffered",
+    }
+}
+
+fn f32s_to_json(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|&p| Json::Num(p as f64)).collect())
+}
+
+fn json_to_f32s(j: &Json, what: &str) -> anyhow::Result<Vec<f32>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("async state: {what} not an array"))?
+        .iter()
+        .map(|x| {
+            x.as_f64()
+                .map(|x| x as f32)
+                .ok_or_else(|| anyhow::anyhow!("async state: {what} entry not a number"))
+        })
+        .collect()
+}
+
+/// Dispatch a fresh full-model work order for `client` at simulated time
+/// `now`, starting from the current global (`version`).
+fn dispatch(
+    ctx: &FleetCtx,
+    m: &Manifest,
+    cfg: &ServerCfg,
+    client: usize,
+    iter: usize,
+    version: usize,
+    now: f64,
+) -> InFlight {
+    let plan = full_model_plan(ctx, client);
+    let cov = plan.mask.tensor_coverage();
+    let (down, up) = plan_payload_bytes(m, &plan, &cov);
+    InFlight {
+        iter,
+        version,
+        finish: now + cfg.comm.client_total_secs(plan.est_time, down, up),
+        plan,
+        outcome: None,
+    }
+}
+
+/// Execute every not-yet-materialized in-flight dispatch. When all of
+/// them share a start version and iteration tag (the initial fleet-wide
+/// fan-out), they run through the parallel executor; mixed pending sets
+/// (post-resume) run serially through the coordinator session — outcomes
+/// are pure either way, so results never depend on the path taken.
+#[allow(clippy::too_many_arguments)]
+fn execute_pending(
+    engine: &dyn Engine,
+    ds: &FedDataset,
+    ctx: &FleetCtx,
+    m: &Manifest,
+    prox_mu: f64,
+    state: &mut AsyncState,
+    coordinator: &mut dyn TrainSession,
+    pool: ExecPool<'_>,
+) -> anyhow::Result<()> {
+    let pending: Vec<usize> = (0..state.inflight.len())
+        .filter(|&c| state.inflight[c].outcome.is_none())
+        .collect();
+    let Some(&first) = pending.first() else {
+        return Ok(());
+    };
+    let uniform = pending.iter().all(|&c| {
+        state.inflight[c].version == state.inflight[first].version
+            && state.inflight[c].iter == state.inflight[first].iter
+    });
+    if uniform && pending.len() > 1 {
+        let start = state.versions[&state.inflight[first].version].clone();
+        let inputs =
+            RoundInputs { ds, ctx, global: &start, round: state.inflight[first].iter, prox_mu };
+        let plans: Vec<ClientPlan> =
+            pending.iter().map(|&c| state.inflight[c].plan.clone()).collect();
+        let mut outs: Vec<Option<ClientOutcome>> = (0..plans.len()).map(|_| None).collect();
+        execute_plans_streaming(engine, &inputs, &plans, pool, |i, out| {
+            outs[i] = Some(out);
+            Ok(())
+        })?;
+        for (slot, out) in pending.iter().zip(outs) {
+            state.inflight[*slot].outcome = out;
+        }
+    } else {
+        for c in pending {
+            let start = state.versions[&state.inflight[c].version].clone();
+            let inputs =
+                RoundInputs { ds, ctx, global: &start, round: state.inflight[c].iter, prox_mu };
+            let out = execute_plan(coordinator, &inputs, m, &state.inflight[c].plan)?;
+            state.inflight[c].outcome = Some(out);
+        }
+    }
+    Ok(())
+}
+
+/// Run an asynchronous experiment to `cfg.rounds` aggregations (the async
+/// analogue of rounds), optionally continuing from a [`ResumeState`]
+/// whose checkpoint carried the runner snapshot. Called by
+/// [`crate::fl::server::run_experiment_from`] whenever the strategy
+/// declares an [`AsyncSpec`] — the sync entry points, the run store, and
+/// the campaign runner all route here transparently.
+#[allow(clippy::too_many_arguments)]
+pub fn run_experiment_async(
+    engine: &dyn Engine,
+    ds: &FedDataset,
+    strategy: &mut dyn Strategy,
+    spec: AsyncSpec,
+    ctx: &FleetCtx,
+    cfg: &ServerCfg,
+    observer: &mut dyn RoundObserver,
+    resume: Option<ResumeState>,
+) -> anyhow::Result<ExperimentResult> {
+    let m: Manifest = engine.manifest().clone();
+    anyhow::ensure!(m.param_count == ctx.manifest.param_count, "engine/ctx manifest mismatch");
+    anyhow::ensure!(cfg.eval_every > 0, "eval_every must be >= 1");
+    anyhow::ensure!(ctx.n_clients() > 0, "async runner needs at least one client");
+    anyhow::ensure!(
+        ds.clients.len() == ctx.n_clients(),
+        "dataset holds {} clients, fleet has {}",
+        ds.clients.len(),
+        ctx.n_clients()
+    );
+    let prox_mu = strategy.prox_mu();
+
+    // -- restore or initialize ------------------------------------------------
+    let (mut global, mut records, mut sim_time, mut completed, restored) = match resume {
+        Some(r) => {
+            anyhow::ensure!(
+                r.global.len() == m.param_count,
+                "resume params hold {} elements, manifest wants {}",
+                r.global.len(),
+                m.param_count
+            );
+            anyhow::ensure!(
+                r.completed <= cfg.rounds,
+                "resume point (aggregation {}) is beyond the configured {} rounds",
+                r.completed,
+                cfg.rounds
+            );
+            anyhow::ensure!(
+                r.prior_records.len() == r.completed,
+                "resume carries {} records for {} completed aggregations",
+                r.prior_records.len(),
+                r.completed
+            );
+            if !matches!(r.policy_state, Json::Null) {
+                strategy.restore_policy_state(&r.policy_state)?;
+            }
+            let restored = match &r.async_state {
+                Json::Null => {
+                    // A warm start (aggregation 0, fresh clocks) is fine;
+                    // a real mid-flight checkpoint without runner state
+                    // is not reconstructible.
+                    anyhow::ensure!(
+                        r.completed == 0,
+                        "checkpoint at aggregation {} has no async runner state — \
+                         it was taken by a synchronous run",
+                        r.completed
+                    );
+                    None
+                }
+                j => Some(AsyncState::from_json(j, ctx, &spec.mode)?),
+            };
+            (r.global, r.prior_records, r.sim_time, r.completed, restored)
+        }
+        None => (
+            m.load_init().unwrap_or_else(|_| vec![0.0; m.param_count]),
+            Vec::with_capacity(cfg.rounds),
+            0.0f64,
+            0,
+            None,
+        ),
+    };
+
+    // Fresh start: every client dispatched at t = 0 from version 0.
+    let mut state = match restored {
+        Some(s) => s,
+        None => {
+            let mut versions = std::collections::BTreeMap::new();
+            versions.insert(completed, global.clone());
+            let inflight = (0..ctx.n_clients())
+                .map(|client| dispatch(ctx, &m, cfg, client, 0, completed, sim_time))
+                .collect();
+            AsyncState { inflight, versions, buffer: Vec::new() }
+        }
+    };
+
+    let mut eval_session = engine.session();
+    let mut coordinator = engine.session();
+    let dedicated_pool = if engine.parallel_sessions() {
+        ExecPool::build(cfg.exec_threads)?
+    } else {
+        None
+    };
+
+    // -- the event loop -------------------------------------------------------
+    while completed < cfg.rounds {
+        execute_pending(
+            engine,
+            ds,
+            ctx,
+            &m,
+            prox_mu,
+            &mut state,
+            coordinator.as_mut(),
+            ExecPool::from_cfg(cfg.exec_threads, dedicated_pool.as_ref()),
+        )?;
+        let client = state.next_event();
+        let now = state.inflight[client].finish;
+        let arrived_version = state.inflight[client].version;
+        let next_iter = state.inflight[client].iter + 1;
+        let outcome = state.inflight[client]
+            .outcome
+            .take()
+            .expect("pending dispatches were just executed");
+        let arrived_plan = state.inflight[client].plan.clone();
+
+        // What (if anything) this arrival aggregates: the folded updates'
+        // (plans, outcomes, staleness).
+        let aggregated = match spec.mode {
+            AsyncMode::PerArrival { alpha, staleness_exp } => {
+                let staleness = completed - arrived_version;
+                let w = alpha / (1.0 + staleness as f64).powf(staleness_exp);
+                for k in 0..global.len() {
+                    global[k] =
+                        ((1.0 - w) * global[k] as f64 + w * outcome.params[k] as f64) as f32;
+                }
+                Some((vec![arrived_plan], vec![outcome], vec![staleness]))
+            }
+            AsyncMode::Buffered { k } => {
+                state.buffer.push(BufEntry {
+                    version: arrived_version,
+                    plan: arrived_plan,
+                    outcome,
+                });
+                if state.buffer.len() >= k.max(1) {
+                    // Data-size-weighted average of the buffered deltas
+                    // (update − its dispatch-version global), folded in
+                    // arrival order.
+                    let mut acc = vec![0.0f64; global.len()];
+                    let mut wsum = 0.0f64;
+                    let mut plans = Vec::with_capacity(state.buffer.len());
+                    let mut outs = Vec::with_capacity(state.buffer.len());
+                    let mut stale = Vec::with_capacity(state.buffer.len());
+                    for b in state.buffer.drain(..) {
+                        let weight = ds.clients[b.outcome.client].num_samples as f64;
+                        let start = &state.versions[&b.version];
+                        for i in 0..acc.len() {
+                            acc[i] += weight * (b.outcome.params[i] as f64 - start[i] as f64);
+                        }
+                        wsum += weight;
+                        stale.push(completed - b.version);
+                        plans.push(b.plan);
+                        outs.push(b.outcome);
+                    }
+                    for i in 0..global.len() {
+                        global[i] = (global[i] as f64 + acc[i] / wsum) as f32;
+                    }
+                    Some((plans, outs, stale))
+                } else {
+                    None
+                }
+            }
+        };
+
+        let did_aggregate = aggregated.is_some();
+        if let Some((plans, outs, stale)) = aggregated {
+            let round = completed;
+            observer.on_round_start(round, &plans);
+            let mut losses = Vec::with_capacity(outs.len());
+            let mut coverage = Vec::with_capacity(outs.len());
+            let mut tensor_masks = Vec::with_capacity(outs.len());
+            let mut client_secs = Vec::with_capacity(outs.len());
+            for (plan, out) in plans.iter().zip(&outs) {
+                observer.on_client_done(round, plan, out);
+                losses.push(out.mean_loss);
+                let cov = plan.mask.tensor_coverage();
+                coverage
+                    .push(cov.iter().map(|&c| c as f64).sum::<f64>() / cov.len().max(1) as f64);
+                tensor_masks.push(cov);
+                client_secs.push((plan.client, plan.est_time));
+            }
+            completed += 1;
+            let round_secs = now - sim_time;
+            sim_time = now;
+
+            let do_eval = round % cfg.eval_every == cfg.eval_every - 1 || completed == cfg.rounds;
+            let (eval_acc, eval_loss) = if do_eval {
+                let (a, l) = evaluate(
+                    engine,
+                    eval_session.as_mut(),
+                    ExecPool::from_cfg(cfg.exec_threads, dedicated_pool.as_ref()),
+                    ds,
+                    &global,
+                )?;
+                observer.on_eval(round, a, l);
+                (Some(a), Some(l))
+            } else {
+                (None, None)
+            };
+            let record = RoundRecord {
+                round,
+                round_secs,
+                sim_time,
+                mean_train_loss: crate::util::stats::mean(&losses),
+                participants: plans.len(),
+                mean_coverage: crate::util::stats::mean(&coverage),
+                o1: o1_bias(&tensor_masks),
+                eval_acc,
+                eval_loss,
+                client_secs,
+                mean_staleness: Some(crate::util::stats::mean(
+                    &stale.iter().map(|&s| s as f64).collect::<Vec<_>>(),
+                )),
+                max_staleness: Some(stale.iter().copied().max().unwrap_or(0) as f64),
+            };
+            observer.on_round_end(&record);
+            records.push(record);
+        }
+
+        // Re-dispatch the arrived client from the (possibly just updated)
+        // global — FedAsync hands back the freshly mixed model, FedBuff
+        // the current (post-flush, if this arrival flushed) one.
+        state.versions.entry(completed).or_insert_with(|| global.clone());
+        state.inflight[client] = dispatch(ctx, &m, cfg, client, next_iter, completed, now);
+        state.gc_versions();
+
+        // An aggregation closed this event: expose the checkpoint seam.
+        // The snapshot closure captures the state AFTER the re-dispatch,
+        // so a resumed run re-enters the event loop exactly here — and it
+        // only serializes if an observer (checkpoint cadence) asks.
+        if did_aggregate {
+            let snapshot = || state.to_json(&spec.mode);
+            observer.on_server_state(&ServerState {
+                completed,
+                sim_time,
+                global: &global,
+                strategy: &*strategy,
+                async_state: Some(&snapshot),
+            });
+            if cfg.halt_after == Some(completed) && completed < cfg.rounds {
+                anyhow::bail!(
+                    "halted after aggregation {completed} (simulated interruption — \
+                     resume from the run store)"
+                );
+            }
+        }
+    }
+
+    // The last aggregation always evaluated (do_eval forces it); the
+    // fallback only fires for rounds == 0.
+    let (final_acc, final_loss) = match records.last().and_then(|r| r.eval_acc.zip(r.eval_loss)) {
+        Some((a, l)) => (a, l),
+        None => evaluate(
+            engine,
+            eval_session.as_mut(),
+            ExecPool::from_cfg(cfg.exec_threads, dedicated_pool.as_ref()),
+            ds,
+            &global,
+        )?,
+    };
+    let result = ExperimentResult {
+        strategy: strategy.name().to_string(),
+        records,
+        sim_total_secs: sim_time,
+        final_acc,
+        final_loss,
+        final_params: global,
+        selections: Vec::new(),
+    };
+    observer.on_experiment_end(&result);
+    Ok(result)
+}

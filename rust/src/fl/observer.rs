@@ -38,6 +38,13 @@ pub struct ServerState<'a> {
     pub global: &'a [f32],
     /// The strategy, for [`Strategy::policy_state`] snapshots.
     pub strategy: &'a dyn Strategy,
+    /// Asynchronous-runner snapshot serializer ([`crate::fl::async_exec`]):
+    /// present only on async aggregation boundaries; checkpoints persist
+    /// its output so in-flight client clocks and the staleness buffer
+    /// resume exactly. Lazy on purpose — serializing the runner state is
+    /// O(live versions × params), and most aggregations fall between
+    /// checkpoint cadence points where nobody wants it.
+    pub async_state: Option<&'a dyn Fn() -> crate::util::json::Json>,
 }
 
 /// Callbacks the server emits while running an experiment. All methods
@@ -305,6 +312,8 @@ mod tests {
                 eval_acc: Some(0.5),
                 eval_loss: Some(1.0),
                 client_secs: vec![(0, 4.0), (1, 10.0)],
+                mean_staleness: None,
+                max_staleness: None,
             };
             o.on_round_end(&r);
         }

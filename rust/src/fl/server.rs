@@ -38,6 +38,7 @@ use crate::fl::observer::{RoundObserver, ServerState};
 use crate::manifest::Manifest;
 use crate::runtime::{Engine, TrainSession};
 use crate::strategies::{ClientPlan, FleetCtx, RoundFeedback, Strategy};
+use crate::timing::CommModel;
 use crate::util::json::Json;
 
 /// Server-side experiment configuration.
@@ -45,8 +46,11 @@ use crate::util::json::Json;
 pub struct ServerCfg {
     pub rounds: usize,
     pub eval_every: usize,
-    /// Per-round communication/aggregation overhead (simulated seconds).
-    pub comm_secs: f64,
+    /// How client communication is priced ([`CommModel`]): a flat
+    /// per-round constant (legacy `time.comm_secs`) or per-client
+    /// payload/bandwidth times, under which partial-training strategies
+    /// bank their masked-upload savings in time-to-accuracy.
+    pub comm: CommModel,
     /// Host threads for the client fan-out: 0 = one per core (rayon
     /// default pool), 1 = fully sequential, n = a dedicated n-thread pool.
     /// Results are identical at any setting.
@@ -64,7 +68,7 @@ impl Default for ServerCfg {
         ServerCfg {
             rounds: 50,
             eval_every: 5,
-            comm_secs: 30.0,
+            comm: CommModel::default(),
             exec_threads: 0,
             halt_after: None,
         }
@@ -88,8 +92,15 @@ pub struct RoundRecord {
     /// Eval (global test set) if this was an eval round.
     pub eval_acc: Option<f64>,
     pub eval_loss: Option<f64>,
-    /// Per-client simulated seconds (fig 2 / energy model).
+    /// Per-client simulated *compute* seconds (fig 2 / energy model);
+    /// communication time is not active-power time and stays out.
     pub client_secs: Vec<(usize, f64)>,
+    /// Mean server-version lag of the updates aggregated in this record —
+    /// asynchronous modes only ([`crate::fl::async_exec`]); `None` for
+    /// synchronous rounds, where every update is round-fresh.
+    pub mean_staleness: Option<f64>,
+    /// Worst staleness among this record's aggregated updates.
+    pub max_staleness: Option<f64>,
 }
 
 impl RoundRecord {
@@ -180,7 +191,7 @@ impl ExperimentResult {
 /// long-lived session serves the sequential paths); per-batch results
 /// merge in *batch order* on the coordinator thread, so the score is
 /// thread-count-invariant like everything else in the round loop.
-fn evaluate(
+pub(crate) fn evaluate(
     engine: &dyn Engine,
     coordinator: &mut dyn TrainSession,
     pool: ExecPool<'_>,
@@ -243,7 +254,7 @@ pub enum ExecPool<'p> {
 impl ExecPool<'_> {
     /// Build the pool for a `ServerCfg::exec_threads` setting. A dedicated
     /// pool is constructed once here, not per round.
-    fn build(threads: usize) -> anyhow::Result<Option<rayon::ThreadPool>> {
+    pub(crate) fn build(threads: usize) -> anyhow::Result<Option<rayon::ThreadPool>> {
         match threads {
             0 | 1 => Ok(None),
             n => rayon::ThreadPoolBuilder::new()
@@ -254,7 +265,7 @@ impl ExecPool<'_> {
         }
     }
 
-    fn from_cfg(threads: usize, dedicated: Option<&rayon::ThreadPool>) -> ExecPool<'_> {
+    pub(crate) fn from_cfg(threads: usize, dedicated: Option<&rayon::ThreadPool>) -> ExecPool<'_> {
         match (threads, dedicated) {
             (1, _) => ExecPool::Sequential,
             (_, Some(pool)) => ExecPool::Dedicated(pool),
@@ -265,7 +276,7 @@ impl ExecPool<'_> {
 
 /// Execute stage, single client: local SGD from the round's global model
 /// through one session. Pure in its inputs — no shared mutable state.
-fn execute_plan(
+pub(crate) fn execute_plan(
     session: &mut dyn TrainSession,
     inp: &RoundInputs<'_>,
     m: &Manifest,
@@ -301,6 +312,19 @@ fn execute_plan(
         sq_grads: sq,
         mean_loss: loss_acc / plan.local_steps.max(1) as f64,
     })
+}
+
+/// Communication payloads of one plan, in bytes of f32 parameters:
+/// download = the forward sub-model through the plan's exit (at least the
+/// trained set, which head-training strategies can exceed), upload = the
+/// trained (masked) elements only — where partial training banks its
+/// savings under a bandwidth [`CommModel`].
+pub(crate) fn plan_payload_bytes(m: &Manifest, plan: &ClientPlan, coverage: &[f32]) -> (f64, f64) {
+    // Both terms in ELEMENTS until the final x4 — the download covers the
+    // forward sub-model or the trained set, whichever is larger.
+    let up_elems = m.masked_param_count(coverage);
+    let down_elems = (m.forward_param_count(plan.exit) as f64).max(up_elems);
+    (4.0 * down_elems, 4.0 * up_elems)
 }
 
 /// Execute stage, whole round, streaming: fan the plans out over the pool
@@ -396,6 +420,10 @@ pub struct ResumeState {
     /// resumed [`ExperimentResult`] is indistinguishable from an
     /// uninterrupted one.
     pub prior_records: Vec<RoundRecord>,
+    /// Asynchronous-runner snapshot ([`crate::fl::async_exec`]): in-flight
+    /// client clocks, dispatch versions, and the staleness buffer.
+    /// `Json::Null` for synchronous runs and warm starts.
+    pub async_state: Json,
 }
 
 impl ResumeState {
@@ -409,6 +437,7 @@ impl ResumeState {
             global,
             policy_state: Json::Null,
             prior_records: Vec::new(),
+            async_state: Json::Null,
         }
     }
 }
@@ -428,6 +457,10 @@ pub fn run_experiment(
 /// Run one experiment, optionally continuing from a [`ResumeState`].
 /// Observers see only the rounds executed by *this* call; the result's
 /// record stream covers the whole experiment including prior rounds.
+///
+/// Strategies that declare an [`crate::strategies::AsyncSpec`] dispatch to
+/// the event-driven asynchronous runner ([`crate::fl::async_exec`])
+/// instead of the synchronous round loop below.
 pub fn run_experiment_from(
     engine: &dyn Engine,
     ds: &FedDataset,
@@ -437,6 +470,18 @@ pub fn run_experiment_from(
     observer: &mut dyn RoundObserver,
     resume: Option<ResumeState>,
 ) -> anyhow::Result<ExperimentResult> {
+    if let Some(spec) = strategy.async_spec() {
+        return crate::fl::async_exec::run_experiment_async(
+            engine, ds, strategy, spec, ctx, cfg, observer, resume,
+        );
+    }
+    if let Some(r) = &resume {
+        anyhow::ensure!(
+            matches!(r.async_state, Json::Null),
+            "checkpoint carries asynchronous runner state but {} runs synchronously",
+            strategy.name()
+        );
+    }
     let m = engine.manifest().clone();
     anyhow::ensure!(m.param_count == ctx.manifest.param_count, "engine/ctx manifest mismatch");
     anyhow::ensure!(cfg.eval_every > 0, "eval_every must be >= 1");
@@ -519,9 +564,15 @@ pub fn run_experiment_from(
                 let cov = plan.mask.tensor_coverage();
                 coverage
                     .push(cov.iter().map(|&c| c as f64).sum::<f64>() / cov.len().max(1) as f64);
+                // The client's wall-clock includes its transfers: download
+                // the forward sub-model, upload the trained (masked)
+                // elements. Under CommModel::Constant this reduces to the
+                // legacy max(est) + comm_secs bitwise (monotone addition).
+                let (down_bytes, up_bytes) = plan_payload_bytes(&m, plan, &cov);
+                round_secs =
+                    round_secs.max(cfg.comm.client_total_secs(plan.est_time, down_bytes, up_bytes));
                 tensor_masks.push(cov);
                 losses.push(out.mean_loss);
-                round_secs = round_secs.max(plan.est_time);
                 client_secs.push((plan.client, plan.est_time));
                 observer.on_client_done(round, plan, &out);
                 // Consume the outcome into the strategy feedback (moves
@@ -538,7 +589,6 @@ pub fn run_experiment_from(
         let o1 = o1_bias(&tensor_masks);
         strategy.observe(&fb, ctx);
 
-        round_secs += cfg.comm_secs;
         sim_time += round_secs;
         global = new_global;
 
@@ -567,6 +617,8 @@ pub fn run_experiment_from(
             eval_acc,
             eval_loss,
             client_secs,
+            mean_staleness: None,
+            max_staleness: None,
         };
         observer.on_round_end(&record);
         records.push(record);
@@ -575,6 +627,8 @@ pub fn run_experiment_from(
             sim_time,
             global: &global,
             strategy: &*strategy,
+            // Synchronous rounds have no runner state beyond the strategy.
+            async_state: None,
         });
         if cfg.halt_after == Some(round + 1) && round + 1 < cfg.rounds {
             anyhow::bail!(

@@ -22,6 +22,9 @@
 //!   fedel campaign run --name sweep --store runs --model mock:8x100 \
 //!       --sweep strategy=fedavg,fedel --sweep seed=1,2,3 \
 //!       --sweep data.alpha=0.1,0.5 --rounds 20
+//!   fedel campaign run --name async --store runs --model mock:8x100 \
+//!       --sweep strategy=fedavg,fedel,fedbuff --rounds 20 \
+//!       --set comm.up_mbps=20 --set comm.down_mbps=100
 //!   fedel campaign run --name sweep --store runs        # resume after a kill
 //!   fedel campaign report --name sweep --store runs --over seed --json report.json
 //!   fedel compare --model mock:8x100 --strategies fedavg,fedel --rounds 20
@@ -275,14 +278,28 @@ fn cmd_runs(args: &Args) -> anyhow::Result<()> {
                     f.params.digest
                 );
             }
-            let mut t = Table::new("eval curve", &["round", "sim time", "acc", "loss"]);
+            // Async runs (fedasync/fedbuff) record per-aggregation
+            // staleness; show the column only when it exists.
+            let has_staleness = m.records.iter().any(|r| r.mean_staleness.is_some());
+            let mut headers = vec!["round", "sim time", "acc", "loss"];
+            if has_staleness {
+                headers.push("staleness (mean/max)");
+            }
+            let mut t = Table::new("eval curve", &headers);
             for r in m.records.iter().filter(|r| r.eval_acc.is_some()) {
-                t.row(vec![
+                let mut row = vec![
                     format!("{}", r.round),
                     fedel::util::fmt_hours(r.sim_time),
                     format!("{:.4}", r.eval_acc.unwrap_or(0.0)),
                     format!("{:.4}", r.eval_loss.unwrap_or(0.0)),
-                ]);
+                ];
+                if has_staleness {
+                    row.push(match (r.mean_staleness, r.max_staleness) {
+                        (Some(mean), Some(max)) => format!("{mean:.2}/{max:.0}"),
+                        _ => "-".to_string(),
+                    });
+                }
+                t.row(row);
             }
             t.print();
         }

@@ -203,6 +203,37 @@ impl Manifest {
         }
         out
     }
+
+    /// Parameter elements a client must download to run forward to `exit`:
+    /// bodies of every block `< exit` plus the exit head (the same
+    /// sub-model [`TimingModel::forward_time`](crate::timing::TimingModel)
+    /// prices). The communication model's download payload.
+    pub fn forward_param_count(&self, exit: usize) -> usize {
+        let mut n = 0usize;
+        for b in 0..exit {
+            for &i in &self.blocks[b].tensor_ids {
+                if !self.tensors[i].is_head {
+                    n += self.tensors[i].size;
+                }
+            }
+        }
+        for i in self.head_tensors_of_block(exit - 1) {
+            n += self.tensors[i].size;
+        }
+        n
+    }
+
+    /// Fractional trained-element count under a per-tensor coverage vector
+    /// (the [`MaskSpec::tensor_coverage`](crate::strategies::MaskSpec)
+    /// form): the communication model's upload payload.
+    pub fn masked_param_count(&self, coverage: &[f32]) -> f64 {
+        debug_assert_eq!(coverage.len(), self.tensors.len());
+        self.tensors
+            .iter()
+            .zip(coverage)
+            .map(|(t, &c)| t.size as f64 * c as f64)
+            .sum()
+    }
 }
 
 /// Discover all model manifests under an artifacts root.

@@ -23,14 +23,30 @@ pub struct EnergyReport {
 const IDLE_FRACTION: f64 = 0.25; // idle draw relative to active
 
 /// Fleet energy from an experiment's per-round per-client times.
-pub fn energy_report(res: &ExperimentResult, fleet: &[DeviceProfile]) -> EnergyReport {
+///
+/// Every recorded client id must index into `fleet`: a result paired with
+/// the wrong fleet is a provenance bug, and silently wrapping the id (the
+/// old `fleet[client % fleet.len()]`) attributed one device's energy to
+/// another without a trace. Mismatches now error instead.
+pub fn energy_report(
+    res: &ExperimentResult,
+    fleet: &[DeviceProfile],
+) -> anyhow::Result<EnergyReport> {
+    anyhow::ensure!(!fleet.is_empty(), "energy report over an empty fleet");
     let mut total_j = 0.0;
     let mut per: std::collections::BTreeMap<String, f64> = Default::default();
     let mut power_sum = 0.0;
     let mut power_n = 0usize;
     for rec in &res.records {
         for &(client, secs) in &rec.client_secs {
-            let dev = &fleet[client % fleet.len()];
+            anyhow::ensure!(
+                client < fleet.len(),
+                "round {}: client id {client} out of range for a {}-device fleet — \
+                 this result was recorded against a different fleet",
+                rec.round,
+                fleet.len()
+            );
+            let dev = &fleet[client];
             let active = dev.power_watts * secs;
             let idle = dev.power_watts * IDLE_FRACTION * (rec.round_secs - secs).max(0.0);
             total_j += active + idle;
@@ -39,11 +55,11 @@ pub fn energy_report(res: &ExperimentResult, fleet: &[DeviceProfile]) -> EnergyR
             power_n += 1;
         }
     }
-    EnergyReport {
+    Ok(EnergyReport {
         mean_power_w: if power_n == 0 { 0.0 } else { power_sum / power_n as f64 },
         total_kj: total_j / 1e3,
         per_device: per.into_iter().collect(),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -65,6 +81,8 @@ mod tests {
                 eval_acc: None,
                 eval_loss: None,
                 client_secs: times,
+                mean_staleness: None,
+                max_staleness: None,
             }],
             sim_total_secs: round_secs,
             final_acc: 0.0,
@@ -77,8 +95,8 @@ mod tests {
     #[test]
     fn energy_tracks_active_time() {
         let fleet = vec![DeviceProfile::new("d", 1.0, 10.0)];
-        let short = energy_report(&result_with(vec![(0, 100.0)], 100.0), &fleet);
-        let long = energy_report(&result_with(vec![(0, 200.0)], 200.0), &fleet);
+        let short = energy_report(&result_with(vec![(0, 100.0)], 100.0), &fleet).unwrap();
+        let long = energy_report(&result_with(vec![(0, 200.0)], 200.0), &fleet).unwrap();
         assert!(long.total_kj > short.total_kj * 1.9);
     }
 
@@ -86,7 +104,7 @@ mod tests {
     fn idle_waiting_costs_less_than_training() {
         let fleet = vec![DeviceProfile::new("fast", 1.0, 10.0), DeviceProfile::new("slow", 2.0, 10.0)];
         // fast client finishes at 100s, waits 100s for the slow one
-        let rep = energy_report(&result_with(vec![(0, 100.0), (1, 200.0)], 200.0), &fleet);
+        let rep = energy_report(&result_with(vec![(0, 100.0), (1, 200.0)], 200.0), &fleet).unwrap();
         // fast: 10*100 + 2.5*100 = 1250 J; slow: 10*200 = 2000 J
         assert!((rep.total_kj - 3.25).abs() < 1e-9, "{}", rep.total_kj);
     }
@@ -94,7 +112,19 @@ mod tests {
     #[test]
     fn mean_power_is_profile_power() {
         let fleet = vec![DeviceProfile::new("d", 1.0, 15.0)];
-        let rep = energy_report(&result_with(vec![(0, 50.0)], 50.0), &fleet);
+        let rep = energy_report(&result_with(vec![(0, 50.0)], 50.0), &fleet).unwrap();
         assert_eq!(rep.mean_power_w, 15.0);
+    }
+
+    #[test]
+    fn out_of_range_client_ids_error_instead_of_wrapping() {
+        // Regression: `fleet[client % fleet.len()]` silently charged
+        // client 2's energy to device 0 of a 2-device fleet.
+        let fleet =
+            vec![DeviceProfile::new("a", 1.0, 10.0), DeviceProfile::new("b", 2.0, 10.0)];
+        let err = energy_report(&result_with(vec![(2, 50.0)], 50.0), &fleet).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        assert!(err.to_string().contains("different fleet"), "{err}");
+        assert!(energy_report(&result_with(vec![(0, 1.0)], 1.0), &[]).is_err());
     }
 }

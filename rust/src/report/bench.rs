@@ -121,13 +121,15 @@ impl Workload {
             local_steps: steps,
             lr: if self.is_lm() { 0.1 } else { 0.04 },
             alpha: 0.1,
-            beta: 0.6,
             t_th_factor: 1.0,
             slowest_round_secs: self.fedavg_round_mins() * 60.0,
             seed,
             eval_every: (rounds / 8).max(2),
             eval_batches: if full { 16 } else { 6 },
             comm_secs: 30.0,
+            comm_up_mbps: 0.0,
+            comm_down_mbps: 0.0,
+            comm_latency_secs: 0.0,
             exec_threads: 0,
             strategy_params: Vec::new(),
             record_selections: false,

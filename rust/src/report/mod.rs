@@ -495,6 +495,8 @@ mod tests {
                 eval_acc: Some(a),
                 eval_loss: Some(1.0),
                 client_secs: vec![],
+                mean_staleness: None,
+                max_staleness: None,
             })
             .collect();
         ExperimentResult {

@@ -135,19 +135,18 @@ impl Experiment {
     ) -> anyhow::Result<ExperimentResult> {
         let name = strategy_override.unwrap_or(&self.cfg.strategy).to_string();
         // Built through the registry so the config's parameter bag
-        // (`--set strategy.<s>.<p>=v`, swept axes) reaches the builder;
-        // cfg.beta keeps seeding the FedEL family's harmonize_weight.
+        // (`--set strategy.<s>.<p>=v`, swept axes, the deprecated --beta
+        // alias) reaches the builder.
         let mut strategy = crate::strategies::registry::builtin().build(
             &name,
             &self.ctx,
             self.cfg.seed,
-            self.cfg.beta,
             &self.cfg.strategy_params,
         )?;
         let server_cfg = ServerCfg {
             rounds: self.cfg.rounds,
             eval_every: self.cfg.eval_every,
-            comm_secs: self.cfg.comm_secs,
+            comm: self.cfg.comm_model(),
             exec_threads: self.cfg.exec_threads,
             halt_after: self.cfg.halt_after,
         };

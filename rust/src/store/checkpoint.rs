@@ -145,6 +145,10 @@ impl RoundObserver for CheckpointObserver<'_> {
                 sim_time: st.sim_time,
                 params,
                 policy_state: st.strategy.policy_state(),
+                async_state: st
+                    .async_state
+                    .map(|snapshot| snapshot())
+                    .unwrap_or(crate::util::json::Json::Null),
             });
             self.manifest.updated_unix = unix_now();
             self.store.save_manifest(&self.manifest)
@@ -194,5 +198,6 @@ pub fn resume_state(store: &RunStore, manifest: &RunManifest) -> anyhow::Result<
         global: store.get_params(&ck.params)?,
         policy_state: ck.policy_state.clone(),
         prior_records: manifest.records[..ck.completed].to_vec(),
+        async_state: ck.async_state.clone(),
     })
 }

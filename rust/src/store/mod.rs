@@ -662,6 +662,7 @@ mod tests {
                 sim_time: 1.0,
                 params: store.put_params(p).unwrap(),
                 policy_state: crate::util::json::Json::Null,
+                async_state: crate::util::json::Json::Null,
             }),
             final_state: fin.map(|p| FinalState {
                 final_acc: 0.5,

@@ -23,7 +23,17 @@ use crate::util::json::Json;
 
 /// Bump on any incompatible manifest change; `RunManifest::from_json`
 /// rejects versions it does not understand.
-pub const SCHEMA_VERSION: usize = 1;
+///
+/// v1 -> v2: checkpoints may carry `async_state` (the asynchronous
+/// runner's in-flight client clocks + staleness buffer) and round records
+/// may carry staleness statistics. v1 manifests load unchanged (those
+/// keys simply read as absent); v2 is a distinct version because a
+/// v1-era binary resuming an async checkpoint would silently drop the
+/// runner state and diverge.
+pub const SCHEMA_VERSION: usize = 2;
+
+/// Oldest run-manifest schema `RunManifest::from_json` still accepts.
+pub const SCHEMA_MIN: usize = 1;
 
 /// Content-addressed reference to a blob in the store.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -92,6 +102,10 @@ pub struct Checkpoint {
     /// [`crate::strategies::Strategy::policy_state`] snapshot (includes
     /// any strategy RNG state; `Null` for stateless strategies).
     pub policy_state: Json,
+    /// Asynchronous-runner snapshot ([`crate::fl::async_exec`]): in-flight
+    /// client clocks + dispatch versions, the referenced global versions,
+    /// and the staleness buffer. `Null` for synchronous runs.
+    pub async_state: Json,
 }
 
 impl Checkpoint {
@@ -101,6 +115,7 @@ impl Checkpoint {
             ("sim_time", Json::Num(self.sim_time)),
             ("params", self.params.to_json()),
             ("policy_state", self.policy_state.clone()),
+            ("async_state", self.async_state.clone()),
         ])
     }
 
@@ -110,6 +125,7 @@ impl Checkpoint {
             sim_time: j.f("sim_time")?,
             params: BlobRef::from_json(j.req("params")?)?,
             policy_state: j.get("policy_state").cloned().unwrap_or(Json::Null),
+            async_state: j.get("async_state").cloned().unwrap_or(Json::Null),
         })
     }
 }
@@ -205,8 +221,9 @@ impl RunManifest {
     pub fn from_json(j: &Json) -> anyhow::Result<RunManifest> {
         let version = j.u("schema_version")?;
         anyhow::ensure!(
-            version == SCHEMA_VERSION,
-            "run manifest schema v{version} unsupported (this build reads v{SCHEMA_VERSION})"
+            (SCHEMA_MIN..=SCHEMA_VERSION).contains(&version),
+            "run manifest schema v{version} unsupported \
+             (this build reads v{SCHEMA_MIN}..v{SCHEMA_VERSION})"
         );
         let opt = |key: &str| match j.get(key) {
             None | Some(Json::Null) => None,
@@ -349,6 +366,8 @@ pub fn round_record_to_json(r: &RoundRecord) -> Json {
         ("o1", Json::Num(r.o1)),
         ("eval_acc", r.eval_acc.map(Json::Num).unwrap_or(Json::Null)),
         ("eval_loss", r.eval_loss.map(Json::Num).unwrap_or(Json::Null)),
+        ("mean_staleness", r.mean_staleness.map(Json::Num).unwrap_or(Json::Null)),
+        ("max_staleness", r.max_staleness.map(Json::Num).unwrap_or(Json::Null)),
         (
             "client_secs",
             Json::Arr(
@@ -395,6 +414,8 @@ pub fn round_record_from_json(j: &Json) -> anyhow::Result<RoundRecord> {
         eval_acc: eval("eval_acc")?,
         eval_loss: eval("eval_loss")?,
         client_secs,
+        mean_staleness: eval("mean_staleness")?,
+        max_staleness: eval("max_staleness")?,
     })
 }
 
@@ -475,6 +496,8 @@ mod tests {
             eval_acc: eval,
             eval_loss: eval.map(|a| 1.0 - a),
             client_secs: vec![(0, 10.125), (2, 100.25 + round as f64)],
+            mean_staleness: eval.map(|_| 1.0 / 3.0),
+            max_staleness: eval.map(|_| 2.0),
         }
     }
 
@@ -493,6 +516,8 @@ mod tests {
             assert_eq!(ca, cb);
             assert_eq!(ta.to_bits(), tb.to_bits());
         }
+        assert_eq!(a.mean_staleness.map(f64::to_bits), b.mean_staleness.map(f64::to_bits));
+        assert_eq!(a.max_staleness.map(f64::to_bits), b.max_staleness.map(f64::to_bits));
     }
 
     #[test]
@@ -529,6 +554,7 @@ mod tests {
                     media_type: crate::store::MEDIA_PARAMS_F32LE.into(),
                 },
                 policy_state: Json::obj(vec![("x", Json::from_f64s(&[1.5, -2.25]))]),
+                async_state: Json::obj(vec![("mode", Json::Str("buffered".into()))]),
             }),
             final_state: None,
         }
@@ -549,7 +575,40 @@ mod tests {
         assert_eq!(ck.completed, 2);
         assert_eq!(ck.params, m.checkpoint.as_ref().unwrap().params);
         assert_eq!(ck.policy_state, m.checkpoint.as_ref().unwrap().policy_state);
+        assert_eq!(ck.async_state, m.checkpoint.as_ref().unwrap().async_state);
         assert!(back.final_state.is_none());
+    }
+
+    #[test]
+    fn v1_manifests_without_async_keys_still_load() {
+        let mut m = manifest();
+        m.schema_version = 1;
+        let mut j = m.to_json();
+        // strip the v2-era keys the way a v1 writer would have
+        if let Json::Obj(kv) = &mut j {
+            for (key, val) in kv.iter_mut() {
+                if key == "checkpoint" {
+                    if let Json::Obj(ck) = val {
+                        ck.retain(|(k, _)| k != "async_state");
+                    }
+                }
+                if key == "records" {
+                    if let Json::Arr(records) = val {
+                        for r in records {
+                            if let Json::Obj(fields) = r {
+                                fields.retain(|(k, _)| {
+                                    k != "mean_staleness" && k != "max_staleness"
+                                });
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        let back = RunManifest::from_json(&Json::parse(&j.to_string_pretty()).unwrap()).unwrap();
+        assert_eq!(back.schema_version, 1);
+        assert_eq!(back.checkpoint.unwrap().async_state, Json::Null);
+        assert!(back.records.iter().all(|r| r.mean_staleness.is_none()));
     }
 
     #[test]

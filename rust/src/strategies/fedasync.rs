@@ -1,0 +1,91 @@
+//! FedAsync (Xie et al., *Asynchronous Federated Optimization*): the
+//! per-arrival asynchronous baseline the paper positions FedEL against.
+//!
+//! Every client trains the full model at its own device pace; the server
+//! mixes each arriving update into the global model immediately,
+//! down-weighted by how stale it is:
+//!
+//!     w_g <- (1 - s(t)) * w_g + s(t) * w_client,
+//!     s(t) = alpha / (1 + staleness)^staleness_exp
+//!
+//! where staleness counts how many server versions elapsed since the
+//! client's dispatch. All execution-side state (client clocks, versions)
+//! lives in the event-driven runner ([`crate::fl::async_exec`]); this
+//! type only declares the policy, so `policy_state` stays `Null` and
+//! kill/resume rides the runner's checkpoint extension instead.
+
+use crate::fl::AggregateRule;
+
+use super::{full_model_plan, AsyncMode, AsyncSpec, ClientPlan, FleetCtx, Strategy};
+
+pub struct FedAsync {
+    alpha: f64,
+    staleness_exp: f64,
+}
+
+impl FedAsync {
+    pub fn new(alpha: f64, staleness_exp: f64) -> Self {
+        FedAsync { alpha, staleness_exp }
+    }
+}
+
+impl Strategy for FedAsync {
+    fn name(&self) -> &'static str {
+        "fedasync"
+    }
+
+    /// Full-model work for every client — the async runner dispatches one
+    /// of these per client at its own pace; a synchronous caller asking
+    /// for a round gets the same shape FedAvg would plan.
+    fn plan_round(&mut self, _round: usize, ctx: &FleetCtx, _global: &[f32]) -> Vec<ClientPlan> {
+        (0..ctx.n_clients()).map(|client| full_model_plan(ctx, client)).collect()
+    }
+
+    fn aggregate_rule(&self) -> AggregateRule {
+        AggregateRule::FedAvg
+    }
+
+    fn async_spec(&self) -> Option<AsyncSpec> {
+        Some(AsyncSpec {
+            mode: AsyncMode::PerArrival {
+                alpha: self.alpha,
+                staleness_exp: self.staleness_exp,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::ctx;
+    use super::*;
+    use crate::strategies::MaskSpec;
+
+    #[test]
+    fn declares_per_arrival_async_spec() {
+        let s = FedAsync::new(0.6, 0.5);
+        match s.async_spec().unwrap().mode {
+            AsyncMode::PerArrival { alpha, staleness_exp } => {
+                assert_eq!(alpha, 0.6);
+                assert_eq!(staleness_exp, 0.5);
+            }
+            other => panic!("wrong mode {other:?}"),
+        }
+    }
+
+    #[test]
+    fn plans_full_model_for_every_client() {
+        let c = ctx(4, &[1.0, 2.0, 3.0]);
+        let plans = FedAsync::new(0.6, 0.5).plan_round(0, &c, &[]);
+        assert_eq!(plans.len(), 3);
+        for p in &plans {
+            assert_eq!(p.exit, 4);
+            match &p.mask {
+                MaskSpec::Tensor(t) => assert!(t.iter().all(|&x| x == 1.0)),
+                _ => panic!(),
+            }
+        }
+        // device pace shows up in the per-dispatch cost
+        assert!(plans[2].est_time > plans[0].est_time * 2.9);
+    }
+}

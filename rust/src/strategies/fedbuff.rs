@@ -1,0 +1,73 @@
+//! FedBuff (Nguyen et al., *Federated Learning with Buffered Asynchronous
+//! Aggregation*): the buffered asynchronous baseline.
+//!
+//! Clients train full models at their own pace like FedAsync, but the
+//! server holds arriving updates in a buffer and only folds them into the
+//! global model once `buffer_k` have accumulated — each flush averages
+//! the buffered deltas (data-size weighted), which trades a little
+//! freshness for far lower aggregation noise than per-arrival mixing.
+//! A client whose update is buffered is re-dispatched immediately, so one
+//! client can hold several slots of a large buffer on a small fleet.
+//!
+//! Execution-side state (client clocks, the buffer itself) lives in the
+//! event-driven runner ([`crate::fl::async_exec`]) and checkpoints through
+//! its runner-state extension; `policy_state` stays `Null`.
+
+use crate::fl::AggregateRule;
+
+use super::{full_model_plan, AsyncMode, AsyncSpec, ClientPlan, FleetCtx, Strategy};
+
+pub struct FedBuff {
+    k: usize,
+}
+
+impl FedBuff {
+    pub fn new(k: usize) -> Self {
+        FedBuff { k: k.max(1) }
+    }
+}
+
+impl Strategy for FedBuff {
+    fn name(&self) -> &'static str {
+        "fedbuff"
+    }
+
+    /// Full-model work for every client (see [`super::fedasync`]).
+    fn plan_round(&mut self, _round: usize, ctx: &FleetCtx, _global: &[f32]) -> Vec<ClientPlan> {
+        (0..ctx.n_clients()).map(|client| full_model_plan(ctx, client)).collect()
+    }
+
+    fn aggregate_rule(&self) -> AggregateRule {
+        AggregateRule::FedAvg
+    }
+
+    fn async_spec(&self) -> Option<AsyncSpec> {
+        Some(AsyncSpec { mode: AsyncMode::Buffered { k: self.k } })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::ctx;
+    use super::*;
+
+    #[test]
+    fn declares_buffered_async_spec_with_floor() {
+        match FedBuff::new(4).async_spec().unwrap().mode {
+            AsyncMode::Buffered { k } => assert_eq!(k, 4),
+            other => panic!("wrong mode {other:?}"),
+        }
+        match FedBuff::new(0).async_spec().unwrap().mode {
+            AsyncMode::Buffered { k } => assert_eq!(k, 1, "buffer floor"),
+            other => panic!("wrong mode {other:?}"),
+        }
+    }
+
+    #[test]
+    fn plans_full_model_for_every_client() {
+        let c = ctx(4, &[1.0, 2.0]);
+        let plans = FedBuff::new(2).plan_round(0, &c, &[]);
+        assert_eq!(plans.len(), 2);
+        assert!(plans.iter().all(|p| p.exit == 4));
+    }
+}

@@ -9,7 +9,9 @@
 
 pub mod depthfl;
 pub mod elastic;
+pub mod fedasync;
 pub mod fedavg;
+pub mod fedbuff;
 pub mod fedel;
 pub mod fiarse;
 pub mod heterofl;
@@ -133,6 +135,24 @@ impl FleetCtx {
     }
 }
 
+/// How an asynchronous strategy wants the event-driven runner
+/// ([`crate::fl::async_exec`]) to aggregate arrivals.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AsyncMode {
+    /// FedAsync (Xie et al.): aggregate every arrival immediately with a
+    /// staleness-decayed mixing weight `alpha / (1 + s)^staleness_exp`.
+    PerArrival { alpha: f64, staleness_exp: f64 },
+    /// FedBuff (Nguyen et al.): buffer arrivals and flush every `k`.
+    Buffered { k: usize },
+}
+
+/// Declared by strategies that run under the asynchronous executor
+/// instead of the synchronous round loop.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AsyncSpec {
+    pub mode: AsyncMode,
+}
+
 /// The policy interface.
 pub trait Strategy {
     fn name(&self) -> &'static str;
@@ -152,6 +172,14 @@ pub trait Strategy {
     /// FedProx proximal coefficient (0 = off); applied client-side.
     fn prox_mu(&self) -> f64 {
         0.0
+    }
+
+    /// `Some` routes the experiment through the event-driven asynchronous
+    /// executor ([`crate::fl::async_exec`]) — clients train at their own
+    /// device pace and the server aggregates per this spec — instead of
+    /// the synchronous round loop. Default: synchronous.
+    fn async_spec(&self) -> Option<AsyncSpec> {
+        None
     }
 
     /// Snapshot the policy's round-dependent mutable state for
@@ -179,12 +207,37 @@ pub trait Strategy {
     }
 }
 
+/// Full-model work order for one client — the shape FedAvg-style and
+/// asynchronous strategies plan, and the one the async executor
+/// ([`crate::fl::async_exec`]) dispatches: train everything, at the
+/// device's full-model pace. One definition so the strategies'
+/// `plan_round` can never drift from what the runner actually executes.
+pub(crate) fn full_model_plan(ctx: &FleetCtx, client: usize) -> ClientPlan {
+    ClientPlan {
+        client,
+        exit: ctx.manifest.num_blocks,
+        mask: MaskSpec::Tensor(vec![1.0; ctx.manifest.tensors.len()]),
+        local_steps: ctx.local_steps,
+        est_time: ctx.full_round_time(client),
+    }
+}
+
 /// Construct a strategy by table-row name with default tunables — a thin
 /// wrapper over [`registry::builtin`] for callers without a full config
-/// (benches, quick tests). `beta` feeds the FedEL family's
-/// `harmonize_weight`; everything else takes its registered default.
+/// (benches, quick tests). `beta` binds the FedEL family's
+/// `harmonize_weight` through the parameter bag (the legacy `cfg.beta`
+/// field is gone — the bag is the one path now); everything else takes
+/// its registered default.
 pub fn by_name(name: &str, ctx: &FleetCtx, beta: f64, seed: u64) -> anyhow::Result<Box<dyn Strategy>> {
-    registry::builtin().build(name, ctx, seed, beta, &[])
+    let reg = registry::builtin();
+    let bag: Vec<(String, f64)> = reg
+        .get(name)
+        .into_iter()
+        .flat_map(|def| def.params.iter())
+        .filter(|p| p.name == "harmonize_weight")
+        .map(|p| (registry::StrategyRegistry::param_key(name, p.name), beta))
+        .collect();
+    reg.build(name, ctx, seed, &bag)
 }
 
 /// All Table-1 row names in paper order.

@@ -71,7 +71,8 @@ pub struct StrategyRegistry {
 
 /// FedEL's importance-harmonization weight β (Sec. 4.2): blended
 /// importance I = β·I_local + (1−β)·I^g. Declared by every FedEL-family
-/// row; the legacy `--beta` config field seeds its default at build time.
+/// row; bound via `strategy.<s>.harmonize_weight` (the deprecated
+/// `--beta` CLI flag is an alias that writes these keys).
 const HARMONIZE: ParamSpec = ParamSpec {
     name: "harmonize_weight",
     default: 0.6,
@@ -167,6 +168,43 @@ fn defs() -> Vec<StrategyDef> {
             summary: "magnitude-thresholded submodel extraction (FIARSE)",
             params: vec![],
             build: |ctx, _, _| Box::new(super::fiarse::Fiarse::new(ctx)),
+        },
+        StrategyDef {
+            name: "fedasync",
+            summary: "per-arrival async aggregation, staleness-decayed mixing (Xie et al.)",
+            params: vec![
+                ParamSpec {
+                    name: "alpha",
+                    default: 0.6,
+                    min: 0.01,
+                    max: 1.0,
+                    help: "mixing weight of a fresh arrival: w_g <- (1-s)w_g + s·w_n, s = alpha/(1+staleness)^exp",
+                },
+                ParamSpec {
+                    name: "staleness_exp",
+                    default: 0.5,
+                    min: 0.0,
+                    max: 4.0,
+                    help: "staleness-decay exponent (0 = stale updates mix at full alpha)",
+                },
+            ],
+            build: |_, _, p| {
+                Box::new(super::fedasync::FedAsync::new(p.get("alpha"), p.get("staleness_exp")))
+            },
+        },
+        StrategyDef {
+            name: "fedbuff",
+            summary: "buffered async aggregation: flush every K arrivals (Nguyen et al.)",
+            params: vec![ParamSpec {
+                name: "buffer_k",
+                default: 4.0,
+                min: 1.0,
+                max: 1024.0,
+                help: "arrivals buffered per aggregation (the paper's K)",
+            }],
+            build: |_, _, p| {
+                Box::new(super::fedbuff::FedBuff::new(p.get("buffer_k").round() as usize))
+            },
         },
         StrategyDef {
             name: "fedel",
@@ -303,27 +341,27 @@ impl StrategyRegistry {
     }
 
     /// Build a strategy with its declared params resolved from a config's
-    /// parameter bag (`strategy.<name>.<param>` -> f64). `beta` is the
-    /// legacy `--beta` config field: it seeds `harmonize_weight`'s default
-    /// so pre-registry callers keep working; an explicit bag binding wins.
+    /// parameter bag (`strategy.<name>.<param>` -> f64); anything unbound
+    /// takes its declared default. The legacy `--beta` field is gone:
+    /// `harmonize_weight` flows through the bag like every other tunable
+    /// (`--beta` on the CLI survives only as a deprecated alias that
+    /// writes the bag, see [`crate::config::ExperimentCfg::from_args`]).
     pub fn build(
         &self,
         name: &str,
         ctx: &FleetCtx,
         seed: u64,
-        beta: f64,
         bag: &[(String, f64)],
     ) -> anyhow::Result<Box<dyn Strategy>> {
         let def = self.require(name)?;
         let mut vals = Vec::with_capacity(def.params.len());
         for p in &def.params {
             let key = StrategyRegistry::param_key(name, p.name);
-            let fallback = if p.name == HARMONIZE.name { beta } else { p.default };
             let v = bag
                 .iter()
                 .find(|(k, _)| *k == key)
                 .map(|(_, v)| *v)
-                .unwrap_or(fallback);
+                .unwrap_or(p.default);
             anyhow::ensure!(
                 v >= p.min && v <= p.max,
                 "{key} = {v} out of bounds [{}, {}]",
@@ -346,12 +384,29 @@ mod tests {
         let reg = builtin();
         let c = ctx(4, &[1.0, 2.0]);
         for name in reg.names() {
-            reg.build(name, &c, 1, 0.6, &[]).unwrap_or_else(|e| panic!("{name}: {e}"));
+            reg.build(name, &c, 1, &[]).unwrap_or_else(|e| panic!("{name}: {e}"));
         }
         for name in super::super::table1_names() {
-            let s = reg.build(name, &c, 1, 0.6, &[]).unwrap();
+            let s = reg.build(name, &c, 1, &[]).unwrap();
             assert_eq!(s.name(), name);
         }
+    }
+
+    #[test]
+    fn async_rows_register_and_declare_their_specs() {
+        let reg = builtin();
+        let c = ctx(4, &[1.0, 2.0]);
+        let fa = reg.build("fedasync", &c, 1, &[]).unwrap();
+        assert!(fa.async_spec().is_some(), "fedasync must route async");
+        let bag = vec![("strategy.fedbuff.buffer_k".to_string(), 2.0)];
+        let fb = reg.build("fedbuff", &c, 1, &bag).unwrap();
+        match fb.async_spec().unwrap().mode {
+            crate::strategies::AsyncMode::Buffered { k } => assert_eq!(k, 2),
+            other => panic!("{other:?}"),
+        }
+        // the declared tunables are sweepable keys
+        assert_eq!(reg.param_spec("fedasync", "alpha").unwrap().default, 0.6);
+        assert_eq!(reg.param_spec("fedbuff", "buffer_k").unwrap().default, 4.0);
     }
 
     #[test]
@@ -365,13 +420,12 @@ mod tests {
     fn out_of_bounds_bag_value_rejected_at_build() {
         let c = ctx(4, &[1.0, 2.0]);
         let err = builtin()
-            .build("fedel", &c, 1, 0.6, &[("strategy.fedel.harmonize_weight".to_string(), 1.5)])
+            .build("fedel", &c, 1, &[("strategy.fedel.harmonize_weight".to_string(), 1.5)])
             .unwrap_err()
             .to_string();
         assert!(err.contains("out of bounds"), "{err}");
-        // an in-bounds binding builds fine even when the legacy beta differs
         let bag = vec![("strategy.fedel.harmonize_weight".to_string(), 0.25)];
-        builtin().build("fedel", &c, 1, 0.9, &bag).unwrap();
+        builtin().build("fedel", &c, 1, &bag).unwrap();
     }
 
     #[test]

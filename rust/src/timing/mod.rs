@@ -74,10 +74,14 @@ impl Default for TimingCfg {
 }
 
 impl TimingCfg {
-    /// Calibrate `flops_per_sec` so one full-model round (local_steps SGD
-    /// steps, all tensors trained) on a `scale`-x device takes
-    /// `target_secs`. Overheads are kept at defaults — they are a small
-    /// correction.
+    /// Calibrate the timing constants so one full-model round (local_steps
+    /// SGD steps, all tensors trained) on a `scale`-x device takes
+    /// `target_secs`. ALL THREE constants scale by the same ratio —
+    /// `flops_per_sec`, `per_tensor_overhead`, and `secs_per_update_elem`
+    /// stretch together — so the flop-term : overhead proportion of every
+    /// tensor's time is preserved exactly (pinned by
+    /// `calibration_preserves_flop_overhead_proportion`); only the units
+    /// change, never the shape of the cost model.
     pub fn calibrated(
         m: &Manifest,
         local_steps: usize,
@@ -100,6 +104,80 @@ impl TimingCfg {
 /// Forward cost per FLOP relative to backward's gradient-compute pass
 /// (see the comment in [`TimingModel::profile`]).
 pub const FWD_COST_FRAC: f64 = 0.6;
+
+/// Per-client communication model: how long a client spends moving
+/// parameters each round (or each asynchronous dispatch).
+///
+/// The legacy behavior is [`CommModel::Constant`] — a flat per-round
+/// charge (`time.comm_secs`), identical for every client and every
+/// payload, which made the communication savings of partial training
+/// invisible. [`CommModel::Bandwidth`] prices each transfer from its
+/// actual payload: `latency + payload_bytes * 8 / (mbps * 1e6)` per
+/// direction, so a FedEL client uploading a masked sub-model banks real
+/// time-to-accuracy savings over a full-model FedAvg upload
+/// (`comm.up_mbps` / `comm.down_mbps` / `comm.latency_secs` in the
+/// parameter space). A rate of 0 makes that direction free apart from
+/// latency (useful to model upload-constrained edge links).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CommModel {
+    /// Flat per-round seconds, payload-independent (the degenerate model;
+    /// `time.comm_secs` survives here).
+    Constant(f64),
+    /// Payload-priced transfers, per client and per direction.
+    Bandwidth { up_mbps: f64, down_mbps: f64, latency_secs: f64 },
+}
+
+impl Default for CommModel {
+    fn default() -> Self {
+        CommModel::Constant(30.0)
+    }
+}
+
+impl CommModel {
+    /// Seconds to download `bytes` to a client (0 under `Constant`, whose
+    /// flat charge is applied once in [`CommModel::client_total_secs`]).
+    pub fn down_secs(&self, bytes: f64) -> f64 {
+        match self {
+            CommModel::Constant(_) => 0.0,
+            CommModel::Bandwidth { down_mbps, latency_secs, .. } => {
+                latency_secs + transfer_secs(bytes, *down_mbps)
+            }
+        }
+    }
+
+    /// Seconds to upload `bytes` from a client.
+    pub fn up_secs(&self, bytes: f64) -> f64 {
+        match self {
+            CommModel::Constant(_) => 0.0,
+            CommModel::Bandwidth { up_mbps, latency_secs, .. } => {
+                latency_secs + transfer_secs(bytes, *up_mbps)
+            }
+        }
+    }
+
+    /// One client's simulated wall-clock for a dispatch: download the
+    /// payload, compute for `train_secs`, upload the update. Under
+    /// `Constant` this is `train_secs + c` — the legacy round shape —
+    /// which keeps pre-CommModel results bitwise intact (f64 addition is
+    /// monotone, so `max_i(t_i) + c == max_i(t_i + c)` exactly).
+    pub fn client_total_secs(&self, train_secs: f64, down_bytes: f64, up_bytes: f64) -> f64 {
+        match self {
+            CommModel::Constant(c) => train_secs + c,
+            CommModel::Bandwidth { .. } => {
+                self.down_secs(down_bytes) + train_secs + self.up_secs(up_bytes)
+            }
+        }
+    }
+}
+
+/// Wire seconds for `bytes` at `mbps` megabits/second (0 = free link).
+fn transfer_secs(bytes: f64, mbps: f64) -> f64 {
+    if mbps > 0.0 {
+        bytes * 8.0 / (mbps * 1e6)
+    } else {
+        0.0
+    }
+}
 
 /// Backward timing of one tensor (paper Fig 3).
 #[derive(Clone, Copy, Debug, Default)]
@@ -282,6 +360,43 @@ mod tests {
         let m = model();
         let tm = TimingModel::profile(&m, &DeviceProfile::orin(), &TimingCfg::default());
         assert_eq!(tm.backward_time_for(&[0, 2, 4], &[false, false, false]), 0.0);
+    }
+
+    #[test]
+    fn calibration_preserves_flop_overhead_proportion() {
+        // Every constant scales by the same ratio, so the proportion of a
+        // tensor's time spent in the flop term vs the overhead terms must
+        // survive calibration exactly — the doc used to claim overheads
+        // stayed at defaults, which was wrong in the opposite direction.
+        let m = model();
+        let d = TimingCfg::default();
+        for target in [600.0, 3600.0, 86_400.0] {
+            let c = TimingCfg::calibrated(&m, 50, 2.0, target);
+            // overhead-seconds per flop-second = overhead * flops_per_sec
+            let over = |cfg: &TimingCfg| cfg.per_tensor_overhead * cfg.flops_per_sec;
+            let upd = |cfg: &TimingCfg| cfg.secs_per_update_elem * cfg.flops_per_sec;
+            assert!((over(&c) / over(&d) - 1.0).abs() < 1e-9, "target {target}");
+            assert!((upd(&c) / upd(&d) - 1.0).abs() < 1e-9, "target {target}");
+        }
+    }
+
+    #[test]
+    fn comm_model_prices_payloads_and_keeps_constant_shape() {
+        let c = CommModel::Constant(30.0);
+        assert_eq!(c.client_total_secs(100.0, 1e9, 1e9), 130.0);
+        assert_eq!(c.down_secs(1e9), 0.0);
+
+        let b = CommModel::Bandwidth { up_mbps: 10.0, down_mbps: 100.0, latency_secs: 0.05 };
+        // 1 MB at 10 Mbps = 0.8 s + latency; at 100 Mbps = 0.08 s + latency
+        assert!((b.up_secs(1e6) - 0.85).abs() < 1e-12);
+        assert!((b.down_secs(1e6) - 0.13).abs() < 1e-12);
+        let total = b.client_total_secs(100.0, 1e6, 1e6);
+        assert!((total - (0.13 + 100.0 + 0.85)).abs() < 1e-12);
+        // a masked (smaller) upload is strictly cheaper — the whole point
+        assert!(b.client_total_secs(100.0, 1e6, 0.25e6) < total);
+        // rate 0 = free link apart from latency
+        let free = CommModel::Bandwidth { up_mbps: 0.0, down_mbps: 0.0, latency_secs: 0.1 };
+        assert_eq!(free.up_secs(1e12), 0.1);
     }
 
     #[test]

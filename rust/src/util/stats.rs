@@ -28,11 +28,16 @@ pub fn var_pop(xs: &[f64]) -> f64 {
     xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
 }
 
-/// Linear-interpolated quantile, q in [0, 1].
+/// Linear-interpolated quantile, q in [0, 1]. NaN entries are ignored;
+/// with no finite-orderable data left (empty input or all-NaN) the result
+/// is NaN rather than a panic — the report layer reaches this with
+/// empty series (runs that never evaluated) and must not crash on them.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
-    assert!(!xs.is_empty());
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    v.sort_by(f64::total_cmp);
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -171,5 +176,29 @@ mod tests {
         assert_eq!(std_dev(&[]), 0.0);
         assert_eq!(std_dev(&[1.0]), 0.0);
         assert_eq!(ci95_half_width(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn quantile_and_box_stats_survive_empty_slices() {
+        // Regression: these used to assert/panic; a run with no eval
+        // rounds feeds the report layer exactly this.
+        assert!(quantile(&[], 0.5).is_nan());
+        assert!(median(&[]).is_nan());
+        let b = box_stats(&[]);
+        assert!(b.min.is_nan() && b.median.is_nan() && b.max.is_nan());
+    }
+
+    #[test]
+    fn quantile_ignores_nans_instead_of_panicking() {
+        // Regression: partial_cmp().unwrap() in the old sort aborted on
+        // any NaN in the sample; total_cmp + filtering keeps the finite
+        // statistics intact.
+        let xs = [f64::NAN, 3.0, 1.0, f64::NAN, 2.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 3.0);
+        assert_eq!(median(&xs), 2.0);
+        let b = box_stats(&xs);
+        assert_eq!((b.min, b.median, b.max), (1.0, 2.0, 3.0));
+        assert!(quantile(&[f64::NAN], 0.5).is_nan());
     }
 }

@@ -339,6 +339,94 @@ fn swept_strategy_and_data_params_kill_resume_and_aggregate() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Async acceptance drill: a campaign sweeping the synchronous baselines
+/// against an asynchronous one (`fedbuff`) under a non-degenerate
+/// communication model (`comm.up_mbps` / `comm.down_mbps` via the `--set`
+/// layer) completes, kill-resumes bitwise-identically (the async cell
+/// included — its in-flight clocks and staleness buffer ride the
+/// checkpoint), and the whole-grid report times every cell — async ones
+/// included — to the matched accuracy target.
+#[test]
+fn async_cells_sweep_with_comm_model_and_kill_resume() {
+    fn async_grid(name: &str) -> CampaignCfg {
+        let base = ExperimentCfg {
+            model: "mock:4x20".into(),
+            fleet: fedel::config::FleetSpec::Scales(vec![1.0, 2.0, 3.0]),
+            rounds: 6,
+            local_steps: 2,
+            lr: 0.3,
+            eval_every: 2,
+            eval_batches: 2,
+            slowest_round_secs: 3600.0,
+            exec_threads: 1,
+            ..Default::default()
+        };
+        let mut cfg = CampaignCfg::new(name, base);
+        cfg.axis("strategy=fedavg,fedel,fedbuff").unwrap();
+        cfg.set = fedel::config::params::SpecOverlay::parse(
+            fedel::config::params::ParamSpace::shared(),
+            &["comm.up_mbps=10", "comm.down_mbps=50", "comm.latency_secs=0.1",
+              "strategy.fedbuff.buffer_k=2"],
+        )
+        .unwrap();
+        cfg.checkpoint_every = 2;
+        cfg.workers = 1;
+        cfg
+    }
+
+    let reference_dir = scratch("async-ref");
+    let reference = RunStore::open(&reference_dir).unwrap();
+    assert!(run_campaign(&reference, &async_grid("async")).unwrap().complete());
+
+    // the comm model landed in every stored cell config, and the async
+    // cell recorded staleness
+    for (label, m) in cell_runs(&reference, "async") {
+        assert_eq!(m.config.comm_up_mbps, 10.0, "{label}");
+        assert_eq!(m.config.comm_down_mbps, 50.0, "{label}");
+        assert_eq!(m.records.len(), 6, "{label}");
+        if label.contains("fedbuff") {
+            assert!(
+                m.records.iter().all(|r| r.mean_staleness.is_some()),
+                "{label}: async rounds must carry staleness"
+            );
+            assert!(
+                m.records.iter().all(|r| r.participants == 2),
+                "{label}: buffer_k=2 flushes in pairs"
+            );
+        } else {
+            assert!(m.records.iter().all(|r| r.mean_staleness.is_none()), "{label}");
+        }
+    }
+
+    // whole-grid report: every cell (async included) gets a
+    // time-to-accuracy at the matched default target
+    let man = reference.load_campaign("async").unwrap();
+    let rep = report(&reference, &man, Target::Default, None).unwrap();
+    assert_eq!(rep.rows.len(), 3);
+    for row in &rep.rows {
+        assert!(
+            row.time_to_target.is_some(),
+            "{}: no time-to-accuracy in the async-cell report",
+            row.strategy
+        );
+    }
+
+    // kill mid-flight (aggregation 3, between the 2- and 4-checkpoints),
+    // resume, demand bitwise identity — async cell included
+    let dir = scratch("async-killed");
+    let store = RunStore::open(&dir).unwrap();
+    let mut killed = async_grid("async");
+    killed.halt_after = Some(3);
+    let out = run_campaign(&store, &killed).unwrap();
+    assert!(!out.complete());
+    let out = run_campaign(&store, &async_grid("async")).unwrap();
+    assert!(out.complete(), "{out:?}");
+    assert_stores_identical(&reference, &store, "async");
+
+    let _ = std::fs::remove_dir_all(&reference_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Campaigns persisted by the PR-3-era schema (v1: four fixed axes,
 /// `fedavg-s1-fsmall10-t1` labels) migrate in place on the next run and
 /// resume bitwise-identically: spec converts to axes form, labels are

@@ -81,6 +81,29 @@ fn every_strategy_is_deterministic_under_parallelism() {
     }
 }
 
+/// The async executor's thread-count invariance: the event-driven clock
+/// aggregates on the coordinator in event order, and training outcomes
+/// are pure, so fedasync/fedbuff results are bitwise-identical at any
+/// exec_threads — including the parallel initial fleet-wide fan-out.
+#[test]
+fn async_strategies_are_bitwise_identical_across_thread_counts() {
+    for name in ["fedasync", "fedbuff"] {
+        let seq = run_one(cfg(name, 1)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let four = run_one(cfg(name, 4)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_identical(&seq, &four, name);
+        assert_eq!(seq.records.len(), 6, "{name}: one record per aggregation");
+        assert!(
+            seq.records.iter().all(|r| r.mean_staleness.is_some()),
+            "{name}: async records carry staleness stats"
+        );
+        // the simulated clock is event-driven and monotone (ties are real:
+        // same-scale clients dispatched together finish together)
+        for w in seq.records.windows(2) {
+            assert!(w[1].sim_time >= w[0].sim_time, "{name}: clock must not rewind");
+        }
+    }
+}
+
 #[test]
 fn selection_traces_match_across_thread_counts() {
     let mut a = cfg("fedel", 1);

@@ -40,6 +40,71 @@ fn all_strategies_complete_and_report() {
 }
 
 #[test]
+fn async_strategies_complete_with_staleness_and_pace() {
+    for name in ["fedasync", "fedbuff"] {
+        let res = run_one(mock_cfg(name, 6)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(res.strategy, name);
+        assert_eq!(res.records.len(), 6, "{name}: one record per aggregation");
+        assert!(res.final_acc.is_finite(), "{name}");
+        let mut last = 0.0;
+        for r in &res.records {
+            // monotone, not strictly increasing: same-scale clients
+            // dispatched together arrive together
+            assert!(r.sim_time >= last, "{name}: event clock must not rewind");
+            assert!((r.sim_time - last - r.round_secs).abs() < 1e-6, "{name}");
+            last = r.sim_time;
+            assert!(r.mean_staleness.is_some(), "{name}");
+            assert!(r.max_staleness.unwrap() >= r.mean_staleness.unwrap(), "{name}");
+            match name {
+                "fedasync" => assert_eq!(r.participants, 1, "{name}: per-arrival"),
+                _ => assert_eq!(r.participants, 4, "{name}: default buffer_k"),
+            }
+        }
+        // fast devices lap slow ones: with scales {1,1,2,2,4}, the early
+        // aggregations are dominated by the two fast clients
+        let early: Vec<usize> = res.records[0].client_secs.iter().map(|&(c, _)| c).collect();
+        assert!(
+            early.iter().all(|&c| c < 4),
+            "{name}: the 4x straggler cannot win the first arrivals ({early:?})"
+        );
+    }
+}
+
+#[test]
+fn bandwidth_comm_model_charges_payloads_and_partial_training_banks_savings() {
+    // With comm free, round time is pure compute; with a bandwidth model
+    // it grows by the slowest client's transfer time — and fedavg (full
+    // uploads) pays strictly more than fedel (masked uploads).
+    let overhead = |strategy: &str| {
+        let mut free = mock_cfg(strategy, 2);
+        free.comm_secs = 0.0;
+        // T_th below even the fastest device's full round, so every fedel
+        // client partial-trains: all masked uploads are strict subsets and
+        // the round's comm overhead is strictly below the full-payload one
+        // no matter which client binds the round. (fedavg ignores T_th.)
+        free.t_th_factor = 0.5;
+        // Link speeds chosen so transfer times (sub-second) stay far below
+        // the straggler's compute margin over the runner-up (tens of
+        // seconds): the slowest client binds the round in both runs, and
+        // the overhead is exactly that client's transfer time.
+        let mut priced = free.clone();
+        priced.comm_up_mbps = 0.05;
+        priced.comm_down_mbps = 0.2;
+        priced.comm_latency_secs = 0.05;
+        let t_free = run_one(free).unwrap().records[0].round_secs;
+        let t_priced = run_one(priced).unwrap().records[0].round_secs;
+        assert!(t_priced > t_free, "{strategy}: transfers must cost time");
+        t_priced - t_free
+    };
+    let fedavg = overhead("fedavg");
+    let fedel = overhead("fedel");
+    assert!(
+        fedel < fedavg,
+        "masked uploads must be cheaper: fedel +{fedel}s vs fedavg +{fedavg}s"
+    );
+}
+
+#[test]
 fn sim_clock_is_monotone_and_cumulative() {
     let res = run_one(mock_cfg("fedel", 10)).unwrap();
     let mut last = 0.0;
@@ -174,8 +239,8 @@ fn energy_report_tracks_active_time_differences() {
     let mut exp = Experiment::build(mock_cfg("fedavg", 4)).unwrap();
     let avg = exp.run(Some("fedavg")).unwrap();
     let fedel = exp.run(Some("fedel")).unwrap();
-    let e_avg = energy_report(&avg, &exp.fleet);
-    let e_fedel = energy_report(&fedel, &exp.fleet);
+    let e_avg = energy_report(&avg, &exp.fleet).unwrap();
+    let e_fedel = energy_report(&fedel, &exp.fleet).unwrap();
     assert!(
         e_fedel.total_kj < e_avg.total_kj,
         "fedel {} kJ vs fedavg {} kJ",
@@ -188,7 +253,8 @@ fn energy_report_tracks_active_time_differences() {
 fn beta_extremes_run_without_error() {
     for beta in [0.0, 1.0] {
         let mut cfg = mock_cfg("fedel", 4);
-        cfg.beta = beta;
+        cfg.strategy_params
+            .push(("strategy.fedel.harmonize_weight".to_string(), beta));
         let res = run_one(cfg).unwrap();
         assert!(res.final_acc.is_finite());
     }

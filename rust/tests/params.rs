@@ -32,6 +32,9 @@ fn random_value(rng: &mut Rng, key: &str) -> ParamValue {
             ParamValue::F64(rng.f64().max(f64::MIN_POSITIVE) * 3.0f64.powi(rng.below(5) as i32))
         }
         "time.comm_secs" | "time.slowest_round_secs" => ParamValue::F64(rng.f64() * 1e4),
+        "comm.up_mbps" | "comm.down_mbps" => ParamValue::F64(rng.f64() * 1e3),
+        "comm.latency_secs" => ParamValue::F64(rng.f64()),
+        "strategy.fedbuff.buffer_k" => ParamValue::F64((1 + rng.below(16)) as f64),
         // strategy.<s>.<p> keys: [0.05, 0.9] sits inside every declared
         // bound in the registry (tightest: deadline_frac >= 0.05,
         // explore <= 0.99), while still exercising awkward mantissas.

@@ -152,6 +152,56 @@ fn stateless_and_rng_strategies_survive_resume() {
     }
 }
 
+/// The async executor's kill/resume drill: fedbuff's in-flight client
+/// clocks, dispatch versions, and staleness buffer ride the checkpoint's
+/// `async_state`, so a run killed between checkpoints (after aggregation
+/// 5, checkpoint at 4) resumes bitwise-identically — including across
+/// different thread counts on either side of the kill.
+#[test]
+fn fedbuff_kill_and_resume_is_bitwise_identical() {
+    kill_and_resume("fedbuff", 1, 1);
+    kill_and_resume("fedbuff", 4, 1);
+    kill_and_resume("fedbuff", 1, 4);
+}
+
+#[test]
+fn fedasync_kill_and_resume_is_bitwise_identical() {
+    kill_and_resume("fedasync", 1, 1);
+}
+
+/// A synchronous checkpoint must not silently resume through the async
+/// runner (and vice versa): the mode is validated, not assumed.
+#[test]
+fn async_checkpoints_are_not_interchangeable_with_sync_ones() {
+    let dir = scratch("mode-mismatch");
+    let store = RunStore::open(&dir).unwrap();
+
+    let mut killed = cfg("fedbuff", 1);
+    killed.halt_after = Some(5);
+    let mut exp = Experiment::build(killed).unwrap();
+    let mut ckpt = CheckpointObserver::create(&store, &exp.cfg, "fedbuff", 2).unwrap();
+    let id = ckpt.run_id().to_string();
+    let _ = exp.run_from(None, &mut ckpt, None).unwrap_err();
+    assert!(ckpt.take_error().is_none());
+
+    // the stored checkpoint carries the async runner state...
+    let man = store.load_manifest(&id).unwrap();
+    let ck = man.checkpoint.as_ref().unwrap();
+    assert!(
+        !matches!(ck.async_state, fedel::util::json::Json::Null),
+        "async checkpoints must persist runner state"
+    );
+
+    // ...and resuming it under a synchronous strategy fails loudly
+    let resume = fedel::store::checkpoint::resume_state(&store, &man).unwrap();
+    let mut exp = Experiment::build(cfg("fedavg", 1)).unwrap();
+    let err = exp
+        .run_from(Some("fedavg"), &mut NullObserver, Some(resume))
+        .unwrap_err();
+    assert!(err.to_string().contains("async"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn warm_start_seeds_from_stored_run() {
     let dir = scratch("warm");

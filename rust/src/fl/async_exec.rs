@@ -476,7 +476,7 @@ pub fn run_experiment_async(
                 }
                 Some((vec![arrived_plan], vec![outcome], vec![staleness]))
             }
-            AsyncMode::Buffered { k } => {
+            AsyncMode::Buffered { k, staleness_exp } => {
                 state.buffer.push(BufEntry {
                     version: arrived_version,
                     plan: arrived_plan,
@@ -485,20 +485,27 @@ pub fn run_experiment_async(
                 if state.buffer.len() >= k.max(1) {
                     // Data-size-weighted average of the buffered deltas
                     // (update − its dispatch-version global), folded in
-                    // arrival order.
+                    // arrival order. A nonzero `staleness_exp` further
+                    // decays each delta's weight by `1/(1+s)^exp`; the
+                    // guard keeps exp=0 bitwise-identical to the plain
+                    // average (no spurious `powf` in the weights).
                     let mut acc = vec![0.0f64; global.len()];
                     let mut wsum = 0.0f64;
                     let mut plans = Vec::with_capacity(state.buffer.len());
                     let mut outs = Vec::with_capacity(state.buffer.len());
                     let mut stale = Vec::with_capacity(state.buffer.len());
                     for b in state.buffer.drain(..) {
-                        let weight = ds.clients[b.outcome.client].num_samples as f64;
+                        let staleness = completed - b.version;
+                        let mut weight = ds.clients[b.outcome.client].num_samples as f64;
+                        if staleness_exp != 0.0 {
+                            weight /= (1.0 + staleness as f64).powf(staleness_exp);
+                        }
                         let start = &state.versions[&b.version];
                         for i in 0..acc.len() {
                             acc[i] += weight * (b.outcome.params[i] as f64 - start[i] as f64);
                         }
                         wsum += weight;
-                        stale.push(completed - b.version);
+                        stale.push(staleness);
                         plans.push(b.plan);
                         outs.push(b.outcome);
                     }

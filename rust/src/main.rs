@@ -26,7 +26,12 @@
 //!       --sweep strategy=fedavg,fedel,fedbuff --rounds 20 \
 //!       --set comm.up_mbps=20 --set comm.down_mbps=100
 //!   fedel campaign run --name sweep --store runs        # resume after a kill
+//!   fedel campaign run --name paired --store runs --model mock:8x100 \
+//!       --zip strategy=fedavg,fedel --zip time.t_th_factor=1.0,0.8 --rounds 20
 //!   fedel campaign report --name sweep --store runs --over seed --json report.json
+//!   fedel campaign report --name sweep --store runs --over seed,fleet
+//!   fedel runs serve --root runs --addr 0.0.0.0:7878
+//!   fedel campaign run --name sweep --store http://hub:7878   # remote worker
 //!   fedel compare --model mock:8x100 --strategies fedavg,fedel --rounds 20
 //!   fedel inspect --model vgg_cifar
 
@@ -129,7 +134,7 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         Some(s) => {
             let c = CheckpointObserver::create(s, &exp.cfg, &strategy_name, every)?
                 .every_secs(ckpt_secs);
-            println!("run id: {} (store {})", c.run_id(), s.root().display());
+            println!("run id: {} (store {})", c.run_id(), s.location());
             Some(c)
         }
         None => None,
@@ -220,20 +225,43 @@ fn cmd_compare(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// The run-store subcommand family: `runs <list|show|resume|compare|gc> ...`.
+/// The run-store subcommand family:
+/// `runs <list|show|resume|compare|gc|serve> ...`.
 fn cmd_runs(args: &Args) -> anyhow::Result<()> {
-    let store = RunStore::open(args.str_or("store", "runs"))?;
     let action = args.positional.first().map(|s| s.as_str()).unwrap_or("list");
+    if action == "serve" {
+        // Serve a *local* store directory over http for remote workers;
+        // --root falls back to --store so either spelling works.
+        let root = args
+            .get("root")
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| args.str_or("store", "runs"));
+        anyhow::ensure!(
+            !root.starts_with("http://") && !root.starts_with("https://"),
+            "runs serve exposes a local directory — --root {root:?} is already a URL"
+        );
+        let addr = args.str_or("addr", "127.0.0.1:7878");
+        let threads = args.usize_or("threads", 4);
+        args.check_unused()?;
+        let server = fedel::store::backend::serve::StoreServer::start(&root, &addr, threads)?;
+        println!(
+            "serving store {root} on http://{} — point workers at --store http://{}",
+            server.addr(),
+            server.addr()
+        );
+        return server.serve_forever();
+    }
+    let store = RunStore::open(args.str_or("store", "runs"))?;
     match action {
         "list" => {
             args.check_unused()?;
             let runs = store.list()?;
             if runs.is_empty() {
-                println!("no stored runs under {}", store.root().display());
+                println!("no stored runs under {}", store.location());
                 return Ok(());
             }
             let mut t = Table::new(
-                &format!("runs ({})", store.root().display()),
+                &format!("runs ({})", store.location()),
                 &["id", "strategy", "model", "status", "rounds", "final acc", "sim total"],
             );
             for m in &runs {
@@ -332,7 +360,7 @@ fn cmd_runs(args: &Args) -> anyhow::Result<()> {
                 manifests.push(store.load_manifest(id).map_err(|_| {
                     anyhow::anyhow!(
                         "unknown run id {id:?} under {} — `fedel runs list` shows what's stored",
-                        store.root().display()
+                        store.location()
                     )
                 })?);
             }
@@ -347,7 +375,7 @@ fn cmd_runs(args: &Args) -> anyhow::Result<()> {
             let r = store.gc_blobs(Duration::from_secs(min_age), dry)?;
             println!(
                 "gc {}: {} live blob(s) kept, {} orphan(s){} ({} bytes)",
-                store.root().display(),
+                store.location(),
                 r.live,
                 r.swept,
                 if dry { " would be swept (--dry-run)" } else { " swept" },
@@ -355,7 +383,9 @@ fn cmd_runs(args: &Args) -> anyhow::Result<()> {
             );
         }
         other => {
-            anyhow::bail!("unknown runs action {other:?} (list | show | resume | compare | gc)")
+            anyhow::bail!(
+                "unknown runs action {other:?} (list | show | resume | compare | gc | serve)"
+            )
         }
     }
     Ok(())
@@ -429,18 +459,26 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
             cfg.verbose = true;
             args.check_unused()?;
             let n_cells = cfg.cells()?.len();
-            let grid = if cfg.axes.is_empty() {
+            let grid = if cfg.axes.is_empty() && cfg.zip.is_empty() {
                 "base config only".to_string()
             } else {
-                cfg.axes
+                let mut parts: Vec<String> = cfg
+                    .axes
                     .iter()
                     .map(|a| format!("{}[{}]", a.key, a.values.len()))
-                    .collect::<Vec<_>>()
-                    .join(" x ")
+                    .collect();
+                if !cfg.zip.is_empty() {
+                    parts.push(format!(
+                        "zip({})[{}]",
+                        cfg.zip.iter().map(|a| a.key.as_str()).collect::<Vec<_>>().join(","),
+                        cfg.zip[0].values.len()
+                    ));
+                }
+                parts.join(" x ")
             };
             println!(
                 "campaign {name}: {n_cells} cell(s) = {grid} (store {})",
-                store.root().display()
+                store.location()
             );
             warn_crossed_strategy_axes(&cfg);
             let outcome = campaign::run_campaign(&store, &cfg)?;
@@ -458,7 +496,7 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
             anyhow::ensure!(
                 outcome.complete(),
                 "campaign {name} incomplete — rerun `fedel campaign run --name {name} --store {}` to resume",
-                store.root().display()
+                store.location()
             );
             Ok(())
         }
@@ -560,8 +598,9 @@ fn campaign_cfg_from_args(
     args: &Args,
 ) -> anyhow::Result<CampaignCfg> {
     let grid_keys = ["model", "strategies", "seeds", "fleets", "t-th", "rounds", "set"];
-    let respecified =
-        grid_keys.iter().any(|k| args.get(k).is_some()) || !args.all("sweep").is_empty();
+    let respecified = grid_keys.iter().any(|k| args.get(k).is_some())
+        || !args.all("sweep").is_empty()
+        || !args.all("zip").is_empty();
     if store.campaign_exists(name) && !respecified {
         let m = store.load_campaign(name)?;
         let mut cfg = CampaignCfg::from_spec_json(name, &m.spec)?;
@@ -596,6 +635,12 @@ fn campaign_cfg_from_args(
     }
     for spec in args.all("sweep") {
         cfg.axis(spec)?;
+    }
+    // Correlated axes: every --zip key advances in lockstep (one zipped
+    // dimension), instead of crossing — `--zip a=1,2 --zip b=x,y` yields
+    // (1,x) and (2,y), never (1,y).
+    for spec in args.all("zip") {
+        cfg.zip_axis(spec)?;
     }
     if store.campaign_exists(name) {
         let m = store.load_campaign(name)?;

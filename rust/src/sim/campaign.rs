@@ -35,7 +35,9 @@
 //!
 //! Reporting rides the N-way [`crate::report::compare_runs`] ([`report`])
 //! and, for the paper's Table-3 shape, [`grouped_report`] collapses one
-//! axis (typically `seed`) into mean ± std per remaining cell.
+//! or more axes (typically `seed`, or `seed,fleet`) into mean ± std per
+//! remaining cell. Correlated knobs that should advance together rather
+//! than cross-multiply ride the `--zip` group ([`CampaignCfg::zip_axis`]).
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -70,6 +72,12 @@ pub struct CampaignCfg {
     /// Grid dimensions over registered parameter keys. Empty = one cell
     /// running the base config as-is.
     pub axes: Vec<SweepAxis>,
+    /// Correlated axes (`--zip`): all must have the same value count and
+    /// advance together, forming ONE extra grid dimension (the innermost)
+    /// whose i-th step binds every zipped key to its i-th value. Lets a
+    /// sweep pair, e.g., a fleet with its matched t_th_factor without
+    /// paying the cross product.
+    pub zip: Vec<SweepAxis>,
     /// The CLI `--set` layer, applied after the axis bindings in every
     /// cell (precedence: base < axis < set).
     pub set: SpecOverlay,
@@ -100,6 +108,7 @@ impl CampaignCfg {
             name: name.into(),
             base,
             axes: Vec::new(),
+            zip: Vec::new(),
             set: SpecOverlay::new(),
             checkpoint_every: 5,
             workers: 0,
@@ -117,20 +126,37 @@ impl CampaignCfg {
     }
 
     fn push_axis(&mut self, axis: SweepAxis) -> anyhow::Result<()> {
-        anyhow::ensure!(
-            !self.axes.iter().any(|a| a.key == axis.key),
-            "campaign {:?}: axis {:?} specified twice",
-            self.name,
-            axis.key
-        );
+        self.ensure_new_key(&axis.key)?;
         self.axes.push(axis);
         Ok(())
     }
 
-    /// The grid, expanded in deterministic order (first axis outermost).
+    /// Add one correlated axis from a `key=v1,v2,...` spec (the `--zip`
+    /// syntax, same grammar as `--sweep`). All zipped axes advance
+    /// together as one grid dimension; [`CampaignCfg::cells`] rejects the
+    /// campaign loudly if their value counts disagree.
+    pub fn zip_axis(&mut self, spec: &str) -> anyhow::Result<&mut CampaignCfg> {
+        let axis = SweepAxis::parse(ParamSpace::shared(), spec)?;
+        self.ensure_new_key(&axis.key)?;
+        self.zip.push(axis);
+        Ok(self)
+    }
+
+    fn ensure_new_key(&self, key: &str) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.axes.iter().chain(&self.zip).any(|a| a.key == key),
+            "campaign {:?}: axis {:?} specified twice",
+            self.name,
+            key
+        );
+        Ok(())
+    }
+
+    /// The grid, expanded in deterministic order (first axis outermost;
+    /// the zip group, when present, is the single innermost dimension).
     pub fn cells(&self) -> anyhow::Result<Vec<CampaignCell>> {
         anyhow::ensure!(self.checkpoint_every >= 1, "checkpoint interval must be >= 1");
-        for axis in &self.axes {
+        for axis in self.axes.iter().chain(&self.zip) {
             anyhow::ensure!(
                 !axis.values.is_empty(),
                 "campaign {:?}: axis {:?} has no values",
@@ -138,11 +164,25 @@ impl CampaignCfg {
                 axis.key
             );
             anyhow::ensure!(
-                self.axes.iter().filter(|a| a.key == axis.key).count() == 1,
+                self.axes.iter().chain(&self.zip).filter(|a| a.key == axis.key).count() == 1,
                 "campaign {:?}: axis {:?} specified twice",
                 self.name,
                 axis.key
             );
+        }
+        if let Some(first) = self.zip.first() {
+            for axis in &self.zip[1..] {
+                anyhow::ensure!(
+                    axis.values.len() == first.values.len(),
+                    "campaign {:?}: zipped axes must pair value-for-value, but {:?} has {} \
+                     values while {:?} has {}",
+                    self.name,
+                    axis.key,
+                    axis.values.len(),
+                    first.key,
+                    first.values.len()
+                );
+            }
         }
         let mut cells = vec![CampaignCell { index: 0, bindings: Vec::new() }];
         for axis in &self.axes {
@@ -151,6 +191,22 @@ impl CampaignCfg {
                 for v in &axis.values {
                     let mut bindings = cell.bindings.clone();
                     bindings.push(Binding { key: axis.key.clone(), value: v.clone() });
+                    next.push(CampaignCell { index: next.len(), bindings });
+                }
+            }
+            cells = next;
+        }
+        if let Some(first) = self.zip.first() {
+            let mut next = Vec::with_capacity(cells.len() * first.values.len());
+            for cell in &cells {
+                for step in 0..first.values.len() {
+                    let mut bindings = cell.bindings.clone();
+                    for axis in &self.zip {
+                        bindings.push(Binding {
+                            key: axis.key.clone(),
+                            value: axis.values[step].clone(),
+                        });
+                    }
                     next.push(CampaignCell { index: next.len(), bindings });
                 }
             }
@@ -181,12 +237,18 @@ impl CampaignCfg {
     /// knobs (workers, kill switches, verbosity) stay out, like
     /// `ExperimentCfg::to_json` keeps `halt_after` out of run snapshots.
     pub fn spec_to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut spec = vec![
             ("base", self.base.to_json()),
             ("set", self.set.to_json()),
             ("axes", Json::Arr(self.axes.iter().map(SweepAxis::to_json).collect())),
-            ("checkpoint_every", Json::Num(self.checkpoint_every as f64)),
-        ])
+        ];
+        // Only written when used, so pre-zip specs re-serialize textually
+        // identical (their stored manifests keep matching byte-for-byte).
+        if !self.zip.is_empty() {
+            spec.push(("zip", Json::Arr(self.zip.iter().map(SweepAxis::to_json).collect())));
+        }
+        spec.push(("checkpoint_every", Json::Num(self.checkpoint_every as f64)));
+        Json::obj(spec)
     }
 
     /// Rebuild a grid from a manifest's spec snapshot (the bare
@@ -257,6 +319,13 @@ impl CampaignCfg {
         };
         for axis in j.arr("axes")? {
             cfg.push_axis(SweepAxis::from_json(space, axis)?)?;
+        }
+        if let Some(Json::Arr(zipped)) = j.get("zip") {
+            for axis in zipped {
+                let axis = SweepAxis::from_json(space, axis)?;
+                cfg.ensure_new_key(&axis.key)?;
+                cfg.zip.push(axis);
+            }
         }
         Ok(cfg)
     }
@@ -675,12 +744,13 @@ pub fn report(
     Ok(compare_runs(&refs, target, base_idx))
 }
 
-/// The paper's Table-3 shape: collapse one axis (`over`, typically
-/// `seed`) into mean ± std per remaining cell — final accuracy,
-/// time-to-target, and speedup vs the matched baseline cell (same
-/// remaining bindings, the baseline strategy, same collapsed-axis value).
-/// `baseline` names a strategy on the grid's `strategy` axis; it defaults
-/// to "fedavg" when swept, else speedup columns are N/A.
+/// The paper's Table-3 shape: collapse one or more axes (`over`, a
+/// comma-separated key list, typically `seed` or `seed,fleet`) into
+/// mean ± std per remaining cell — final accuracy, time-to-target, and
+/// speedup vs the matched baseline cell (same remaining bindings, the
+/// baseline strategy, same collapsed-axis values). `baseline` names a
+/// strategy on the grid's `strategy` axis; it defaults to "fedavg" when
+/// swept, else speedup columns are N/A.
 pub fn grouped_report(
     store: &RunStore,
     m: &CampaignManifest,
@@ -689,12 +759,21 @@ pub fn grouped_report(
     baseline: Option<&str>,
 ) -> anyhow::Result<GroupedReport> {
     let cfg = CampaignCfg::from_spec_json(&m.name, &m.spec)?;
-    anyhow::ensure!(
-        cfg.axes.iter().any(|a| a.key == over),
-        "campaign {:?} has no {over:?} axis to aggregate over (axes: {})",
-        m.name,
-        cfg.axes.iter().map(|a| a.key.as_str()).collect::<Vec<_>>().join(", ")
-    );
+    let over_keys: Vec<&str> = over.split(',').map(str::trim).filter(|k| !k.is_empty()).collect();
+    anyhow::ensure!(!over_keys.is_empty(), "--over needs at least one axis key");
+    for key in &over_keys {
+        anyhow::ensure!(
+            cfg.axes.iter().chain(&cfg.zip).any(|a| a.key == *key),
+            "campaign {:?} has no {key:?} axis to aggregate over (axes: {})",
+            m.name,
+            cfg.axes
+                .iter()
+                .chain(&cfg.zip)
+                .map(|a| a.key.as_str())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
     let cells = cfg.cells()?;
     anyhow::ensure!(
         cells.len() == m.cells.len(),
@@ -739,7 +818,7 @@ pub fn grouped_report(
 
     // Baseline strategy: explicit, else "fedavg" if the strategy axis
     // sweeps it, else none (no speedup columns).
-    let strategy_axis = cfg.axes.iter().find(|a| a.key == "strategy");
+    let strategy_axis = cfg.axes.iter().chain(&cfg.zip).find(|a| a.key == "strategy");
     let baseline = match baseline {
         Some(b) => {
             let axis = strategy_axis.ok_or_else(|| {
@@ -769,13 +848,17 @@ pub fn grouped_report(
             .and_then(|r| time_to_target(&r.records, metric, target))
     };
 
-    // Group cells by their bindings minus the collapsed axis, in
+    // Group cells by their bindings minus the collapsed axes, in
     // first-seen (expansion) order.
     let mut order: Vec<String> = Vec::new();
     let mut groups: std::collections::HashMap<String, Vec<usize>> = std::collections::HashMap::new();
     for cell in &cells {
-        let rest: Vec<Binding> =
-            cell.bindings.iter().filter(|b| b.key != over).cloned().collect();
+        let rest: Vec<Binding> = cell
+            .bindings
+            .iter()
+            .filter(|b| !over_keys.contains(&b.key.as_str()))
+            .cloned()
+            .collect();
         let label = bindings_label(&rest);
         if !groups.contains_key(&label) {
             order.push(label.clone());
@@ -815,7 +898,7 @@ pub fn grouped_report(
         })
         .collect();
 
-    Ok(GroupedReport { metric, target, over: over.to_string(), baseline, rows })
+    Ok(GroupedReport { metric, target, over: over_keys.join(","), baseline, rows })
 }
 
 #[cfg(test)]
@@ -860,6 +943,63 @@ mod tests {
         // duplicate axes rejected
         let mut dup = grid();
         assert!(dup.axis("seed=3").is_err());
+    }
+
+    #[test]
+    fn zipped_axes_pair_positionally_as_one_inner_dimension() {
+        let mut cfg = CampaignCfg::new("zip", ExperimentCfg::default());
+        cfg.axis("seed=1,2").unwrap();
+        cfg.zip_axis("fleet=small10;large20").unwrap();
+        cfg.zip_axis("time.t_th_factor=0.8,1.25").unwrap();
+        let cells = cfg.cells().unwrap();
+        // 2 seeds x 2 zip steps — NOT the 2x2x2 cross product
+        assert_eq!(cells.len(), 4);
+        let labels: Vec<String> = cells.iter().map(CampaignCell::label).collect();
+        assert_eq!(
+            labels,
+            vec![
+                "seed=1,fleet=small10,time.t_th_factor=0.8",
+                "seed=1,fleet=large20,time.t_th_factor=1.25",
+                "seed=2,fleet=small10,time.t_th_factor=0.8",
+                "seed=2,fleet=large20,time.t_th_factor=1.25",
+            ]
+        );
+        // zip bindings resolve into the cell config like any axis binding
+        let c = cfg.cell_cfg(&cells[1]).unwrap();
+        assert_eq!(c.t_th_factor, 1.25);
+    }
+
+    #[test]
+    fn zip_length_mismatch_and_duplicate_keys_fail_loudly() {
+        let mut cfg = CampaignCfg::new("zip", ExperimentCfg::default());
+        cfg.zip_axis("seed=1,2,3").unwrap();
+        cfg.zip_axis("time.t_th_factor=0.8,1.25").unwrap();
+        let err = cfg.cells().unwrap_err().to_string();
+        assert!(err.contains("pair value-for-value"), "{err}");
+        assert!(err.contains("2") && err.contains("3"), "counts missing: {err}");
+        // a key can't appear in both --sweep and --zip
+        let mut dup = CampaignCfg::new("zip", ExperimentCfg::default());
+        dup.axis("seed=1,2").unwrap();
+        assert!(dup.zip_axis("seed=3,4").is_err());
+        let mut dup = CampaignCfg::new("zip", ExperimentCfg::default());
+        dup.zip_axis("seed=1,2").unwrap();
+        assert!(dup.axis("seed=3,4").is_err());
+    }
+
+    #[test]
+    fn zip_survives_the_spec_snapshot_and_stays_out_when_unused() {
+        let mut cfg = grid();
+        cfg.zip_axis("data.alpha=0.1,0.5").unwrap();
+        cfg.zip_axis("time.t_th_factor=0.8,1.25").unwrap();
+        let text = cfg.spec_to_json().to_string_pretty();
+        let back = CampaignCfg::from_spec_json("unit", &Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.zip, cfg.zip);
+        assert_eq!(
+            back.cells().unwrap().iter().map(CampaignCell::label).collect::<Vec<_>>(),
+            cfg.cells().unwrap().iter().map(CampaignCell::label).collect::<Vec<_>>()
+        );
+        // pre-zip campaigns keep serializing without the key at all
+        assert!(grid().spec_to_json().get("zip").is_none());
     }
 
     #[test]

@@ -1,0 +1,345 @@
+//! Minimal HTTP/1.1 over `std::net` — just enough protocol for the store
+//! server ([`super::serve`]) and client ([`super::remote`]) to speak the
+//! OCI-registry-style routes, in the spirit of the repo's hand-rolled
+//! `util/sha256.rs` (the offline registry has no hyper/reqwest).
+//!
+//! Deliberate simplifications, safe because we own both ends:
+//! * `Content-Length` framing only — no chunked transfer encoding;
+//! * one request per connection (`Connection: close` always);
+//! * headers are ASCII, matched case-insensitively, size-capped.
+
+use std::io::{BufRead, Read, Write};
+
+/// Largest accepted header section; a line beyond this is a protocol error,
+/// not a buffer to grow.
+const MAX_HEADER_BYTES: usize = 64 * 1024;
+
+/// Largest accepted body (1 GiB): parameter blobs for the models this repo
+/// simulates are far below this, and a cap turns a corrupt length into a
+/// loud error instead of an allocation bomb.
+const MAX_BODY_BYTES: u64 = 1 << 30;
+
+/// A parsed request (server side) — method, origin-form target, headers,
+/// and a fully-read body.
+pub struct Request {
+    pub method: String,
+    pub target: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// The target's path component (before `?`).
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or("")
+    }
+
+    /// The raw query string, if any.
+    pub fn query(&self) -> Option<&str> {
+        self.target.split_once('?').map(|(_, q)| q)
+    }
+
+    /// First value of a `key=value` query parameter, percent-decoded.
+    pub fn query_param(&self, key: &str) -> Option<String> {
+        self.query()?
+            .split('&')
+            .filter_map(|kv| kv.split_once('='))
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| percent_decode(v))
+    }
+
+    pub fn header(&self, name: &str) -> Option<&str> {
+        header_get(&self.headers, name)
+    }
+}
+
+/// A response, built server-side or parsed client-side.
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Response {
+        Response { status, headers: Vec::new(), body: Vec::new() }
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+
+    pub fn with_body(mut self, body: Vec<u8>, content_type: &str) -> Response {
+        self.headers.push(("Content-Type".to_string(), content_type.to_string()));
+        self.body = body;
+        self
+    }
+
+    pub fn json(status: u16, j: &crate::util::json::Json) -> Response {
+        Response::new(status).with_body(j.to_string().into_bytes(), "application/json")
+    }
+
+    pub fn header(&self, name: &str) -> Option<&str> {
+        header_get(&self.headers, name)
+    }
+
+    pub fn ok(&self) -> bool {
+        (200..300).contains(&self.status)
+    }
+}
+
+fn header_get<'a>(headers: &'a [(String, String)], name: &str) -> Option<&'a str> {
+    headers
+        .iter()
+        .find(|(k, _)| k.eq_ignore_ascii_case(name))
+        .map(|(_, v)| v.as_str())
+}
+
+/// Decode `%XX` escapes (and `+` as space) — run ids and strategy names
+/// are plain tokens, but the client encodes defensively.
+pub fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'%' => {
+                let hex = bytes.get(i + 1..i + 3).and_then(|h| {
+                    u8::from_str_radix(std::str::from_utf8(h).ok()?, 16).ok()
+                });
+                match hex {
+                    Some(b) => {
+                        out.push(b);
+                        i += 3;
+                    }
+                    None => {
+                        out.push(b'%');
+                        i += 1;
+                    }
+                }
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            b => {
+                out.push(b);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Encode a path/query segment conservatively: everything outside the
+/// unreserved set is `%XX`-escaped.
+pub fn percent_encode(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for b in s.bytes() {
+        match b {
+            b'A'..=b'Z' | b'a'..=b'z' | b'0'..=b'9' | b'-' | b'_' | b'.' | b'~' | b':' => {
+                out.push(b as char)
+            }
+            _ => out.push_str(&format!("%{b:02X}")),
+        }
+    }
+    out
+}
+
+fn read_line_capped(r: &mut impl BufRead, budget: &mut usize) -> std::io::Result<String> {
+    let mut line = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        r.read_exact(&mut byte)?;
+        if byte[0] == b'\n' {
+            break;
+        }
+        line.push(byte[0]);
+        *budget = budget.checked_sub(1).ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "header section too large")
+        })?;
+    }
+    if line.last() == Some(&b'\r') {
+        line.pop();
+    }
+    String::from_utf8(line)
+        .map_err(|_| std::io::Error::new(std::io::ErrorKind::InvalidData, "non-UTF-8 header"))
+}
+
+fn read_headers(
+    r: &mut impl BufRead,
+    budget: &mut usize,
+) -> std::io::Result<Vec<(String, String)>> {
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line_capped(r, budget)?;
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            headers.push((k.trim().to_string(), v.trim().to_string()));
+        }
+    }
+}
+
+fn read_body(
+    r: &mut impl BufRead,
+    headers: &[(String, String)],
+) -> std::io::Result<Vec<u8>> {
+    let len: u64 = match header_get(headers, "Content-Length") {
+        Some(v) => v.parse().map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "bad Content-Length")
+        })?,
+        None => 0,
+    };
+    if len > MAX_BODY_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("body of {len} bytes exceeds the {MAX_BODY_BYTES}-byte cap"),
+        ));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+/// Read one request. `Ok(None)` means the peer closed cleanly before
+/// sending anything (a health probe, the shutdown self-connect).
+pub fn read_request(r: &mut impl BufRead) -> std::io::Result<Option<Request>> {
+    let mut budget = MAX_HEADER_BYTES;
+    let start = match read_line_capped(r, &mut budget) {
+        Ok(line) => line,
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    };
+    let mut parts = start.split_whitespace();
+    let (method, target) = match (parts.next(), parts.next()) {
+        (Some(m), Some(t)) => (m.to_string(), t.to_string()),
+        _ => {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("malformed request line {start:?}"),
+            ))
+        }
+    };
+    let headers = read_headers(r, &mut budget)?;
+    let body = read_body(r, &headers)?;
+    Ok(Some(Request { method, target, headers, body }))
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        202 => "Accepted",
+        204 => "No Content",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        412 => "Precondition Failed",
+        416 => "Range Not Satisfiable",
+        500 => "Internal Server Error",
+        _ => "",
+    }
+}
+
+/// Serialize a response; always closes the framing with `Connection: close`
+/// and an explicit `Content-Length`.
+pub fn write_response(w: &mut impl Write, resp: &Response) -> std::io::Result<()> {
+    write!(w, "HTTP/1.1 {} {}\r\n", resp.status, reason(resp.status))?;
+    for (k, v) in &resp.headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "Content-Length: {}\r\nConnection: close\r\n\r\n", resp.body.len())?;
+    w.write_all(&resp.body)?;
+    w.flush()
+}
+
+/// Serialize a request (client side).
+pub fn write_request(
+    w: &mut impl Write,
+    method: &str,
+    target: &str,
+    host: &str,
+    headers: &[(String, String)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    write!(w, "{method} {target} HTTP/1.1\r\nHost: {host}\r\n")?;
+    for (k, v) in headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "Content-Length: {}\r\nConnection: close\r\n\r\n", body.len())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read a response (client side). `head_only` skips the body read for
+/// HEAD requests, whose `Content-Length` describes the entity, not the
+/// (empty) wire body.
+pub fn read_response(r: &mut impl BufRead, head_only: bool) -> std::io::Result<Response> {
+    let mut budget = MAX_HEADER_BYTES;
+    let start = read_line_capped(r, &mut budget)?;
+    let status: u16 = start
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("malformed status line {start:?}"),
+            )
+        })?;
+    let headers = read_headers(r, &mut budget)?;
+    let body = if head_only || status == 204 { Vec::new() } else { read_body(r, &headers)? };
+    Ok(Response { status, headers, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_round_trips_through_the_wire_format() {
+        let mut wire = Vec::new();
+        write_request(
+            &mut wire,
+            "PUT",
+            "/v2/runs/manifests/a-s1?x=1",
+            "localhost",
+            &[("If-Match".into(), "\"sha256:ab\"".into())],
+            b"{\"k\":1}",
+        )
+        .unwrap();
+        let req = read_request(&mut std::io::BufReader::new(&wire[..])).unwrap().unwrap();
+        assert_eq!(req.method, "PUT");
+        assert_eq!(req.path(), "/v2/runs/manifests/a-s1");
+        assert_eq!(req.query_param("x").as_deref(), Some("1"));
+        assert_eq!(req.header("if-match"), Some("\"sha256:ab\""));
+        assert_eq!(req.body, b"{\"k\":1}");
+    }
+
+    #[test]
+    fn response_round_trips_and_eof_is_clean_none() {
+        let mut wire = Vec::new();
+        write_response(
+            &mut wire,
+            &Response::new(201).with_header("ETag", "\"sha256:cd\""),
+        )
+        .unwrap();
+        let resp = read_response(&mut std::io::BufReader::new(&wire[..]), false).unwrap();
+        assert_eq!(resp.status, 201);
+        assert_eq!(resp.header("etag"), Some("\"sha256:cd\""));
+        assert!(resp.ok());
+        // a silent close before any bytes is not an error
+        let none = read_request(&mut std::io::BufReader::new(&b""[..])).unwrap();
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn percent_coding_round_trips() {
+        for s in ["plain", "with space", "a/b?c=d", "sha256:abc", "100%"] {
+            assert_eq!(percent_decode(&percent_encode(s)), s, "{s:?}");
+        }
+    }
+}

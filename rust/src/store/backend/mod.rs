@@ -1,0 +1,488 @@
+//! Storage backends: where a [`crate::store::RunStore`] keeps its bytes.
+//!
+//! The store's object model (versioned run/campaign manifests +
+//! content-addressed blobs, `schema.rs`) is backend-agnostic; this module
+//! defines the primitive surface a backend must provide and the two
+//! implementations:
+//!
+//! * [`LocalBackend`] — the original directory layout (`runs/`, `blobs/`,
+//!   `campaigns/`), with the advisory lockfile serializing the mutations
+//!   that race (run-id allocation, campaign compare-and-swap, gc).
+//! * [`remote::RemoteBackend`] — an HTTP client speaking OCI-registry-style
+//!   routes against `fedel runs serve` ([`serve::StoreServer`]), so
+//!   campaign workers on different machines can share one store.
+//!
+//! The split of concerns: backends move *bytes* (and provide one atomic
+//! compare-and-swap primitive for campaign manifests); parsing, schema
+//! validation, digest bookkeeping, and the campaign claim protocol live in
+//! `RunStore` on top. `fresh_run_id` allocation, blob GC, and the lockfile
+//! are local-backend concerns — the remote backend delegates allocation to
+//! the serving host (whose local backend holds the lock) and refuses gc.
+
+pub mod http;
+pub mod remote;
+pub mod serve;
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::util::sha256;
+
+/// A crashed process can strand `.lock`; holders keep it for microseconds
+/// (id allocation, one small file rename) — long operations like gc
+/// heartbeat via [`StoreLock::refresh`] — so a lockfile this old is
+/// abandoned and gets reclaimed.
+const LOCK_STALE: Duration = Duration::from_secs(30);
+
+/// How long a contender waits for the lock before giving up loudly.
+const LOCK_WAIT: Duration = Duration::from_secs(20);
+
+/// Held advisory store lock; released (unlinked) on drop. The file holds
+/// a per-acquisition token, and release/reclaim are token-checked /
+/// rename-based, so a contender can never unlink a lock another holder
+/// legitimately owns.
+pub struct StoreLock {
+    path: PathBuf,
+    token: String,
+}
+
+impl StoreLock {
+    /// Re-stamp the lockfile's mtime. Holders that legitimately exceed
+    /// [`LOCK_STALE`] (gc over a huge store) must call this periodically
+    /// or a contender will reclaim the lock out from under them.
+    pub fn refresh(&self) {
+        let _ = std::fs::write(&self.path, &self.token);
+    }
+}
+
+impl Drop for StoreLock {
+    fn drop(&mut self) {
+        // Only unlink a lock that is still ours: if a contender reclaimed
+        // it as stale and re-acquired, the file now holds their token and
+        // removing it would admit a third holder.
+        if std::fs::read_to_string(&self.path).map(|t| t == self.token).unwrap_or(false) {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// A unique temporary file name: scratch writes from concurrent
+/// threads/processes must never interleave on one path, or a rename could
+/// publish a torn file.
+pub(crate) fn tmp_name(stem: &str) -> String {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static COUNTER: AtomicU64 = AtomicU64::new(0);
+    format!(
+        "{stem}.tmp-{}-{}",
+        std::process::id(),
+        COUNTER.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
+/// Write `bytes` to `path` atomically via a uniquely-named sibling tmp.
+pub(crate) fn write_atomic(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| anyhow::anyhow!("no file name in {path:?}"))?
+        .to_string_lossy()
+        .to_string();
+    let tmp = path.with_file_name(tmp_name(&file_name));
+    std::fs::write(&tmp, bytes).map_err(|e| anyhow::anyhow!("write {tmp:?}: {e}"))?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        anyhow::anyhow!("rename to {path:?}: {e}")
+    })?;
+    Ok(())
+}
+
+/// The digest string (`sha256:<hex>`) that addresses `bytes` — blobs are
+/// stored under it, and campaign manifests use it as their CAS token
+/// (served over HTTP as the `ETag`).
+pub fn content_digest(bytes: &[u8]) -> String {
+    format!("sha256:{}", sha256::hex(bytes))
+}
+
+/// What a [`StoreBackend::save_campaign`] caller expects the stored
+/// campaign manifest to look like for its write to land — the store's one
+/// compare-and-swap primitive, and the invariant that keeps concurrent
+/// cell claims from clobbering each other.
+#[derive(Clone, Copy, Debug)]
+pub enum CasExpect<'a> {
+    /// Unconditional write (last writer wins) — creation and full rewrites.
+    Any,
+    /// The manifest must not exist yet (HTTP `If-None-Match: *`).
+    Absent,
+    /// The stored manifest's content digest must equal this
+    /// (`sha256:<hex>`; HTTP `If-Match`).
+    Digest(&'a str),
+}
+
+/// Outcome of a [`StoreBackend::save_campaign`] compare-and-swap.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CasOutcome {
+    /// The write landed; carries the new content digest.
+    Committed(String),
+    /// The expectation failed — someone else wrote first. Reload and retry.
+    Conflict,
+}
+
+/// The primitive surface a store backend provides. Everything takes and
+/// returns raw bytes; `RunStore` layers parsing, digest verification, and
+/// the claim protocol on top. Implementations must be safe to share across
+/// threads (the campaign runner hits one backend from its worker pool).
+pub trait StoreBackend: Send + Sync {
+    /// Human-readable location for messages (`runs`, `http://host:port`).
+    fn location(&self) -> String;
+
+    /// Allocate (and reserve) a fresh run id; see
+    /// [`LocalBackend::fresh_run_id`] for the id scheme. Remote backends
+    /// delegate to the serving host so the allocation lock stays local.
+    fn fresh_run_id(&self, strategy: &str, seed: u64) -> anyhow::Result<String>;
+
+    fn save_manifest(&self, id: &str, bytes: &[u8]) -> anyhow::Result<()>;
+    fn load_manifest(&self, id: &str) -> anyhow::Result<Vec<u8>>;
+    /// Ids of all stored runs (unordered; callers sort after parsing).
+    fn list_runs(&self) -> anyhow::Result<Vec<String>>;
+
+    /// Store `bytes` under content address `hex` (already computed by the
+    /// caller); already-present digests need not be rewritten.
+    fn put_blob(&self, hex: &str, bytes: &[u8]) -> anyhow::Result<()>;
+    fn get_blob(&self, hex: &str) -> anyhow::Result<Vec<u8>>;
+    /// Size of the stored blob, or `None` if absent.
+    fn head_blob(&self, hex: &str) -> anyhow::Result<Option<u64>>;
+
+    /// The stored campaign manifest and its content digest, or `None` if
+    /// no campaign of that name exists.
+    fn load_campaign(&self, name: &str) -> anyhow::Result<Option<(Vec<u8>, String)>>;
+    /// Compare-and-swap write of a campaign manifest (see [`CasExpect`]).
+    /// The comparison and the write are atomic with respect to every other
+    /// writer of the same store, across threads, processes, and hosts.
+    fn save_campaign(
+        &self,
+        name: &str,
+        bytes: &[u8],
+        expect: CasExpect<'_>,
+    ) -> anyhow::Result<CasOutcome>;
+    /// Names of all stored campaigns (unordered).
+    fn list_campaigns(&self) -> anyhow::Result<Vec<String>>;
+
+    /// Downcast seam for operations that only make sense against a local
+    /// directory (gc, the CLI server's root, lock-holding maintenance).
+    fn as_local(&self) -> Option<&LocalBackend>;
+}
+
+/// The original directory-backed store (see [`crate::store`] module docs
+/// for the layout): everything under one root, mutations that race
+/// serialized through the `.lock` advisory lockfile.
+pub struct LocalBackend {
+    root: PathBuf,
+}
+
+impl LocalBackend {
+    /// Open a directory store, creating the skeleton if absent.
+    pub fn open(root: impl Into<PathBuf>) -> anyhow::Result<LocalBackend> {
+        let root = root.into();
+        for sub in ["runs", "blobs", "campaigns"] {
+            let dir = root.join(sub);
+            std::fs::create_dir_all(&dir)
+                .map_err(|e| anyhow::anyhow!("create {dir:?}: {e}"))?;
+        }
+        Ok(LocalBackend { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn run_dir(&self, id: &str) -> PathBuf {
+        self.root.join("runs").join(id)
+    }
+
+    fn blob_path(&self, hex: &str) -> PathBuf {
+        self.root.join("blobs").join(hex)
+    }
+
+    fn campaign_path(&self, name: &str) -> PathBuf {
+        self.root.join("campaigns").join(format!("{name}.json"))
+    }
+
+    /// Take the store-wide advisory lock. `O_EXCL` creation is atomic on
+    /// every platform we care about, across threads and processes alike;
+    /// contenders spin with a short sleep, reclaim abandoned locks older
+    /// than [`LOCK_STALE`], and give up after [`LOCK_WAIT`].
+    ///
+    /// Stale reclaim is rename-based: `rename` succeeds for exactly one
+    /// contender (the others see the file gone), so several contenders
+    /// observing the same abandoned lock can never all "remove and
+    /// re-create" their way into concurrent ownership.
+    pub fn lock(&self) -> anyhow::Result<StoreLock> {
+        let path = self.root.join(".lock");
+        // pid + counter, for humans debugging a stuck store and for the
+        // token-checked release.
+        let token = tmp_name("holder");
+        let deadline = Instant::now() + LOCK_WAIT;
+        loop {
+            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+                Ok(mut f) => {
+                    let _ = write!(f, "{token}");
+                    return Ok(StoreLock { path, token });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                    let stale = std::fs::metadata(&path)
+                        .and_then(|m| m.modified())
+                        .ok()
+                        .and_then(|t| t.elapsed().ok())
+                        .map(|age| age >= LOCK_STALE)
+                        .unwrap_or(false);
+                    if stale {
+                        // Claim the corpse by renaming it to a unique
+                        // graveyard name; exactly one contender wins.
+                        let grave = path.with_file_name(tmp_name(".lock.stale"));
+                        if std::fs::rename(&path, &grave).is_ok() {
+                            let _ = std::fs::remove_file(&grave);
+                        }
+                        continue;
+                    }
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "store lock {path:?} held for over {LOCK_WAIT:?} — \
+                         remove it by hand if its owner is gone"
+                    );
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(anyhow::anyhow!("create lock {path:?}: {e}")),
+            }
+        }
+    }
+}
+
+impl StoreBackend for LocalBackend {
+    fn location(&self) -> String {
+        self.root.display().to_string()
+    }
+
+    /// Allocate a fresh, human-readable run id: `<strategy>-s<seed>`,
+    /// suffixed `-2`, `-3`, ... when taken. Allocation *reserves* the id
+    /// by creating `runs/<id>/` while holding the store lock, so
+    /// concurrent writers — threads or whole processes — can never both
+    /// observe the same id free and clobber each other's run directory.
+    fn fresh_run_id(&self, strategy: &str, seed: u64) -> anyhow::Result<String> {
+        let _lock = self.lock()?;
+        let base = format!("{strategy}-s{seed}");
+        let mut id = base.clone();
+        let mut n = 2usize;
+        loop {
+            let dir = self.run_dir(&id);
+            if !dir.exists() {
+                std::fs::create_dir_all(&dir)
+                    .map_err(|e| anyhow::anyhow!("reserve {dir:?}: {e}"))?;
+                return Ok(id);
+            }
+            id = format!("{base}-{n}");
+            n += 1;
+        }
+    }
+
+    /// Persist a manifest atomically (uniquely-named tmp + rename): a
+    /// crash mid-write leaves the previous manifest intact, never a torn
+    /// one, and concurrent writers never share a scratch path.
+    fn save_manifest(&self, id: &str, bytes: &[u8]) -> anyhow::Result<()> {
+        let dir = self.run_dir(id);
+        std::fs::create_dir_all(&dir).map_err(|e| anyhow::anyhow!("create {dir:?}: {e}"))?;
+        write_atomic(&dir.join("manifest.json"), bytes)
+    }
+
+    fn load_manifest(&self, id: &str) -> anyhow::Result<Vec<u8>> {
+        let path = self.run_dir(id).join("manifest.json");
+        std::fs::read(&path).map_err(|e| anyhow::anyhow!("no stored run {id:?} ({path:?}: {e})"))
+    }
+
+    fn list_runs(&self) -> anyhow::Result<Vec<String>> {
+        let dir = self.root.join("runs");
+        let mut out = Vec::new();
+        for entry in
+            std::fs::read_dir(&dir).map_err(|e| anyhow::anyhow!("read {dir:?}: {e}"))?
+        {
+            let entry = entry?;
+            if entry.path().join("manifest.json").exists() {
+                out.push(entry.file_name().to_string_lossy().to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Concurrent writers of the same content are harmless: each writes
+    /// its own uniquely-named tmp, and whichever rename lands last
+    /// replaces identical bytes with identical bytes.
+    fn put_blob(&self, hex: &str, bytes: &[u8]) -> anyhow::Result<()> {
+        let path = self.blob_path(hex);
+        if !path.exists() {
+            write_atomic(&path, bytes)?;
+        }
+        Ok(())
+    }
+
+    fn get_blob(&self, hex: &str) -> anyhow::Result<Vec<u8>> {
+        let path = self.blob_path(hex);
+        std::fs::read(&path).map_err(|e| anyhow::anyhow!("read blob {path:?}: {e}"))
+    }
+
+    fn head_blob(&self, hex: &str) -> anyhow::Result<Option<u64>> {
+        match std::fs::metadata(self.blob_path(hex)) {
+            Ok(m) => Ok(Some(m.len())),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(anyhow::anyhow!("stat blob {hex}: {e}")),
+        }
+    }
+
+    fn load_campaign(&self, name: &str) -> anyhow::Result<Option<(Vec<u8>, String)>> {
+        let path = self.campaign_path(name);
+        match std::fs::read(&path) {
+            Ok(bytes) => {
+                let digest = content_digest(&bytes);
+                Ok(Some((bytes, digest)))
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(None),
+            Err(e) => Err(anyhow::anyhow!("read campaign {path:?}: {e}")),
+        }
+    }
+
+    /// The compare and the write happen under the store lock, making the
+    /// pair atomic against every other writer of this directory — the
+    /// same guarantee the HTTP server gives remote writers by computing
+    /// it inside its own local backend.
+    fn save_campaign(
+        &self,
+        name: &str,
+        bytes: &[u8],
+        expect: CasExpect<'_>,
+    ) -> anyhow::Result<CasOutcome> {
+        let _lock = self.lock()?;
+        let current = self.load_campaign(name)?;
+        let ok = match (&expect, &current) {
+            (CasExpect::Any, _) => true,
+            (CasExpect::Absent, None) => true,
+            (CasExpect::Absent, Some(_)) => false,
+            (CasExpect::Digest(d), Some((_, cur))) => *d == cur.as_str(),
+            (CasExpect::Digest(_), None) => false,
+        };
+        if !ok {
+            return Ok(CasOutcome::Conflict);
+        }
+        write_atomic(&self.campaign_path(name), bytes)?;
+        Ok(CasOutcome::Committed(content_digest(bytes)))
+    }
+
+    fn list_campaigns(&self) -> anyhow::Result<Vec<String>> {
+        let dir = self.root.join("campaigns");
+        let mut out = Vec::new();
+        for entry in
+            std::fs::read_dir(&dir).map_err(|e| anyhow::anyhow!("read {dir:?}: {e}"))?
+        {
+            let name = entry?.file_name().to_string_lossy().to_string();
+            if let Some(stem) = name.strip_suffix(".json") {
+                out.push(stem.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    fn as_local(&self) -> Option<&LocalBackend> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("fedel-backend-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn lock_excludes_and_releases() {
+        let dir = scratch("lock");
+        let b = LocalBackend::open(&dir).unwrap();
+        let held = b.lock().unwrap();
+        assert!(dir.join(".lock").exists());
+        drop(held);
+        assert!(!dir.join(".lock").exists(), "lock must release on drop");
+        // reacquirable after release
+        drop(b.lock().unwrap());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_lock_is_reclaimed() {
+        let dir = scratch("stale");
+        let b = LocalBackend::open(&dir).unwrap();
+        // Simulate a crashed holder: a lockfile whose mtime is ancient.
+        let path = dir.join(".lock");
+        std::fs::write(&path, b"dead").unwrap();
+        let old = std::time::SystemTime::now() - (LOCK_STALE + Duration::from_secs(5));
+        let f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.set_modified(old).unwrap();
+        drop(f);
+        let _held = b.lock().expect("stale lock must be reclaimed");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn campaign_cas_honors_expectations() {
+        let dir = scratch("cas");
+        let b = LocalBackend::open(&dir).unwrap();
+        // Absent: only the first creator wins.
+        let first = b.save_campaign("c", b"v1", CasExpect::Absent).unwrap();
+        let CasOutcome::Committed(d1) = first else { panic!("create must land") };
+        assert_eq!(d1, content_digest(b"v1"));
+        assert_eq!(
+            b.save_campaign("c", b"v1b", CasExpect::Absent).unwrap(),
+            CasOutcome::Conflict,
+            "second creator must lose"
+        );
+        // Digest: stale tokens lose, current ones win.
+        assert_eq!(
+            b.save_campaign("c", b"v2", CasExpect::Digest(&content_digest(b"other"))).unwrap(),
+            CasOutcome::Conflict
+        );
+        let CasOutcome::Committed(d2) =
+            b.save_campaign("c", b"v2", CasExpect::Digest(&d1)).unwrap()
+        else {
+            panic!("matching digest must land")
+        };
+        let (bytes, digest) = b.load_campaign("c").unwrap().unwrap();
+        assert_eq!(bytes, b"v2");
+        assert_eq!(digest, d2);
+        // Any: unconditional.
+        assert!(matches!(
+            b.save_campaign("c", b"v3", CasExpect::Any).unwrap(),
+            CasOutcome::Committed(_)
+        ));
+        // Digest against a missing manifest is a conflict, not an error.
+        assert_eq!(
+            b.save_campaign("nope", b"x", CasExpect::Digest(&d2)).unwrap(),
+            CasOutcome::Conflict
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn blob_and_manifest_primitives_round_trip() {
+        let dir = scratch("prims");
+        let b = LocalBackend::open(&dir).unwrap();
+        let hex = crate::util::sha256::hex(b"payload");
+        assert_eq!(b.head_blob(&hex).unwrap(), None);
+        b.put_blob(&hex, b"payload").unwrap();
+        assert_eq!(b.head_blob(&hex).unwrap(), Some(7));
+        assert_eq!(b.get_blob(&hex).unwrap(), b"payload");
+        b.save_manifest("run-s1", b"{}").unwrap();
+        assert_eq!(b.load_manifest("run-s1").unwrap(), b"{}");
+        assert_eq!(b.list_runs().unwrap(), vec!["run-s1".to_string()]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,465 @@
+//! [`RemoteBackend`]: the HTTP client side of the distributed store.
+//!
+//! Opens whenever a `--store` value starts with `http://` — every CLI
+//! path that accepts a store directory transparently works against a
+//! `fedel runs serve` instance instead. Design points:
+//!
+//! * **One connection per request** (`Connection: close`): dead simple,
+//!   and the request volume (a manifest every few rounds, a params blob
+//!   per checkpoint) is nowhere near where keep-alive matters.
+//! * **Bounded retry with exponential backoff** on transient failures
+//!   (connect/IO errors, 5xx): campaigns survive a briefly unreachable
+//!   server. Only idempotent requests are blindly retried; chunk uploads
+//!   resume instead (below).
+//! * **Digest verification on every pull.** A blob is only accepted — and
+//!   only enters the local cache — after its sha256 matches the address
+//!   it was requested under. A corrupted wire byte reads as a transient
+//!   error and retries.
+//! * **Resumable uploads.** Blobs push through OCI-style upload sessions
+//!   (`POST` open, `PATCH` chunks, `PUT` digest-verified commit); after a
+//!   dropped connection the client asks the session for its landed offset
+//!   and continues from there, re-opening the session only if it is gone.
+//! * **Read-through blob cache.** Blobs are immutable by digest, so a
+//!   verified pull is cached on local disk forever and never invalidated;
+//!   repeated resumes of a remote campaign pull each params blob once.
+
+use std::io::BufReader;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::util::sha256;
+
+use super::http::{percent_encode, read_response, write_request, Response};
+use super::{content_digest, write_atomic, CasExpect, CasOutcome, LocalBackend, StoreBackend};
+
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(3);
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+/// Transient-failure retry budget (per logical operation).
+const RETRIES: usize = 4;
+/// First backoff step; doubles per attempt (50, 100, 200, 400 ms).
+const BACKOFF: Duration = Duration::from_millis(50);
+/// Upload chunk size: small enough that a dropped connection loses little
+/// progress, large enough that per-chunk overhead is noise.
+const CHUNK: usize = 256 * 1024;
+
+/// Where pulled blobs are cached (content-addressed, shared by every
+/// remote store this machine talks to — digests can't collide across
+/// servers). Overridable via `FEDEL_CACHE_DIR`.
+pub fn default_cache_dir() -> PathBuf {
+    match std::env::var_os("FEDEL_CACHE_DIR") {
+        Some(dir) => PathBuf::from(dir),
+        None => std::env::temp_dir().join("fedel-blob-cache"),
+    }
+}
+
+/// An error classified for the retry loop: transient failures (connect
+/// refused, torn connection, 5xx, digest mismatch on a pull) retry with
+/// backoff; permanent ones (404, 4xx) surface immediately.
+enum RemoteError {
+    Transient(anyhow::Error),
+    Permanent(anyhow::Error),
+}
+
+fn transient(e: impl Into<anyhow::Error>) -> RemoteError {
+    RemoteError::Transient(e.into())
+}
+
+fn status_error(what: &str, resp: &Response) -> RemoteError {
+    let detail = String::from_utf8_lossy(&resp.body).into_owned();
+    let e = anyhow::anyhow!("{what}: HTTP {} {detail}", resp.status);
+    if resp.status >= 500 {
+        RemoteError::Transient(e)
+    } else {
+        RemoteError::Permanent(e)
+    }
+}
+
+pub struct RemoteBackend {
+    /// `host:port` — the connect target and `Host` header.
+    host: String,
+    cache: PathBuf,
+}
+
+impl RemoteBackend {
+    /// `url` is `http://host:port` (no path; TLS is out of scope for a
+    /// lab-network store). The connection is lazy — constructing a backend
+    /// never touches the network.
+    pub fn new(url: &str) -> anyhow::Result<RemoteBackend> {
+        let rest = url
+            .strip_prefix("http://")
+            .ok_or_else(|| anyhow::anyhow!("remote store url must start with http://, got {url:?}"))?;
+        let host = rest.trim_end_matches('/');
+        anyhow::ensure!(
+            !host.is_empty() && !host.contains('/'),
+            "remote store url must be http://host:port with no path, got {url:?}"
+        );
+        Ok(RemoteBackend { host: host.to_string(), cache: default_cache_dir() })
+    }
+
+    fn cache_path(&self, hex: &str) -> PathBuf {
+        self.cache.join(hex)
+    }
+
+    /// One request over a fresh connection. IO failure anywhere —
+    /// connect, send, or a torn response — is transient.
+    fn request(
+        &self,
+        method: &str,
+        target: &str,
+        headers: &[(String, String)],
+        body: &[u8],
+    ) -> Result<Response, RemoteError> {
+        let addr = self
+            .host
+            .to_socket_addrs()
+            .map_err(transient)?
+            .next()
+            .ok_or_else(|| RemoteError::Permanent(anyhow::anyhow!("{} resolves to nothing", self.host)))?;
+        let stream = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT).map_err(transient)?;
+        stream.set_read_timeout(Some(IO_TIMEOUT)).map_err(transient)?;
+        stream.set_write_timeout(Some(IO_TIMEOUT)).map_err(transient)?;
+        let mut w = stream.try_clone().map_err(transient)?;
+        write_request(&mut w, method, target, &self.host, headers, body).map_err(transient)?;
+        let mut r = BufReader::new(stream);
+        read_response(&mut r, method == "HEAD").map_err(transient)
+    }
+
+    /// Run `op` with the transient-retry policy. `op` must be safe to
+    /// repeat (idempotent, or harmless when duplicated).
+    fn with_retry<T>(
+        &self,
+        what: &str,
+        mut op: impl FnMut() -> Result<T, RemoteError>,
+    ) -> anyhow::Result<T> {
+        let mut delay = BACKOFF;
+        let mut last: Option<anyhow::Error> = None;
+        for attempt in 0..=RETRIES {
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(RemoteError::Permanent(e)) => {
+                    return Err(e.context(format!("{what} (http://{})", self.host)))
+                }
+                Err(RemoteError::Transient(e)) => {
+                    last = Some(e);
+                    if attempt < RETRIES {
+                        std::thread::sleep(delay);
+                        delay *= 2;
+                    }
+                }
+            }
+        }
+        Err(last
+            .unwrap_or_else(|| anyhow::anyhow!("unreachable: no attempt ran"))
+            .context(format!("{what} failed after {} attempts (http://{})", RETRIES + 1, self.host)))
+    }
+
+    /// Push `bytes` through one upload-session attempt, resuming at
+    /// `PATCH` granularity: on a dropped chunk the session's landed offset
+    /// is re-queried and the transfer continues from there.
+    fn upload_once(&self, hex: &str, bytes: &[u8]) -> Result<(), RemoteError> {
+        let open = self.request("POST", "/v2/runs/blobs/uploads/", &[], &[])?;
+        if open.status != 202 {
+            return Err(status_error("open upload session", &open));
+        }
+        let session = open
+            .header("Location")
+            .ok_or_else(|| RemoteError::Permanent(anyhow::anyhow!("upload session without Location")))?
+            .to_string();
+        let mut offset = 0usize;
+        while offset < bytes.len() {
+            let end = (offset + CHUNK).min(bytes.len());
+            let headers =
+                vec![("Content-Range".to_string(), format!("{}-{}", offset, end - 1))];
+            match self.request("PATCH", &session, &headers, &bytes[offset..end]) {
+                Ok(resp) if resp.status == 202 => offset = end,
+                Ok(resp) if resp.status == 416 => {
+                    // Offset disagreement (e.g. a chunk landed but its
+                    // response was lost): trust the server's Range.
+                    offset = range_end(&resp).map(|e| e + 1).unwrap_or(0) as usize;
+                }
+                Ok(resp) if resp.status == 404 => {
+                    // Session expired server-side: restart from scratch.
+                    return Err(status_error("upload chunk", &resp));
+                }
+                Ok(resp) => return Err(status_error("upload chunk", &resp)),
+                Err(RemoteError::Transient(_)) => {
+                    // The connection dropped mid-chunk — ask the session
+                    // how much actually landed and resume there.
+                    let status = self.request("GET", &session, &[], &[])?;
+                    if status.status != 204 {
+                        return Err(status_error("query upload offset", &status));
+                    }
+                    offset = range_end(&status).map(|e| e + 1).unwrap_or(0) as usize;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        let commit =
+            self.request("PUT", &format!("{session}?digest=sha256:{hex}"), &[], &[])?;
+        if commit.status != 201 {
+            return Err(status_error("commit upload", &commit));
+        }
+        Ok(())
+    }
+
+    /// Fetch + verify one blob from the wire (no cache involvement).
+    fn fetch_verified(&self, hex: &str) -> Result<Vec<u8>, RemoteError> {
+        let resp = self.request("GET", &format!("/v2/runs/blobs/sha256:{hex}"), &[], &[])?;
+        if !resp.ok() {
+            return Err(status_error("pull blob", &resp));
+        }
+        if sha256::hex(&resp.body) != hex {
+            // Corruption on the wire (or a byzantine server): loud, and
+            // retryable — the next attempt may traverse a clean path.
+            return Err(RemoteError::Transient(anyhow::anyhow!(
+                "blob sha256:{hex}: pulled bytes do not match their digest"
+            )));
+        }
+        Ok(resp.body)
+    }
+
+    fn campaign_target(name: &str) -> String {
+        format!("/v2/campaigns/manifests/{}", percent_encode(name))
+    }
+}
+
+/// The inclusive end index from a `Range: 0-<end>` header, if present.
+fn range_end(resp: &Response) -> Option<u64> {
+    resp.header("Range")?.split('-').nth(1)?.trim().parse().ok()
+}
+
+impl StoreBackend for RemoteBackend {
+    fn location(&self) -> String {
+        format!("http://{}", self.host)
+    }
+
+    /// Allocation happens on the serving host, under its store lock — the
+    /// id namespace is race-free across every client machine. A retried
+    /// POST whose first response was lost may allocate (and strand) an
+    /// extra empty id, which is harmless: ids are cheap, and `runs list`
+    /// skips directories without a manifest.
+    fn fresh_run_id(&self, strategy: &str, seed: u64) -> anyhow::Result<String> {
+        self.with_retry("allocate run id", || {
+            let resp = self.request(
+                "POST",
+                &format!("/v2/runs/ids?strategy={}&seed={seed}", percent_encode(strategy)),
+                &[],
+                &[],
+            )?;
+            if resp.status != 201 {
+                return Err(status_error("allocate run id", &resp));
+            }
+            let j = crate::util::json::Json::parse(&String::from_utf8_lossy(&resp.body))
+                .map_err(|e| RemoteError::Permanent(anyhow::anyhow!("id response: {e}")))?;
+            j.s("id")
+                .map(|s| s.to_string())
+                .map_err(RemoteError::Permanent)
+        })
+    }
+
+    fn save_manifest(&self, id: &str, bytes: &[u8]) -> anyhow::Result<()> {
+        self.with_retry(&format!("save manifest {id:?}"), || {
+            let resp = self.request(
+                "PUT",
+                &format!("/v2/runs/manifests/{}", percent_encode(id)),
+                &[],
+                bytes,
+            )?;
+            if resp.status != 201 {
+                return Err(status_error("save manifest", &resp));
+            }
+            Ok(())
+        })
+    }
+
+    fn load_manifest(&self, id: &str) -> anyhow::Result<Vec<u8>> {
+        self.with_retry(&format!("load manifest {id:?}"), || {
+            let resp = self.request(
+                "GET",
+                &format!("/v2/runs/manifests/{}", percent_encode(id)),
+                &[],
+                &[],
+            )?;
+            if resp.status == 404 {
+                return Err(RemoteError::Permanent(anyhow::anyhow!(
+                    "no stored run {id:?} on http://{}",
+                    self.host
+                )));
+            }
+            if !resp.ok() {
+                return Err(status_error("load manifest", &resp));
+            }
+            Ok(resp.body)
+        })
+    }
+
+    fn list_runs(&self) -> anyhow::Result<Vec<String>> {
+        self.with_retry("list runs", || {
+            let resp = self.request("GET", "/v2/runs/tags/list", &[], &[])?;
+            if !resp.ok() {
+                return Err(status_error("list runs", &resp));
+            }
+            parse_tags(&resp.body).map_err(RemoteError::Permanent)
+        })
+    }
+
+    fn put_blob(&self, hex: &str, bytes: &[u8]) -> anyhow::Result<()> {
+        // Already on the server? One cheap HEAD skips the upload — the
+        // common case for checkpoint params that didn't change.
+        if let Ok(Some(_)) = self.head_blob(hex) {
+            return Ok(());
+        }
+        self.with_retry(&format!("upload blob sha256:{hex}"), || {
+            self.upload_once(hex, bytes)
+        })?;
+        // A blob we hold the bytes of is cache-worthy without a pull.
+        let _ = cache_write(&self.cache_path(hex), bytes, &self.cache);
+        Ok(())
+    }
+
+    fn get_blob(&self, hex: &str) -> anyhow::Result<Vec<u8>> {
+        // Read-through cache: verify even cache hits (a corrupted cache
+        // file must repair itself, not poison every future read).
+        let cached = self.cache_path(hex);
+        if let Ok(bytes) = std::fs::read(&cached) {
+            if sha256::hex(&bytes) == hex {
+                return Ok(bytes);
+            }
+            let _ = std::fs::remove_file(&cached);
+        }
+        let bytes = self.with_retry(&format!("pull blob sha256:{hex}"), || {
+            self.fetch_verified(hex)
+        })?;
+        // Only verified bytes ever enter the cache.
+        let _ = cache_write(&cached, &bytes, &self.cache);
+        Ok(bytes)
+    }
+
+    fn head_blob(&self, hex: &str) -> anyhow::Result<Option<u64>> {
+        self.with_retry(&format!("head blob sha256:{hex}"), || {
+            let resp =
+                self.request("HEAD", &format!("/v2/runs/blobs/sha256:{hex}"), &[], &[])?;
+            match resp.status {
+                200 => Ok(resp
+                    .header("Content-Length")
+                    .and_then(|v| v.parse().ok())
+                    .or(Some(0))),
+                404 => Ok(None),
+                _ => Err(status_error("head blob", &resp)),
+            }
+        })
+    }
+
+    fn load_campaign(&self, name: &str) -> anyhow::Result<Option<(Vec<u8>, String)>> {
+        self.with_retry(&format!("load campaign {name:?}"), || {
+            let resp = self.request("GET", &Self::campaign_target(name), &[], &[])?;
+            match resp.status {
+                404 => Ok(None),
+                200 => {
+                    // The ETag is advisory; the bytes are authoritative.
+                    // Recomputing locally keeps the CAS token consistent
+                    // even against a server that normalizes storage.
+                    let digest = content_digest(&resp.body);
+                    Ok(Some((resp.body, digest)))
+                }
+                _ => Err(status_error("load campaign", &resp)),
+            }
+        })
+    }
+
+    /// Conditional PUT. Safe to blind-retry: if a first attempt landed but
+    /// its response was lost, the retry's `If-Match` token is now stale and
+    /// reads back as `Conflict` — callers' CAS loops re-load and see the
+    /// committed state (their own write) as the standing value.
+    fn save_campaign(
+        &self,
+        name: &str,
+        bytes: &[u8],
+        expect: CasExpect<'_>,
+    ) -> anyhow::Result<CasOutcome> {
+        let headers = match expect {
+            CasExpect::Any => Vec::new(),
+            CasExpect::Absent => vec![("If-None-Match".to_string(), "*".to_string())],
+            CasExpect::Digest(d) => vec![("If-Match".to_string(), format!("\"{d}\""))],
+        };
+        self.with_retry(&format!("save campaign {name:?}"), || {
+            let resp = self.request("PUT", &Self::campaign_target(name), &headers, bytes)?;
+            match resp.status {
+                201 => {
+                    let digest = resp
+                        .header("ETag")
+                        .map(|t| t.trim_matches('"').to_string())
+                        .unwrap_or_else(|| content_digest(bytes));
+                    Ok(CasOutcome::Committed(digest))
+                }
+                412 => Ok(CasOutcome::Conflict),
+                _ => Err(status_error("save campaign", &resp)),
+            }
+        })
+    }
+
+    fn list_campaigns(&self) -> anyhow::Result<Vec<String>> {
+        self.with_retry("list campaigns", || {
+            let resp = self.request("GET", "/v2/campaigns/tags/list", &[], &[])?;
+            if !resp.ok() {
+                return Err(status_error("list campaigns", &resp));
+            }
+            parse_tags(&resp.body).map_err(RemoteError::Permanent)
+        })
+    }
+
+    fn as_local(&self) -> Option<&LocalBackend> {
+        None
+    }
+}
+
+fn parse_tags(body: &[u8]) -> anyhow::Result<Vec<String>> {
+    let j = crate::util::json::Json::parse(&String::from_utf8_lossy(body))?;
+    j.arr("tags")?
+        .iter()
+        .map(|t| {
+            t.as_str()
+                .map(|s| s.to_string())
+                .ok_or_else(|| anyhow::anyhow!("tags entry not a string"))
+        })
+        .collect()
+}
+
+/// Best-effort cache insert (atomic; a failed cache write never fails the
+/// operation that produced the bytes).
+fn cache_write(path: &std::path::Path, bytes: &[u8], dir: &std::path::Path) -> anyhow::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    write_atomic(path, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn url_parsing_accepts_host_port_only() {
+        assert!(RemoteBackend::new("http://127.0.0.1:7878").is_ok());
+        assert!(RemoteBackend::new("http://store.lab:7878/").is_ok());
+        assert!(RemoteBackend::new("https://127.0.0.1:7878").is_err());
+        assert!(RemoteBackend::new("http://host:1/path").is_err());
+        assert!(RemoteBackend::new("http://").is_err());
+        assert_eq!(
+            RemoteBackend::new("http://h:1").unwrap().location(),
+            "http://h:1"
+        );
+    }
+
+    #[test]
+    fn connection_failures_are_bounded_not_hangs() {
+        // Nothing listens on this port (bind-then-drop reserves it as
+        // closed); every op must fail after the retry budget, not wedge.
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let b = RemoteBackend::new(&format!("http://127.0.0.1:{port}")).unwrap();
+        let err = b.list_runs().unwrap_err();
+        assert!(err.to_string().contains("attempts"), "{err}");
+    }
+}

@@ -1,0 +1,464 @@
+//! `fedel runs serve` — the store as an OCI-registry-style HTTP service.
+//!
+//! A [`StoreServer`] wraps a [`LocalBackend`] directory and exposes it
+//! over hand-rolled HTTP/1.1 ([`super::http`]) so campaign workers on
+//! other machines can read and write it through
+//! [`super::remote::RemoteBackend`]. The route shapes follow the OCI
+//! distribution spec (the store's blob/manifest model already matches its
+//! descriptor idiom):
+//!
+//! ```text
+//! GET  /v2/                                      liveness ping
+//! GET|HEAD /v2/runs/blobs/sha256:<hex>           content-addressed blob
+//! POST /v2/runs/blobs/uploads/                   open a resumable upload
+//! GET  /v2/runs/blobs/uploads/<sid>              upload offset (resume)
+//! PATCH /v2/runs/blobs/uploads/<sid>             append a chunk
+//! PUT  /v2/runs/blobs/uploads/<sid>?digest=...   verify + publish
+//! GET|HEAD|PUT /v2/runs/manifests/<id>           run manifest bytes
+//! GET  /v2/runs/tags/list                        run ids
+//! POST /v2/runs/ids?strategy=<s>&seed=<n>        allocate a fresh run id
+//! GET|HEAD|PUT /v2/campaigns/manifests/<name>    campaign manifest; GET
+//!                                                carries an ETag, PUT
+//!                                                honors If-Match /
+//!                                                If-None-Match (CAS)
+//! GET  /v2/campaigns/tags/list                   campaign names
+//! ```
+//!
+//! Concurrency: requests are served by a small thread pool, and every
+//! mutation goes through the same [`LocalBackend`] primitives local
+//! writers use — the lockfile and the atomic tmp+rename publishes
+//! serialize remote and local writers identically, so a served store can
+//! simultaneously be used as a plain `--store <dir>` on its host.
+//!
+//! Upload sessions live under `<root>/.uploads/<sid>` and are appended by
+//! `PATCH` with strictly sequential `Content-Range`s; a commit (`PUT`)
+//! verifies the digest server-side before publishing, so a torn or
+//! corrupted upload can never become a blob.
+
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::json::Json;
+use crate::util::sha256;
+
+use super::http::{read_request, write_response, Request, Response};
+use super::{LocalBackend, StoreBackend};
+
+/// Per-connection socket timeout: a wedged peer must not pin a worker.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// A running store server; shut down (and joined) via
+/// [`StoreServer::shutdown`], or detached for the lifetime of the process
+/// with [`StoreServer::serve_forever`].
+pub struct StoreServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl StoreServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and serve
+    /// the store rooted at `root` on `threads` worker threads.
+    pub fn start(
+        root: impl Into<PathBuf>,
+        addr: &str,
+        threads: usize,
+    ) -> anyhow::Result<StoreServer> {
+        let backend = Arc::new(LocalBackend::open(root)?);
+        let listener =
+            TcpListener::bind(addr).map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+        let bound = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads.max(1))
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                let backend = Arc::clone(&backend);
+                std::thread::spawn(move || loop {
+                    let stream = match rx.lock().expect("server queue poisoned").recv() {
+                        Ok(s) => s,
+                        Err(_) => return, // channel closed: shutdown
+                    };
+                    serve_connection(stream, &backend);
+                })
+            })
+            .collect();
+        let accept_stop = Arc::clone(&stop);
+        let accept_thread = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if accept_stop.load(Ordering::SeqCst) {
+                    return; // drops tx: workers drain and exit
+                }
+                if let Ok(s) = stream {
+                    let _ = tx.send(s);
+                }
+            }
+        });
+        Ok(StoreServer { addr: bound, stop, accept_thread: Some(accept_thread), workers })
+    }
+
+    /// The bound address (resolves `:0` to the actual ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting, drain in-flight requests, join every thread.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+
+    /// Block the calling thread for the server's lifetime (the CLI path).
+    /// Only returns if the accept loop dies, which is fatal.
+    pub fn serve_forever(mut self) -> anyhow::Result<()> {
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        anyhow::bail!("store server accept loop exited unexpectedly")
+    }
+}
+
+fn serve_connection(stream: TcpStream, backend: &LocalBackend) {
+    let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let req = match read_request(&mut reader) {
+        Ok(Some(req)) => req,
+        Ok(None) | Err(_) => return, // probe/shutdown connect or torn request
+    };
+    let resp = handle(&req, backend)
+        .unwrap_or_else(|e| error_response(500, &format!("internal error: {e:#}")));
+    let mut w = stream;
+    let _ = write_response(&mut w, &resp);
+    let _ = w.flush();
+}
+
+fn error_response(status: u16, msg: &str) -> Response {
+    Response::json(status, &Json::obj(vec![("error", Json::Str(msg.to_string()))]))
+}
+
+/// A path segment a client may name: run ids, campaign names, session ids.
+/// The charset matches the store's campaign-name rule and forbids
+/// traversal by construction.
+fn valid_segment(s: &str) -> bool {
+    !s.is_empty()
+        && s != "."
+        && s != ".."
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.'))
+}
+
+/// `sha256:<64 lowercase hex>` → the hex part.
+fn parse_digest(s: &str) -> Option<&str> {
+    let hex = s.strip_prefix("sha256:")?;
+    (hex.len() == 64 && hex.bytes().all(|b| b.is_ascii_hexdigit() && !b.is_ascii_uppercase()))
+        .then_some(hex)
+}
+
+fn handle(req: &Request, backend: &LocalBackend) -> anyhow::Result<Response> {
+    let segments: Vec<&str> =
+        req.path().split('/').filter(|s| !s.is_empty()).collect();
+    match segments.as_slice() {
+        ["v2"] => Ok(Response::json(200, &Json::obj(vec![]))),
+        ["v2", "runs", "blobs", "uploads"] => handle_upload_open(req, backend),
+        ["v2", "runs", "blobs", "uploads", sid] => handle_upload_session(req, backend, sid),
+        ["v2", repo @ ("runs" | "campaigns"), "blobs", digest] => {
+            handle_blob(req, backend, repo, digest)
+        }
+        ["v2", "runs", "manifests", id] => handle_run_manifest(req, backend, id),
+        ["v2", "campaigns", "manifests", name] => handle_campaign_manifest(req, backend, name),
+        ["v2", repo @ ("runs" | "campaigns"), "tags", "list"] => {
+            handle_tags(req, backend, repo)
+        }
+        ["v2", "runs", "ids"] => handle_fresh_id(req, backend),
+        _ => Ok(error_response(404, &format!("no route for {}", req.path()))),
+    }
+}
+
+// -- blobs -------------------------------------------------------------------
+
+fn handle_blob(
+    req: &Request,
+    backend: &LocalBackend,
+    _repo: &str,
+    digest: &str,
+) -> anyhow::Result<Response> {
+    let Some(hex) = parse_digest(digest) else {
+        return Ok(error_response(400, &format!("malformed digest {digest:?}")));
+    };
+    let Some(size) = backend.head_blob(hex)? else {
+        return Ok(error_response(404, &format!("blob {digest} not found")));
+    };
+    match req.method.as_str() {
+        "HEAD" => Ok(Response::new(200)
+            .with_header("Docker-Content-Digest", digest)
+            .with_header("Content-Length", &size.to_string())),
+        "GET" => Ok(Response::new(200)
+            .with_header("Docker-Content-Digest", digest)
+            .with_body(backend.get_blob(hex)?, "application/octet-stream")),
+        m => Ok(error_response(405, &format!("{m} not allowed on blobs"))),
+    }
+}
+
+// -- resumable uploads -------------------------------------------------------
+
+fn uploads_dir(backend: &LocalBackend) -> PathBuf {
+    backend.root().join(".uploads")
+}
+
+fn session_path(backend: &LocalBackend, sid: &str) -> PathBuf {
+    uploads_dir(backend).join(sid)
+}
+
+fn handle_upload_open(req: &Request, backend: &LocalBackend) -> anyhow::Result<Response> {
+    if req.method != "POST" {
+        return Ok(error_response(405, "uploads open with POST"));
+    }
+    static SESSION: AtomicU64 = AtomicU64::new(0);
+    let sid = format!(
+        "u{}-{}",
+        std::process::id(),
+        SESSION.fetch_add(1, Ordering::Relaxed)
+    );
+    let dir = uploads_dir(backend);
+    std::fs::create_dir_all(&dir).map_err(|e| anyhow::anyhow!("create {dir:?}: {e}"))?;
+    std::fs::write(session_path(backend, &sid), b"")?;
+    Ok(Response::new(202)
+        .with_header("Location", &format!("/v2/runs/blobs/uploads/{sid}"))
+        .with_header("Range", "0-0"))
+}
+
+/// `Range: 0-<end>` / `Content-Range: <start>-<end>` use inclusive byte
+/// indexes; a session holding N bytes reports end = N-1 (no Range header
+/// at all when empty, which clients read as offset 0).
+fn range_header(resp: Response, size: u64) -> Response {
+    if size == 0 {
+        resp
+    } else {
+        resp.with_header("Range", &format!("0-{}", size - 1))
+    }
+}
+
+fn handle_upload_session(
+    req: &Request,
+    backend: &LocalBackend,
+    sid: &str,
+) -> anyhow::Result<Response> {
+    if !valid_segment(sid) {
+        return Ok(error_response(400, &format!("malformed upload session {sid:?}")));
+    }
+    let path = session_path(backend, sid);
+    let size = match std::fs::metadata(&path) {
+        Ok(m) => m.len(),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return Ok(error_response(404, &format!("no upload session {sid:?}")))
+        }
+        Err(e) => return Err(anyhow::anyhow!("stat {path:?}: {e}")),
+    };
+    match req.method.as_str() {
+        // Offset query — the client's resume point after a dropped chunk.
+        "GET" => Ok(range_header(Response::new(204), size)),
+        "PATCH" => {
+            // Strictly sequential appends: the declared start must equal
+            // the bytes already landed, or the client is told the real
+            // offset (416 + Range) and resumes from there.
+            let declared = req
+                .header("Content-Range")
+                .and_then(|r| r.split('-').next())
+                .and_then(|s| s.trim().parse::<u64>().ok());
+            match declared {
+                Some(start) if start == size => {}
+                _ => return Ok(range_header(Response::new(416), size)),
+            }
+            let mut f = std::fs::OpenOptions::new().append(true).open(&path)?;
+            f.write_all(&req.body)?;
+            f.flush()?;
+            Ok(range_header(Response::new(202), size + req.body.len() as u64))
+        }
+        "PUT" => {
+            // Commit: optional final body chunk, then digest-verify the
+            // whole session before publishing. A mismatch discards the
+            // session — the server never stores unverified bytes.
+            let Some(digest) = req.query_param("digest") else {
+                return Ok(error_response(400, "commit needs ?digest=sha256:<hex>"));
+            };
+            let Some(hex) = parse_digest(&digest) else {
+                return Ok(error_response(400, &format!("malformed digest {digest:?}")));
+            };
+            if !req.body.is_empty() {
+                let mut f = std::fs::OpenOptions::new().append(true).open(&path)?;
+                f.write_all(&req.body)?;
+                f.flush()?;
+            }
+            let bytes = std::fs::read(&path)?;
+            if sha256::hex(&bytes) != hex {
+                let _ = std::fs::remove_file(&path);
+                return Ok(error_response(
+                    400,
+                    &format!("upload does not match digest {digest} ({} bytes)", bytes.len()),
+                ));
+            }
+            backend.put_blob(hex, &bytes)?;
+            let _ = std::fs::remove_file(&path);
+            Ok(Response::new(201)
+                .with_header("Docker-Content-Digest", &digest)
+                .with_header("Location", &format!("/v2/runs/blobs/{digest}")))
+        }
+        m => Ok(error_response(405, &format!("{m} not allowed on upload sessions"))),
+    }
+}
+
+// -- manifests ---------------------------------------------------------------
+
+fn handle_run_manifest(
+    req: &Request,
+    backend: &LocalBackend,
+    id: &str,
+) -> anyhow::Result<Response> {
+    if !valid_segment(id) {
+        return Ok(error_response(400, &format!("malformed run id {id:?}")));
+    }
+    match req.method.as_str() {
+        "GET" | "HEAD" => match backend.load_manifest(id) {
+            Ok(bytes) => {
+                let mut resp = Response::new(200)
+                    .with_header("Docker-Content-Digest", &super::content_digest(&bytes));
+                if req.method == "GET" {
+                    resp = resp.with_body(bytes, "application/json");
+                }
+                Ok(resp)
+            }
+            Err(_) => Ok(error_response(404, &format!("no stored run {id:?}"))),
+        },
+        "PUT" => {
+            backend.save_manifest(id, &req.body)?;
+            Ok(Response::new(201))
+        }
+        m => Ok(error_response(405, &format!("{m} not allowed on run manifests"))),
+    }
+}
+
+fn etag(digest: &str) -> String {
+    format!("\"{digest}\"")
+}
+
+fn handle_campaign_manifest(
+    req: &Request,
+    backend: &LocalBackend,
+    name: &str,
+) -> anyhow::Result<Response> {
+    if !valid_segment(name) {
+        return Ok(error_response(400, &format!("malformed campaign name {name:?}")));
+    }
+    match req.method.as_str() {
+        "GET" | "HEAD" => match backend.load_campaign(name)? {
+            Some((bytes, digest)) => {
+                let mut resp = Response::new(200).with_header("ETag", &etag(&digest));
+                if req.method == "GET" {
+                    resp = resp.with_body(bytes, "application/json");
+                }
+                Ok(resp)
+            }
+            None => Ok(error_response(404, &format!("no stored campaign {name:?}"))),
+        },
+        "PUT" => {
+            // Conditional PUT is the wire form of the CAS primitive:
+            // If-Match pins the stored digest, If-None-Match: * requires
+            // absence, neither means unconditional.
+            let if_match = req
+                .header("If-Match")
+                .map(|t| t.trim().trim_start_matches("W/").trim_matches('"'));
+            let if_none = req.header("If-None-Match").map(str::trim);
+            let expect = match (if_match, if_none) {
+                (Some(_), Some(_)) => {
+                    return Ok(error_response(400, "If-Match and If-None-Match conflict"))
+                }
+                (Some(d), None) => super::CasExpect::Digest(d),
+                (None, Some("*")) => super::CasExpect::Absent,
+                (None, Some(other)) => {
+                    return Ok(error_response(
+                        400,
+                        &format!("If-None-Match only supports *, got {other:?}"),
+                    ))
+                }
+                (None, None) => super::CasExpect::Any,
+            };
+            match backend.save_campaign(name, &req.body, expect)? {
+                super::CasOutcome::Committed(digest) => {
+                    Ok(Response::new(201).with_header("ETag", &etag(&digest)))
+                }
+                super::CasOutcome::Conflict => {
+                    let current = backend
+                        .load_campaign(name)?
+                        .map(|(_, d)| d)
+                        .unwrap_or_else(|| "absent".to_string());
+                    Ok(error_response(412, &format!("precondition failed; stored: {current}")))
+                }
+            }
+        }
+        m => Ok(error_response(405, &format!("{m} not allowed on campaign manifests"))),
+    }
+}
+
+fn handle_tags(req: &Request, backend: &LocalBackend, repo: &str) -> anyhow::Result<Response> {
+    if req.method != "GET" {
+        return Ok(error_response(405, "tags list with GET"));
+    }
+    let mut tags =
+        if repo == "runs" { backend.list_runs()? } else { backend.list_campaigns()? };
+    tags.sort();
+    Ok(Response::json(
+        200,
+        &Json::obj(vec![
+            ("name", Json::Str(repo.to_string())),
+            ("tags", Json::Arr(tags.into_iter().map(Json::Str).collect())),
+        ]),
+    ))
+}
+
+fn handle_fresh_id(req: &Request, backend: &LocalBackend) -> anyhow::Result<Response> {
+    if req.method != "POST" {
+        return Ok(error_response(405, "id allocation with POST"));
+    }
+    let Some(strategy) = req.query_param("strategy").filter(|s| valid_segment(s)) else {
+        return Ok(error_response(400, "id allocation needs ?strategy=<name>&seed=<n>"));
+    };
+    let Some(seed) = req.query_param("seed").and_then(|s| s.parse::<u64>().ok()) else {
+        return Ok(error_response(400, "id allocation needs a numeric ?seed="));
+    };
+    let id = backend.fresh_run_id(&strategy, seed)?;
+    Ok(Response::json(201, &Json::obj(vec![("id", Json::Str(id))])))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segments_and_digests_are_validated() {
+        assert!(valid_segment("fedavg-s1.2"));
+        assert!(!valid_segment(".."));
+        assert!(!valid_segment("a/b"));
+        assert!(!valid_segment(""));
+        let hex = sha256::hex(b"x");
+        assert_eq!(parse_digest(&format!("sha256:{hex}")), Some(hex.as_str()));
+        assert_eq!(parse_digest("sha256:short"), None);
+        assert_eq!(parse_digest("md5:abcd"), None);
+        assert_eq!(parse_digest(&format!("sha256:{}", hex.to_uppercase())), None);
+    }
+}

@@ -14,8 +14,9 @@
 use crate::config::ExperimentCfg;
 use crate::fl::observer::{RoundObserver, ServerState};
 use crate::fl::server::{ExperimentResult, ResumeState, RoundRecord};
-use crate::store::schema::{Checkpoint, FinalState, RunManifest, RunStatus, SCHEMA_VERSION};
+use crate::store::schema::{BlobRef, Checkpoint, FinalState, RunManifest, RunStatus, SCHEMA_VERSION};
 use crate::store::RunStore;
+use crate::util::json::Json;
 use crate::util::unix_now;
 
 pub struct CheckpointObserver<'s> {
@@ -139,20 +140,26 @@ impl RoundObserver for CheckpointObserver<'_> {
             return;
         }
         self.last_persist = std::time::Instant::now();
-        let r = self.store.put_params(st.global).and_then(|params| {
+        let r = (|| {
+            let params = self.store.put_params(st.global)?;
+            // Async snapshots carry whole parameter vectors (referenced
+            // global versions, buffered updates); externalizing them into
+            // content-addressed blobs keeps the manifest small and dedups
+            // identical versions across checkpoints.
+            let async_state = match st.async_state {
+                Some(snapshot) => externalize_async_state(self.store, snapshot())?,
+                None => Json::Null,
+            };
             self.manifest.checkpoint = Some(Checkpoint {
                 completed: st.completed,
                 sim_time: st.sim_time,
                 params,
                 policy_state: st.strategy.policy_state(),
-                async_state: st
-                    .async_state
-                    .map(|snapshot| snapshot())
-                    .unwrap_or(crate::util::json::Json::Null),
+                async_state,
             });
             self.manifest.updated_unix = unix_now();
             self.store.save_manifest(&self.manifest)
-        });
+        })();
         self.record(r);
     }
 
@@ -198,6 +205,76 @@ pub fn resume_state(store: &RunStore, manifest: &RunManifest) -> anyhow::Result<
         global: store.get_params(&ck.params)?,
         policy_state: ck.policy_state.clone(),
         prior_records: manifest.records[..ck.completed].to_vec(),
-        async_state: ck.async_state.clone(),
+        async_state: inline_async_state(store, &ck.async_state)?,
     })
+}
+
+/// Replace the parameter arrays inside an async-runner snapshot — the
+/// `params` of every `versions`/`buffer` entry — with content-addressed
+/// [`BlobRef`]s (schema v3). The vectors dominate the snapshot's size and
+/// identical versions recur across checkpoints, so externalizing them
+/// shrinks async manifests by an order of magnitude and dedups for free.
+/// Non-parameter payloads (`sq_grads`, client clocks) stay inline.
+///
+/// Bitwise exactness: the inline form is `Num(p as f64)` per element and
+/// the runner reads it back `as f32` — exact both ways — while blobs store
+/// the f32 bits directly, so externalize → [`inline_async_state`] is an
+/// identity on the snapshot.
+pub fn externalize_async_state(store: &RunStore, state: Json) -> anyhow::Result<Json> {
+    let mut entries = match state {
+        Json::Obj(entries) => entries,
+        other => return Ok(other),
+    };
+    for (key, value) in entries.iter_mut() {
+        if key != "versions" && key != "buffer" {
+            continue;
+        }
+        let Json::Arr(items) = value else { continue };
+        for item in items {
+            let Json::Obj(fields) = item else { continue };
+            for (fk, fv) in fields.iter_mut() {
+                if fk != "params" {
+                    continue;
+                }
+                let Json::Arr(nums) = &*fv else { continue };
+                let mut params = Vec::with_capacity(nums.len());
+                for n in nums {
+                    let x = n.as_f64().ok_or_else(|| {
+                        anyhow::anyhow!("async snapshot params entry not a number")
+                    })?;
+                    params.push(x as f32);
+                }
+                *fv = store.put_params(&params)?.to_json();
+            }
+        }
+    }
+    Ok(Json::Obj(entries))
+}
+
+/// The inverse of [`externalize_async_state`]: fetch every externalized
+/// `params` [`BlobRef`] back into the inline `Num` array the async runner
+/// deserializes. Snapshots from v2-era manifests (params already inline)
+/// pass through unchanged, which is the whole v2-compatibility story.
+pub fn inline_async_state(store: &RunStore, state: &Json) -> anyhow::Result<Json> {
+    let mut state = state.clone();
+    if let Json::Obj(entries) = &mut state {
+        for (key, value) in entries.iter_mut() {
+            if key != "versions" && key != "buffer" {
+                continue;
+            }
+            let Json::Arr(items) = value else { continue };
+            for item in items {
+                let Json::Obj(fields) = item else { continue };
+                for (fk, fv) in fields.iter_mut() {
+                    if fk != "params" || !matches!(fv, Json::Obj(_)) {
+                        continue;
+                    }
+                    let blob = BlobRef::from_json(fv)?;
+                    let params = store.get_params(&blob)?;
+                    *fv = Json::Arr(params.iter().map(|&p| Json::Num(p as f64)).collect());
+                }
+            }
+        }
+    }
+    Ok(state)
 }

@@ -22,98 +22,50 @@
 //! * [`RunStore::latest_params`] is the warm-start seam: any stored run
 //!   can seed a new experiment's global model.
 //!
+//! Where the bytes live is a [`backend::StoreBackend`] concern:
+//! [`RunStore::open`] takes either a directory path (the default
+//! [`backend::LocalBackend`]) or an `http://host:port` URL (a
+//! [`backend::remote::RemoteBackend`] talking to `fedel runs serve`), so
+//! campaign workers on several machines can share one store. This module
+//! owns everything backend-agnostic: schema parsing, digest bookkeeping,
+//! and the campaign claim protocol.
+//!
 //! Concurrency: one store may be written by several threads *and*
 //! processes at once (the campaign runner, parallel sweeps, a human
-//! running `fedel train` against the same `--store`). Mutations that
-//! race — run-id allocation, campaign-manifest rewrites, blob GC — are
-//! serialized through an advisory lockfile (`<root>/.lock`, created with
-//! `O_EXCL`, removed on drop, reclaimed when stale); everything else is
-//! made safe by construction: manifests and blobs are written to
-//! uniquely-named temporaries and renamed into place, and blobs are
-//! immutable once published.
+//! running `fedel train` against the same `--store`). Run-id allocation
+//! serializes through the local backend's advisory lockfile (on the
+//! serving host, for remote writers); manifests and blobs are written to
+//! uniquely-named temporaries and renamed into place, blobs are immutable
+//! once published, and campaign-manifest mutations ride an optimistic
+//! compare-and-swap over the manifest's content digest
+//! ([`backend::CasExpect`]) — first writer wins, losers reload and retry.
 //!
-//! CLI: `fedel runs list | show <id> | resume <id> | compare <a> ... | gc`.
+//! CLI: `fedel runs list | show <id> | resume <id> | compare <a> ... | gc
+//! | serve`.
 
+pub mod backend;
 pub mod checkpoint;
 pub mod schema;
 
-use std::io::Write;
-use std::path::{Path, PathBuf};
-use std::time::{Duration, Instant};
+use std::path::PathBuf;
+use std::time::Duration;
 
+use crate::util::json::Json;
 use crate::util::sha256;
+use self::backend::{CasExpect, CasOutcome, LocalBackend, StoreBackend};
 use self::schema::{BlobRef, CampaignManifest, RunManifest};
+
+pub use self::backend::StoreLock;
 
 /// Media type of a little-endian f32 parameter-vector blob (the same
 /// encoding as the artifacts' `init.bin`).
 pub const MEDIA_PARAMS_F32LE: &str = "application/x-fedel-params.f32le";
 
-/// A crashed process can strand `.lock`; holders keep it for microseconds
-/// (id allocation, one small file rename) — long operations like gc
-/// heartbeat via [`StoreLock::refresh`] — so a lockfile this old is
-/// abandoned and gets reclaimed.
-const LOCK_STALE: Duration = Duration::from_secs(30);
-
-/// How long a contender waits for the lock before giving up loudly.
-const LOCK_WAIT: Duration = Duration::from_secs(20);
-
-/// Held advisory store lock; released (unlinked) on drop. The file holds
-/// a per-acquisition token, and release/reclaim are token-checked /
-/// rename-based, so a contender can never unlink a lock another holder
-/// legitimately owns.
-pub struct StoreLock {
-    path: PathBuf,
-    token: String,
-}
-
-impl StoreLock {
-    /// Re-stamp the lockfile's mtime. Holders that legitimately exceed
-    /// [`LOCK_STALE`] (gc over a huge store) must call this periodically
-    /// or a contender will reclaim the lock out from under them.
-    pub fn refresh(&self) {
-        let _ = std::fs::write(&self.path, &self.token);
-    }
-}
-
-impl Drop for StoreLock {
-    fn drop(&mut self) {
-        // Only unlink a lock that is still ours: if a contender reclaimed
-        // it as stale and re-acquired, the file now holds their token and
-        // removing it would admit a third holder.
-        if std::fs::read_to_string(&self.path).map(|t| t == self.token).unwrap_or(false) {
-            let _ = std::fs::remove_file(&self.path);
-        }
-    }
-}
-
-/// A unique temporary file name: scratch writes from concurrent
-/// threads/processes must never interleave on one path, or a rename could
-/// publish a torn file.
-fn tmp_name(stem: &str) -> String {
-    use std::sync::atomic::{AtomicU64, Ordering};
-    static COUNTER: AtomicU64 = AtomicU64::new(0);
-    format!(
-        "{stem}.tmp-{}-{}",
-        std::process::id(),
-        COUNTER.fetch_add(1, Ordering::Relaxed)
-    )
-}
-
-/// Write `bytes` to `path` atomically via a uniquely-named sibling tmp.
-fn write_atomic(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
-    let file_name = path
-        .file_name()
-        .ok_or_else(|| anyhow::anyhow!("no file name in {path:?}"))?
-        .to_string_lossy()
-        .to_string();
-    let tmp = path.with_file_name(tmp_name(&file_name));
-    std::fs::write(&tmp, bytes).map_err(|e| anyhow::anyhow!("write {tmp:?}: {e}"))?;
-    std::fs::rename(&tmp, path).map_err(|e| {
-        let _ = std::fs::remove_file(&tmp);
-        anyhow::anyhow!("rename to {path:?}: {e}")
-    })?;
-    Ok(())
-}
+/// How many times an optimistic campaign CAS loop reloads before giving
+/// up. Claims conflict only while several workers race the same manifest;
+/// each retry re-reads the authoritative state, so the loop settles in a
+/// couple of iterations under any realistic contention.
+const CAS_RETRIES: usize = 64;
 
 /// What `RunStore::gc_blobs` did (or would do, under `dry_run`).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
@@ -126,147 +78,80 @@ pub struct GcReport {
     pub swept_bytes: u64,
 }
 
-/// A store rooted at one directory; see the module docs for the layout.
+/// A store over one backend; see the module docs for the object model.
 pub struct RunStore {
-    root: PathBuf,
+    backend: Box<dyn StoreBackend>,
 }
 
 impl RunStore {
-    /// Open a store, creating the directory skeleton if absent.
-    pub fn open(root: impl Into<PathBuf>) -> anyhow::Result<RunStore> {
-        let root = root.into();
-        for sub in ["runs", "blobs", "campaigns"] {
-            let dir = root.join(sub);
-            std::fs::create_dir_all(&dir)
-                .map_err(|e| anyhow::anyhow!("create {dir:?}: {e}"))?;
+    /// Open a store. A plain path opens (and creates, if absent) the
+    /// directory layout; an `http://host:port` value opens a remote
+    /// client against a `fedel runs serve` instance — every `--store`
+    /// argument accepts either form.
+    pub fn open(location: impl Into<PathBuf>) -> anyhow::Result<RunStore> {
+        let location = location.into();
+        let text = location.to_string_lossy();
+        if text.starts_with("http://") {
+            let remote = backend::remote::RemoteBackend::new(&text)?;
+            return Ok(RunStore { backend: Box::new(remote) });
         }
-        Ok(RunStore { root })
+        anyhow::ensure!(
+            !text.starts_with("https://"),
+            "https:// stores are not supported (the hand-rolled client speaks plain http)"
+        );
+        Ok(RunStore { backend: Box::new(LocalBackend::open(location)?) })
     }
 
-    pub fn root(&self) -> &Path {
-        &self.root
+    /// Human-readable location for messages: the root directory of a
+    /// local store, the base URL of a remote one.
+    pub fn location(&self) -> String {
+        self.backend.location()
     }
 
-    fn run_dir(&self, id: &str) -> PathBuf {
-        self.root.join("runs").join(id)
-    }
-
-    fn blob_path(&self, hex: &str) -> PathBuf {
-        self.root.join("blobs").join(hex)
-    }
-
-    fn campaign_path(&self, name: &str) -> PathBuf {
-        self.root.join("campaigns").join(format!("{name}.json"))
-    }
-
-    // -- locking ------------------------------------------------------------
-
-    /// Take the store-wide advisory lock. `O_EXCL` creation is atomic on
-    /// every platform we care about, across threads and processes alike;
-    /// contenders spin with a short sleep, reclaim abandoned locks older
-    /// than [`LOCK_STALE`], and give up after [`LOCK_WAIT`].
-    ///
-    /// Stale reclaim is rename-based: `rename` succeeds for exactly one
-    /// contender (the others see the file gone), so several contenders
-    /// observing the same abandoned lock can never all "remove and
-    /// re-create" their way into concurrent ownership.
-    pub fn lock(&self) -> anyhow::Result<StoreLock> {
-        let path = self.root.join(".lock");
-        // pid + counter, for humans debugging a stuck store and for the
-        // token-checked release.
-        let token = tmp_name("holder");
-        let deadline = Instant::now() + LOCK_WAIT;
-        loop {
-            match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
-                Ok(mut f) => {
-                    let _ = write!(f, "{token}");
-                    return Ok(StoreLock { path, token });
-                }
-                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
-                    let stale = std::fs::metadata(&path)
-                        .and_then(|m| m.modified())
-                        .ok()
-                        .and_then(|t| t.elapsed().ok())
-                        .map(|age| age >= LOCK_STALE)
-                        .unwrap_or(false);
-                    if stale {
-                        // Claim the corpse by renaming it to a unique
-                        // graveyard name; exactly one contender wins.
-                        let grave = path.with_file_name(tmp_name(".lock.stale"));
-                        if std::fs::rename(&path, &grave).is_ok() {
-                            let _ = std::fs::remove_file(&grave);
-                        }
-                        continue;
-                    }
-                    anyhow::ensure!(
-                        Instant::now() < deadline,
-                        "store lock {path:?} held for over {LOCK_WAIT:?} — \
-                         remove it by hand if its owner is gone"
-                    );
-                    std::thread::sleep(Duration::from_millis(2));
-                }
-                Err(e) => return Err(anyhow::anyhow!("create lock {path:?}: {e}")),
-            }
-        }
+    /// The local directory backend, for operations that only make sense
+    /// on the storing host (gc). Errors with `what` for remote stores.
+    fn local(&self, what: &str) -> anyhow::Result<&LocalBackend> {
+        self.backend.as_local().ok_or_else(|| {
+            anyhow::anyhow!(
+                "{what} must run on the host serving {} (against its local directory)",
+                self.location()
+            )
+        })
     }
 
     // -- runs ---------------------------------------------------------------
 
     /// Allocate a fresh, human-readable run id: `<strategy>-s<seed>`,
     /// suffixed `-2`, `-3`, ... when taken. Allocation *reserves* the id
-    /// by creating `runs/<id>/` while holding the store lock, so
-    /// concurrent writers — threads or whole processes — can never both
-    /// observe the same id free and clobber each other's run directory.
+    /// under the (serving host's) store lock, so concurrent writers —
+    /// threads, processes, or machines — can never both observe the same
+    /// id free and clobber each other's run directory.
     pub fn fresh_run_id(&self, strategy: &str, seed: u64) -> anyhow::Result<String> {
-        let _lock = self.lock()?;
-        let base = format!("{strategy}-s{seed}");
-        let mut id = base.clone();
-        let mut n = 2usize;
-        loop {
-            let dir = self.run_dir(&id);
-            if !dir.exists() {
-                std::fs::create_dir_all(&dir)
-                    .map_err(|e| anyhow::anyhow!("reserve {dir:?}: {e}"))?;
-                return Ok(id);
-            }
-            id = format!("{base}-{n}");
-            n += 1;
-        }
+        self.backend.fresh_run_id(strategy, seed)
     }
 
-    /// Persist a manifest atomically (uniquely-named tmp + rename): a
-    /// crash mid-write leaves the previous manifest intact, never a torn
-    /// one, and concurrent writers never share a scratch path.
+    /// Persist a manifest atomically: a crash mid-write leaves the
+    /// previous manifest intact, never a torn one.
     pub fn save_manifest(&self, m: &RunManifest) -> anyhow::Result<()> {
-        let dir = self.run_dir(&m.id);
-        std::fs::create_dir_all(&dir).map_err(|e| anyhow::anyhow!("create {dir:?}: {e}"))?;
-        write_atomic(&dir.join("manifest.json"), m.to_json().to_string_pretty().as_bytes())
+        self.backend
+            .save_manifest(&m.id, m.to_json().to_string_pretty().as_bytes())
     }
 
     pub fn load_manifest(&self, id: &str) -> anyhow::Result<RunManifest> {
-        let path = self.run_dir(id).join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .map_err(|e| anyhow::anyhow!("no stored run {id:?} ({path:?}: {e})"))?;
-        let j = crate::util::json::Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
-        RunManifest::from_json(&j).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))
+        let bytes = self.backend.load_manifest(id)?;
+        let text = String::from_utf8_lossy(&bytes);
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("run {id:?}: {e}"))?;
+        RunManifest::from_json(&j).map_err(|e| anyhow::anyhow!("run {id:?}: {e}"))
     }
 
     /// All stored runs, oldest first (creation time, then id). Unreadable
     /// manifests (torn external copies, future schema versions) are
-    /// skipped with a warning — one bad directory must not take the whole
+    /// skipped with a warning — one bad entry must not take the whole
     /// store's listing down.
     pub fn list(&self) -> anyhow::Result<Vec<RunManifest>> {
-        let dir = self.root.join("runs");
         let mut out = Vec::new();
-        for entry in
-            std::fs::read_dir(&dir).map_err(|e| anyhow::anyhow!("read {dir:?}: {e}"))?
-        {
-            let entry = entry?;
-            if !entry.path().join("manifest.json").exists() {
-                continue;
-            }
-            match self.load_manifest(&entry.file_name().to_string_lossy()) {
+        for id in self.backend.list_runs()? {
+            match self.load_manifest(&id) {
                 Ok(m) => out.push(m),
                 Err(e) => eprintln!("warning: skipping unreadable run: {e}"),
             }
@@ -281,15 +166,9 @@ impl RunStore {
 
     /// Store bytes under their content address; already-present digests
     /// are not rewritten, so identical snapshots dedup for free.
-    /// Concurrent writers of the same content are harmless: each writes
-    /// its own uniquely-named tmp, and whichever rename lands last
-    /// replaces identical bytes with identical bytes.
     pub fn put_blob(&self, bytes: &[u8], media_type: &str) -> anyhow::Result<BlobRef> {
         let hex = sha256::hex(bytes);
-        let path = self.blob_path(&hex);
-        if !path.exists() {
-            write_atomic(&path, bytes)?;
-        }
+        self.backend.put_blob(&hex, bytes)?;
         Ok(BlobRef {
             digest: format!("sha256:{hex}"),
             size: bytes.len() as u64,
@@ -298,18 +177,17 @@ impl RunStore {
     }
 
     /// Fetch a blob, verifying size and digest (a store is only useful if
-    /// corruption is loud).
+    /// corruption is loud). The remote backend additionally verifies on
+    /// the wire before anything enters its cache.
     pub fn get_blob(&self, r: &BlobRef) -> anyhow::Result<Vec<u8>> {
         let hex = r
             .digest
             .strip_prefix("sha256:")
             .ok_or_else(|| anyhow::anyhow!("unsupported digest {:?}", r.digest))?;
-        let path = self.blob_path(hex);
-        let bytes =
-            std::fs::read(&path).map_err(|e| anyhow::anyhow!("read blob {path:?}: {e}"))?;
+        let bytes = self.backend.get_blob(hex)?;
         anyhow::ensure!(
             bytes.len() as u64 == r.size,
-            "blob {hex}: {} bytes on disk, descriptor says {}",
+            "blob {hex}: {} bytes stored, descriptor says {}",
             bytes.len(),
             r.size
         );
@@ -359,7 +237,11 @@ impl RunStore {
     /// Mark-and-sweep orphaned blobs: hand-deleting `runs/<id>/` leaves
     /// its content-addressed parameter snapshots stranded under `blobs/`
     /// forever; this walks every *readable* manifest, marks the digests
-    /// they reference (checkpoints and final states), and sweeps the rest.
+    /// they reference (checkpoint and final params, plus any blob refs
+    /// inside async checkpoint state), and sweeps the rest.
+    ///
+    /// Local-backend only: gc must see every blob and hold the store
+    /// lock, so it runs on the serving host against the directory itself.
     ///
     /// Safety properties:
     /// * Runs with an unreadable manifest abort the sweep — a torn or
@@ -372,12 +254,14 @@ impl RunStore {
     /// * The store lock is held throughout, serializing gc against id
     ///   allocation and other sweeps.
     pub fn gc_blobs(&self, min_age: Duration, dry_run: bool) -> anyhow::Result<GcReport> {
-        let lock = self.lock()?;
-        // gc over a huge store can legitimately outlive LOCK_STALE;
-        // heartbeat the lockfile so contenders don't reclaim it mid-sweep.
+        let local = self.local("gc")?;
+        let lock = local.lock()?;
+        // gc over a huge store can legitimately outlive the lock's stale
+        // window; heartbeat the lockfile so contenders don't reclaim it
+        // mid-sweep.
         let mut heartbeat = 0usize;
         let mut live: std::collections::BTreeSet<String> = Default::default();
-        let runs_dir = self.root.join("runs");
+        let runs_dir = local.root().join("runs");
         for entry in std::fs::read_dir(&runs_dir)
             .map_err(|e| anyhow::anyhow!("read {runs_dir:?}: {e}"))?
         {
@@ -403,9 +287,15 @@ impl RunStore {
                     live.insert(hex.to_string());
                 }
             }
+            // Async checkpoints carry further content-addressed refs
+            // (in-flight version params, buffered updates): mark anything
+            // shaped like a digest reference inside the runner snapshot.
+            if let Some(ck) = &m.checkpoint {
+                mark_json_digests(&ck.async_state, &mut live);
+            }
         }
         let mut report = GcReport::default();
-        let blobs_dir = self.root.join("blobs");
+        let blobs_dir = local.root().join("blobs");
         for entry in std::fs::read_dir(&blobs_dir)
             .map_err(|e| anyhow::anyhow!("read {blobs_dir:?}: {e}"))?
         {
@@ -448,9 +338,9 @@ impl RunStore {
 
     // -- campaigns ----------------------------------------------------------
 
-    /// Persist a campaign manifest atomically, serialized through the
-    /// store lock (several campaign workers record cell→run assignments
-    /// into one file).
+    /// Persist a campaign manifest unconditionally (creation and full
+    /// rewrites; racing writers go through [`RunStore::update_campaign`]
+    /// or [`RunStore::claim_campaign_cell`] instead).
     pub fn save_campaign(&self, m: &CampaignManifest) -> anyhow::Result<()> {
         anyhow::ensure!(
             !m.name.is_empty()
@@ -460,41 +350,55 @@ impl RunStore {
             "campaign name {:?} must be [A-Za-z0-9._-]+",
             m.name
         );
-        let _lock = self.lock()?;
-        write_atomic(&self.campaign_path(&m.name), m.to_json().to_string_pretty().as_bytes())
+        self.backend.save_campaign(
+            &m.name,
+            m.to_json().to_string_pretty().as_bytes(),
+            CasExpect::Any,
+        )?;
+        Ok(())
     }
 
-    /// Load-mutate-store a campaign manifest as **one locked
-    /// transaction**: the manifest is re-read from disk under the store
-    /// lock, transformed, and written back before the lock releases — so
-    /// the update can never erase a concurrent writer's changes (the
+    /// Load-transform-store a campaign manifest as one atomic update: the
+    /// authoritative manifest is re-read, transformed by `f`, and written
+    /// back under a compare-and-swap on the loaded digest — when another
+    /// writer lands in between, the update reloads and `f` runs again on
+    /// the fresh state (which is why `f` is `FnMut`). The update can
+    /// therefore never erase a concurrent writer's changes (the
     /// schema-migration path uses this; a plain load → mutate →
-    /// [`RunStore::save_campaign`] would race `claim_campaign_cell` and
-    /// lose cell claims). `f` sees the authoritative manifest; returning
-    /// it unchanged is a no-op rewrite.
-    pub fn update_campaign<F>(&self, name: &str, f: F) -> anyhow::Result<CampaignManifest>
+    /// [`RunStore::save_campaign`] would race [`RunStore::claim_campaign_cell`]
+    /// and lose cell claims).
+    pub fn update_campaign<F>(&self, name: &str, mut f: F) -> anyhow::Result<CampaignManifest>
     where
-        F: FnOnce(CampaignManifest) -> anyhow::Result<CampaignManifest>,
+        F: FnMut(CampaignManifest) -> anyhow::Result<CampaignManifest>,
     {
-        let _lock = self.lock()?;
-        let m = f(self.load_campaign(name)?)?;
-        anyhow::ensure!(
-            m.name == name,
-            "update_campaign must not rename {name:?} to {:?}",
-            m.name
-        );
-        write_atomic(&self.campaign_path(name), m.to_json().to_string_pretty().as_bytes())?;
-        Ok(m)
+        for _ in 0..CAS_RETRIES {
+            let (current, digest) = self.load_campaign_versioned(name)?;
+            let m = f(current)?;
+            anyhow::ensure!(
+                m.name == name,
+                "update_campaign must not rename {name:?} to {:?}",
+                m.name
+            );
+            match self.backend.save_campaign(
+                name,
+                m.to_json().to_string_pretty().as_bytes(),
+                CasExpect::Digest(&digest),
+            )? {
+                CasOutcome::Committed(_) => return Ok(m),
+                CasOutcome::Conflict => continue,
+            }
+        }
+        anyhow::bail!("campaign {name:?} update lost {CAS_RETRIES} straight CAS races")
     }
 
     /// Atomically claim a campaign cell for `run_id` — a compare-and-swap
-    /// through the store lock, so concurrent campaign *processes* can
-    /// never overwrite each other's cell→run assignments. The manifest is
-    /// re-read from disk here (not trusted from the caller's memory); the
-    /// claim lands only if the cell's stored assignment equals `expect`
-    /// (or is unassigned). Returns the cell's authoritative assignment
-    /// after the call — `run_id` if the claim won, the standing winner if
-    /// not.
+    /// over the manifest digest, so concurrent campaign workers (threads,
+    /// processes, or machines behind a remote store) can never overwrite
+    /// each other's cell→run assignments. The manifest is re-read here
+    /// (not trusted from the caller's memory); the claim lands only if the
+    /// cell's stored assignment equals `expect` (or is unassigned).
+    /// Returns the cell's authoritative assignment after the call —
+    /// `run_id` if the claim won, the standing winner if not.
     pub fn claim_campaign_cell(
         &self,
         name: &str,
@@ -502,50 +406,91 @@ impl RunStore {
         expect: Option<&str>,
         run_id: &str,
     ) -> anyhow::Result<String> {
-        let _lock = self.lock()?;
-        let mut m = self.load_campaign(name)?;
-        anyhow::ensure!(
-            index < m.cells.len(),
-            "campaign {name:?} has {} cells, no index {index}",
-            m.cells.len()
-        );
-        match &m.cells[index].run_id {
-            Some(current) if Some(current.as_str()) != expect => return Ok(current.clone()),
-            _ => {}
+        for _ in 0..CAS_RETRIES {
+            let (mut m, digest) = self.load_campaign_versioned(name)?;
+            anyhow::ensure!(
+                index < m.cells.len(),
+                "campaign {name:?} has {} cells, no index {index}",
+                m.cells.len()
+            );
+            match &m.cells[index].run_id {
+                Some(current) if Some(current.as_str()) != expect => {
+                    return Ok(current.clone())
+                }
+                _ => {}
+            }
+            m.cells[index].run_id = Some(run_id.to_string());
+            m.updated_unix = crate::util::unix_now();
+            match self.backend.save_campaign(
+                name,
+                m.to_json().to_string_pretty().as_bytes(),
+                CasExpect::Digest(&digest),
+            )? {
+                CasOutcome::Committed(_) => return Ok(run_id.to_string()),
+                // Another writer landed first — reload; if it claimed
+                // this very cell, the next pass returns its id.
+                CasOutcome::Conflict => continue,
+            }
         }
-        m.cells[index].run_id = Some(run_id.to_string());
-        m.updated_unix = crate::util::unix_now();
-        write_atomic(&self.campaign_path(name), m.to_json().to_string_pretty().as_bytes())?;
-        Ok(run_id.to_string())
+        anyhow::bail!("cell {index} of campaign {name:?} lost {CAS_RETRIES} straight CAS races")
+    }
+
+    /// The parsed manifest plus its content digest (the CAS token).
+    fn load_campaign_versioned(
+        &self,
+        name: &str,
+    ) -> anyhow::Result<(CampaignManifest, String)> {
+        let (bytes, digest) = self
+            .backend
+            .load_campaign(name)?
+            .ok_or_else(|| anyhow::anyhow!("no stored campaign {name:?} under {}", self.location()))?;
+        let text = String::from_utf8_lossy(&bytes);
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("campaign {name:?}: {e}"))?;
+        let m = CampaignManifest::from_json(&j)
+            .map_err(|e| anyhow::anyhow!("campaign {name:?}: {e}"))?;
+        Ok((m, digest))
     }
 
     pub fn load_campaign(&self, name: &str) -> anyhow::Result<CampaignManifest> {
-        let path = self.campaign_path(name);
-        let text = std::fs::read_to_string(&path)
-            .map_err(|e| anyhow::anyhow!("no stored campaign {name:?} ({path:?}: {e})"))?;
-        let j = crate::util::json::Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("{path:?}: {e}"))?;
-        CampaignManifest::from_json(&j).map_err(|e| anyhow::anyhow!("{path:?}: {e}"))
+        Ok(self.load_campaign_versioned(name)?.0)
     }
 
     pub fn campaign_exists(&self, name: &str) -> bool {
-        self.campaign_path(name).exists()
+        self.backend.load_campaign(name).map(|c| c.is_some()).unwrap_or(false)
     }
 
     /// Names of all stored campaigns, sorted.
     pub fn list_campaigns(&self) -> anyhow::Result<Vec<String>> {
-        let dir = self.root.join("campaigns");
-        let mut out = Vec::new();
-        for entry in
-            std::fs::read_dir(&dir).map_err(|e| anyhow::anyhow!("read {dir:?}: {e}"))?
-        {
-            let name = entry?.file_name().to_string_lossy().to_string();
-            if let Some(stem) = name.strip_suffix(".json") {
-                out.push(stem.to_string());
-            }
-        }
+        let mut out = self.backend.list_campaigns()?;
         out.sort();
         Ok(out)
+    }
+}
+
+/// Collect every `sha256:` digest referenced by [`BlobRef`]-shaped objects
+/// (`{"digest": "sha256:...", ...}`) anywhere in a JSON tree — the gc mark
+/// phase for checkpoint extensions that externalize payloads, like the
+/// async runner's version/buffer params.
+fn mark_json_digests(j: &Json, live: &mut std::collections::BTreeSet<String>) {
+    match j {
+        Json::Obj(entries) => {
+            for (k, v) in entries {
+                if k == "digest" {
+                    if let Json::Str(s) = v {
+                        if let Some(hex) = s.strip_prefix("sha256:") {
+                            live.insert(hex.to_string());
+                        }
+                    }
+                }
+                mark_json_digests(v, live);
+            }
+        }
+        Json::Arr(items) => {
+            for item in items {
+                mark_json_digests(item, live);
+            }
+        }
+        _ => {}
     }
 }
 
@@ -593,7 +538,7 @@ mod tests {
         let store = RunStore::open(&dir).unwrap();
         let r = store.put_blob(b"precious", "text/plain").unwrap();
         let hex = r.digest.strip_prefix("sha256:").unwrap();
-        std::fs::write(store.blob_path(hex), b"precioms").unwrap();
+        std::fs::write(dir.join("blobs").join(hex), b"precioms").unwrap();
         let err = store.get_blob(&r).unwrap_err();
         assert!(err.to_string().contains("digest mismatch"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
@@ -606,7 +551,7 @@ mod tests {
         let a = store.fresh_run_id("fedel", 42).unwrap();
         assert_eq!(a, "fedel-s42");
         // allocation reserves the directory itself — no create needed
-        assert!(store.run_dir(&a).exists(), "allocation must reserve the id");
+        assert!(dir.join("runs").join(&a).exists(), "allocation must reserve the id");
         let b = store.fresh_run_id("fedel", 42).unwrap();
         assert_eq!(b, "fedel-s42-2");
         assert_eq!(store.fresh_run_id("fedel", 42).unwrap(), "fedel-s42-3");
@@ -614,31 +559,9 @@ mod tests {
     }
 
     #[test]
-    fn lock_excludes_and_releases() {
-        let dir = scratch("lock");
-        let store = RunStore::open(&dir).unwrap();
-        let held = store.lock().unwrap();
-        assert!(dir.join(".lock").exists());
-        drop(held);
-        assert!(!dir.join(".lock").exists(), "lock must release on drop");
-        // reacquirable after release
-        drop(store.lock().unwrap());
-        let _ = std::fs::remove_dir_all(&dir);
-    }
-
-    #[test]
-    fn stale_lock_is_reclaimed() {
-        let dir = scratch("stale");
-        let store = RunStore::open(&dir).unwrap();
-        // Simulate a crashed holder: a lockfile whose mtime is ancient.
-        let path = dir.join(".lock");
-        std::fs::write(&path, b"dead").unwrap();
-        let old = std::time::SystemTime::now() - (LOCK_STALE + Duration::from_secs(5));
-        let f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
-        f.set_modified(old).unwrap();
-        drop(f);
-        let _held = store.lock().expect("stale lock must be reclaimed");
-        let _ = std::fs::remove_dir_all(&dir);
+    fn https_and_pathful_urls_are_rejected() {
+        assert!(RunStore::open("https://127.0.0.1:1").is_err());
+        assert!(RunStore::open("http://127.0.0.1:1/sub").is_err());
     }
 
     fn manifest_with_params(
@@ -683,7 +606,7 @@ mod tests {
             manifest_with_params(&store, "doomed-s1", Some(&[5.0, 6.0]), Some(&[7.0, 8.0]));
         store.save_manifest(&doomed).unwrap();
         // hand-delete the second run: its two blobs are now orphans
-        std::fs::remove_dir_all(store.run_dir("doomed-s1")).unwrap();
+        std::fs::remove_dir_all(dir.join("runs").join("doomed-s1")).unwrap();
 
         // dry run reports but deletes nothing
         let dry = store.gc_blobs(Duration::ZERO, true).unwrap();
@@ -706,6 +629,31 @@ mod tests {
     }
 
     #[test]
+    fn gc_marks_blob_refs_inside_async_state() {
+        let dir = scratch("gc-async");
+        let store = RunStore::open(&dir).unwrap();
+        let mut m = manifest_with_params(&store, "buf-s1", Some(&[1.0, 2.0]), None);
+        // An async checkpoint referencing an externalized params blob.
+        let version_params = store.put_params(&[9.0, 10.0, 11.0]).unwrap();
+        m.checkpoint.as_mut().unwrap().async_state = Json::obj(vec![
+            ("mode", Json::Str("buffered".into())),
+            (
+                "versions",
+                Json::Arr(vec![Json::obj(vec![
+                    ("version", Json::Num(3.0)),
+                    ("params", version_params.to_json()),
+                ])]),
+            ),
+        ]);
+        store.save_manifest(&m).unwrap();
+        let report = store.gc_blobs(Duration::ZERO, false).unwrap();
+        assert_eq!(report.swept, 0, "{report:?}");
+        assert_eq!(report.live, 2, "checkpoint params + async version params");
+        assert_eq!(store.get_params(&version_params).unwrap(), vec![9.0, 10.0, 11.0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn gc_grace_window_spares_young_orphans() {
         let dir = scratch("gc-young");
         let store = RunStore::open(&dir).unwrap();
@@ -721,7 +669,7 @@ mod tests {
         let dir = scratch("gc-unreadable");
         let store = RunStore::open(&dir).unwrap();
         store.put_blob(b"maybe-referenced", "text/plain").unwrap();
-        let bad = store.run_dir("torn-s1");
+        let bad = dir.join("runs").join("torn-s1");
         std::fs::create_dir_all(&bad).unwrap();
         std::fs::write(bad.join("manifest.json"), b"{ torn").unwrap();
         let err = store.gc_blobs(Duration::ZERO, false).unwrap_err();
@@ -786,7 +734,7 @@ mod tests {
     }
 
     #[test]
-    fn update_campaign_transforms_the_authoritative_on_disk_state() {
+    fn update_campaign_transforms_the_authoritative_stored_state() {
         use crate::store::schema::{CampaignManifest, CellState, CAMPAIGN_SCHEMA_VERSION};
         let dir = scratch("update-campaign");
         let store = RunStore::open(&dir).unwrap();
@@ -801,7 +749,7 @@ mod tests {
         store.save_campaign(&stale).unwrap();
         // a claim lands after our (stale) load above...
         store.claim_campaign_cell("sweep", 0, None, "fedavg-s1").unwrap();
-        // ...and an update must see it: the closure gets the on-disk
+        // ...and an update must see it: the closure gets the stored
         // manifest, not whatever the caller last loaded, so transforming
         // labels/spec can never erase the concurrent claim.
         let updated = store

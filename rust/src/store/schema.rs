@@ -30,7 +30,16 @@ use crate::util::json::Json;
 /// keys simply read as absent); v2 is a distinct version because a
 /// v1-era binary resuming an async checkpoint would silently drop the
 /// runner state and diverge.
-pub const SCHEMA_VERSION: usize = 2;
+///
+/// v2 -> v3: the parameter vectors inside `async_state` (`versions` /
+/// `buffer` entries' `params`) are externalized into content-addressed
+/// [`BlobRef`]s instead of inline number arrays
+/// ([`crate::store::checkpoint::externalize_async_state`]), shrinking
+/// async manifests by an order of magnitude. v2 manifests load and
+/// resume unchanged (inline arrays pass through); v3 is a distinct
+/// version because a v2-era binary would feed the BlobRef object to the
+/// async runner's array decoder and fail.
+pub const SCHEMA_VERSION: usize = 3;
 
 /// Oldest run-manifest schema `RunManifest::from_json` still accepts.
 pub const SCHEMA_MIN: usize = 1;

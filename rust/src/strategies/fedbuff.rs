@@ -19,11 +19,21 @@ use super::{full_model_plan, AsyncMode, AsyncSpec, ClientPlan, FleetCtx, Strateg
 
 pub struct FedBuff {
     k: usize,
+    staleness_exp: f64,
 }
 
 impl FedBuff {
     pub fn new(k: usize) -> Self {
-        FedBuff { k: k.max(1) }
+        FedBuff { k: k.max(1), staleness_exp: 0.0 }
+    }
+
+    /// Decay each buffered delta's weight by `1 / (1 + s)^exp` inside the
+    /// flush average, where `s` is the update's staleness in aggregation
+    /// rounds. 0 (the default) reproduces the paper's plain data-size
+    /// weighting bitwise.
+    pub fn with_staleness_exp(mut self, exp: f64) -> Self {
+        self.staleness_exp = exp.max(0.0);
+        self
     }
 }
 
@@ -42,7 +52,9 @@ impl Strategy for FedBuff {
     }
 
     fn async_spec(&self) -> Option<AsyncSpec> {
-        Some(AsyncSpec { mode: AsyncMode::Buffered { k: self.k } })
+        Some(AsyncSpec {
+            mode: AsyncMode::Buffered { k: self.k, staleness_exp: self.staleness_exp },
+        })
     }
 }
 
@@ -54,11 +66,28 @@ mod tests {
     #[test]
     fn declares_buffered_async_spec_with_floor() {
         match FedBuff::new(4).async_spec().unwrap().mode {
-            AsyncMode::Buffered { k } => assert_eq!(k, 4),
+            AsyncMode::Buffered { k, staleness_exp } => {
+                assert_eq!(k, 4);
+                assert_eq!(staleness_exp, 0.0, "staleness weighting off by default");
+            }
             other => panic!("wrong mode {other:?}"),
         }
         match FedBuff::new(0).async_spec().unwrap().mode {
-            AsyncMode::Buffered { k } => assert_eq!(k, 1, "buffer floor"),
+            AsyncMode::Buffered { k, .. } => assert_eq!(k, 1, "buffer floor"),
+            other => panic!("wrong mode {other:?}"),
+        }
+    }
+
+    #[test]
+    fn staleness_exp_rides_the_async_spec() {
+        match FedBuff::new(2).with_staleness_exp(1.5).async_spec().unwrap().mode {
+            AsyncMode::Buffered { staleness_exp, .. } => assert_eq!(staleness_exp, 1.5),
+            other => panic!("wrong mode {other:?}"),
+        }
+        match FedBuff::new(2).with_staleness_exp(-3.0).async_spec().unwrap().mode {
+            AsyncMode::Buffered { staleness_exp, .. } => {
+                assert_eq!(staleness_exp, 0.0, "negative exponents clamp to off")
+            }
             other => panic!("wrong mode {other:?}"),
         }
     }

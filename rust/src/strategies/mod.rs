@@ -143,7 +143,10 @@ pub enum AsyncMode {
     /// staleness-decayed mixing weight `alpha / (1 + s)^staleness_exp`.
     PerArrival { alpha: f64, staleness_exp: f64 },
     /// FedBuff (Nguyen et al.): buffer arrivals and flush every `k`.
-    Buffered { k: usize },
+    /// `staleness_exp` optionally down-weights each buffered delta by
+    /// `1 / (1 + s)^staleness_exp` inside the flush average (0 = off,
+    /// the paper's plain data-size weighting).
+    Buffered { k: usize, staleness_exp: f64 },
 }
 
 /// Declared by strategies that run under the asynchronous executor

@@ -195,15 +195,27 @@ fn defs() -> Vec<StrategyDef> {
         StrategyDef {
             name: "fedbuff",
             summary: "buffered async aggregation: flush every K arrivals (Nguyen et al.)",
-            params: vec![ParamSpec {
-                name: "buffer_k",
-                default: 4.0,
-                min: 1.0,
-                max: 1024.0,
-                help: "arrivals buffered per aggregation (the paper's K)",
-            }],
+            params: vec![
+                ParamSpec {
+                    name: "buffer_k",
+                    default: 4.0,
+                    min: 1.0,
+                    max: 1024.0,
+                    help: "arrivals buffered per aggregation (the paper's K)",
+                },
+                ParamSpec {
+                    name: "staleness_exp",
+                    default: 0.0,
+                    min: 0.0,
+                    max: 4.0,
+                    help: "decay each buffered delta by 1/(1+staleness)^exp in the flush average (0 = plain data-size weighting)",
+                },
+            ],
             build: |_, _, p| {
-                Box::new(super::fedbuff::FedBuff::new(p.get("buffer_k").round() as usize))
+                Box::new(
+                    super::fedbuff::FedBuff::new(p.get("buffer_k").round() as usize)
+                        .with_staleness_exp(p.get("staleness_exp")),
+                )
             },
         },
         StrategyDef {
@@ -398,15 +410,22 @@ mod tests {
         let c = ctx(4, &[1.0, 2.0]);
         let fa = reg.build("fedasync", &c, 1, &[]).unwrap();
         assert!(fa.async_spec().is_some(), "fedasync must route async");
-        let bag = vec![("strategy.fedbuff.buffer_k".to_string(), 2.0)];
+        let bag = vec![
+            ("strategy.fedbuff.buffer_k".to_string(), 2.0),
+            ("strategy.fedbuff.staleness_exp".to_string(), 1.0),
+        ];
         let fb = reg.build("fedbuff", &c, 1, &bag).unwrap();
         match fb.async_spec().unwrap().mode {
-            crate::strategies::AsyncMode::Buffered { k } => assert_eq!(k, 2),
+            crate::strategies::AsyncMode::Buffered { k, staleness_exp } => {
+                assert_eq!(k, 2);
+                assert_eq!(staleness_exp, 1.0);
+            }
             other => panic!("{other:?}"),
         }
         // the declared tunables are sweepable keys
         assert_eq!(reg.param_spec("fedasync", "alpha").unwrap().default, 0.6);
         assert_eq!(reg.param_spec("fedbuff", "buffer_k").unwrap().default, 4.0);
+        assert_eq!(reg.param_spec("fedbuff", "staleness_exp").unwrap().default, 0.0);
     }
 
     #[test]

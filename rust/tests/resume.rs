@@ -169,6 +169,45 @@ fn fedasync_kill_and_resume_is_bitwise_identical() {
     kill_and_resume("fedasync", 1, 1);
 }
 
+/// Schema v3: the parameter vectors inside an async checkpoint's
+/// `async_state` (referenced global versions, buffered updates) persist
+/// as content-addressed BlobRefs, not inline number arrays. The stored
+/// manifest must be more than 10x smaller than the same manifest with
+/// those vectors inlined the v2 way.
+#[test]
+fn async_checkpoint_externalizes_params_and_shrinks_the_manifest() {
+    let dir = scratch("async-blobref");
+    let store = RunStore::open(&dir).unwrap();
+    let mut killed = cfg("fedbuff", 1);
+    killed.model = "mock:6x200".into(); // big enough that params dominate
+    killed.halt_after = Some(5);
+    let mut exp = Experiment::build(killed).unwrap();
+    let mut ckpt = CheckpointObserver::create(&store, &exp.cfg, "fedbuff", 2).unwrap();
+    let id = ckpt.run_id().to_string();
+    let _ = exp.run_from(None, &mut ckpt, None).unwrap_err();
+    assert!(ckpt.take_error().is_none());
+
+    let man = store.load_manifest(&id).unwrap();
+    let ck = man.checkpoint.as_ref().unwrap();
+    let stored_text = ck.async_state.to_string();
+    assert!(
+        stored_text.contains("\"digest\""),
+        "async params should persist as BlobRefs: {stored_text}"
+    );
+
+    let stored_len = man.to_json().to_string_pretty().len();
+    let mut inlined = man.clone();
+    inlined.checkpoint.as_mut().unwrap().async_state =
+        fedel::store::checkpoint::inline_async_state(&store, &ck.async_state).unwrap();
+    let inlined_len = inlined.to_json().to_string_pretty().len();
+    assert!(
+        inlined_len > 10 * stored_len,
+        "externalizing async params should shrink the manifest >10x \
+         (inline {inlined_len} bytes vs stored {stored_len})"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// A synchronous checkpoint must not silently resume through the async
 /// runner (and vice versa): the mode is validated, not assumed.
 #[test]

@@ -5,14 +5,22 @@
 //! and clobber each other's `runs/<id>/`.
 
 use std::collections::BTreeSet;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use fedel::config::{ExperimentCfg, FleetSpec};
 use fedel::sim::experiment::Experiment;
+use fedel::store::backend::remote::default_cache_dir;
+use fedel::store::backend::serve::StoreServer;
 use fedel::store::checkpoint::CheckpointObserver;
-use fedel::store::schema::RunStatus;
+use fedel::store::schema::{CampaignManifest, CellState, RunStatus, CAMPAIGN_SCHEMA_VERSION};
 use fedel::store::RunStore;
+use fedel::util::json::Json;
+use fedel::util::unix_now;
 
 fn scratch(tag: &str) -> PathBuf {
     let dir =
@@ -106,5 +114,224 @@ fn concurrent_checkpointed_runs_share_one_store() {
     for m in &store.list().unwrap() {
         store.latest_params(&m.id).expect("live params must survive gc");
     }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// Remote backend: the same contention drills through one `runs serve`
+// instance, plus wire-fault injection (corruption, dropped connections)
+// through a byte-level proxy.
+
+/// Id allocation and campaign cell claims race safely when every writer is
+/// a *remote* client of one served store: allocation runs on the serving
+/// host under its lock, and cell claims go through the conditional-PUT CAS.
+#[test]
+fn remote_store_races_resolve_like_local_ones() {
+    let dir = scratch("remote-race");
+    let server = StoreServer::start(&dir, "127.0.0.1:0", 4).unwrap();
+    let store = RunStore::open(format!("http://{}", server.addr())).unwrap();
+
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 4;
+    let ids: Vec<String> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                s.spawn(|| {
+                    (0..PER_THREAD)
+                        .map(|_| store.fresh_run_id("fedel", 42).unwrap())
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    let unique: BTreeSet<&String> = ids.iter().collect();
+    assert_eq!(unique.len(), THREADS * PER_THREAD, "remote run ids collided: {ids:?}");
+    for id in &ids {
+        assert!(dir.join("runs").join(id).is_dir(), "{id} was not reserved on the serving host");
+    }
+
+    // Cell claims: first writer wins, every racer agrees on the winner,
+    // and the stored assignment is one of the proposed run ids.
+    let now = unix_now();
+    store
+        .save_campaign(&CampaignManifest {
+            schema_version: CAMPAIGN_SCHEMA_VERSION,
+            name: "race".into(),
+            created_unix: now,
+            updated_unix: now,
+            spec: Json::obj(vec![]),
+            cells: vec![CellState { label: "base".into(), run_id: None }],
+        })
+        .unwrap();
+    let winners: Vec<String> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|i| {
+                let store = &store;
+                s.spawn(move || {
+                    store
+                        .claim_campaign_cell("race", 0, None, &format!("contender-{i}"))
+                        .unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let agreed: BTreeSet<&String> = winners.iter().collect();
+    assert_eq!(agreed.len(), 1, "racers disagree on the claim winner: {winners:?}");
+    assert!(winners[0].starts_with("contender-"), "{winners:?}");
+    let stored = store.load_campaign("race").unwrap();
+    assert_eq!(stored.cells[0].run_id.as_deref(), Some(winners[0].as_str()));
+
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A byte-level TCP proxy in front of a store server with two fault
+/// injectors: `corrupt` flips the last byte of every server response
+/// (which lands in a blob GET's body), and `arm_drop` kills one
+/// connection after a cumulative client->server byte count — mid-upload.
+struct FaultProxy {
+    addr: SocketAddr,
+    corrupt: Arc<AtomicBool>,
+    drop_limit: Arc<AtomicUsize>,
+    drop_seen: Arc<AtomicUsize>,
+}
+
+impl FaultProxy {
+    fn start(upstream: SocketAddr) -> FaultProxy {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let corrupt = Arc::new(AtomicBool::new(false));
+        let drop_limit = Arc::new(AtomicUsize::new(0));
+        let drop_seen = Arc::new(AtomicUsize::new(0));
+        {
+            let corrupt = Arc::clone(&corrupt);
+            let drop_limit = Arc::clone(&drop_limit);
+            let drop_seen = Arc::clone(&drop_seen);
+            std::thread::spawn(move || {
+                for client in listener.incoming() {
+                    let Ok(client) = client else { return };
+                    let corrupt = Arc::clone(&corrupt);
+                    let drop_limit = Arc::clone(&drop_limit);
+                    let drop_seen = Arc::clone(&drop_seen);
+                    std::thread::spawn(move || {
+                        forward(client, upstream, corrupt, drop_limit, drop_seen)
+                    });
+                }
+            });
+        }
+        FaultProxy { addr, corrupt, drop_limit, drop_seen }
+    }
+
+    /// One-shot: kill the connection that crosses `bytes` of cumulative
+    /// client->server traffic from now on. Disarms itself after firing.
+    fn arm_drop(&self, bytes: usize) {
+        self.drop_seen.store(0, Ordering::SeqCst);
+        self.drop_limit.store(bytes, Ordering::SeqCst);
+    }
+
+    fn drop_fired(&self) -> bool {
+        self.drop_limit.load(Ordering::SeqCst) == 0
+    }
+}
+
+fn forward(
+    client: TcpStream,
+    upstream: SocketAddr,
+    corrupt: Arc<AtomicBool>,
+    drop_limit: Arc<AtomicUsize>,
+    drop_seen: Arc<AtomicUsize>,
+) {
+    let Ok(server) = TcpStream::connect(upstream) else { return };
+    let (Ok(mut c_read), Ok(mut s_write)) = (client.try_clone(), server.try_clone()) else {
+        return;
+    };
+    let client_kill = client.try_clone().ok();
+    // client -> server: count bytes and, when an armed drop limit is
+    // crossed, tear down both sides of the connection mid-request.
+    let c2s = std::thread::spawn(move || {
+        let mut buf = [0u8; 16 * 1024];
+        loop {
+            let n = match c_read.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => n,
+            };
+            let limit = drop_limit.load(Ordering::SeqCst);
+            if limit != 0 && drop_seen.fetch_add(n, Ordering::SeqCst) + n >= limit {
+                drop_limit.store(0, Ordering::SeqCst); // one-shot
+                let _ = s_write.shutdown(Shutdown::Both);
+                if let Some(c) = &client_kill {
+                    let _ = c.shutdown(Shutdown::Both);
+                }
+                return;
+            }
+            if s_write.write_all(&buf[..n]).is_err() {
+                break;
+            }
+        }
+        let _ = s_write.shutdown(Shutdown::Write);
+    });
+    // server -> client: the store server closes after one response, so
+    // buffering to EOF frames it exactly. Corruption flips the LAST byte
+    // of the response — the tail of the body — leaving the status line,
+    // headers and Content-Length intact so only digest checks can object.
+    let mut s_read = server;
+    let mut resp = Vec::new();
+    if s_read.read_to_end(&mut resp).is_ok() && !resp.is_empty() {
+        if corrupt.load(Ordering::SeqCst) {
+            *resp.last_mut().unwrap() ^= 0xff;
+        }
+        let mut c_write = client;
+        let _ = c_write.write_all(&resp);
+        let _ = c_write.shutdown(Shutdown::Write);
+    }
+    let _ = c2s.join();
+}
+
+/// Wire faults stay contained: a corrupted pull is rejected by digest
+/// verification and never enters the local blob cache, and a connection
+/// dropped mid-upload is healed by the resumable upload protocol.
+#[test]
+fn wire_faults_are_contained() {
+    let dir = scratch("remote-faults");
+    let server = StoreServer::start(&dir, "127.0.0.1:0", 2).unwrap();
+    let proxy = FaultProxy::start(server.addr());
+    let local = RunStore::open(&dir).unwrap();
+    let remote = RunStore::open(format!("http://{}", proxy.addr)).unwrap();
+
+    // -- corruption drill -------------------------------------------------
+    // Unique content per process so a previous run's cache entry can't
+    // satisfy the pull before the corrupted wire bytes are even seen.
+    let params: Vec<f32> =
+        (0..2000).map(|i| (i as f32) * 0.5 + std::process::id() as f32).collect();
+    let blob = local.put_params(&params).unwrap();
+    let hex = blob.digest.strip_prefix("sha256:").unwrap();
+    let cached = default_cache_dir().join(hex);
+    let _ = std::fs::remove_file(&cached);
+
+    proxy.corrupt.store(true, Ordering::SeqCst);
+    let err = remote.get_params(&blob).expect_err("corrupted pull must be rejected");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("digest"), "unexpected error for corrupted pull: {msg}");
+    assert!(!cached.exists(), "corrupted bytes must never enter the blob cache");
+
+    proxy.corrupt.store(false, Ordering::SeqCst);
+    let pulled = remote.get_params(&blob).unwrap();
+    assert_eq!(pulled, params, "clean retry must round-trip exactly");
+    assert!(cached.exists(), "verified bytes should be cached for reuse");
+
+    // -- dropped-connection drill -----------------------------------------
+    // 200k f32 = 800 KB = four 256 KiB upload chunks. Arm the one-shot
+    // drop at 300 KB of cumulative client->server traffic: the first
+    // PATCH (~262 KB) survives, the second dies mid-body, and the client
+    // must recover by querying the session offset and resuming.
+    let big: Vec<f32> = (0..200_000).map(|i| ((i % 9973) as f32) * 0.125 - 3.0).collect();
+    proxy.arm_drop(300_000);
+    let big_ref = remote.put_params(&big).unwrap();
+    assert!(proxy.drop_fired(), "the drop never triggered — upload was not exercised");
+    assert_eq!(local.get_params(&big_ref).unwrap(), big, "resumed upload must be byte-exact");
+
+    server.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }

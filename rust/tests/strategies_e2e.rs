@@ -123,6 +123,24 @@ fn coverage_grows_over_rounds_for_fedel() {
 }
 
 #[test]
+fn fedbuff_staleness_exp_zero_is_neutral_and_nonzero_is_not() {
+    // The registry tunable `strategy.fedbuff.staleness_exp` decays each
+    // buffered delta by 1/(1+s)^exp inside the flush average. exp=0 must
+    // be bitwise-identical to the plain data-size weighting (the guard
+    // skips the powf entirely), while a real exponent must change the
+    // aggregate on a heterogeneous fleet where staleness varies.
+    let base = run_one(cfg("fedbuff")).unwrap();
+    let mut zero = cfg("fedbuff");
+    zero.strategy_params = vec![("strategy.fedbuff.staleness_exp".into(), 0.0)];
+    let zero = run_one(zero).unwrap();
+    assert_eq!(base.final_params, zero.final_params, "exp=0 must be bitwise-neutral");
+    let mut decayed = cfg("fedbuff");
+    decayed.strategy_params = vec![("strategy.fedbuff.staleness_exp".into(), 2.0)];
+    let decayed = run_one(decayed).unwrap();
+    assert_ne!(base.final_params, decayed.final_params, "exp=2 must change the flush average");
+}
+
+#[test]
 fn heterofl_coverage_is_fractional() {
     let mut c = cfg("heterofl");
     c.record_selections = true;

@@ -101,6 +101,9 @@ fn main() -> anyhow::Result<()> {
         d_naive.as_secs_f64() * 1e6,
     );
 
+    // --- async event queue: binary heap vs linear scan ------------------
+    event_queue_bench(&mut t);
+
     // --- round throughput: sequential vs parallel client fan-out --------
     // 32-client fedavg rounds on the mock engine; the only difference
     // between the two runs is exec_threads (1 vs one-per-core). Results
@@ -154,6 +157,94 @@ fn naive_window_walk(train: &[f64], fwd: &[f64], t_th: f64, rounds: usize) -> (u
         }
     }
     (front, resets)
+}
+
+/// The async executor's next-event lookup at fleet scale: the shipped
+/// binary heap (`fl::async_exec`, O(log n) per event, keyed by
+/// (finish, slot) exactly like `EventKey`) against the pre-PR linear
+/// min-scan (O(n) per event). Both replay the same synthetic
+/// dispatch/complete trace over 100k in-flight slots and must pop the
+/// identical slot sequence — the heap is a speedup, not a reordering.
+fn event_queue_bench(t: &mut Table) {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    const SLOTS: usize = 100_000;
+    const EVENTS: usize = 512;
+
+    let mut rng = fedel::util::rng::Rng::new(7);
+    let finishes: Vec<f64> = (0..SLOTS).map(|_| 1.0 + rng.below(100_000) as f64 * 1e-3).collect();
+    // the re-dispatch delay after popping slot s at event step k — pure in
+    // (k), so both queue implementations replay the same trace
+    let redispatch = |step: usize| 50.0 + (step % 17) as f64;
+
+    let mut linear_trace = 0u64;
+    let d_linear = time_median(9, || {
+        let mut fin = finishes.clone();
+        let mut h = 0u64;
+        for step in 0..EVENTS {
+            let slot = fin
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.total_cmp(b.1).then(a.0.cmp(&b.0)))
+                .map(|(i, _)| i)
+                .unwrap();
+            h = h.wrapping_mul(31).wrapping_add(slot as u64);
+            fin[slot] += redispatch(step);
+        }
+        linear_trace = std::hint::black_box(h);
+    });
+
+    #[derive(PartialEq)]
+    struct Ev {
+        finish: f64,
+        slot: usize,
+    }
+    impl Eq for Ev {}
+    impl PartialOrd for Ev {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Ev {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            self.finish.total_cmp(&other.finish).then(self.slot.cmp(&other.slot))
+        }
+    }
+
+    let mut heap_trace = 0u64;
+    let d_heap = time_median(9, || {
+        let mut q: BinaryHeap<Reverse<Ev>> = finishes
+            .iter()
+            .enumerate()
+            .map(|(slot, &finish)| Reverse(Ev { finish, slot }))
+            .collect();
+        let mut h = 0u64;
+        for step in 0..EVENTS {
+            let Reverse(ev) = q.pop().unwrap();
+            h = h.wrapping_mul(31).wrapping_add(ev.slot as u64);
+            q.push(Reverse(Ev { finish: ev.finish + redispatch(step), slot: ev.slot }));
+        }
+        heap_trace = std::hint::black_box(h);
+    });
+    assert_eq!(linear_trace, heap_trace, "heap must pop the same event sequence as the scan");
+
+    let speedup = d_linear.as_secs_f64() / d_heap.as_secs_f64().max(1e-12);
+    t.row(vec![
+        format!("event queue ({SLOTS} slots x {EVENTS} events), linear scan"),
+        format!("{:.2}ms", d_linear.as_secs_f64() * 1e3),
+        String::new(),
+    ]);
+    t.row(vec![
+        format!("event queue ({SLOTS} slots x {EVENTS} events), binary heap"),
+        format!("{:.2}ms", d_heap.as_secs_f64() * 1e3),
+        format!("{speedup:.1}x win"),
+    ]);
+    println!(
+        "event queue [{SLOTS} slots x {EVENTS} events]: linear {:.2}ms, heap {:.2}ms -> {speedup:.1}x",
+        d_linear.as_secs_f64() * 1e3,
+        d_heap.as_secs_f64() * 1e3,
+    );
 }
 
 /// Wall-clock of full experiment rounds at exec_threads = 1 vs 0, printed

@@ -24,12 +24,34 @@ pub enum FleetSpec {
     Large(usize),
     /// Explicit per-client scales.
     Scales(Vec<f64>),
+    /// A lazily-materialized generated fleet: `lazyN[:generator]` where
+    /// the generator is `uniform` (default), `cat:w1,w2,...`, or
+    /// `lognormal:mu:sigma` (see [`crate::fleet::GeneratorSpec`]). Client
+    /// profiles are derived on demand from (seed, generator), so the
+    /// fleet never allocates O(n) state.
+    Lazy { n: usize, generator: crate::fleet::GeneratorSpec },
 }
 
 impl FleetSpec {
     pub fn parse(s: &str) -> anyhow::Result<FleetSpec> {
         match s {
             "small10" => Ok(FleetSpec::Small10),
+            _ if s.starts_with("lazy") => {
+                let rest = &s["lazy".len()..];
+                let (n_str, gen_str) = match rest.split_once(':') {
+                    Some((n, g)) => (n, Some(g)),
+                    None => (rest, None),
+                };
+                let n: usize = n_str
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad lazy fleet size in {s:?} (lazyN[:generator])"))?;
+                anyhow::ensure!(n > 0, "lazy fleet must have at least one client: {s:?}");
+                let generator = match gen_str {
+                    Some(g) => crate::fleet::GeneratorSpec::parse(g)?,
+                    None => crate::fleet::GeneratorSpec::Uniform,
+                };
+                Ok(FleetSpec::Lazy { n, generator })
+            }
             _ if s.starts_with("large") => {
                 let n: usize = s["large".len()..].parse().unwrap_or(100);
                 Ok(FleetSpec::Large(n))
@@ -42,7 +64,9 @@ impl FleetSpec {
                     .collect::<anyhow::Result<_>>()?;
                 Ok(FleetSpec::Scales(scales))
             }
-            other => anyhow::bail!("unknown fleet {other:?} (small10 | largeN | s1,s2,...)"),
+            other => anyhow::bail!(
+                "unknown fleet {other:?} (small10 | largeN | s1,s2,... | lazyN[:generator])"
+            ),
         }
     }
 
@@ -55,6 +79,10 @@ impl FleetSpec {
                 .map(|s| format!("{s}"))
                 .collect::<Vec<_>>()
                 .join(","),
+            FleetSpec::Lazy { n, generator } => match generator {
+                crate::fleet::GeneratorSpec::Uniform => format!("lazy{n}"),
+                g => format!("lazy{n}:{}", g.label()),
+            },
         }
     }
 }
@@ -102,6 +130,27 @@ pub struct ExperimentCfg {
     /// falls back to the declaration's default
     /// ([`crate::strategies::registry`]).
     pub strategy_params: Vec<(String, f64)>,
+    /// JSONL fleet trace path (`fleet.trace`); when set it overrides
+    /// `fleet`. Empty = unset.
+    pub fleet_trace: String,
+    /// Parsed trace profiles, inlined into the config snapshot the first
+    /// time the experiment is built — resume and campaign replays never
+    /// re-read (or require) the trace file.
+    pub fleet_profiles: Vec<crate::fleet::ClientProfile>,
+    /// Async in-flight cap (`fleet.sample`): at most this many clients
+    /// hold dispatches (and parameter state) at once; fresh clients are
+    /// drawn deterministically as uploads land. 0 = every client in
+    /// flight (the legacy full fan-out). Required for lazy fleets.
+    pub fleet_sample: usize,
+    /// Mid-round dropout probability (`fleet.churn.dropout`), [0, 1):
+    /// each finished update is discarded with this probability.
+    pub churn_dropout: f64,
+    /// Availability cycle length in sim seconds (`fleet.churn.period_secs`);
+    /// 0 = clients are always online.
+    pub churn_period_secs: f64,
+    /// Fraction of each availability cycle a client is online
+    /// (`fleet.churn.avail_frac`), (0, 1].
+    pub churn_avail_frac: f64,
     pub record_selections: bool,
     pub verbose: bool,
     /// Abort after this many rounds (simulated kill, for fault-tolerance
@@ -132,6 +181,12 @@ impl Default for ExperimentCfg {
             comm_latency_secs: 0.0,
             exec_threads: 0,
             strategy_params: Vec::new(),
+            fleet_trace: String::new(),
+            fleet_profiles: Vec::new(),
+            fleet_sample: 0,
+            churn_dropout: 0.0,
+            churn_period_secs: 0.0,
+            churn_avail_frac: 1.0,
             record_selections: false,
             verbose: false,
             halt_after: None,
@@ -165,6 +220,12 @@ impl ExperimentCfg {
             comm_latency_secs: args.f64_or("comm-latency-secs", d.comm_latency_secs),
             exec_threads: args.usize_or("threads", d.exec_threads),
             strategy_params: Vec::new(),
+            fleet_trace: args.str_or("fleet-trace", &d.fleet_trace),
+            fleet_profiles: Vec::new(),
+            fleet_sample: args.usize_or("fleet-sample", d.fleet_sample),
+            churn_dropout: d.churn_dropout,
+            churn_period_secs: d.churn_period_secs,
+            churn_avail_frac: d.churn_avail_frac,
             record_selections: args.flag("record-selections"),
             verbose: args.flag("verbose"),
             halt_after: args.get("halt-after").and_then(|s| s.parse().ok()),
@@ -241,6 +302,28 @@ impl ExperimentCfg {
                 kv.push((key, Json::Num(v)));
             }
         }
+        // Fleet-scale keys are likewise omitted at their "unset" defaults.
+        if !self.fleet_trace.is_empty() {
+            kv.push(("fleet_trace", Json::Str(self.fleet_trace.clone())));
+        }
+        if !self.fleet_profiles.is_empty() {
+            kv.push((
+                "fleet_profiles",
+                Json::Arr(self.fleet_profiles.iter().map(|p| p.to_json()).collect()),
+            ));
+        }
+        if self.fleet_sample != 0 {
+            kv.push(("fleet_sample", Json::Num(self.fleet_sample as f64)));
+        }
+        if self.churn_dropout != 0.0 {
+            kv.push(("churn_dropout", Json::Num(self.churn_dropout)));
+        }
+        if self.churn_period_secs != 0.0 {
+            kv.push(("churn_period_secs", Json::Num(self.churn_period_secs)));
+        }
+        if self.churn_avail_frac != 1.0 {
+            kv.push(("churn_avail_frac", Json::Num(self.churn_avail_frac)));
+        }
         // Omitted when empty so pre-registry snapshots compare and
         // round-trip unchanged.
         if !self.strategy_params.is_empty() {
@@ -307,6 +390,18 @@ impl ExperimentCfg {
                 }
                 _ => Vec::new(),
             },
+            fleet_trace: s("fleet_trace", &d.fleet_trace),
+            fleet_profiles: match j.get("fleet_profiles") {
+                Some(Json::Arr(items)) => items
+                    .iter()
+                    .map(crate::fleet::ClientProfile::from_json)
+                    .collect::<anyhow::Result<Vec<_>>>()?,
+                _ => Vec::new(),
+            },
+            fleet_sample: u("fleet_sample", d.fleet_sample),
+            churn_dropout: f("churn_dropout", d.churn_dropout),
+            churn_period_secs: f("churn_period_secs", d.churn_period_secs),
+            churn_avail_frac: f("churn_avail_frac", d.churn_avail_frac),
             record_selections: false,
             verbose: false,
             halt_after: None,
@@ -351,6 +446,65 @@ mod tests {
             FleetSpec::Scales(vec![1.0, 2.0])
         );
         assert!(FleetSpec::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn lazy_fleet_spec_parses_and_labels_round_trip() {
+        use crate::fleet::GeneratorSpec;
+        let cases = [
+            ("lazy1000000", GeneratorSpec::Uniform, 1_000_000),
+            ("lazy100:cat:1,2,3,4", GeneratorSpec::Categorical(vec![1.0, 2.0, 3.0, 4.0]), 100),
+            ("lazy50:lognormal:0:0.5", GeneratorSpec::LogNormal { mu: 0.0, sigma: 0.5 }, 50),
+        ];
+        for (label, generator, n) in cases {
+            let spec = FleetSpec::parse(label).unwrap();
+            assert_eq!(spec, FleetSpec::Lazy { n, generator: generator.clone() });
+            assert_eq!(spec.label(), label, "label must invert parse");
+        }
+        assert!(FleetSpec::parse("lazy").is_err());
+        assert!(FleetSpec::parse("lazy0").is_err());
+        assert!(FleetSpec::parse("lazy10:zipf:2").is_err());
+    }
+
+    #[test]
+    fn fleet_scale_keys_round_trip_and_stay_out_of_plain_snapshots() {
+        use crate::fleet::{ClientProfile, EnergyClass};
+        use crate::timing::DeviceProfile;
+        // Plain configs never mention the new keys (old snapshots compare
+        // and round-trip unchanged).
+        let plain = ExperimentCfg::default().to_json();
+        for key in [
+            "fleet_trace",
+            "fleet_profiles",
+            "fleet_sample",
+            "churn_dropout",
+            "churn_period_secs",
+            "churn_avail_frac",
+        ] {
+            assert!(plain.get(key).is_none(), "{key} leaked into a default snapshot");
+        }
+        let mut profile = ClientProfile::plain(DeviceProfile::new("edge", 2.0, 7.5));
+        profile.up_mbps = 5.0;
+        profile.energy = EnergyClass::Battery;
+        let cfg = ExperimentCfg {
+            fleet: FleetSpec::parse("lazy1000:lognormal:0:0.5").unwrap(),
+            fleet_trace: "fleet.jsonl".into(),
+            fleet_profiles: vec![profile],
+            fleet_sample: 64,
+            churn_dropout: 0.1,
+            churn_period_secs: 3600.0,
+            churn_avail_frac: 0.75,
+            ..Default::default()
+        };
+        let text = cfg.to_json().to_string_pretty();
+        let back = ExperimentCfg::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.fleet, cfg.fleet);
+        assert_eq!(back.fleet_trace, cfg.fleet_trace);
+        assert_eq!(back.fleet_profiles, cfg.fleet_profiles);
+        assert_eq!(back.fleet_sample, 64);
+        assert_eq!(back.churn_dropout.to_bits(), cfg.churn_dropout.to_bits());
+        assert_eq!(back.churn_period_secs.to_bits(), cfg.churn_period_secs.to_bits());
+        assert_eq!(back.churn_avail_frac.to_bits(), cfg.churn_avail_frac.to_bits());
     }
 
     #[test]

@@ -96,6 +96,11 @@ enum Slot {
     CommDownMbps,
     CommLatencySecs,
     SlowestRoundSecs,
+    FleetTrace,
+    FleetSample,
+    ChurnDropout,
+    ChurnPeriodSecs,
+    ChurnAvailFrac,
     /// A strategy-declared tunable living in the config's parameter bag
     /// under its full key.
     StrategyParam { default: f64, min: f64, max: f64 },
@@ -162,9 +167,20 @@ impl KeyDef {
             | (Slot::CommUpMbps, ParamValue::F64(x))
             | (Slot::CommDownMbps, ParamValue::F64(x))
             | (Slot::CommLatencySecs, ParamValue::F64(x))
-            | (Slot::SlowestRoundSecs, ParamValue::F64(x)) => {
+            | (Slot::SlowestRoundSecs, ParamValue::F64(x))
+            | (Slot::ChurnPeriodSecs, ParamValue::F64(x)) => {
                 if !x.is_finite() || *x < 0.0 {
                     return err(format!("must be >= 0 (got {x})"));
+                }
+            }
+            (Slot::ChurnDropout, ParamValue::F64(x)) => {
+                if !x.is_finite() || *x < 0.0 || *x >= 1.0 {
+                    return err(format!("must be in [0, 1) (got {x})"));
+                }
+            }
+            (Slot::ChurnAvailFrac, ParamValue::F64(x)) => {
+                if !x.is_finite() || *x <= 0.0 || *x > 1.0 {
+                    return err(format!("must be in (0, 1] (got {x})"));
                 }
             }
             (Slot::StrategyParam { min, max, .. }, ParamValue::F64(x)) => {
@@ -196,6 +212,11 @@ impl KeyDef {
             Slot::CommDownMbps => ParamValue::F64(cfg.comm_down_mbps),
             Slot::CommLatencySecs => ParamValue::F64(cfg.comm_latency_secs),
             Slot::SlowestRoundSecs => ParamValue::F64(cfg.slowest_round_secs),
+            Slot::FleetTrace => ParamValue::Str(cfg.fleet_trace.clone()),
+            Slot::FleetSample => ParamValue::Usize(cfg.fleet_sample),
+            Slot::ChurnDropout => ParamValue::F64(cfg.churn_dropout),
+            Slot::ChurnPeriodSecs => ParamValue::F64(cfg.churn_period_secs),
+            Slot::ChurnAvailFrac => ParamValue::F64(cfg.churn_avail_frac),
             Slot::StrategyParam { default, .. } => ParamValue::F64(
                 cfg.strategy_params
                     .iter()
@@ -234,6 +255,11 @@ impl KeyDef {
             (Slot::CommDownMbps, ParamValue::F64(x)) => cfg.comm_down_mbps = *x,
             (Slot::CommLatencySecs, ParamValue::F64(x)) => cfg.comm_latency_secs = *x,
             (Slot::SlowestRoundSecs, ParamValue::F64(x)) => cfg.slowest_round_secs = *x,
+            (Slot::FleetTrace, ParamValue::Str(s)) => cfg.fleet_trace = s.clone(),
+            (Slot::FleetSample, ParamValue::Usize(n)) => cfg.fleet_sample = *n,
+            (Slot::ChurnDropout, ParamValue::F64(x)) => cfg.churn_dropout = *x,
+            (Slot::ChurnPeriodSecs, ParamValue::F64(x)) => cfg.churn_period_secs = *x,
+            (Slot::ChurnAvailFrac, ParamValue::F64(x)) => cfg.churn_avail_frac = *x,
             (Slot::StrategyParam { .. }, ParamValue::F64(x)) => {
                 match cfg.strategy_params.iter_mut().find(|(k, _)| *k == self.key) {
                     Some(entry) => entry.1 = *x,
@@ -310,6 +336,36 @@ impl ParamSpace {
                 F64,
                 "calibrate the slowest device's full round to this (0 = off)",
                 Slot::SlowestRoundSecs,
+            ),
+            KeyDef::fixed(
+                "fleet.trace",
+                Str,
+                "JSONL fleet trace path (one client profile per line); overrides `fleet`",
+                Slot::FleetTrace,
+            ),
+            KeyDef::fixed(
+                "fleet.sample",
+                Usize,
+                "async in-flight client cap (0 = all clients in flight); required for lazy fleets",
+                Slot::FleetSample,
+            ),
+            KeyDef::fixed(
+                "fleet.churn.dropout",
+                F64,
+                "probability a finished update is discarded mid-round, [0, 1)",
+                Slot::ChurnDropout,
+            ),
+            KeyDef::fixed(
+                "fleet.churn.period_secs",
+                F64,
+                "availability cycle length in sim seconds (0 = always online)",
+                Slot::ChurnPeriodSecs,
+            ),
+            KeyDef::fixed(
+                "fleet.churn.avail_frac",
+                F64,
+                "fraction of each availability cycle a client is online, (0, 1]",
+                Slot::ChurnAvailFrac,
             ),
         ];
         for def in registry::builtin().defs() {
@@ -468,13 +524,19 @@ pub struct SweepAxis {
 impl SweepAxis {
     /// Parse `key=v1,v2,...`. Fleet-typed keys split on ';' instead
     /// (fleet specs like `1,2.5,4` use commas internally):
-    /// `--sweep "fleet=small10;large20"`.
+    /// `--sweep "fleet=small10;large20"`. Any other key also accepts ';'
+    /// when the value list uses it exclusively — `fleet.churn.dropout=
+    /// 0;0.1;0.3` and `0,0.1,0.3` are the same axis.
     pub fn parse(space: &ParamSpace, spec: &str) -> anyhow::Result<SweepAxis> {
         let (key, raw) = spec
             .split_once('=')
             .ok_or_else(|| anyhow::anyhow!("sweep axis {spec:?} is not key=v1,v2,..."))?;
         let def = space.resolve(key)?;
-        let sep = if def.ty == ParamType::Fleet { ';' } else { ',' };
+        let sep = if def.ty == ParamType::Fleet || (raw.contains(';') && !raw.contains(',')) {
+            ';'
+        } else {
+            ','
+        };
         let mut values = Vec::new();
         for part in raw.split(sep).filter(|p| !p.is_empty()) {
             let v = def.parse(part)?;
@@ -621,6 +683,45 @@ mod tests {
         assert!(space.resolve("strategy.fedasync.staleness_exp").is_ok());
         assert!(space.resolve("strategy.fedbuff.buffer_k").is_ok());
         assert!(Binding::parse(space, "strategy.fedbuff.buffer_k=0.5").is_err());
+    }
+
+    #[test]
+    fn fleet_keys_resolve_apply_and_validate() {
+        let space = ParamSpace::shared();
+        let mut cfg = ExperimentCfg::default();
+        for spec in [
+            "fleet.trace=devices.jsonl",
+            "fleet.sample=128",
+            "fleet.churn.dropout=0.25",
+            "fleet.churn.period_secs=3600",
+            "fleet.churn.avail_frac=0.8",
+        ] {
+            let b = Binding::parse(space, spec).unwrap();
+            assert_eq!(b.render(), *spec, "canonical rendering");
+            space.resolve(&b.key).unwrap().apply(&mut cfg, &b.value).unwrap();
+        }
+        assert_eq!(cfg.fleet_trace, "devices.jsonl");
+        assert_eq!(cfg.fleet_sample, 128);
+        assert_eq!(cfg.churn_dropout, 0.25);
+        assert_eq!(cfg.churn_period_secs, 3600.0);
+        assert_eq!(cfg.churn_avail_frac, 0.8);
+        // bounds: dropout in [0,1), avail_frac in (0,1]
+        assert!(Binding::parse(space, "fleet.churn.dropout=1").is_err());
+        assert!(Binding::parse(space, "fleet.churn.dropout=-0.1").is_err());
+        assert!(Binding::parse(space, "fleet.churn.avail_frac=0").is_err());
+        assert!(Binding::parse(space, "fleet.churn.avail_frac=1.5").is_err());
+        assert!(Binding::parse(space, "fleet.churn.period_secs=-1").is_err());
+        // fleet.sample=0 is legal: the legacy full fan-out
+        assert!(Binding::parse(space, "fleet.sample=0").is_ok());
+        // the lazy fleet spec flows through the existing `fleet` key
+        let b = Binding::parse(space, "fleet=lazy100000:lognormal:0:0.5").unwrap();
+        space.resolve(&b.key).unwrap().apply(&mut cfg, &b.value).unwrap();
+        assert!(matches!(cfg.fleet, FleetSpec::Lazy { n: 100_000, .. }));
+        // churn keys sweep like any F64 key; ';' and ',' both separate
+        let axis = SweepAxis::parse(space, "fleet.churn.dropout=0,0.1,0.3").unwrap();
+        assert_eq!(axis.values.len(), 3);
+        let semi = SweepAxis::parse(space, "fleet.churn.dropout=0;0.1;0.3").unwrap();
+        assert_eq!(semi, axis);
     }
 
     #[test]

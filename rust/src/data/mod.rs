@@ -202,6 +202,18 @@ pub struct FedDataset {
     pub clients: Vec<ClientData>,
     /// Pre-generated IID test batches (deterministic eval).
     pub test_batches: Vec<(Vec<f32>, Vec<i32>)>,
+    /// Set on lazily-materialized datasets ([`FedDataset::build_lazy`]):
+    /// `clients` stays empty and [`FedDataset::client`] derives each
+    /// distribution on demand as a pure function of (seed, id).
+    lazy: Option<LazyClients>,
+}
+
+/// Generator spec for a lazily-materialized client population.
+struct LazyClients {
+    n: usize,
+    alpha: f64,
+    cats: usize,
+    seed: u64,
 }
 
 impl FedDataset {
@@ -232,7 +244,68 @@ impl FedDataset {
         let test_batches = (0..test_batches)
             .map(|_| sample_from_mixture(&spec, m, &uniform, &mut test_rng))
             .collect();
-        FedDataset { spec, clients, test_batches }
+        FedDataset { spec, clients, test_batches, lazy: None }
+    }
+
+    /// Like [`FedDataset::build`] but O(1) in `n_clients`: no per-client
+    /// state is allocated up front. Each client's Dirichlet mixture is
+    /// derived on demand from a per-id RNG instead of the shared sequential
+    /// stream, so a lazy dataset is NOT bitwise-identical to an eager one —
+    /// lazy fleets are a distinct scenario, not a drop-in memory
+    /// optimization of an existing config.
+    pub fn build_lazy(
+        m: &Manifest,
+        n_clients: usize,
+        alpha: f64,
+        test_batches: usize,
+        seed: u64,
+    ) -> FedDataset {
+        let spec = TaskSpec::for_manifest(m, seed);
+        let cats = match spec.task {
+            Task::Classification => spec.num_classes,
+            Task::Lm => spec.lm_topics(),
+        };
+        let uniform = vec![1.0 / cats as f64; cats];
+        let mut test_rng = Rng::new(seed ^ 0x7E57);
+        let test_batches = (0..test_batches)
+            .map(|_| sample_from_mixture(&spec, m, &uniform, &mut test_rng))
+            .collect();
+        FedDataset {
+            spec,
+            clients: Vec::new(),
+            test_batches,
+            lazy: Some(LazyClients { n: n_clients, alpha, cats, seed }),
+        }
+    }
+
+    /// Number of clients, whether materialized or lazy.
+    pub fn n_clients(&self) -> usize {
+        match &self.lazy {
+            Some(l) => l.n,
+            None => self.clients.len(),
+        }
+    }
+
+    /// The distribution of client `id`. On eager datasets this clones the
+    /// stored entry; on lazy datasets it derives the entry purely from
+    /// (seed, id), so repeated calls are identical and nothing is cached.
+    pub fn client(&self, id: usize) -> ClientData {
+        match &self.lazy {
+            None => self.clients[id].clone(),
+            Some(l) => {
+                assert!(id < l.n, "client {id} out of range for lazy fleet of {}", l.n);
+                let mut s = l.seed
+                    ^ 0xC11E17
+                    ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                let mut rng = Rng::new(crate::util::rng::splitmix64(&mut s));
+                ClientData {
+                    id,
+                    mixture: rng.dirichlet(l.alpha, l.cats),
+                    num_samples: 200 + rng.below(300),
+                    seed: rng.next_u64(),
+                }
+            }
+        }
     }
 }
 
@@ -283,6 +356,22 @@ mod tests {
         let ds = FedDataset::build(&m, 3, 0.1, 1, 9);
         assert_ne!(ds.clients[0].mixture, ds.clients[1].mixture);
         assert_ne!(ds.clients[0].seed, ds.clients[1].seed);
+    }
+
+    #[test]
+    fn lazy_dataset_is_pure_and_allocates_no_client_state() {
+        let m = toy_manifest();
+        let ds = FedDataset::build_lazy(&m, 1_000_000, 0.1, 2, 11);
+        assert!(ds.clients.is_empty());
+        assert_eq!(ds.n_clients(), 1_000_000);
+        let a = ds.client(999_999);
+        let b = ds.client(999_999);
+        assert_eq!(a.mixture, b.mixture);
+        assert_eq!(a.seed, b.seed);
+        assert_ne!(ds.client(0).mixture, ds.client(1).mixture);
+        // test batches match the eager build (same derivation)
+        let eager = FedDataset::build(&m, 2, 0.1, 2, 11);
+        assert_eq!(ds.test_batches, eager.test_batches);
     }
 
     #[test]

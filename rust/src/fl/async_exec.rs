@@ -8,12 +8,23 @@
 //! as they arrive. This module simulates that with a discrete-event
 //! clock:
 //!
-//! * each client always has exactly one dispatch in flight, whose finish
-//!   time = dispatch time + download + compute + upload under the
-//!   experiment's [`CommModel`](crate::timing::CommModel);
-//! * events (upload completions) process in simulated-time order, ties
-//!   broken by client id, so the event sequence is a pure function of the
-//!   inputs;
+//! * each runner *slot* always has exactly one dispatch in flight, whose
+//!   finish time = dispatch time + download + compute + upload under the
+//!   client's [`CommModel`](crate::timing::CommModel) (per-client trace
+//!   links override the base model). With `fleet.sample = 0` there is one
+//!   slot per client (legacy full fan-out); with `fleet.sample = k` only
+//!   k clients are in flight at once and a finished slot re-samples a
+//!   fresh client — the O(sampled) regime lazy million-client fleets
+//!   require;
+//! * events (upload completions) pop from a binary heap in simulated-time
+//!   order — O(log n) per event — with ties broken by client id then
+//!   slot, so the event sequence is a pure function of the inputs (and
+//!   identical to the previous linear scan's);
+//! * availability churn ([`crate::fleet::ChurnCfg`] + trace windows)
+//!   marks a dispatch *doomed* at dispatch time — a pure function of
+//!   (seed, client, iteration, finish time) — and a doomed upload is
+//!   discarded at its event instead of aggregated, recorded in the next
+//!   [`RoundRecord::dropped`];
 //! * the server aggregates per the strategy's [`AsyncSpec`]:
 //!   [`AsyncMode::PerArrival`] mixes every arrival immediately with a
 //!   staleness-decayed weight (FedAsync), [`AsyncMode::Buffered`] flushes
@@ -49,9 +60,14 @@ use crate::manifest::Manifest;
 use crate::runtime::{Engine, TrainSession};
 use crate::strategies::{full_model_plan, AsyncMode, AsyncSpec, ClientPlan, FleetCtx, Strategy};
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
-/// One client's dispatch currently in flight.
+/// One slot's dispatch currently in flight.
 struct InFlight {
+    /// Which client this dispatch belongs to. Equal to the slot index in
+    /// full fan-out mode; an arbitrary sampled client when `fleet.sample`
+    /// caps the in-flight set.
+    client: usize,
     /// Client-local iteration index — the batch-sampling tag base, so a
     /// client's data stream continues deterministically across dispatches
     /// (and across kill/resume).
@@ -64,7 +80,46 @@ struct InFlight {
     plan: ClientPlan,
     /// Lazily executed; `None` until the event loop materializes it.
     outcome: Option<ClientOutcome>,
+    /// Availability churn verdict, decided AT DISPATCH as a pure function
+    /// of (seed, client, iter, finish): the client departs / goes offline
+    /// / drops out before its upload lands, so the update is discarded at
+    /// the event and never executed. Recomputed on resume, not stored.
+    doomed: bool,
 }
+
+/// Heap key for the event queue: earliest finish first, ties broken by
+/// client id (the documented deterministic order) then slot. One live
+/// entry per slot at all times — pushed at dispatch, popped at the event —
+/// so there is no lazy deletion and the pop order matches the previous
+/// linear scan exactly.
+struct EventKey {
+    finish: f64,
+    client: usize,
+    slot: usize,
+}
+
+impl Ord for EventKey {
+    fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+        self.finish
+            .total_cmp(&o.finish)
+            .then(self.client.cmp(&o.client))
+            .then(self.slot.cmp(&o.slot))
+    }
+}
+
+impl PartialOrd for EventKey {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+
+impl PartialEq for EventKey {
+    fn eq(&self, o: &Self) -> bool {
+        self.cmp(o) == std::cmp::Ordering::Equal
+    }
+}
+
+impl Eq for EventKey {}
 
 /// An arrived update waiting in the FedBuff buffer.
 struct BufEntry {
@@ -76,13 +131,29 @@ struct BufEntry {
 /// The runner's mutable simulation state — everything a checkpoint must
 /// capture beyond the global model and the record stream.
 struct AsyncState {
-    /// One slot per client (index == client id).
+    /// In-flight slots. Full fan-out: one per client, index == client id.
+    /// Sampled (`fleet.sample = k`): `min(k, n)` slots over a rotating
+    /// client set.
     inflight: Vec<InFlight>,
+    /// The event queue: min-heap over (finish, client, slot). NOT
+    /// serialized — rebuilt from `inflight` on resume.
+    queue: std::collections::BinaryHeap<std::cmp::Reverse<EventKey>>,
     /// Global params by version, for every version still referenced by an
     /// in-flight dispatch or a buffered update (GC'd as references drop).
     versions: std::collections::BTreeMap<usize, Vec<f32>>,
     /// FedBuff's pending arrivals (always empty for FedAsync).
     buffer: Vec<BufEntry>,
+    /// Sampled mode only: how many sampling draws have been made — the
+    /// pure-hash tag of the next draw, so sampling needs no RNG state.
+    seq: u64,
+    /// Sampled mode only: each previously-sampled client's next iteration
+    /// index (absent = 0), so a re-sampled client's data stream continues
+    /// where it left off.
+    iters: std::collections::BTreeMap<usize, usize>,
+    /// Clients whose uploads churn discarded since the last aggregation;
+    /// drained into [`RoundRecord::dropped`] (and therefore always empty
+    /// at the post-aggregation checkpoint seam).
+    dropped: Vec<usize>,
 }
 
 impl AsyncState {
@@ -97,15 +168,30 @@ impl AsyncState {
         self.versions.retain(|v, _| live.contains(v));
     }
 
-    /// The earliest-finishing in-flight client — ties break by client id,
-    /// the deterministic event order the module doc promises.
-    fn next_event(&self) -> usize {
-        self.inflight
-            .iter()
-            .enumerate()
-            .min_by(|(ca, a), (cb, b)| a.finish.total_cmp(&b.finish).then(ca.cmp(cb)))
-            .map(|(c, _)| c)
-            .expect("async runner with an empty fleet")
+    /// Enqueue slot `slot`'s current dispatch.
+    fn push_event(&mut self, slot: usize) {
+        let f = &self.inflight[slot];
+        self.queue.push(std::cmp::Reverse(EventKey {
+            finish: f.finish,
+            client: f.client,
+            slot,
+        }));
+    }
+
+    /// The earliest-finishing in-flight slot — O(log n), ties break by
+    /// client id, the deterministic event order the module doc promises.
+    /// The popped slot MUST be re-dispatched (re-pushed) before the next
+    /// pop to keep the one-entry-per-slot invariant.
+    fn pop_event(&mut self) -> usize {
+        self.queue.pop().expect("async runner with an empty fleet").0.slot
+    }
+
+    /// Rebuild the queue from scratch (after construction or resume).
+    fn rebuild_queue(&mut self) {
+        self.queue.clear();
+        for slot in 0..self.inflight.len() {
+            self.push_event(slot);
+        }
     }
 
     /// Serialize for `Checkpoint::async_state`. f32 params ride JSON f64
@@ -113,17 +199,16 @@ impl AsyncState {
     /// round-trip Display preserves every f64), so resumed state is
     /// bit-identical.
     fn to_json(&self, mode: &AsyncMode) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("mode", Json::Str(mode_tag(mode).to_string())),
             (
                 "inflight",
                 Json::Arr(
                     self.inflight
                         .iter()
-                        .enumerate()
-                        .map(|(client, f)| {
+                        .map(|f| {
                             Json::obj(vec![
-                                ("client", Json::Num(client as f64)),
+                                ("client", Json::Num(f.client as f64)),
                                 ("iter", Json::Num(f.iter as f64)),
                                 ("version", Json::Num(f.version as f64)),
                                 ("finish", Json::Num(f.finish)),
@@ -163,13 +248,47 @@ impl AsyncState {
                         .collect(),
                 ),
             ),
-        ])
+        ];
+        // Omit-at-default: full fan-out snapshots stay bitwise-identical
+        // to the pre-sampling schema.
+        if self.seq > 0 {
+            fields.push(("seq", Json::Num(self.seq as f64)));
+        }
+        if !self.iters.is_empty() {
+            fields.push((
+                "iters",
+                Json::Arr(
+                    self.iters
+                        .iter()
+                        .map(|(&c, &i)| {
+                            Json::obj(vec![
+                                ("client", Json::Num(c as f64)),
+                                ("iter", Json::Num(i as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
+        if !self.dropped.is_empty() {
+            fields.push((
+                "dropped",
+                Json::Arr(self.dropped.iter().map(|&c| Json::Num(c as f64)).collect()),
+            ));
+        }
+        Json::obj(fields)
     }
 
     /// Rebuild from a checkpoint snapshot. In-flight *outcomes* are not
     /// stored — they re-execute deterministically from the recorded start
-    /// version and iteration tag.
-    fn from_json(j: &Json, ctx: &FleetCtx, mode: &AsyncMode) -> anyhow::Result<AsyncState> {
+    /// version and iteration tag; `doomed` verdicts are likewise
+    /// recomputed (pure functions of the stored dispatch facts).
+    fn from_json(
+        j: &Json,
+        ctx: &FleetCtx,
+        cfg: &ServerCfg,
+        mode: &AsyncMode,
+    ) -> anyhow::Result<AsyncState> {
         let got = j.s("mode")?;
         anyhow::ensure!(
             got == mode_tag(mode),
@@ -177,27 +296,41 @@ impl AsyncState {
             mode_tag(mode)
         );
         let n = ctx.n_clients();
-        let mut inflight: Vec<Option<InFlight>> = (0..n).map(|_| None).collect();
+        let slots = if cfg.sample == 0 { n } else { cfg.sample.min(n) };
+        let mut inflight: Vec<InFlight> = Vec::with_capacity(slots);
+        let mut seen = std::collections::BTreeSet::new();
         for f in j.arr("inflight")? {
             let client = f.u("client")?;
             anyhow::ensure!(client < n, "async state: in-flight client {client} out of range");
-            anyhow::ensure!(
-                inflight[client].is_none(),
-                "async state: client {client} in flight twice"
-            );
-            inflight[client] = Some(InFlight {
-                iter: f.u("iter")?,
+            anyhow::ensure!(seen.insert(client), "async state: client {client} in flight twice");
+            let iter = f.u("iter")?;
+            let finish = f.f("finish")?;
+            inflight.push(InFlight {
+                client,
+                iter,
                 version: f.u("version")?,
-                finish: f.f("finish")?,
+                finish,
                 plan: full_model_plan(ctx, client),
                 outcome: None,
+                doomed: is_doomed(ctx, cfg, client, iter, finish),
             });
         }
-        let inflight: Vec<InFlight> = inflight
-            .into_iter()
-            .enumerate()
-            .map(|(c, f)| f.ok_or_else(|| anyhow::anyhow!("async state: client {c} not in flight")))
-            .collect::<anyhow::Result<_>>()?;
+        anyhow::ensure!(
+            inflight.len() == slots,
+            "async state: {} in-flight slots, the runner wants {slots}",
+            inflight.len()
+        );
+        if cfg.sample == 0 {
+            // Full fan-out: slot s holds client s (the legacy layout —
+            // and what to_json always wrote).
+            for (s, f) in inflight.iter().enumerate() {
+                anyhow::ensure!(
+                    f.client == s,
+                    "async state: full fan-out slot {s} holds client {}",
+                    f.client
+                );
+            }
+        }
         let mut versions = std::collections::BTreeMap::new();
         for v in j.arr("versions")? {
             let params = json_to_f32s(v.req("params")?, "version params")?;
@@ -224,7 +357,32 @@ impl AsyncState {
                 },
             });
         }
-        let state = AsyncState { inflight, versions, buffer };
+        let seq = j.get("seq").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        let mut iters = std::collections::BTreeMap::new();
+        if let Some(arr) = j.get("iters").and_then(|v| v.as_arr()) {
+            for e in arr {
+                iters.insert(e.u("client")?, e.u("iter")?);
+            }
+        }
+        let mut dropped = Vec::new();
+        if let Some(arr) = j.get("dropped").and_then(|v| v.as_arr()) {
+            for e in arr {
+                dropped.push(
+                    e.as_f64()
+                        .ok_or_else(|| anyhow::anyhow!("async state: dropped entry not a number"))?
+                        as usize,
+                );
+            }
+        }
+        let mut state = AsyncState {
+            inflight,
+            queue: std::collections::BinaryHeap::new(),
+            versions,
+            buffer,
+            seq,
+            iters,
+            dropped,
+        };
         for f in &state.inflight {
             anyhow::ensure!(
                 state.versions.contains_key(&f.version),
@@ -240,6 +398,7 @@ impl AsyncState {
                 ctx.manifest.param_count
             );
         }
+        state.rebuild_queue();
         Ok(state)
     }
 }
@@ -267,8 +426,40 @@ fn json_to_f32s(j: &Json, what: &str) -> anyhow::Result<Vec<f32>> {
         .collect()
 }
 
+/// Will this dispatch's upload be discarded? Pure in (config, client,
+/// iter, finish): the client departs or churns offline before its upload
+/// lands, or the per-iteration dropout draw hits.
+fn is_doomed(ctx: &FleetCtx, cfg: &ServerCfg, client: usize, iter: usize, finish: f64) -> bool {
+    ctx.fleet.departed(client, finish)
+        || cfg.churn.is_some_and(|c| {
+            !c.online(cfg.seed, client, finish) || c.dropout_hits(cfg.seed, client, iter as u64)
+        })
+}
+
+/// Draw the next sampled client: a pure function of (seed, seq) rejecting
+/// clients currently in flight. `busy.len() < n` always holds (there are
+/// at most `min(sample, n) - 1` other slots).
+fn sample_client(
+    seed: u64,
+    seq: u64,
+    n: usize,
+    busy: &std::collections::BTreeSet<usize>,
+) -> usize {
+    let mut s = seed ^ 0x5A3F1E ^ seq.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut rng = Rng::new(crate::util::rng::splitmix64(&mut s));
+    loop {
+        let c = rng.below(n);
+        if !busy.contains(&c) {
+            return c;
+        }
+    }
+}
+
 /// Dispatch a fresh full-model work order for `client` at simulated time
-/// `now`, starting from the current global (`version`).
+/// `now`, starting from the current global (`version`). The dispatch
+/// starts no earlier than the client's trace arrival window, and its
+/// transfers are priced by the client's own links when the trace
+/// provides them.
 fn dispatch(
     ctx: &FleetCtx,
     m: &Manifest,
@@ -281,13 +472,11 @@ fn dispatch(
     let plan = full_model_plan(ctx, client);
     let cov = plan.mask.tensor_coverage();
     let (down, up) = plan_payload_bytes(m, &plan, &cov);
-    InFlight {
-        iter,
-        version,
-        finish: now + cfg.comm.client_total_secs(plan.est_time, down, up),
-        plan,
-        outcome: None,
-    }
+    let start = ctx.fleet.start_at(client, now);
+    let comm = ctx.client_comm(cfg.comm, client);
+    let finish = start + comm.client_total_secs(plan.est_time, down, up);
+    let doomed = is_doomed(ctx, cfg, client, iter, finish);
+    InFlight { client, iter, version, finish, plan, outcome: None, doomed }
 }
 
 /// Execute every not-yet-materialized in-flight dispatch. When all of
@@ -306,8 +495,10 @@ fn execute_pending(
     coordinator: &mut dyn TrainSession,
     pool: ExecPool<'_>,
 ) -> anyhow::Result<()> {
+    // Doomed dispatches are never materialized — their uploads are
+    // discarded at the event, so executing them would be wasted compute.
     let pending: Vec<usize> = (0..state.inflight.len())
-        .filter(|&c| state.inflight[c].outcome.is_none())
+        .filter(|&c| state.inflight[c].outcome.is_none() && !state.inflight[c].doomed)
         .collect();
     let Some(&first) = pending.first() else {
         return Ok(());
@@ -364,10 +555,18 @@ pub fn run_experiment_async(
     anyhow::ensure!(cfg.eval_every > 0, "eval_every must be >= 1");
     anyhow::ensure!(ctx.n_clients() > 0, "async runner needs at least one client");
     anyhow::ensure!(
-        ds.clients.len() == ctx.n_clients(),
+        ds.n_clients() == ctx.n_clients(),
         "dataset holds {} clients, fleet has {}",
-        ds.clients.len(),
+        ds.n_clients(),
         ctx.n_clients()
+    );
+    let n = ctx.n_clients();
+    let sampled = cfg.sample != 0;
+    let slots = if sampled { cfg.sample.min(n) } else { n };
+    anyhow::ensure!(
+        ctx.fleet.lazy.is_none() || sampled,
+        "a lazy fleet needs fleet.sample > 0 — a full fan-out would materialize \
+         all {n} clients' state"
     );
     let prox_mu = strategy.prox_mu();
 
@@ -408,7 +607,7 @@ pub fn run_experiment_async(
                     );
                     None
                 }
-                j => Some(AsyncState::from_json(j, ctx, &spec.mode)?),
+                j => Some(AsyncState::from_json(j, ctx, cfg, &spec.mode)?),
             };
             (r.global, r.prior_records, r.sim_time, r.completed, restored)
         }
@@ -421,16 +620,39 @@ pub fn run_experiment_async(
         ),
     };
 
-    // Fresh start: every client dispatched at t = 0 from version 0.
+    // Fresh start: fill every slot at t = 0 from version 0 — the whole
+    // fleet in full fan-out mode, `slots` distinct sampled clients when
+    // `fleet.sample` caps the in-flight set.
     let mut state = match restored {
         Some(s) => s,
         None => {
             let mut versions = std::collections::BTreeMap::new();
             versions.insert(completed, global.clone());
-            let inflight = (0..ctx.n_clients())
-                .map(|client| dispatch(ctx, &m, cfg, client, 0, completed, sim_time))
-                .collect();
-            AsyncState { inflight, versions, buffer: Vec::new() }
+            let mut st = AsyncState {
+                inflight: Vec::with_capacity(slots),
+                queue: std::collections::BinaryHeap::new(),
+                versions,
+                buffer: Vec::new(),
+                seq: 0,
+                iters: std::collections::BTreeMap::new(),
+                dropped: Vec::new(),
+            };
+            if sampled {
+                let mut busy = std::collections::BTreeSet::new();
+                for _ in 0..slots {
+                    let client = sample_client(cfg.seed, st.seq, n, &busy);
+                    st.seq += 1;
+                    busy.insert(client);
+                    st.iters.insert(client, 1);
+                    st.inflight.push(dispatch(ctx, &m, cfg, client, 0, completed, sim_time));
+                }
+            } else {
+                for client in 0..n {
+                    st.inflight.push(dispatch(ctx, &m, cfg, client, 0, completed, sim_time));
+                }
+            }
+            st.rebuild_queue();
+            st
         }
     };
 
@@ -443,6 +665,11 @@ pub fn run_experiment_async(
     };
 
     // -- the event loop -------------------------------------------------------
+    // Churn-starvation guard: a fleet whose every upload is being
+    // discarded (all clients departed, dropout ~ 1) would loop forever —
+    // bail after enough consecutive drops to cycle the in-flight set
+    // several times over.
+    let mut starved = 0usize;
     while completed < cfg.rounds {
         execute_pending(
             engine,
@@ -454,67 +681,82 @@ pub fn run_experiment_async(
             coordinator.as_mut(),
             ExecPool::from_cfg(cfg.exec_threads, dedicated_pool.as_ref()),
         )?;
-        let client = state.next_event();
-        let now = state.inflight[client].finish;
-        let arrived_version = state.inflight[client].version;
-        let next_iter = state.inflight[client].iter + 1;
-        let outcome = state.inflight[client]
-            .outcome
-            .take()
-            .expect("pending dispatches were just executed");
-        let arrived_plan = state.inflight[client].plan.clone();
+        let slot = state.pop_event();
+        let client = state.inflight[slot].client;
+        let now = state.inflight[slot].finish;
+        let arrived_version = state.inflight[slot].version;
+        let next_iter = state.inflight[slot].iter + 1;
 
         // What (if anything) this arrival aggregates: the folded updates'
-        // (plans, outcomes, staleness).
-        let aggregated = match spec.mode {
-            AsyncMode::PerArrival { alpha, staleness_exp } => {
-                let staleness = completed - arrived_version;
-                let w = alpha / (1.0 + staleness as f64).powf(staleness_exp);
-                for k in 0..global.len() {
-                    global[k] =
-                        ((1.0 - w) * global[k] as f64 + w * outcome.params[k] as f64) as f32;
+        // (plans, outcomes, staleness). A doomed arrival aggregates
+        // nothing — its upload is discarded deterministically.
+        let aggregated = if state.inflight[slot].doomed {
+            state.dropped.push(client);
+            starved += 1;
+            anyhow::ensure!(
+                starved <= 4 * state.inflight.len() + 16,
+                "churn starved the runner: {starved} consecutive uploads discarded \
+                 (every in-flight client departed or offline) — loosen fleet.churn.* \
+                 or the trace's availability windows"
+            );
+            None
+        } else {
+            starved = 0;
+            let outcome = state.inflight[slot]
+                .outcome
+                .take()
+                .expect("pending dispatches were just executed");
+            let arrived_plan = state.inflight[slot].plan.clone();
+            match spec.mode {
+                AsyncMode::PerArrival { alpha, staleness_exp } => {
+                    let staleness = completed - arrived_version;
+                    let w = alpha / (1.0 + staleness as f64).powf(staleness_exp);
+                    for k in 0..global.len() {
+                        global[k] =
+                            ((1.0 - w) * global[k] as f64 + w * outcome.params[k] as f64) as f32;
+                    }
+                    Some((vec![arrived_plan], vec![outcome], vec![staleness]))
                 }
-                Some((vec![arrived_plan], vec![outcome], vec![staleness]))
-            }
-            AsyncMode::Buffered { k, staleness_exp } => {
-                state.buffer.push(BufEntry {
-                    version: arrived_version,
-                    plan: arrived_plan,
-                    outcome,
-                });
-                if state.buffer.len() >= k.max(1) {
-                    // Data-size-weighted average of the buffered deltas
-                    // (update − its dispatch-version global), folded in
-                    // arrival order. A nonzero `staleness_exp` further
-                    // decays each delta's weight by `1/(1+s)^exp`; the
-                    // guard keeps exp=0 bitwise-identical to the plain
-                    // average (no spurious `powf` in the weights).
-                    let mut acc = vec![0.0f64; global.len()];
-                    let mut wsum = 0.0f64;
-                    let mut plans = Vec::with_capacity(state.buffer.len());
-                    let mut outs = Vec::with_capacity(state.buffer.len());
-                    let mut stale = Vec::with_capacity(state.buffer.len());
-                    for b in state.buffer.drain(..) {
-                        let staleness = completed - b.version;
-                        let mut weight = ds.clients[b.outcome.client].num_samples as f64;
-                        if staleness_exp != 0.0 {
-                            weight /= (1.0 + staleness as f64).powf(staleness_exp);
+                AsyncMode::Buffered { k, staleness_exp } => {
+                    state.buffer.push(BufEntry {
+                        version: arrived_version,
+                        plan: arrived_plan,
+                        outcome,
+                    });
+                    if state.buffer.len() >= k.max(1) {
+                        // Data-size-weighted average of the buffered deltas
+                        // (update − its dispatch-version global), folded in
+                        // arrival order. A nonzero `staleness_exp` further
+                        // decays each delta's weight by `1/(1+s)^exp`; the
+                        // guard keeps exp=0 bitwise-identical to the plain
+                        // average (no spurious `powf` in the weights).
+                        let mut acc = vec![0.0f64; global.len()];
+                        let mut wsum = 0.0f64;
+                        let mut plans = Vec::with_capacity(state.buffer.len());
+                        let mut outs = Vec::with_capacity(state.buffer.len());
+                        let mut stale = Vec::with_capacity(state.buffer.len());
+                        for b in state.buffer.drain(..) {
+                            let staleness = completed - b.version;
+                            let mut weight = ds.client(b.outcome.client).num_samples as f64;
+                            if staleness_exp != 0.0 {
+                                weight /= (1.0 + staleness as f64).powf(staleness_exp);
+                            }
+                            let start = &state.versions[&b.version];
+                            for i in 0..acc.len() {
+                                acc[i] += weight * (b.outcome.params[i] as f64 - start[i] as f64);
+                            }
+                            wsum += weight;
+                            stale.push(staleness);
+                            plans.push(b.plan);
+                            outs.push(b.outcome);
                         }
-                        let start = &state.versions[&b.version];
-                        for i in 0..acc.len() {
-                            acc[i] += weight * (b.outcome.params[i] as f64 - start[i] as f64);
+                        for i in 0..global.len() {
+                            global[i] = (global[i] as f64 + acc[i] / wsum) as f32;
                         }
-                        wsum += weight;
-                        stale.push(staleness);
-                        plans.push(b.plan);
-                        outs.push(b.outcome);
+                        Some((plans, outs, stale))
+                    } else {
+                        None
                     }
-                    for i in 0..global.len() {
-                        global[i] = (global[i] as f64 + acc[i] / wsum) as f32;
-                    }
-                    Some((plans, outs, stale))
-                } else {
-                    None
                 }
             }
         };
@@ -569,16 +811,36 @@ pub fn run_experiment_async(
                     &stale.iter().map(|&s| s as f64).collect::<Vec<_>>(),
                 )),
                 max_staleness: Some(stale.iter().copied().max().unwrap_or(0) as f64),
+                dropped: std::mem::take(&mut state.dropped),
             };
             observer.on_round_end(&record);
             records.push(record);
         }
 
-        // Re-dispatch the arrived client from the (possibly just updated)
-        // global — FedAsync hands back the freshly mixed model, FedBuff
-        // the current (post-flush, if this arrival flushed) one.
+        // Re-fill the slot from the (possibly just updated) global —
+        // FedAsync hands back the freshly mixed model, FedBuff the
+        // current (post-flush, if this arrival flushed) one. Full
+        // fan-out re-dispatches the same client; sampled mode draws a
+        // fresh one (the finished client rejoins the eligible pool).
         state.versions.entry(completed).or_insert_with(|| global.clone());
-        state.inflight[client] = dispatch(ctx, &m, cfg, client, next_iter, completed, now);
+        let (next_client, iter) = if sampled {
+            let busy: std::collections::BTreeSet<usize> = state
+                .inflight
+                .iter()
+                .enumerate()
+                .filter(|&(s, _)| s != slot)
+                .map(|(_, f)| f.client)
+                .collect();
+            let c = sample_client(cfg.seed, state.seq, n, &busy);
+            state.seq += 1;
+            let it = state.iters.get(&c).copied().unwrap_or(0);
+            state.iters.insert(c, it + 1);
+            (c, it)
+        } else {
+            (client, next_iter)
+        };
+        state.inflight[slot] = dispatch(ctx, &m, cfg, next_client, iter, completed, now);
+        state.push_event(slot);
         state.gc_versions();
 
         // An aggregation closed this event: expose the checkpoint seam.

@@ -314,6 +314,7 @@ mod tests {
                 client_secs: vec![(0, 4.0), (1, 10.0)],
                 mean_staleness: None,
                 max_staleness: None,
+                dropped: vec![],
             };
             o.on_round_end(&r);
         }

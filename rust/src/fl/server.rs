@@ -61,6 +61,17 @@ pub struct ServerCfg {
     /// that point is exactly what a crashed process would have left on
     /// disk. `None` = run to completion.
     pub halt_after: Option<usize>,
+    /// Asynchronous modes only: cap on concurrently in-flight clients
+    /// (`fleet.sample`). 0 = legacy full fan-out (every client always in
+    /// flight). Lazy fleets require a cap — it bounds materialized client
+    /// state to O(sample) instead of O(n).
+    pub sample: usize,
+    /// Experiment seed — all churn/sampling draws are pure functions of
+    /// (seed, client, round/time), so there is no RNG state to checkpoint.
+    pub seed: u64,
+    /// Availability churn ([`crate::fleet::ChurnCfg`]); `None` = every
+    /// client always reachable (legacy behavior, bitwise unchanged).
+    pub churn: Option<crate::fleet::ChurnCfg>,
 }
 
 impl Default for ServerCfg {
@@ -71,6 +82,9 @@ impl Default for ServerCfg {
             comm: CommModel::default(),
             exec_threads: 0,
             halt_after: None,
+            sample: 0,
+            seed: 0,
+            churn: None,
         }
     }
 }
@@ -101,6 +115,10 @@ pub struct RoundRecord {
     pub mean_staleness: Option<f64>,
     /// Worst staleness among this record's aggregated updates.
     pub max_staleness: Option<f64>,
+    /// Clients whose participation was lost to availability churn this
+    /// round (offline at round start, mid-round dropout, or departed
+    /// before their async upload landed). Empty when churn is off.
+    pub dropped: Vec<usize>,
 }
 
 impl RoundRecord {
@@ -282,7 +300,7 @@ pub(crate) fn execute_plan(
     m: &Manifest,
     plan: &ClientPlan,
 ) -> anyhow::Result<ClientOutcome> {
-    let client = &inp.ds.clients[plan.client];
+    let client = inp.ds.client(plan.client);
     let elem_mask = plan.mask.expand(m);
     let mut p = inp.global.to_vec();
     let mut sq: Vec<f64> = Vec::new();
@@ -485,6 +503,18 @@ pub fn run_experiment_from(
     let m = engine.manifest().clone();
     anyhow::ensure!(m.param_count == ctx.manifest.param_count, "engine/ctx manifest mismatch");
     anyhow::ensure!(cfg.eval_every > 0, "eval_every must be >= 1");
+    anyhow::ensure!(
+        ctx.fleet.lazy.is_none(),
+        "lazy fleets need an asynchronous strategy — {} plans whole synchronous rounds, \
+         which would materialize every client",
+        strategy.name()
+    );
+    anyhow::ensure!(
+        cfg.sample == 0,
+        "fleet.sample caps in-flight clients in asynchronous modes; {} runs synchronously \
+         (its strategy already decides per-round participation)",
+        strategy.name()
+    );
     let (mut global, mut records, mut sim_time, start_round) = match resume {
         Some(r) => {
             anyhow::ensure!(
@@ -532,8 +562,46 @@ pub fn run_experiment_from(
 
     for round in start_round..cfg.rounds {
         // -- plan ---------------------------------------------------------
-        let plans: Vec<ClientPlan> = strategy.plan_round(round, ctx, &global);
-        anyhow::ensure!(!plans.is_empty(), "strategy planned an empty round");
+        let all_plans: Vec<ClientPlan> = strategy.plan_round(round, ctx, &global);
+        anyhow::ensure!(!all_plans.is_empty(), "strategy planned an empty round");
+
+        // Availability churn. Clients outside their availability window at
+        // round start never participate (the server's oracle knows up
+        // front, so they cost no wall-clock); a mid-round dropout is only
+        // discovered at the round deadline — the failed client's planned
+        // wall time still gates the round, but its update is lost. Both
+        // decisions are pure functions of (seed, client, round/time).
+        let mut dropped: Vec<usize> = Vec::new();
+        let mut dropped_secs = 0.0f64;
+        let plans: Vec<ClientPlan> = if cfg.churn.is_some() || !ctx.fleet.windows.is_empty() {
+            let t0 = sim_time;
+            all_plans
+                .into_iter()
+                .filter(|p| {
+                    let away = !ctx.fleet.arrived(p.client, t0)
+                        || ctx.fleet.departed(p.client, t0)
+                        || cfg.churn.is_some_and(|c| !c.online(cfg.seed, p.client, t0));
+                    if away {
+                        dropped.push(p.client);
+                        return false;
+                    }
+                    let hit = cfg
+                        .churn
+                        .is_some_and(|c| c.dropout_hits(cfg.seed, p.client, round as u64));
+                    if hit {
+                        let cov = p.mask.tensor_coverage();
+                        let (down, up) = plan_payload_bytes(&m, p, &cov);
+                        dropped_secs =
+                            dropped_secs.max(cfg.comm.client_total_secs(p.est_time, down, up));
+                        dropped.push(p.client);
+                        return false;
+                    }
+                    true
+                })
+                .collect()
+        } else {
+            all_plans
+        };
         observer.on_round_start(round, &plans);
 
         // -- execute + aggregate: outcomes stream back in plan order and
@@ -545,7 +613,9 @@ pub fn run_experiment_from(
         let mut tensor_masks: Vec<Vec<f32>> = Vec::with_capacity(plans.len());
         let mut losses = Vec::with_capacity(plans.len());
         let mut coverage = Vec::with_capacity(plans.len());
-        let mut round_secs = 0.0f64;
+        // A dropped client's timeout gates the round exactly like a
+        // participant would have (0.0 when churn is off — bitwise no-op).
+        let mut round_secs = dropped_secs;
         let mut client_secs = Vec::with_capacity(plans.len());
         execute_plans_streaming(
             engine,
@@ -582,12 +652,16 @@ pub fn run_experiment_from(
                 Ok(())
             },
         )?;
-        let new_global = agg.finish(&global);
+        // A round churn emptied out leaves the global model untouched; the
+        // strategy sees no feedback (there is none to see).
+        let new_global = if plans.is_empty() { global.clone() } else { agg.finish(&global) };
 
         // -- observe -------------------------------------------------------
-        fb.global_importance = global_importance(&m, &new_global, &global, ctx.lr);
-        let o1 = o1_bias(&tensor_masks);
-        strategy.observe(&fb, ctx);
+        let o1 = if tensor_masks.is_empty() { 0.0 } else { o1_bias(&tensor_masks) };
+        if !plans.is_empty() {
+            fb.global_importance = global_importance(&m, &new_global, &global, ctx.lr);
+            strategy.observe(&fb, ctx);
+        }
 
         sim_time += round_secs;
         global = new_global;
@@ -619,6 +693,7 @@ pub fn run_experiment_from(
             client_secs,
             mean_staleness: None,
             max_staleness: None,
+            dropped,
         };
         observer.on_round_end(&record);
         records.push(record);

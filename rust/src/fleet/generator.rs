@@ -1,0 +1,192 @@
+//! Registered fleet generators: distributions over device types that a
+//! [`super::LazyFleet`] samples from by pure per-client hashing.
+//!
+//! Three families are registered (the `fleet=lazyN[:gen]` spec):
+//!
+//! - `uniform` (the default) — equal weight over the registered sim device
+//!   types ([`DeviceProfile::sim_types`]).
+//! - `cat:w1,w2,...` — categorical over those same types, one weight per
+//!   type in registry order.
+//! - `lognormal:mu:sigma` — a lognormal compute-scale spectrum, quantized
+//!   into [`LOGNORMAL_BUCKETS`] equiprobable device types at the quantile
+//!   midpoints `exp(mu + sigma * Phi^-1((i + 0.5) / B))`. Quantization
+//!   keeps the type set finite (one timing model per type backs a lazy
+//!   fleet) while preserving the distribution's shape and tails.
+
+use crate::timing::DeviceProfile;
+
+/// Bucket count for the quantized lognormal scale spectrum.
+pub const LOGNORMAL_BUCKETS: usize = 32;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum GeneratorSpec {
+    /// Uniform over [`DeviceProfile::sim_types`].
+    Uniform,
+    /// Categorical over [`DeviceProfile::sim_types`], one weight per type.
+    Categorical(Vec<f64>),
+    /// Lognormal compute scale: `ln(scale) ~ Normal(mu, sigma)`.
+    LogNormal { mu: f64, sigma: f64 },
+}
+
+impl GeneratorSpec {
+    /// Parse the generator suffix of a `lazyN:<gen>` fleet spec.
+    pub fn parse(s: &str) -> anyhow::Result<GeneratorSpec> {
+        if s == "uniform" {
+            return Ok(GeneratorSpec::Uniform);
+        }
+        if let Some(rest) = s.strip_prefix("cat:") {
+            let weights: Vec<f64> = rest
+                .split(',')
+                .map(|w| {
+                    w.parse::<f64>()
+                        .map_err(|_| anyhow::anyhow!("bad categorical weight {w:?} in {s:?}"))
+                })
+                .collect::<anyhow::Result<_>>()?;
+            let spec = GeneratorSpec::Categorical(weights);
+            spec.weights()?;
+            return Ok(spec);
+        }
+        if let Some(rest) = s.strip_prefix("lognormal:") {
+            let (mu, sigma) = rest
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("lognormal generator needs mu:sigma, got {s:?}"))?;
+            let mu: f64 = mu.parse().map_err(|_| anyhow::anyhow!("bad lognormal mu in {s:?}"))?;
+            let sigma: f64 =
+                sigma.parse().map_err(|_| anyhow::anyhow!("bad lognormal sigma in {s:?}"))?;
+            anyhow::ensure!(
+                mu.is_finite() && sigma.is_finite() && sigma > 0.0,
+                "lognormal generator needs finite mu and sigma > 0, got {s:?}"
+            );
+            return Ok(GeneratorSpec::LogNormal { mu, sigma });
+        }
+        anyhow::bail!("unknown fleet generator {s:?} (uniform | cat:w1,w2,... | lognormal:mu:sigma)")
+    }
+
+    /// Exact inverse of [`GeneratorSpec::parse`] (specs round-trip through
+    /// config snapshots as labels).
+    pub fn label(&self) -> String {
+        match self {
+            GeneratorSpec::Uniform => "uniform".to_string(),
+            GeneratorSpec::Categorical(w) => {
+                let ws: Vec<String> = w.iter().map(|x| x.to_string()).collect();
+                format!("cat:{}", ws.join(","))
+            }
+            GeneratorSpec::LogNormal { mu, sigma } => format!("lognormal:{mu}:{sigma}"),
+        }
+    }
+
+    /// The finite device-type set this generator draws from.
+    pub fn device_types(&self) -> Vec<DeviceProfile> {
+        match self {
+            GeneratorSpec::Uniform | GeneratorSpec::Categorical(_) => DeviceProfile::sim_types(),
+            GeneratorSpec::LogNormal { mu, sigma } => (0..LOGNORMAL_BUCKETS)
+                .map(|i| {
+                    let p = (i as f64 + 0.5) / LOGNORMAL_BUCKETS as f64;
+                    let scale = (mu + sigma * norm_quantile(p)).exp();
+                    DeviceProfile::new(&format!("lognorm{i:02}"), scale, super::DEFAULT_POWER_WATTS)
+                })
+                .collect(),
+        }
+    }
+
+    /// Per-type sampling weights, aligned with [`GeneratorSpec::device_types`].
+    pub fn weights(&self) -> anyhow::Result<Vec<f64>> {
+        match self {
+            GeneratorSpec::Uniform => Ok(vec![1.0; DeviceProfile::sim_types().len()]),
+            GeneratorSpec::LogNormal { .. } => Ok(vec![1.0; LOGNORMAL_BUCKETS]),
+            GeneratorSpec::Categorical(w) => {
+                let n_types = DeviceProfile::sim_types().len();
+                anyhow::ensure!(
+                    w.len() == n_types,
+                    "categorical generator needs {n_types} weights (one per registered device type), got {}",
+                    w.len()
+                );
+                anyhow::ensure!(
+                    w.iter().all(|x| x.is_finite() && *x >= 0.0),
+                    "categorical weights must be finite and >= 0"
+                );
+                anyhow::ensure!(w.iter().sum::<f64>() > 0.0, "categorical weights sum to zero");
+                Ok(w.clone())
+            }
+        }
+    }
+}
+
+/// erf via the Abramowitz–Stegun 7.1.26 rational approximation
+/// (|error| < 1.5e-7) — deterministic and dependency-free.
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+fn norm_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+/// Inverse standard-normal CDF by bisection of [`norm_cdf`]: ~60
+/// halvings of [-8, 8] pin x to ~1e-16, and monotonicity of the bracket
+/// is exact regardless of the erf approximation's absolute error.
+fn norm_quantile(p: f64) -> f64 {
+    debug_assert!(p > 0.0 && p < 1.0);
+    let (mut lo, mut hi) = (-8.0f64, 8.0f64);
+    for _ in 0..60 {
+        let mid = 0.5 * (lo + hi);
+        if norm_cdf(mid) < p {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_label_round_trip() {
+        for s in ["uniform", "cat:1,2,3,4", "lognormal:0:0.5", "lognormal:-0.25:1"] {
+            let g = GeneratorSpec::parse(s).unwrap();
+            assert_eq!(g.label(), s);
+            assert_eq!(GeneratorSpec::parse(&g.label()).unwrap(), g);
+        }
+        assert!(GeneratorSpec::parse("zipf:2").is_err());
+        assert!(GeneratorSpec::parse("cat:1,2").is_err(), "wrong weight count");
+        assert!(GeneratorSpec::parse("cat:1,-2,3,4").is_err(), "negative weight");
+        assert!(GeneratorSpec::parse("lognormal:0:-1").is_err(), "sigma <= 0");
+    }
+
+    #[test]
+    fn norm_quantile_is_monotone_and_symmetric() {
+        let mut last = f64::NEG_INFINITY;
+        for i in 1..100 {
+            let q = norm_quantile(i as f64 / 100.0);
+            assert!(q > last, "quantile not monotone at {i}");
+            last = q;
+        }
+        assert!(norm_quantile(0.5).abs() < 1e-6);
+        assert!((norm_quantile(0.975) - 1.96).abs() < 1e-2);
+        assert!((norm_quantile(0.025) + norm_quantile(0.975)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lognormal_types_follow_the_distribution() {
+        let g = GeneratorSpec::LogNormal { mu: 0.0, sigma: 0.5 };
+        let types = g.device_types();
+        assert_eq!(types.len(), LOGNORMAL_BUCKETS);
+        // Scales are positive, increasing, and median-centered at e^mu = 1.
+        let mut last = 0.0;
+        for t in &types {
+            assert!(t.scale > last);
+            last = t.scale;
+        }
+        let mid = 0.5 * (types[15].scale + types[16].scale);
+        assert!((mid.ln()).abs() < 0.05, "median scale {mid}");
+    }
+}

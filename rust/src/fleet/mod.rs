@@ -1,0 +1,447 @@
+//! First-class fleet modeling: who the clients are, how they are wired,
+//! and when they are reachable.
+//!
+//! A fleet used to be a small eagerly-allocated `Vec<DeviceProfile>` with
+//! three hardcoded shapes. This module promotes it to a subsystem:
+//!
+//! - [`ClientProfile`] enriches a compute-scale [`DeviceProfile`] with
+//!   per-client up/down link rates, an [`EnergyClass`], and a one-shot
+//!   availability window.
+//! - [`GeneratorSpec`] (see [`generator`]) draws profiles from registered
+//!   distributions — uniform / categorical over the registered device
+//!   types, or a lognormal compute-scale spectrum.
+//! - [`trace`] loads schema-validated JSONL traces; parsed profiles are
+//!   inlined into the run manifest so resume never re-reads the file.
+//! - [`LazyFleet`] + [`FleetView`] yield profiles by client id as a pure
+//!   function of (seed, generator spec): a million-client fleet allocates
+//!   O(device types), not O(n).
+//! - [`ChurnCfg`] models availability churn (periodic on/off windows and
+//!   mid-round dropout) as pure draws over (seed, client, iteration) —
+//!   deterministic across thread counts and kill/resume by construction.
+//!
+//! Layering: `fleet` depends only on [`crate::timing`] and [`crate::util`].
+
+pub mod generator;
+pub mod trace;
+
+pub use generator::GeneratorSpec;
+
+use crate::timing::DeviceProfile;
+use crate::util::json::Json;
+use crate::util::rng::splitmix64;
+
+/// Power draw assumed for devices that do not declare one — the
+/// [`crate::config::FleetSpec::Scales`] shorthand and trace lines without a
+/// `power_watts` key. Custom powers come from a generator's device types or
+/// a JSONL trace; [`crate::metrics::energy`] reports reflect whichever was
+/// used.
+pub const DEFAULT_POWER_WATTS: f64 = 12.0;
+
+/// How a device is powered — trace metadata surfaced to energy reporting
+/// and (eventually) availability policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnergyClass {
+    Mains,
+    Battery,
+}
+
+impl EnergyClass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EnergyClass::Mains => "mains",
+            EnergyClass::Battery => "battery",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<EnergyClass> {
+        match s {
+            "mains" => Ok(EnergyClass::Mains),
+            "battery" => Ok(EnergyClass::Battery),
+            other => anyhow::bail!("unknown energy class {other:?} (mains | battery)"),
+        }
+    }
+}
+
+/// One client of a fleet: compute profile plus the per-client link and
+/// availability attributes a bare [`DeviceProfile`] cannot carry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClientProfile {
+    pub device: DeviceProfile,
+    /// Uplink rate in Mbit/s; 0 = inherit the experiment-wide comm model.
+    pub up_mbps: f64,
+    /// Downlink rate in Mbit/s; 0 = inherit the experiment-wide comm model.
+    pub down_mbps: f64,
+    pub energy: EnergyClass,
+    /// Sim time at which the client first comes online.
+    pub arrive_secs: f64,
+    /// Sim time at which the client permanently departs; uploads arriving
+    /// at or after this instant are discarded. `f64::INFINITY` = never.
+    pub depart_secs: f64,
+}
+
+impl ClientProfile {
+    /// A plain always-available, fleet-wide-comm client around `device`.
+    pub fn plain(device: DeviceProfile) -> ClientProfile {
+        ClientProfile {
+            device,
+            up_mbps: 0.0,
+            down_mbps: 0.0,
+            energy: EnergyClass::Mains,
+            arrive_secs: 0.0,
+            depart_secs: f64::INFINITY,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.device.name.is_empty(), "client profile with an empty device name");
+        anyhow::ensure!(
+            self.device.scale.is_finite() && self.device.scale > 0.0,
+            "device {:?}: scale must be finite and > 0 (got {})",
+            self.device.name,
+            self.device.scale
+        );
+        anyhow::ensure!(
+            self.device.power_watts.is_finite() && self.device.power_watts >= 0.0,
+            "device {:?}: power_watts must be finite and >= 0",
+            self.device.name
+        );
+        for (key, v) in [("up_mbps", self.up_mbps), ("down_mbps", self.down_mbps)] {
+            anyhow::ensure!(
+                v.is_finite() && v >= 0.0,
+                "device {:?}: {key} must be finite and >= 0",
+                self.device.name
+            );
+        }
+        anyhow::ensure!(
+            self.arrive_secs.is_finite() && self.arrive_secs >= 0.0,
+            "device {:?}: arrive must be finite and >= 0",
+            self.device.name
+        );
+        anyhow::ensure!(
+            self.depart_secs > self.arrive_secs,
+            "device {:?}: depart ({}) must be > arrive ({})",
+            self.device.name,
+            self.depart_secs,
+            self.arrive_secs
+        );
+        Ok(())
+    }
+
+    /// Serialize; attributes at their defaults are omitted so plain
+    /// profiles stay one short line (and `depart: inf` never needs to be
+    /// spelled in JSON, which has no infinity literal).
+    pub fn to_json(&self) -> Json {
+        let mut kv: Vec<(String, Json)> = vec![
+            ("name".into(), Json::Str(self.device.name.clone())),
+            ("scale".into(), Json::Num(self.device.scale)),
+        ];
+        if self.device.power_watts != DEFAULT_POWER_WATTS {
+            kv.push(("power_watts".into(), Json::Num(self.device.power_watts)));
+        }
+        if self.up_mbps != 0.0 {
+            kv.push(("up_mbps".into(), Json::Num(self.up_mbps)));
+        }
+        if self.down_mbps != 0.0 {
+            kv.push(("down_mbps".into(), Json::Num(self.down_mbps)));
+        }
+        if self.energy != EnergyClass::Mains {
+            kv.push(("energy".into(), Json::Str(self.energy.as_str().into())));
+        }
+        if self.arrive_secs != 0.0 {
+            kv.push(("arrive".into(), Json::Num(self.arrive_secs)));
+        }
+        if self.depart_secs.is_finite() {
+            kv.push(("depart".into(), Json::Num(self.depart_secs)));
+        }
+        Json::Obj(kv)
+    }
+
+    /// Parse one profile object (a trace line or a manifest snapshot
+    /// entry). Unknown keys are rejected — traces are hand-written, and a
+    /// typo'd `dpart` silently meaning "never departs" is the failure mode
+    /// schemas exist to prevent.
+    pub fn from_json(j: &Json) -> anyhow::Result<ClientProfile> {
+        let obj = match j {
+            Json::Obj(kv) => kv,
+            _ => anyhow::bail!("client profile must be a JSON object"),
+        };
+        for (k, _) in obj {
+            anyhow::ensure!(
+                matches!(
+                    k.as_str(),
+                    "name" | "scale" | "power_watts" | "up_mbps" | "down_mbps" | "energy"
+                        | "arrive" | "depart"
+                ),
+                "client profile: unknown key {k:?} (name scale power_watts up_mbps down_mbps energy arrive depart)"
+            );
+        }
+        let f = |k: &str, d: f64| j.get(k).and_then(Json::as_f64).unwrap_or(d);
+        let p = ClientProfile {
+            device: DeviceProfile::new(
+                j.get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow::anyhow!("client profile: missing \"name\""))?,
+                j.get("scale")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow::anyhow!("client profile: missing numeric \"scale\""))?,
+                f("power_watts", DEFAULT_POWER_WATTS),
+            ),
+            up_mbps: f("up_mbps", 0.0),
+            down_mbps: f("down_mbps", 0.0),
+            energy: match j.get("energy").and_then(Json::as_str) {
+                Some(s) => EnergyClass::parse(s)?,
+                None => EnergyClass::Mains,
+            },
+            arrive_secs: f("arrive", 0.0),
+            depart_secs: f("depart", f64::INFINITY),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+/// Yields client profiles by id on demand. Eager fleets are backed by a
+/// `Vec`; [`LazyFleet`] derives each profile as a pure function of
+/// (seed, generator spec, client id), so holding a view of a 1M-client
+/// fleet costs O(device types) memory.
+pub trait FleetView {
+    fn len(&self) -> usize;
+    fn profile(&self, client: usize) -> ClientProfile;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl FleetView for Vec<ClientProfile> {
+    fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+    fn profile(&self, client: usize) -> ClientProfile {
+        self[client].clone()
+    }
+}
+
+/// A generated fleet that never materializes: client `c`'s device type is
+/// a pure hash of `(seed, c)` bucketed by the generator's type weights.
+#[derive(Clone, Debug)]
+pub struct LazyFleet {
+    pub n: usize,
+    pub seed: u64,
+    pub spec: GeneratorSpec,
+    /// The generator's device types (small: O(types)).
+    types: Vec<DeviceProfile>,
+    /// Cumulative normalized type weights, same length as `types`.
+    cum: Vec<f64>,
+}
+
+impl LazyFleet {
+    pub fn new(n: usize, spec: GeneratorSpec, seed: u64) -> anyhow::Result<LazyFleet> {
+        anyhow::ensure!(n > 0, "lazy fleet must have at least one client");
+        let types = spec.device_types();
+        let weights = spec.weights()?;
+        debug_assert_eq!(types.len(), weights.len());
+        let total: f64 = weights.iter().sum();
+        let mut acc = 0.0;
+        let cum = weights
+            .iter()
+            .map(|w| {
+                acc += w / total;
+                acc
+            })
+            .collect();
+        Ok(LazyFleet { n, seed, spec, types, cum })
+    }
+
+    pub fn device_types(&self) -> &[DeviceProfile] {
+        &self.types
+    }
+
+    /// Index into [`LazyFleet::device_types`] for one client — pure in
+    /// (seed, client), so any subset of the fleet can be inspected in any
+    /// order with identical results.
+    pub fn type_of(&self, client: usize) -> usize {
+        let u = unit_draw(self.seed ^ 0xF1EE7_1A2, client as u64, 0);
+        self.cum.partition_point(|&c| c <= u).min(self.types.len() - 1)
+    }
+}
+
+impl FleetView for LazyFleet {
+    fn len(&self) -> usize {
+        self.n
+    }
+    fn profile(&self, client: usize) -> ClientProfile {
+        ClientProfile::plain(self.types[self.type_of(client)].clone())
+    }
+}
+
+/// Availability churn, swept through `fleet.churn.*` keys. All decisions
+/// are pure hashes of (experiment seed, client, iteration/time): no RNG
+/// state to checkpoint, so bitwise kill/resume and thread-count
+/// determinism hold by construction.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChurnCfg {
+    /// Probability that a finished update is discarded — the client died
+    /// mid-round after training started. In `[0, 1)`.
+    pub dropout: f64,
+    /// Availability cycle length in sim seconds; 0 = always online.
+    pub period_secs: f64,
+    /// Fraction of each cycle a client spends online, `(0, 1]`.
+    pub avail_frac: f64,
+}
+
+impl ChurnCfg {
+    pub fn active(&self) -> bool {
+        self.dropout > 0.0 || (self.period_secs > 0.0 && self.avail_frac < 1.0)
+    }
+
+    /// Does churn discard this client's `iter`-th update on arrival?
+    pub fn dropout_hits(&self, seed: u64, client: usize, iter: u64) -> bool {
+        self.dropout > 0.0 && unit_draw(seed ^ 0xD0D0_0001, client as u64, iter) < self.dropout
+    }
+
+    /// Is the client inside its availability window at sim time `t`? Each
+    /// client's cycle gets a deterministic phase offset so the fleet's
+    /// availability is staggered rather than synchronized.
+    pub fn online(&self, seed: u64, client: usize, t: f64) -> bool {
+        if self.period_secs <= 0.0 || self.avail_frac >= 1.0 {
+            return true;
+        }
+        let phase = unit_draw(seed ^ 0xD0D0_0002, client as u64, 0) * self.period_secs;
+        let pos = (t + phase) % self.period_secs;
+        pos < self.avail_frac * self.period_secs
+    }
+}
+
+/// Per-client fleet attributes the round loops consume, alongside the
+/// timing models. `Default` is the classic eager fleet: no lazy view, no
+/// per-client links or windows.
+#[derive(Clone, Debug, Default)]
+pub struct FleetInfo {
+    /// `Some` = generated lazy fleet; timing models are per device *type*
+    /// and clients map onto them via [`LazyFleet::type_of`]. `None` =
+    /// eager fleet with one timing model per client.
+    pub lazy: Option<LazyFleet>,
+    /// Per-client `(up_mbps, down_mbps)` link overrides from a trace;
+    /// empty = every client uses the experiment-wide comm model.
+    pub links: Vec<(f64, f64)>,
+    /// Per-client one-shot `(arrive_secs, depart_secs)` windows from a
+    /// trace; empty = every client is present for the whole run.
+    pub windows: Vec<(f64, f64)>,
+}
+
+impl FleetInfo {
+    /// Earliest time `client` can start a dispatch at or after `now`.
+    pub fn start_at(&self, client: usize, now: f64) -> f64 {
+        match self.windows.get(client) {
+            Some(&(arrive, _)) => now.max(arrive),
+            None => now,
+        }
+    }
+
+    /// Has `client` permanently departed by sim time `t`?
+    pub fn departed(&self, client: usize, t: f64) -> bool {
+        matches!(self.windows.get(client), Some(&(_, depart)) if t >= depart)
+    }
+
+    /// Had `client` arrived by sim time `t`?
+    pub fn arrived(&self, client: usize, t: f64) -> bool {
+        match self.windows.get(client) {
+            Some(&(arrive, _)) => t >= arrive,
+            None => true,
+        }
+    }
+}
+
+/// A uniform draw in `[0, 1)` as a pure function of `(seed, a, b)` — the
+/// substrate for every churn/sampling decision. Two rounds of the
+/// splitmix64 finalizer give full avalanche over the xor-folded words.
+pub fn unit_draw(seed: u64, a: u64, b: u64) -> f64 {
+    let mut s = seed
+        ^ a.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ b.wrapping_mul(0xD1B5_4A32_D192_ED03);
+    let _ = splitmix64(&mut s);
+    let z = splitmix64(&mut s);
+    (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_draw_is_pure_and_uniform_ish() {
+        assert_eq!(unit_draw(7, 3, 9), unit_draw(7, 3, 9));
+        let n: u64 = 10_000;
+        let mean = (0..n).map(|i| unit_draw(42, i, 0)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+        for i in 0..n {
+            let u = unit_draw(42, i, 0);
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn profile_json_round_trips() {
+        let mut p = ClientProfile::plain(DeviceProfile::new("phone", 0.5, 3.0));
+        p.up_mbps = 2.0;
+        p.energy = EnergyClass::Battery;
+        p.arrive_secs = 100.0;
+        p.depart_secs = 5000.0;
+        let back = ClientProfile::from_json(&p.to_json()).unwrap();
+        assert_eq!(p, back);
+        // Defaults are omitted and restored.
+        let plain = ClientProfile::plain(DeviceProfile::new("d", 1.0, DEFAULT_POWER_WATTS));
+        let j = plain.to_json();
+        for omitted in ["power_watts", "up_mbps", "down_mbps", "energy", "arrive", "depart"] {
+            assert!(j.get(omitted).is_none(), "{omitted} should be omitted at default");
+        }
+        assert_eq!(ClientProfile::from_json(&j).unwrap(), plain);
+    }
+
+    #[test]
+    fn profile_json_rejects_garbage() {
+        let bad = Json::parse("{\"name\":\"d\",\"scale\":1,\"dpart\":5}").unwrap();
+        assert!(ClientProfile::from_json(&bad).unwrap_err().to_string().contains("unknown key"));
+        let nan_scale = Json::parse("{\"name\":\"d\",\"scale\":-1}").unwrap();
+        assert!(ClientProfile::from_json(&nan_scale).is_err());
+        let inverted = Json::parse("{\"name\":\"d\",\"scale\":1,\"arrive\":10,\"depart\":5}").unwrap();
+        assert!(ClientProfile::from_json(&inverted).is_err());
+    }
+
+    #[test]
+    fn lazy_fleet_is_pure_and_small() {
+        let lf = LazyFleet::new(1_000_000, GeneratorSpec::Uniform, 9).unwrap();
+        assert_eq!(lf.len(), 1_000_000);
+        assert!(lf.device_types().len() <= 8);
+        // Pure per-id: re-querying and cross-instance agreement.
+        let lf2 = LazyFleet::new(1_000_000, GeneratorSpec::Uniform, 9).unwrap();
+        for c in [0usize, 1, 17, 999_999] {
+            assert_eq!(lf.type_of(c), lf2.type_of(c));
+            assert_eq!(lf.profile(c), lf.profile(c));
+        }
+        // All types are reachable.
+        let mut seen = vec![0usize; lf.device_types().len()];
+        for c in 0..4096 {
+            seen[lf.type_of(c)] += 1;
+        }
+        assert!(seen.iter().all(|&s| s > 0), "type histogram {seen:?}");
+    }
+
+    #[test]
+    fn churn_draws_are_deterministic() {
+        let ch = ChurnCfg { dropout: 0.3, period_secs: 1000.0, avail_frac: 0.6 };
+        assert!(ch.active());
+        let hits: Vec<bool> = (0..64).map(|i| ch.dropout_hits(5, 3, i)).collect();
+        assert_eq!(hits, (0..64).map(|i| ch.dropout_hits(5, 3, i)).collect::<Vec<_>>());
+        let frac = (0..1000).filter(|&i| ch.dropout_hits(5, i as usize, 0)).count();
+        assert!((200..400).contains(&frac), "dropout rate {frac}/1000");
+        // Availability covers roughly avail_frac of each client's timeline.
+        let online = (0..1000).filter(|&k| ch.online(5, 7, k as f64)).count();
+        assert!((500..700).contains(&online), "online {online}/1000");
+        // Inactive config is always online and never drops.
+        let off = ChurnCfg { dropout: 0.0, period_secs: 0.0, avail_frac: 1.0 };
+        assert!(!off.active());
+        assert!(off.online(5, 7, 123.0));
+        assert!(!off.dropout_hits(5, 7, 1));
+    }
+}

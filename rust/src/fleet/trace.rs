@@ -1,0 +1,89 @@
+//! JSONL fleet traces: one [`ClientProfile`] object per line.
+//!
+//! Schema (per line; omitted keys take their documented defaults):
+//!
+//! ```json
+//! {"name": "pixel6", "scale": 0.5, "power_watts": 4.0,
+//!  "up_mbps": 10, "down_mbps": 40, "energy": "battery",
+//!  "arrive": 0, "depart": 86400}
+//! ```
+//!
+//! Traces are external inputs, so loading is strict: unknown keys,
+//! non-finite numbers, inverted windows, and empty files are all errors
+//! with line numbers. The parsed profiles are inlined into the run
+//! manifest at build time ([`crate::sim::Experiment::build`]), so resuming
+//! a trace-driven run never re-reads — or even requires — the file.
+
+use super::ClientProfile;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Load and validate a JSONL trace. Blank lines and `#` comment lines are
+/// skipped.
+pub fn load_trace(path: &Path) -> anyhow::Result<Vec<ClientProfile>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("reading fleet trace {}: {e}", path.display()))?;
+    parse_trace(&text).map_err(|e| anyhow::anyhow!("fleet trace {}: {e}", path.display()))
+}
+
+/// Parse trace text (separated from I/O for tests and future remote
+/// sources).
+pub fn parse_trace(text: &str) -> anyhow::Result<Vec<ClientProfile>> {
+    let mut profiles = Vec::new();
+    for (idx, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let j = Json::parse(line).map_err(|e| anyhow::anyhow!("line {}: {e}", idx + 1))?;
+        let p = ClientProfile::from_json(&j).map_err(|e| anyhow::anyhow!("line {}: {e}", idx + 1))?;
+        profiles.push(p);
+    }
+    anyhow::ensure!(!profiles.is_empty(), "trace contains no client profiles");
+    Ok(profiles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::{EnergyClass, DEFAULT_POWER_WATTS};
+
+    #[test]
+    fn parses_a_trace_with_comments_and_defaults() {
+        let text = "# two-device fleet\n\
+                    {\"name\":\"edge\",\"scale\":2.0,\"power_watts\":8.5}\n\
+                    \n\
+                    {\"name\":\"phone\",\"scale\":0.5,\"up_mbps\":5,\"energy\":\"battery\",\"depart\":3600}\n";
+        let ps = parse_trace(text).unwrap();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].device.name, "edge");
+        assert_eq!(ps[0].device.power_watts, 8.5);
+        assert_eq!(ps[0].up_mbps, 0.0);
+        assert!(ps[0].depart_secs.is_infinite());
+        assert_eq!(ps[1].energy, EnergyClass::Battery);
+        assert_eq!(ps[1].device.power_watts, DEFAULT_POWER_WATTS);
+        assert_eq!(ps[1].depart_secs, 3600.0);
+    }
+
+    #[test]
+    fn rejects_bad_lines_with_line_numbers() {
+        let err = parse_trace("{\"name\":\"a\",\"scale\":1}\nnot json\n").unwrap_err().to_string();
+        assert!(err.contains("line 2"), "{err}");
+        let err = parse_trace("{\"name\":\"a\",\"scale\":0}\n").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(parse_trace("\n# only comments\n").is_err());
+    }
+
+    #[test]
+    fn load_trace_reads_a_file() {
+        let dir = std::env::temp_dir().join(format!("fleet_trace_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("fleet.jsonl");
+        std::fs::write(&path, "{\"name\":\"a\",\"scale\":1.5}\n").unwrap();
+        let ps = load_trace(&path).unwrap();
+        assert_eq!(ps.len(), 1);
+        assert_eq!(ps[0].device.scale, 1.5);
+        assert!(load_trace(&dir.join("missing.jsonl")).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -17,6 +17,7 @@
 //! * [`window`] — FedEL's sliding window state machine.
 //! * [`data`] — synthetic non-iid datasets (Dirichlet partitioning).
 //! * [`fl`] — server loop, masked aggregation, bias diagnostics.
+//! * [`fleet`] — client profiles, trace/generator fleets, availability churn.
 //! * [`strategies`] — FedEL + the seven baselines.
 //! * [`metrics`] — time-to-accuracy, memory & energy models.
 //! * [`sim`] — fleet construction and end-to-end experiment runner.
@@ -27,6 +28,7 @@ pub mod config;
 pub mod data;
 pub mod elastic;
 pub mod fl;
+pub mod fleet;
 pub mod manifest;
 pub mod metrics;
 pub mod report;

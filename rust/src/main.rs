@@ -6,6 +6,7 @@
 //!   runs     — the persistent run store: list / show / resume / compare / gc
 //!   campaign — grids of stored runs: run / status / report
 //!   inspect  — dump a model manifest summary
+//!   fleet    — summarize the device fleet a config would run with
 //!   list     — list AOT-compiled models under artifacts/
 //!
 //! Examples:
@@ -62,12 +63,15 @@ fn main() {
         Some("runs") => cmd_runs(&args),
         Some("campaign") => cmd_campaign(&args),
         Some("inspect") => cmd_inspect(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("list") => cmd_list(&args),
         other => {
             if let Some(o) = other {
                 eprintln!("unknown subcommand {o:?}");
             }
-            eprintln!("usage: fedel <train|compare|runs|campaign|inspect|list> [--key value ...]");
+            eprintln!(
+                "usage: fedel <train|compare|runs|campaign|inspect|fleet|list> [--key value ...]"
+            );
             Err(anyhow::anyhow!("bad usage"))
         }
     }
@@ -304,6 +308,15 @@ fn cmd_runs(args: &Args) -> anyhow::Result<()> {
                     f.final_loss,
                     fedel::util::fmt_hours(f.sim_total_secs),
                     f.params.digest
+                );
+            }
+            // Availability churn leaves its mark on the records; surface
+            // the total so an unexpectedly quiet run is visible at a glance.
+            let dropped: usize = m.records.iter().map(|r| r.dropped.len()).sum();
+            if dropped > 0 {
+                println!(
+                    "churn: {dropped} dropped client uploads across {} rounds",
+                    m.records.len()
                 );
             }
             // Async runs (fedasync/fedbuff) record per-aggregation
@@ -686,6 +699,71 @@ fn cmd_inspect(args: &Args) -> anyhow::Result<()> {
         ]);
     }
     t.print();
+    Ok(())
+}
+
+/// Summarize the device fleet a config would run with — device-type
+/// histogram (sampled for lazy fleets), trace links/windows, and churn —
+/// without building an engine or a dataset.
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    let cfg = ExperimentCfg::from_args(args)?;
+    args.check_unused()?;
+    let mut hist: std::collections::BTreeMap<String, usize> = std::collections::BTreeMap::new();
+    if !cfg.fleet_trace.is_empty() || !cfg.fleet_profiles.is_empty() {
+        let profiles = if cfg.fleet_profiles.is_empty() {
+            fedel::fleet::trace::load_trace(Path::new(&cfg.fleet_trace))?
+        } else {
+            cfg.fleet_profiles.clone()
+        };
+        let linked = profiles.iter().filter(|p| p.up_mbps > 0.0 || p.down_mbps > 0.0).count();
+        let windowed = profiles
+            .iter()
+            .filter(|p| p.arrive_secs > 0.0 || p.depart_secs.is_finite())
+            .count();
+        println!(
+            "trace fleet: {} clients ({linked} with own links, {windowed} with availability windows)",
+            profiles.len()
+        );
+        for p in &profiles {
+            *hist.entry(p.device.name.clone()).or_default() += 1;
+        }
+    } else if let fedel::config::FleetSpec::Lazy { n, generator } = &cfg.fleet {
+        use fedel::fleet::FleetView;
+        let lf = fedel::fleet::LazyFleet::new(*n, generator.clone(), cfg.seed)?;
+        let sample = (*n).min(4096);
+        println!(
+            "lazy fleet: {n} clients over {} device types (histogram from the first {sample})",
+            lf.device_types().len()
+        );
+        for c in 0..sample {
+            *hist.entry(lf.profile(c).device.name).or_default() += 1;
+        }
+    } else {
+        let fleet = fedel::sim::fleet::build_fleet(&cfg.fleet, cfg.seed)?;
+        println!("fleet: {} clients", fleet.len());
+        for d in &fleet {
+            *hist.entry(d.name.clone()).or_default() += 1;
+        }
+    }
+    let mut t = Table::new("device types", &["device", "clients"]);
+    for (name, count) in &hist {
+        t.row(vec![name.clone(), format!("{count}")]);
+    }
+    t.print();
+    let churn = fedel::fleet::ChurnCfg {
+        dropout: cfg.churn_dropout,
+        period_secs: cfg.churn_period_secs,
+        avail_frac: cfg.churn_avail_frac,
+    };
+    if churn.active() {
+        println!(
+            "churn: dropout {} / period {}s / availability {}",
+            churn.dropout, churn.period_secs, churn.avail_frac
+        );
+    }
+    if cfg.fleet_sample > 0 {
+        println!("async in-flight cap (fleet.sample): {}", cfg.fleet_sample);
+    }
     Ok(())
 }
 

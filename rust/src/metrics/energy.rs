@@ -83,6 +83,7 @@ mod tests {
                 client_secs: times,
                 mean_staleness: None,
                 max_staleness: None,
+                dropped: vec![],
             }],
             sim_total_secs: round_secs,
             final_acc: 0.0,

@@ -497,6 +497,7 @@ mod tests {
                 client_secs: vec![],
                 mean_staleness: None,
                 max_staleness: None,
+                dropped: vec![],
             })
             .collect();
         ExperimentResult {

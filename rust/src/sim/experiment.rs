@@ -11,8 +11,9 @@
 //! still-checkpointed execution, bitwise-identical to a run that was
 //! never interrupted.
 
-use crate::config::ExperimentCfg;
+use crate::config::{ExperimentCfg, FleetSpec};
 use crate::data::FedDataset;
+use crate::fleet::{ChurnCfg, FleetInfo, LazyFleet};
 use crate::fl::observer::{ConsoleObserver, NullObserver, ObserverSet, RoundObserver, SelectionTrace};
 use crate::fl::server::{run_experiment_from, ExperimentResult, ResumeState, ServerCfg};
 use crate::manifest::tests_support::chain_manifest;
@@ -65,20 +66,53 @@ fn build_pjrt_engine(cfg: &ExperimentCfg) -> anyhow::Result<Box<dyn Engine>> {
 }
 
 impl Experiment {
-    pub fn build(cfg: ExperimentCfg) -> anyhow::Result<Experiment> {
+    pub fn build(mut cfg: ExperimentCfg) -> anyhow::Result<Experiment> {
         let engine = build_engine(&cfg)?;
         let manifest: Manifest = engine.manifest().clone();
-        let fleet = build_fleet(&cfg.fleet, cfg.seed);
+
+        // Trace-driven fleets: read the JSONL file ONCE and snapshot the
+        // profiles into the config (and hence the run manifest), so resume
+        // and reporting never depend on the external file again.
+        if !cfg.fleet_trace.is_empty() && cfg.fleet_profiles.is_empty() {
+            cfg.fleet_profiles =
+                crate::fleet::trace::load_trace(std::path::Path::new(&cfg.fleet_trace))?;
+        }
+
+        // Three fleet shapes:
+        // * trace profiles — eager devices + per-client links/windows;
+        // * lazy generator — `fleet` holds one DeviceProfile PER TYPE and
+        //   clients map onto types on demand (O(types), not O(n));
+        // * classic specs — eager per-client devices, unchanged.
+        let (fleet, fleet_info): (Vec<DeviceProfile>, FleetInfo) =
+            if !cfg.fleet_profiles.is_empty() {
+                let devices = cfg.fleet_profiles.iter().map(|p| p.device.clone()).collect();
+                let links =
+                    cfg.fleet_profiles.iter().map(|p| (p.up_mbps, p.down_mbps)).collect();
+                let windows = cfg
+                    .fleet_profiles
+                    .iter()
+                    .map(|p| (p.arrive_secs, p.depart_secs))
+                    .collect();
+                (devices, FleetInfo { lazy: None, links, windows })
+            } else if let FleetSpec::Lazy { n, generator } = &cfg.fleet {
+                let lf = LazyFleet::new(*n, generator.clone(), cfg.seed)?;
+                let types = lf.device_types().to_vec();
+                (types, FleetInfo { lazy: Some(lf), links: Vec::new(), windows: Vec::new() })
+            } else {
+                (build_fleet(&cfg.fleet, cfg.seed)?, FleetInfo::default())
+            };
         anyhow::ensure!(!fleet.is_empty(), "empty fleet");
 
         // Calibrate the timing model so the slowest device's full round
         // matches the paper's wall-clock (DESIGN.md §4), then T_th =
         // factor x the FASTEST device's full-model round (Sec. 5.1).
+        // For lazy fleets `fleet` is the device TYPE set; TimingModel is
+        // linear in scale, so one model per type covers every client.
         let tcfg = if cfg.slowest_round_secs > 0.0 {
             TimingCfg::calibrated(
                 &manifest,
                 cfg.local_steps,
-                slowest(&fleet).scale,
+                slowest(&fleet)?.scale,
                 cfg.slowest_round_secs,
             )
         } else {
@@ -88,22 +122,25 @@ impl Experiment {
             .iter()
             .map(|d| TimingModel::profile(&manifest, d, &tcfg))
             .collect();
-        let fast_tm = TimingModel::profile(&manifest, fastest(&fleet), &tcfg);
+        let fast_tm = TimingModel::profile(&manifest, fastest(&fleet)?, &tcfg);
         let t_th = cfg.t_th_factor * fast_tm.full_round_time(&manifest, cfg.local_steps);
 
-        let dataset = FedDataset::build(
-            &manifest,
-            fleet.len(),
-            cfg.alpha,
-            cfg.eval_batches,
-            cfg.seed,
-        );
+        let n_clients = match &fleet_info.lazy {
+            Some(lf) => lf.n,
+            None => fleet.len(),
+        };
+        let dataset = if fleet_info.lazy.is_some() {
+            FedDataset::build_lazy(&manifest, n_clients, cfg.alpha, cfg.eval_batches, cfg.seed)
+        } else {
+            FedDataset::build(&manifest, n_clients, cfg.alpha, cfg.eval_batches, cfg.seed)
+        };
         let ctx = FleetCtx {
             manifest,
             timings,
             t_th,
             local_steps: cfg.local_steps,
             lr: cfg.lr,
+            fleet: fleet_info,
         };
         Ok(Experiment { cfg, engine, fleet, dataset, ctx })
     }
@@ -143,12 +180,20 @@ impl Experiment {
             self.cfg.seed,
             &self.cfg.strategy_params,
         )?;
+        let churn = ChurnCfg {
+            dropout: self.cfg.churn_dropout,
+            period_secs: self.cfg.churn_period_secs,
+            avail_frac: self.cfg.churn_avail_frac,
+        };
         let server_cfg = ServerCfg {
             rounds: self.cfg.rounds,
             eval_every: self.cfg.eval_every,
             comm: self.cfg.comm_model(),
             exec_threads: self.cfg.exec_threads,
             halt_after: self.cfg.halt_after,
+            sample: self.cfg.fleet_sample,
+            seed: self.cfg.seed,
+            churn: churn.active().then_some(churn),
         };
         let mut console = self.cfg.verbose.then(|| ConsoleObserver::new(&name));
         let mut trace = self.cfg.record_selections.then(SelectionTrace::default);

@@ -1,6 +1,7 @@
 //! Fleet construction: per-client device profiles.
 
 use crate::config::FleetSpec;
+use crate::fleet::{FleetView, LazyFleet, DEFAULT_POWER_WATTS};
 use crate::timing::DeviceProfile;
 use crate::util::rng::Rng;
 
@@ -10,9 +11,14 @@ use crate::util::rng::Rng;
 ///   (2x slower), clients 5-9 are Jetson Orin (the base profile).
 /// * `Large(n)` — the paper's simulation: each client is a uniformly
 ///   random draw from the four device types {1, 1/2, 1/3, 1/4}x.
-/// * `Scales` — explicit per-client scale factors.
-pub fn build_fleet(spec: &FleetSpec, seed: u64) -> Vec<DeviceProfile> {
-    match spec {
+/// * `Scales` — explicit per-client scale factors (power defaults to
+///   [`DEFAULT_POWER_WATTS`]; custom powers come from a generator or a
+///   `fleet.trace` file).
+/// * `Lazy` — materializes the generated fleet eagerly; million-client
+///   runs should go through [`crate::fleet::LazyFleet`] instead (the
+///   experiment builder does).
+pub fn build_fleet(spec: &FleetSpec, seed: u64) -> anyhow::Result<Vec<DeviceProfile>> {
+    Ok(match spec {
         FleetSpec::Small10 => {
             let mut v = vec![DeviceProfile::xavier(); 5];
             v.extend(vec![DeviceProfile::orin(); 5]);
@@ -26,25 +32,41 @@ pub fn build_fleet(spec: &FleetSpec, seed: u64) -> Vec<DeviceProfile> {
         FleetSpec::Scales(scales) => scales
             .iter()
             .enumerate()
-            .map(|(i, &s)| DeviceProfile::new(&format!("dev{i}x{s}"), s, 12.0))
+            .map(|(i, &s)| DeviceProfile::new(&format!("dev{i}x{s}"), s, DEFAULT_POWER_WATTS))
             .collect(),
-    }
+        FleetSpec::Lazy { n, generator } => {
+            let lf = LazyFleet::new(*n, generator.clone(), seed)?;
+            (0..*n).map(|c| lf.profile(c).device).collect()
+        }
+    })
 }
 
-/// The fastest (smallest scale) device in a fleet.
-pub fn fastest(fleet: &[DeviceProfile]) -> &DeviceProfile {
-    fleet
-        .iter()
-        .min_by(|a, b| a.scale.partial_cmp(&b.scale).unwrap())
-        .expect("empty fleet")
+/// The fastest (smallest scale) device in a fleet. Errors on empty fleets
+/// and non-finite scales instead of panicking — fleet contents are user
+/// input (trace files, `--fleet` specs).
+pub fn fastest(fleet: &[DeviceProfile]) -> anyhow::Result<&DeviceProfile> {
+    extremum(fleet, "fastest", false)
 }
 
 /// The slowest (largest scale) device in a fleet.
-pub fn slowest(fleet: &[DeviceProfile]) -> &DeviceProfile {
-    fleet
-        .iter()
-        .max_by(|a, b| a.scale.partial_cmp(&b.scale).unwrap())
-        .expect("empty fleet")
+pub fn slowest(fleet: &[DeviceProfile]) -> anyhow::Result<&DeviceProfile> {
+    extremum(fleet, "slowest", true)
+}
+
+fn extremum<'f>(
+    fleet: &'f [DeviceProfile],
+    which: &str,
+    largest: bool,
+) -> anyhow::Result<&'f DeviceProfile> {
+    if let Some(bad) = fleet.iter().find(|d| !d.scale.is_finite()) {
+        anyhow::bail!("device {:?} has non-finite scale {}", bad.name, bad.scale);
+    }
+    let pick = if largest {
+        fleet.iter().max_by(|a, b| a.scale.total_cmp(&b.scale))
+    } else {
+        fleet.iter().min_by(|a, b| a.scale.total_cmp(&b.scale))
+    };
+    pick.ok_or_else(|| anyhow::anyhow!("cannot take the {which} device of an empty fleet"))
 }
 
 #[cfg(test)]
@@ -53,17 +75,17 @@ mod tests {
 
     #[test]
     fn small10_is_five_xavier_five_orin() {
-        let f = build_fleet(&FleetSpec::Small10, 0);
+        let f = build_fleet(&FleetSpec::Small10, 0).unwrap();
         assert_eq!(f.len(), 10);
         assert_eq!(f.iter().filter(|d| d.name == "xavier").count(), 5);
         assert_eq!(f.iter().filter(|d| d.name == "orin").count(), 5);
-        assert_eq!(fastest(&f).name, "orin");
-        assert_eq!(slowest(&f).name, "xavier");
+        assert_eq!(fastest(&f).unwrap().name, "orin");
+        assert_eq!(slowest(&f).unwrap().name, "xavier");
     }
 
     #[test]
     fn large_fleet_uses_all_four_types() {
-        let f = build_fleet(&FleetSpec::Large(100), 7);
+        let f = build_fleet(&FleetSpec::Large(100), 7).unwrap();
         assert_eq!(f.len(), 100);
         let mut names: Vec<&str> = f.iter().map(|d| d.name.as_str()).collect();
         names.sort();
@@ -73,16 +95,44 @@ mod tests {
 
     #[test]
     fn large_fleet_deterministic_per_seed() {
-        let a = build_fleet(&FleetSpec::Large(20), 3);
-        let b = build_fleet(&FleetSpec::Large(20), 3);
+        let a = build_fleet(&FleetSpec::Large(20), 3).unwrap();
+        let b = build_fleet(&FleetSpec::Large(20), 3).unwrap();
         let names = |f: &[DeviceProfile]| f.iter().map(|d| d.name.clone()).collect::<Vec<_>>();
         assert_eq!(names(&a), names(&b));
     }
 
     #[test]
     fn scales_spec_respected() {
-        let f = build_fleet(&FleetSpec::Scales(vec![1.0, 3.5]), 0);
+        let f = build_fleet(&FleetSpec::Scales(vec![1.0, 3.5]), 0).unwrap();
         assert_eq!(f.len(), 2);
         assert_eq!(f[1].scale, 3.5);
+        assert_eq!(f[0].power_watts, DEFAULT_POWER_WATTS);
+    }
+
+    #[test]
+    fn lazy_spec_materializes_matching_the_lazy_view() {
+        let spec = FleetSpec::parse("lazy64:lognormal:0:0.5").unwrap();
+        let f = build_fleet(&spec, 11).unwrap();
+        assert_eq!(f.len(), 64);
+        let FleetSpec::Lazy { n, generator } = &spec else { unreachable!() };
+        let lf = LazyFleet::new(*n, generator.clone(), 11).unwrap();
+        for (c, d) in f.iter().enumerate() {
+            assert_eq!(d.name, lf.profile(c).device.name);
+        }
+    }
+
+    // Regression: these used to panic (`expect("empty fleet")` /
+    // `partial_cmp().unwrap()` on NaN scales).
+    #[test]
+    fn empty_fleet_is_an_error_not_a_panic() {
+        assert!(fastest(&[]).unwrap_err().to_string().contains("empty fleet"));
+        assert!(slowest(&[]).is_err());
+    }
+
+    #[test]
+    fn nan_scale_is_an_error_not_a_panic() {
+        let f = vec![DeviceProfile::orin(), DeviceProfile::new("bad", f64::NAN, 1.0)];
+        assert!(fastest(&f).unwrap_err().to_string().contains("non-finite"));
+        assert!(slowest(&f).is_err());
     }
 }

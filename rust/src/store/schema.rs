@@ -365,7 +365,7 @@ impl CampaignManifest {
 /// Canonical [`RoundRecord`] serialization (manifests, JSONL logs, result
 /// dumps all use this one function).
 pub fn round_record_to_json(r: &RoundRecord) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("round", Json::Num(r.round as f64)),
         ("round_secs", Json::Num(r.round_secs)),
         ("sim_time", Json::Num(r.sim_time)),
@@ -386,7 +386,16 @@ pub fn round_record_to_json(r: &RoundRecord) -> Json {
                     .collect(),
             ),
         ),
-    ])
+    ];
+    // Omit-at-default: churn-free records keep the pre-churn schema
+    // byte-for-byte (and old records read back as "no drops").
+    if !r.dropped.is_empty() {
+        fields.push((
+            "dropped",
+            Json::Arr(r.dropped.iter().map(|&c| Json::Num(c as f64)).collect()),
+        ));
+    }
+    Json::obj(fields)
 }
 
 pub fn round_record_from_json(j: &Json) -> anyhow::Result<RoundRecord> {
@@ -425,6 +434,18 @@ pub fn round_record_from_json(j: &Json) -> anyhow::Result<RoundRecord> {
         client_secs,
         mean_staleness: eval("mean_staleness")?,
         max_staleness: eval("max_staleness")?,
+        dropped: match j.get("dropped") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("round record dropped not an array"))?
+                .iter()
+                .map(|c| {
+                    c.as_usize()
+                        .ok_or_else(|| anyhow::anyhow!("dropped client not a number"))
+                })
+                .collect::<anyhow::Result<_>>()?,
+        },
     })
 }
 
@@ -507,6 +528,7 @@ mod tests {
             client_secs: vec![(0, 10.125), (2, 100.25 + round as f64)],
             mean_staleness: eval.map(|_| 1.0 / 3.0),
             max_staleness: eval.map(|_| 2.0),
+            dropped: if round % 2 == 1 { vec![1, 4] } else { Vec::new() },
         }
     }
 
@@ -527,6 +549,15 @@ mod tests {
         }
         assert_eq!(a.mean_staleness.map(f64::to_bits), b.mean_staleness.map(f64::to_bits));
         assert_eq!(a.max_staleness.map(f64::to_bits), b.max_staleness.map(f64::to_bits));
+        assert_eq!(a.dropped, b.dropped);
+    }
+
+    #[test]
+    fn dropped_clients_stay_out_of_churn_free_records() {
+        let clean = round_record_to_json(&record(0, None));
+        assert!(clean.get("dropped").is_none());
+        let churned = round_record_to_json(&record(1, None));
+        assert_eq!(churned.req("dropped").unwrap().to_f64_vec().unwrap(), vec![1.0, 4.0]);
     }
 
     #[test]

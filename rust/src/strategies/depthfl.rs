@@ -14,7 +14,7 @@ pub struct DepthFl {
 /// Per-round cost of training the full prefix sub-model with exit `e`.
 pub(crate) fn prefix_round_time(ctx: &FleetCtx, client: usize, e: usize) -> f64 {
     let m = &ctx.manifest;
-    let tm = &ctx.timings[client];
+    let tm = ctx.timing(client);
     let mut bwd = 0.0;
     for b in 0..e {
         for t in m.body_tensors_of_block(b) {

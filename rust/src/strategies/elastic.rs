@@ -40,7 +40,7 @@ impl Strategy for ElasticFl {
                     order: &order,
                     importance: &imp,
                     budget,
-                    timing: &ctx.timings[client],
+                    timing: ctx.timing(client),
                 });
                 let mut mask = vec![0.0f32; k];
                 for &t in &sel.tensors {

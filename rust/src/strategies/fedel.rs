@@ -112,7 +112,7 @@ impl Strategy for FedEl {
                     order: &order,
                     importance: &imp_order,
                     budget,
-                    timing: &ctx.timings[client],
+                    timing: ctx.timing(client),
                 });
 
                 // Always train the exit head: without it the window's loss

@@ -28,7 +28,7 @@ impl Fiarse {
         let m = &ctx.manifest;
         let fractions = (0..ctx.n_clients())
             .map(|c| {
-                let tm = &ctx.timings[c];
+                let tm = ctx.timing(c);
                 let step_budget = ctx.t_th / ctx.local_steps as f64;
                 let fwd = tm.forward_time(m, m.num_blocks);
                 let chain: f64 = tm.tensors.iter().map(|t| t.t_g).sum();
@@ -42,7 +42,7 @@ impl Fiarse {
 
     fn round_time(ctx: &FleetCtx, client: usize, frac: f64) -> f64 {
         let m = &ctx.manifest;
-        let tm = &ctx.timings[client];
+        let tm = ctx.timing(client);
         let chain: f64 = tm.tensors.iter().map(|t| t.t_g).sum();
         let tw: f64 = tm.tensors.iter().map(|t| t.t_w).sum();
         (tm.forward_time(m, m.num_blocks) + chain + frac * tw) * ctx.local_steps as f64

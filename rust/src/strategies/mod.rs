@@ -79,17 +79,55 @@ pub const MIN_BUDGET_FRAC: f64 = 0.15;
 /// Immutable per-experiment context handed to strategies at build time.
 pub struct FleetCtx {
     pub manifest: Manifest,
-    /// One timing model per client (device heterogeneity lives here).
+    /// Timing models: one per client for eager fleets; one per device
+    /// *type* for lazy fleets (`fleet.lazy` maps clients onto them). Use
+    /// [`FleetCtx::timing`] rather than indexing directly.
     pub timings: Vec<TimingModel>,
     /// The runtime threshold T_th (seconds per round).
     pub t_th: f64,
     pub local_steps: usize,
     pub lr: f64,
+    /// Fleet-scale attributes: lazy view, per-client links, availability
+    /// windows. `Default::default()` = classic eager fleet.
+    pub fleet: crate::fleet::FleetInfo,
 }
 
 impl FleetCtx {
     pub fn n_clients(&self) -> usize {
-        self.timings.len()
+        match &self.fleet.lazy {
+            Some(lf) => lf.n,
+            None => self.timings.len(),
+        }
+    }
+
+    /// The timing model backing one client — per client for eager fleets,
+    /// per device type for lazy ones.
+    pub fn timing(&self, client: usize) -> &TimingModel {
+        match &self.fleet.lazy {
+            Some(lf) => &self.timings[lf.type_of(client)],
+            None => &self.timings[client],
+        }
+    }
+
+    /// The communication model one client's transfers are priced with:
+    /// the experiment-wide `base`, unless a trace gave this client its own
+    /// link rates (then those rates apply, inheriting `base`'s latency
+    /// when it has one).
+    pub fn client_comm(
+        &self,
+        base: crate::timing::CommModel,
+        client: usize,
+    ) -> crate::timing::CommModel {
+        match self.fleet.links.get(client) {
+            Some(&(up, down)) if up > 0.0 || down > 0.0 => {
+                let latency_secs = match base {
+                    crate::timing::CommModel::Bandwidth { latency_secs, .. } => latency_secs,
+                    crate::timing::CommModel::Constant(_) => 0.0,
+                };
+                crate::timing::CommModel::Bandwidth { up_mbps: up, down_mbps: down, latency_secs }
+            }
+            _ => base,
+        }
     }
 
     /// Per-step backward budget for a client: (T_th − T_fw·steps)/steps,
@@ -102,20 +140,20 @@ impl FleetCtx {
     /// clients would select nothing and never train deep blocks.
     pub fn step_backward_budget(&self, client: usize, exit: usize) -> f64 {
         let step_budget = self.t_th / self.local_steps as f64;
-        let fwd = self.timings[client].forward_time(&self.manifest, exit);
+        let fwd = self.timing(client).forward_time(&self.manifest, exit);
         (step_budget - fwd).max(MIN_BUDGET_FRAC * step_budget)
     }
 
     /// Simulated per-round cost of training with `backward_time` per step
     /// at a given exit.
     pub fn round_time(&self, client: usize, exit: usize, backward_time: f64) -> f64 {
-        let fwd = self.timings[client].forward_time(&self.manifest, exit);
+        let fwd = self.timing(client).forward_time(&self.manifest, exit);
         (fwd + backward_time) * self.local_steps as f64
     }
 
     /// Full-model round cost on a client (FedAvg).
     pub fn full_round_time(&self, client: usize) -> f64 {
-        let tm = &self.timings[client];
+        let tm = self.timing(client);
         self.round_time(client, self.manifest.num_blocks, tm.full_backward_time())
     }
 
@@ -274,7 +312,14 @@ mod tests {
             let fast = TimingModel::profile(&m, &DeviceProfile::new("f", 1.0, 10.0), &cfg);
             fast.full_round_time(&m, 4)
         };
-        FleetCtx { manifest: m, timings, t_th, local_steps: 4, lr: 0.05 }
+        FleetCtx {
+            manifest: m,
+            timings,
+            t_th,
+            local_steps: 4,
+            lr: 0.05,
+            fleet: Default::default(),
+        }
     }
 
     #[test]
@@ -315,6 +360,44 @@ mod tests {
             assert_eq!(st, Json::Null, "{n} should be stateless");
             s.restore_policy_state(&st).unwrap();
             assert!(s.restore_policy_state(&Json::Num(1.0)).is_err(), "{n}");
+        }
+    }
+
+    #[test]
+    fn client_comm_prefers_trace_links() {
+        use crate::timing::CommModel;
+        let mut c = ctx(4, &[1.0, 2.0]);
+        let base = CommModel::Bandwidth { up_mbps: 10.0, down_mbps: 50.0, latency_secs: 0.05 };
+        // no links recorded: everyone rides the base model
+        assert_eq!(c.client_comm(base, 1), base);
+        c.fleet.links = vec![(0.0, 0.0), (2.0, 8.0)];
+        assert_eq!(c.client_comm(base, 0), base, "zero links inherit the base");
+        assert_eq!(
+            c.client_comm(base, 1),
+            CommModel::Bandwidth { up_mbps: 2.0, down_mbps: 8.0, latency_secs: 0.05 }
+        );
+        // under a Constant base, per-client links price payloads latency-free
+        assert_eq!(
+            c.client_comm(CommModel::Constant(30.0), 1),
+            CommModel::Bandwidth { up_mbps: 2.0, down_mbps: 8.0, latency_secs: 0.0 }
+        );
+    }
+
+    #[test]
+    fn lazy_ctx_maps_clients_onto_type_timings() {
+        use crate::fleet::{FleetView, GeneratorSpec, LazyFleet};
+        let mut c = ctx(4, &[1.0, 0.5, 1.0 / 3.0, 0.25]);
+        let lf = LazyFleet::new(1000, GeneratorSpec::Uniform, 3).unwrap();
+        assert_eq!(lf.device_types().len(), c.timings.len());
+        c.fleet.lazy = Some(lf.clone());
+        assert_eq!(c.n_clients(), 1000);
+        for client in [0usize, 1, 7, 999] {
+            let want = lf.type_of(client);
+            assert_eq!(
+                c.timing(client).device.scale.to_bits(),
+                c.timings[want].device.scale.to_bits()
+            );
+            assert_eq!(lf.profile(client).device.name, lf.device_types()[want].name);
         }
     }
 

@@ -15,7 +15,7 @@
 use crate::manifest::Manifest;
 
 /// A heterogeneous device in the fleet.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct DeviceProfile {
     pub name: String,
     /// Time multiplier relative to the base profile (bigger == slower).

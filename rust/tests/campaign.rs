@@ -88,6 +88,7 @@ fn assert_stores_identical(a: &RunStore, b: &RunStore, name: &str) {
                 "{label_a}: round {} eval",
                 ra.round
             );
+            assert_eq!(ra.dropped, rb.dropped, "{label_a}: round {} drops", ra.round);
         }
         let fa = ma.final_state.as_ref().unwrap();
         let fb = mb.final_state.as_ref().unwrap();
@@ -422,6 +423,98 @@ fn async_cells_sweep_with_comm_model_and_kill_resume() {
     let out = run_campaign(&store, &async_grid("async")).unwrap();
     assert!(out.complete(), "{out:?}");
     assert_stores_identical(&reference, &store, "async");
+
+    let _ = std::fs::remove_dir_all(&reference_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The fleet-churn acceptance drill: availability churn as a sweepable
+/// scenario axis. `fleet.churn.dropout=0;0.1;0.3` (the semicolon
+/// separator `--sweep` accepts for any axis) expands into cells whose
+/// stored configs carry the churn key, whose records log the dropped
+/// clients, and which kill-resume bitwise-identically; `campaign report
+/// --over seed` then collapses the seed axis per (strategy, dropout)
+/// group.
+#[test]
+fn churn_dropout_sweep_runs_kill_resumes_and_groups_over_seed() {
+    fn churn_grid(name: &str) -> CampaignCfg {
+        let base = ExperimentCfg {
+            model: "mock:4x20".into(),
+            fleet: fedel::config::FleetSpec::Scales(vec![1.0, 2.0, 3.0]),
+            rounds: 4,
+            local_steps: 2,
+            lr: 0.3,
+            eval_every: 2,
+            eval_batches: 2,
+            slowest_round_secs: 3600.0,
+            exec_threads: 1,
+            ..Default::default()
+        };
+        let mut cfg = CampaignCfg::new(name, base);
+        cfg.axis("strategy=fedavg,fedbuff").unwrap();
+        cfg.axis("seed=1,2").unwrap();
+        cfg.axis("fleet.churn.dropout=0;0.1;0.3").unwrap();
+        cfg.checkpoint_every = 2;
+        cfg.workers = 1;
+        cfg
+    }
+
+    let reference_dir = scratch("churn-ref");
+    let reference = RunStore::open(&reference_dir).unwrap();
+    let out = run_campaign(&reference, &churn_grid("churn")).unwrap();
+    assert!(out.complete(), "{out:?}");
+    assert_eq!(out.cells.len(), 12, "2 strategies x 2 seeds x 3 dropouts");
+
+    // the swept dropout lands in every stored cell config, and churn
+    // fires exactly where it should: never at dropout=0, visibly at 0.3
+    let runs = cell_runs(&reference, "churn");
+    let mut heavy_dropped = 0usize;
+    for (label, m) in &runs {
+        let dropout = if label.contains("dropout=0.3") {
+            0.3
+        } else if label.contains("dropout=0.1") {
+            0.1
+        } else {
+            0.0
+        };
+        assert_eq!(m.config.churn_dropout, dropout, "{label}");
+        assert_eq!(m.records.len(), 4, "{label}");
+        if dropout == 0.0 {
+            assert!(
+                m.records.iter().all(|r| r.dropped.is_empty()),
+                "{label}: churn-free cell recorded drops"
+            );
+        } else if dropout == 0.3 {
+            heavy_dropped += m.records.iter().filter(|r| !r.dropped.is_empty()).count();
+        }
+    }
+    assert!(heavy_dropped > 0, "dropout=0.3 never dropped a client in any cell");
+
+    // kill every cell mid-round, resume, demand bitwise identity — churn
+    // decisions are pure (seed, client, time) hashes, so the drop
+    // sequence survives the process boundary
+    let dir = scratch("churn-killed");
+    let store = RunStore::open(&dir).unwrap();
+    let mut killed = churn_grid("churn");
+    killed.halt_after = Some(3);
+    let out = run_campaign(&store, &killed).unwrap();
+    assert!(!out.complete());
+    let out = run_campaign(&store, &churn_grid("churn")).unwrap();
+    assert!(out.complete(), "{out:?}");
+    assert_stores_identical(&reference, &store, "churn");
+
+    // `campaign report --over seed`: 12 cells collapse into 6
+    // (strategy, dropout) groups of 2 seeds each
+    let man = reference.load_campaign("churn").unwrap();
+    let agg = grouped_report(&reference, &man, "seed", Target::Default, None).unwrap();
+    assert_eq!(agg.over, "seed");
+    assert_eq!(agg.rows.len(), 6, "{agg:?}");
+    assert_eq!(agg.baseline.as_deref(), Some("fedavg"));
+    for row in &agg.rows {
+        assert_eq!(row.cells, 2, "{row:?}");
+        assert!(row.label.contains("fleet.churn.dropout="), "{row:?}");
+        assert_eq!(row.final_acc.unwrap().n, 2, "{row:?}");
+    }
 
     let _ = std::fs::remove_dir_all(&reference_dir);
     let _ = std::fs::remove_dir_all(&dir);

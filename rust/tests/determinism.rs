@@ -56,6 +56,7 @@ fn assert_identical(
             ra.round
         );
         assert_eq!(ra.client_secs, rb.client_secs, "{label}: round {} clients", ra.round);
+        assert_eq!(ra.dropped, rb.dropped, "{label}: round {} drops", ra.round);
     }
 }
 
@@ -102,6 +103,56 @@ fn async_strategies_are_bitwise_identical_across_thread_counts() {
             assert!(w[1].sim_time >= w[0].sim_time, "{name}: clock must not rewind");
         }
     }
+}
+
+/// Availability churn must not disturb the thread-count invariant: every
+/// drop decision is a pure hash of (seed, client, iter/time), so the set
+/// of discarded uploads — and therefore the aggregation sequence — is
+/// identical at any exec_threads.
+#[test]
+fn churn_runs_are_bitwise_identical_across_thread_counts() {
+    for name in ["fedasync", "fedbuff"] {
+        let churned = |threads: usize| {
+            let mut c = cfg(name, threads);
+            c.churn_dropout = 0.5;
+            c.churn_period_secs = 4000.0;
+            c.churn_avail_frac = 0.75;
+            c
+        };
+        let seq = run_one(churned(1)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let four = run_one(churned(4)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let all_cores = run_one(churned(0)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_identical(&seq, &four, name);
+        assert_identical(&seq, &all_cores, name);
+        // dropout 0.5 over dozens of dispatches: churn must actually fire,
+        // otherwise this test silently degrades to the churn-free one
+        assert!(
+            seq.records.iter().any(|r| !r.dropped.is_empty()),
+            "{name}: churn never dropped a client"
+        );
+    }
+}
+
+/// Sync-mode churn: dropped clients leave the aggregation but their
+/// planned wall time still bounds the round clock — deterministically.
+#[test]
+fn sync_churn_is_deterministic_and_records_drops() {
+    let churned = |threads: usize| {
+        let mut c = cfg("fedel", threads);
+        c.churn_dropout = 0.4;
+        c
+    };
+    let seq = run_one(churned(1)).unwrap();
+    let par = run_one(churned(4)).unwrap();
+    assert_identical(&seq, &par, "fedel churn");
+    assert!(seq.records.iter().any(|r| !r.dropped.is_empty()), "churn never fired");
+    // churn-free baseline diverges: drops change what gets aggregated
+    let base = run_one(cfg("fedel", 1)).unwrap();
+    assert!(
+        base.records.iter().all(|r| r.dropped.is_empty()),
+        "baseline must not drop anyone"
+    );
+    assert_ne!(seq.final_params, base.final_params, "dropout must change the trajectory");
 }
 
 #[test]

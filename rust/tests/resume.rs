@@ -82,22 +82,35 @@ fn assert_identical(a: &ExperimentResult, b: &ExperimentResult, label: &str) {
             ra.round
         );
         assert_eq!(ra.client_secs, rb.client_secs, "{label}: round {} clients", ra.round);
+        assert_eq!(ra.dropped, rb.dropped, "{label}: round {} drops", ra.round);
     }
 }
 
 /// Kill a checkpointed run after round 5 (checkpoints land at 2 and 4),
 /// resume it, and demand bitwise identity with an uninterrupted run.
 fn kill_and_resume(strategy: &str, kill_threads: usize, resume_threads: usize) {
-    let label = format!("{strategy} killed@{kill_threads}t resumed@{resume_threads}t");
-    let dir = scratch(&format!("{strategy}-{kill_threads}-{resume_threads}"));
+    kill_and_resume_with(strategy, kill_threads, resume_threads, "plain", &|_| {});
+}
+
+/// Same drill with a scenario knob: `mutate` is applied identically to
+/// the baseline and the killed run (churn, lazy fleets, sampling, ...).
+fn kill_and_resume_with(
+    strategy: &str,
+    kill_threads: usize,
+    resume_threads: usize,
+    tag: &str,
+    mutate: &dyn Fn(&mut ExperimentCfg),
+) {
+    let label = format!("{strategy}/{tag} killed@{kill_threads}t resumed@{resume_threads}t");
+    let dir = scratch(&format!("{strategy}-{tag}-{kill_threads}-{resume_threads}"));
     let store = RunStore::open(&dir).unwrap();
 
-    let baseline = Experiment::build(cfg(strategy, resume_threads))
-        .unwrap()
-        .run(None)
-        .unwrap();
+    let mut base_cfg = cfg(strategy, resume_threads);
+    mutate(&mut base_cfg);
+    let baseline = Experiment::build(base_cfg).unwrap().run(None).unwrap();
 
     let mut killed_cfg = cfg(strategy, kill_threads);
+    mutate(&mut killed_cfg);
     killed_cfg.halt_after = Some(5);
     let mut exp = Experiment::build(killed_cfg).unwrap();
     let mut ckpt = CheckpointObserver::create(&store, &exp.cfg, strategy, 2).unwrap();
@@ -167,6 +180,46 @@ fn fedbuff_kill_and_resume_is_bitwise_identical() {
 #[test]
 fn fedasync_kill_and_resume_is_bitwise_identical() {
     kill_and_resume("fedasync", 1, 1);
+}
+
+/// Availability churn across a kill: the drop decisions are pure hashes
+/// of (seed, client, iter/time), so a churned run killed mid-flight
+/// resumes onto exactly the same drop/aggregate sequence — at any thread
+/// count on either side of the kill. Both async modes recompute each
+/// in-flight dispatch's doom verdict from the checkpoint instead of
+/// persisting it.
+#[test]
+fn churned_async_kill_and_resume_is_bitwise_identical() {
+    let churn = |c: &mut ExperimentCfg| {
+        c.churn_dropout = 0.5;
+        c.churn_period_secs = 4000.0;
+        c.churn_avail_frac = 0.75;
+    };
+    kill_and_resume_with("fedbuff", 1, 1, "churn", &churn);
+    kill_and_resume_with("fedbuff", 4, 1, "churn", &churn);
+    kill_and_resume_with("fedasync", 1, 4, "churn", &churn);
+}
+
+/// Sync-mode churn rides the per-round records (`dropped`), which the
+/// resumed run must reproduce bitwise from the checkpoint.
+#[test]
+fn churned_sync_kill_and_resume_is_bitwise_identical() {
+    kill_and_resume_with("fedel", 1, 2, "churn", &|c| c.churn_dropout = 0.4);
+}
+
+/// Lazy generated fleet + in-flight sampling + churn, killed and
+/// resumed: the manifest's config snapshot (generator spec, sample cap,
+/// churn keys) plus the async runner state is everything resume needs —
+/// client profiles and datasets re-derive on demand from the seed.
+#[test]
+fn lazy_sampled_fleet_kill_and_resume_is_bitwise_identical() {
+    let lazy = |c: &mut ExperimentCfg| {
+        c.fleet = FleetSpec::parse("lazy64:lognormal:0:0.5").unwrap();
+        c.fleet_sample = 6;
+        c.churn_dropout = 0.3;
+    };
+    kill_and_resume_with("fedbuff", 1, 2, "lazy", &lazy);
+    kill_and_resume_with("fedasync", 2, 1, "lazy", &lazy);
 }
 
 /// Schema v3: the parameter vectors inside an async checkpoint's

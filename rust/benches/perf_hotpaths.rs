@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     let d = time_median(9, || {
         let mut agg = MaskedAggregator::new(p, AggregateRule::Masked);
         for _ in 0..20 {
-            agg.add(&params, &mask, 1.0, 4, &global);
+            agg.add(&params, &mask, 1.0, 4, &global).unwrap();
         }
         std::hint::black_box(agg.finish(&global));
     });
@@ -50,6 +50,9 @@ fn main() -> anyhow::Result<()> {
         format!("{:.2}ms", d.as_secs_f64() * 1e3),
         format!("{gbps:.1} GB/s"),
     ]);
+
+    // --- sparse vs dense masked aggregation -----------------------------
+    sparse_aggregate_bench(&mut t);
 
     // --- mask expansion --------------------------------------------------
     let tensor_mask = vec![1.0f32; m.tensors.len()];
@@ -115,6 +118,81 @@ fn main() -> anyhow::Result<()> {
 
     t.print();
     Ok(())
+}
+
+/// Run-encoded sparse adds ([`fedel::fl::sparse::SparseDelta`]) against
+/// the dense full-vector walk, at 10% and 100% mask coverage. Three
+/// claims, the first two asserted as tripwires:
+/// * bitwise: both paths finish to identical globals;
+/// * aggregation cost scales with the *masked* size — at 10% coverage the
+///   sparse path must win clearly (the dense walk still touches all 400k
+///   elements to add weighted zeros);
+/// * at full coverage the sparse path degenerates to one dense run and
+///   stays within noise of the dense walk.
+fn sparse_aggregate_bench(t: &mut Table) {
+    use fedel::fl::sparse::SparseDelta;
+    let p = 400_640usize;
+    let global = vec![0.0f32; p];
+    for coverage in [0.1f64, 1.0] {
+        let covered = (p as f64 * coverage) as usize;
+        let mut mask = vec![0.0f32; p];
+        mask[..covered].fill(1.0);
+        // off-mask elements sit at the dispatched global (engine contract)
+        let params: Vec<f32> =
+            (0..p).map(|k| if k < covered { 0.5 } else { global[k] }).collect();
+        let delta = SparseDelta::from_dense_mask(&mask, &params);
+
+        let mut dense_out = Vec::new();
+        let d_dense = time_median(9, || {
+            let mut agg = MaskedAggregator::new(p, AggregateRule::Masked);
+            for _ in 0..20 {
+                agg.add(&params, &mask, 1.0, 4, &global).unwrap();
+            }
+            dense_out = std::hint::black_box(agg.finish(&global));
+        });
+        let mut sparse_out = Vec::new();
+        let d_sparse = time_median(9, || {
+            let mut agg = MaskedAggregator::new(p, AggregateRule::Masked);
+            for _ in 0..20 {
+                agg.add_sparse(&delta, 1.0, 4, &global).unwrap();
+            }
+            sparse_out = std::hint::black_box(agg.finish(&global));
+        });
+        assert_eq!(dense_out.len(), sparse_out.len());
+        assert!(
+            dense_out.iter().zip(&sparse_out).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "sparse aggregation diverged from dense at {coverage} coverage"
+        );
+
+        let speedup = d_dense.as_secs_f64() / d_sparse.as_secs_f64().max(1e-12);
+        let pct = (coverage * 100.0) as usize;
+        t.row(vec![
+            format!("masked aggregate, dense add ({pct}% coverage)"),
+            format!("{:.2}ms", d_dense.as_secs_f64() * 1e3),
+            String::new(),
+        ]);
+        t.row(vec![
+            format!("masked aggregate, sparse add ({pct}% coverage)"),
+            format!("{:.2}ms", d_sparse.as_secs_f64() * 1e3),
+            format!("{speedup:.1}x win"),
+        ]);
+        println!(
+            "sparse aggregate [{pct}% of {p} params x 20 adds]: dense {:.2}ms, sparse {:.2}ms -> {speedup:.1}x",
+            d_dense.as_secs_f64() * 1e3,
+            d_sparse.as_secs_f64() * 1e3,
+        );
+        if coverage < 0.5 {
+            assert!(
+                speedup >= 2.0,
+                "sparse add should clearly beat the dense walk at {pct}% coverage, got {speedup:.2}x"
+            );
+        } else {
+            assert!(
+                speedup >= 1.0 / 3.0,
+                "sparse add should stay within noise of dense at full coverage, got {speedup:.2}x"
+            );
+        }
+    }
 }
 
 /// The pre-prefix-sum window walk: FedEl policy with every block selected

@@ -13,6 +13,8 @@
 //! Updates stream in one at a time — the aggregator keeps only O(P)
 //! accumulators, never the whole fleet's parameters.
 
+use crate::fl::sparse::SparseDelta;
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AggregateRule {
     /// Eq. 4 mask-normalized averaging (FedEL & partial-training methods).
@@ -46,12 +48,17 @@ impl MaskedAggregator {
         }
     }
 
-    /// Add one client's trained parameters.
+    /// Add one client's trained parameters, densely.
     ///
     /// `mask` — element-level training mask (what the client updated);
     /// `weight` — client weight (data size; 1.0 for uniform);
     /// `tau` — local SGD steps taken (FedNova); `global` — the round's
     /// starting global model (FedNova computes deltas against it).
+    ///
+    /// This is the reference path: it visits every element. The round
+    /// loop feeds [`MaskedAggregator::add_sparse`] instead, which is
+    /// bitwise-identical (proved in rust/tests/prop_invariants.rs) but
+    /// only visits contributed runs.
     pub fn add(
         &mut self,
         params: &[f32],
@@ -59,9 +66,19 @@ impl MaskedAggregator {
         weight: f64,
         tau: usize,
         global: &[f32],
-    ) {
-        assert_eq!(params.len(), self.num.len());
-        assert_eq!(mask.len(), self.num.len());
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            params.len() == self.num.len(),
+            "aggregator over {} params got a {}-param update",
+            self.num.len(),
+            params.len()
+        );
+        anyhow::ensure!(
+            mask.len() == self.num.len(),
+            "aggregator over {} params got a {}-element mask",
+            self.num.len(),
+            mask.len()
+        );
         self.clients_added += 1;
         self.weight_sum += weight;
         match self.rule {
@@ -88,6 +105,101 @@ impl MaskedAggregator {
                 }
             }
         }
+        Ok(())
+    }
+
+    /// Add one client's [`SparseDelta`], visiting only contributed runs —
+    /// O(masked size) per client for the masked rules instead of
+    /// O(model size).
+    ///
+    /// Bitwise-identical to expanding the delta and calling
+    /// [`MaskedAggregator::add`]: for Masked/FedNova, a zero-mask element
+    /// contributes `num[k] += ±0.0; den[k] += ±0.0`, and since the
+    /// accumulators start at +0.0 and IEEE-754 round-to-nearest addition
+    /// can never turn +0.0 into -0.0, skipping those elements leaves the
+    /// exact same bits. FedAvg averages full models, so runs the delta
+    /// doesn't carry fall back to the dispatched `global` — which is what
+    /// the client's untouched elements are, bit-for-bit (the engine only
+    /// writes masked elements).
+    pub fn add_sparse(
+        &mut self,
+        delta: &SparseDelta,
+        weight: f64,
+        tau: usize,
+        global: &[f32],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            delta.param_count == self.num.len(),
+            "aggregator over {} params got a {}-param sparse update",
+            self.num.len(),
+            delta.param_count
+        );
+        anyhow::ensure!(
+            global.len() == self.num.len(),
+            "aggregator over {} params got a {}-param global",
+            self.num.len(),
+            global.len()
+        );
+        let mut prev_end = 0usize;
+        for r in &delta.runs {
+            let end = r.offset + r.values.len();
+            anyhow::ensure!(
+                r.offset >= prev_end && end <= delta.param_count,
+                "sparse update runs out of order or out of bounds"
+            );
+            prev_end = end;
+        }
+        self.clients_added += 1;
+        self.weight_sum += weight;
+        match self.rule {
+            AggregateRule::Masked => {
+                for r in &delta.runs {
+                    let m = r.mask as f64 * weight;
+                    for (i, &v) in r.values.iter().enumerate() {
+                        let k = r.offset + i;
+                        self.num[k] += m * v as f64;
+                        self.den[k] += m;
+                    }
+                }
+            }
+            AggregateRule::FedAvg => {
+                // Walk the full vector with a run cursor; gaps take the
+                // dispatched global. Full-coverage deltas (the only shape
+                // FedAvg-family strategies produce in practice) reduce to
+                // the plain dense loop.
+                let mut k = 0usize;
+                for r in &delta.runs {
+                    while k < r.offset {
+                        self.num[k] += weight * global[k] as f64;
+                        self.den[k] += weight;
+                        k += 1;
+                    }
+                    for &v in &r.values {
+                        self.num[k] += weight * v as f64;
+                        self.den[k] += weight;
+                        k += 1;
+                    }
+                }
+                while k < self.num.len() {
+                    self.num[k] += weight * global[k] as f64;
+                    self.den[k] += weight;
+                    k += 1;
+                }
+            }
+            AggregateRule::FedNova => {
+                let tau = tau.max(1) as f64;
+                self.tau_eff += weight * tau;
+                for r in &delta.runs {
+                    let m = r.mask as f64 * weight;
+                    for (i, &v) in r.values.iter().enumerate() {
+                        let k = r.offset + i;
+                        self.num[k] += m * (v as f64 - global[k] as f64) / tau;
+                        self.den[k] += m;
+                    }
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Produce the next global model; untouched elements keep `global`.
@@ -130,8 +242,8 @@ mod tests {
     fn masked_average_over_coverers_only() {
         let global = vec![10.0f32; 4];
         let mut agg = MaskedAggregator::new(4, AggregateRule::Masked);
-        agg.add(&[1.0, 1.0, 0.0, 0.0], &[1.0, 1.0, 0.0, 0.0], 1.0, 1, &global);
-        agg.add(&[3.0, 0.0, 5.0, 0.0], &[1.0, 0.0, 1.0, 0.0], 1.0, 1, &global);
+        agg.add(&[1.0, 1.0, 0.0, 0.0], &[1.0, 1.0, 0.0, 0.0], 1.0, 1, &global).unwrap();
+        agg.add(&[3.0, 0.0, 5.0, 0.0], &[1.0, 0.0, 1.0, 0.0], 1.0, 1, &global).unwrap();
         let out = agg.finish(&global);
         assert_eq!(out, vec![2.0, 1.0, 5.0, 10.0]); // last elem untouched
     }
@@ -140,8 +252,8 @@ mod tests {
     fn fedavg_weighted_by_data_size() {
         let global = vec![0.0f32; 2];
         let mut agg = MaskedAggregator::new(2, AggregateRule::FedAvg);
-        agg.add(&[1.0, 1.0], &[1.0, 1.0], 3.0, 1, &global);
-        agg.add(&[5.0, 5.0], &[1.0, 1.0], 1.0, 1, &global);
+        agg.add(&[1.0, 1.0], &[1.0, 1.0], 3.0, 1, &global).unwrap();
+        agg.add(&[5.0, 5.0], &[1.0, 1.0], 1.0, 1, &global).unwrap();
         let out = agg.finish(&global);
         assert_eq!(out, vec![2.0, 2.0]);
     }
@@ -168,8 +280,8 @@ mod tests {
         // Plain averaging would favor A; Nova equalizes per-step movement.
         let global = vec![0.0f32; 1];
         let mut agg = MaskedAggregator::new(1, AggregateRule::FedNova);
-        agg.add(&[10.0], &[1.0], 1.0, 10, &global);
-        agg.add(&[1.0], &[1.0], 1.0, 1, &global);
+        agg.add(&[10.0], &[1.0], 1.0, 10, &global).unwrap();
+        agg.add(&[1.0], &[1.0], 1.0, 1, &global).unwrap();
         let out = agg.finish(&global);
         // d_A = 1.0/step, d_B = 1.0/step -> mean d = 1.0; tau_eff = 5.5
         assert!((out[0] - 5.5).abs() < 1e-6, "{out:?}");
@@ -182,12 +294,12 @@ mod tests {
         let b = vec![4.0f32, 5.0, 6.0];
         let mask = vec![1.0f32; 3];
         let mut nova = MaskedAggregator::new(3, AggregateRule::FedNova);
-        nova.add(&a, &mask, 1.0, 5, &global);
-        nova.add(&b, &mask, 1.0, 5, &global);
+        nova.add(&a, &mask, 1.0, 5, &global).unwrap();
+        nova.add(&b, &mask, 1.0, 5, &global).unwrap();
         let nova_out = nova.finish(&global);
         let mut avg = MaskedAggregator::new(3, AggregateRule::FedAvg);
-        avg.add(&a, &mask, 1.0, 5, &global);
-        avg.add(&b, &mask, 1.0, 5, &global);
+        avg.add(&a, &mask, 1.0, 5, &global).unwrap();
+        avg.add(&b, &mask, 1.0, 5, &global).unwrap();
         let avg_out = avg.finish(&global);
         for (x, y) in nova_out.iter().zip(&avg_out) {
             assert!((x - y).abs() < 1e-5, "{nova_out:?} vs {avg_out:?}");
@@ -205,10 +317,48 @@ mod tests {
     fn fractional_masks_weight_contributions() {
         let global = vec![0.0f32; 1];
         let mut agg = MaskedAggregator::new(1, AggregateRule::Masked);
-        agg.add(&[1.0], &[1.0], 1.0, 1, &global);
-        agg.add(&[4.0], &[0.5], 1.0, 1, &global);
+        agg.add(&[1.0], &[1.0], 1.0, 1, &global).unwrap();
+        agg.add(&[4.0], &[0.5], 1.0, 1, &global).unwrap();
         let out = agg.finish(&global);
         // (1*1 + 0.5*4) / 1.5 = 2.0
         assert!((out[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn length_mismatch_is_an_error_not_a_panic() {
+        let global = vec![0.0f32; 4];
+        let mut agg = MaskedAggregator::new(4, AggregateRule::Masked);
+        assert!(agg.add(&[1.0; 3], &[1.0; 4], 1.0, 1, &global).is_err());
+        assert!(agg.add(&[1.0; 4], &[1.0; 5], 1.0, 1, &global).is_err());
+        let short = SparseDelta::dense(vec![1.0; 3]);
+        assert!(agg.add_sparse(&short, 1.0, 1, &global).is_err());
+        // failed adds must not poison the accumulator
+        assert_eq!(agg.clients_added, 0);
+        agg.add(&[2.0; 4], &[1.0; 4], 1.0, 1, &global).unwrap();
+        assert_eq!(agg.finish(&global), vec![2.0; 4]);
+    }
+
+    #[test]
+    fn sparse_add_matches_dense_add_bitwise() {
+        let global: Vec<f32> = (0..10).map(|i| (i as f32 * 0.7).cos()).collect();
+        // client params: masked elements trained, the rest left at global
+        // (the engine contract)
+        let mask = [1.0f32, 1.0, 0.0, 0.0, 0.5, 0.5, 0.5, 0.0, 1.0, 0.0];
+        let mut params = global.clone();
+        for (k, &m) in mask.iter().enumerate() {
+            if m != 0.0 {
+                params[k] += 0.1 * (k as f32 + 1.0);
+            }
+        }
+        for rule in [AggregateRule::Masked, AggregateRule::FedAvg, AggregateRule::FedNova] {
+            let mut dense = MaskedAggregator::new(10, rule);
+            dense.add(&params, &mask, 3.0, 4, &global).unwrap();
+            let mut sparse = MaskedAggregator::new(10, rule);
+            let delta = SparseDelta::from_dense_mask(&mask, &params);
+            sparse.add_sparse(&delta, 3.0, 4, &global).unwrap();
+            let (d, s) = (dense.finish(&global), sparse.finish(&global));
+            let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&d), bits(&s), "{rule:?}");
+        }
     }
 }

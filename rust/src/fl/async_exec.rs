@@ -56,6 +56,7 @@ use crate::fl::server::{
     evaluate, execute_plan, execute_plans_streaming, plan_payload_bytes, ClientOutcome, ExecPool,
     ExperimentResult, ResumeState, RoundInputs, RoundRecord, ServerCfg,
 };
+use crate::fl::sparse::SparseDelta;
 use crate::manifest::Manifest;
 use crate::runtime::{Engine, TrainSession};
 use crate::strategies::{full_model_plan, AsyncMode, AsyncSpec, ClientPlan, FleetCtx, Strategy};
@@ -242,7 +243,11 @@ impl AsyncState {
                                 ("version", Json::Num(b.version as f64)),
                                 ("mean_loss", Json::Num(b.outcome.mean_loss)),
                                 ("sq_grads", Json::from_f64s(&b.outcome.sq_grads)),
-                                ("params", f32s_to_json(&b.outcome.params)),
+                                // Async dispatches always train the full
+                                // model, so the delta is dense — keep the
+                                // legacy "params" key (and the blob
+                                // externalization that walks it) intact.
+                                ("params", f32s_to_json(dense(&b.outcome))),
                             ])
                         })
                         .collect(),
@@ -351,7 +356,7 @@ impl AsyncState {
                 plan: full_model_plan(ctx, client),
                 outcome: ClientOutcome {
                     client,
-                    params: json_to_f32s(b.req("params")?, "buffered params")?,
+                    delta: SparseDelta::dense(json_to_f32s(b.req("params")?, "buffered params")?),
                     sq_grads: b.req("sq_grads")?.to_f64_vec()?,
                     mean_loss: b.f("mean_loss")?,
                 },
@@ -392,9 +397,9 @@ impl AsyncState {
         }
         for b in &state.buffer {
             anyhow::ensure!(
-                b.outcome.params.len() == ctx.manifest.param_count,
+                b.outcome.delta.param_count == ctx.manifest.param_count,
                 "async state: buffered params hold {} elements, manifest wants {}",
-                b.outcome.params.len(),
+                b.outcome.delta.param_count,
                 ctx.manifest.param_count
             );
         }
@@ -408,6 +413,12 @@ fn mode_tag(mode: &AsyncMode) -> &'static str {
         AsyncMode::PerArrival { .. } => "per_arrival",
         AsyncMode::Buffered { .. } => "buffered",
     }
+}
+
+/// An async outcome's full parameter vector. Every async dispatch is a
+/// full-model plan, so the outcome's delta is always dense.
+fn dense(out: &ClientOutcome) -> &[f32] {
+    out.delta.dense_view().expect("async dispatches train the full model")
 }
 
 fn f32s_to_json(v: &[f32]) -> Json {
@@ -470,8 +481,7 @@ fn dispatch(
     now: f64,
 ) -> InFlight {
     let plan = full_model_plan(ctx, client);
-    let cov = plan.mask.tensor_coverage();
-    let (down, up) = plan_payload_bytes(m, &plan, &cov);
+    let (down, up) = plan_payload_bytes(m, &plan);
     let start = ctx.fleet.start_at(client, now);
     let comm = ctx.client_comm(cfg.comm, client);
     let finish = start + comm.client_total_secs(plan.est_time, down, up);
@@ -711,9 +721,10 @@ pub fn run_experiment_async(
                 AsyncMode::PerArrival { alpha, staleness_exp } => {
                     let staleness = completed - arrived_version;
                     let w = alpha / (1.0 + staleness as f64).powf(staleness_exp);
+                    let arrived = dense(&outcome);
                     for k in 0..global.len() {
                         global[k] =
-                            ((1.0 - w) * global[k] as f64 + w * outcome.params[k] as f64) as f32;
+                            ((1.0 - w) * global[k] as f64 + w * arrived[k] as f64) as f32;
                     }
                     Some((vec![arrived_plan], vec![outcome], vec![staleness]))
                 }
@@ -742,8 +753,9 @@ pub fn run_experiment_async(
                                 weight /= (1.0 + staleness as f64).powf(staleness_exp);
                             }
                             let start = &state.versions[&b.version];
+                            let arrived = dense(&b.outcome);
                             for i in 0..acc.len() {
-                                acc[i] += weight * (b.outcome.params[i] as f64 - start[i] as f64);
+                                acc[i] += weight * (arrived[i] as f64 - start[i] as f64);
                             }
                             wsum += weight;
                             stale.push(staleness);

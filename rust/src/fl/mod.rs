@@ -10,8 +10,10 @@ pub mod async_exec;
 pub mod bias;
 pub mod observer;
 pub mod server;
+pub mod sparse;
 
 pub use aggregate::{AggregateRule, MaskedAggregator};
+pub use sparse::SparseDelta;
 pub use observer::{
     ConsoleObserver, JsonlObserver, NullObserver, ObserverSet, RoundObserver, SelectionTrace,
     ServerState,

@@ -256,7 +256,7 @@ mod tests {
     fn outcome(client: usize) -> ClientOutcome {
         ClientOutcome {
             client,
-            params: vec![0.0],
+            delta: crate::fl::sparse::SparseDelta::dense(vec![0.0]),
             sq_grads: vec![0.0],
             mean_loss: 0.5,
         }

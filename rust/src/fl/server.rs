@@ -35,6 +35,7 @@ use crate::elastic::importance::global_importance;
 use crate::fl::aggregate::MaskedAggregator;
 use crate::fl::bias::o1_bias;
 use crate::fl::observer::{RoundObserver, ServerState};
+use crate::fl::sparse::{mask_runs, SparseDelta};
 use crate::manifest::Manifest;
 use crate::runtime::{Engine, TrainSession};
 use crate::strategies::{ClientPlan, FleetCtx, RoundFeedback, Strategy};
@@ -138,11 +139,12 @@ pub struct ClientOutcome {
     /// kept for observer sanity checks). Other plan facts — exit, mask,
     /// est_time — are NOT duplicated here: read them from the plan.
     pub client: usize,
-    /// Locally-trained parameters (started from the round's global).
-    /// The element mask the client trained under is NOT carried here —
-    /// it is re-derivable from the plan (`plan.mask.expand`), and keeping
-    /// it would double the join barrier's peak memory.
-    pub params: Vec<f32>,
+    /// The locally-trained update against the dispatched global, carrying
+    /// only the elements the plan's mask covers (run mask values
+    /// included, so no separate mask vector rides along). Full-model
+    /// plans degenerate to a single dense run with zero copy overhead —
+    /// see [`SparseDelta::dense_view`].
+    pub delta: SparseDelta,
     /// Per-tensor Σ g² from the first local step (importance signal).
     pub sq_grads: Vec<f64>,
     pub mean_loss: f64,
@@ -326,23 +328,27 @@ pub(crate) fn execute_plan(
     }
     Ok(ClientOutcome {
         client: plan.client,
-        params: p,
+        delta: SparseDelta::from_mask_spec(m, &plan.mask, p),
         sq_grads: sq,
         mean_loss: loss_acc / plan.local_steps.max(1) as f64,
     })
 }
 
-/// Communication payloads of one plan, in bytes of f32 parameters:
-/// download = the forward sub-model through the plan's exit (at least the
-/// trained set, which head-training strategies can exceed), upload = the
-/// trained (masked) elements only — where partial training banks its
-/// savings under a bandwidth [`CommModel`].
-pub(crate) fn plan_payload_bytes(m: &Manifest, plan: &ClientPlan, coverage: &[f32]) -> (f64, f64) {
-    // Both terms in ELEMENTS until the final x4 — the download covers the
-    // forward sub-model or the trained set, whichever is larger.
-    let up_elems = m.masked_param_count(coverage);
-    let down_elems = (m.forward_param_count(plan.exit) as f64).max(up_elems);
-    (4.0 * down_elems, 4.0 * up_elems)
+/// Communication payloads of one plan, in bytes: download = the forward
+/// sub-model through the plan's exit as raw f32s (at least the trained
+/// set, which head-training strategies can exceed), upload = the client's
+/// [`SparseDelta`] in its actual encoded form — run table plus values
+/// ([`SparseDelta::encoded_bytes`]), so the sparse-index overhead is
+/// honestly charged and partial training banks its savings under a
+/// bandwidth [`CommModel`].
+pub(crate) fn plan_payload_bytes(m: &Manifest, plan: &ClientPlan) -> (f64, f64) {
+    let runs = mask_runs(m, &plan.mask);
+    let up_elems: usize = runs.iter().map(|&(_, len, _)| len).sum();
+    // 16-byte header + 20 bytes per run + 4 bytes per carried element —
+    // kept in lockstep with SparseDelta::encoded_bytes.
+    let up = (16 + 20 * runs.len() + 4 * up_elems) as f64;
+    let down = 4.0 * (m.forward_param_count(plan.exit).max(up_elems) as f64);
+    (down, up)
 }
 
 /// Execute stage, whole round, streaming: fan the plans out over the pool
@@ -589,8 +595,7 @@ pub fn run_experiment_from(
                         .churn
                         .is_some_and(|c| c.dropout_hits(cfg.seed, p.client, round as u64));
                     if hit {
-                        let cov = p.mask.tensor_coverage();
-                        let (down, up) = plan_payload_bytes(&m, p, &cov);
+                        let (down, up) = plan_payload_bytes(&m, p);
                         dropped_secs =
                             dropped_secs.max(cfg.comm.client_total_secs(p.est_time, down, up));
                         dropped.push(p.client);
@@ -625,20 +630,18 @@ pub fn run_experiment_from(
             |i, out| {
                 let plan = &plans[i];
                 let weight = ds.clients[plan.client].num_samples as f64;
-                // Re-expand the element mask from the plan rather than
-                // carrying it through the join: an O(P) write per client
-                // here is the same order as agg.add itself, while carrying
-                // it would double each buffered outcome's footprint.
-                let elem_mask = plan.mask.expand(&m);
-                agg.add(&out.params, &elem_mask, weight, plan.local_steps, &global);
+                // The outcome's delta carries its own run masks, so the
+                // aggregator visits only contributed elements — the round's
+                // fold costs O(Σ masked sizes), not O(clients × params).
+                agg.add_sparse(&out.delta, weight, plan.local_steps, &global)?;
                 let cov = plan.mask.tensor_coverage();
                 coverage
                     .push(cov.iter().map(|&c| c as f64).sum::<f64>() / cov.len().max(1) as f64);
                 // The client's wall-clock includes its transfers: download
-                // the forward sub-model, upload the trained (masked)
-                // elements. Under CommModel::Constant this reduces to the
-                // legacy max(est) + comm_secs bitwise (monotone addition).
-                let (down_bytes, up_bytes) = plan_payload_bytes(&m, plan, &cov);
+                // the forward sub-model, upload the encoded sparse delta.
+                // Under CommModel::Constant this reduces to the legacy
+                // max(est) + comm_secs bitwise (monotone addition).
+                let (down_bytes, up_bytes) = plan_payload_bytes(&m, plan);
                 round_secs =
                     round_secs.max(cfg.comm.client_total_secs(plan.est_time, down_bytes, up_bytes));
                 tensor_masks.push(cov);

@@ -1,0 +1,498 @@
+//! The sparse masked-delta representation: what a partially-trained
+//! client actually produces, as a first-class type.
+//!
+//! Partial training (FedEL windows, HeteroFL widths, DepthFL depths)
+//! touches a *structured* subset of the flat parameter vector: whole
+//! tensors (or leading prefixes of tensors) at a shared mask value, and
+//! tensors are laid out contiguously ([`Manifest::validate`] enforces
+//! ascending gap-free offsets). A [`SparseDelta`] exploits exactly that
+//! shape — an index-run (RLE) encoding of `(offset, mask, values)` runs —
+//! so client payloads, aggregation work, and checkpoint deltas all scale
+//! with the *trained* fraction instead of the model size. A full-coverage
+//! update degenerates to a single run over the whole vector (the dense
+//! fallback, see [`SparseDelta::dense_view`]) with zero per-element
+//! overhead.
+//!
+//! Runs store the client's **raw trained values**, not arithmetic
+//! differences against the base: f32 subtraction would round, and both
+//! repo invariants (bitwise thread-count determinism, bitwise
+//! kill/resume) demand lossless reconstruction. "Delta" refers to which
+//! elements changed, never to `new - old`.
+
+use crate::manifest::Manifest;
+use crate::strategies::MaskSpec;
+
+/// One contiguous trained span: `values` replace the base vector at
+/// `offset..offset + values.len()`, all under the same mask value.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Run {
+    pub offset: usize,
+    /// The (possibly fractional) mask value shared by every element of
+    /// the run — the aggregation weight multiplier, exactly what
+    /// [`Manifest::expand_mask`] would have written element-wise.
+    pub mask: f32,
+    pub values: Vec<f32>,
+}
+
+impl Run {
+    fn end(&self) -> usize {
+        self.offset + self.values.len()
+    }
+}
+
+/// A sparse masked update against a `param_count`-element base vector.
+///
+/// Invariant (enforced by every constructor and re-checked by
+/// [`SparseDelta::decode`]/[`SparseDelta::to_dense`]): runs are sorted
+/// ascending, non-overlapping, non-empty, and in bounds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseDelta {
+    pub param_count: usize,
+    pub runs: Vec<Run>,
+}
+
+/// Wire/blob size of a run table entry: u64 offset + u64 len + f32 mask.
+const RUN_HEADER_BYTES: usize = 20;
+/// Wire/blob size of the header: u64 param_count + u64 run_count.
+const HEADER_BYTES: usize = 16;
+
+impl SparseDelta {
+    /// A full-coverage update: one mask-1.0 run owning the whole vector
+    /// (moved, not copied). The dense fallback every full-model plan —
+    /// FedAvg-family and all async dispatches — takes.
+    pub fn dense(values: Vec<f32>) -> SparseDelta {
+        let param_count = values.len();
+        let runs = if values.is_empty() {
+            Vec::new()
+        } else {
+            vec![Run { offset: 0, mask: 1.0, values }]
+        };
+        SparseDelta { param_count, runs }
+    }
+
+    /// Build the delta a plan's [`MaskSpec`] defines over trained params:
+    /// one run per maximal span of equal-mask contiguous tensors (Prefix
+    /// masks cover leading fractions at mask 1.0, matching
+    /// [`Manifest::expand_prefix_mask`]). A single full-vector 1.0 span
+    /// short-circuits to [`SparseDelta::dense`], moving `params`.
+    pub fn from_mask_spec(m: &Manifest, mask: &MaskSpec, params: Vec<f32>) -> SparseDelta {
+        assert_eq!(
+            params.len(),
+            m.param_count,
+            "from_mask_spec: {} params for a {}-param manifest",
+            params.len(),
+            m.param_count
+        );
+        let spans = mask_runs(m, mask);
+        if let [(0, len, mval)] = spans[..] {
+            if len == m.param_count && mval == 1.0 {
+                return SparseDelta::dense(params);
+            }
+        }
+        let runs = spans
+            .into_iter()
+            .map(|(offset, len, mask)| Run {
+                offset,
+                mask,
+                values: params[offset..offset + len].to_vec(),
+            })
+            .collect();
+        SparseDelta { param_count: m.param_count, runs }
+    }
+
+    /// RLE a raw element-level mask (the [`MaskSpec::expand`] form): one
+    /// run per maximal span of equal nonzero mask values. The structure-
+    /// agnostic fallback, used by tests to cross-check the spec-driven
+    /// constructor against arbitrary masks.
+    pub fn from_dense_mask(elem_mask: &[f32], params: &[f32]) -> SparseDelta {
+        assert_eq!(
+            elem_mask.len(),
+            params.len(),
+            "from_dense_mask: mask length {} != params length {}",
+            elem_mask.len(),
+            params.len()
+        );
+        let n = params.len();
+        let mut runs = Vec::new();
+        let mut k = 0usize;
+        while k < n {
+            let mval = elem_mask[k];
+            if mval == 0.0 {
+                k += 1;
+                continue;
+            }
+            let start = k;
+            while k < n && elem_mask[k] == mval {
+                k += 1;
+            }
+            runs.push(Run { offset: start, mask: mval, values: params[start..k].to_vec() });
+        }
+        SparseDelta { param_count: n, runs }
+    }
+
+    /// The changed-element delta between two equal-length vectors: mask-1.0
+    /// runs over every maximal span where the f32 *bits* differ (bitwise,
+    /// so ±0.0 flips and NaNs are preserved — checkpoints reconstruct
+    /// exactly). `next`'s raw values are stored, so applying the delta to
+    /// `base` via [`SparseDelta::to_dense`] returns `next` bit-for-bit.
+    pub fn diff(base: &[f32], next: &[f32]) -> SparseDelta {
+        assert_eq!(
+            base.len(),
+            next.len(),
+            "diff: base length {} != next length {}",
+            base.len(),
+            next.len()
+        );
+        let n = next.len();
+        let mut runs = Vec::new();
+        let mut k = 0usize;
+        while k < n {
+            if base[k].to_bits() == next[k].to_bits() {
+                k += 1;
+                continue;
+            }
+            let start = k;
+            while k < n && base[k].to_bits() != next[k].to_bits() {
+                k += 1;
+            }
+            runs.push(Run { offset: start, mask: 1.0, values: next[start..k].to_vec() });
+        }
+        SparseDelta { param_count: n, runs }
+    }
+
+    /// `Some(values)` when this delta is secretly dense — a single
+    /// mask-1.0 run covering the whole vector (or an empty vector) — the
+    /// shape the async executor's full-model dispatches always produce.
+    pub fn dense_view(&self) -> Option<&[f32]> {
+        if self.param_count == 0 {
+            return Some(&[]);
+        }
+        match &self.runs[..] {
+            [r] if r.offset == 0 && r.mask == 1.0 && r.values.len() == self.param_count => {
+                Some(&r.values)
+            }
+            _ => None,
+        }
+    }
+
+    /// Total elements the delta carries — what aggregation and upload
+    /// cost scale with.
+    pub fn masked_elements(&self) -> usize {
+        self.runs.iter().map(|r| r.values.len()).sum()
+    }
+
+    /// Exact [`SparseDelta::encode`] output size in bytes; also the
+    /// communication model's upload payload (indices + values, so the
+    /// encoding overhead is honestly charged).
+    pub fn encoded_bytes(&self) -> usize {
+        HEADER_BYTES + RUN_HEADER_BYTES * self.runs.len() + 4 * self.masked_elements()
+    }
+
+    /// Binary form (all little-endian): `[u64 param_count][u64 run_count]`,
+    /// then per run `[u64 offset][u64 len][f32 mask]`, then every run's
+    /// values concatenated as f32s.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_bytes());
+        out.extend_from_slice(&(self.param_count as u64).to_le_bytes());
+        out.extend_from_slice(&(self.runs.len() as u64).to_le_bytes());
+        for r in &self.runs {
+            out.extend_from_slice(&(r.offset as u64).to_le_bytes());
+            out.extend_from_slice(&(r.values.len() as u64).to_le_bytes());
+            out.extend_from_slice(&r.mask.to_le_bytes());
+        }
+        for r in &self.runs {
+            for v in &r.values {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Parse and fully validate an [`SparseDelta::encode`] blob: the run
+    /// table must be sorted, non-overlapping, non-empty, in bounds, and
+    /// account for exactly the trailing value bytes.
+    pub fn decode(bytes: &[u8]) -> anyhow::Result<SparseDelta> {
+        let mut pos = 0usize;
+        let param_count = read_u64(bytes, &mut pos)? as usize;
+        let run_count = read_u64(bytes, &mut pos)? as usize;
+        anyhow::ensure!(
+            run_count <= (bytes.len() - pos) / RUN_HEADER_BYTES,
+            "sparse delta truncated: {run_count} runs declared in {} bytes",
+            bytes.len()
+        );
+        let mut header = Vec::with_capacity(run_count);
+        let mut prev_end = 0usize;
+        let mut total = 0usize;
+        for i in 0..run_count {
+            let offset = read_u64(bytes, &mut pos)? as usize;
+            let len = read_u64(bytes, &mut pos)? as usize;
+            let mask = read_f32(bytes, &mut pos)?;
+            anyhow::ensure!(len > 0, "sparse delta run {i} is empty");
+            anyhow::ensure!(
+                (i == 0 || offset >= prev_end)
+                    && offset
+                        .checked_add(len)
+                        .is_some_and(|end| end <= param_count),
+                "sparse delta run {i} ({offset}+{len}) out of order or out of bounds \
+                 (param_count {param_count})"
+            );
+            prev_end = offset + len;
+            total += len;
+            header.push((offset, len, mask));
+        }
+        anyhow::ensure!(
+            bytes.len() == pos + 4 * total,
+            "sparse delta length mismatch: {} bytes for {total} values",
+            bytes.len() - pos
+        );
+        let runs = header
+            .into_iter()
+            .map(|(offset, len, mask)| {
+                let values = (0..len)
+                    .map(|_| read_f32(bytes, &mut pos).expect("bounds checked above"))
+                    .collect();
+                Run { offset, mask, values }
+            })
+            .collect();
+        Ok(SparseDelta { param_count, runs })
+    }
+
+    /// Overlay the delta onto a base vector: untouched elements keep the
+    /// base bit-for-bit, runs replace their spans with the stored values.
+    pub fn to_dense(&self, base: &[f32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(
+            base.len() == self.param_count,
+            "sparse delta over {} params applied to a {}-param base",
+            self.param_count,
+            base.len()
+        );
+        let mut out = base.to_vec();
+        let mut prev_end = 0usize;
+        for r in &self.runs {
+            anyhow::ensure!(
+                r.offset >= prev_end && r.end() <= self.param_count,
+                "sparse delta runs out of order or out of bounds"
+            );
+            out[r.offset..r.end()].copy_from_slice(&r.values);
+            prev_end = r.end();
+        }
+        Ok(out)
+    }
+}
+
+fn read_u64(b: &[u8], pos: &mut usize) -> anyhow::Result<u64> {
+    anyhow::ensure!(*pos + 8 <= b.len(), "sparse delta truncated at byte {}", *pos);
+    let v = u64::from_le_bytes(b[*pos..*pos + 8].try_into().unwrap());
+    *pos += 8;
+    Ok(v)
+}
+
+fn read_f32(b: &[u8], pos: &mut usize) -> anyhow::Result<f32> {
+    anyhow::ensure!(*pos + 4 <= b.len(), "sparse delta truncated at byte {}", *pos);
+    let v = f32::from_le_bytes(b[*pos..*pos + 4].try_into().unwrap());
+    *pos += 4;
+    Ok(v)
+}
+
+/// The `(offset, len, mask)` spans a [`MaskSpec`] covers, merged across
+/// contiguous equal-mask tensors — the run structure
+/// [`SparseDelta::from_mask_spec`] materializes, exposed separately so
+/// communication pricing can size a payload without copying any values.
+pub fn mask_runs(m: &Manifest, mask: &MaskSpec) -> Vec<(usize, usize, f32)> {
+    fn push(spans: &mut Vec<(usize, usize, f32)>, offset: usize, len: usize, mval: f32) {
+        if len == 0 {
+            return;
+        }
+        if let Some(last) = spans.last_mut() {
+            if last.0 + last.1 == offset && last.2 == mval {
+                last.1 += len;
+                return;
+            }
+        }
+        spans.push((offset, len, mval));
+    }
+    let mut spans = Vec::new();
+    match mask {
+        MaskSpec::Tensor(tm) => {
+            assert_eq!(
+                tm.len(),
+                m.tensors.len(),
+                "mask_runs: tensor mask length {} != tensor count {}",
+                tm.len(),
+                m.tensors.len()
+            );
+            for (t, &v) in m.tensors.iter().zip(tm) {
+                if v != 0.0 {
+                    push(&mut spans, t.offset, t.size, v);
+                }
+            }
+        }
+        MaskSpec::Prefix(f) => {
+            assert_eq!(
+                f.len(),
+                m.tensors.len(),
+                "mask_runs: prefix mask length {} != tensor count {}",
+                f.len(),
+                m.tensors.len()
+            );
+            for (t, &fr) in m.tensors.iter().zip(f) {
+                let n = ((t.size as f64) * fr.clamp(0.0, 1.0) as f64).round() as usize;
+                push(&mut spans, t.offset, n.min(t.size), 1.0);
+            }
+        }
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::manifest::tests_support::toy_manifest;
+
+    fn params26() -> Vec<f32> {
+        (0..26).map(|i| i as f32 * 0.25 - 2.0).collect()
+    }
+
+    #[test]
+    fn tensor_mask_produces_merged_runs() {
+        // toy manifest: tensors of size 8/4/10/4 at offsets 0/8/12/22
+        let m = toy_manifest();
+        let d = SparseDelta::from_mask_spec(
+            &m,
+            &MaskSpec::Tensor(vec![1.0, 0.0, 0.5, 1.0]),
+            params26(),
+        );
+        assert_eq!(d.param_count, 26);
+        let spans: Vec<(usize, usize, f32)> =
+            d.runs.iter().map(|r| (r.offset, r.values.len(), r.mask)).collect();
+        // tensor 2 and 3 touch (12+10 == 22) but differ in mask: no merge
+        assert_eq!(spans, vec![(0, 8, 1.0), (12, 10, 0.5), (22, 4, 1.0)]);
+        assert_eq!(d.runs[1].values, params26()[12..22]);
+        assert_eq!(d.masked_elements(), 22);
+        assert!(d.dense_view().is_none());
+    }
+
+    #[test]
+    fn adjacent_equal_mask_tensors_merge() {
+        let m = toy_manifest();
+        let d = SparseDelta::from_mask_spec(
+            &m,
+            &MaskSpec::Tensor(vec![1.0, 1.0, 0.0, 0.0]),
+            params26(),
+        );
+        let spans: Vec<(usize, usize, f32)> =
+            d.runs.iter().map(|r| (r.offset, r.values.len(), r.mask)).collect();
+        assert_eq!(spans, vec![(0, 12, 1.0)]);
+    }
+
+    #[test]
+    fn full_coverage_is_the_dense_fallback() {
+        let m = toy_manifest();
+        let p = params26();
+        let d = SparseDelta::from_mask_spec(&m, &MaskSpec::Tensor(vec![1.0; 4]), p.clone());
+        assert_eq!(d.runs.len(), 1);
+        assert_eq!(d.dense_view(), Some(&p[..]));
+        // and overlaying it on anything returns the values themselves
+        assert_eq!(d.to_dense(&vec![9.0; 26]).unwrap(), p);
+    }
+
+    #[test]
+    fn prefix_mask_covers_leading_fractions() {
+        let m = toy_manifest();
+        let d = SparseDelta::from_mask_spec(
+            &m,
+            &MaskSpec::Prefix(vec![0.5, 0.0, 1.0, 0.0]),
+            params26(),
+        );
+        let spans: Vec<(usize, usize, f32)> =
+            d.runs.iter().map(|r| (r.offset, r.values.len(), r.mask)).collect();
+        // half of tensor 0 (8 -> 4 elements), all of tensor 2
+        assert_eq!(spans, vec![(0, 4, 1.0), (12, 10, 1.0)]);
+        // matches the element-level expansion exactly
+        let elem = m.expand_prefix_mask(&[0.5, 0.0, 1.0, 0.0]);
+        let p = params26();
+        assert_eq!(d, SparseDelta::from_dense_mask(&elem, &p));
+    }
+
+    #[test]
+    fn spec_and_dense_mask_constructors_agree() {
+        let m = toy_manifest();
+        let p = params26();
+        for mask in [
+            MaskSpec::Tensor(vec![1.0, 0.0, 0.5, 1.0]),
+            MaskSpec::Tensor(vec![0.0; 4]),
+            MaskSpec::Tensor(vec![1.0; 4]),
+            MaskSpec::Prefix(vec![0.3, 1.0, 0.0, 1.0]),
+        ] {
+            let from_spec = SparseDelta::from_mask_spec(&m, &mask, p.clone());
+            let from_elem = SparseDelta::from_dense_mask(&mask.expand(&m), &p);
+            assert_eq!(from_spec, from_elem, "{mask:?}");
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trips_and_sizes_exactly() {
+        let m = toy_manifest();
+        for mask in [
+            MaskSpec::Tensor(vec![1.0, 0.0, 0.5, 1.0]),
+            MaskSpec::Tensor(vec![0.0; 4]),
+            MaskSpec::Tensor(vec![1.0; 4]),
+        ] {
+            let d = SparseDelta::from_mask_spec(&m, &mask, params26());
+            let bytes = d.encode();
+            assert_eq!(bytes.len(), d.encoded_bytes(), "{mask:?}");
+            assert_eq!(SparseDelta::decode(&bytes).unwrap(), d, "{mask:?}");
+        }
+        // empty vector, empty delta
+        let empty = SparseDelta::dense(Vec::new());
+        assert_eq!(empty.dense_view(), Some(&[][..]));
+        assert_eq!(SparseDelta::decode(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn decode_rejects_malformed_run_tables() {
+        let d = SparseDelta::from_mask_spec(
+            &toy_manifest(),
+            &MaskSpec::Tensor(vec![1.0, 0.0, 0.5, 1.0]),
+            params26(),
+        );
+        let good = d.encode();
+        assert!(SparseDelta::decode(&good[..good.len() - 1]).is_err(), "truncated values");
+        assert!(SparseDelta::decode(&good[..10]).is_err(), "truncated header");
+        // out-of-bounds run: bump the first run's offset past param_count
+        let mut bad = good.clone();
+        bad[16..24].copy_from_slice(&100u64.to_le_bytes());
+        assert!(SparseDelta::decode(&bad).is_err(), "out of bounds");
+        // overlap: move the second run back onto the first
+        let mut bad = good.clone();
+        bad[36..44].copy_from_slice(&2u64.to_le_bytes());
+        assert!(SparseDelta::decode(&bad).is_err(), "overlapping runs");
+    }
+
+    #[test]
+    fn diff_then_overlay_reconstructs_bitwise() {
+        let base: Vec<f32> = (0..40).map(|i| (i as f32).sin()).collect();
+        let mut next = base.clone();
+        next[3] = -0.0; // sin(3) != -0.0; a signed-zero value must survive
+        next[10] = f32::NAN;
+        for k in 20..25 {
+            next[k] += 1.0;
+        }
+        let d = SparseDelta::diff(&base, &next);
+        assert_eq!(d.runs.len(), 3);
+        let back = d.to_dense(&base).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back), bits(&next));
+        // identical vectors diff to nothing
+        assert_eq!(SparseDelta::diff(&base, &base).runs.len(), 0);
+        // and a sparse diff encodes far smaller than the dense vector
+        assert!(d.encoded_bytes() < 4 * base.len());
+    }
+
+    #[test]
+    fn to_dense_validates_base_length() {
+        let d = SparseDelta::dense(vec![1.0, 2.0]);
+        assert!(d.to_dense(&[0.0; 3]).is_err());
+        assert_eq!(d.to_dense(&[0.0, 0.0]).unwrap(), vec![1.0, 2.0]);
+    }
+}

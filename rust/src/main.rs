@@ -31,7 +31,7 @@
 //!       --zip strategy=fedavg,fedel --zip time.t_th_factor=1.0,0.8 --rounds 20
 //!   fedel campaign report --name sweep --store runs --over seed --json report.json
 //!   fedel campaign report --name sweep --store runs --over seed,fleet
-//!   fedel runs serve --root runs --addr 0.0.0.0:7878
+//!   fedel runs serve --root runs --addr 0.0.0.0:7878 --upload-gc-secs 900
 //!   fedel campaign run --name sweep --store http://hub:7878   # remote worker
 //!   fedel compare --model mock:8x100 --strategies fedavg,fedel --rounds 20
 //!   fedel inspect --model vgg_cifar
@@ -246,8 +246,15 @@ fn cmd_runs(args: &Args) -> anyhow::Result<()> {
         );
         let addr = args.str_or("addr", "127.0.0.1:7878");
         let threads = args.usize_or("threads", 4);
+        // Abandoned upload sessions are swept once untouched this long.
+        let gc_secs = args.u64_or("upload-gc-secs", 900);
         args.check_unused()?;
-        let server = fedel::store::backend::serve::StoreServer::start(&root, &addr, threads)?;
+        let server = fedel::store::backend::serve::StoreServer::start_with_upload_gc(
+            &root,
+            &addr,
+            threads,
+            Duration::from_secs(gc_secs),
+        )?;
         println!(
             "serving store {root} on http://{} — point workers at --store http://{}",
             server.addr(),

@@ -181,7 +181,13 @@ impl Manifest {
     /// Expand a per-tensor [K] mask into the element-level [P] mask the
     /// train artifact consumes. Fractional values allowed (HeteroFL).
     pub fn expand_mask(&self, tensor_mask: &[f32]) -> Vec<f32> {
-        assert_eq!(tensor_mask.len(), self.tensors.len());
+        assert_eq!(
+            tensor_mask.len(),
+            self.tensors.len(),
+            "expand_mask: tensor mask holds {} entries, manifest has {} tensors",
+            tensor_mask.len(),
+            self.tensors.len()
+        );
         let mut out = vec![0.0f32; self.param_count];
         for (t, &m) in self.tensors.iter().zip(tensor_mask) {
             if m != 0.0 {
@@ -195,7 +201,13 @@ impl Manifest {
     /// [0,1] marks the leading fraction of tensor k's elements as
     /// trainable (HeteroFL-style width scaling at element granularity).
     pub fn expand_prefix_mask(&self, frac: &[f32]) -> Vec<f32> {
-        assert_eq!(frac.len(), self.tensors.len());
+        assert_eq!(
+            frac.len(),
+            self.tensors.len(),
+            "expand_prefix_mask: coverage holds {} entries, manifest has {} tensors",
+            frac.len(),
+            self.tensors.len()
+        );
         let mut out = vec![0.0f32; self.param_count];
         for (t, &f) in self.tensors.iter().zip(frac) {
             let n = ((t.size as f64) * f.clamp(0.0, 1.0) as f64).round() as usize;
@@ -227,7 +239,13 @@ impl Manifest {
     /// (the [`MaskSpec::tensor_coverage`](crate::strategies::MaskSpec)
     /// form): the communication model's upload payload.
     pub fn masked_param_count(&self, coverage: &[f32]) -> f64 {
-        debug_assert_eq!(coverage.len(), self.tensors.len());
+        assert_eq!(
+            coverage.len(),
+            self.tensors.len(),
+            "masked_param_count: coverage holds {} entries, manifest has {} tensors",
+            coverage.len(),
+            self.tensors.len()
+        );
         self.tensors
             .iter()
             .zip(coverage)
@@ -382,6 +400,24 @@ mod tests {
         assert_eq!(mask[0..4], [1.0, 1.0, 1.0, 1.0]);
         assert_eq!(mask[4..8], [0.0, 0.0, 0.0, 0.0]);
         assert!(mask[12..22].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "expand_mask: tensor mask holds 3 entries")]
+    fn expand_mask_rejects_short_mask() {
+        toy().expand_mask(&[1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "expand_prefix_mask: coverage holds 5 entries")]
+    fn expand_prefix_mask_rejects_long_mask() {
+        toy().expand_prefix_mask(&[1.0; 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "masked_param_count: coverage holds 2 entries")]
+    fn masked_param_count_rejects_short_coverage() {
+        toy().masked_param_count(&[1.0, 0.5]);
     }
 
     #[test]

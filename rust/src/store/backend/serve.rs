@@ -33,7 +33,12 @@
 //! Upload sessions live under `<root>/.uploads/<sid>` and are appended by
 //! `PATCH` with strictly sequential `Content-Range`s; a commit (`PUT`)
 //! verifies the digest server-side before publishing, so a torn or
-//! corrupted upload can never become a blob.
+//! corrupted upload can never become a blob. Sessions abandoned before
+//! commit (a crashed worker mid-upload) are garbage-collected lazily:
+//! opening a new session sweeps any session file untouched for longer
+//! than the server's upload max-age ([`DEFAULT_UPLOAD_MAX_AGE`], or
+//! `--upload-gc-secs` on the CLI), so orphans can never accumulate
+//! unboundedly while live uploads — which append continuously — survive.
 
 use std::io::{BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -51,6 +56,13 @@ use super::{LocalBackend, StoreBackend};
 /// Per-connection socket timeout: a wedged peer must not pin a worker.
 const IO_TIMEOUT: Duration = Duration::from_secs(30);
 
+/// Default age after which an uncommitted upload session counts as
+/// abandoned and is swept ([`StoreServer::start_with_upload_gc`] to
+/// override). Generous next to the 30s socket timeout: a client retrying
+/// a resumable upload across several dropped connections keeps its
+/// session as long as any chunk lands within the window.
+pub const DEFAULT_UPLOAD_MAX_AGE: Duration = Duration::from_secs(15 * 60);
+
 /// A running store server; shut down (and joined) via
 /// [`StoreServer::shutdown`], or detached for the lifetime of the process
 /// with [`StoreServer::serve_forever`].
@@ -63,11 +75,24 @@ pub struct StoreServer {
 
 impl StoreServer {
     /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and serve
-    /// the store rooted at `root` on `threads` worker threads.
+    /// the store rooted at `root` on `threads` worker threads, sweeping
+    /// abandoned upload sessions after [`DEFAULT_UPLOAD_MAX_AGE`].
     pub fn start(
         root: impl Into<PathBuf>,
         addr: &str,
         threads: usize,
+    ) -> anyhow::Result<StoreServer> {
+        StoreServer::start_with_upload_gc(root, addr, threads, DEFAULT_UPLOAD_MAX_AGE)
+    }
+
+    /// [`StoreServer::start`] with an explicit upload-session max-age:
+    /// sessions whose file hasn't been touched for `upload_max_age` are
+    /// swept the next time any upload opens (`--upload-gc-secs`).
+    pub fn start_with_upload_gc(
+        root: impl Into<PathBuf>,
+        addr: &str,
+        threads: usize,
+        upload_max_age: Duration,
     ) -> anyhow::Result<StoreServer> {
         let backend = Arc::new(LocalBackend::open(root)?);
         let listener =
@@ -85,7 +110,7 @@ impl StoreServer {
                         Ok(s) => s,
                         Err(_) => return, // channel closed: shutdown
                     };
-                    serve_connection(stream, &backend);
+                    serve_connection(stream, &backend, upload_max_age);
                 })
             })
             .collect();
@@ -131,7 +156,7 @@ impl StoreServer {
     }
 }
 
-fn serve_connection(stream: TcpStream, backend: &LocalBackend) {
+fn serve_connection(stream: TcpStream, backend: &LocalBackend, upload_max_age: Duration) {
     let _ = stream.set_read_timeout(Some(IO_TIMEOUT));
     let _ = stream.set_write_timeout(Some(IO_TIMEOUT));
     let mut reader = BufReader::new(match stream.try_clone() {
@@ -142,7 +167,7 @@ fn serve_connection(stream: TcpStream, backend: &LocalBackend) {
         Ok(Some(req)) => req,
         Ok(None) | Err(_) => return, // probe/shutdown connect or torn request
     };
-    let resp = handle(&req, backend)
+    let resp = handle(&req, backend, upload_max_age)
         .unwrap_or_else(|e| error_response(500, &format!("internal error: {e:#}")));
     let mut w = stream;
     let _ = write_response(&mut w, &resp);
@@ -170,12 +195,18 @@ fn parse_digest(s: &str) -> Option<&str> {
         .then_some(hex)
 }
 
-fn handle(req: &Request, backend: &LocalBackend) -> anyhow::Result<Response> {
+fn handle(
+    req: &Request,
+    backend: &LocalBackend,
+    upload_max_age: Duration,
+) -> anyhow::Result<Response> {
     let segments: Vec<&str> =
         req.path().split('/').filter(|s| !s.is_empty()).collect();
     match segments.as_slice() {
         ["v2"] => Ok(Response::json(200, &Json::obj(vec![]))),
-        ["v2", "runs", "blobs", "uploads"] => handle_upload_open(req, backend),
+        ["v2", "runs", "blobs", "uploads"] => {
+            handle_upload_open(req, backend, upload_max_age)
+        }
         ["v2", "runs", "blobs", "uploads", sid] => handle_upload_session(req, backend, sid),
         ["v2", repo @ ("runs" | "campaigns"), "blobs", digest] => {
             handle_blob(req, backend, repo, digest)
@@ -225,7 +256,35 @@ fn session_path(backend: &LocalBackend, sid: &str) -> PathBuf {
     uploads_dir(backend).join(sid)
 }
 
-fn handle_upload_open(req: &Request, backend: &LocalBackend) -> anyhow::Result<Response> {
+/// Sweep upload sessions untouched for `max_age` — abandoned by crashed
+/// or wandered-off clients. Runs under the open path (the only place new
+/// session files appear), so a server with no upload traffic pays
+/// nothing. Best-effort on purpose: an unreadable mtime or a future
+/// timestamp (clock skew) counts as young — never guess toward deletion —
+/// and a racing `remove_file` failure is ignored (the next open retries).
+fn sweep_stale_uploads(dir: &std::path::Path, max_age: Duration) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return; // no uploads dir yet: nothing to sweep
+    };
+    for entry in entries.flatten() {
+        let stale = entry
+            .metadata()
+            .ok()
+            .and_then(|m| m.modified().ok())
+            .and_then(|t| t.elapsed().ok())
+            .map(|age| age >= max_age)
+            .unwrap_or(false);
+        if stale {
+            let _ = std::fs::remove_file(entry.path());
+        }
+    }
+}
+
+fn handle_upload_open(
+    req: &Request,
+    backend: &LocalBackend,
+    upload_max_age: Duration,
+) -> anyhow::Result<Response> {
     if req.method != "POST" {
         return Ok(error_response(405, "uploads open with POST"));
     }
@@ -236,6 +295,7 @@ fn handle_upload_open(req: &Request, backend: &LocalBackend) -> anyhow::Result<R
         SESSION.fetch_add(1, Ordering::Relaxed)
     );
     let dir = uploads_dir(backend);
+    sweep_stale_uploads(&dir, upload_max_age);
     std::fs::create_dir_all(&dir).map_err(|e| anyhow::anyhow!("create {dir:?}: {e}"))?;
     std::fs::write(session_path(backend, &sid), b"")?;
     Ok(Response::new(202)

@@ -6,6 +6,16 @@
 //! last checkpoint on disk, and [`resume_state`] turns that back into the
 //! [`ResumeState`] the round loop continues from.
 //!
+//! Parameter blobs delta-encode (schema v4): once a full snapshot exists,
+//! subsequent checkpoints store only the elements whose f32 bits changed
+//! since the previous checkpoint, as a [`SparseDelta`] blob chained
+//! against that base ([`Checkpoint::params_chain`]). Chains are capped at
+//! [`MAX_DELTA_CHAIN`] links — and a delta that would not beat the dense
+//! encoding rebases immediately — so resume cost stays bounded and
+//! `runs gc` retires old bases once no chain references them. The diff is
+//! bitwise (changed bits copied, never re-derived), so a resumed run is
+//! still bit-identical to an uninterrupted one.
+//!
 //! Persistence failures follow the [`crate::fl::observer::JsonlObserver`]
 //! idiom: best-effort during the run (a full disk never aborts training),
 //! with the first error retained for callers that need the checkpoints to
@@ -14,10 +24,17 @@
 use crate::config::ExperimentCfg;
 use crate::fl::observer::{RoundObserver, ServerState};
 use crate::fl::server::{ExperimentResult, ResumeState, RoundRecord};
+use crate::fl::sparse::SparseDelta;
 use crate::store::schema::{BlobRef, Checkpoint, FinalState, RunManifest, RunStatus, SCHEMA_VERSION};
 use crate::store::RunStore;
 use crate::util::json::Json;
 use crate::util::unix_now;
+
+/// Longest delta chain a checkpoint may ride before the next checkpoint
+/// stores a full vector again (chain = 1 full base + up to 7 deltas).
+/// Bounds both resume cost (one blob fetch per link) and how long a
+/// superseded base must stay alive for gc.
+pub const MAX_DELTA_CHAIN: usize = 8;
 
 pub struct CheckpointObserver<'s> {
     store: &'s RunStore,
@@ -31,6 +48,14 @@ pub struct CheckpointObserver<'s> {
     /// PJRT workloads whose round cost varies.
     secs: Option<f64>,
     last_persist: std::time::Instant,
+    /// Delta-encoding state: the previous persisted checkpoint's blob
+    /// chain (its `params_chain` plus its own blob) and the exact global
+    /// vector it encodes — the diff base for the next checkpoint. `None`
+    /// until the first checkpoint lands (or after a persistence error), so
+    /// the next one stores a full vector; resumed observers also start
+    /// `None` rather than re-fetch the old chain, which merely costs one
+    /// full snapshot after each resume.
+    last: Option<(Vec<BlobRef>, Vec<f32>)>,
     error: Option<anyhow::Error>,
 }
 
@@ -81,6 +106,7 @@ impl<'s> CheckpointObserver<'s> {
             every,
             secs: None,
             last_persist: std::time::Instant::now(),
+            last: None,
             error: None,
         })
     }
@@ -94,6 +120,7 @@ impl<'s> CheckpointObserver<'s> {
             every: every.max(1),
             secs: None,
             last_persist: std::time::Instant::now(),
+            last: None,
             error: None,
         }
     }
@@ -141,7 +168,28 @@ impl RoundObserver for CheckpointObserver<'_> {
         }
         self.last_persist = std::time::Instant::now();
         let r = (|| {
-            let params = self.store.put_params(st.global)?;
+            // Delta-encode against the previous checkpoint while the chain
+            // is short and a delta actually beats a dense blob (few rounds
+            // between checkpoints touch few elements; a full-coverage
+            // round changes everything and rebases). `take()` means a
+            // failure below falls back to a full snapshot next time.
+            let (params, chain) = match self.last.take() {
+                Some((prev_chain, prev_params))
+                    if prev_chain.len() < MAX_DELTA_CHAIN
+                        && prev_params.len() == st.global.len() =>
+                {
+                    let delta = SparseDelta::diff(&prev_params, st.global);
+                    if delta.encoded_bytes() < 4 * st.global.len() {
+                        (self.store.put_params_delta(&delta)?, prev_chain)
+                    } else {
+                        (self.store.put_params(st.global)?, Vec::new())
+                    }
+                }
+                _ => (self.store.put_params(st.global)?, Vec::new()),
+            };
+            let mut next_chain = chain.clone();
+            next_chain.push(params.clone());
+            self.last = Some((next_chain, st.global.to_vec()));
             // Async snapshots carry whole parameter vectors (referenced
             // global versions, buffered updates); externalizing them into
             // content-addressed blobs keeps the manifest small and dedups
@@ -154,6 +202,7 @@ impl RoundObserver for CheckpointObserver<'_> {
                 completed: st.completed,
                 sim_time: st.sim_time,
                 params,
+                params_chain: chain,
                 policy_state: st.strategy.policy_state(),
                 async_state,
             });
@@ -202,7 +251,7 @@ pub fn resume_state(store: &RunStore, manifest: &RunManifest) -> anyhow::Result<
     Ok(ResumeState {
         completed: ck.completed,
         sim_time: ck.sim_time,
-        global: store.get_params(&ck.params)?,
+        global: store.resolve_params(&ck.params, &ck.params_chain)?,
         policy_state: ck.policy_state.clone(),
         prior_records: manifest.records[..ck.completed].to_vec(),
         async_state: inline_async_state(store, &ck.async_state)?,

@@ -9,9 +9,11 @@
 //!   runs/<id>/manifest.json   versioned RunManifest (schema.rs): config
 //!                             snapshot, round records, latest checkpoint,
 //!                             final summary
-//!   blobs/<sha256-hex>        content-addressed blobs (global parameter
-//!                             vectors, f32 little-endian) — identical
-//!                             snapshots dedup across rounds and runs
+//!   blobs/<sha256-hex>        content-addressed blobs: global parameter
+//!                             vectors (f32 little-endian) and sparse
+//!                             checkpoint deltas against the previous
+//!                             round's base — identical snapshots dedup
+//!                             across rounds and runs
 //! ```
 //!
 //! * [`checkpoint::CheckpointObserver`] hangs off the server's observer
@@ -60,6 +62,14 @@ pub use self::backend::StoreLock;
 /// Media type of a little-endian f32 parameter-vector blob (the same
 /// encoding as the artifacts' `init.bin`).
 pub const MEDIA_PARAMS_F32LE: &str = "application/x-fedel-params.f32le";
+
+/// Media type of a sparse parameter *delta* blob
+/// ([`crate::fl::sparse::SparseDelta::encode`]): run-encoded changed
+/// elements against some base vector. Checkpoints chain these against the
+/// previous checkpoint's params ([`schema::Checkpoint::params_chain`]);
+/// the media type keeps a delta from ever being decoded as a raw f32
+/// vector.
+pub const MEDIA_PARAMS_DELTA: &str = "application/x-fedel-params.delta";
 
 /// How many times an optimistic campaign CAS loop reloads before giving
 /// up. Claims conflict only while several workers race the same manifest;
@@ -219,17 +229,65 @@ impl RunStore {
             .collect())
     }
 
+    /// Store a sparse parameter delta ([`crate::fl::sparse::SparseDelta`])
+    /// under its content address.
+    pub fn put_params_delta(
+        &self,
+        delta: &crate::fl::sparse::SparseDelta,
+    ) -> anyhow::Result<BlobRef> {
+        self.put_blob(&delta.encode(), MEDIA_PARAMS_DELTA)
+    }
+
+    pub fn get_params_delta(
+        &self,
+        r: &BlobRef,
+    ) -> anyhow::Result<crate::fl::sparse::SparseDelta> {
+        anyhow::ensure!(
+            r.media_type == MEDIA_PARAMS_DELTA,
+            "blob {} is {:?}, not a parameter delta",
+            r.digest,
+            r.media_type
+        );
+        let bytes = self.get_blob(r)?;
+        crate::fl::sparse::SparseDelta::decode(&bytes)
+            .map_err(|e| anyhow::anyhow!("delta blob {}: {e}", r.digest))
+    }
+
+    /// Reconstruct a checkpoint's full parameter vector from its blob plus
+    /// its delta chain ([`schema::Checkpoint::params_chain`]). An empty
+    /// chain means `params` is already a full vector. Otherwise the chain's
+    /// first entry is the full base and every later entry a delta against
+    /// its predecessor, oldest first; `params` itself (the newest delta) is
+    /// overlaid last. Reconstruction is bitwise: deltas copy the exact f32
+    /// bits that were diffed out, never re-derived arithmetic.
+    pub fn resolve_params(
+        &self,
+        params: &BlobRef,
+        chain: &[BlobRef],
+    ) -> anyhow::Result<Vec<f32>> {
+        let Some((base, deltas)) = chain.split_first() else {
+            return self.get_params(params);
+        };
+        let mut current = self.get_params(base)?;
+        for r in deltas.iter().chain(std::iter::once(params)) {
+            current = self.get_params_delta(r)?.to_dense(&current)?;
+        }
+        Ok(current)
+    }
+
     /// Warm-start source: a stored run's newest global parameters — the
-    /// final model if complete, else the latest checkpoint.
+    /// final model if complete, else the latest checkpoint (resolved
+    /// through its delta chain, if any).
     pub fn latest_params(&self, id: &str) -> anyhow::Result<Vec<f32>> {
         let m = self.load_manifest(id)?;
-        let blob = m
-            .final_state
+        if let Some(f) = m.final_state.as_ref() {
+            return self.get_params(&f.params);
+        }
+        let ck = m
+            .checkpoint
             .as_ref()
-            .map(|f| &f.params)
-            .or_else(|| m.checkpoint.as_ref().map(|c| &c.params))
             .ok_or_else(|| anyhow::anyhow!("run {id} has no stored parameters yet"))?;
-        self.get_params(blob)
+        self.resolve_params(&ck.params, &ck.params_chain)
     }
 
     // -- gc -----------------------------------------------------------------
@@ -237,8 +295,9 @@ impl RunStore {
     /// Mark-and-sweep orphaned blobs: hand-deleting `runs/<id>/` leaves
     /// its content-addressed parameter snapshots stranded under `blobs/`
     /// forever; this walks every *readable* manifest, marks the digests
-    /// they reference (checkpoint and final params, plus any blob refs
-    /// inside async checkpoint state), and sweeps the rest.
+    /// they reference (checkpoint and final params, every base/delta blob
+    /// in a checkpoint's delta chain, plus any blob refs inside async
+    /// checkpoint state), and sweeps the rest.
     ///
     /// Local-backend only: gc must see every blob and hold the store
     /// lock, so it runs on the serving host against the directory itself.
@@ -280,7 +339,7 @@ impl RunStore {
             for blob in m
                 .checkpoint
                 .iter()
-                .map(|c| &c.params)
+                .flat_map(|c| std::iter::once(&c.params).chain(c.params_chain.iter()))
                 .chain(m.final_state.iter().map(|f| &f.params))
             {
                 if let Some(hex) = blob.digest.strip_prefix("sha256:") {
@@ -584,6 +643,7 @@ mod tests {
                 completed: 1,
                 sim_time: 1.0,
                 params: store.put_params(p).unwrap(),
+                params_chain: Vec::new(),
                 policy_state: crate::util::json::Json::Null,
                 async_state: crate::util::json::Json::Null,
             }),
@@ -650,6 +710,53 @@ mod tests {
         assert_eq!(report.swept, 0, "{report:?}");
         assert_eq!(report.live, 2, "checkpoint params + async version params");
         assert_eq!(store.get_params(&version_params).unwrap(), vec![9.0, 10.0, 11.0]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn delta_chain_resolves_bitwise_and_gc_keeps_it_alive() {
+        use crate::fl::sparse::SparseDelta;
+        let dir = scratch("delta-chain");
+        let store = RunStore::open(&dir).unwrap();
+        let g0 = vec![1.0f32, -0.0, 3.0, 4.0, 5.0, 6.0];
+        let mut g1 = g0.clone();
+        g1[1] = 0.0; // -0.0 -> +0.0 is a bitwise change a delta must carry
+        g1[4] = 5.5;
+        let mut g2 = g1.clone();
+        g2[0] = f32::MIN_POSITIVE;
+
+        let base = store.put_params(&g0).unwrap();
+        let d1 = store.put_params_delta(&SparseDelta::diff(&g0, &g1)).unwrap();
+        let d2 = store.put_params_delta(&SparseDelta::diff(&g1, &g2)).unwrap();
+        assert_eq!(d2.media_type, MEDIA_PARAMS_DELTA);
+        // a delta blob must never decode as a raw vector, or vice versa
+        assert!(store.get_params(&d2).is_err());
+        assert!(store.get_params_delta(&base).is_err());
+
+        // empty chain: params is already full
+        let full = store.resolve_params(&base, &[]).unwrap();
+        assert_eq!(full.len(), g0.len());
+        // chained: base, then d1, then the checkpoint's own blob d2
+        let back = store.resolve_params(&d2, &[base.clone(), d1.clone()]).unwrap();
+        assert_eq!(back.len(), g2.len());
+        for (a, b) in g2.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // a manifest whose checkpoint rides that chain keeps every link
+        // alive through gc, and latest_params resolves through it
+        let mut m = manifest_with_params(&store, "chained-s1", Some(&g0), None);
+        let ck = m.checkpoint.as_mut().unwrap();
+        ck.params = d2.clone();
+        ck.params_chain = vec![base, d1];
+        store.save_manifest(&m).unwrap();
+        let report = store.gc_blobs(Duration::ZERO, false).unwrap();
+        assert_eq!(report.swept, 0, "{report:?}");
+        assert_eq!(report.live, 3, "base + 2 deltas (g0 blob is the chain base)");
+        let latest = store.latest_params("chained-s1").unwrap();
+        for (a, b) in g2.iter().zip(&latest) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

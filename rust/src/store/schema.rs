@@ -39,7 +39,14 @@ use crate::util::json::Json;
 /// resume unchanged (inline arrays pass through); v3 is a distinct
 /// version because a v2-era binary would feed the BlobRef object to the
 /// async runner's array decoder and fail.
-pub const SCHEMA_VERSION: usize = 3;
+///
+/// v3 -> v4: checkpoints may delta-encode their parameter blob against
+/// the previous checkpoint's ([`Checkpoint::params_chain`] names the
+/// base-to-delta blob chain; empty = `params` is a full vector, which is
+/// exactly what every v≤3 manifest reads as). v4 is a distinct version
+/// because a v3-era binary would decode a delta blob as a raw f32 vector
+/// and resume from garbage.
+pub const SCHEMA_VERSION: usize = 4;
 
 /// Oldest run-manifest schema `RunManifest::from_json` still accepts.
 pub const SCHEMA_MIN: usize = 1;
@@ -106,8 +113,19 @@ pub struct Checkpoint {
     pub completed: usize,
     /// Simulated clock at that point.
     pub sim_time: f64,
-    /// Global parameters after round `completed - 1`.
+    /// Global parameters after round `completed - 1`. A full f32 vector
+    /// blob when `params_chain` is empty; otherwise a sparse-delta blob
+    /// ([`crate::store::MEDIA_PARAMS_DELTA`]) to overlay on the resolved
+    /// chain.
     pub params: BlobRef,
+    /// Delta-encoding ancestry of `params`: a full-vector base blob
+    /// followed by the intermediate delta blobs, oldest first. Empty =
+    /// `params` is itself a full vector (the only shape v≤3 writers
+    /// produced, so old manifests load unchanged). Resolution:
+    /// `chain[0]` decoded dense, each later entry overlaid in order,
+    /// then `params` overlaid last
+    /// ([`crate::store::RunStore::resolve_params`]).
+    pub params_chain: Vec<BlobRef>,
     /// [`crate::strategies::Strategy::policy_state`] snapshot (includes
     /// any strategy RNG state; `Null` for stateless strategies).
     pub policy_state: Json,
@@ -119,20 +137,38 @@ pub struct Checkpoint {
 
 impl Checkpoint {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("completed", Json::Num(self.completed as f64)),
             ("sim_time", Json::Num(self.sim_time)),
             ("params", self.params.to_json()),
-            ("policy_state", self.policy_state.clone()),
-            ("async_state", self.async_state.clone()),
-        ])
+        ];
+        // Omit-at-default: full-vector checkpoints keep the v≤3 shape.
+        if !self.params_chain.is_empty() {
+            fields.push((
+                "params_chain",
+                Json::Arr(self.params_chain.iter().map(BlobRef::to_json).collect()),
+            ));
+        }
+        fields.push(("policy_state", self.policy_state.clone()));
+        fields.push(("async_state", self.async_state.clone()));
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<Checkpoint> {
+        let params_chain = match j.get("params_chain") {
+            None | Some(Json::Null) => Vec::new(),
+            Some(v) => v
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("checkpoint params_chain not an array"))?
+                .iter()
+                .map(BlobRef::from_json)
+                .collect::<anyhow::Result<_>>()?,
+        };
         Ok(Checkpoint {
             completed: j.u("completed")?,
             sim_time: j.f("sim_time")?,
             params: BlobRef::from_json(j.req("params")?)?,
+            params_chain,
             policy_state: j.get("policy_state").cloned().unwrap_or(Json::Null),
             async_state: j.get("async_state").cloned().unwrap_or(Json::Null),
         })
@@ -593,6 +629,7 @@ mod tests {
                     size: 16,
                     media_type: crate::store::MEDIA_PARAMS_F32LE.into(),
                 },
+                params_chain: Vec::new(),
                 policy_state: Json::obj(vec![("x", Json::from_f64s(&[1.5, -2.25]))]),
                 async_state: Json::obj(vec![("mode", Json::Str("buffered".into()))]),
             }),
@@ -617,6 +654,30 @@ mod tests {
         assert_eq!(ck.policy_state, m.checkpoint.as_ref().unwrap().policy_state);
         assert_eq!(ck.async_state, m.checkpoint.as_ref().unwrap().async_state);
         assert!(back.final_state.is_none());
+    }
+
+    #[test]
+    fn delta_checkpoint_chain_round_trips_and_defaults_empty() {
+        let mut m = manifest();
+        // full-vector checkpoints must not write the key at all (v≤3 shape)
+        let j = m.to_json();
+        let ck_json = j.req("checkpoint").unwrap();
+        assert!(ck_json.get("params_chain").is_none());
+
+        let base = BlobRef {
+            digest: "sha256:aa".into(),
+            size: 64,
+            media_type: crate::store::MEDIA_PARAMS_F32LE.into(),
+        };
+        let mid = BlobRef {
+            digest: "sha256:bb".into(),
+            size: 40,
+            media_type: crate::store::MEDIA_PARAMS_DELTA.into(),
+        };
+        m.checkpoint.as_mut().unwrap().params_chain = vec![base.clone(), mid.clone()];
+        let text = m.to_json().to_string_pretty();
+        let back = RunManifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.checkpoint.unwrap().params_chain, vec![base, mid]);
     }
 
     #[test]

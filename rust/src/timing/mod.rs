@@ -113,7 +113,10 @@ pub const FWD_COST_FRAC: f64 = 0.6;
 /// payload, which made the communication savings of partial training
 /// invisible. [`CommModel::Bandwidth`] prices each transfer from its
 /// actual payload: `latency + payload_bytes * 8 / (mbps * 1e6)` per
-/// direction, so a FedEL client uploading a masked sub-model banks real
+/// direction. Upload bytes are the *encoded sparse payload* — run headers
+/// plus the masked elements' f32s, exactly what
+/// [`crate::fl::sparse::SparseDelta::encoded_bytes`] reports for the
+/// plan's mask — so a FedEL client uploading a masked sub-model banks real
 /// time-to-accuracy savings over a full-model FedAvg upload
 /// (`comm.up_mbps` / `comm.down_mbps` / `comm.latency_secs` in the
 /// parameter space). A rate of 0 makes that direction free apart from

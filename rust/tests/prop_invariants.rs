@@ -237,7 +237,7 @@ fn prop_masked_aggregation_convex_hull() {
             let p = global.len();
             let mut agg = MaskedAggregator::new(p, AggregateRule::Masked);
             for (params, mask) in clients {
-                agg.add(params, mask, 1.0, 1, global);
+                agg.add(params, mask, 1.0, 1, global).unwrap();
             }
             let out = agg.finish(global);
             for k in 0..p {
@@ -256,6 +256,81 @@ fn prop_masked_aggregation_convex_hull() {
                     if out[k] < lo || out[k] > hi {
                         return Err(format!("elem {k}={} outside [{lo},{hi}]", out[k]));
                     }
+                }
+            }
+            Ok(())
+        },
+        no_shrink,
+    );
+}
+
+#[test]
+fn prop_sparse_aggregation_bitwise_equals_dense() {
+    // The tentpole sparse-delta invariant: feeding an aggregator the
+    // run-encoded masked update (add_sparse) must produce bitwise the
+    // same global as feeding it the full dense vector (add), for every
+    // rule — including FedNova's normalized-delta arithmetic — any mask
+    // shape (runs of 0 / 0.5 / 1, occasionally all-zero), and any
+    // weight/tau. Off-mask elements satisfy the engine contract: the
+    // client returns them bitwise at the dispatched global.
+    use fedel::fl::sparse::SparseDelta;
+    check(
+        "sparse-vs-dense-aggregation",
+        150,
+        |r: &mut Rng| {
+            let p = 1 + r.below(60);
+            let n = 1 + r.below(5);
+            let rule = r.below(3);
+            let global: Vec<f32> = (0..p).map(|_| r.normal_f32()).collect();
+            let clients: Vec<(Vec<f32>, Vec<f32>, f64, usize)> = (0..n)
+                .map(|_| {
+                    let all_zero = r.below(8) == 0;
+                    let mut mask = Vec::with_capacity(p);
+                    while mask.len() < p {
+                        let len = (1 + r.below(6)).min(p - mask.len());
+                        let v = if all_zero {
+                            0.0
+                        } else {
+                            [0.0f32, 0.5, 1.0][r.below(3)]
+                        };
+                        mask.extend(std::iter::repeat(v).take(len));
+                    }
+                    let params: Vec<f32> = (0..p)
+                        .map(|k| if mask[k] > 0.0 { r.normal_f32() } else { global[k] })
+                        .collect();
+                    let weight = (1 + r.below(100)) as f64;
+                    let tau = 1 + r.below(5);
+                    (params, mask, weight, tau)
+                })
+                .collect();
+            (rule, global, clients)
+        },
+        |(rule, global, clients)| {
+            let rule = match *rule {
+                0 => AggregateRule::Masked,
+                1 => AggregateRule::FedAvg,
+                _ => AggregateRule::FedNova,
+            };
+            let p = global.len();
+            let mut dense = MaskedAggregator::new(p, rule);
+            let mut sparse = MaskedAggregator::new(p, rule);
+            for (params, mask, weight, tau) in clients {
+                dense
+                    .add(params, mask, *weight, *tau, global)
+                    .map_err(|e| format!("dense add: {e}"))?;
+                let delta = SparseDelta::from_dense_mask(mask, params);
+                sparse
+                    .add_sparse(&delta, *weight, *tau, global)
+                    .map_err(|e| format!("sparse add: {e}"))?;
+            }
+            let a = dense.finish(global);
+            let b = sparse.finish(global);
+            for k in 0..p {
+                if a[k].to_bits() != b[k].to_bits() {
+                    return Err(format!(
+                        "rule {rule:?} elem {k}: dense {} != sparse {}",
+                        a[k], b[k]
+                    ));
                 }
             }
             Ok(())

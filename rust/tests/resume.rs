@@ -344,6 +344,115 @@ fn warm_start_seeds_from_stored_run() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Schema v4: checkpoints delta-encode against the previous checkpoint's
+/// params. A few contiguous spans of changed elements (the shape masked
+/// training produces) must store at least 5x smaller than a full
+/// snapshot, chain back to the full base, resolve bitwise, and rebase to
+/// a full blob when nearly everything changes.
+#[test]
+fn delta_checkpoints_shrink_storage_and_resolve_bitwise() {
+    use fedel::fl::observer::{RoundObserver, ServerState};
+    use fedel::manifest::tests_support::chain_manifest;
+    use fedel::store::{MEDIA_PARAMS_DELTA, MEDIA_PARAMS_F32LE};
+    use fedel::strategies::{by_name, FleetCtx};
+    use fedel::timing::{DeviceProfile, TimingCfg, TimingModel};
+    use fedel::util::rng::Rng;
+
+    let dir = scratch("delta-size");
+    let store = RunStore::open(&dir).unwrap();
+    let m = chain_manifest(4, 1000);
+    let n = m.param_count;
+    let tm = TimingModel::profile(&m, &DeviceProfile::orin(), &TimingCfg::default());
+    let ctx = FleetCtx {
+        manifest: m,
+        timings: vec![tm],
+        t_th: 10.0,
+        local_steps: 1,
+        lr: 0.1,
+        fleet: Default::default(),
+    };
+    let strategy = by_name("fedavg", &ctx, 0.25, 7).unwrap();
+
+    let mut rng = Rng::new(7);
+    let g0: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    // ~5% of elements move, in two contiguous spans (mask-shaped change)
+    let mut g1 = g0.clone();
+    for k in (0..100).chain(2000..2100) {
+        g1[k] += 0.25;
+    }
+
+    let mut ckpt =
+        CheckpointObserver::create(&store, &cfg("fedavg", 1), "fedavg", 1).unwrap();
+    let id = ckpt.run_id().to_string();
+
+    // first checkpoint: no base yet, so a full f32le blob
+    ckpt.on_server_state(&ServerState {
+        completed: 0,
+        sim_time: 1.0,
+        global: &g0,
+        strategy: strategy.as_ref(),
+        async_state: None,
+    });
+    assert!(ckpt.take_error().is_none());
+    let full = store.load_manifest(&id).unwrap().checkpoint.unwrap();
+    assert_eq!(full.params.media_type, MEDIA_PARAMS_F32LE);
+    assert_eq!(full.params.size, 4 * n as u64);
+    assert!(full.params_chain.is_empty());
+
+    // second checkpoint: a sparse delta chained on the full base,
+    // at least 5x smaller than a dense snapshot
+    ckpt.on_server_state(&ServerState {
+        completed: 0,
+        sim_time: 2.0,
+        global: &g1,
+        strategy: strategy.as_ref(),
+        async_state: None,
+    });
+    assert!(ckpt.take_error().is_none());
+    let delta = store.load_manifest(&id).unwrap().checkpoint.unwrap();
+    assert_eq!(delta.params.media_type, MEDIA_PARAMS_DELTA);
+    assert_eq!(delta.params_chain, vec![full.params.clone()]);
+    assert!(
+        5 * delta.params.size <= full.params.size,
+        "delta checkpoint should be >=5x smaller: {} vs {} bytes",
+        delta.params.size,
+        full.params.size
+    );
+
+    // the chained checkpoint resolves bitwise, through every read path
+    for got in [
+        store.resolve_params(&delta.params, &delta.params_chain).unwrap(),
+        store.latest_params(&id).unwrap(),
+        fedel::store::checkpoint::resume_state(
+            &store,
+            &store.load_manifest(&id).unwrap(),
+        )
+        .unwrap()
+        .global,
+    ] {
+        assert_eq!(got.len(), n);
+        for (a, b) in g1.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    // a full-vector change beats any delta: the chain rebases
+    let g2: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+    ckpt.on_server_state(&ServerState {
+        completed: 0,
+        sim_time: 3.0,
+        global: &g2,
+        strategy: strategy.as_ref(),
+        async_state: None,
+    });
+    assert!(ckpt.take_error().is_none());
+    let rebased = store.load_manifest(&id).unwrap().checkpoint.unwrap();
+    assert_eq!(rebased.params.media_type, MEDIA_PARAMS_F32LE);
+    assert!(rebased.params_chain.is_empty(), "full rewrite must rebase the chain");
+    assert_eq!(store.latest_params(&id).unwrap(), g2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn resume_refuses_completed_or_checkpointless_runs() {
     let dir = scratch("refuse");

@@ -187,6 +187,88 @@ fn remote_store_races_resolve_like_local_ones() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// One raw HTTP exchange against a served store (the server closes after
+/// each response, so a fresh connection per request is the protocol).
+fn upload_request(
+    addr: SocketAddr,
+    method: &str,
+    target: &str,
+    headers: &[(String, String)],
+    body: &[u8],
+) -> fedel::store::backend::http::Response {
+    use fedel::store::backend::http::{read_response, write_request};
+    let mut s = TcpStream::connect(addr).unwrap();
+    write_request(&mut s, method, target, "test", headers, body).unwrap();
+    read_response(&mut std::io::BufReader::new(s), false).unwrap()
+}
+
+/// Upload-session GC: sessions abandoned before commit are swept when a
+/// new upload opens and their age exceeds the server's upload max-age —
+/// while sessions inside the age window keep accepting chunks.
+#[test]
+fn abandoned_upload_sessions_are_garbage_collected() {
+    let hdr = |k: &str, v: &str| vec![(k.to_string(), v.to_string())];
+    let dir = scratch("upload-gc");
+
+    // Zero max-age: every pre-existing session counts as abandoned the
+    // moment another upload opens.
+    let server =
+        StoreServer::start_with_upload_gc(&dir, "127.0.0.1:0", 2, Duration::ZERO).unwrap();
+    let addr = server.addr();
+    let open_a = upload_request(addr, "POST", "/v2/runs/blobs/uploads/", &[], b"");
+    assert_eq!(open_a.status, 202);
+    let loc_a = open_a.header("Location").unwrap().to_string();
+    let patch =
+        upload_request(addr, "PATCH", &loc_a, &hdr("Content-Range", "0-3"), b"abcd");
+    assert_eq!(patch.status, 202);
+
+    // opening B sweeps the (instantly stale) half-done A...
+    let open_b = upload_request(addr, "POST", "/v2/runs/blobs/uploads/", &[], b"");
+    assert_eq!(open_b.status, 202);
+    let loc_b = open_b.header("Location").unwrap().to_string();
+    let gone =
+        upload_request(addr, "PATCH", &loc_a, &hdr("Content-Range", "0-3"), b"abcd");
+    assert_eq!(gone.status, 404, "swept session must be gone");
+
+    // ...while B, created after the sweep, still commits into a blob
+    let payload = b"precious upload";
+    let range = format!("0-{}", payload.len() - 1);
+    let patch_b =
+        upload_request(addr, "PATCH", &loc_b, &hdr("Content-Range", &range), payload);
+    assert_eq!(patch_b.status, 202);
+    let digest = format!("sha256:{}", fedel::util::sha256::hex(payload));
+    let put =
+        upload_request(addr, "PUT", &format!("{loc_b}?digest={digest}"), &[], b"");
+    assert_eq!(put.status, 201, "commit after the sweep must publish");
+    let blob = fedel::store::schema::BlobRef {
+        digest,
+        size: payload.len() as u64,
+        media_type: "application/octet-stream".into(),
+    };
+    assert_eq!(RunStore::open(&dir).unwrap().get_blob(&blob).unwrap(), payload);
+    server.shutdown();
+
+    // A generous max-age spares in-flight sessions: A survives B's open
+    // and keeps appending from its recorded offset.
+    let server =
+        StoreServer::start_with_upload_gc(&dir, "127.0.0.1:0", 2, Duration::from_secs(3600))
+            .unwrap();
+    let addr = server.addr();
+    let open_a = upload_request(addr, "POST", "/v2/runs/blobs/uploads/", &[], b"");
+    assert_eq!(open_a.status, 202);
+    let loc_a = open_a.header("Location").unwrap().to_string();
+    let patch =
+        upload_request(addr, "PATCH", &loc_a, &hdr("Content-Range", "0-3"), b"abcd");
+    assert_eq!(patch.status, 202);
+    let open_b = upload_request(addr, "POST", "/v2/runs/blobs/uploads/", &[], b"");
+    assert_eq!(open_b.status, 202);
+    let still =
+        upload_request(addr, "PATCH", &loc_a, &hdr("Content-Range", "4-7"), b"efgh");
+    assert_eq!(still.status, 202, "a session inside the age window must survive sweeps");
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// A byte-level TCP proxy in front of a store server with two fault
 /// injectors: `corrupt` flips the last byte of every server response
 /// (which lands in a blob GET's body), and `arm_drop` kills one

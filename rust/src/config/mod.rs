@@ -151,6 +151,17 @@ pub struct ExperimentCfg {
     /// Fraction of each availability cycle a client is online
     /// (`fleet.churn.avail_frac`), (0, 1].
     pub churn_avail_frac: f64,
+    /// Successive-halving rung count (`operator.halving.rungs`): the
+    /// campaign operator ranks cells at this many evenly-spaced
+    /// checkpoint-aligned round boundaries and prunes the losers.
+    /// 0 = halving off (every cell runs to completion).
+    pub halving_rungs: usize,
+    /// Fraction of live cells each rung keeps
+    /// (`operator.halving.keep_frac`), (0, 1].
+    pub halving_keep_frac: f64,
+    /// Metric rungs rank by (`operator.halving.metric`): "acc" (higher
+    /// wins) or "loss" (lower wins).
+    pub halving_metric: String,
     pub record_selections: bool,
     pub verbose: bool,
     /// Abort after this many rounds (simulated kill, for fault-tolerance
@@ -187,6 +198,9 @@ impl Default for ExperimentCfg {
             churn_dropout: 0.0,
             churn_period_secs: 0.0,
             churn_avail_frac: 1.0,
+            halving_rungs: 0,
+            halving_keep_frac: 0.5,
+            halving_metric: "acc".into(),
             record_selections: false,
             verbose: false,
             halt_after: None,
@@ -226,6 +240,9 @@ impl ExperimentCfg {
             churn_dropout: d.churn_dropout,
             churn_period_secs: d.churn_period_secs,
             churn_avail_frac: d.churn_avail_frac,
+            halving_rungs: d.halving_rungs,
+            halving_keep_frac: d.halving_keep_frac,
+            halving_metric: d.halving_metric.clone(),
             record_selections: args.flag("record-selections"),
             verbose: args.flag("verbose"),
             halt_after: args.get("halt-after").and_then(|s| s.parse().ok()),
@@ -324,6 +341,18 @@ impl ExperimentCfg {
         if self.churn_avail_frac != 1.0 {
             kv.push(("churn_avail_frac", Json::Num(self.churn_avail_frac)));
         }
+        // Halving keys are omitted at their "off" defaults so pre-operator
+        // snapshots — and campaign specs built from them — compare and
+        // round-trip unchanged.
+        if self.halving_rungs != 0 {
+            kv.push(("halving_rungs", Json::Num(self.halving_rungs as f64)));
+        }
+        if self.halving_keep_frac != 0.5 {
+            kv.push(("halving_keep_frac", Json::Num(self.halving_keep_frac)));
+        }
+        if self.halving_metric != "acc" {
+            kv.push(("halving_metric", Json::Str(self.halving_metric.clone())));
+        }
         // Omitted when empty so pre-registry snapshots compare and
         // round-trip unchanged.
         if !self.strategy_params.is_empty() {
@@ -402,6 +431,9 @@ impl ExperimentCfg {
             churn_dropout: f("churn_dropout", d.churn_dropout),
             churn_period_secs: f("churn_period_secs", d.churn_period_secs),
             churn_avail_frac: f("churn_avail_frac", d.churn_avail_frac),
+            halving_rungs: u("halving_rungs", d.halving_rungs),
+            halving_keep_frac: f("halving_keep_frac", d.halving_keep_frac),
+            halving_metric: s("halving_metric", &d.halving_metric),
             record_selections: false,
             verbose: false,
             halt_after: None,
@@ -505,6 +537,25 @@ mod tests {
         assert_eq!(back.churn_dropout.to_bits(), cfg.churn_dropout.to_bits());
         assert_eq!(back.churn_period_secs.to_bits(), cfg.churn_period_secs.to_bits());
         assert_eq!(back.churn_avail_frac.to_bits(), cfg.churn_avail_frac.to_bits());
+    }
+
+    #[test]
+    fn halving_keys_round_trip_and_stay_out_of_plain_snapshots() {
+        let plain = ExperimentCfg::default().to_json();
+        for key in ["halving_rungs", "halving_keep_frac", "halving_metric"] {
+            assert!(plain.get(key).is_none(), "{key} leaked into a default snapshot");
+        }
+        let cfg = ExperimentCfg {
+            halving_rungs: 3,
+            halving_keep_frac: 0.25,
+            halving_metric: "loss".into(),
+            ..Default::default()
+        };
+        let text = cfg.to_json().to_string_pretty();
+        let back = ExperimentCfg::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.halving_rungs, 3);
+        assert_eq!(back.halving_keep_frac.to_bits(), cfg.halving_keep_frac.to_bits());
+        assert_eq!(back.halving_metric, "loss");
     }
 
     #[test]

@@ -101,6 +101,9 @@ enum Slot {
     ChurnDropout,
     ChurnPeriodSecs,
     ChurnAvailFrac,
+    HalvingRungs,
+    HalvingKeepFrac,
+    HalvingMetric,
     /// A strategy-declared tunable living in the config's parameter bag
     /// under its full key.
     StrategyParam { default: f64, min: f64, max: f64 },
@@ -178,9 +181,15 @@ impl KeyDef {
                     return err(format!("must be in [0, 1) (got {x})"));
                 }
             }
-            (Slot::ChurnAvailFrac, ParamValue::F64(x)) => {
+            (Slot::ChurnAvailFrac, ParamValue::F64(x))
+            | (Slot::HalvingKeepFrac, ParamValue::F64(x)) => {
                 if !x.is_finite() || *x <= 0.0 || *x > 1.0 {
                     return err(format!("must be in (0, 1] (got {x})"));
+                }
+            }
+            (Slot::HalvingMetric, ParamValue::Str(s)) => {
+                if s != "acc" && s != "loss" {
+                    return err(format!("must be \"acc\" or \"loss\" (got {s:?})"));
                 }
             }
             (Slot::StrategyParam { min, max, .. }, ParamValue::F64(x)) => {
@@ -217,6 +226,9 @@ impl KeyDef {
             Slot::ChurnDropout => ParamValue::F64(cfg.churn_dropout),
             Slot::ChurnPeriodSecs => ParamValue::F64(cfg.churn_period_secs),
             Slot::ChurnAvailFrac => ParamValue::F64(cfg.churn_avail_frac),
+            Slot::HalvingRungs => ParamValue::Usize(cfg.halving_rungs),
+            Slot::HalvingKeepFrac => ParamValue::F64(cfg.halving_keep_frac),
+            Slot::HalvingMetric => ParamValue::Str(cfg.halving_metric.clone()),
             Slot::StrategyParam { default, .. } => ParamValue::F64(
                 cfg.strategy_params
                     .iter()
@@ -260,6 +272,9 @@ impl KeyDef {
             (Slot::ChurnDropout, ParamValue::F64(x)) => cfg.churn_dropout = *x,
             (Slot::ChurnPeriodSecs, ParamValue::F64(x)) => cfg.churn_period_secs = *x,
             (Slot::ChurnAvailFrac, ParamValue::F64(x)) => cfg.churn_avail_frac = *x,
+            (Slot::HalvingRungs, ParamValue::Usize(n)) => cfg.halving_rungs = *n,
+            (Slot::HalvingKeepFrac, ParamValue::F64(x)) => cfg.halving_keep_frac = *x,
+            (Slot::HalvingMetric, ParamValue::Str(s)) => cfg.halving_metric = s.clone(),
             (Slot::StrategyParam { .. }, ParamValue::F64(x)) => {
                 match cfg.strategy_params.iter_mut().find(|(k, _)| *k == self.key) {
                     Some(entry) => entry.1 = *x,
@@ -366,6 +381,24 @@ impl ParamSpace {
                 F64,
                 "fraction of each availability cycle a client is online, (0, 1]",
                 Slot::ChurnAvailFrac,
+            ),
+            KeyDef::fixed(
+                "operator.halving.rungs",
+                Usize,
+                "successive-halving rung count over the round budget (0 = halving off)",
+                Slot::HalvingRungs,
+            ),
+            KeyDef::fixed(
+                "operator.halving.keep_frac",
+                F64,
+                "fraction of live cells each rung keeps, (0, 1]",
+                Slot::HalvingKeepFrac,
+            ),
+            KeyDef::fixed(
+                "operator.halving.metric",
+                Str,
+                "rung ranking metric: acc (higher wins) or loss (lower wins)",
+                Slot::HalvingMetric,
             ),
         ];
         for def in registry::builtin().defs() {
@@ -722,6 +755,29 @@ mod tests {
         assert_eq!(axis.values.len(), 3);
         let semi = SweepAxis::parse(space, "fleet.churn.dropout=0;0.1;0.3").unwrap();
         assert_eq!(semi, axis);
+    }
+
+    #[test]
+    fn halving_keys_resolve_apply_and_validate() {
+        let space = ParamSpace::shared();
+        let mut cfg = ExperimentCfg::default();
+        for spec in [
+            "operator.halving.rungs=3",
+            "operator.halving.keep_frac=0.25",
+            "operator.halving.metric=loss",
+        ] {
+            let b = Binding::parse(space, spec).unwrap();
+            assert_eq!(b.render(), *spec, "canonical rendering");
+            space.resolve(&b.key).unwrap().apply(&mut cfg, &b.value).unwrap();
+        }
+        assert_eq!(cfg.halving_rungs, 3);
+        assert_eq!(cfg.halving_keep_frac, 0.25);
+        assert_eq!(cfg.halving_metric, "loss");
+        // rungs=0 is legal: halving off
+        assert!(Binding::parse(space, "operator.halving.rungs=0").is_ok());
+        assert!(Binding::parse(space, "operator.halving.keep_frac=0").is_err());
+        assert!(Binding::parse(space, "operator.halving.keep_frac=1.5").is_err());
+        assert!(Binding::parse(space, "operator.halving.metric=bogus").is_err());
     }
 
     #[test]

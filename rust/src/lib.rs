@@ -22,6 +22,8 @@
 //! * [`metrics`] — time-to-accuracy, memory & energy models.
 //! * [`sim`] — fleet construction and end-to-end experiment runner.
 //! * [`store`] — persistent run store: checkpoints, resume, warm start.
+//! * [`operator`] — campaign control plane: reconcile-loop workers with
+//!   leases, live grid edits, successive-halving sweep pruning.
 //! * [`report`] — paper-style table/figure emission.
 
 pub mod config;
@@ -31,6 +33,7 @@ pub mod fl;
 pub mod fleet;
 pub mod manifest;
 pub mod metrics;
+pub mod operator;
 pub mod report;
 pub mod runtime;
 pub mod sim;

@@ -4,7 +4,7 @@
 //!   train    — run one FL experiment and print the round log + summary
 //!   compare  — run several strategies on one workload, print a table
 //!   runs     — the persistent run store: list / show / resume / compare / gc
-//!   campaign — grids of stored runs: run / status / report
+//!   campaign — grids of stored runs: run / operate / edit / status / report
 //!   inspect  — dump a model manifest summary
 //!   fleet    — summarize the device fleet a config would run with
 //!   list     — list AOT-compiled models under artifacts/
@@ -33,6 +33,13 @@
 //!   fedel campaign report --name sweep --store runs --over seed,fleet
 //!   fedel runs serve --root runs --addr 0.0.0.0:7878 --upload-gc-secs 900
 //!   fedel campaign run --name sweep --store http://hub:7878   # remote worker
+//!   fedel campaign operate --name sweep --store http://hub:7878 \
+//!       --worker host1:1 --lease-secs 30        # reconcile-loop worker
+//!   fedel campaign operate --name halve --store runs --model mock:8x100 \
+//!       --sweep strategy=fedavg,fedel --sweep seed=1,2,3 --rounds 20 \
+//!       --set operator.halving.rungs=2           # adaptive halving sweep
+//!   fedel campaign edit --name sweep --store runs --sweep seed=+4,+5
+//!   fedel campaign status --name sweep --store runs --json
 //!   fedel compare --model mock:8x100 --strategies fedavg,fedel --rounds 20
 //!   fedel inspect --model vgg_cifar
 
@@ -465,7 +472,8 @@ fn emit_compare_report(report: &CompareReport, json_out: Option<&str>) -> anyhow
     Ok(())
 }
 
-/// The campaign subcommand family: `campaign <run|status|report> ...`.
+/// The campaign subcommand family:
+/// `campaign <run|operate|edit|status|report> ...`.
 fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
     let store = RunStore::open(args.str_or("store", "runs"))?;
     let action = args.positional.first().map(|s| s.as_str()).unwrap_or("run");
@@ -503,10 +511,10 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
             warn_crossed_strategy_axes(&cfg);
             let outcome = campaign::run_campaign(&store, &cfg)?;
             campaign::status_table(&store, &store.load_campaign(&name)?).print();
-            let (skipped, completed, failed, pending) = outcome.counts();
+            let (skipped, completed, failed, pending, pruned) = outcome.counts();
             println!(
                 "campaign {name}: {completed} executed, {skipped} already complete, \
-                 {failed} failed, {pending} pending"
+                 {failed} failed, {pending} pending, {pruned} pruned"
             );
             for f in outcome.failures() {
                 if let fedel::sim::campaign::CellRun::Failed(msg) = &f.status {
@@ -520,10 +528,64 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
             );
             Ok(())
         }
+        "operate" => {
+            // A reconcile-loop worker (fedel::operator): leases cells,
+            // advances them one rung-aligned segment at a time, applies
+            // halving prunes, and reclaims dead workers' leases. Grid
+            // args seed the campaign when it doesn't exist yet, exactly
+            // like `campaign run`.
+            let name = args.str_or("name", "campaign");
+            let cfg = campaign_cfg_from_args(&store, &name, args)?;
+            let mut ocfg = fedel::operator::OperateCfg::new(&name);
+            ocfg.worker = args.str_or("worker", &ocfg.worker);
+            ocfg.lease_secs = args.u64_or("lease-secs", ocfg.lease_secs);
+            ocfg.poll_secs = args.u64_or("poll-secs", ocfg.poll_secs);
+            ocfg.max_segments = args.get("max-segments").and_then(|s| s.parse().ok());
+            ocfg.verbose = true;
+            args.check_unused()?;
+            println!(
+                "operator {} on campaign {name} (store {}, lease {}s)",
+                ocfg.worker,
+                store.location(),
+                ocfg.lease_secs
+            );
+            let out = fedel::operator::operate(&store, &ocfg, Some(&cfg))?;
+            campaign::status_table(&store, &store.load_campaign(&name)?).print();
+            println!(
+                "operator {}: {} segment(s), {} cell(s) completed, {} lease(s) reclaimed, \
+                 {} cell(s) pruned — campaign {}",
+                ocfg.worker,
+                out.segments,
+                out.completed,
+                out.reclaimed,
+                out.pruned,
+                if out.converged { "converged" } else { "not converged" }
+            );
+            Ok(())
+        }
+        "edit" => {
+            // Live-edit the desired state: append values to existing
+            // sweep axes while workers run. New cells appear unassigned;
+            // running workers pick them up on their next pass.
+            let name = args.str_or("name", "campaign");
+            let sweeps: Vec<String> = args.all("sweep").into_iter().map(String::from).collect();
+            args.check_unused()?;
+            let m = fedel::operator::edit_campaign(&store, &name, &sweeps)?;
+            println!("campaign {name}: grid now {} cell(s)", m.cells.len());
+            campaign::status_table(&store, &m).print();
+            Ok(())
+        }
         "status" => {
             let name = args.str_or("name", "campaign");
+            let json = args.flag("json");
             args.check_unused()?;
-            campaign::status_table(&store, &store.load_campaign(&name)?).print();
+            let m = store.load_campaign(&name)?;
+            if json {
+                let status = fedel::operator::observe(&store, &m);
+                println!("{}", fedel::operator::status_json(&status).to_string_pretty());
+            } else {
+                campaign::status_table(&store, &m).print();
+            }
             Ok(())
         }
         "report" => {
@@ -547,7 +609,9 @@ fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
                 }
             }
         }
-        other => anyhow::bail!("unknown campaign action {other:?} (run | status | report)"),
+        other => anyhow::bail!(
+            "unknown campaign action {other:?} (run | operate | edit | status | report)"
+        ),
     }
 }
 

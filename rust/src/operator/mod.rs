@@ -1,0 +1,48 @@
+//! Campaign operator: reconcile-loop orchestration for sweep grids.
+//!
+//! `campaign run` drives a grid with a bounded thread pool inside ONE
+//! process — a crash strands its claimed cells and the grid is frozen at
+//! launch. This module restructures campaign execution the way a
+//! Kubernetes controller runs pods, as three cleanly separated pieces
+//! over the existing [`crate::store`] substrate:
+//!
+//! * **Desired state** — the sweep spec persisted in the campaign
+//!   manifest, now live-editable: [`spec::edit_campaign`] appends values
+//!   to a sweep axis (`campaign edit --sweep key=+v`) under the store's
+//!   compare-and-swap, re-expanding the grid while preserving every
+//!   existing cell's assignment by label.
+//! * **Observed state** — [`status::observe`] snapshots what the store
+//!   actually holds: per-cell run progress, checkpoint state, worker
+//!   leases and their heartbeat age (run manifests are fanned across a
+//!   thread pool, so an HTTP-backed status is one round-trip deep, not
+//!   O(cells × RTT)).
+//! * **Reconciler** — [`worker::operate`] repeatedly diffs the two and
+//!   converges them: lease a runnable cell ([`crate::store::RunStore::
+//!   lease_campaign_cell`], a CAS claim carrying worker id + heartbeat),
+//!   advance it one checkpoint-aligned segment, release, repeat. Crash
+//!   recovery falls out of the lease: a worker that dies mid-cell stops
+//!   heartbeating, its lease expires, and any surviving worker reclaims
+//!   the cell and resumes it from its checkpoint bitwise-identically.
+//!   Priority falls out of candidate order (laggards first, so shared
+//!   rung boundaries unblock as early as possible).
+//!
+//! On top rides the **adaptive sweep policy** ([`policy`]): deterministic
+//! successive halving configured through registered parameter keys
+//! (`operator.halving.rungs|keep_frac|metric`). At each rung boundary —
+//! aligned to the checkpoint cadence so every cell has a durable
+//! checkpoint there — live cells are ranked by their eval metric and the
+//! bottom `1 - keep_frac` are marked pruned in the campaign manifest,
+//! freeing their workers for surviving cells. Every decision is a pure
+//! function of (spec, observed status): operators can be killed and
+//! restarted anywhere, in any number, and the set of pruned cells and
+//! the bytes of every completed run come out identical.
+
+pub mod policy;
+pub mod spec;
+pub mod status;
+pub mod worker;
+
+pub use policy::{cfg_rungs, plan_prunes, rung_rounds, PruneDecision};
+pub use spec::edit_campaign;
+pub use status::{observe, status_json, CampaignStatus, CellStatusRow};
+pub use worker::{operate, OperateCfg, OperateOutcome};

@@ -1,0 +1,309 @@
+//! Deterministic successive halving over campaign cells.
+//!
+//! Related systems (TimelyFL's deadline-bounded rounds, adaptive-dropout
+//! FL) make the case for reallocating budget away from low-value work;
+//! at the sweep layer that means killing hopeless cells early. This
+//! module decides *which* cells: at each rung — a shared round boundary
+//! aligned to the checkpoint cadence — live cells are ranked by their
+//! eval metric and only the top `keep_frac` survive. The knobs ride the
+//! registered parameter space (`--set operator.halving.rungs=2`,
+//! `operator.halving.keep_frac`, `operator.halving.metric`), so they
+//! persist in the campaign spec like any other knob.
+//!
+//! [`plan_prunes`] is a **pure function of (spec, observed status)** and
+//! recomputes every rung from scratch on every call, ignoring persisted
+//! prune flags. That makes it idempotent and crash-safe by construction:
+//! however many operators run it, however often, at whatever point they
+//! died last time, the decisions come out identical — a rung's ranking
+//! depends only on eval records at or before its boundary, which never
+//! change once written. Callers apply decisions as a union (never
+//! un-prune), so a raced double-application is harmless.
+
+use crate::config::params::ParamSpace;
+use crate::operator::status::{CampaignStatus, CellStatusRow};
+use crate::sim::campaign::CampaignCfg;
+
+/// One cell the policy wants retired.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PruneDecision {
+    pub label: String,
+    /// The rung boundary (absolute round) the cell lost at.
+    pub rung_round: usize,
+    /// The metric value it was ranked by (`None` = no eval recorded by
+    /// the boundary, which ranks worst).
+    pub metric: Option<f64>,
+}
+
+/// The rung boundaries for a `rounds`-round campaign: `rungs` cuts at
+/// even fractions of the budget, each aligned UP to the checkpoint
+/// cadence (so every cell pausing there has a durable checkpoint),
+/// deduplicated, and dropped when they'd land at or past the final
+/// round (nothing left to save by then).
+pub fn rung_rounds(rounds: usize, checkpoint_every: usize, rungs: usize) -> Vec<usize> {
+    let every = checkpoint_every.max(1);
+    let mut out = Vec::new();
+    for i in 1..=rungs {
+        let raw = rounds * i / (rungs + 1);
+        let aligned = raw.div_ceil(every) * every;
+        if aligned == 0 || aligned >= rounds {
+            continue;
+        }
+        if out.last() != Some(&aligned) {
+            out.push(aligned);
+        }
+    }
+    out
+}
+
+/// The campaign's effective halving knobs: base config plus the `--set`
+/// overlay (the same precedence every cell resolves with — axes don't
+/// carry operator keys, so base+set is the whole story).
+fn effective(cfg: &CampaignCfg) -> anyhow::Result<crate::config::ExperimentCfg> {
+    let mut eff = cfg.base.clone();
+    cfg.set.apply(ParamSpace::shared(), &mut eff)?;
+    Ok(eff)
+}
+
+/// The rung boundaries the campaign's effective config implies. The
+/// worker uses them as segment halt targets, so every cell pauses at
+/// each rung with a durable checkpoint instead of racing past it.
+pub fn cfg_rungs(cfg: &CampaignCfg) -> anyhow::Result<Vec<usize>> {
+    let eff = effective(cfg)?;
+    Ok(rung_rounds(eff.rounds, cfg.checkpoint_every, eff.halving_rungs))
+}
+
+/// The cell's ranking metric at a rung boundary: the last eval at or
+/// before round `boundary`. Records past the boundary are ignored so a
+/// cell that raced ahead is judged at the same round as everyone else.
+fn metric_at(row: &CellStatusRow, boundary: usize, metric: &str) -> Option<f64> {
+    let run = row.run.as_ref()?;
+    let upto = &run.records[..boundary.min(run.records.len())];
+    match metric {
+        "loss" => upto.iter().rev().find_map(|r| r.eval_loss),
+        _ => upto.iter().rev().find_map(|r| r.eval_acc),
+    }
+}
+
+/// Every cell the policy wants pruned, given what the store shows now.
+/// Recomputed from scratch (see module docs); the result is the union of
+/// all rungs that have *fired* — a rung fires once every cell still live
+/// at it has progressed to its boundary. Ranking: higher accuracy (or
+/// lower loss) survives; a missing metric ranks worst; ties break toward
+/// the lower cell index. `ceil(keep_frac × live)` cells (at least one)
+/// survive each rung.
+pub fn plan_prunes(
+    cfg: &CampaignCfg,
+    status: &CampaignStatus,
+) -> anyhow::Result<Vec<PruneDecision>> {
+    let eff = effective(cfg)?;
+    if eff.halving_rungs == 0 || status.cells.len() < 2 {
+        return Ok(Vec::new());
+    }
+    let higher_better = eff.halving_metric != "loss";
+    let boundaries = rung_rounds(eff.rounds, cfg.checkpoint_every, eff.halving_rungs);
+    let mut live: Vec<usize> = (0..status.cells.len()).collect();
+    let mut decisions = Vec::new();
+    for &b in &boundaries {
+        // The rung fires only when every live cell reached the boundary
+        // (a complete run trivially has). Until then — and this includes
+        // "a worker is still grinding the laggard" — no decision.
+        if live.iter().any(|&i| status.cells[i].rounds_done < b) {
+            break;
+        }
+        let keep = ((eff.halving_keep_frac * live.len() as f64).ceil() as usize).max(1);
+        if keep >= live.len() {
+            continue;
+        }
+        let mut ranked: Vec<(usize, Option<f64>)> = live
+            .iter()
+            .map(|&i| (i, metric_at(&status.cells[i], b, &eff.halving_metric)))
+            .collect();
+        ranked.sort_by(|(ia, ma), (ib, mb)| {
+            let ord = match (ma, mb) {
+                (Some(x), Some(y)) => {
+                    if higher_better {
+                        y.total_cmp(x)
+                    } else {
+                        x.total_cmp(y)
+                    }
+                }
+                (Some(_), None) => std::cmp::Ordering::Less,
+                (None, Some(_)) => std::cmp::Ordering::Greater,
+                (None, None) => std::cmp::Ordering::Equal,
+            };
+            ord.then(ia.cmp(ib))
+        });
+        let losers = ranked.split_off(keep);
+        for (i, metric) in losers {
+            decisions.push(PruneDecision {
+                label: status.cells[i].label.clone(),
+                rung_round: b,
+                metric,
+            });
+        }
+        live = ranked.into_iter().map(|(i, _)| i).collect();
+    }
+    Ok(decisions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentCfg;
+    use crate::fl::server::RoundRecord;
+    use crate::operator::status::CampaignStatus;
+    use crate::store::schema::{RunManifest, RunStatus};
+
+    #[test]
+    fn rung_boundaries_align_up_to_checkpoints_and_stay_inside_the_run() {
+        assert_eq!(rung_rounds(20, 5, 1), vec![10]);
+        assert_eq!(rung_rounds(20, 5, 3), vec![5, 10, 15]);
+        // 12 rounds, cadence 5, 2 rungs: raw cuts 4, 8 -> aligned 5, 10
+        assert_eq!(rung_rounds(12, 5, 2), vec![5, 10]);
+        // boundaries at/past the final round are dropped, duplicates fold
+        assert_eq!(rung_rounds(6, 5, 3), vec![5]);
+        assert_eq!(rung_rounds(4, 5, 2), Vec::<usize>::new());
+        assert_eq!(rung_rounds(20, 5, 0), Vec::<usize>::new());
+    }
+
+    fn record(round: usize, acc: Option<f64>) -> RoundRecord {
+        RoundRecord {
+            round,
+            round_secs: 1.0,
+            sim_time: round as f64,
+            mean_train_loss: 1.0,
+            participants: 1,
+            mean_coverage: 1.0,
+            o1: 0.0,
+            eval_acc: acc,
+            eval_loss: acc.map(|a| 1.0 - a),
+            client_secs: vec![],
+            mean_staleness: None,
+            max_staleness: None,
+            dropped: vec![],
+        }
+    }
+
+    fn row_with_run(
+        index: usize,
+        label: &str,
+        rounds_done: usize,
+        accs: &[Option<f64>],
+    ) -> CellStatusRow {
+        let cfg = ExperimentCfg { rounds: 8, ..Default::default() };
+        let records: Vec<RoundRecord> =
+            (0..rounds_done).map(|r| record(r, accs.get(r).copied().flatten())).collect();
+        let run = RunManifest {
+            schema_version: crate::store::schema::SCHEMA_VERSION,
+            id: format!("run-{label}"),
+            created_unix: 0,
+            updated_unix: 0,
+            status: RunStatus::Running,
+            strategy: "fedavg".into(),
+            config: cfg,
+            records,
+            checkpoint: None,
+            final_state: None,
+        };
+        CellStatusRow {
+            index,
+            label: label.into(),
+            run_id: Some(run.id.clone()),
+            worker: None,
+            lease_age_secs: None,
+            pruned: false,
+            state: "resumable",
+            rounds_done,
+            rounds_total: Some(8),
+            final_acc: None,
+            run: Some(run),
+        }
+    }
+
+    fn halving_cfg() -> CampaignCfg {
+        let base = ExperimentCfg {
+            rounds: 8,
+            halving_rungs: 1,
+            halving_keep_frac: 0.5,
+            ..Default::default()
+        };
+        let mut cfg = CampaignCfg::new("halve", base);
+        cfg.checkpoint_every = 2;
+        cfg
+    }
+
+    fn status_of(cells: Vec<CellStatusRow>) -> CampaignStatus {
+        CampaignStatus { name: "halve".into(), observed_unix: 0, cells }
+    }
+
+    #[test]
+    fn rung_waits_for_laggards_then_prunes_the_bottom_half_deterministically() {
+        let cfg = halving_cfg();
+        // rounds=8, cadence 2, 1 rung -> boundary at round 4
+        assert_eq!(rung_rounds(8, 2, 1), vec![4]);
+        let acc = |xs: &[f64]| xs.iter().map(|&a| Some(a)).collect::<Vec<_>>();
+        // a laggard below the boundary holds the rung
+        let held = status_of(vec![
+            row_with_run(0, "a", 4, &acc(&[0.1, 0.2, 0.3, 0.4])),
+            row_with_run(1, "b", 3, &acc(&[0.1, 0.1, 0.1])),
+        ]);
+        assert!(plan_prunes(&cfg, &held).unwrap().is_empty());
+        // all cells at/past the boundary: bottom half pruned, ranked by
+        // the last eval at or before round 4 (extra progress ignored)
+        let fired = status_of(vec![
+            row_with_run(0, "a", 4, &acc(&[0.1, 0.2, 0.3, 0.4])),
+            row_with_run(1, "b", 6, &acc(&[0.1, 0.1, 0.1, 0.1, 0.9, 0.9])),
+            row_with_run(2, "c", 4, &acc(&[0.1, 0.2, 0.3, 0.35])),
+            row_with_run(3, "d", 4, &[None, None, None, None]),
+        ]);
+        let decisions = plan_prunes(&cfg, &fired).unwrap();
+        let labels: Vec<&str> = decisions.iter().map(|d| d.label.as_str()).collect();
+        // keep = ceil(0.5 * 4) = 2 -> "a" (0.4) and "c" (0.35) survive;
+        // "b"'s late 0.9 is past the boundary and doesn't count (0.1 at
+        // rung), "d" never evaluated and ranks worst
+        assert_eq!(labels, vec!["b", "d"]);
+        assert_eq!(decisions[0].rung_round, 4);
+        assert_eq!(decisions[0].metric, Some(0.1));
+        assert_eq!(decisions[1].metric, None);
+        // pure function: same observed state, same answer
+        assert_eq!(plan_prunes(&cfg, &fired).unwrap(), decisions);
+    }
+
+    #[test]
+    fn later_rungs_ignore_earlier_losers_stalled_progress() {
+        let mut cfg = halving_cfg();
+        cfg.base.halving_rungs = 2;
+        // rounds=8, cadence 2, 2 rungs -> raw cuts 2, 5 -> boundaries 2, 6
+        assert_eq!(rung_rounds(8, 2, 2), vec![2, 6]);
+        let acc = |xs: &[f64]| xs.iter().map(|&a| Some(a)).collect::<Vec<_>>();
+        // rung 1 (round 2) prunes the two weakest of four; their frozen
+        // progress (2 rounds) must not block rung 2 for the survivors
+        let status = status_of(vec![
+            row_with_run(0, "a", 6, &acc(&[0.1, 0.40, 0.5, 0.5, 0.5, 0.60])),
+            row_with_run(1, "b", 6, &acc(&[0.1, 0.35, 0.5, 0.5, 0.5, 0.70])),
+            row_with_run(2, "c", 2, &acc(&[0.1, 0.20])),
+            row_with_run(3, "d", 2, &acc(&[0.1, 0.10])),
+        ]);
+        let decisions = plan_prunes(&cfg, &status).unwrap();
+        let got: Vec<(&str, usize)> =
+            decisions.iter().map(|d| (d.label.as_str(), d.rung_round)).collect();
+        // rung 2 keeps ceil(0.5 * 2) = 1 of the two survivors: "a" loses
+        assert_eq!(got, vec![("c", 2), ("d", 2), ("a", 6)]);
+    }
+
+    #[test]
+    fn halving_off_or_degenerate_grids_prune_nothing() {
+        let mut cfg = halving_cfg();
+        cfg.base.halving_rungs = 0;
+        let acc = |xs: &[f64]| xs.iter().map(|&a| Some(a)).collect::<Vec<_>>();
+        let status = status_of(vec![
+            row_with_run(0, "a", 8, &acc(&[0.1; 8])),
+            row_with_run(1, "b", 8, &acc(&[0.2; 8])),
+        ]);
+        assert!(plan_prunes(&cfg, &status).unwrap().is_empty());
+        // one-cell campaigns never prune (keep >= 1 always)
+        let cfg = halving_cfg();
+        let solo = status_of(vec![row_with_run(0, "a", 8, &acc(&[0.1; 8]))]);
+        assert!(plan_prunes(&cfg, &solo).unwrap().is_empty());
+    }
+}

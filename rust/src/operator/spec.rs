@@ -1,0 +1,244 @@
+//! Live edits to a running campaign's desired-state spec.
+//!
+//! A campaign's grid used to be frozen at launch: adding a seed or a new
+//! strategy value meant a new campaign name and re-running everything.
+//! [`edit_campaign`] appends values to an existing sweep axis *while
+//! workers are running* — the spec rewrite, grid re-expansion, and cell
+//! re-keying happen inside one [`crate::store::RunStore::update_campaign`]
+//! compare-and-swap transaction, so concurrent claims, leases, and prune
+//! flags are never lost. Existing cells keep their state (matched by
+//! label — which is why every cell-addressing store operation is
+//! label-keyed, not index-keyed: appending a value to an outer axis
+//! renumbers the expansion); new combinations appear as unassigned cells
+//! that any reconciling worker picks up on its next pass.
+//!
+//! Grammar: `key=+v1[,+v2...]` — the same value syntax as `--sweep`,
+//! each appended value prefixed with `+`. The `+` is load-bearing: it
+//! makes "append" explicit, so an edit can never be mistaken for (or
+//! typo'd into) a grid *replacement*, which is unsupported — removing or
+//! reordering values would orphan cells that already ran.
+
+use crate::config::params::{ParamSpace, SweepAxis};
+use crate::sim::campaign::{CampaignCell, CampaignCfg};
+use crate::store::schema::{CampaignManifest, CellState, CAMPAIGN_SCHEMA_VERSION};
+use crate::store::RunStore;
+use crate::util::unix_now;
+
+/// Strip the `+` append markers from an edit spec's value list: required
+/// on the first value, accepted after every `,`/`;` separator (`;`
+/// separates fleet values, `,` everything else — inside a fleet value,
+/// `,` separates scales and carries no marker).
+fn strip_plus(key: &str, rest: &str) -> anyhow::Result<String> {
+    anyhow::ensure!(
+        rest.starts_with('+'),
+        "campaign edit appends values: write --sweep {key}=+{rest} \
+         (the + marks each appended value; replacing a grid is unsupported)"
+    );
+    let mut out = String::with_capacity(rest.len());
+    let mut after_sep = true;
+    for c in rest.chars() {
+        if after_sep && c == '+' {
+            after_sep = false;
+            continue;
+        }
+        after_sep = matches!(c, ',' | ';');
+        out.push(c);
+    }
+    Ok(out)
+}
+
+/// Append values to one or more sweep axes of a stored campaign, as one
+/// atomic spec+cells rewrite. Every `spec` is `key=+v[,+v...]`; the key
+/// must name an existing `--sweep` axis (zip axes advance in lockstep —
+/// appending to one would desynchronize the group, so they are
+/// rejected). Returns the updated manifest.
+pub fn edit_campaign(
+    store: &RunStore,
+    name: &str,
+    sweeps: &[String],
+) -> anyhow::Result<CampaignManifest> {
+    anyhow::ensure!(
+        !sweeps.is_empty(),
+        "campaign edit needs at least one --sweep key=+value"
+    );
+    // Pre-v2 manifests carry v1 labels; upgrade first so re-keying by
+    // label matches (idempotent, CAS-transactional).
+    if store.load_campaign(name)?.schema_version < CAMPAIGN_SCHEMA_VERSION {
+        crate::sim::campaign::migrate_campaign(store, name)?;
+    }
+    store.update_campaign(name, |mut m| {
+        let mut cfg = CampaignCfg::from_spec_json(&m.name, &m.spec)?;
+        for spec in sweeps {
+            let (key, rest) = spec.split_once('=').ok_or_else(|| {
+                anyhow::anyhow!("edit spec {spec:?} is not key=+value[,+value...]")
+            })?;
+            let stripped = strip_plus(key, rest)?;
+            let parsed = SweepAxis::parse(ParamSpace::shared(), &format!("{key}={stripped}"))?;
+            anyhow::ensure!(
+                !cfg.zip.iter().any(|a| a.key == parsed.key),
+                "campaign {name:?}: {key:?} is a zip axis — zipped groups advance \
+                 in lockstep and can't be appended to one at a time"
+            );
+            let axis = cfg
+                .axes
+                .iter_mut()
+                .find(|a| a.key == parsed.key)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "campaign {name:?} has no {key:?} sweep axis — only existing \
+                         axes can be appended to (axes: {})",
+                        cfg.axes.iter().map(|a| a.key.as_str()).collect::<Vec<_>>().join(", ")
+                    )
+                })?;
+            for v in parsed.values {
+                anyhow::ensure!(
+                    !axis.values.contains(&v),
+                    "campaign {name:?}: axis {key:?} already has value {}",
+                    v.render()
+                );
+                axis.values.push(v);
+            }
+        }
+        // Re-expand and re-key: appended values only grow the grid, so
+        // every existing label reappears and keeps its full CellState
+        // (assignment, lease, pruned flag).
+        let cells = cfg.cells()?;
+        let mut old: std::collections::HashMap<String, CellState> =
+            m.cells.drain(..).map(|c| (c.label.clone(), c)).collect();
+        m.cells = cells
+            .iter()
+            .map(CampaignCell::label)
+            .map(|label| old.remove(&label).unwrap_or_else(|| CellState::unassigned(label)))
+            .collect();
+        anyhow::ensure!(
+            old.is_empty(),
+            "campaign {name:?}: edit would orphan cell(s) [{}] — this is a bug, \
+             appends can only grow the grid",
+            old.keys().cloned().collect::<Vec<_>>().join(", ")
+        );
+        m.spec = cfg.spec_to_json();
+        m.schema_version = CAMPAIGN_SCHEMA_VERSION;
+        m.updated_unix = unix_now();
+        Ok(m)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentCfg;
+
+    fn scratch(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "fedel-operator-spec-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn seeded(store: &RunStore) -> CampaignCfg {
+        let base = ExperimentCfg { model: "mock:4x20".into(), rounds: 4, ..Default::default() };
+        let mut cfg = CampaignCfg::new("edit", base);
+        cfg.axis("strategy=fedavg,fedel").unwrap();
+        cfg.axis("seed=1,2").unwrap();
+        let cells = cfg.cells().unwrap();
+        crate::sim::campaign::load_or_create_manifest(store, &cfg, &cells).unwrap();
+        cfg
+    }
+
+    #[test]
+    fn edit_appends_axis_values_and_preserves_cell_state_by_label() {
+        let dir = scratch("append");
+        let store = RunStore::open(&dir).unwrap();
+        seeded(&store);
+        // give one cell visible state so the rekeying has to carry it
+        store
+            .claim_campaign_cell("edit", "strategy=fedel,seed=2", None, "fedel-s2-run")
+            .unwrap();
+        store
+            .update_campaign("edit", |mut m| {
+                let c = m.cells.iter_mut().find(|c| c.label == "strategy=fedavg,seed=1").unwrap();
+                c.pruned = true;
+                Ok(m)
+            })
+            .unwrap();
+
+        let m = edit_campaign(&store, "edit", &["seed=+3".to_string()]).unwrap();
+        let labels: Vec<&str> = m.cells.iter().map(|c| c.label.as_str()).collect();
+        // seed is the INNER axis: appending renumbers fedel cells — the
+        // exact reordering hazard label-keying exists for
+        assert_eq!(
+            labels,
+            vec![
+                "strategy=fedavg,seed=1",
+                "strategy=fedavg,seed=2",
+                "strategy=fedavg,seed=3",
+                "strategy=fedel,seed=1",
+                "strategy=fedel,seed=2",
+                "strategy=fedel,seed=3",
+            ]
+        );
+        let cell = |label: &str| m.cells.iter().find(|c| c.label == label).unwrap();
+        assert_eq!(cell("strategy=fedel,seed=2").run_id.as_deref(), Some("fedel-s2-run"));
+        assert!(cell("strategy=fedavg,seed=1").pruned);
+        assert_eq!(cell("strategy=fedavg,seed=3").run_id, None);
+        // the spec snapshot re-expands to the same grid (bare resume works)
+        let back = CampaignCfg::from_spec_json("edit", &m.spec).unwrap();
+        assert_eq!(
+            back.cells().unwrap().iter().map(CampaignCell::label).collect::<Vec<_>>(),
+            labels
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn edit_rejects_unmarked_duplicate_unknown_and_zip_targets() {
+        let dir = scratch("reject");
+        let store = RunStore::open(&dir).unwrap();
+        seeded(&store);
+        let edit = |specs: &[&str]| {
+            edit_campaign(&store, "edit", &specs.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+        };
+        // missing '+' marker
+        let err = edit(&["seed=3"]).unwrap_err().to_string();
+        assert!(err.contains("seed=+3"), "{err}");
+        // duplicate value
+        let err = edit(&["seed=+2"]).unwrap_err().to_string();
+        assert!(err.contains("already has value 2"), "{err}");
+        // unknown axis
+        let err = edit(&["data.alpha=+0.3"]).unwrap_err().to_string();
+        assert!(err.contains("no \"data.alpha\" sweep axis"), "{err}");
+        // zip axes can't be edited
+        let base = ExperimentCfg { model: "mock:4x20".into(), rounds: 4, ..Default::default() };
+        let mut zcfg = CampaignCfg::new("zipped", base);
+        zcfg.axis("seed=1,2").unwrap();
+        zcfg.zip_axis("strategy=fedavg,fedel").unwrap();
+        zcfg.zip_axis("time.t_th_factor=1.0,0.8").unwrap();
+        let cells = zcfg.cells().unwrap();
+        crate::sim::campaign::load_or_create_manifest(&store, &zcfg, &cells).unwrap();
+        let err = edit_campaign(&store, "zipped", &["strategy=+fedprox".to_string()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("zip axis"), "{err}");
+        // a failed edit leaves the stored grid untouched
+        assert_eq!(store.load_campaign("edit").unwrap().cells.len(), 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn multi_value_and_multi_axis_edits_apply_atomically() {
+        let dir = scratch("multi");
+        let store = RunStore::open(&dir).unwrap();
+        seeded(&store);
+        let m = edit_campaign(
+            &store,
+            "edit",
+            &["seed=+3,+4".to_string(), "strategy=+fedprox".to_string()],
+        )
+        .unwrap();
+        assert_eq!(m.cells.len(), 3 * 4);
+        assert!(m.cells.iter().any(|c| c.label == "strategy=fedprox,seed=4"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

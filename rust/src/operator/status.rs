@@ -1,0 +1,256 @@
+//! Observed campaign state: what the store actually holds, per cell.
+//!
+//! One [`observe`] call is the operator's entire view of the world — the
+//! reconcile loop, the halving policy, `campaign status` (table and
+//! `--json`), and CI assertions all read the same snapshot, so they can
+//! never disagree about what a cell is doing. Run manifests load across
+//! a thread pool: against an HTTP store the old serial loop cost
+//! O(cells × RTT) per status call, which is exactly the path the
+//! operator polls.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::store::schema::{CampaignManifest, CellState, RunManifest, RunStatus};
+use crate::store::RunStore;
+use crate::util::json::Json;
+use crate::util::unix_now;
+
+/// One cell's observed state, joined from the campaign manifest (the
+/// assignment + lease) and its run manifest (the progress).
+#[derive(Clone, Debug)]
+pub struct CellStatusRow {
+    /// Position in the current grid expansion (shifts under live edits;
+    /// `label` is the stable identity).
+    pub index: usize,
+    pub label: String,
+    pub run_id: Option<String>,
+    /// Lease holder, when some worker currently holds the cell.
+    pub worker: Option<String>,
+    /// Seconds since the holder's last heartbeat (`None` when unleased).
+    pub lease_age_secs: Option<u64>,
+    /// Retired by the halving policy; never advanced again.
+    pub pruned: bool,
+    /// Store view: "pending" (no run), "missing" (assigned run
+    /// unreadable), "incomplete" (running, no checkpoint), "resumable"
+    /// (running with a checkpoint), or "complete". Pruning is orthogonal
+    /// — a pruned cell keeps the state its partial run last had.
+    pub state: &'static str,
+    /// Rounds recorded so far (0 without a readable run).
+    pub rounds_done: usize,
+    /// The run's configured round budget, when a run exists.
+    pub rounds_total: Option<usize>,
+    pub final_acc: Option<f64>,
+    /// The loaded run manifest, so downstream consumers (the halving
+    /// policy ranking eval records) never re-fetch it.
+    pub run: Option<RunManifest>,
+}
+
+/// A point-in-time snapshot of a whole campaign.
+#[derive(Clone, Debug)]
+pub struct CampaignStatus {
+    pub name: String,
+    /// Wall-clock second the snapshot was taken (lease ages are relative
+    /// to this instant).
+    pub observed_unix: u64,
+    pub cells: Vec<CellStatusRow>,
+}
+
+impl CampaignStatus {
+    /// Every cell is finished: complete in the store or pruned.
+    pub fn converged(&self) -> bool {
+        self.cells.iter().all(|c| c.pruned || c.state == "complete")
+    }
+}
+
+fn row(store: &RunStore, now: u64, index: usize, cell: &CellState) -> CellStatusRow {
+    let loaded = cell.run_id.as_ref().map(|id| store.load_manifest(id));
+    let (state, run): (&'static str, Option<RunManifest>) = match loaded {
+        None => ("pending", None),
+        Some(Err(_)) => ("missing", None),
+        Some(Ok(r)) => (
+            match (r.status, &r.checkpoint) {
+                (RunStatus::Complete, _) => "complete",
+                (RunStatus::Running, Some(_)) => "resumable",
+                (RunStatus::Running, None) => "incomplete",
+            },
+            Some(r),
+        ),
+    };
+    CellStatusRow {
+        index,
+        label: cell.label.clone(),
+        run_id: cell.run_id.clone(),
+        worker: cell.worker.clone(),
+        lease_age_secs: cell.lease_age_secs(now),
+        pruned: cell.pruned,
+        state,
+        rounds_done: run.as_ref().map(|r| r.records.len()).unwrap_or(0),
+        rounds_total: run.as_ref().map(|r| r.config.rounds),
+        final_acc: run.as_ref().and_then(|r| r.final_acc()),
+        run,
+    }
+}
+
+/// Snapshot every cell of `m`, loading run manifests across a bounded
+/// thread pool (cells are independent, so rows land in manifest order
+/// regardless of which worker fetched them).
+pub fn observe(store: &RunStore, m: &CampaignManifest) -> CampaignStatus {
+    let now = unix_now();
+    let slots: Vec<Mutex<Option<CellStatusRow>>> =
+        m.cells.iter().map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, m.cells.len().max(1));
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= m.cells.len() {
+                    break;
+                }
+                let r = row(store, now, i, &m.cells[i]);
+                *slots[i].lock().expect("status slot lock poisoned") = Some(r);
+            });
+        }
+    });
+    CampaignStatus {
+        name: m.name.clone(),
+        observed_unix: now,
+        cells: slots
+            .into_iter()
+            .map(|s| {
+                s.into_inner()
+                    .expect("status slot lock poisoned")
+                    .expect("status worker skipped a cell")
+            })
+            .collect(),
+    }
+}
+
+/// The status snapshot as structured JSON (`campaign status --json`):
+/// everything the table shows plus lease ages and prune flags, so the
+/// operator loop and CI assert progress without scraping text.
+pub fn status_json(status: &CampaignStatus) -> Json {
+    let cells: Vec<Json> = status
+        .cells
+        .iter()
+        .map(|c| {
+            let opt_str = |v: &Option<String>| {
+                v.as_ref().map(|s| Json::Str(s.clone())).unwrap_or(Json::Null)
+            };
+            Json::obj(vec![
+                ("cell", Json::Str(c.label.clone())),
+                ("run", opt_str(&c.run_id)),
+                ("state", Json::Str(c.state.to_string())),
+                ("pruned", Json::Bool(c.pruned)),
+                ("worker", opt_str(&c.worker)),
+                (
+                    "lease_age_secs",
+                    c.lease_age_secs.map(|a| Json::Num(a as f64)).unwrap_or(Json::Null),
+                ),
+                ("rounds", Json::Num(c.rounds_done as f64)),
+                (
+                    "rounds_total",
+                    c.rounds_total.map(|r| Json::Num(r as f64)).unwrap_or(Json::Null),
+                ),
+                (
+                    "final_acc",
+                    c.final_acc.map(Json::Num).unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("campaign", Json::Str(status.name.clone())),
+        ("observed_unix", Json::Num(status.observed_unix as f64)),
+        ("cells", Json::Arr(cells)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::store::schema::{CampaignManifest, CellState, CAMPAIGN_SCHEMA_VERSION};
+
+    fn scratch(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "fedel-operator-status-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn observe_joins_cells_with_their_runs_and_renders_json() {
+        let dir = scratch("observe");
+        let store = RunStore::open(&dir).unwrap();
+        // one real stored run for cell "a"
+        let cfg = crate::config::ExperimentCfg {
+            model: "mock:4x20".into(),
+            rounds: 2,
+            ..Default::default()
+        };
+        let mut exp = crate::sim::experiment::Experiment::build(cfg).unwrap();
+        let mut ckpt =
+            crate::store::checkpoint::CheckpointObserver::create(&store, &exp.cfg, "fedavg", 1)
+                .unwrap();
+        let id = ckpt.run_id().to_string();
+        exp.run_from(Some("fedavg"), &mut ckpt, None).unwrap();
+        assert!(ckpt.take_error().is_none());
+
+        let m = CampaignManifest {
+            schema_version: CAMPAIGN_SCHEMA_VERSION,
+            name: "obs".into(),
+            created_unix: 0,
+            updated_unix: 0,
+            spec: Json::Null,
+            cells: vec![
+                CellState { run_id: Some(id.clone()), ..CellState::unassigned("a".into()) },
+                CellState {
+                    worker: Some("w9".into()),
+                    lease_unix: unix_now().saturating_sub(12),
+                    ..CellState::unassigned("b".into())
+                },
+                CellState { pruned: true, ..CellState::unassigned("c".into()) },
+                CellState {
+                    run_id: Some("vanished-run".into()),
+                    ..CellState::unassigned("d".into())
+                },
+            ],
+        };
+        store.save_campaign(&m).unwrap();
+        let status = observe(&store, &m);
+        assert_eq!(status.cells.len(), 4);
+        let a = &status.cells[0];
+        assert_eq!(a.state, "complete");
+        assert_eq!(a.rounds_done, 2);
+        assert_eq!(a.rounds_total, Some(2));
+        assert!(a.final_acc.is_some());
+        assert!(a.run.is_some());
+        let b = &status.cells[1];
+        assert_eq!(b.state, "pending");
+        assert_eq!(b.worker.as_deref(), Some("w9"));
+        assert!(b.lease_age_secs.unwrap_or(0) >= 12);
+        assert!(status.cells[2].pruned);
+        assert_eq!(status.cells[3].state, "missing");
+        assert!(!status.converged(), "b and d are unfinished");
+
+        // the JSON view round-trips through the parser and keeps the
+        // fields CI greps for
+        let j = Json::parse(&status_json(&status).to_string_pretty()).unwrap();
+        assert_eq!(j.s("campaign").unwrap(), "obs");
+        let cells = j.arr("cells").unwrap();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].s("state").unwrap(), "complete");
+        assert_eq!(cells[0].s("run").unwrap(), id);
+        assert_eq!(cells[0].f("rounds").unwrap(), 2.0);
+        assert!(matches!(cells[2].get("pruned"), Some(Json::Bool(true))));
+        assert!(matches!(cells[0].get("worker"), Some(Json::Null)));
+        assert_eq!(cells[1].s("worker").unwrap(), "w9");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,462 @@
+//! The reconciler: a worker loop converging observed state to desired.
+//!
+//! [`operate`] is what a `campaign operate` process runs. Each pass it
+//! re-reads the stored spec (desired state — live edits land between
+//! passes), snapshots the store ([`crate::operator::status::observe`],
+//! observed state), and takes exactly one convergence step:
+//!
+//! 1. **Apply policy.** If [`crate::operator::policy::plan_prunes`]
+//!    wants cells retired that aren't yet marked, mark them (one CAS
+//!    transaction, a union — never un-prune) and go around again.
+//! 2. **Done?** Every cell complete-or-pruned → return, converged.
+//! 3. **Lease a cell.** Candidates are unfinished, unpruned cells whose
+//!    lease is free, ours, or expired — laggards first (lowest rounds
+//!    done), so shared rung boundaries unblock as early as possible.
+//!    Nothing leasable → sleep one poll interval and go around.
+//! 4. **Advance one segment.** Run the cell to its next rung boundary
+//!    (or completion when none remain) via the ordinary campaign cell
+//!    executor, with a heartbeat observer renewing the lease every few
+//!    rounds. Release the lease; go around.
+//!
+//! Crash recovery needs no extra machinery: a worker that dies mid-cell
+//! stops heartbeating, its lease goes stale, and step 3 in any surviving
+//! worker reclaims the cell — the run resumes from its checkpoint
+//! bitwise-identically (`tests/campaign.rs`). If a presumed-dead worker
+//! is actually alive (a stalled VM resuming), both briefly run the same
+//! cell; every write is a deterministic function of the run's config and
+//! round index, so the double execution is wasted work, not corruption.
+//!
+//! Any number of operate processes — across hosts, against one served
+//! store — cooperate through the same three store primitives (claim,
+//! lease, conditional-PUT campaign swap) with no coordinator process.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::fl::observer::RoundObserver;
+use crate::fl::server::RoundRecord;
+use crate::operator::{policy, status};
+use crate::sim::campaign::{self, CampaignCfg, CellRun};
+use crate::store::{LeaseOutcome, RunStore};
+use crate::util::unix_now;
+
+/// Give up on a cell after this many consecutive failed segments — a
+/// deterministic config error (bad model name, unloadable data) fails
+/// identically every retry, and retrying it forever would wedge the
+/// whole fleet on one cell.
+const MAX_CELL_FAILURES: usize = 3;
+
+/// One operate process's knobs (process identity and cadences; the
+/// sweep itself lives in the stored campaign spec).
+#[derive(Clone, Debug)]
+pub struct OperateCfg {
+    pub name: String,
+    /// Worker identity recorded in leases. Must be unique per process —
+    /// the default encodes the pid, which is enough on one host; fleet
+    /// deployments should pass `host:pid`.
+    pub worker: String,
+    /// A lease not heartbeat-renewed for this long is reclaimable.
+    pub lease_secs: u64,
+    /// Sleep between reconcile passes when nothing is actionable.
+    pub poll_secs: u64,
+    /// Stop after this many segments (drills/tests; `None` = run to
+    /// convergence).
+    pub max_segments: Option<usize>,
+    /// Per-decision progress lines on stderr.
+    pub verbose: bool,
+}
+
+impl OperateCfg {
+    pub fn new(name: impl Into<String>) -> OperateCfg {
+        OperateCfg {
+            name: name.into(),
+            worker: format!("w{}", std::process::id()),
+            lease_secs: 30,
+            poll_secs: 2,
+            max_segments: None,
+            verbose: false,
+        }
+    }
+}
+
+/// What one [`operate`] invocation did.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct OperateOutcome {
+    /// Cells this worker drove to completion (final segment ours).
+    pub completed: usize,
+    /// Checkpoint-aligned segments executed (including final ones).
+    pub segments: usize,
+    /// Expired leases taken over from dead workers.
+    pub reclaimed: usize,
+    /// Prune decisions this worker applied to the manifest.
+    pub pruned: usize,
+    /// Every cell ended complete or pruned (false only when
+    /// `max_segments` stopped the loop early).
+    pub converged: bool,
+}
+
+/// Renews the worker's lease from inside the round loop, so a cell
+/// whose segment outlives `lease_secs` isn't "reclaimed" out from under
+/// a perfectly live worker. Renewal is best-effort: a store hiccup (or
+/// an actual steal, surfacing as [`LeaseOutcome::Held`]) must not abort
+/// training — the worst case is a double execution, which determinism
+/// makes benign (module docs).
+struct LeaseHeartbeat<'a> {
+    store: &'a RunStore,
+    name: &'a str,
+    label: &'a str,
+    worker: &'a str,
+    lease_secs: u64,
+    last: Instant,
+}
+
+impl RoundObserver for LeaseHeartbeat<'_> {
+    fn on_round_end(&mut self, _record: &RoundRecord) {
+        let cadence = (self.lease_secs / 3).max(1);
+        if self.last.elapsed().as_secs() < cadence {
+            return;
+        }
+        let _ = self
+            .store
+            .lease_campaign_cell(self.name, self.label, self.worker, self.lease_secs);
+        self.last = Instant::now();
+    }
+}
+
+/// The round count the store currently shows for a cell's run (`None`
+/// when the cell or its run can't be read) — how the reconciler tells a
+/// planned segment halt (progress reached the boundary) from a real
+/// failure after `run_cell` returns an error for either.
+fn stored_progress(store: &RunStore, name: &str, label: &str) -> Option<usize> {
+    let m = store.load_campaign(name).ok()?;
+    let id = m.cells.iter().find(|c| c.label == label)?.run_id.clone()?;
+    store.load_manifest(&id).ok().map(|r| r.records.len())
+}
+
+/// Run the reconcile loop until the campaign converges (every cell
+/// complete or pruned), a cell fails [`MAX_CELL_FAILURES`] times in a
+/// row, or `max_segments` trips. `seed` registers the campaign when it
+/// doesn't exist yet (its grid must agree if it does — same rule as
+/// `campaign run`); pass `None` to require an existing campaign.
+pub fn operate(
+    store: &RunStore,
+    ocfg: &OperateCfg,
+    seed: Option<&CampaignCfg>,
+) -> anyhow::Result<OperateOutcome> {
+    anyhow::ensure!(!ocfg.worker.is_empty(), "operate worker id must be non-empty");
+    anyhow::ensure!(ocfg.lease_secs >= 1, "operate lease must be at least 1s");
+    if let Some(cfg) = seed {
+        anyhow::ensure!(
+            cfg.name == ocfg.name,
+            "operate name {:?} does not match seed campaign {:?}",
+            ocfg.name,
+            cfg.name
+        );
+        campaign::load_or_create_manifest(store, cfg, &cfg.cells()?)?;
+    } else {
+        anyhow::ensure!(
+            store.campaign_exists(&ocfg.name),
+            "campaign {:?} does not exist under {} — seed it with grid args \
+             (`campaign operate --sweep ...`) or `campaign run` first",
+            ocfg.name,
+            store.location()
+        );
+    }
+    let mut out = OperateOutcome::default();
+    // label -> (consecutive failures, last error)
+    let mut failures: HashMap<String, (usize, String)> = HashMap::new();
+    loop {
+        if out.segments >= ocfg.max_segments.unwrap_or(usize::MAX) {
+            return Ok(out);
+        }
+        // Desired state: the stored spec, re-read every pass so live
+        // `campaign edit`s take effect at the next convergence step.
+        let stored = store.load_campaign(&ocfg.name)?;
+        let mut cfg = CampaignCfg::from_spec_json(&stored.name, &stored.spec)?;
+        cfg.verbose = false;
+        let cells = cfg.cells()?;
+        // Validates label agreement and migrates pre-v2 manifests.
+        let manifest = campaign::load_or_create_manifest(store, &cfg, &cells)?;
+
+        // Observed state, then policy: persist any prune decisions not
+        // yet marked, and re-observe before doing anything else.
+        let observed = status::observe(store, &manifest);
+        let decisions = policy::plan_prunes(&cfg, &observed)?;
+        let fresh: Vec<&policy::PruneDecision> = decisions
+            .iter()
+            .filter(|d| observed.cells.iter().any(|c| c.label == d.label && !c.pruned))
+            .collect();
+        if !fresh.is_empty() {
+            store.update_campaign(&ocfg.name, |mut m| {
+                for d in &decisions {
+                    if let Some(c) = m.cells.iter_mut().find(|c| c.label == d.label) {
+                        c.pruned = true;
+                        c.worker = None;
+                        c.lease_unix = 0;
+                    }
+                }
+                m.updated_unix = unix_now();
+                Ok(m)
+            })?;
+            out.pruned += fresh.len();
+            if ocfg.verbose {
+                for d in &fresh {
+                    eprintln!(
+                        "[operate {}] {}: pruned at rung {} (metric {:?})",
+                        ocfg.name, d.label, d.rung_round, d.metric
+                    );
+                }
+            }
+            continue;
+        }
+        if observed.converged() {
+            out.converged = true;
+            return Ok(out);
+        }
+
+        // Lease a runnable cell: unfinished, unpruned, free / ours /
+        // expired — and not parked at an unfired rung. A cell that
+        // reached a boundary some unpruned cell hasn't must wait there:
+        // running it further would waste compute it may lose at the rung,
+        // and would make a pruned cell's stored progress depend on worker
+        // interleaving instead of being exactly its losing rung. The most
+        // lagging unpruned incomplete cell is never gated (every boundary
+        // it reached, the whole grid has), so the campaign always has a
+        // runnable cell and can't deadlock on this rule. Laggards first,
+        // so rung boundaries unblock earliest.
+        let boundaries = policy::cfg_rungs(&cfg)?;
+        let frontier = observed
+            .cells
+            .iter()
+            .filter(|c| !c.pruned)
+            .map(|c| c.rounds_done)
+            .min()
+            .unwrap_or(0);
+        let mut candidates: Vec<&status::CellStatusRow> = observed
+            .cells
+            .iter()
+            .filter(|r| !r.pruned && r.state != "complete")
+            .filter(|r| !boundaries.iter().any(|&b| r.rounds_done >= b && frontier < b))
+            .filter(|r| match (r.worker.as_deref(), r.lease_age_secs) {
+                (None, _) => true,
+                (Some(w), _) if w == ocfg.worker => true,
+                (Some(_), Some(age)) => age >= ocfg.lease_secs,
+                (Some(_), None) => true,
+            })
+            .collect();
+        candidates.sort_by_key(|r| (r.rounds_done, r.index));
+        let Some(target) = candidates.first().copied() else {
+            // Everything runnable is held by a live worker; wait for
+            // their progress (or their lease to expire).
+            std::thread::sleep(Duration::from_secs(ocfg.poll_secs.max(1)));
+            continue;
+        };
+        let label = target.label.clone();
+        match store.lease_campaign_cell(&ocfg.name, &label, &ocfg.worker, ocfg.lease_secs)? {
+            LeaseOutcome::Pruned => continue,
+            LeaseOutcome::Held { .. } => {
+                // Lost the race for this cell; another pass will find
+                // the next candidate.
+                std::thread::sleep(Duration::from_secs(ocfg.poll_secs.max(1)));
+                continue;
+            }
+            LeaseOutcome::Acquired { reclaimed_from, .. } => {
+                if let Some(prev) = reclaimed_from {
+                    out.reclaimed += 1;
+                    if ocfg.verbose {
+                        eprintln!(
+                            "[operate {}] {label}: reclaimed expired lease from {prev}",
+                            ocfg.name
+                        );
+                    }
+                }
+            }
+        }
+
+        // One segment: to the next rung boundary ahead of the cell, or
+        // completion when none remain. Boundaries align to the
+        // checkpoint cadence, so a halted segment always leaves a
+        // durable checkpoint exactly at the rung.
+        let halt = boundaries.iter().copied().find(|&b| b > target.rounds_done);
+        let cell = cells
+            .iter()
+            .find(|c| c.label() == label)
+            .ok_or_else(|| anyhow::anyhow!("campaign {:?} grid lost cell {label:?}", ocfg.name))?;
+        let mut seg = cfg.clone();
+        seg.halt_after = halt;
+        if ocfg.verbose {
+            let until = halt.map(|h| format!("round {h}")).unwrap_or_else(|| "completion".into());
+            eprintln!("[operate {}] {label}: advancing to {until}", ocfg.name);
+        }
+        let mut heartbeat = LeaseHeartbeat {
+            store,
+            name: &ocfg.name,
+            label: &label,
+            worker: &ocfg.worker,
+            lease_secs: ocfg.lease_secs,
+            last: Instant::now(),
+        };
+        let ran = campaign::run_cell(store, &seg, cell, &mut heartbeat);
+        out.segments += 1;
+        let mut failed: Option<String> = None;
+        match ran {
+            Ok((_, CellRun::Completed)) => {
+                out.completed += 1;
+                failures.remove(&label);
+            }
+            Ok(_) => {
+                // Skipped / Pruned / Pending: the store changed under us
+                // (another worker finished it, the policy retired it);
+                // nothing to do, the next pass sees the new state.
+                failures.remove(&label);
+            }
+            Err(e) => {
+                // A segment halt surfaces as an error from the server's
+                // kill switch; tell it apart from a real failure by what
+                // the store shows — a halted segment checkpointed at or
+                // past its boundary, a failed one didn't.
+                match (halt, stored_progress(store, &ocfg.name, &label)) {
+                    (Some(h), Some(done)) if done >= h => {
+                        failures.remove(&label);
+                    }
+                    _ => failed = Some(format!("{e:#}")),
+                }
+            }
+        }
+        store.release_campaign_lease(&ocfg.name, &label, &ocfg.worker)?;
+        if let Some(msg) = failed {
+            if ocfg.verbose {
+                eprintln!("[operate {}] {label}: segment FAILED: {msg}", ocfg.name);
+            }
+            let entry = failures.entry(label.clone()).or_insert((0, String::new()));
+            entry.0 += 1;
+            entry.1 = msg;
+            if entry.0 >= MAX_CELL_FAILURES {
+                anyhow::bail!(
+                    "campaign {:?}: cell {label:?} failed {MAX_CELL_FAILURES} segments \
+                     in a row; last error: {}",
+                    ocfg.name,
+                    entry.1
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::params::{ParamSpace, SpecOverlay};
+    use crate::config::ExperimentCfg;
+
+    fn scratch(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "fedel-operator-worker-{tag}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn sweep(name: &str, rungs: usize) -> CampaignCfg {
+        let base = ExperimentCfg { model: "mock:4x20".into(), rounds: 4, ..Default::default() };
+        let mut cfg = CampaignCfg::new(name, base);
+        cfg.checkpoint_every = 2;
+        cfg.axis("seed=1,2,3").unwrap();
+        if rungs > 0 {
+            cfg.set = SpecOverlay::parse(
+                ParamSpace::shared(),
+                &[&format!("operator.halving.rungs={rungs}")],
+            )
+            .unwrap();
+        }
+        cfg
+    }
+
+    fn fast(name: &str) -> OperateCfg {
+        let mut ocfg = OperateCfg::new(name);
+        ocfg.worker = "w-test".into();
+        ocfg.lease_secs = 3600;
+        ocfg.poll_secs = 1;
+        ocfg
+    }
+
+    #[test]
+    fn operate_requires_an_existing_campaign_or_a_seed() {
+        let dir = scratch("seedless");
+        let store = RunStore::open(&dir).unwrap();
+        let err = operate(&store, &fast("ghost"), None).unwrap_err().to_string();
+        assert!(err.contains("does not exist"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn operate_converges_a_plain_sweep_in_segments() {
+        let dir = scratch("converge");
+        let store = RunStore::open(&dir).unwrap();
+        let cfg = sweep("plain", 0);
+        let out = operate(&store, &fast("plain"), Some(&cfg)).unwrap();
+        assert!(out.converged);
+        assert_eq!(out.completed, 3);
+        assert_eq!(out.reclaimed, 0);
+        assert_eq!(out.pruned, 0);
+        // no rungs -> each cell is one completion segment
+        assert_eq!(out.segments, 3);
+        let m = store.load_campaign("plain").unwrap();
+        for c in &m.cells {
+            assert!(c.worker.is_none(), "leases released: {c:?}");
+            let run = store.load_manifest(c.run_id.as_ref().unwrap()).unwrap();
+            assert_eq!(run.records.len(), 4);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn operate_halves_at_the_rung_and_skips_pruned_cells() {
+        let dir = scratch("halving");
+        let store = RunStore::open(&dir).unwrap();
+        let cfg = sweep("halve", 1); // rounds=4, cadence 2, rung at round 2
+        let out = operate(&store, &fast("halve"), Some(&cfg)).unwrap();
+        assert!(out.converged);
+        // keep = ceil(0.5 * 3) = 2 -> exactly one cell pruned at round 2
+        assert_eq!(out.pruned, 1);
+        assert_eq!(out.completed, 2);
+        let m = store.load_campaign("halve").unwrap();
+        let pruned: Vec<&str> =
+            m.cells.iter().filter(|c| c.pruned).map(|c| c.label.as_str()).collect();
+        assert_eq!(pruned.len(), 1);
+        // the loser stopped at the rung boundary; survivors finished
+        for c in &m.cells {
+            let run = store.load_manifest(c.run_id.as_ref().unwrap()).unwrap();
+            assert_eq!(run.records.len(), if c.pruned { 2 } else { 4 }, "{}", c.label);
+        }
+        // a second operate pass over the converged campaign is a no-op
+        // (prunes recompute identically, nothing re-runs)
+        let again = operate(&store, &fast("halve"), Some(&cfg)).unwrap();
+        assert!(again.converged);
+        assert_eq!(again.segments, 0);
+        assert_eq!(again.pruned, 0);
+        let m2 = store.load_campaign("halve").unwrap();
+        let pruned2: Vec<&str> =
+            m2.cells.iter().filter(|c| c.pruned).map(|c| c.label.as_str()).collect();
+        assert_eq!(pruned, pruned2, "prune decisions are stable across operators");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn max_segments_stops_early_and_a_later_operate_finishes() {
+        let dir = scratch("resume");
+        let store = RunStore::open(&dir).unwrap();
+        let cfg = sweep("staged", 1);
+        let mut first = fast("staged");
+        first.max_segments = Some(2);
+        let out = operate(&store, &first, Some(&cfg)).unwrap();
+        assert!(!out.converged);
+        assert_eq!(out.segments, 2);
+        let rest = operate(&store, &fast("staged"), None).unwrap();
+        assert!(rest.converged);
+        assert_eq!(out.completed + rest.completed, 2);
+        assert_eq!(out.pruned + rest.pruned, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

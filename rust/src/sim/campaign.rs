@@ -32,6 +32,11 @@
 //! * Two kill switches mirror `ServerCfg::halt_after` for drills and
 //!   tests: `halt_after` kills each executing cell after k rounds, and
 //!   `halt_after_cells` stops the campaign after n cells finish.
+//! * The multi-process control plane lives in [`crate::operator`]:
+//!   `campaign operate` workers drive these same cells through the same
+//!   store primitives — plus leases, live grid edits, and
+//!   successive-halving pruning — so one-shot runs and reconcile-loop
+//!   fleets are interchangeable on any campaign.
 //!
 //! Reporting rides the N-way [`crate::report::compare_runs`] ([`report`])
 //! and, for the paper's Table-3 shape, [`grouped_report`] collapses one
@@ -45,12 +50,12 @@ use std::sync::Mutex;
 
 use crate::config::params::{bindings_label, Binding, ParamSpace, ParamValue, SpecOverlay, SweepAxis};
 use crate::config::ExperimentCfg;
-use crate::fl::observer::NullObserver;
+use crate::fl::observer::{NullObserver, ObserverSet, RoundObserver};
 use crate::report::{
     aggregate, compare_runs, time_to_target, CompareReport, GroupRow, GroupedReport, Table,
     Target, TargetMetric,
 };
-use crate::sim::experiment::{resume_run, Experiment};
+use crate::sim::experiment::{resume_run_until, Experiment};
 use crate::store::checkpoint::CheckpointObserver;
 use crate::store::schema::{
     CampaignManifest, CellState, RunManifest, RunStatus, CAMPAIGN_SCHEMA_VERSION,
@@ -88,9 +93,10 @@ pub struct CampaignCfg {
     /// identical at any worker count.
     pub workers: usize,
     /// Kill switch, per cell: every cell *executed* by this invocation
-    /// aborts after this many rounds (resumed cells run to completion —
-    /// their config snapshot is authoritative). Not part of the spec
-    /// snapshot.
+    /// halts after this absolute round (fresh, replayed, and resumed
+    /// alike; a boundary the cell has already passed is inert). Never
+    /// part of the spec snapshot or any run's config — the operator sets
+    /// it per segment to stop cells at rung boundaries.
     pub halt_after: Option<usize>,
     /// Kill switch, campaign-level: stop claiming cells once this many
     /// have been executed to completion by this invocation. Not part of
@@ -362,6 +368,11 @@ pub enum CellRun {
     /// before a worker got to it), or a concurrent campaign process owns
     /// the cell's run.
     Pending,
+    /// Retired by the successive-halving policy
+    /// ([`crate::operator::policy`]): the cell ranked below the keep
+    /// fraction at a rung boundary and will never be advanced again. Its
+    /// partial run (if any) stays in the store for reporting.
+    Pruned,
 }
 
 #[derive(Clone, Debug)]
@@ -380,23 +391,25 @@ pub struct CampaignOutcome {
 }
 
 impl CampaignOutcome {
-    /// Every cell is done (complete in the store), whether this
-    /// invocation executed it or a previous one did.
+    /// Every cell is done — complete in the store (whether this
+    /// invocation executed it or a previous one did) or retired by the
+    /// halving policy.
     pub fn complete(&self) -> bool {
         self.cells
             .iter()
-            .all(|c| matches!(c.status, CellRun::Skipped | CellRun::Completed))
+            .all(|c| matches!(c.status, CellRun::Skipped | CellRun::Completed | CellRun::Pruned))
     }
 
-    /// (skipped, completed, failed, pending) counts.
-    pub fn counts(&self) -> (usize, usize, usize, usize) {
-        let mut n = (0, 0, 0, 0);
+    /// (skipped, completed, failed, pending, pruned) counts.
+    pub fn counts(&self) -> (usize, usize, usize, usize, usize) {
+        let mut n = (0, 0, 0, 0, 0);
         for c in &self.cells {
             match c.status {
                 CellRun::Skipped => n.0 += 1,
                 CellRun::Completed => n.1 += 1,
                 CellRun::Failed(_) => n.2 += 1,
                 CellRun::Pending => n.3 += 1,
+                CellRun::Pruned => n.4 += 1,
             }
         }
         n
@@ -415,7 +428,7 @@ impl CampaignOutcome {
 /// claiming cells — or migrating too — can never lose writes: the
 /// manifest is re-read under the lock, and a raced migration that
 /// already upgraded it is a no-op.
-fn migrate_campaign(store: &RunStore, name: &str) -> anyhow::Result<CampaignManifest> {
+pub(crate) fn migrate_campaign(store: &RunStore, name: &str) -> anyhow::Result<CampaignManifest> {
     store.update_campaign(name, |mut m| {
         if m.schema_version >= CAMPAIGN_SCHEMA_VERSION {
             return Ok(m); // another process migrated between our load and lock
@@ -444,8 +457,10 @@ fn migrate_campaign(store: &RunStore, name: &str) -> anyhow::Result<CampaignMani
 /// pre-existing campaign must agree on the expanded grid — resuming with
 /// a *different* grid under the same name is almost certainly a mistake,
 /// so it fails loudly instead of silently re-mapping cells. Manifests
-/// from older schema versions are migrated first.
-fn load_or_create_manifest(
+/// from older schema versions are migrated first. (The operator's
+/// reconcile loop shares this entry point, so `campaign run` and
+/// `campaign operate` register and resume campaigns identically.)
+pub(crate) fn load_or_create_manifest(
     store: &RunStore,
     cfg: &CampaignCfg,
     cells: &[CampaignCell],
@@ -477,36 +492,50 @@ fn load_or_create_manifest(
             created_unix: now,
             updated_unix: now,
             spec: cfg.spec_to_json(),
-            cells: labels
-                .into_iter()
-                .map(|label| CellState { label, run_id: None })
-                .collect(),
+            cells: labels.into_iter().map(CellState::unassigned).collect(),
         };
         store.save_campaign(&m)?;
         Ok(m)
     }
 }
 
-/// Execute one cell to completion, whatever state the store left it in.
-/// Returns the cell's run id and how it ended up. The campaign manifest
-/// on *disk* is the source of truth for cell→run assignments — it is
-/// re-read here and claimed via the store's locked compare-and-swap, so
-/// two campaign processes driving the same grid never clobber each
-/// other's assignments or double-run a cell.
-fn run_cell(
+/// Execute one cell as far as this invocation's kill switch allows,
+/// whatever state the store left it in. Returns the cell's run id (when
+/// it has one) and how it ended up. The campaign manifest on *disk* is
+/// the source of truth for cell→run assignments — it is re-read here
+/// (cells addressed by label, which live grid edits keep stable) and
+/// claimed via the store's locked compare-and-swap, so two campaign
+/// processes driving the same grid never clobber each other's
+/// assignments or double-run a cell. `extra` rides every executed round
+/// (the operator's lease heartbeat; `NullObserver` for plain
+/// `campaign run`).
+pub(crate) fn run_cell(
     store: &RunStore,
     cfg: &CampaignCfg,
     cell: &CampaignCell,
-) -> anyhow::Result<(String, CellRun)> {
-    let assigned = store.load_campaign(&cfg.name)?.cells[cell.index].run_id.clone();
-    if let Some(id) = assigned {
+    extra: &mut dyn RoundObserver,
+) -> anyhow::Result<(Option<String>, CellRun)> {
+    let label = cell.label();
+    let state = store
+        .load_campaign(&cfg.name)?
+        .cells
+        .into_iter()
+        .find(|c| c.label == label)
+        .ok_or_else(|| anyhow::anyhow!("campaign {:?} has no cell {label:?}", cfg.name))?;
+    if state.pruned {
+        return Ok((state.run_id, CellRun::Pruned));
+    }
+    if let Some(id) = state.run_id {
         match store.load_manifest(&id) {
-            Ok(m) if m.status == RunStatus::Complete => return Ok((id, CellRun::Skipped)),
+            Ok(m) if m.status == RunStatus::Complete => {
+                return Ok((Some(id), CellRun::Skipped))
+            }
             Ok(m) if m.checkpoint.is_some() => {
                 // Mid-flight kill with a checkpoint: the existing
-                // ResumeState machinery continues it bitwise-identically.
-                resume_run(store, &id, cfg.checkpoint_every, &mut NullObserver)?;
-                return Ok((id, CellRun::Completed));
+                // ResumeState machinery continues it bitwise-identically,
+                // up to this invocation's kill switch (None = completion).
+                resume_run_until(store, &id, cfg.checkpoint_every, cfg.halt_after, extra)?;
+                return Ok((Some(id), CellRun::Completed));
             }
             Ok(mut m) => {
                 // Claimed, then died before the first checkpoint: replay
@@ -521,11 +550,16 @@ fn run_cell(
                 exp_cfg.halt_after = cfg.halt_after;
                 let mut exp = Experiment::build(exp_cfg)?;
                 let mut ckpt = CheckpointObserver::resume(store, m, cfg.checkpoint_every);
-                exp.run_from(Some(&strategy), &mut ckpt, None)?;
-                if let Some(e) = ckpt.take_error() {
-                    anyhow::bail!("cell {}: persisting run state failed: {e}", cell.label());
+                {
+                    let mut set = ObserverSet::new();
+                    set.push(&mut ckpt);
+                    set.push(extra);
+                    exp.run_from(Some(&strategy), &mut set, None)?;
                 }
-                return Ok((id, CellRun::Completed));
+                if let Some(e) = ckpt.take_error() {
+                    anyhow::bail!("cell {label}: persisting run state failed: {e}");
+                }
+                return Ok((Some(id), CellRun::Completed));
             }
             Err(_) => {
                 // Run directory hand-deleted since the assignment was
@@ -537,11 +571,11 @@ fn run_cell(
                 let exp_cfg = cfg.cell_cfg(cell)?;
                 let fresh = store.fresh_run_id(&exp_cfg.strategy, exp_cfg.seed)?;
                 let winner =
-                    store.claim_campaign_cell(&cfg.name, cell.index, Some(id.as_str()), &fresh)?;
+                    store.claim_campaign_cell(&cfg.name, &label, Some(id.as_str()), &fresh)?;
                 if winner != fresh {
-                    return Ok((winner, CellRun::Pending));
+                    return Ok((Some(winner), CellRun::Pending));
                 }
-                return run_fresh_cell(store, cfg, cell, exp_cfg, fresh);
+                return run_fresh_cell(store, cfg, cell, exp_cfg, fresh, extra);
             }
         }
     }
@@ -551,11 +585,11 @@ fn run_cell(
     // the CAS, defer to its run (our reserved id stays an empty dir).
     let exp_cfg = cfg.cell_cfg(cell)?;
     let id = store.fresh_run_id(&exp_cfg.strategy, exp_cfg.seed)?;
-    let winner = store.claim_campaign_cell(&cfg.name, cell.index, None, &id)?;
+    let winner = store.claim_campaign_cell(&cfg.name, &label, None, &id)?;
     if winner != id {
-        return Ok((winner, CellRun::Pending));
+        return Ok((Some(winner), CellRun::Pending));
     }
-    run_fresh_cell(store, cfg, cell, exp_cfg, id)
+    run_fresh_cell(store, cfg, cell, exp_cfg, id, extra)
 }
 
 /// Fresh execution of a cell into an already-claimed run id.
@@ -565,7 +599,8 @@ fn run_fresh_cell(
     cell: &CampaignCell,
     exp_cfg: ExperimentCfg,
     id: String,
-) -> anyhow::Result<(String, CellRun)> {
+    extra: &mut dyn RoundObserver,
+) -> anyhow::Result<(Option<String>, CellRun)> {
     let strategy = exp_cfg.strategy.clone();
     let mut exp = Experiment::build(exp_cfg)?;
     let mut ckpt = CheckpointObserver::create_as(
@@ -575,11 +610,16 @@ fn run_fresh_cell(
         cfg.checkpoint_every,
         id.clone(),
     )?;
-    exp.run_from(Some(&strategy), &mut ckpt, None)?;
+    {
+        let mut set = ObserverSet::new();
+        set.push(&mut ckpt);
+        set.push(extra);
+        exp.run_from(Some(&strategy), &mut set, None)?;
+    }
     if let Some(e) = ckpt.take_error() {
         anyhow::bail!("cell {}: persisting run state failed: {e}", cell.label());
     }
-    Ok((id, CellRun::Completed))
+    Ok((Some(id), CellRun::Completed))
 }
 
 /// Run (or resume) a campaign: expand the grid, reconcile it with the
@@ -626,17 +666,19 @@ pub fn run_campaign(store: &RunStore, cfg: &CampaignCfg) -> anyhow::Result<Campa
                 };
                 let Some(cell) = cell else { break };
                 let label = cell.label();
-                let status = match run_cell(store, cfg, &cell) {
+                let status = match run_cell(store, cfg, &cell, &mut NullObserver) {
                     Ok((id, status)) => {
                         if cfg.verbose {
                             let verb = match status {
                                 CellRun::Skipped => "already complete",
                                 CellRun::Pending => "owned by another campaign process",
+                                CellRun::Pruned => "pruned by the halving policy",
                                 _ => "done",
                             };
+                            let id = id.as_deref().unwrap_or("-");
                             eprintln!("[campaign {}] cell {label} -> {id}: {verb}", cfg.name);
                         }
-                        {
+                        if let Some(id) = id {
                             let mut out =
                                 outcomes.lock().expect("campaign outcomes lock poisoned");
                             out[cell.index].run_id = Some(id);
@@ -669,35 +711,42 @@ pub fn run_campaign(store: &RunStore, cfg: &CampaignCfg) -> anyhow::Result<Campa
     })
 }
 
-/// One table row per cell: assignment, store status, progress, accuracy.
+/// One table row per cell: assignment, store status, worker lease,
+/// progress, accuracy — the [`crate::operator::status::observe`]
+/// snapshot rendered for terminals. Run manifests load across a thread
+/// pool there, so a wide campaign against an HTTP store costs one
+/// round-trip of wall clock, not O(cells × RTT).
 pub fn status_table(store: &RunStore, m: &CampaignManifest) -> Table {
+    let status = crate::operator::status::observe(store, m);
     let mut t = Table::new(
         &format!("campaign {} ({} cells)", m.name, m.cells.len()),
-        &["cell", "run", "status", "rounds", "final acc"],
+        &["cell", "run", "status", "worker", "rounds", "final acc"],
     );
-    for cell in &m.cells {
-        let (run, status, rounds, acc) = match &cell.run_id {
-            None => ("-".to_string(), "pending".to_string(), "-".to_string(), "-".to_string()),
-            Some(id) => match store.load_manifest(id) {
-                Err(_) => (id.clone(), "missing".to_string(), "-".into(), "-".into()),
-                Ok(r) => {
-                    let status = match (r.status, &r.checkpoint) {
-                        (RunStatus::Complete, _) => "complete",
-                        (RunStatus::Running, Some(_)) => "resumable",
-                        (RunStatus::Running, None) => "incomplete",
-                    };
-                    (
-                        id.clone(),
-                        status.to_string(),
-                        format!("{}/{}", r.records.len(), r.config.rounds),
-                        r.final_acc()
-                            .map(|a| format!("{:.2}%", 100.0 * a))
-                            .unwrap_or_else(|| "n/a".into()),
-                    )
-                }
-            },
+    for c in &status.cells {
+        let state = if c.pruned { "pruned" } else { c.state };
+        let worker = match (&c.worker, c.lease_age_secs) {
+            (Some(w), Some(age)) => format!("{w} ({age}s)"),
+            (Some(w), None) => w.clone(),
+            (None, _) => "-".into(),
         };
-        t.row(vec![cell.label.clone(), run, status, rounds, acc]);
+        let (rounds, acc) = match (&c.run, c.rounds_total) {
+            (Some(_), Some(total)) => (
+                format!("{}/{total}", c.rounds_done),
+                c.final_acc
+                    .map(|a| format!("{:.2}%", 100.0 * a))
+                    .unwrap_or_else(|| "n/a".into()),
+            ),
+            // pending or missing: no readable run to report on
+            _ => ("-".to_string(), "-".to_string()),
+        };
+        t.row(vec![
+            c.label.clone(),
+            c.run_id.clone().unwrap_or_else(|| "-".into()),
+            state.to_string(),
+            worker,
+            rounds,
+            acc,
+        ]);
     }
     t
 }

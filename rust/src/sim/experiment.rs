@@ -234,6 +234,24 @@ pub fn resume_run(
     every: usize,
     extra: &mut dyn RoundObserver,
 ) -> anyhow::Result<ExperimentResult> {
+    resume_run_until(store, id, every, None, extra)
+}
+
+/// [`resume_run`], but halting again after absolute round `halt_after`
+/// (when `Some` and before the final round). This is the campaign
+/// operator's segmented-execution primitive: a worker advances a cell one
+/// checkpoint-aligned segment at a time, so successive-halving rungs can
+/// be judged at shared boundaries and leases stay short-lived. Passing
+/// `None` (or a boundary at/past the configured rounds) runs to
+/// completion — the config snapshot in the manifest is never altered, so
+/// the stored run stays bitwise-identical to an uninterrupted one.
+pub fn resume_run_until(
+    store: &RunStore,
+    id: &str,
+    every: usize,
+    halt_after: Option<usize>,
+    extra: &mut dyn RoundObserver,
+) -> anyhow::Result<ExperimentResult> {
     let mut manifest = store.load_manifest(id)?;
     let resume = crate::store::checkpoint::resume_state(store, &manifest)?;
     // Anything recorded past the checkpoint will be recomputed (and, by
@@ -241,6 +259,9 @@ pub fn resume_run(
     manifest.records.truncate(resume.completed);
     let name = manifest.strategy.clone();
     let mut exp = Experiment::build(manifest.config.clone())?;
+    // The halt is an execution-session concern, not part of the run's
+    // identity: it lives on the rebuilt experiment only.
+    exp.cfg.halt_after = halt_after.filter(|&h| h < exp.cfg.rounds);
     let mut ckpt = CheckpointObserver::resume(store, manifest, every);
     let res = {
         let mut set = ObserverSet::new();

@@ -77,6 +77,23 @@ pub const MEDIA_PARAMS_DELTA: &str = "application/x-fedel-params.delta";
 /// couple of iterations under any realistic contention.
 const CAS_RETRIES: usize = 64;
 
+/// What [`RunStore::lease_campaign_cell`] found when it tried to take a
+/// cell's worker lease.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum LeaseOutcome {
+    /// The lease is ours — a fresh claim, a heartbeat renewal, or an
+    /// expired-lease reclaim (`reclaimed_from` names the dead holder).
+    Acquired {
+        cell: schema::CellState,
+        reclaimed_from: Option<String>,
+    },
+    /// Another worker's lease is still live; `age_secs` since its last
+    /// heartbeat.
+    Held { worker: String, age_secs: u64 },
+    /// The halving policy retired this cell; it can never be leased.
+    Pruned,
+}
+
 /// What `RunStore::gc_blobs` did (or would do, under `dry_run`).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct GcReport {
@@ -458,20 +475,22 @@ impl RunStore {
     /// cell's stored assignment equals `expect` (or is unassigned).
     /// Returns the cell's authoritative assignment after the call —
     /// `run_id` if the claim won, the standing winner if not.
+    ///
+    /// Cells are addressed by `label`, not index: live edits
+    /// (`campaign edit --sweep key=+v`) re-expand the grid and reorder
+    /// indices under concurrent workers, but labels are stable. The
+    /// index is resolved inside each CAS pass, against the manifest the
+    /// swap is conditioned on.
     pub fn claim_campaign_cell(
         &self,
         name: &str,
-        index: usize,
+        label: &str,
         expect: Option<&str>,
         run_id: &str,
     ) -> anyhow::Result<String> {
         for _ in 0..CAS_RETRIES {
             let (mut m, digest) = self.load_campaign_versioned(name)?;
-            anyhow::ensure!(
-                index < m.cells.len(),
-                "campaign {name:?} has {} cells, no index {index}",
-                m.cells.len()
-            );
+            let index = Self::cell_index(&m, name, label)?;
             match &m.cells[index].run_id {
                 Some(current) if Some(current.as_str()) != expect => {
                     return Ok(current.clone())
@@ -491,7 +510,89 @@ impl RunStore {
                 CasOutcome::Conflict => continue,
             }
         }
-        anyhow::bail!("cell {index} of campaign {name:?} lost {CAS_RETRIES} straight CAS races")
+        anyhow::bail!("cell {label:?} of campaign {name:?} lost {CAS_RETRIES} straight CAS races")
+    }
+
+    /// Acquire, renew, or reclaim the worker lease on one campaign cell —
+    /// the same manifest-digest compare-and-swap as
+    /// [`RunStore::claim_campaign_cell`], so workers on other threads,
+    /// processes, or machines can never hold the same cell at once. The
+    /// lease lands when the cell is unleased, already held by `worker`
+    /// (heartbeat renewal), or held by a holder whose last heartbeat is
+    /// older than `lease_secs` (crash reclaim). Pruned cells are never
+    /// leased.
+    pub fn lease_campaign_cell(
+        &self,
+        name: &str,
+        label: &str,
+        worker: &str,
+        lease_secs: u64,
+    ) -> anyhow::Result<LeaseOutcome> {
+        for _ in 0..CAS_RETRIES {
+            let (mut m, digest) = self.load_campaign_versioned(name)?;
+            let index = Self::cell_index(&m, name, label)?;
+            let now = crate::util::unix_now();
+            let cell = &m.cells[index];
+            if cell.pruned {
+                return Ok(LeaseOutcome::Pruned);
+            }
+            let reclaimed_from = match &cell.worker {
+                Some(holder) if holder != worker => {
+                    let age = now.saturating_sub(cell.lease_unix);
+                    if age < lease_secs {
+                        return Ok(LeaseOutcome::Held { worker: holder.clone(), age_secs: age });
+                    }
+                    Some(holder.clone())
+                }
+                _ => None,
+            };
+            m.cells[index].worker = Some(worker.to_string());
+            m.cells[index].lease_unix = now;
+            m.updated_unix = now;
+            match self.backend.save_campaign(
+                name,
+                m.to_json().to_string_pretty().as_bytes(),
+                CasExpect::Digest(&digest),
+            )? {
+                CasOutcome::Committed(_) => {
+                    return Ok(LeaseOutcome::Acquired {
+                        cell: m.cells[index].clone(),
+                        reclaimed_from,
+                    })
+                }
+                CasOutcome::Conflict => continue,
+            }
+        }
+        anyhow::bail!("cell {label:?} of campaign {name:?} lost {CAS_RETRIES} straight CAS races")
+    }
+
+    /// Drop `worker`'s lease on a cell (a no-op when the lease has already
+    /// moved on — e.g. it expired and was reclaimed while we were
+    /// finishing, in which case the reclaimer's lease must stand).
+    pub fn release_campaign_lease(
+        &self,
+        name: &str,
+        label: &str,
+        worker: &str,
+    ) -> anyhow::Result<()> {
+        self.update_campaign(name, |mut m| {
+            let index = Self::cell_index(&m, name, label)?;
+            if m.cells[index].worker.as_deref() == Some(worker) {
+                m.cells[index].worker = None;
+                m.cells[index].lease_unix = 0;
+            }
+            Ok(m)
+        })?;
+        Ok(())
+    }
+
+    /// Resolve a cell label against a freshly loaded manifest. Labels are
+    /// the stable cell address (indices shift under live grid edits).
+    fn cell_index(m: &CampaignManifest, name: &str, label: &str) -> anyhow::Result<usize> {
+        m.cells
+            .iter()
+            .position(|c| c.label == label)
+            .ok_or_else(|| anyhow::anyhow!("campaign {name:?} has no cell {label:?}"))
     }
 
     /// The parsed manifest plus its content digest (the CAS token).
@@ -801,13 +902,14 @@ mod tests {
             updated_unix: 0,
             spec: crate::util::json::Json::Null,
             cells: vec![
-                CellState { label: "a".into(), run_id: None },
-                CellState { label: "b".into(), run_id: None },
+                CellState::unassigned("a".into()),
+                CellState::unassigned("b".into()),
             ],
         };
         store.save_campaign(&m).unwrap();
         // first claim lands and persists
-        assert_eq!(store.claim_campaign_cell("sweep", 0, None, "fedavg-s1").unwrap(), "fedavg-s1");
+        let won = store.claim_campaign_cell("sweep", "a", None, "fedavg-s1").unwrap();
+        assert_eq!(won, "fedavg-s1");
         assert_eq!(
             store.load_campaign("sweep").unwrap().cells[0].run_id.as_deref(),
             Some("fedavg-s1")
@@ -815,27 +917,27 @@ mod tests {
         // a competing claim (e.g. from a second campaign process) is told
         // who won instead of overwriting
         assert_eq!(
-            store.claim_campaign_cell("sweep", 0, None, "fedavg-s1-2").unwrap(),
+            store.claim_campaign_cell("sweep", "a", None, "fedavg-s1-2").unwrap(),
             "fedavg-s1"
         );
         // other cells are untouched and claimable
-        assert_eq!(store.claim_campaign_cell("sweep", 1, None, "fedel-s1").unwrap(), "fedel-s1");
+        assert_eq!(store.claim_campaign_cell("sweep", "b", None, "fedel-s1").unwrap(), "fedel-s1");
         // CAS on the old id reassigns (the hand-deleted-run path)...
         assert_eq!(
-            store.claim_campaign_cell("sweep", 0, Some("fedavg-s1"), "fedavg-s1-9").unwrap(),
+            store.claim_campaign_cell("sweep", "a", Some("fedavg-s1"), "fedavg-s1-9").unwrap(),
             "fedavg-s1-9"
         );
         // ...but a stale expectation loses to the standing winner
         assert_eq!(
-            store.claim_campaign_cell("sweep", 0, Some("fedavg-s1"), "fedavg-s1-7").unwrap(),
+            store.claim_campaign_cell("sweep", "a", Some("fedavg-s1"), "fedavg-s1-7").unwrap(),
             "fedavg-s1-9"
         );
         let back = store.load_campaign("sweep").unwrap();
         assert_eq!(back.cells[0].run_id.as_deref(), Some("fedavg-s1-9"));
         assert_eq!(back.cells[1].run_id.as_deref(), Some("fedel-s1"));
         assert!(
-            store.claim_campaign_cell("sweep", 2, None, "x").is_err(),
-            "bad index must error"
+            store.claim_campaign_cell("sweep", "zz", None, "x").is_err(),
+            "unknown label must error"
         );
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -851,11 +953,11 @@ mod tests {
             created_unix: 0,
             updated_unix: 0,
             spec: crate::util::json::Json::Null,
-            cells: vec![CellState { label: "a".into(), run_id: None }],
+            cells: vec![CellState::unassigned("a".into())],
         };
         store.save_campaign(&stale).unwrap();
         // a claim lands after our (stale) load above...
-        store.claim_campaign_cell("sweep", 0, None, "fedavg-s1").unwrap();
+        store.claim_campaign_cell("sweep", "a", None, "fedavg-s1").unwrap();
         // ...and an update must see it: the closure gets the stored
         // manifest, not whatever the caller last loaded, so transforming
         // labels/spec can never erase the concurrent claim.
@@ -877,6 +979,72 @@ mod tests {
                 Ok(m)
             })
             .is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cell_leases_acquire_renew_reclaim_and_release() {
+        use crate::store::schema::{CampaignManifest, CellState, CAMPAIGN_SCHEMA_VERSION};
+        let dir = scratch("lease");
+        let store = RunStore::open(&dir).unwrap();
+        let m = CampaignManifest {
+            schema_version: CAMPAIGN_SCHEMA_VERSION,
+            name: "sweep".into(),
+            created_unix: 0,
+            updated_unix: 0,
+            spec: crate::util::json::Json::Null,
+            cells: vec![CellState::unassigned("a".into()), CellState::unassigned("b".into())],
+        };
+        store.save_campaign(&m).unwrap();
+        // fresh acquisition
+        match store.lease_campaign_cell("sweep", "a", "w1", 3600).unwrap() {
+            LeaseOutcome::Acquired { cell, reclaimed_from } => {
+                assert_eq!(cell.worker.as_deref(), Some("w1"));
+                assert!(cell.lease_unix > 0);
+                assert_eq!(reclaimed_from, None);
+            }
+            other => panic!("expected acquisition, got {other:?}"),
+        }
+        // a live lease holds off other workers...
+        match store.lease_campaign_cell("sweep", "a", "w2", 3600).unwrap() {
+            LeaseOutcome::Held { worker, .. } => assert_eq!(worker, "w1"),
+            other => panic!("expected held, got {other:?}"),
+        }
+        // ...but the holder heartbeats freely
+        assert!(matches!(
+            store.lease_campaign_cell("sweep", "a", "w1", 3600).unwrap(),
+            LeaseOutcome::Acquired { reclaimed_from: None, .. }
+        ));
+        // lease_secs = 0 makes any heartbeat stale: reclaim names the
+        // dead holder
+        match store.lease_campaign_cell("sweep", "a", "w2", 0).unwrap() {
+            LeaseOutcome::Acquired { reclaimed_from, .. } => {
+                assert_eq!(reclaimed_from.as_deref(), Some("w1"))
+            }
+            other => panic!("expected reclaim, got {other:?}"),
+        }
+        // a stale holder's release is a no-op — the reclaimer keeps it
+        store.release_campaign_lease("sweep", "a", "w1").unwrap();
+        assert_eq!(
+            store.load_campaign("sweep").unwrap().cells[0].worker.as_deref(),
+            Some("w2")
+        );
+        // the live holder's release clears the lease
+        store.release_campaign_lease("sweep", "a", "w2").unwrap();
+        let back = store.load_campaign("sweep").unwrap();
+        assert_eq!(back.cells[0].worker, None);
+        assert_eq!(back.cells[0].lease_unix, 0);
+        // pruned cells are never leased
+        store
+            .update_campaign("sweep", |mut m| {
+                m.cells[1].pruned = true;
+                Ok(m)
+            })
+            .unwrap();
+        assert_eq!(
+            store.lease_campaign_cell("sweep", "b", "w1", 3600).unwrap(),
+            LeaseOutcome::Pruned
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -305,29 +305,65 @@ impl RunManifest {
 /// instead of the `fedavg-s1-...` format. v1 manifests still load;
 /// [`crate::sim::campaign`] migrates them in place on the next run so
 /// existing campaigns stay resumable.
-pub const CAMPAIGN_SCHEMA_VERSION: usize = 2;
+///
+/// v2 -> v3: cells grew operator state — a worker lease (`worker` id +
+/// `lease_unix` heartbeat, written only while held) and a `pruned` flag
+/// set when a successive-halving policy retires the cell. All three
+/// serialize omit-at-default, so a v3 manifest with no leases and no
+/// pruned cells is byte-identical to its v2 form and v2 manifests load
+/// unchanged; [`crate::sim::campaign`] stamps the version forward on
+/// the next run.
+pub const CAMPAIGN_SCHEMA_VERSION: usize = 3;
 
 /// Oldest campaign schema [`CampaignManifest::from_json`] still accepts
 /// (the campaign runner upgrades anything older than current on load).
 pub const CAMPAIGN_SCHEMA_MIN: usize = 1;
 
 /// One grid cell's persisted assignment: the deterministic label plus the
-/// run id it was allocated (None until a worker first touches the cell).
+/// run id it was allocated (None until a worker first touches the cell),
+/// plus operator state — the worker lease (holder id + last heartbeat)
+/// and the halving policy's pruned flag. Lease fields and `pruned`
+/// serialize omit-at-default so lease-free manifests keep their v2 bytes.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CellState {
     pub label: String,
     pub run_id: Option<String>,
+    /// Worker id currently holding this cell's lease (None = unleased).
+    pub worker: Option<String>,
+    /// Unix time of the lease holder's last heartbeat (0 = unleased).
+    pub lease_unix: u64,
+    /// Retired by a successive-halving rung; never scheduled again.
+    pub pruned: bool,
 }
 
 impl CellState {
+    pub fn unassigned(label: String) -> CellState {
+        CellState { label, run_id: None, worker: None, lease_unix: 0, pruned: false }
+    }
+
+    /// Seconds since the holder's last heartbeat (None when unleased).
+    pub fn lease_age_secs(&self, now: u64) -> Option<u64> {
+        self.worker.as_ref().map(|_| now.saturating_sub(self.lease_unix))
+    }
+
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("label", Json::Str(self.label.clone())),
             (
                 "run_id",
                 self.run_id.as_ref().map(|s| Json::Str(s.clone())).unwrap_or(Json::Null),
             ),
-        ])
+        ];
+        if let Some(w) = &self.worker {
+            fields.push(("worker", Json::Str(w.clone())));
+        }
+        if self.lease_unix != 0 {
+            fields.push(("lease_unix", Json::Num(self.lease_unix as f64)));
+        }
+        if self.pruned {
+            fields.push(("pruned", Json::Bool(true)));
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<CellState> {
@@ -341,6 +377,19 @@ impl CellState {
                         .to_string(),
                 ),
             },
+            worker: match j.get("worker") {
+                None | Some(Json::Null) => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .ok_or_else(|| anyhow::anyhow!("cell worker not a string"))?
+                        .to_string(),
+                ),
+            },
+            lease_unix: match j.get("lease_unix") {
+                Some(Json::Num(n)) => *n as u64,
+                _ => 0,
+            },
+            pruned: matches!(j.get("pruned"), Some(Json::Bool(true))),
         })
     }
 }
@@ -746,8 +795,11 @@ mod tests {
             updated_unix: 1_700_000_001,
             spec: Json::obj(vec![("strategies", Json::from_strs(&["fedavg", "fedel"]))]),
             cells: vec![
-                CellState { label: "fedavg-s1".into(), run_id: Some("fedavg-s1".into()) },
-                CellState { label: "fedel-s1".into(), run_id: None },
+                CellState {
+                    run_id: Some("fedavg-s1".into()),
+                    ..CellState::unassigned("fedavg-s1".into())
+                },
+                CellState::unassigned("fedel-s1".into()),
             ],
         };
         let text = m.to_json().to_string_pretty();
@@ -772,11 +824,37 @@ mod tests {
             created_unix: 0,
             updated_unix: 0,
             spec: Json::obj(vec![("strategies", Json::from_strs(&["fedavg"]))]),
-            cells: vec![CellState { label: "fedavg-s1-fsmall10-t1".into(), run_id: None }],
+            cells: vec![CellState::unassigned("fedavg-s1-fsmall10-t1".into())],
         };
         let back = CampaignManifest::from_json(&Json::parse(&m.to_json().to_string_pretty()).unwrap())
             .unwrap();
         assert_eq!(back.schema_version, 1, "v1 loads unmodified; migration is the runner's job");
+    }
+
+    #[test]
+    fn cell_lease_fields_round_trip_and_stay_out_of_unleased_cells() {
+        // Unleased, unpruned cells must keep their pre-v3 serialization
+        // byte for byte (worker/lease_unix/pruned omit-at-default).
+        let plain = CellState::unassigned("strategy=fedavg,seed=1".into());
+        let text = plain.to_json().to_string_pretty();
+        assert!(!text.contains("worker"), "unleased cell leaks lease key: {text}");
+        assert!(!text.contains("lease_unix"), "unleased cell leaks lease key: {text}");
+        assert!(!text.contains("pruned"), "unpruned cell leaks pruned key: {text}");
+        assert_eq!(CellState::from_json(&Json::parse(&text).unwrap()).unwrap(), plain);
+
+        let leased = CellState {
+            run_id: Some("fedavg-s1".into()),
+            worker: Some("host1:1234".into()),
+            lease_unix: 1_700_000_000,
+            pruned: true,
+            ..CellState::unassigned("strategy=fedavg,seed=1".into())
+        };
+        let back =
+            CellState::from_json(&Json::parse(&leased.to_json().to_string_pretty()).unwrap())
+                .unwrap();
+        assert_eq!(back, leased);
+        assert_eq!(back.lease_age_secs(1_700_000_030), Some(30));
+        assert_eq!(plain.lease_age_secs(1_700_000_030), None, "unleased cells have no lease age");
     }
 
     #[test]

@@ -168,8 +168,8 @@ fn killed_campaign_resumes_skipping_completed_cells_bitwise_identically() {
     phase1.halt_after_cells = Some(2);
     let out = run_campaign(&store, &phase1).unwrap();
     assert!(out.halted);
-    // (skipped, completed, failed, pending)
-    assert_eq!(out.counts(), (0, 2, 0, 2), "{out:?}");
+    // (skipped, completed, failed, pending, pruned)
+    assert_eq!(out.counts(), (0, 2, 0, 2, 0), "{out:?}");
 
     // phase 2: the remaining cells get killed *inside* a round span —
     // after round 3, between the round-2 and round-4 checkpoints
@@ -177,7 +177,7 @@ fn killed_campaign_resumes_skipping_completed_cells_bitwise_identically() {
     phase2.halt_after = Some(3);
     let out = run_campaign(&store, &phase2).unwrap();
     assert!(!out.complete());
-    assert_eq!(out.counts(), (2, 0, 2, 0), "{out:?}");
+    assert_eq!(out.counts(), (2, 0, 2, 0, 0), "{out:?}");
     for c in out.failures() {
         match &c.status {
             CellRun::Failed(msg) => assert!(msg.contains("halted"), "{msg}"),
@@ -197,7 +197,7 @@ fn killed_campaign_resumes_skipping_completed_cells_bitwise_identically() {
     // continued from their checkpoints to completion
     let out = run_campaign(&store, &grid("sweep")).unwrap();
     assert!(out.complete(), "{out:?}");
-    assert_eq!(out.counts(), (2, 2, 0, 0), "{out:?}");
+    assert_eq!(out.counts(), (2, 2, 0, 0, 0), "{out:?}");
 
     assert_stores_identical(&reference, &store, "sweep");
     let _ = std::fs::remove_dir_all(&reference_dir);
@@ -630,7 +630,10 @@ fn v1_campaign_manifest_migrates_and_resumes_bitwise_identically() {
             .cells
             .iter()
             .zip(&v1_labels)
-            .map(|(c, label)| CellState { label: label.clone(), run_id: c.run_id.clone() })
+            .map(|(c, label)| CellState {
+                run_id: c.run_id.clone(),
+                ..CellState::unassigned(label.clone())
+            })
             .collect(),
     };
     store.save_campaign(&downgraded).unwrap();
@@ -665,6 +668,191 @@ fn v1_campaign_manifest_migrates_and_resumes_bitwise_identically() {
     assert!(migrated.spec.get("strategies").is_none(), "spec upgraded to axes form");
 
     assert_stores_identical(&reference, &store, "legacy");
+    let _ = std::fs::remove_dir_all(&reference_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The dead-worker drill (operator acceptance): two operate workers share
+/// one served store; a third worker "died" mid-cell holding a lease
+/// (simulated by the stale heartbeat it left in the manifest). A survivor
+/// reclaims the expired lease, resumes the cell from its checkpoint, and
+/// the finished store is bitwise-identical to a single-process reference.
+#[test]
+fn dead_workers_lease_is_reclaimed_and_results_match_reference_bitwise() {
+    use fedel::operator::{operate, OperateCfg};
+    use fedel::store::backend::serve::StoreServer;
+
+    let reference_dir = scratch("lease-ref");
+    let reference = RunStore::open(&reference_dir).unwrap();
+    assert!(run_campaign(&reference, &grid("sweep")).unwrap().complete());
+
+    let dir = scratch("lease-served");
+    let server = StoreServer::start(&dir, "127.0.0.1:0", 4).unwrap();
+    let url = format!("http://{}", server.addr());
+    let store = RunStore::open(&url).unwrap();
+
+    // the doomed worker advanced every cell to its round-2 checkpoint,
+    // then died still holding the lease on the first cell
+    let mut phase1 = grid("sweep");
+    phase1.halt_after = Some(3);
+    assert!(!run_campaign(&store, &phase1).unwrap().complete());
+    store
+        .update_campaign("sweep", |mut m| {
+            m.cells[0].worker = Some("w-dead".into());
+            m.cells[0].lease_unix = 1; // last heartbeat eons ago
+            Ok(m)
+        })
+        .unwrap();
+
+    // two surviving workers reconcile the same campaign concurrently,
+    // each through its own HTTP client
+    let outs: Vec<fedel::operator::OperateOutcome> = std::thread::scope(|scope| {
+        let handles: Vec<_> = ["w-live-1", "w-live-2"]
+            .into_iter()
+            .map(|w| {
+                let url = url.clone();
+                scope.spawn(move || {
+                    let store = RunStore::open(&url).unwrap();
+                    let mut ocfg = OperateCfg::new("sweep");
+                    ocfg.worker = w.into();
+                    ocfg.lease_secs = 3600;
+                    ocfg.poll_secs = 1;
+                    operate(&store, &ocfg, None).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert!(outs.iter().all(|o| o.converged), "{outs:?}");
+    let reclaimed: usize = outs.iter().map(|o| o.reclaimed).sum();
+    assert!(reclaimed >= 1, "the stale lease was never reclaimed: {outs:?}");
+    let completed: usize = outs.iter().map(|o| o.completed).sum();
+    assert_eq!(completed, 4, "{outs:?}");
+
+    // every lease released, and the bytes match the reference exactly
+    let m = store.load_campaign("sweep").unwrap();
+    assert!(m.cells.iter().all(|c| c.worker.is_none()), "{m:?}");
+    assert_stores_identical(&reference, &store, "sweep");
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&reference_dir);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The adaptive-sweep acceptance drill: a successive-halving campaign
+/// seeded with two cells, live-edited (`seed=+3`) to three, then driven
+/// by two concurrent operate workers, must make the same prune decision
+/// — and leave bitwise-identical bytes, the loser's rung-truncated run
+/// included — as one worker on the full grid from the start.
+#[test]
+fn live_edited_halving_sweep_prunes_deterministically_vs_reference() {
+    use fedel::operator::{edit_campaign, operate, OperateCfg};
+
+    fn halving_grid(name: &str, seeds: &str) -> CampaignCfg {
+        let base = ExperimentCfg {
+            model: "mock:4x20".into(),
+            fleet: fedel::config::FleetSpec::Scales(vec![1.0, 2.0]),
+            rounds: 4,
+            local_steps: 2,
+            lr: 0.3,
+            eval_every: 2,
+            eval_batches: 2,
+            slowest_round_secs: 3600.0,
+            exec_threads: 1,
+            ..Default::default()
+        };
+        let mut cfg = CampaignCfg::new(name, base);
+        cfg.axis(&format!("seed={seeds}")).unwrap();
+        cfg.set = fedel::config::params::SpecOverlay::parse(
+            fedel::config::params::ParamSpace::shared(),
+            &["operator.halving.rungs=1"],
+        )
+        .unwrap();
+        cfg.checkpoint_every = 2;
+        cfg
+    }
+    fn worker(name: &str, w: &str) -> OperateCfg {
+        let mut ocfg = OperateCfg::new(name);
+        ocfg.worker = w.into();
+        ocfg.lease_secs = 3600;
+        ocfg.poll_secs = 1;
+        ocfg
+    }
+
+    // reference: the final grid from the start, one worker
+    let reference_dir = scratch("halve-ref");
+    let reference = RunStore::open(&reference_dir).unwrap();
+    let out = operate(&reference, &worker("halve", "w-ref"), Some(&halving_grid("halve", "1,2,3")))
+        .unwrap();
+    assert!(out.converged, "{out:?}");
+    assert_eq!(out.pruned, 1, "keep = ceil(0.5 * 3) = 2 of 3: {out:?}");
+    assert_eq!(out.completed, 2, "{out:?}");
+
+    // live path: seed the two-cell grid (max_segments = 0 registers the
+    // campaign without running anything), append seed=3 mid-flight, then
+    // converge with two workers sharing the local store
+    let dir = scratch("halve-live");
+    let store = RunStore::open(&dir).unwrap();
+    let mut register = worker("halve", "w-0");
+    register.max_segments = Some(0);
+    let out = operate(&store, &register, Some(&halving_grid("halve", "1,2"))).unwrap();
+    assert!(!out.converged);
+    assert_eq!(out.segments, 0);
+    let edited = edit_campaign(&store, "halve", &["seed=+3".to_string()]).unwrap();
+    assert_eq!(edited.cells.len(), 3);
+    let outs: Vec<fedel::operator::OperateOutcome> = std::thread::scope(|scope| {
+        let handles: Vec<_> = ["w-a", "w-b"]
+            .into_iter()
+            .map(|w| {
+                let store = &store;
+                scope.spawn(move || operate(store, &worker("halve", w), None).unwrap())
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert!(outs.iter().all(|o| o.converged), "{outs:?}");
+    assert_eq!(outs.iter().map(|o| o.completed).sum::<usize>(), 2, "{outs:?}");
+    assert_eq!(outs.iter().map(|o| o.pruned).sum::<usize>(), 1, "{outs:?}");
+
+    // identical decisions and identical bytes, cell by cell: the same
+    // seed loses at the same rung with the same truncated record set,
+    // and the survivors' complete runs match down to the final params
+    let ma = reference.load_campaign("halve").unwrap();
+    let mb = store.load_campaign("halve").unwrap();
+    assert_eq!(
+        ma.cells.iter().map(|c| &c.label).collect::<Vec<_>>(),
+        mb.cells.iter().map(|c| &c.label).collect::<Vec<_>>()
+    );
+    for (ca, cb) in ma.cells.iter().zip(&mb.cells) {
+        assert_eq!(ca.pruned, cb.pruned, "{}: prune decision diverged", ca.label);
+        let ra = reference.load_manifest(ca.run_id.as_ref().unwrap()).unwrap();
+        let rb = store.load_manifest(cb.run_id.as_ref().unwrap()).unwrap();
+        assert_eq!(ra.records.len(), rb.records.len(), "{}", ca.label);
+        if ca.pruned {
+            assert_eq!(ra.records.len(), 2, "{}: loser stops at its rung", ca.label);
+        }
+        for (x, y) in ra.records.iter().zip(&rb.records) {
+            assert_eq!(x.sim_time.to_bits(), y.sim_time.to_bits(), "{}", ca.label);
+            assert_eq!(
+                x.mean_train_loss.to_bits(),
+                y.mean_train_loss.to_bits(),
+                "{}",
+                ca.label
+            );
+            assert_eq!(x.eval_acc.map(f64::to_bits), y.eval_acc.map(f64::to_bits), "{}", ca.label);
+        }
+        if !ca.pruned {
+            assert_eq!(ra.status, RunStatus::Complete, "{}", ca.label);
+            assert_eq!(rb.status, RunStatus::Complete, "{}", ca.label);
+            let fa = ra.final_state.as_ref().unwrap();
+            let fb = rb.final_state.as_ref().unwrap();
+            assert_eq!(
+                reference.get_params(&fa.params).unwrap(),
+                store.get_params(&fb.params).unwrap(),
+                "{}: final params diverged",
+                ca.label
+            );
+        }
+    }
     let _ = std::fs::remove_dir_all(&reference_dir);
     let _ = std::fs::remove_dir_all(&dir);
 }

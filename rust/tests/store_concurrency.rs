@@ -161,7 +161,7 @@ fn remote_store_races_resolve_like_local_ones() {
             created_unix: now,
             updated_unix: now,
             spec: Json::obj(vec![]),
-            cells: vec![CellState { label: "base".into(), run_id: None }],
+            cells: vec![CellState::unassigned("base".into())],
         })
         .unwrap();
     let winners: Vec<String> = std::thread::scope(|s| {
@@ -170,7 +170,7 @@ fn remote_store_races_resolve_like_local_ones() {
                 let store = &store;
                 s.spawn(move || {
                     store
-                        .claim_campaign_cell("race", 0, None, &format!("contender-{i}"))
+                        .claim_campaign_cell("race", "base", None, &format!("contender-{i}"))
                         .unwrap()
                 })
             })
@@ -182,6 +182,43 @@ fn remote_store_races_resolve_like_local_ones() {
     assert!(winners[0].starts_with("contender-"), "{winners:?}");
     let stored = store.load_campaign("race").unwrap();
     assert_eq!(stored.cells[0].run_id.as_deref(), Some(winners[0].as_str()));
+
+    // Worker leases on the claimed cell CAS the same way: one racer
+    // acquires, everyone else sees exactly who holds it and how stale
+    // the heartbeat is — and a non-holder's release is a no-op.
+    let outcomes: Vec<fedel::store::LeaseOutcome> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|i| {
+                let store = &store;
+                s.spawn(move || {
+                    store
+                        .lease_campaign_cell("race", "base", &format!("worker-{i}"), 3600)
+                        .unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let acquired: Vec<&fedel::store::LeaseOutcome> = outcomes
+        .iter()
+        .filter(|o| matches!(o, fedel::store::LeaseOutcome::Acquired { .. }))
+        .collect();
+    assert_eq!(acquired.len(), 1, "exactly one lease racer may win: {outcomes:?}");
+    let holder = store.load_campaign("race").unwrap().cells[0].worker.clone().unwrap();
+    for o in &outcomes {
+        if let fedel::store::LeaseOutcome::Held { worker, age_secs } = o {
+            assert_eq!(worker, &holder, "losers must see the real holder");
+            assert!(*age_secs < 3600, "a just-taken lease cannot be stale");
+        }
+    }
+    store.release_campaign_lease("race", "base", "nobody").unwrap();
+    assert_eq!(
+        store.load_campaign("race").unwrap().cells[0].worker.as_deref(),
+        Some(holder.as_str()),
+        "a non-holder's release must not drop the lease"
+    );
+    store.release_campaign_lease("race", "base", &holder).unwrap();
+    assert!(store.load_campaign("race").unwrap().cells[0].worker.is_none());
 
     server.shutdown();
     let _ = std::fs::remove_dir_all(&dir);

@@ -114,6 +114,9 @@ fn main() -> anyhow::Result<()> {
     round_throughput(&mut t, "mock:8x100", 32, 32)?;
     round_throughput(&mut t, "mock:8x20000", 32, 4)?;
 
+    // --- speculative async dispatch vs serial event loop ----------------
+    speculative_async_bench(&mut t)?;
+
     pjrt_benches(&mut t)?;
 
     t.print();
@@ -238,7 +241,7 @@ fn naive_window_walk(train: &[f64], fwd: &[f64], t_th: f64, rounds: usize) -> (u
 }
 
 /// The async executor's next-event lookup at fleet scale: the shipped
-/// binary heap (`fl::async_exec`, O(log n) per event, keyed by
+/// binary heap (`fl::exec::event`, O(log n) per event, keyed by
 /// (finish, slot) exactly like `EventKey`) against the pre-PR linear
 /// min-scan (O(n) per event). Both replay the same synthetic
 /// dispatch/complete trace over 100k in-flight slots and must pop the
@@ -323,6 +326,91 @@ fn event_queue_bench(t: &mut Table) {
         d_linear.as_secs_f64() * 1e3,
         d_heap.as_secs_f64() * 1e3,
     );
+}
+
+/// The speculative executor's headline number: fedbuff over a skewed
+/// (lognormal) 10k-client lazy fleet, serial depth-0 event loop vs
+/// speculative dispatch fanned across all cores. Speculation pre-executes
+/// predicted future dispatches on the worker pool while the coordinator
+/// drains earlier arrivals, so the wall-clock win tracks the hit rate —
+/// churn-free, predictions are exact and nearly every commit is a cache
+/// hit. Two tripwires: results stay bitwise-identical to the serial
+/// reference (speculation is a wall-clock knob, never a semantics knob),
+/// and the speedup must not regress below 1.5x on a multi-core host.
+fn speculative_async_bench(t: &mut Table) -> anyhow::Result<()> {
+    const CLIENTS: usize = 10_000;
+    let cfg = |threads: usize, depth: usize| ExperimentCfg {
+        model: "mock:8x20000".into(),
+        strategy: "fedbuff".into(),
+        // heavy-tailed device skew: the exact regime where the serial
+        // loop idles waiting on stragglers' arrivals
+        fleet: FleetSpec::parse(&format!("lazy{CLIENTS}:lognormal:0:1.0")).unwrap(),
+        fleet_sample: 16,
+        rounds: 24,
+        local_steps: 4,
+        lr: 0.1,
+        eval_every: 1000, // eval only at the end
+        eval_batches: 1,
+        slowest_round_secs: 3600.0,
+        exec_threads: threads,
+        exec_speculate_depth: depth,
+        strategy_params: vec![("strategy.fedbuff.buffer_k".to_string(), 2.0)],
+        ..Default::default()
+    };
+
+    let mut serial_res = None;
+    let mut serial = Experiment::build(cfg(1, 0))?;
+    let d_serial = time_median(5, || {
+        serial_res = Some(std::hint::black_box(serial.run(None).unwrap()));
+    });
+    let mut spec_res = None;
+    let mut spec = Experiment::build(cfg(0, 8))?;
+    let d_spec = time_median(5, || {
+        spec_res = Some(std::hint::black_box(spec.run(None).unwrap()));
+    });
+
+    let (serial_res, spec_res) = (serial_res.unwrap(), spec_res.unwrap());
+    assert_eq!(
+        serial_res.final_params.len(),
+        spec_res.final_params.len(),
+        "speculative run changed the model"
+    );
+    assert!(
+        serial_res
+            .final_params
+            .iter()
+            .zip(&spec_res.final_params)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "speculative execution diverged from the serial reference"
+    );
+    let hits: usize = spec_res.records.iter().map(|r| r.spec_hits).sum();
+    let misses: usize = spec_res.records.iter().map(|r| r.spec_misses).sum();
+    assert!(hits > 0, "speculation never hit — the bench measured nothing");
+
+    let speedup = d_serial.as_secs_f64() / d_spec.as_secs_f64().max(1e-12);
+    t.row(vec![
+        format!("speculative async ({CLIENTS}-client skewed fleet), serial depth 0"),
+        format!("{:.2}ms", d_serial.as_secs_f64() * 1e3),
+        String::new(),
+    ]);
+    t.row(vec![
+        format!("speculative async ({CLIENTS}-client skewed fleet), depth 8 all cores"),
+        format!("{:.2}ms", d_spec.as_secs_f64() * 1e3),
+        format!("{speedup:.2}x speedup"),
+    ]);
+    println!(
+        "speculative async [{CLIENTS} clients, {hits} hits / {misses} misses]: \
+         serial {:.2}ms, speculative {:.2}ms -> {speedup:.2}x",
+        d_serial.as_secs_f64() * 1e3,
+        d_spec.as_secs_f64() * 1e3,
+    );
+    if std::thread::available_parallelism().map_or(1, |n| n.get()) >= 2 {
+        assert!(
+            speedup >= 1.5,
+            "speculative dispatch regressed below the 1.5x floor: {speedup:.2}x"
+        );
+    }
+    Ok(())
 }
 
 /// Wall-clock of full experiment rounds at exec_threads = 1 vs 0, printed

@@ -124,6 +124,13 @@ pub struct ExperimentCfg {
     /// 1 = sequential, n = dedicated n-thread pool. Purely a wall-clock
     /// knob — results are bitwise-identical at any setting.
     pub exec_threads: usize,
+    /// Async speculation lookahead (`exec.speculate.depth`): how many
+    /// future dispatches the event runner pre-executes against predicted
+    /// global versions while earlier uploads are in flight. Like
+    /// `exec_threads`, purely a wall-clock knob — every speculation is
+    /// validated at arrival, so results are bitwise-identical at any
+    /// depth. 0 = off.
+    pub exec_speculate_depth: usize,
     /// Strategy-declared tunables, keyed by their full registry key
     /// (`strategy.<strategy>.<param>` -> value), kept sorted for stable
     /// serialization. Populated via `--set`/`--sweep`; anything unset
@@ -191,6 +198,7 @@ impl Default for ExperimentCfg {
             comm_down_mbps: 0.0,
             comm_latency_secs: 0.0,
             exec_threads: 0,
+            exec_speculate_depth: 0,
             strategy_params: Vec::new(),
             fleet_trace: String::new(),
             fleet_profiles: Vec::new(),
@@ -233,6 +241,7 @@ impl ExperimentCfg {
             comm_down_mbps: args.f64_or("comm-down-mbps", d.comm_down_mbps),
             comm_latency_secs: args.f64_or("comm-latency-secs", d.comm_latency_secs),
             exec_threads: args.usize_or("threads", d.exec_threads),
+            exec_speculate_depth: args.usize_or("speculate-depth", d.exec_speculate_depth),
             strategy_params: Vec::new(),
             fleet_trace: args.str_or("fleet-trace", &d.fleet_trace),
             fleet_profiles: Vec::new(),
@@ -319,6 +328,11 @@ impl ExperimentCfg {
                 kv.push((key, Json::Num(v)));
             }
         }
+        // Speculation off (the default) stays out of the snapshot, so
+        // depth-0 manifests are byte-identical to pre-speculation ones.
+        if self.exec_speculate_depth != 0 {
+            kv.push(("exec_speculate_depth", Json::Num(self.exec_speculate_depth as f64)));
+        }
         // Fleet-scale keys are likewise omitted at their "unset" defaults.
         if !self.fleet_trace.is_empty() {
             kv.push(("fleet_trace", Json::Str(self.fleet_trace.clone())));
@@ -404,6 +418,7 @@ impl ExperimentCfg {
             comm_down_mbps: f("comm_down_mbps", 0.0),
             comm_latency_secs: f("comm_latency_secs", 0.0),
             exec_threads: u("threads", d.exec_threads),
+            exec_speculate_depth: u("exec_speculate_depth", d.exec_speculate_depth),
             strategy_params: match j.get("strategy_params") {
                 Some(Json::Obj(kv)) => {
                     let mut bag = kv
@@ -537,6 +552,19 @@ mod tests {
         assert_eq!(back.churn_dropout.to_bits(), cfg.churn_dropout.to_bits());
         assert_eq!(back.churn_period_secs.to_bits(), cfg.churn_period_secs.to_bits());
         assert_eq!(back.churn_avail_frac.to_bits(), cfg.churn_avail_frac.to_bits());
+    }
+
+    #[test]
+    fn speculate_depth_round_trips_and_stays_out_of_plain_snapshots() {
+        let plain = ExperimentCfg::default().to_json();
+        assert!(
+            plain.get("exec_speculate_depth").is_none(),
+            "exec_speculate_depth leaked into a default snapshot"
+        );
+        let cfg = ExperimentCfg { exec_speculate_depth: 4, ..Default::default() };
+        let text = cfg.to_json().to_string_pretty();
+        let back = ExperimentCfg::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.exec_speculate_depth, 4);
     }
 
     #[test]

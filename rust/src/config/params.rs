@@ -101,6 +101,7 @@ enum Slot {
     ChurnDropout,
     ChurnPeriodSecs,
     ChurnAvailFrac,
+    SpeculateDepth,
     HalvingRungs,
     HalvingKeepFrac,
     HalvingMetric,
@@ -226,6 +227,7 @@ impl KeyDef {
             Slot::ChurnDropout => ParamValue::F64(cfg.churn_dropout),
             Slot::ChurnPeriodSecs => ParamValue::F64(cfg.churn_period_secs),
             Slot::ChurnAvailFrac => ParamValue::F64(cfg.churn_avail_frac),
+            Slot::SpeculateDepth => ParamValue::Usize(cfg.exec_speculate_depth),
             Slot::HalvingRungs => ParamValue::Usize(cfg.halving_rungs),
             Slot::HalvingKeepFrac => ParamValue::F64(cfg.halving_keep_frac),
             Slot::HalvingMetric => ParamValue::Str(cfg.halving_metric.clone()),
@@ -272,6 +274,7 @@ impl KeyDef {
             (Slot::ChurnDropout, ParamValue::F64(x)) => cfg.churn_dropout = *x,
             (Slot::ChurnPeriodSecs, ParamValue::F64(x)) => cfg.churn_period_secs = *x,
             (Slot::ChurnAvailFrac, ParamValue::F64(x)) => cfg.churn_avail_frac = *x,
+            (Slot::SpeculateDepth, ParamValue::Usize(n)) => cfg.exec_speculate_depth = *n,
             (Slot::HalvingRungs, ParamValue::Usize(n)) => cfg.halving_rungs = *n,
             (Slot::HalvingKeepFrac, ParamValue::F64(x)) => cfg.halving_keep_frac = *x,
             (Slot::HalvingMetric, ParamValue::Str(s)) => cfg.halving_metric = s.clone(),
@@ -381,6 +384,14 @@ impl ParamSpace {
                 F64,
                 "fraction of each availability cycle a client is online, (0, 1]",
                 Slot::ChurnAvailFrac,
+            ),
+            KeyDef::fixed(
+                "exec.speculate.depth",
+                Usize,
+                "async speculation lookahead: dispatches pre-executed against predicted \
+                 globals while earlier uploads are in flight (0 = off; results are \
+                 bitwise-identical at any depth)",
+                Slot::SpeculateDepth,
             ),
             KeyDef::fixed(
                 "operator.halving.rungs",
@@ -755,6 +766,23 @@ mod tests {
         assert_eq!(axis.values.len(), 3);
         let semi = SweepAxis::parse(space, "fleet.churn.dropout=0;0.1;0.3").unwrap();
         assert_eq!(semi, axis);
+    }
+
+    #[test]
+    fn speculate_depth_key_resolves_and_applies() {
+        let space = ParamSpace::shared();
+        let mut cfg = ExperimentCfg::default();
+        let b = Binding::parse(space, "exec.speculate.depth=4").unwrap();
+        assert_eq!(b.render(), "exec.speculate.depth=4", "canonical rendering");
+        space.resolve(&b.key).unwrap().apply(&mut cfg, &b.value).unwrap();
+        assert_eq!(cfg.exec_speculate_depth, 4);
+        // 0 is legal: speculation off (the serial reference)
+        assert!(Binding::parse(space, "exec.speculate.depth=0").is_ok());
+        assert!(Binding::parse(space, "exec.speculate.depth=-1").is_err());
+        assert!(Binding::parse(space, "exec.speculate.depth=2.5").is_err());
+        // sweepable like any other key
+        let axis = SweepAxis::parse(space, "exec.speculate.depth=0,4,16").unwrap();
+        assert_eq!(axis.values.len(), 3);
     }
 
     #[test]

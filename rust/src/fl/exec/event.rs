@@ -1,8 +1,9 @@
 //! Event-driven asynchronous execution: the runtime behind the
-//! `fedasync` / `fedbuff` strategy rows.
+//! `fedasync` / `fedbuff` strategy rows, staged on the execution core
+//! ([`crate::fl::exec`]).
 //!
-//! The synchronous round loop ([`crate::fl::server`]) advances its clock
-//! by the slowest participant — the exact straggler tax FedEL attacks.
+//! The synchronous schedule ([`super::sync`]) advances its clock by the
+//! slowest participant — the exact straggler tax FedEL attacks.
 //! Asynchronous FL sidesteps the barrier instead: every client trains the
 //! full model **at its own device pace**, and the server folds updates in
 //! as they arrive. This module simulates that with a discrete-event
@@ -18,85 +19,89 @@
 //!   require;
 //! * events (upload completions) pop from a binary heap in simulated-time
 //!   order — O(log n) per event — with ties broken by client id then
-//!   slot, so the event sequence is a pure function of the inputs (and
-//!   identical to the previous linear scan's);
+//!   slot, so the event sequence is a pure function of the inputs;
 //! * availability churn ([`crate::fleet::ChurnCfg`] + trace windows)
-//!   marks a dispatch *doomed* at dispatch time — a pure function of
-//!   (seed, client, iteration, finish time) — and a doomed upload is
-//!   discarded at its event instead of aggregated, recorded in the next
-//!   [`RoundRecord::dropped`];
+//!   dooms an upload **at its arrival event** (the validate stage) — a
+//!   pure function of (seed, client, iteration, finish time), never of
+//!   when or whether the dispatch was speculatively executed — and a
+//!   doomed upload is discarded instead of aggregated, recorded in the
+//!   next [`RoundRecord::dropped`](crate::fl::server::RoundRecord);
 //! * the server aggregates per the strategy's [`AsyncSpec`]:
 //!   [`AsyncMode::PerArrival`] mixes every arrival immediately with a
 //!   staleness-decayed weight (FedAsync), [`AsyncMode::Buffered`] flushes
 //!   a data-size-weighted delta average every K arrivals (FedBuff). One
-//!   aggregation = one [`RoundRecord`], carrying the folded arrivals'
-//!   staleness statistics.
+//!   aggregation = one record, carrying the folded arrivals' staleness
+//!   statistics and the interval's speculation hit/miss counters.
+//!
+//! With `exec.speculate.depth > 0` the execute stage runs through
+//! [`super::speculate`]: an exact event-lookahead predicts the next
+//! dispatches, background workers train them against predicted global
+//! versions while earlier uploads are still in flight, and each arrival
+//! validates its speculation against the version the client actually
+//! received — commit on hit, re-execute on miss.
 //!
 //! Both of the repo's execution invariants carry over:
 //!
 //! * **Thread-count determinism** — training outcomes are pure functions
-//!   of (start params, client, iteration tag); parallelism only ever
-//!   executes already-dispatched work, and aggregation runs on the
-//!   coordinator in event order, so results are bitwise-identical at any
-//!   `exec_threads` (`tests/determinism.rs`). Steady-state dispatches are
-//!   serial by nature — each depends on the latest aggregated global —
-//!   so only the initial fleet-wide fan-out parallelizes.
+//!   of (start params, client, iteration tag); speculation only ever
+//!   changes *where* a dispatch executes, never *what* it produces, and
+//!   aggregation runs on the coordinator in event order, so results are
+//!   bitwise-identical at any `exec_threads` (`tests/determinism.rs`).
+//!   The prediction bookkeeping (and therefore every hit/miss counter)
+//!   is a pure function of the event sequence and the speculation depth —
+//!   it never consults the worker pool.
 //! * **Kill/resume identity** — the runner's full execution state
 //!   (in-flight client clocks + dispatch versions, the referenced global
-//!   versions, the staleness buffer) snapshots to JSON after every
-//!   aggregation and rides `Checkpoint::async_state`
-//!   ([`crate::store::schema::Checkpoint`]); a resumed run re-executes
-//!   in-flight dispatches from their recorded start versions and
-//!   continues the event sequence exactly (`tests/resume.rs`).
+//!   versions, the staleness buffer, the open speculation bindings)
+//!   snapshots to JSON after every aggregation and rides
+//!   `Checkpoint::async_state` ([`crate::store::schema::Checkpoint`]); a
+//!   resumed run re-executes in-flight dispatches from their recorded
+//!   start versions and continues the event sequence exactly
+//!   (`tests/resume.rs`).
 
 use crate::data::FedDataset;
-use crate::fl::bias::o1_bias;
-use crate::fl::observer::{RoundObserver, ServerState};
+use crate::fl::exec::speculate::SpecExec;
+use crate::fl::exec::{checkpoint_seam, commit_round, finish_experiment, validate_resume};
+use crate::fl::exec::{Evaluator, RoundStats};
+use crate::fl::observer::RoundObserver;
 use crate::fl::server::{
-    evaluate, execute_plan, execute_plans_streaming, plan_payload_bytes, ClientOutcome, ExecPool,
-    ExperimentResult, ResumeState, RoundInputs, RoundRecord, ServerCfg,
+    plan_payload_bytes, ClientOutcome, ExperimentResult, ResumeState, ServerCfg,
 };
 use crate::fl::sparse::SparseDelta;
 use crate::manifest::Manifest;
-use crate::runtime::{Engine, TrainSession};
+use crate::runtime::Engine;
 use crate::strategies::{full_model_plan, AsyncMode, AsyncSpec, ClientPlan, FleetCtx, Strategy};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// One slot's dispatch currently in flight.
-struct InFlight {
+pub(crate) struct InFlight {
     /// Which client this dispatch belongs to. Equal to the slot index in
     /// full fan-out mode; an arbitrary sampled client when `fleet.sample`
     /// caps the in-flight set.
-    client: usize,
+    pub(crate) client: usize,
     /// Client-local iteration index — the batch-sampling tag base, so a
     /// client's data stream continues deterministically across dispatches
     /// (and across kill/resume).
-    iter: usize,
+    pub(crate) iter: usize,
     /// Server version (aggregation count) whose global the dispatch
     /// started from; staleness at aggregation = current version − this.
-    version: usize,
+    pub(crate) version: usize,
     /// Simulated completion time (download + compute + upload).
-    finish: f64,
-    plan: ClientPlan,
-    /// Lazily executed; `None` until the event loop materializes it.
-    outcome: Option<ClientOutcome>,
-    /// Availability churn verdict, decided AT DISPATCH as a pure function
-    /// of (seed, client, iter, finish): the client departs / goes offline
-    /// / drops out before its upload lands, so the update is discarded at
-    /// the event and never executed. Recomputed on resume, not stored.
-    doomed: bool,
+    pub(crate) finish: f64,
+    pub(crate) plan: ClientPlan,
 }
 
 /// Heap key for the event queue: earliest finish first, ties broken by
 /// client id (the documented deterministic order) then slot. One live
 /// entry per slot at all times — pushed at dispatch, popped at the event —
-/// so there is no lazy deletion and the pop order matches the previous
-/// linear scan exactly.
-struct EventKey {
-    finish: f64,
-    client: usize,
-    slot: usize,
+/// so there is no lazy deletion. `Clone` so the speculation lookahead can
+/// simulate forward on a copy of the queue.
+#[derive(Clone)]
+pub(crate) struct EventKey {
+    pub(crate) finish: f64,
+    pub(crate) client: usize,
+    pub(crate) slot: usize,
 }
 
 impl Ord for EventKey {
@@ -123,43 +128,51 @@ impl PartialEq for EventKey {
 impl Eq for EventKey {}
 
 /// An arrived update waiting in the FedBuff buffer.
-struct BufEntry {
-    version: usize,
-    plan: ClientPlan,
-    outcome: ClientOutcome,
+pub(crate) struct BufEntry {
+    pub(crate) version: usize,
+    pub(crate) plan: ClientPlan,
+    pub(crate) outcome: ClientOutcome,
 }
 
 /// The runner's mutable simulation state — everything a checkpoint must
 /// capture beyond the global model and the record stream.
-struct AsyncState {
+pub(crate) struct AsyncState {
     /// In-flight slots. Full fan-out: one per client, index == client id.
     /// Sampled (`fleet.sample = k`): `min(k, n)` slots over a rotating
     /// client set.
-    inflight: Vec<InFlight>,
+    pub(crate) inflight: Vec<InFlight>,
     /// The event queue: min-heap over (finish, client, slot). NOT
     /// serialized — rebuilt from `inflight` on resume.
-    queue: std::collections::BinaryHeap<std::cmp::Reverse<EventKey>>,
+    pub(crate) queue: std::collections::BinaryHeap<std::cmp::Reverse<EventKey>>,
     /// Global params by version, for every version still referenced by an
     /// in-flight dispatch or a buffered update (GC'd as references drop).
-    versions: std::collections::BTreeMap<usize, Vec<f32>>,
+    pub(crate) versions: std::collections::BTreeMap<usize, Vec<f32>>,
     /// FedBuff's pending arrivals (always empty for FedAsync).
-    buffer: Vec<BufEntry>,
+    pub(crate) buffer: Vec<BufEntry>,
     /// Sampled mode only: how many sampling draws have been made — the
     /// pure-hash tag of the next draw, so sampling needs no RNG state.
-    seq: u64,
+    pub(crate) seq: u64,
     /// Sampled mode only: each previously-sampled client's next iteration
     /// index (absent = 0), so a re-sampled client's data stream continues
     /// where it left off.
-    iters: std::collections::BTreeMap<usize, usize>,
+    pub(crate) iters: std::collections::BTreeMap<usize, usize>,
     /// Clients whose uploads churn discarded since the last aggregation;
-    /// drained into [`RoundRecord::dropped`] (and therefore always empty
-    /// at the post-aggregation checkpoint seam).
-    dropped: Vec<usize>,
+    /// drained into the record's `dropped` (and therefore always empty at
+    /// the post-aggregation checkpoint seam).
+    pub(crate) dropped: Vec<usize>,
+    /// Open speculation bindings: (client, iter) → the global version the
+    /// lookahead predicted when it first speculated that dispatch. The
+    /// first prediction binds (later lookaheads never rebind), arrival
+    /// validates — bound == actual is a hit, anything else a miss. Part
+    /// of the checkpoint snapshot so a resumed run scores the same
+    /// already-made predictions an uninterrupted run would. Always empty
+    /// at depth 0.
+    pub(crate) speculated: std::collections::BTreeMap<(usize, usize), usize>,
 }
 
 impl AsyncState {
     /// Drop version params nothing references anymore.
-    fn gc_versions(&mut self) {
+    pub(crate) fn gc_versions(&mut self) {
         let live: std::collections::BTreeSet<usize> = self
             .inflight
             .iter()
@@ -170,7 +183,7 @@ impl AsyncState {
     }
 
     /// Enqueue slot `slot`'s current dispatch.
-    fn push_event(&mut self, slot: usize) {
+    pub(crate) fn push_event(&mut self, slot: usize) {
         let f = &self.inflight[slot];
         self.queue.push(std::cmp::Reverse(EventKey {
             finish: f.finish,
@@ -183,12 +196,12 @@ impl AsyncState {
     /// client id, the deterministic event order the module doc promises.
     /// The popped slot MUST be re-dispatched (re-pushed) before the next
     /// pop to keep the one-entry-per-slot invariant.
-    fn pop_event(&mut self) -> usize {
+    pub(crate) fn pop_event(&mut self) -> usize {
         self.queue.pop().expect("async runner with an empty fleet").0.slot
     }
 
     /// Rebuild the queue from scratch (after construction or resume).
-    fn rebuild_queue(&mut self) {
+    pub(crate) fn rebuild_queue(&mut self) {
         self.queue.clear();
         for slot in 0..self.inflight.len() {
             self.push_event(slot);
@@ -199,7 +212,7 @@ impl AsyncState {
     /// numbers (exact: f32→f64 is lossless and the writer's shortest
     /// round-trip Display preserves every f64), so resumed state is
     /// bit-identical.
-    fn to_json(&self, mode: &AsyncMode) -> Json {
+    pub(crate) fn to_json(&self, mode: &AsyncMode) -> Json {
         let mut fields = vec![
             ("mode", Json::Str(mode_tag(mode).to_string())),
             (
@@ -254,8 +267,8 @@ impl AsyncState {
                 ),
             ),
         ];
-        // Omit-at-default: full fan-out snapshots stay bitwise-identical
-        // to the pre-sampling schema.
+        // Omit-at-default: depth-0 runs (and full fan-out snapshots) stay
+        // bitwise-identical to the pre-speculation schema.
         if self.seq > 0 {
             fields.push(("seq", Json::Num(self.seq as f64)));
         }
@@ -281,14 +294,31 @@ impl AsyncState {
                 Json::Arr(self.dropped.iter().map(|&c| Json::Num(c as f64)).collect()),
             ));
         }
+        if !self.speculated.is_empty() {
+            fields.push((
+                "speculated",
+                Json::Arr(
+                    self.speculated
+                        .iter()
+                        .map(|(&(c, i), &v)| {
+                            Json::obj(vec![
+                                ("client", Json::Num(c as f64)),
+                                ("iter", Json::Num(i as f64)),
+                                ("version", Json::Num(v as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ));
+        }
         Json::obj(fields)
     }
 
     /// Rebuild from a checkpoint snapshot. In-flight *outcomes* are not
     /// stored — they re-execute deterministically from the recorded start
-    /// version and iteration tag; `doomed` verdicts are likewise
-    /// recomputed (pure functions of the stored dispatch facts).
-    fn from_json(
+    /// version and iteration tag; churn verdicts are likewise recomputed
+    /// at validate time (pure functions of the stored dispatch facts).
+    pub(crate) fn from_json(
         j: &Json,
         ctx: &FleetCtx,
         cfg: &ServerCfg,
@@ -308,16 +338,12 @@ impl AsyncState {
             let client = f.u("client")?;
             anyhow::ensure!(client < n, "async state: in-flight client {client} out of range");
             anyhow::ensure!(seen.insert(client), "async state: client {client} in flight twice");
-            let iter = f.u("iter")?;
-            let finish = f.f("finish")?;
             inflight.push(InFlight {
                 client,
-                iter,
+                iter: f.u("iter")?,
                 version: f.u("version")?,
-                finish,
+                finish: f.f("finish")?,
                 plan: full_model_plan(ctx, client),
-                outcome: None,
-                doomed: is_doomed(ctx, cfg, client, iter, finish),
             });
         }
         anyhow::ensure!(
@@ -379,6 +405,17 @@ impl AsyncState {
                 );
             }
         }
+        let mut speculated = std::collections::BTreeMap::new();
+        if let Some(arr) = j.get("speculated").and_then(|v| v.as_arr()) {
+            for e in arr {
+                let client = e.u("client")?;
+                anyhow::ensure!(
+                    client < n,
+                    "async state: speculated client {client} out of range"
+                );
+                speculated.insert((client, e.u("iter")?), e.u("version")?);
+            }
+        }
         let mut state = AsyncState {
             inflight,
             queue: std::collections::BinaryHeap::new(),
@@ -387,6 +424,7 @@ impl AsyncState {
             seq,
             iters,
             dropped,
+            speculated,
         };
         for f in &state.inflight {
             anyhow::ensure!(
@@ -408,7 +446,7 @@ impl AsyncState {
     }
 }
 
-fn mode_tag(mode: &AsyncMode) -> &'static str {
+pub(crate) fn mode_tag(mode: &AsyncMode) -> &'static str {
     match mode {
         AsyncMode::PerArrival { .. } => "per_arrival",
         AsyncMode::Buffered { .. } => "buffered",
@@ -439,8 +477,19 @@ fn json_to_f32s(j: &Json, what: &str) -> anyhow::Result<Vec<f32>> {
 
 /// Will this dispatch's upload be discarded? Pure in (config, client,
 /// iter, finish): the client departs or churns offline before its upload
-/// lands, or the per-iteration dropout draw hits.
-fn is_doomed(ctx: &FleetCtx, cfg: &ServerCfg, client: usize, iter: usize, finish: f64) -> bool {
+/// lands, or the per-iteration dropout draw hits. Called at the *validate*
+/// stage (the arrival event) — and, purely as a compute-saving filter,
+/// before executing or speculating a dispatch whose upload is already
+/// known to be discarded. Because the verdict is a pure function of the
+/// dispatch facts, the filter can never disagree with the validate-time
+/// decision.
+pub(crate) fn is_doomed(
+    ctx: &FleetCtx,
+    cfg: &ServerCfg,
+    client: usize,
+    iter: usize,
+    finish: f64,
+) -> bool {
     ctx.fleet.departed(client, finish)
         || cfg.churn.is_some_and(|c| {
             !c.online(cfg.seed, client, finish) || c.dropout_hits(cfg.seed, client, iter as u64)
@@ -450,7 +499,7 @@ fn is_doomed(ctx: &FleetCtx, cfg: &ServerCfg, client: usize, iter: usize, finish
 /// Draw the next sampled client: a pure function of (seed, seq) rejecting
 /// clients currently in flight. `busy.len() < n` always holds (there are
 /// at most `min(sample, n) - 1` other slots).
-fn sample_client(
+pub(crate) fn sample_client(
     seed: u64,
     seq: u64,
     n: usize,
@@ -471,7 +520,7 @@ fn sample_client(
 /// starts no earlier than the client's trace arrival window, and its
 /// transfers are priced by the client's own links when the trace
 /// provides them.
-fn dispatch(
+pub(crate) fn dispatch(
     ctx: &FleetCtx,
     m: &Manifest,
     cfg: &ServerCfg,
@@ -485,62 +534,7 @@ fn dispatch(
     let start = ctx.fleet.start_at(client, now);
     let comm = ctx.client_comm(cfg.comm, client);
     let finish = start + comm.client_total_secs(plan.est_time, down, up);
-    let doomed = is_doomed(ctx, cfg, client, iter, finish);
-    InFlight { client, iter, version, finish, plan, outcome: None, doomed }
-}
-
-/// Execute every not-yet-materialized in-flight dispatch. When all of
-/// them share a start version and iteration tag (the initial fleet-wide
-/// fan-out), they run through the parallel executor; mixed pending sets
-/// (post-resume) run serially through the coordinator session — outcomes
-/// are pure either way, so results never depend on the path taken.
-#[allow(clippy::too_many_arguments)]
-fn execute_pending(
-    engine: &dyn Engine,
-    ds: &FedDataset,
-    ctx: &FleetCtx,
-    m: &Manifest,
-    prox_mu: f64,
-    state: &mut AsyncState,
-    coordinator: &mut dyn TrainSession,
-    pool: ExecPool<'_>,
-) -> anyhow::Result<()> {
-    // Doomed dispatches are never materialized — their uploads are
-    // discarded at the event, so executing them would be wasted compute.
-    let pending: Vec<usize> = (0..state.inflight.len())
-        .filter(|&c| state.inflight[c].outcome.is_none() && !state.inflight[c].doomed)
-        .collect();
-    let Some(&first) = pending.first() else {
-        return Ok(());
-    };
-    let uniform = pending.iter().all(|&c| {
-        state.inflight[c].version == state.inflight[first].version
-            && state.inflight[c].iter == state.inflight[first].iter
-    });
-    if uniform && pending.len() > 1 {
-        let start = state.versions[&state.inflight[first].version].clone();
-        let inputs =
-            RoundInputs { ds, ctx, global: &start, round: state.inflight[first].iter, prox_mu };
-        let plans: Vec<ClientPlan> =
-            pending.iter().map(|&c| state.inflight[c].plan.clone()).collect();
-        let mut outs: Vec<Option<ClientOutcome>> = (0..plans.len()).map(|_| None).collect();
-        execute_plans_streaming(engine, &inputs, &plans, pool, |i, out| {
-            outs[i] = Some(out);
-            Ok(())
-        })?;
-        for (slot, out) in pending.iter().zip(outs) {
-            state.inflight[*slot].outcome = out;
-        }
-    } else {
-        for c in pending {
-            let start = state.versions[&state.inflight[c].version].clone();
-            let inputs =
-                RoundInputs { ds, ctx, global: &start, round: state.inflight[c].iter, prox_mu };
-            let out = execute_plan(coordinator, &inputs, m, &state.inflight[c].plan)?;
-            state.inflight[c].outcome = Some(out);
-        }
-    }
-    Ok(())
+    InFlight { client, iter, version, finish, plan }
 }
 
 /// Run an asynchronous experiment to `cfg.rounds` aggregations (the async
@@ -550,7 +544,7 @@ fn execute_pending(
 /// declares an [`AsyncSpec`] — the sync entry points, the run store, and
 /// the campaign runner all route here transparently.
 #[allow(clippy::too_many_arguments)]
-pub fn run_experiment_async(
+pub fn run_async(
     engine: &dyn Engine,
     ds: &FedDataset,
     strategy: &mut dyn Strategy,
@@ -583,24 +577,7 @@ pub fn run_experiment_async(
     // -- restore or initialize ------------------------------------------------
     let (mut global, mut records, mut sim_time, mut completed, restored) = match resume {
         Some(r) => {
-            anyhow::ensure!(
-                r.global.len() == m.param_count,
-                "resume params hold {} elements, manifest wants {}",
-                r.global.len(),
-                m.param_count
-            );
-            anyhow::ensure!(
-                r.completed <= cfg.rounds,
-                "resume point (aggregation {}) is beyond the configured {} rounds",
-                r.completed,
-                cfg.rounds
-            );
-            anyhow::ensure!(
-                r.prior_records.len() == r.completed,
-                "resume carries {} records for {} completed aggregations",
-                r.prior_records.len(),
-                r.completed
-            );
+            validate_resume(&r, m.param_count, cfg.rounds, "aggregation")?;
             if !matches!(r.policy_state, Json::Null) {
                 strategy.restore_policy_state(&r.policy_state)?;
             }
@@ -646,6 +623,7 @@ pub fn run_experiment_async(
                 seq: 0,
                 iters: std::collections::BTreeMap::new(),
                 dropped: Vec::new(),
+                speculated: std::collections::BTreeMap::new(),
             };
             if sampled {
                 let mut busy = std::collections::BTreeSet::new();
@@ -666,238 +644,224 @@ pub fn run_experiment_async(
         }
     };
 
-    let mut eval_session = engine.session();
+    let mut evaluator = Evaluator::new(engine, cfg.exec_threads)?;
     let mut coordinator = engine.session();
-    let dedicated_pool = if engine.parallel_sessions() {
-        ExecPool::build(cfg.exec_threads)?
-    } else {
-        None
-    };
 
     // -- the event loop -------------------------------------------------------
-    // Churn-starvation guard: a fleet whose every upload is being
-    // discarded (all clients departed, dropout ~ 1) would loop forever —
-    // bail after enough consecutive drops to cycle the in-flight set
-    // several times over.
-    let mut starved = 0usize;
-    while completed < cfg.rounds {
-        execute_pending(
-            engine,
-            ds,
-            ctx,
-            &m,
-            prox_mu,
-            &mut state,
-            coordinator.as_mut(),
-            ExecPool::from_cfg(cfg.exec_threads, dedicated_pool.as_ref()),
-        )?;
-        let slot = state.pop_event();
-        let client = state.inflight[slot].client;
-        let now = state.inflight[slot].finish;
-        let arrived_version = state.inflight[slot].version;
-        let next_iter = state.inflight[slot].iter + 1;
-
-        // What (if anything) this arrival aggregates: the folded updates'
-        // (plans, outcomes, staleness). A doomed arrival aggregates
-        // nothing — its upload is discarded deterministically.
-        let aggregated = if state.inflight[slot].doomed {
-            state.dropped.push(client);
-            starved += 1;
-            anyhow::ensure!(
-                starved <= 4 * state.inflight.len() + 16,
-                "churn starved the runner: {starved} consecutive uploads discarded \
-                 (every in-flight client departed or offline) — loosen fleet.churn.* \
-                 or the trace's availability windows"
-            );
-            None
-        } else {
-            starved = 0;
-            let outcome = state.inflight[slot]
-                .outcome
-                .take()
-                .expect("pending dispatches were just executed");
-            let arrived_plan = state.inflight[slot].plan.clone();
-            match spec.mode {
-                AsyncMode::PerArrival { alpha, staleness_exp } => {
-                    let staleness = completed - arrived_version;
-                    let w = alpha / (1.0 + staleness as f64).powf(staleness_exp);
-                    let arrived = dense(&outcome);
-                    for k in 0..global.len() {
-                        global[k] =
-                            ((1.0 - w) * global[k] as f64 + w * arrived[k] as f64) as f32;
-                    }
-                    Some((vec![arrived_plan], vec![outcome], vec![staleness]))
-                }
-                AsyncMode::Buffered { k, staleness_exp } => {
-                    state.buffer.push(BufEntry {
-                        version: arrived_version,
-                        plan: arrived_plan,
-                        outcome,
-                    });
-                    if state.buffer.len() >= k.max(1) {
-                        // Data-size-weighted average of the buffered deltas
-                        // (update − its dispatch-version global), folded in
-                        // arrival order. A nonzero `staleness_exp` further
-                        // decays each delta's weight by `1/(1+s)^exp`; the
-                        // guard keeps exp=0 bitwise-identical to the plain
-                        // average (no spurious `powf` in the weights).
-                        let mut acc = vec![0.0f64; global.len()];
-                        let mut wsum = 0.0f64;
-                        let mut plans = Vec::with_capacity(state.buffer.len());
-                        let mut outs = Vec::with_capacity(state.buffer.len());
-                        let mut stale = Vec::with_capacity(state.buffer.len());
-                        for b in state.buffer.drain(..) {
-                            let staleness = completed - b.version;
-                            let mut weight = ds.client(b.outcome.client).num_samples as f64;
-                            if staleness_exp != 0.0 {
-                                weight /= (1.0 + staleness as f64).powf(staleness_exp);
-                            }
-                            let start = &state.versions[&b.version];
-                            let arrived = dense(&b.outcome);
-                            for i in 0..acc.len() {
-                                acc[i] += weight * (arrived[i] as f64 - start[i] as f64);
-                            }
-                            wsum += weight;
-                            stale.push(staleness);
-                            plans.push(b.plan);
-                            outs.push(b.outcome);
-                        }
-                        for i in 0..global.len() {
-                            global[i] = (global[i] as f64 + acc[i] / wsum) as f32;
-                        }
-                        Some((plans, outs, stale))
-                    } else {
-                        None
-                    }
-                }
-            }
-        };
-
-        let did_aggregate = aggregated.is_some();
-        if let Some((plans, outs, stale)) = aggregated {
-            let round = completed;
-            observer.on_round_start(round, &plans);
-            let mut losses = Vec::with_capacity(outs.len());
-            let mut coverage = Vec::with_capacity(outs.len());
-            let mut tensor_masks = Vec::with_capacity(outs.len());
-            let mut client_secs = Vec::with_capacity(outs.len());
-            for (plan, out) in plans.iter().zip(&outs) {
-                observer.on_client_done(round, plan, out);
-                losses.push(out.mean_loss);
-                let cov = plan.mask.tensor_coverage();
-                coverage
-                    .push(cov.iter().map(|&c| c as f64).sum::<f64>() / cov.len().max(1) as f64);
-                tensor_masks.push(cov);
-                client_secs.push((plan.client, plan.est_time));
-            }
-            completed += 1;
-            let round_secs = now - sim_time;
-            sim_time = now;
-
-            let do_eval = round % cfg.eval_every == cfg.eval_every - 1 || completed == cfg.rounds;
-            let (eval_acc, eval_loss) = if do_eval {
-                let (a, l) = evaluate(
-                    engine,
-                    eval_session.as_mut(),
-                    ExecPool::from_cfg(cfg.exec_threads, dedicated_pool.as_ref()),
-                    ds,
-                    &global,
-                )?;
-                observer.on_eval(round, a, l);
-                (Some(a), Some(l))
-            } else {
-                (None, None)
-            };
-            let record = RoundRecord {
-                round,
-                round_secs,
-                sim_time,
-                mean_train_loss: crate::util::stats::mean(&losses),
-                participants: plans.len(),
-                mean_coverage: crate::util::stats::mean(&coverage),
-                o1: o1_bias(&tensor_masks),
-                eval_acc,
-                eval_loss,
-                client_secs,
-                mean_staleness: Some(crate::util::stats::mean(
-                    &stale.iter().map(|&s| s as f64).collect::<Vec<_>>(),
-                )),
-                max_staleness: Some(stale.iter().copied().max().unwrap_or(0) as f64),
-                dropped: std::mem::take(&mut state.dropped),
-            };
-            observer.on_round_end(&record);
-            records.push(record);
+    // The whole loop runs inside one thread scope so the speculative
+    // backend can borrow the engine/dataset for its worker threads; the
+    // workers shut down when `exec` drops at the end of the closure.
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        let mut exec = SpecExec::new(cfg.speculate_depth);
+        if cfg.speculate_depth > 0 && cfg.exec_threads != 1 && engine.parallel_sessions() {
+            exec.spawn_workers(scope, engine, ds, ctx, &m, prox_mu, cfg.exec_threads);
         }
-
-        // Re-fill the slot from the (possibly just updated) global —
-        // FedAsync hands back the freshly mixed model, FedBuff the
-        // current (post-flush, if this arrival flushed) one. Full
-        // fan-out re-dispatches the same client; sampled mode draws a
-        // fresh one (the finished client rejoins the eligible pool).
-        state.versions.entry(completed).or_insert_with(|| global.clone());
-        let (next_client, iter) = if sampled {
-            let busy: std::collections::BTreeSet<usize> = state
-                .inflight
-                .iter()
-                .enumerate()
-                .filter(|&(s, _)| s != slot)
-                .map(|(_, f)| f.client)
-                .collect();
-            let c = sample_client(cfg.seed, state.seq, n, &busy);
-            state.seq += 1;
-            let it = state.iters.get(&c).copied().unwrap_or(0);
-            state.iters.insert(c, it + 1);
-            (c, it)
-        } else {
-            (client, next_iter)
-        };
-        state.inflight[slot] = dispatch(ctx, &m, cfg, next_client, iter, completed, now);
-        state.push_event(slot);
-        state.gc_versions();
-
-        // An aggregation closed this event: expose the checkpoint seam.
-        // The snapshot closure captures the state AFTER the re-dispatch,
-        // so a resumed run re-enters the event loop exactly here — and it
-        // only serializes if an observer (checkpoint cadence) asks.
-        if did_aggregate {
-            let snapshot = || state.to_json(&spec.mode);
-            observer.on_server_state(&ServerState {
+        // Churn-starvation guard: a fleet whose every upload is being
+        // discarded (all clients departed, dropout ~ 1) would loop forever
+        // — bail after enough consecutive drops to cycle the in-flight
+        // set several times over.
+        let mut starved = 0usize;
+        while completed < cfg.rounds {
+            // -- execute: materialize in-flight outcomes (eagerly at depth
+            //    0, via the background workers + lookahead speculation at
+            //    depth > 0) ---------------------------------------------------
+            exec.prepare(
+                engine,
+                ds,
+                ctx,
+                &m,
+                prox_mu,
+                cfg,
+                &spec.mode,
+                &mut state,
                 completed,
-                sim_time,
-                global: &global,
-                strategy: &*strategy,
-                async_state: Some(&snapshot),
-            });
-            if cfg.halt_after == Some(completed) && completed < cfg.rounds {
-                anyhow::bail!(
-                    "halted after aggregation {completed} (simulated interruption — \
-                     resume from the run store)"
+                coordinator.as_mut(),
+                evaluator.pool(),
+            )?;
+
+            // -- validate: pop the earliest upload and decide its fate at
+            //    arrival time -----------------------------------------------
+            let slot = state.pop_event();
+            let client = state.inflight[slot].client;
+            let iter = state.inflight[slot].iter;
+            let now = state.inflight[slot].finish;
+            let arrived_version = state.inflight[slot].version;
+            let next_iter = iter + 1;
+            let doomed = is_doomed(ctx, cfg, client, iter, now);
+
+            // What (if anything) this arrival aggregates: the folded
+            // updates' (plans, outcomes, staleness). A doomed arrival
+            // aggregates nothing — its upload is discarded
+            // deterministically, and any speculation bound to it scores a
+            // miss.
+            let aggregated = if doomed {
+                state.dropped.push(client);
+                exec.discard(&mut state, client, iter);
+                starved += 1;
+                anyhow::ensure!(
+                    starved <= 4 * state.inflight.len() + 16,
+                    "churn starved the runner: {starved} consecutive uploads discarded \
+                     (every in-flight client departed or offline) — loosen fleet.churn.* \
+                     or the trace's availability windows"
                 );
+                None
+            } else {
+                starved = 0;
+                let arrived_plan = state.inflight[slot].plan.clone();
+                let outcome = exec.resolve(
+                    ds,
+                    ctx,
+                    &m,
+                    prox_mu,
+                    &mut state,
+                    client,
+                    iter,
+                    arrived_version,
+                    &arrived_plan,
+                    coordinator.as_mut(),
+                )?;
+                match spec.mode {
+                    AsyncMode::PerArrival { alpha, staleness_exp } => {
+                        let staleness = completed - arrived_version;
+                        let w = alpha / (1.0 + staleness as f64).powf(staleness_exp);
+                        let arrived = dense(&outcome);
+                        for k in 0..global.len() {
+                            global[k] =
+                                ((1.0 - w) * global[k] as f64 + w * arrived[k] as f64) as f32;
+                        }
+                        Some((vec![arrived_plan], vec![outcome], vec![staleness]))
+                    }
+                    AsyncMode::Buffered { k, staleness_exp } => {
+                        state.buffer.push(BufEntry {
+                            version: arrived_version,
+                            plan: arrived_plan,
+                            outcome,
+                        });
+                        if state.buffer.len() >= k.max(1) {
+                            // Data-size-weighted average of the buffered
+                            // deltas (update − its dispatch-version
+                            // global), folded in arrival order. A nonzero
+                            // `staleness_exp` further decays each delta's
+                            // weight by `1/(1+s)^exp`; the guard keeps
+                            // exp=0 bitwise-identical to the plain average
+                            // (no spurious `powf` in the weights).
+                            let mut acc = vec![0.0f64; global.len()];
+                            let mut wsum = 0.0f64;
+                            let mut plans = Vec::with_capacity(state.buffer.len());
+                            let mut outs = Vec::with_capacity(state.buffer.len());
+                            let mut stale = Vec::with_capacity(state.buffer.len());
+                            for b in state.buffer.drain(..) {
+                                let staleness = completed - b.version;
+                                let mut weight = ds.client(b.outcome.client).num_samples as f64;
+                                if staleness_exp != 0.0 {
+                                    weight /= (1.0 + staleness as f64).powf(staleness_exp);
+                                }
+                                let start = &state.versions[&b.version];
+                                let arrived = dense(&b.outcome);
+                                for i in 0..acc.len() {
+                                    acc[i] += weight * (arrived[i] as f64 - start[i] as f64);
+                                }
+                                wsum += weight;
+                                stale.push(staleness);
+                                plans.push(b.plan);
+                                outs.push(b.outcome);
+                            }
+                            for i in 0..global.len() {
+                                global[i] = (global[i] as f64 + acc[i] / wsum) as f32;
+                            }
+                            Some((plans, outs, stale))
+                        } else {
+                            None
+                        }
+                    }
+                }
+            };
+
+            // -- commit: one aggregation = one record -----------------------
+            let did_aggregate = aggregated.is_some();
+            if let Some((plans, outs, stale)) = aggregated {
+                let round = completed;
+                observer.on_round_start(round, &plans);
+                let mut stats = RoundStats::default();
+                for (plan, out) in plans.iter().zip(&outs) {
+                    observer.on_client_done(round, plan, out);
+                    stats.absorb(plan, out);
+                }
+                completed += 1;
+                let round_secs = now - sim_time;
+                sim_time = now;
+                // Speculation counters accumulated since the last commit
+                // drain into this record — so they are always zero at the
+                // checkpoint seam and never need serializing.
+                let (spec_hits, spec_misses) = exec.take_counters();
+                let record = commit_round(
+                    engine,
+                    ds,
+                    cfg,
+                    &mut evaluator,
+                    observer,
+                    round,
+                    completed,
+                    round_secs,
+                    sim_time,
+                    &global,
+                    stats,
+                    Some(&stale),
+                    std::mem::take(&mut state.dropped),
+                    spec_hits,
+                    spec_misses,
+                )?;
+                records.push(record);
+            }
+
+            // -- dispatch: re-fill the slot from the (possibly just
+            //    updated) global — FedAsync hands back the freshly mixed
+            //    model, FedBuff the current (post-flush, if this arrival
+            //    flushed) one. Full fan-out re-dispatches the same client;
+            //    sampled mode draws a fresh one (the finished client
+            //    rejoins the eligible pool). -------------------------------
+            state.versions.entry(completed).or_insert_with(|| global.clone());
+            let (next_client, it) = if sampled {
+                let busy: std::collections::BTreeSet<usize> = state
+                    .inflight
+                    .iter()
+                    .enumerate()
+                    .filter(|&(s, _)| s != slot)
+                    .map(|(_, f)| f.client)
+                    .collect();
+                let c = sample_client(cfg.seed, state.seq, n, &busy);
+                state.seq += 1;
+                let it = state.iters.get(&c).copied().unwrap_or(0);
+                state.iters.insert(c, it + 1);
+                (c, it)
+            } else {
+                (client, next_iter)
+            };
+            state.inflight[slot] = dispatch(ctx, &m, cfg, next_client, it, completed, now);
+            state.push_event(slot);
+            state.gc_versions();
+
+            // An aggregation closed this event: expose the checkpoint
+            // seam. The snapshot closure captures the state AFTER the
+            // re-dispatch, so a resumed run re-enters the event loop
+            // exactly here — and it only serializes if an observer
+            // (checkpoint cadence) asks.
+            if did_aggregate {
+                let snapshot = || state.to_json(&spec.mode);
+                checkpoint_seam(
+                    cfg,
+                    observer,
+                    completed,
+                    sim_time,
+                    &global,
+                    &*strategy,
+                    Some(&snapshot),
+                    "aggregation",
+                )?;
             }
         }
-    }
+        Ok(())
+    })?;
 
-    // The last aggregation always evaluated (do_eval forces it); the
-    // fallback only fires for rounds == 0.
-    let (final_acc, final_loss) = match records.last().and_then(|r| r.eval_acc.zip(r.eval_loss)) {
-        Some((a, l)) => (a, l),
-        None => evaluate(
-            engine,
-            eval_session.as_mut(),
-            ExecPool::from_cfg(cfg.exec_threads, dedicated_pool.as_ref()),
-            ds,
-            &global,
-        )?,
-    };
-    let result = ExperimentResult {
-        strategy: strategy.name().to_string(),
-        records,
-        sim_total_secs: sim_time,
-        final_acc,
-        final_loss,
-        final_params: global,
-        selections: Vec::new(),
-    };
-    observer.on_experiment_end(&result);
-    Ok(result)
+    finish_experiment(engine, ds, &mut evaluator, &*strategy, observer, records, sim_time, global)
 }

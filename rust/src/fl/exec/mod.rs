@@ -1,0 +1,253 @@
+//! The staged, event-driven execution core shared by every run mode:
+//!
+//! **plan → dispatch → execute → validate → commit**
+//!
+//! * **plan** — a strategy emits per-client work orders ([`ClientPlan`]s)
+//!   from the current global model.
+//! * **dispatch** — a plan is bound to a client clock: the synchronous
+//!   schedule dispatches a whole round at once, the asynchronous schedule
+//!   keeps one dispatch per runner slot with its own simulated finish
+//!   time.
+//! * **execute** — dispatched plans train through engine sessions.
+//!   Training is a pure function of (start params, client, iteration
+//!   tag), so *when* and *where* a dispatch executes can never change
+//!   *what* it produces — the freedom the speculative backend exploits.
+//! * **validate** — the arrival gate: availability churn dooms are
+//!   decided here (never at speculation time), staleness is measured
+//!   here, and every speculated execution is checked against the global
+//!   version the client actually received — commit on hit, re-execute on
+//!   miss.
+//! * **commit** — exactly one aggregation folds in on the coordinator
+//!   thread, the clock advances, and one [`RoundRecord`] flows to the
+//!   observers and the checkpoint seam.
+//!
+//! [`sync`] runs the degenerate "barrier every commit" schedule (the
+//! classic FL round loop); [`event`] runs the discrete-event asynchronous
+//! schedule behind the `fedasync`/`fedbuff` registry rows; [`speculate`]
+//! is the execute stage's speculative backend (`exec.speculate.depth`),
+//! which trains *predicted* future dispatches on background workers while
+//! earlier uploads are still in flight.
+//!
+//! The helpers below are the plumbing both schedules share — resume
+//! validation, the eval harness, the commit stage (eval cadence + round
+//! record + observers), and the checkpoint seam — so record, observer,
+//! and checkpoint behavior can never drift between the two loops. Both
+//! repo invariants hold on the shared core: bitwise thread-count
+//! determinism (`tests/determinism.rs`) and bitwise kill/resume
+//! (`tests/resume.rs`).
+
+pub mod event;
+pub(crate) mod speculate;
+pub mod sync;
+
+use crate::data::FedDataset;
+use crate::fl::bias::o1_bias;
+use crate::fl::observer::{RoundObserver, ServerState};
+use crate::fl::server::{
+    evaluate, ClientOutcome, ExecPool, ExperimentResult, ResumeState, RoundRecord, ServerCfg,
+};
+use crate::runtime::{Engine, TrainSession};
+use crate::strategies::{ClientPlan, Strategy};
+use crate::util::json::Json;
+
+/// The shared eval harness: one coordinator-side session reused across
+/// rounds, plus the experiment's dedicated executor pool (built once, and
+/// not at all for engines whose sessions aren't validated for
+/// concurrency).
+pub(crate) struct Evaluator<'e> {
+    session: Box<dyn TrainSession + 'e>,
+    pool: Option<rayon::ThreadPool>,
+    threads: usize,
+}
+
+impl<'e> Evaluator<'e> {
+    pub(crate) fn new(engine: &'e dyn Engine, threads: usize) -> anyhow::Result<Evaluator<'e>> {
+        let pool = if engine.parallel_sessions() { ExecPool::build(threads)? } else { None };
+        Ok(Evaluator { session: engine.session(), pool, threads })
+    }
+
+    /// The pool every fan-out of this experiment rides (client plans and
+    /// eval batches alike).
+    pub(crate) fn pool(&self) -> ExecPool<'_> {
+        ExecPool::from_cfg(self.threads, self.pool.as_ref())
+    }
+
+    /// Evaluate the global model over the held-out test set.
+    pub(crate) fn eval(
+        &mut self,
+        engine: &dyn Engine,
+        ds: &FedDataset,
+        params: &[f32],
+    ) -> anyhow::Result<(f64, f64)> {
+        evaluate(
+            engine,
+            self.session.as_mut(),
+            ExecPool::from_cfg(self.threads, self.pool.as_ref()),
+            ds,
+            params,
+        )
+    }
+}
+
+/// Per-commit accumulator over the aggregated (plan, outcome) pairs —
+/// everything a [`RoundRecord`] needs that isn't clock or counters.
+#[derive(Default)]
+pub(crate) struct RoundStats {
+    pub losses: Vec<f64>,
+    pub coverage: Vec<f64>,
+    pub tensor_masks: Vec<Vec<f32>>,
+    pub client_secs: Vec<(usize, f64)>,
+}
+
+impl RoundStats {
+    pub(crate) fn absorb(&mut self, plan: &ClientPlan, out: &ClientOutcome) {
+        let cov = plan.mask.tensor_coverage();
+        self.coverage.push(cov.iter().map(|&c| c as f64).sum::<f64>() / cov.len().max(1) as f64);
+        self.tensor_masks.push(cov);
+        self.losses.push(out.mean_loss);
+        self.client_secs.push((plan.client, plan.est_time));
+    }
+}
+
+/// Common [`ResumeState`] sanity checks. `noun` is the schedule's unit of
+/// progress ("round" / "aggregation"), so error messages keep their
+/// historical shapes.
+pub(crate) fn validate_resume(
+    r: &ResumeState,
+    param_count: usize,
+    rounds: usize,
+    noun: &str,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        r.global.len() == param_count,
+        "resume params hold {} elements, manifest wants {}",
+        r.global.len(),
+        param_count
+    );
+    anyhow::ensure!(
+        r.completed <= rounds,
+        "resume point ({noun} {}) is beyond the configured {} rounds",
+        r.completed,
+        rounds
+    );
+    anyhow::ensure!(
+        r.prior_records.len() == r.completed,
+        "resume carries {} records for {} completed {noun}s",
+        r.prior_records.len(),
+        r.completed
+    );
+    Ok(())
+}
+
+/// The commit stage's tail: run the eval cadence, build the round record,
+/// and hand it to the observers. `completed` counts this commit, so the
+/// final round always evaluates.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn commit_round(
+    engine: &dyn Engine,
+    ds: &FedDataset,
+    cfg: &ServerCfg,
+    evaluator: &mut Evaluator<'_>,
+    observer: &mut dyn RoundObserver,
+    round: usize,
+    completed: usize,
+    round_secs: f64,
+    sim_time: f64,
+    global: &[f32],
+    stats: RoundStats,
+    staleness: Option<&[usize]>,
+    dropped: Vec<usize>,
+    spec_hits: usize,
+    spec_misses: usize,
+) -> anyhow::Result<RoundRecord> {
+    let do_eval = round % cfg.eval_every == cfg.eval_every - 1 || completed == cfg.rounds;
+    let (eval_acc, eval_loss) = if do_eval {
+        let (a, l) = evaluator.eval(engine, ds, global)?;
+        observer.on_eval(round, a, l);
+        (Some(a), Some(l))
+    } else {
+        (None, None)
+    };
+    let o1 = if stats.tensor_masks.is_empty() { 0.0 } else { o1_bias(&stats.tensor_masks) };
+    let (mean_staleness, max_staleness) = match staleness {
+        Some(s) => (
+            Some(crate::util::stats::mean(&s.iter().map(|&x| x as f64).collect::<Vec<_>>())),
+            Some(s.iter().copied().max().unwrap_or(0) as f64),
+        ),
+        None => (None, None),
+    };
+    let record = RoundRecord {
+        round,
+        round_secs,
+        sim_time,
+        mean_train_loss: crate::util::stats::mean(&stats.losses),
+        participants: stats.losses.len(),
+        mean_coverage: crate::util::stats::mean(&stats.coverage),
+        o1,
+        eval_acc,
+        eval_loss,
+        client_secs: stats.client_secs,
+        mean_staleness,
+        max_staleness,
+        dropped,
+        spec_hits,
+        spec_misses,
+    };
+    observer.on_round_end(&record);
+    Ok(record)
+}
+
+/// The post-commit checkpoint seam: expose the server state to observers
+/// (the checkpointing hook, [`crate::store`]) and honor the simulated
+/// kill switch. `noun` keeps the halt message's historical shape
+/// ("round" / "aggregation").
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn checkpoint_seam(
+    cfg: &ServerCfg,
+    observer: &mut dyn RoundObserver,
+    completed: usize,
+    sim_time: f64,
+    global: &[f32],
+    strategy: &dyn Strategy,
+    async_state: Option<&dyn Fn() -> Json>,
+    noun: &str,
+) -> anyhow::Result<()> {
+    observer.on_server_state(&ServerState { completed, sim_time, global, strategy, async_state });
+    if cfg.halt_after == Some(completed) && completed < cfg.rounds {
+        anyhow::bail!(
+            "halted after {noun} {completed} (simulated interruption — \
+             resume from the run store)"
+        );
+    }
+    Ok(())
+}
+
+/// Close out an experiment: the final score reuses the last commit's eval
+/// (the cadence forces one) and the fallback only fires for `rounds == 0`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn finish_experiment(
+    engine: &dyn Engine,
+    ds: &FedDataset,
+    evaluator: &mut Evaluator<'_>,
+    strategy: &dyn Strategy,
+    observer: &mut dyn RoundObserver,
+    records: Vec<RoundRecord>,
+    sim_time: f64,
+    global: Vec<f32>,
+) -> anyhow::Result<ExperimentResult> {
+    let (final_acc, final_loss) = match records.last().and_then(|r| r.eval_acc.zip(r.eval_loss)) {
+        Some((a, l)) => (a, l),
+        None => evaluator.eval(engine, ds, &global)?,
+    };
+    let result = ExperimentResult {
+        strategy: strategy.name().to_string(),
+        records,
+        sim_total_secs: sim_time,
+        final_acc,
+        final_loss,
+        final_params: global,
+        selections: Vec::new(),
+    };
+    observer.on_experiment_end(&result);
+    Ok(result)
+}

@@ -1,0 +1,543 @@
+//! The execute stage's speculative backend (`exec.speculate.depth`).
+//!
+//! Steady-state asynchronous dispatches are serial by nature — each
+//! depends on the latest aggregated global — so without speculation a
+//! multi-core host simulates a parallel fleet one upload at a time. This
+//! module recovers the parallelism:
+//!
+//! * **Lookahead** ([`lookahead`]) simulates the next `depth` events on a
+//!   clone of the event queue. The simulated (client, iteration, finish)
+//!   facts are *exact* — re-dispatch sampling, iteration bookkeeping, and
+//!   finish-time arithmetic are pure functions of the runner state — so
+//!   the only speculative quantity is the global **version** a future
+//!   dispatch will start from, predicted optimistically (every simulated
+//!   arrival aggregates; churn dooms are never assumed, because dooming
+//!   is the validate stage's decision).
+//! * **Binding**: the first prediction for a (client, iteration) is
+//!   recorded in [`AsyncState::speculated`] and never rebound. Arrival
+//!   validates the binding against the version the client actually
+//!   received — equal is a **hit**, anything else a **miss** (doomed
+//!   arrivals score their bindings as misses too). Because lookahead is
+//!   pure and bindings drain at their arrival events, the counters are a
+//!   pure function of (state, depth) — independent of thread count, of
+//!   whether the worker pool exists, and of kill/resume.
+//! * **Execution**: predicted dispatches whose start version already has
+//!   materialized params run on background worker threads (one engine
+//!   session each, fed through a shared job channel) while the
+//!   coordinator aggregates earlier arrivals. Training is a pure function
+//!   of (start params, client, iteration tag), so a speculated outcome is
+//!   bitwise-identical to the same dispatch executed inline — a hit
+//!   commits the precomputed outcome, a miss re-executes at the actual
+//!   version ([`SpecExec::resolve`]).
+//!
+//! At depth 0 (the default) [`SpecExec::prepare`] degenerates to the
+//! eager executor the runner always had: every in-flight dispatch
+//! materializes before its event pops, through the parallel pool when
+//! the pending set is uniform (the initial fleet-wide fan-out) and the
+//! coordinator session otherwise.
+
+use std::collections::{BTreeSet, HashMap, HashSet};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use crate::data::FedDataset;
+use crate::fl::exec::event::{is_doomed, sample_client, AsyncState, EventKey};
+use crate::fl::server::{
+    execute_plan, execute_plans_streaming, plan_payload_bytes, ClientOutcome, ExecPool,
+    RoundInputs, ServerCfg,
+};
+use crate::manifest::Manifest;
+use crate::runtime::{Engine, TrainSession};
+use crate::strategies::{full_model_plan, AsyncMode, ClientPlan, FleetCtx};
+
+/// A dispatch's identity for the outcome cache: (client, iteration, start
+/// version). The same (client, iteration) speculated at a wrong version
+/// and re-executed at the right one are different keys — only the version
+/// the client actually received ever aggregates.
+type Key = (usize, usize, usize);
+
+/// A unit of background work: train `client` at `iter` from the `start`
+/// params (version `version`).
+struct Job {
+    client: usize,
+    iter: usize,
+    version: usize,
+    start: Vec<f32>,
+    plan: ClientPlan,
+}
+
+type JobResult = (Key, anyhow::Result<ClientOutcome>);
+
+/// One simulated future dispatch from the lookahead.
+struct Pred {
+    client: usize,
+    iter: usize,
+    /// Optimistically predicted start version.
+    version: usize,
+    /// Exact simulated finish time (used only for the doom filter).
+    finish: f64,
+    plan: ClientPlan,
+}
+
+/// The execute stage's state machine: an outcome cache over dispatch
+/// keys, the in-flight background submissions, and the speculation
+/// hit/miss counters (drained into each committed record).
+pub(crate) struct SpecExec {
+    depth: usize,
+    /// Ready outcomes by dispatch key.
+    cache: HashMap<Key, ClientOutcome>,
+    /// Keys submitted to the workers and not yet returned.
+    pending: HashSet<Key>,
+    /// Background failures held until (unless) their key resolves —
+    /// a mispredicted dispatch's error must not sink the run.
+    failed: HashMap<Key, anyhow::Error>,
+    /// Per-client highest resolved iteration: late background results at
+    /// or below it are stale and dropped on arrival.
+    consumed: HashMap<usize, usize>,
+    jobs: Option<Sender<Job>>,
+    results: Option<Receiver<JobResult>>,
+    hits: usize,
+    misses: usize,
+}
+
+impl SpecExec {
+    pub(crate) fn new(depth: usize) -> SpecExec {
+        SpecExec {
+            depth,
+            cache: HashMap::new(),
+            pending: HashSet::new(),
+            failed: HashMap::new(),
+            consumed: HashMap::new(),
+            jobs: None,
+            results: None,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Spawn the background worker pool into `scope`. Each worker owns
+    /// one engine session and pulls jobs from a shared channel; workers
+    /// exit when the job sender drops (i.e. when this `SpecExec` does,
+    /// at the end of the event loop's scope). Purely an execution
+    /// backend: nothing the workers do is ever observable in the
+    /// simulation's bookkeeping, only in wall-clock.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn spawn_workers<'scope, 'env>(
+        &mut self,
+        scope: &'scope std::thread::Scope<'scope, 'env>,
+        engine: &'env dyn Engine,
+        ds: &'env FedDataset,
+        ctx: &'env FleetCtx,
+        m: &'env Manifest,
+        prox_mu: f64,
+        threads: usize,
+    ) {
+        let workers = match threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        };
+        let (jtx, jrx) = channel::<Job>();
+        let (rtx, rrx) = channel::<JobResult>();
+        let jrx = Arc::new(Mutex::new(jrx));
+        for _ in 0..workers {
+            let jrx = Arc::clone(&jrx);
+            let rtx = rtx.clone();
+            scope.spawn(move || {
+                let mut session = engine.session();
+                loop {
+                    // Hold the lock only for the blocking recv, never
+                    // while training.
+                    let job = match jrx.lock() {
+                        Ok(rx) => rx.recv(),
+                        Err(_) => break,
+                    };
+                    let Ok(Job { client, iter, version, start, plan }) = job else {
+                        break;
+                    };
+                    let inputs = RoundInputs { ds, ctx, global: &start, round: iter, prox_mu };
+                    let out = execute_plan(session.as_mut(), &inputs, m, &plan);
+                    if rtx.send(((client, iter, version), out)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        self.jobs = Some(jtx);
+        self.results = Some(rrx);
+    }
+
+    /// The execute stage, called once before every event pop. Depth 0:
+    /// eagerly materialize every in-flight outcome (bitwise and
+    /// schedule-identical to the pre-speculation executor). Depth > 0:
+    /// submit known in-flight work to the background pool, then run the
+    /// lookahead — record version bindings for the next `depth` predicted
+    /// dispatches and submit the executable ones. The binding/counter
+    /// bookkeeping runs whether or not a worker pool exists, so recorded
+    /// results never depend on the execution backend.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn prepare(
+        &mut self,
+        engine: &dyn Engine,
+        ds: &FedDataset,
+        ctx: &FleetCtx,
+        m: &Manifest,
+        prox_mu: f64,
+        cfg: &ServerCfg,
+        mode: &AsyncMode,
+        state: &mut AsyncState,
+        completed: usize,
+        coordinator: &mut dyn TrainSession,
+        pool: ExecPool<'_>,
+    ) -> anyhow::Result<()> {
+        self.drain_ready();
+        if self.jobs.is_some() {
+            self.submit_known(ctx, cfg, state);
+        } else {
+            self.execute_known(engine, ds, ctx, m, prox_mu, cfg, state, coordinator, pool)?;
+        }
+        if self.depth > 0 {
+            self.speculate_ahead(ctx, m, cfg, mode, state, completed);
+        }
+        Ok(())
+    }
+
+    /// Eager executor (no background pool): every not-yet-materialized,
+    /// not-doomed in-flight dispatch runs now. When all pending
+    /// dispatches share a start version and iteration tag (the initial
+    /// fleet-wide fan-out), they fan across the parallel pool; mixed
+    /// pending sets (post-resume) run serially through the coordinator
+    /// session — outcomes are pure either way, so results never depend
+    /// on the path taken.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_known(
+        &mut self,
+        engine: &dyn Engine,
+        ds: &FedDataset,
+        ctx: &FleetCtx,
+        m: &Manifest,
+        prox_mu: f64,
+        cfg: &ServerCfg,
+        state: &AsyncState,
+        coordinator: &mut dyn TrainSession,
+        pool: ExecPool<'_>,
+    ) -> anyhow::Result<()> {
+        let pending: Vec<usize> = (0..state.inflight.len())
+            .filter(|&s| {
+                let f = &state.inflight[s];
+                !self.cache.contains_key(&(f.client, f.iter, f.version))
+                    && !is_doomed(ctx, cfg, f.client, f.iter, f.finish)
+            })
+            .collect();
+        let Some(&first) = pending.first() else {
+            return Ok(());
+        };
+        let uniform = pending.iter().all(|&s| {
+            state.inflight[s].version == state.inflight[first].version
+                && state.inflight[s].iter == state.inflight[first].iter
+        });
+        if uniform && pending.len() > 1 {
+            let start = state.versions[&state.inflight[first].version].clone();
+            let inputs =
+                RoundInputs { ds, ctx, global: &start, round: state.inflight[first].iter, prox_mu };
+            let plans: Vec<ClientPlan> =
+                pending.iter().map(|&s| state.inflight[s].plan.clone()).collect();
+            let keys: Vec<Key> = pending
+                .iter()
+                .map(|&s| {
+                    let f = &state.inflight[s];
+                    (f.client, f.iter, f.version)
+                })
+                .collect();
+            execute_plans_streaming(engine, &inputs, &plans, pool, |i, out| {
+                self.cache.insert(keys[i], out);
+                Ok(())
+            })?;
+        } else {
+            for s in pending {
+                let f = &state.inflight[s];
+                let key = (f.client, f.iter, f.version);
+                let plan = f.plan.clone();
+                let round = f.iter;
+                let start = state.versions[&f.version].clone();
+                let inputs = RoundInputs { ds, ctx, global: &start, round, prox_mu };
+                let out = execute_plan(coordinator, &inputs, m, &plan)?;
+                self.cache.insert(key, out);
+            }
+        }
+        Ok(())
+    }
+
+    /// Submit every known in-flight dispatch that isn't already
+    /// materialized, submitted, or doomed to the background pool.
+    fn submit_known(&mut self, ctx: &FleetCtx, cfg: &ServerCfg, state: &AsyncState) {
+        let Some(jobs) = &self.jobs else { return };
+        for f in &state.inflight {
+            let key = (f.client, f.iter, f.version);
+            if self.cache.contains_key(&key)
+                || self.pending.contains(&key)
+                || is_doomed(ctx, cfg, f.client, f.iter, f.finish)
+            {
+                continue;
+            }
+            let job = Job {
+                client: f.client,
+                iter: f.iter,
+                version: f.version,
+                start: state.versions[&f.version].clone(),
+                plan: f.plan.clone(),
+            };
+            if jobs.send(job).is_ok() {
+                self.pending.insert(key);
+            }
+        }
+    }
+
+    /// Run the lookahead, bind first predictions, and submit the
+    /// executable ones (predicted version already materialized, upload
+    /// not doomed) to the background pool.
+    fn speculate_ahead(
+        &mut self,
+        ctx: &FleetCtx,
+        m: &Manifest,
+        cfg: &ServerCfg,
+        mode: &AsyncMode,
+        state: &mut AsyncState,
+        completed: usize,
+    ) {
+        for p in lookahead(state, ctx, m, cfg, mode, completed, self.depth) {
+            // First prediction binds; the arrival event scores it.
+            state.speculated.entry((p.client, p.iter)).or_insert(p.version);
+            let Some(jobs) = &self.jobs else { continue };
+            let key = (p.client, p.iter, p.version);
+            if self.cache.contains_key(&key) || self.pending.contains(&key) {
+                continue;
+            }
+            // A predicted version with no materialized params yet (the
+            // aggregation producing it hasn't happened) can't train.
+            let Some(start) = state.versions.get(&p.version) else { continue };
+            if is_doomed(ctx, cfg, p.client, p.iter, p.finish) {
+                continue;
+            }
+            let job = Job {
+                client: p.client,
+                iter: p.iter,
+                version: p.version,
+                start: start.clone(),
+                plan: p.plan,
+            };
+            if jobs.send(job).is_ok() {
+                self.pending.insert(key);
+            }
+        }
+    }
+
+    /// Move every already-finished background result into the cache
+    /// without blocking.
+    fn drain_ready(&mut self) {
+        let Some(rx) = &self.results else { return };
+        while let Ok((key, out)) = rx.try_recv() {
+            self.pending.remove(&key);
+            if self.consumed.get(&key.0).is_some_and(|&it| key.1 <= it) {
+                continue; // stale: that (client, iteration) already resolved
+            }
+            match out {
+                Ok(o) => {
+                    self.cache.insert(key, o);
+                }
+                Err(e) => {
+                    self.failed.insert(key, e);
+                }
+            }
+        }
+    }
+
+    /// Take `key`'s outcome: from the cache, or by blocking on the
+    /// results channel while the key is pending. `None` = never
+    /// materialized (caller executes inline).
+    fn take(&mut self, key: Key) -> anyhow::Result<Option<ClientOutcome>> {
+        loop {
+            if let Some(o) = self.cache.remove(&key) {
+                return Ok(Some(o));
+            }
+            if let Some(e) = self.failed.remove(&key) {
+                return Err(e);
+            }
+            if !self.pending.contains(&key) {
+                return Ok(None);
+            }
+            let rx = self.results.as_ref().expect("pending background work without a pool");
+            match rx.recv() {
+                Ok((k, out)) => {
+                    self.pending.remove(&k);
+                    match out {
+                        Ok(o) => {
+                            self.cache.insert(k, o);
+                        }
+                        Err(e) => {
+                            self.failed.insert(k, e);
+                        }
+                    }
+                }
+                Err(_) => anyhow::bail!("speculative executor lost its workers"),
+            }
+        }
+    }
+
+    /// The validate stage for one non-doomed arrival: score its
+    /// speculation binding (if any), then produce the outcome at the
+    /// version the client actually received — the precomputed one on a
+    /// hit, a fresh inline execution otherwise. Either way the returned
+    /// outcome is the pure function of (actual start params, client,
+    /// iteration), so aggregation never sees speculation.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn resolve(
+        &mut self,
+        ds: &FedDataset,
+        ctx: &FleetCtx,
+        m: &Manifest,
+        prox_mu: f64,
+        state: &mut AsyncState,
+        client: usize,
+        iter: usize,
+        version: usize,
+        plan: &ClientPlan,
+        coordinator: &mut dyn TrainSession,
+    ) -> anyhow::Result<ClientOutcome> {
+        if let Some(bound) = state.speculated.remove(&(client, iter)) {
+            if bound == version {
+                self.hits += 1;
+            } else {
+                self.misses += 1;
+            }
+        }
+        let out = match self.take((client, iter, version))? {
+            Some(o) => o,
+            None => {
+                // Mispredicted version, no background pool, or a
+                // post-resume cold cache: re-execute at the actual
+                // version. Purity makes this bitwise-identical to having
+                // executed it anywhere else.
+                let start = state
+                    .versions
+                    .get(&version)
+                    .expect("arrived dispatch references a live version")
+                    .clone();
+                let inputs = RoundInputs { ds, ctx, global: &start, round: iter, prox_mu };
+                execute_plan(coordinator, &inputs, m, plan)?
+            }
+        };
+        self.consume(client, iter);
+        Ok(out)
+    }
+
+    /// The validate stage for a doomed arrival: the dispatch never
+    /// aggregates, so an open binding for it scores a miss and any
+    /// precomputed outcome is waste.
+    pub(crate) fn discard(&mut self, state: &mut AsyncState, client: usize, iter: usize) {
+        if state.speculated.remove(&(client, iter)).is_some() {
+            self.misses += 1;
+        }
+        self.consume(client, iter);
+    }
+
+    /// Retire a (client, iteration): purge its cached/failed entries and
+    /// remember the watermark so late background results for it are
+    /// dropped on arrival.
+    fn consume(&mut self, client: usize, iter: usize) {
+        let e = self.consumed.entry(client).or_insert(iter);
+        if *e < iter {
+            *e = iter;
+        }
+        self.cache.retain(|k, _| !(k.0 == client && k.1 <= iter));
+        self.failed.retain(|k, _| !(k.0 == client && k.1 <= iter));
+    }
+
+    /// Drain the hit/miss counters accumulated since the last commit.
+    pub(crate) fn take_counters(&mut self) -> (usize, usize) {
+        (std::mem::take(&mut self.hits), std::mem::take(&mut self.misses))
+    }
+}
+
+/// Simulate the next `depth` events on a clone of the queue. Re-dispatch
+/// facts — which client, at which iteration, finishing when — replicate
+/// the real loop's arithmetic exactly (sampling draws, iteration
+/// bookkeeping, arrival windows, per-client comm pricing); the predicted
+/// start *version* is optimistic, advancing as if every simulated arrival
+/// aggregated (per-arrival: +1 each; buffered: +1 per flush of
+/// `k.max(1)`). Under churn, doomed arrivals don't actually aggregate, so
+/// the real version lags the prediction — those speculations miss and
+/// re-execute; churn-free runs predict perfectly.
+fn lookahead(
+    state: &AsyncState,
+    ctx: &FleetCtx,
+    m: &Manifest,
+    cfg: &ServerCfg,
+    mode: &AsyncMode,
+    completed: usize,
+    depth: usize,
+) -> Vec<Pred> {
+    let n = ctx.n_clients();
+    let sampled = cfg.sample != 0;
+    let mut queue = state.queue.clone();
+    // Facts of each slot's *simulated* current dispatch, where it has
+    // already been re-dispatched in simulation (real facts otherwise).
+    let mut overlay: HashMap<usize, (usize, usize, f64)> = HashMap::new();
+    let mut slot_client: Vec<usize> = state.inflight.iter().map(|f| f.client).collect();
+    let mut sim_seq = state.seq;
+    let mut sim_iters = state.iters.clone();
+    let mut sim_completed = completed;
+    let mut sim_buf = state.buffer.len();
+    let mut preds = Vec::with_capacity(depth);
+    for _ in 0..depth {
+        let Some(std::cmp::Reverse(ev)) = queue.pop() else { break };
+        let (client, iter, finish) = overlay.get(&ev.slot).copied().unwrap_or_else(|| {
+            let f = &state.inflight[ev.slot];
+            (f.client, f.iter, f.finish)
+        });
+        match mode {
+            AsyncMode::PerArrival { .. } => sim_completed += 1,
+            AsyncMode::Buffered { k, .. } => {
+                sim_buf += 1;
+                if sim_buf >= (*k).max(1) {
+                    sim_buf = 0;
+                    sim_completed += 1;
+                }
+            }
+        }
+        let (next_client, next_iter) = if sampled {
+            let busy: BTreeSet<usize> = slot_client
+                .iter()
+                .enumerate()
+                .filter(|&(s, _)| s != ev.slot)
+                .map(|(_, &c)| c)
+                .collect();
+            let c = sample_client(cfg.seed, sim_seq, n, &busy);
+            sim_seq += 1;
+            let it = sim_iters.get(&c).copied().unwrap_or(0);
+            sim_iters.insert(c, it + 1);
+            (c, it)
+        } else {
+            (client, iter + 1)
+        };
+        let plan = full_model_plan(ctx, next_client);
+        let (down, up) = plan_payload_bytes(m, &plan);
+        let start = ctx.fleet.start_at(next_client, finish);
+        let comm = ctx.client_comm(cfg.comm, next_client);
+        let next_finish = start + comm.client_total_secs(plan.est_time, down, up);
+        queue.push(std::cmp::Reverse(EventKey {
+            finish: next_finish,
+            client: next_client,
+            slot: ev.slot,
+        }));
+        overlay.insert(ev.slot, (next_client, next_iter, next_finish));
+        slot_client[ev.slot] = next_client;
+        preds.push(Pred {
+            client: next_client,
+            iter: next_iter,
+            version: sim_completed,
+            finish: next_finish,
+            plan,
+        });
+    }
+    preds
+}

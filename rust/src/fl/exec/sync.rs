@@ -1,0 +1,202 @@
+//! The synchronous schedule: the classic FL round loop as the execution
+//! core's degenerate "barrier every commit" case.
+//!
+//! Every event of a round shares one clock tick: **plan** asks the
+//! strategy for the whole fleet's work orders, **dispatch** binds them
+//! all at the round's start time (availability churn validates
+//! participation at the round barrier — there are no mid-flight
+//! arrivals to validate individually), **execute** fans them across the
+//! rayon pool, outcomes stream back in plan order and fold straight into
+//! the aggregation rule, and the round **commits** exactly one
+//! aggregation whose wall-clock is the slowest participant plus its
+//! transfers — the straggler tax the asynchronous schedule
+//! ([`super::event`]) exists to avoid. Speculation never applies here:
+//! with a barrier every commit there are no future dispatches to predict
+//! (every plan's start version is this round's, known at dispatch), so
+//! `exec.speculate.depth` is meaningful only to the async runner and the
+//! record's hit/miss counters stay zero.
+
+use crate::data::FedDataset;
+use crate::elastic::importance::global_importance;
+use crate::fl::aggregate::MaskedAggregator;
+use crate::fl::exec::{checkpoint_seam, commit_round, finish_experiment, validate_resume};
+use crate::fl::exec::{Evaluator, RoundStats};
+use crate::fl::observer::RoundObserver;
+use crate::fl::server::{
+    execute_plans_streaming, plan_payload_bytes, ExperimentResult, ResumeState, RoundInputs,
+    ServerCfg,
+};
+use crate::runtime::Engine;
+use crate::strategies::{ClientPlan, FleetCtx, RoundFeedback, Strategy};
+use crate::util::json::Json;
+
+/// Run a synchronous experiment, optionally continuing from a
+/// [`ResumeState`]. Called by
+/// [`crate::fl::server::run_experiment_from`] for every strategy that
+/// does not declare an [`crate::strategies::AsyncSpec`].
+pub fn run_sync(
+    engine: &dyn Engine,
+    ds: &FedDataset,
+    strategy: &mut dyn Strategy,
+    ctx: &FleetCtx,
+    cfg: &ServerCfg,
+    observer: &mut dyn RoundObserver,
+    resume: Option<ResumeState>,
+) -> anyhow::Result<ExperimentResult> {
+    if let Some(r) = &resume {
+        anyhow::ensure!(
+            matches!(r.async_state, Json::Null),
+            "checkpoint carries asynchronous runner state but {} runs synchronously",
+            strategy.name()
+        );
+    }
+    let m = engine.manifest().clone();
+    anyhow::ensure!(m.param_count == ctx.manifest.param_count, "engine/ctx manifest mismatch");
+    anyhow::ensure!(cfg.eval_every > 0, "eval_every must be >= 1");
+    anyhow::ensure!(
+        ctx.fleet.lazy.is_none(),
+        "lazy fleets need an asynchronous strategy — {} plans whole synchronous rounds, \
+         which would materialize every client",
+        strategy.name()
+    );
+    anyhow::ensure!(
+        cfg.sample == 0,
+        "fleet.sample caps in-flight clients in asynchronous modes; {} runs synchronously \
+         (its strategy already decides per-round participation)",
+        strategy.name()
+    );
+    let (mut global, mut records, mut sim_time, start_round) = match resume {
+        Some(r) => {
+            validate_resume(&r, m.param_count, cfg.rounds, "round")?;
+            // Null = fresh strategy (warm start); only real snapshots are
+            // restored.
+            if !matches!(r.policy_state, Json::Null) {
+                strategy.restore_policy_state(&r.policy_state)?;
+            }
+            (r.global, r.prior_records, r.sim_time, r.completed)
+        }
+        None => (
+            m.load_init().unwrap_or_else(|_| vec![0.0; m.param_count]),
+            Vec::with_capacity(cfg.rounds),
+            0.0f64,
+            0,
+        ),
+    };
+    let prox_mu = strategy.prox_mu();
+    let mut evaluator = Evaluator::new(engine, cfg.exec_threads)?;
+
+    for round in start_round..cfg.rounds {
+        // -- plan ---------------------------------------------------------
+        let all_plans: Vec<ClientPlan> = strategy.plan_round(round, ctx, &global);
+        anyhow::ensure!(!all_plans.is_empty(), "strategy planned an empty round");
+
+        // -- dispatch + validate: the round barrier is the arrival event,
+        //    so churn is decided for the whole cohort here. Clients
+        //    outside their availability window at round start never
+        //    participate (the server's oracle knows up front, so they
+        //    cost no wall-clock); a mid-round dropout is only discovered
+        //    at the round deadline — the failed client's planned wall
+        //    time still gates the round, but its update is lost. Both
+        //    decisions are pure functions of (seed, client, round/time).
+        let mut dropped: Vec<usize> = Vec::new();
+        let mut dropped_secs = 0.0f64;
+        let plans: Vec<ClientPlan> = if cfg.churn.is_some() || !ctx.fleet.windows.is_empty() {
+            let t0 = sim_time;
+            all_plans
+                .into_iter()
+                .filter(|p| {
+                    let away = !ctx.fleet.arrived(p.client, t0)
+                        || ctx.fleet.departed(p.client, t0)
+                        || cfg.churn.is_some_and(|c| !c.online(cfg.seed, p.client, t0));
+                    if away {
+                        dropped.push(p.client);
+                        return false;
+                    }
+                    let hit = cfg
+                        .churn
+                        .is_some_and(|c| c.dropout_hits(cfg.seed, p.client, round as u64));
+                    if hit {
+                        let (down, up) = plan_payload_bytes(&m, p);
+                        dropped_secs =
+                            dropped_secs.max(cfg.comm.client_total_secs(p.est_time, down, up));
+                        dropped.push(p.client);
+                        return false;
+                    }
+                    true
+                })
+                .collect()
+        } else {
+            all_plans
+        };
+        observer.on_round_start(round, &plans);
+
+        // -- execute + aggregate: outcomes stream back in plan order and
+        //    fold straight into the aggregator, so the join barrier never
+        //    holds the whole fleet's parameters ---------------------------
+        let inputs = RoundInputs { ds, ctx, global: &global, round, prox_mu };
+        let mut agg = MaskedAggregator::new(m.param_count, strategy.aggregate_rule());
+        let mut fb = RoundFeedback::default();
+        let mut stats = RoundStats::default();
+        // A dropped client's timeout gates the round exactly like a
+        // participant would have (0.0 when churn is off — bitwise no-op).
+        let mut round_secs = dropped_secs;
+        execute_plans_streaming(engine, &inputs, &plans, evaluator.pool(), |i, out| {
+            let plan = &plans[i];
+            let weight = ds.clients[plan.client].num_samples as f64;
+            // The outcome's delta carries its own run masks, so the
+            // aggregator visits only contributed elements — the round's
+            // fold costs O(Σ masked sizes), not O(clients × params).
+            agg.add_sparse(&out.delta, weight, plan.local_steps, &global)?;
+            // The client's wall-clock includes its transfers: download
+            // the forward sub-model, upload the encoded sparse delta.
+            // Under CommModel::Constant this reduces to the legacy
+            // max(est) + comm_secs bitwise (monotone addition).
+            let (down_bytes, up_bytes) = plan_payload_bytes(&m, plan);
+            round_secs =
+                round_secs.max(cfg.comm.client_total_secs(plan.est_time, down_bytes, up_bytes));
+            observer.on_client_done(round, plan, &out);
+            stats.absorb(plan, &out);
+            // Consume the outcome into the strategy feedback (moves
+            // sq_grads, no clone) now that the observer released it; the
+            // params buffer drops right here.
+            fb.per_client.push((plan.client, out.sq_grads, out.mean_loss));
+            Ok(())
+        })?;
+        // A round churn emptied out leaves the global model untouched; the
+        // strategy sees no feedback (there is none to see).
+        let new_global = if plans.is_empty() { global.clone() } else { agg.finish(&global) };
+
+        // -- observe ------------------------------------------------------
+        if !plans.is_empty() {
+            fb.global_importance = global_importance(&m, &new_global, &global, ctx.lr);
+            strategy.observe(&fb, ctx);
+        }
+
+        sim_time += round_secs;
+        global = new_global;
+
+        // -- commit -------------------------------------------------------
+        let record = commit_round(
+            engine,
+            ds,
+            cfg,
+            &mut evaluator,
+            observer,
+            round,
+            round + 1,
+            round_secs,
+            sim_time,
+            &global,
+            stats,
+            None,
+            dropped,
+            0,
+            0,
+        )?;
+        records.push(record);
+        // Synchronous rounds have no runner state beyond the strategy.
+        checkpoint_seam(cfg, observer, round + 1, sim_time, &global, &*strategy, None, "round")?;
+    }
+
+    finish_experiment(engine, ds, &mut evaluator, &*strategy, observer, records, sim_time, global)
+}

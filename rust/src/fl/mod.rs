@@ -1,13 +1,14 @@
 //! Federated learning core: masked aggregation (Appendix D Eq. 4), the
 //! O₁ convergence-bias diagnostic (Theorem D.5 / Table 4), the staged
-//! server round loop (plan → execute-parallel → aggregate → observe)
-//! driving engine sessions + strategies, the event-driven asynchronous
-//! executor ([`async_exec`]: FedAsync / FedBuff baselines on a
-//! discrete-event clock), and the observer seam reporters hang off.
+//! execution core ([`exec`]: plan → dispatch → execute → validate →
+//! commit, with the synchronous round loop, the event-driven
+//! asynchronous schedule, and its speculative execution backend) driving
+//! engine sessions + strategies, and the observer seam reporters hang
+//! off.
 
 pub mod aggregate;
-pub mod async_exec;
 pub mod bias;
+pub mod exec;
 pub mod observer;
 pub mod server;
 pub mod sparse;

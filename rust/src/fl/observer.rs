@@ -38,7 +38,7 @@ pub struct ServerState<'a> {
     pub global: &'a [f32],
     /// The strategy, for [`Strategy::policy_state`] snapshots.
     pub strategy: &'a dyn Strategy,
-    /// Asynchronous-runner snapshot serializer ([`crate::fl::async_exec`]):
+    /// Asynchronous-runner snapshot serializer ([`crate::fl::exec::event`]):
     /// present only on async aggregation boundaries; checkpoints persist
     /// its output so in-flight client clocks and the staleness buffer
     /// resume exactly. Lazy on purpose — serializing the runner state is
@@ -315,6 +315,8 @@ mod tests {
                 mean_staleness: None,
                 max_staleness: None,
                 dropped: vec![],
+                spec_hits: 0,
+                spec_misses: 0,
             };
             o.on_round_end(&r);
         }

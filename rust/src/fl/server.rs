@@ -1,44 +1,42 @@
-//! The FL server round loop, as four composable stages:
+//! The FL server's shared vocabulary and its **execute** stage.
 //!
-//! 1. **plan** — the strategy emits per-client work (exit, mask, steps,
-//!    simulated cost) from the current global model.
-//! 2. **execute** — [`execute_plans_streaming`] fans the plans out across
-//!    a rayon thread pool; every worker drives its own [`TrainSession`]
-//!    from the shared [`Engine`]. Compute is *real* (sessions execute the
-//!    AOT artifacts); wall-clock is *simulated* from the timing model,
-//!    exactly like the paper's 100-client evaluation (DESIGN.md §4).
-//!    FedProx's proximal correction is applied client-side between steps
-//!    when enabled.
-//! 3. **aggregate** — outcomes stream back through an order buffer and
-//!    fold into the strategy's rule (Eq. 4 masked / FedAvg / FedNova) in
-//!    *plan order* the moment their turn arrives, so the join barrier
-//!    holds only the out-of-order backlog — never every participant's
-//!    full parameter vector. The server then advances the simulated clock
-//!    by the slowest participant plus a communication constant.
-//! 4. **observe** — the strategy sees losses + importance signals
-//!    (FedEL's global tensor importance from the aggregated delta, the O₁
-//!    bias diagnostic from the round's masks); [`RoundObserver`]s see the
-//!    round record, per-client outcomes, evals, and finally the post-round
-//!    server state (the checkpointing seam, [`crate::store`]).
+//! The round loops themselves live in the staged execution core
+//! ([`crate::fl::exec`]): [`run_experiment_from`] routes strategies with
+//! an [`crate::strategies::AsyncSpec`] to the event-driven asynchronous
+//! schedule ([`crate::fl::exec::event`]) and everything else to the
+//! synchronous "barrier every commit" schedule
+//! ([`crate::fl::exec::sync`]). This module keeps what both schedules —
+//! and every external caller — share:
+//!
+//! * the configuration and result types ([`ServerCfg`], [`RoundRecord`],
+//!   [`ClientOutcome`], [`ExperimentResult`], [`ResumeState`]);
+//! * the execute stage: [`execute_plan`] runs one client's local SGD
+//!   through a [`TrainSession`] (compute is *real* — sessions execute the
+//!   AOT artifacts; wall-clock is *simulated* from the timing model,
+//!   exactly like the paper's 100-client evaluation, DESIGN.md §4;
+//!   FedProx's proximal correction is applied client-side between steps
+//!   when enabled), and [`execute_plans_streaming`] fans plans out across
+//!   a rayon pool, handing outcomes back in *plan order* through an order
+//!   buffer so the join barrier holds only the out-of-order backlog;
+//! * [`evaluate`] and [`plan_payload_bytes`], the eval fan-out and the
+//!   communication-payload pricing both schedules charge.
 //!
 //! Determinism invariant: because a session's output is a pure function
-//! of its inputs and aggregation folds in plan order on the coordinator
+//! of its inputs and aggregation folds in event order on the coordinator
 //! thread, an experiment produces bitwise-identical [`ExperimentResult`]s
-//! at any `exec_threads` setting (proved by `tests/determinism.rs`) — and
-//! a run resumed from a [`ResumeState`] checkpoint is bitwise-identical
-//! to one that was never interrupted (proved by `tests/resume.rs`).
+//! at any `exec_threads` (and `speculate_depth`-backend) setting (proved
+//! by `tests/determinism.rs`) — and a run resumed from a [`ResumeState`]
+//! checkpoint is bitwise-identical to one that was never interrupted
+//! (proved by `tests/resume.rs`).
 
 use rayon::prelude::*;
 
 use crate::data::FedDataset;
-use crate::elastic::importance::global_importance;
-use crate::fl::aggregate::MaskedAggregator;
-use crate::fl::bias::o1_bias;
-use crate::fl::observer::{RoundObserver, ServerState};
+use crate::fl::observer::RoundObserver;
 use crate::fl::sparse::{mask_runs, SparseDelta};
 use crate::manifest::Manifest;
 use crate::runtime::{Engine, TrainSession};
-use crate::strategies::{ClientPlan, FleetCtx, RoundFeedback, Strategy};
+use crate::strategies::{ClientPlan, FleetCtx, Strategy};
 use crate::timing::CommModel;
 use crate::util::json::Json;
 
@@ -73,6 +71,16 @@ pub struct ServerCfg {
     /// Availability churn ([`crate::fleet::ChurnCfg`]); `None` = every
     /// client always reachable (legacy behavior, bitwise unchanged).
     pub churn: Option<crate::fleet::ChurnCfg>,
+    /// Asynchronous modes only (`exec.speculate.depth`): how many future
+    /// dispatch arrivals the runner simulates ahead and pre-executes
+    /// against *predicted* global versions while earlier uploads are
+    /// still in flight ([`crate::fl::exec::speculate`]). Every
+    /// speculation is validated on arrival against the version the
+    /// client actually received — commit on hit, re-execute on miss — so
+    /// results are bitwise-identical at any depth; only wall-clock (and
+    /// the record's hit/miss counters) change. 0 = off (serial
+    /// reference).
+    pub speculate_depth: usize,
 }
 
 impl Default for ServerCfg {
@@ -86,6 +94,7 @@ impl Default for ServerCfg {
             sample: 0,
             seed: 0,
             churn: None,
+            speculate_depth: 0,
         }
     }
 }
@@ -111,7 +120,7 @@ pub struct RoundRecord {
     /// communication time is not active-power time and stays out.
     pub client_secs: Vec<(usize, f64)>,
     /// Mean server-version lag of the updates aggregated in this record —
-    /// asynchronous modes only ([`crate::fl::async_exec`]); `None` for
+    /// asynchronous modes only ([`crate::fl::exec::event`]); `None` for
     /// synchronous rounds, where every update is round-fresh.
     pub mean_staleness: Option<f64>,
     /// Worst staleness among this record's aggregated updates.
@@ -120,6 +129,16 @@ pub struct RoundRecord {
     /// round (offline at round start, mid-round dropout, or departed
     /// before their async upload landed). Empty when churn is off.
     pub dropped: Vec<usize>,
+    /// Speculative executions ([`crate::fl::exec::speculate`]) whose
+    /// predicted dispatch version matched the version actually received,
+    /// among the arrivals validated since the previous commit. Zero
+    /// whenever `exec.speculate.depth` is 0 (and always for synchronous
+    /// rounds).
+    pub spec_hits: usize,
+    /// Speculations invalidated at the arrival gate (predicted version
+    /// missed) — their work was discarded and the dispatch re-executed
+    /// against the true version, preserving bitwise results.
+    pub spec_misses: usize,
 }
 
 impl RoundRecord {
@@ -444,9 +463,10 @@ pub struct ResumeState {
     /// resumed [`ExperimentResult`] is indistinguishable from an
     /// uninterrupted one.
     pub prior_records: Vec<RoundRecord>,
-    /// Asynchronous-runner snapshot ([`crate::fl::async_exec`]): in-flight
-    /// client clocks, dispatch versions, and the staleness buffer.
-    /// `Json::Null` for synchronous runs and warm starts.
+    /// Asynchronous-runner snapshot ([`crate::fl::exec::event`]):
+    /// in-flight client clocks, dispatch versions, the staleness buffer,
+    /// and any live speculation bindings. `Json::Null` for synchronous
+    /// runs and warm starts.
     pub async_state: Json,
 }
 
@@ -482,9 +502,11 @@ pub fn run_experiment(
 /// Observers see only the rounds executed by *this* call; the result's
 /// record stream covers the whole experiment including prior rounds.
 ///
-/// Strategies that declare an [`crate::strategies::AsyncSpec`] dispatch to
-/// the event-driven asynchronous runner ([`crate::fl::async_exec`])
-/// instead of the synchronous round loop below.
+/// Strategies that declare an [`crate::strategies::AsyncSpec`] dispatch
+/// to the event-driven asynchronous schedule
+/// ([`crate::fl::exec::event`]); everything else runs the synchronous
+/// "barrier every commit" schedule ([`crate::fl::exec::sync`]) of the
+/// same staged execution core.
 pub fn run_experiment_from(
     engine: &dyn Engine,
     ds: &FedDataset,
@@ -494,250 +516,10 @@ pub fn run_experiment_from(
     observer: &mut dyn RoundObserver,
     resume: Option<ResumeState>,
 ) -> anyhow::Result<ExperimentResult> {
-    if let Some(spec) = strategy.async_spec() {
-        return crate::fl::async_exec::run_experiment_async(
+    match strategy.async_spec() {
+        Some(spec) => crate::fl::exec::event::run_async(
             engine, ds, strategy, spec, ctx, cfg, observer, resume,
-        );
-    }
-    if let Some(r) = &resume {
-        anyhow::ensure!(
-            matches!(r.async_state, Json::Null),
-            "checkpoint carries asynchronous runner state but {} runs synchronously",
-            strategy.name()
-        );
-    }
-    let m = engine.manifest().clone();
-    anyhow::ensure!(m.param_count == ctx.manifest.param_count, "engine/ctx manifest mismatch");
-    anyhow::ensure!(cfg.eval_every > 0, "eval_every must be >= 1");
-    anyhow::ensure!(
-        ctx.fleet.lazy.is_none(),
-        "lazy fleets need an asynchronous strategy — {} plans whole synchronous rounds, \
-         which would materialize every client",
-        strategy.name()
-    );
-    anyhow::ensure!(
-        cfg.sample == 0,
-        "fleet.sample caps in-flight clients in asynchronous modes; {} runs synchronously \
-         (its strategy already decides per-round participation)",
-        strategy.name()
-    );
-    let (mut global, mut records, mut sim_time, start_round) = match resume {
-        Some(r) => {
-            anyhow::ensure!(
-                r.global.len() == m.param_count,
-                "resume params hold {} elements, manifest wants {}",
-                r.global.len(),
-                m.param_count
-            );
-            anyhow::ensure!(
-                r.completed <= cfg.rounds,
-                "resume point (round {}) is beyond the configured {} rounds",
-                r.completed,
-                cfg.rounds
-            );
-            anyhow::ensure!(
-                r.prior_records.len() == r.completed,
-                "resume carries {} records for {} completed rounds",
-                r.prior_records.len(),
-                r.completed
-            );
-            // Null = fresh strategy (warm start); only real snapshots are
-            // restored.
-            if !matches!(r.policy_state, Json::Null) {
-                strategy.restore_policy_state(&r.policy_state)?;
-            }
-            (r.global, r.prior_records, r.sim_time, r.completed)
-        }
-        None => (
-            m.load_init().unwrap_or_else(|_| vec![0.0; m.param_count]),
-            Vec::with_capacity(cfg.rounds),
-            0.0f64,
-            0,
         ),
-    };
-    let prox_mu = strategy.prox_mu();
-    // Eval reuses one coordinator-side session across rounds; a dedicated
-    // executor pool (exec_threads > 1) is likewise built once — and not at
-    // all for engines whose sessions aren't validated for concurrency.
-    let mut eval_session = engine.session();
-    let dedicated_pool = if engine.parallel_sessions() {
-        ExecPool::build(cfg.exec_threads)?
-    } else {
-        None
-    };
-
-    for round in start_round..cfg.rounds {
-        // -- plan ---------------------------------------------------------
-        let all_plans: Vec<ClientPlan> = strategy.plan_round(round, ctx, &global);
-        anyhow::ensure!(!all_plans.is_empty(), "strategy planned an empty round");
-
-        // Availability churn. Clients outside their availability window at
-        // round start never participate (the server's oracle knows up
-        // front, so they cost no wall-clock); a mid-round dropout is only
-        // discovered at the round deadline — the failed client's planned
-        // wall time still gates the round, but its update is lost. Both
-        // decisions are pure functions of (seed, client, round/time).
-        let mut dropped: Vec<usize> = Vec::new();
-        let mut dropped_secs = 0.0f64;
-        let plans: Vec<ClientPlan> = if cfg.churn.is_some() || !ctx.fleet.windows.is_empty() {
-            let t0 = sim_time;
-            all_plans
-                .into_iter()
-                .filter(|p| {
-                    let away = !ctx.fleet.arrived(p.client, t0)
-                        || ctx.fleet.departed(p.client, t0)
-                        || cfg.churn.is_some_and(|c| !c.online(cfg.seed, p.client, t0));
-                    if away {
-                        dropped.push(p.client);
-                        return false;
-                    }
-                    let hit = cfg
-                        .churn
-                        .is_some_and(|c| c.dropout_hits(cfg.seed, p.client, round as u64));
-                    if hit {
-                        let (down, up) = plan_payload_bytes(&m, p);
-                        dropped_secs =
-                            dropped_secs.max(cfg.comm.client_total_secs(p.est_time, down, up));
-                        dropped.push(p.client);
-                        return false;
-                    }
-                    true
-                })
-                .collect()
-        } else {
-            all_plans
-        };
-        observer.on_round_start(round, &plans);
-
-        // -- execute + aggregate: outcomes stream back in plan order and
-        //    fold straight into the aggregator, so the join barrier never
-        //    holds the whole fleet's parameters ------------------------------
-        let inputs = RoundInputs { ds, ctx, global: &global, round, prox_mu };
-        let mut agg = MaskedAggregator::new(m.param_count, strategy.aggregate_rule());
-        let mut fb = RoundFeedback::default();
-        let mut tensor_masks: Vec<Vec<f32>> = Vec::with_capacity(plans.len());
-        let mut losses = Vec::with_capacity(plans.len());
-        let mut coverage = Vec::with_capacity(plans.len());
-        // A dropped client's timeout gates the round exactly like a
-        // participant would have (0.0 when churn is off — bitwise no-op).
-        let mut round_secs = dropped_secs;
-        let mut client_secs = Vec::with_capacity(plans.len());
-        execute_plans_streaming(
-            engine,
-            &inputs,
-            &plans,
-            ExecPool::from_cfg(cfg.exec_threads, dedicated_pool.as_ref()),
-            |i, out| {
-                let plan = &plans[i];
-                let weight = ds.clients[plan.client].num_samples as f64;
-                // The outcome's delta carries its own run masks, so the
-                // aggregator visits only contributed elements — the round's
-                // fold costs O(Σ masked sizes), not O(clients × params).
-                agg.add_sparse(&out.delta, weight, plan.local_steps, &global)?;
-                let cov = plan.mask.tensor_coverage();
-                coverage
-                    .push(cov.iter().map(|&c| c as f64).sum::<f64>() / cov.len().max(1) as f64);
-                // The client's wall-clock includes its transfers: download
-                // the forward sub-model, upload the encoded sparse delta.
-                // Under CommModel::Constant this reduces to the legacy
-                // max(est) + comm_secs bitwise (monotone addition).
-                let (down_bytes, up_bytes) = plan_payload_bytes(&m, plan);
-                round_secs =
-                    round_secs.max(cfg.comm.client_total_secs(plan.est_time, down_bytes, up_bytes));
-                tensor_masks.push(cov);
-                losses.push(out.mean_loss);
-                client_secs.push((plan.client, plan.est_time));
-                observer.on_client_done(round, plan, &out);
-                // Consume the outcome into the strategy feedback (moves
-                // sq_grads, no clone) now that the observer released it;
-                // the params buffer drops right here.
-                fb.per_client.push((plan.client, out.sq_grads, out.mean_loss));
-                Ok(())
-            },
-        )?;
-        // A round churn emptied out leaves the global model untouched; the
-        // strategy sees no feedback (there is none to see).
-        let new_global = if plans.is_empty() { global.clone() } else { agg.finish(&global) };
-
-        // -- observe -------------------------------------------------------
-        let o1 = if tensor_masks.is_empty() { 0.0 } else { o1_bias(&tensor_masks) };
-        if !plans.is_empty() {
-            fb.global_importance = global_importance(&m, &new_global, &global, ctx.lr);
-            strategy.observe(&fb, ctx);
-        }
-
-        sim_time += round_secs;
-        global = new_global;
-
-        let do_eval = round % cfg.eval_every == cfg.eval_every - 1 || round + 1 == cfg.rounds;
-        let (eval_acc, eval_loss) = if do_eval {
-            let (a, l) = evaluate(
-                engine,
-                eval_session.as_mut(),
-                ExecPool::from_cfg(cfg.exec_threads, dedicated_pool.as_ref()),
-                ds,
-                &global,
-            )?;
-            observer.on_eval(round, a, l);
-            (Some(a), Some(l))
-        } else {
-            (None, None)
-        };
-        let record = RoundRecord {
-            round,
-            round_secs,
-            sim_time,
-            mean_train_loss: crate::util::stats::mean(&losses),
-            participants: plans.len(),
-            mean_coverage: crate::util::stats::mean(&coverage),
-            o1,
-            eval_acc,
-            eval_loss,
-            client_secs,
-            mean_staleness: None,
-            max_staleness: None,
-            dropped,
-        };
-        observer.on_round_end(&record);
-        records.push(record);
-        observer.on_server_state(&ServerState {
-            completed: round + 1,
-            sim_time,
-            global: &global,
-            strategy: &*strategy,
-            // Synchronous rounds have no runner state beyond the strategy.
-            async_state: None,
-        });
-        if cfg.halt_after == Some(round + 1) && round + 1 < cfg.rounds {
-            anyhow::bail!(
-                "halted after round {} (simulated interruption — resume from the run store)",
-                round + 1
-            );
-        }
+        None => crate::fl::exec::sync::run_sync(engine, ds, strategy, ctx, cfg, observer, resume),
     }
-
-    // The last round always evaluated (do_eval is forced on it), so reuse
-    // that score instead of re-running the whole test set on identical
-    // params; the fallback only fires for rounds == 0.
-    let (final_acc, final_loss) = match records.last().and_then(|r| r.eval_acc.zip(r.eval_loss)) {
-        Some((a, l)) => (a, l),
-        None => evaluate(
-            engine,
-            eval_session.as_mut(),
-            ExecPool::from_cfg(cfg.exec_threads, dedicated_pool.as_ref()),
-            ds,
-            &global,
-        )?,
-    };
-    let result = ExperimentResult {
-        strategy: strategy.name().to_string(),
-        records,
-        sim_total_secs: sim_time,
-        final_acc,
-        final_loss,
-        final_params: global,
-        selections: Vec::new(),
-    };
-    observer.on_experiment_end(&result);
-    Ok(result)
 }

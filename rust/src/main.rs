@@ -333,6 +333,13 @@ fn cmd_runs(args: &Args) -> anyhow::Result<()> {
                     m.records.len()
                 );
             }
+            // Speculative dispatch accounting: hits rode the prediction,
+            // misses re-executed at the true version.
+            let hits: usize = m.records.iter().map(|r| r.spec_hits).sum();
+            let misses: usize = m.records.iter().map(|r| r.spec_misses).sum();
+            if hits + misses > 0 {
+                println!("speculation: {hits} hits, {misses} misses (re-executed)");
+            }
             // Async runs (fedasync/fedbuff) record per-aggregation
             // staleness; show the column only when it exists.
             let has_staleness = m.records.iter().any(|r| r.mean_staleness.is_some());

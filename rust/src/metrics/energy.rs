@@ -84,6 +84,8 @@ mod tests {
                 mean_staleness: None,
                 max_staleness: None,
                 dropped: vec![],
+                spec_hits: 0,
+                spec_misses: 0,
             }],
             sim_total_secs: round_secs,
             final_acc: 0.0,

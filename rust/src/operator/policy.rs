@@ -181,6 +181,8 @@ mod tests {
             mean_staleness: None,
             max_staleness: None,
             dropped: vec![],
+            spec_hits: 0,
+            spec_misses: 0,
         }
     }
 

@@ -194,6 +194,7 @@ impl Experiment {
             sample: self.cfg.fleet_sample,
             seed: self.cfg.seed,
             churn: churn.active().then_some(churn),
+            speculate_depth: self.cfg.exec_speculate_depth,
         };
         let mut console = self.cfg.verbose.then(|| ConsoleObserver::new(&name));
         let mut trace = self.cfg.record_selections.then(SelectionTrace::default);

@@ -129,7 +129,7 @@ pub struct Checkpoint {
     /// [`crate::strategies::Strategy::policy_state`] snapshot (includes
     /// any strategy RNG state; `Null` for stateless strategies).
     pub policy_state: Json,
-    /// Asynchronous-runner snapshot ([`crate::fl::async_exec`]): in-flight
+    /// Asynchronous-runner snapshot ([`crate::fl::exec::event`]): in-flight
     /// client clocks + dispatch versions, the referenced global versions,
     /// and the staleness buffer. `Null` for synchronous runs.
     pub async_state: Json,
@@ -480,6 +480,14 @@ pub fn round_record_to_json(r: &RoundRecord) -> Json {
             Json::Arr(r.dropped.iter().map(|&c| Json::Num(c as f64)).collect()),
         ));
     }
+    // Speculation counters likewise omit at zero: depth-0 (and
+    // synchronous) records keep the pre-speculation schema byte-for-byte.
+    if r.spec_hits != 0 {
+        fields.push(("spec_hits", Json::Num(r.spec_hits as f64)));
+    }
+    if r.spec_misses != 0 {
+        fields.push(("spec_misses", Json::Num(r.spec_misses as f64)));
+    }
     Json::obj(fields)
 }
 
@@ -531,6 +539,8 @@ pub fn round_record_from_json(j: &Json) -> anyhow::Result<RoundRecord> {
                 })
                 .collect::<anyhow::Result<_>>()?,
         },
+        spec_hits: j.get("spec_hits").and_then(Json::as_usize).unwrap_or(0),
+        spec_misses: j.get("spec_misses").and_then(Json::as_usize).unwrap_or(0),
     })
 }
 
@@ -614,6 +624,8 @@ mod tests {
             mean_staleness: eval.map(|_| 1.0 / 3.0),
             max_staleness: eval.map(|_| 2.0),
             dropped: if round % 2 == 1 { vec![1, 4] } else { Vec::new() },
+            spec_hits: if round % 3 == 2 { 5 } else { 0 },
+            spec_misses: if round % 3 == 2 { 2 } else { 0 },
         }
     }
 
@@ -635,6 +647,8 @@ mod tests {
         assert_eq!(a.mean_staleness.map(f64::to_bits), b.mean_staleness.map(f64::to_bits));
         assert_eq!(a.max_staleness.map(f64::to_bits), b.max_staleness.map(f64::to_bits));
         assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.spec_hits, b.spec_hits);
+        assert_eq!(a.spec_misses, b.spec_misses);
     }
 
     #[test]
@@ -643,6 +657,18 @@ mod tests {
         assert!(clean.get("dropped").is_none());
         let churned = round_record_to_json(&record(1, None));
         assert_eq!(churned.req("dropped").unwrap().to_f64_vec().unwrap(), vec![1.0, 4.0]);
+    }
+
+    #[test]
+    fn speculation_counters_stay_out_of_serial_records() {
+        let serial = round_record_to_json(&record(0, None));
+        assert!(serial.get("spec_hits").is_none());
+        assert!(serial.get("spec_misses").is_none());
+        let speculative = round_record_to_json(&record(2, None));
+        assert_eq!(speculative.u("spec_hits").unwrap(), 5);
+        assert_eq!(speculative.u("spec_misses").unwrap(), 2);
+        let back = round_record_from_json(&speculative).unwrap();
+        assert_eq!((back.spec_hits, back.spec_misses), (5, 2));
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //!
 //! where staleness counts how many server versions elapsed since the
 //! client's dispatch. All execution-side state (client clocks, versions)
-//! lives in the event-driven runner ([`crate::fl::async_exec`]); this
+//! lives in the event-driven runner ([`crate::fl::exec::event`]); this
 //! type only declares the policy, so `policy_state` stays `Null` and
 //! kill/resume rides the runner's checkpoint extension instead.
 

@@ -10,7 +10,7 @@
 //! client can hold several slots of a large buffer on a small fleet.
 //!
 //! Execution-side state (client clocks, the buffer itself) lives in the
-//! event-driven runner ([`crate::fl::async_exec`]) and checkpoints through
+//! event-driven runner ([`crate::fl::exec::event`]) and checkpoints through
 //! its runner-state extension; `policy_state` stays `Null`.
 
 use crate::fl::AggregateRule;

@@ -1,0 +1,169 @@
+//! FedDrop: adaptive per-device federated dropout.
+//!
+//! Federated-dropout baselines (Caldas et al. and successors) shrink each
+//! client's update by randomly dropping a fraction of the model's tensors
+//! per round. This variant makes the rate *device-adaptive*: a client's
+//! drop probability scales with how far its full-model round time
+//! overshoots the fleet threshold T_th, so stragglers shed proportionally
+//! more work while fast devices train nearly everything. Heads are never
+//! dropped (the model must stay trainable end-to-end); only body tensors
+//! enter the lottery.
+//!
+//! Per client each round:
+//!
+//!   slowness = full_round_time(c) / T_th
+//!   rate_c   = clamp(rate · slowness^adapt, 0, 0.9)
+//!
+//! and each body tensor is dropped independently with probability
+//! `rate_c` via the pure hash [`crate::fleet::unit_draw`] — so plans are
+//! a deterministic function of (seed, round, client, tensor), which keeps
+//! the server's bitwise determinism and kill/resume invariants without
+//! any policy state (the strategy is stateless; `policy_state` stays
+//! `Null`).
+//!
+//! The simulated round cost scales with the *kept element fraction*: a
+//! client that drops 40% of its body parameters spends roughly 60% of a
+//! full round, mirroring how dropout saves backward work in practice.
+
+use super::{ClientPlan, FleetCtx, MaskSpec, Strategy};
+use crate::fleet::unit_draw;
+
+pub struct FedDrop {
+    /// Base drop rate (registry param `strategy.feddrop.rate`).
+    rate: f64,
+    /// Slowness exponent (registry param `strategy.feddrop.adapt`):
+    /// 0 = uniform dropout, higher = stragglers drop ever more.
+    adapt: f64,
+    seed: u64,
+}
+
+impl FedDrop {
+    pub fn new(rate: f64, adapt: f64, seed: u64) -> Self {
+        FedDrop { rate, adapt, seed }
+    }
+
+    /// The device-adaptive drop probability for one client.
+    fn client_rate(&self, ctx: &FleetCtx, client: usize) -> f64 {
+        let slowness = ctx.full_round_time(client) / ctx.t_th;
+        (self.rate * slowness.powf(self.adapt)).clamp(0.0, 0.9)
+    }
+}
+
+impl Strategy for FedDrop {
+    fn name(&self) -> &'static str {
+        "feddrop"
+    }
+
+    fn plan_round(&mut self, round: usize, ctx: &FleetCtx, _global: &[f32]) -> Vec<ClientPlan> {
+        let m = &ctx.manifest;
+        let total: usize = m.tensors.iter().map(|t| t.size).sum();
+        (0..ctx.n_clients())
+            .map(|client| {
+                let rate_c = self.client_rate(ctx, client);
+                let mut mask = vec![1.0f32; m.tensors.len()];
+                let mut kept = total;
+                for (i, t) in m.tensors.iter().enumerate() {
+                    if t.is_head {
+                        continue; // heads always train: keep the model end-to-end
+                    }
+                    let u = unit_draw(
+                        self.seed ^ 0xFEDD_0001,
+                        ((round as u64) << 32) | client as u64,
+                        i as u64,
+                    );
+                    if u < rate_c {
+                        mask[i] = 0.0;
+                        kept -= t.size;
+                    }
+                }
+                let kept_frac = kept as f64 / total as f64;
+                ClientPlan {
+                    client,
+                    exit: m.num_blocks,
+                    mask: MaskSpec::Tensor(mask),
+                    local_steps: ctx.local_steps,
+                    est_time: ctx.full_round_time(client) * kept_frac,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::ctx;
+    use super::*;
+
+    fn kept(p: &ClientPlan) -> usize {
+        p.mask.tensor_coverage().iter().filter(|&&c| c > 0.0).count()
+    }
+
+    #[test]
+    fn plans_are_deterministic_in_seed_and_round() {
+        let c = ctx(8, &[1.0, 2.0, 4.0]);
+        let mut a = FedDrop::new(0.3, 1.0, 7);
+        let mut b = FedDrop::new(0.3, 1.0, 7);
+        let pa = a.plan_round(3, &c, &[]);
+        let pb = b.plan_round(3, &c, &[]);
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.mask.tensor_coverage(), y.mask.tensor_coverage());
+            assert_eq!(x.est_time.to_bits(), y.est_time.to_bits());
+        }
+        let pc = a.plan_round(4, &c, &[]);
+        assert!(
+            pa.iter().zip(&pc).any(|(x, y)| x.mask.tensor_coverage() != y.mask.tensor_coverage()),
+            "different rounds must redraw the dropout lottery"
+        );
+    }
+
+    #[test]
+    fn heads_survive_even_at_max_rate() {
+        let c = ctx(6, &[8.0]);
+        let mut s = FedDrop::new(0.9, 4.0, 1);
+        for p in s.plan_round(0, &c, &[]) {
+            let cov = p.mask.tensor_coverage();
+            for (i, t) in c.manifest.tensors.iter().enumerate() {
+                if t.is_head {
+                    assert_eq!(cov[i], 1.0, "head tensor {i} was dropped");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stragglers_drop_more_than_fast_devices() {
+        let c = ctx(8, &[1.0, 8.0]);
+        let mut s = FedDrop::new(0.4, 1.0, 1);
+        // average over rounds: a single draw is too noisy to order reliably
+        let (mut fast, mut slow) = (0usize, 0usize);
+        for round in 0..20 {
+            let plans = s.plan_round(round, &c, &[]);
+            fast += kept(&plans[0]);
+            slow += kept(&plans[1]);
+        }
+        assert!(slow < fast, "slow device kept {slow} vs fast {fast}");
+    }
+
+    #[test]
+    fn est_time_scales_with_kept_fraction() {
+        let c = ctx(8, &[4.0]);
+        let mut s = FedDrop::new(0.5, 1.0, 3);
+        let plans = s.plan_round(0, &c, &[]);
+        let p = &plans[0];
+        let full = c.full_round_time(0);
+        assert!(p.est_time <= full, "dropout must not cost more than full training");
+        if kept(p) < c.manifest.tensors.len() {
+            assert!(p.est_time < full);
+        }
+    }
+
+    #[test]
+    fn zero_rate_trains_everything() {
+        let c = ctx(4, &[1.0, 2.0]);
+        let mut s = FedDrop::new(0.0, 1.0, 9);
+        for p in s.plan_round(0, &c, &[]) {
+            assert!(p.mask.tensor_coverage().iter().all(|&c| c == 1.0));
+            assert_eq!(p.est_time, c.full_round_time(p.client));
+        }
+    }
+}

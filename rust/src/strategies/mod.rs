@@ -12,6 +12,7 @@ pub mod elastic;
 pub mod fedasync;
 pub mod fedavg;
 pub mod fedbuff;
+pub mod feddrop;
 pub mod fedel;
 pub mod fiarse;
 pub mod heterofl;
@@ -174,7 +175,7 @@ impl FleetCtx {
 }
 
 /// How an asynchronous strategy wants the event-driven runner
-/// ([`crate::fl::async_exec`]) to aggregate arrivals.
+/// ([`crate::fl::exec::event`]) to aggregate arrivals.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum AsyncMode {
     /// FedAsync (Xie et al.): aggregate every arrival immediately with a
@@ -216,7 +217,7 @@ pub trait Strategy {
     }
 
     /// `Some` routes the experiment through the event-driven asynchronous
-    /// executor ([`crate::fl::async_exec`]) — clients train at their own
+    /// executor ([`crate::fl::exec::event`]) — clients train at their own
     /// device pace and the server aggregates per this spec — instead of
     /// the synchronous round loop. Default: synchronous.
     fn async_spec(&self) -> Option<AsyncSpec> {
@@ -250,7 +251,7 @@ pub trait Strategy {
 
 /// Full-model work order for one client — the shape FedAvg-style and
 /// asynchronous strategies plan, and the one the async executor
-/// ([`crate::fl::async_exec`]) dispatches: train everything, at the
+/// ([`crate::fl::exec::event`]) dispatches: train everything, at the
 /// device's full-model pace. One definition so the strategies'
 /// `plan_round` can never drift from what the runner actually executes.
 pub(crate) fn full_model_plan(ctx: &FleetCtx, client: usize) -> ClientPlan {

@@ -170,6 +170,29 @@ fn defs() -> Vec<StrategyDef> {
             build: |ctx, _, _| Box::new(super::fiarse::Fiarse::new(ctx)),
         },
         StrategyDef {
+            name: "feddrop",
+            summary: "adaptive per-device federated dropout (device-scaled drop rates)",
+            params: vec![
+                ParamSpec {
+                    name: "rate",
+                    default: 0.3,
+                    min: 0.0,
+                    max: 0.9,
+                    help: "base body-tensor drop probability before device scaling",
+                },
+                ParamSpec {
+                    name: "adapt",
+                    default: 1.0,
+                    min: 0.0,
+                    max: 4.0,
+                    help: "slowness exponent: rate_c = rate·(t_full/T_th)^adapt (0 = uniform dropout)",
+                },
+            ],
+            build: |_, seed, p| {
+                Box::new(super::feddrop::FedDrop::new(p.get("rate"), p.get("adapt"), seed))
+            },
+        },
+        StrategyDef {
             name: "fedasync",
             summary: "per-arrival async aggregation, staleness-decayed mixing (Xie et al.)",
             params: vec![
@@ -426,6 +449,21 @@ mod tests {
         assert_eq!(reg.param_spec("fedasync", "alpha").unwrap().default, 0.6);
         assert_eq!(reg.param_spec("fedbuff", "buffer_k").unwrap().default, 4.0);
         assert_eq!(reg.param_spec("fedbuff", "staleness_exp").unwrap().default, 0.0);
+    }
+
+    #[test]
+    fn feddrop_declares_adaptive_dropout_tunables() {
+        let reg = builtin();
+        assert_eq!(reg.param_spec("feddrop", "rate").unwrap().default, 0.3);
+        assert_eq!(reg.param_spec("feddrop", "adapt").unwrap().default, 1.0);
+        let c = ctx(4, &[1.0, 2.0]);
+        let bag = vec![
+            ("strategy.feddrop.rate".to_string(), 0.6),
+            ("strategy.feddrop.adapt".to_string(), 2.0),
+        ];
+        let s = reg.build("feddrop", &c, 1, &bag).unwrap();
+        assert_eq!(s.name(), "feddrop");
+        assert!(s.async_spec().is_none(), "feddrop runs synchronously");
     }
 
     #[test]

@@ -155,6 +155,90 @@ fn sync_churn_is_deterministic_and_records_drops() {
     assert_ne!(seq.final_params, base.final_params, "dropout must change the trajectory");
 }
 
+/// Speculative dispatch is a pure wall-clock knob: at any depth and any
+/// thread count, the aggregation sequence, per-round records (speculation
+/// counters aside — they are compared separately below) and final params
+/// are bitwise-identical to the depth-0 serial reference. Without churn
+/// the lookahead replays the event clock exactly, so every speculation
+/// validates as a hit and misses stay zero.
+#[test]
+fn speculative_execution_is_bitwise_identical_to_serial() {
+    for name in ["fedasync", "fedbuff"] {
+        let serial = run_one(cfg(name, 1)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(
+            serial.records.iter().all(|r| r.spec_hits == 0 && r.spec_misses == 0),
+            "{name}: depth 0 must not count speculations"
+        );
+        for threads in [1usize, 2, 4] {
+            let mut c = cfg(name, threads);
+            c.exec_speculate_depth = 4;
+            let spec = run_one(c).unwrap_or_else(|e| panic!("{name}@{threads}t: {e}"));
+            assert_identical(&serial, &spec, &format!("{name} depth4@{threads}t vs serial"));
+            let hits: usize = spec.records.iter().map(|r| r.spec_hits).sum();
+            let misses: usize = spec.records.iter().map(|r| r.spec_misses).sum();
+            assert!(hits > 0, "{name}@{threads}t: speculation never hit");
+            assert_eq!(misses, 0, "{name}@{threads}t: churn-free predictions must be exact");
+        }
+    }
+}
+
+/// The speculation counters themselves are part of the determinism
+/// contract: at a fixed depth they are identical per round at any thread
+/// count (bindings and validation run on the coordinator in event order;
+/// the worker pool is purely an execution backend).
+#[test]
+fn speculation_counters_are_thread_count_invariant() {
+    let spec_cfg = |threads: usize| {
+        let mut c = cfg("fedbuff", threads);
+        c.exec_speculate_depth = 3;
+        c
+    };
+    let one = run_one(spec_cfg(1)).unwrap();
+    let two = run_one(spec_cfg(2)).unwrap();
+    let all_cores = run_one(spec_cfg(0)).unwrap();
+    assert_identical(&one, &two, "fedbuff depth3 1 vs 2 threads");
+    assert_identical(&one, &all_cores, "fedbuff depth3 1 thread vs all cores");
+    for other in [&two, &all_cores] {
+        for (ra, rb) in one.records.iter().zip(&other.records) {
+            assert_eq!(ra.spec_hits, rb.spec_hits, "round {} hits", ra.round);
+            assert_eq!(ra.spec_misses, rb.spec_misses, "round {} misses", ra.round);
+        }
+    }
+}
+
+/// Churn dooms are judged at validate time, never at speculate time: a
+/// churned speculative run aggregates exactly what the churned serial
+/// reference does, and the doom-shifted versions surface as misses that
+/// re-execute rather than corrupt.
+#[test]
+fn churned_speculative_runs_match_serial() {
+    for name in ["fedbuff", "fedasync"] {
+        let churned = |threads: usize, depth: usize| {
+            let mut c = cfg(name, threads);
+            c.churn_dropout = 0.5;
+            c.churn_period_secs = 4000.0;
+            c.churn_avail_frac = 0.75;
+            c.exec_speculate_depth = depth;
+            c
+        };
+        let serial = run_one(churned(1, 0)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let spec2 = run_one(churned(2, 4)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let spec4 = run_one(churned(4, 4)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_identical(&serial, &spec2, &format!("{name} churn depth4@2t vs serial"));
+        assert_identical(&serial, &spec4, &format!("{name} churn depth4@4t vs serial"));
+        for (ra, rb) in spec2.records.iter().zip(&spec4.records) {
+            assert_eq!(ra.spec_hits, rb.spec_hits, "{name}: round {} hits", ra.round);
+            assert_eq!(ra.spec_misses, rb.spec_misses, "{name}: round {} misses", ra.round);
+        }
+        assert!(
+            serial.records.iter().any(|r| !r.dropped.is_empty()),
+            "{name}: churn never dropped a client"
+        );
+        let counted: usize = spec2.records.iter().map(|r| r.spec_hits + r.spec_misses).sum();
+        assert!(counted > 0, "{name}: speculation never fired under churn");
+    }
+}
+
 #[test]
 fn selection_traces_match_across_thread_counts() {
     let mut a = cfg("fedel", 1);

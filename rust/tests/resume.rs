@@ -83,6 +83,8 @@ fn assert_identical(a: &ExperimentResult, b: &ExperimentResult, label: &str) {
         );
         assert_eq!(ra.client_secs, rb.client_secs, "{label}: round {} clients", ra.round);
         assert_eq!(ra.dropped, rb.dropped, "{label}: round {} drops", ra.round);
+        assert_eq!(ra.spec_hits, rb.spec_hits, "{label}: round {} spec hits", ra.round);
+        assert_eq!(ra.spec_misses, rb.spec_misses, "{label}: round {} spec misses", ra.round);
     }
 }
 
@@ -198,6 +200,30 @@ fn churned_async_kill_and_resume_is_bitwise_identical() {
     kill_and_resume_with("fedbuff", 1, 1, "churn", &churn);
     kill_and_resume_with("fedbuff", 4, 1, "churn", &churn);
     kill_and_resume_with("fedasync", 1, 4, "churn", &churn);
+}
+
+/// Speculative dispatch across a kill: the `speculated` version bindings
+/// ride the checkpoint's `async_state` and the hit/miss counters ride the
+/// persisted round records, so a speculative run killed mid-flight
+/// resumes bitwise — counters included (`assert_identical` compares them,
+/// and the pre-kill rounds come back through the store's schema) — at any
+/// thread count on either side of the kill. Speculations pending on the
+/// worker pool at the kill simply re-execute on resume: the bindings are
+/// state, the outcome cache is not.
+#[test]
+fn speculative_kill_and_resume_is_bitwise_identical() {
+    let spec = |c: &mut ExperimentCfg| c.exec_speculate_depth = 4;
+    kill_and_resume_with("fedbuff", 2, 1, "spec", &spec);
+    kill_and_resume_with("fedbuff", 1, 4, "spec", &spec);
+    kill_and_resume_with("fedasync", 1, 2, "spec", &spec);
+    // doom-at-validate must survive the kill too: churned speculation
+    // resumes onto the same hit/miss/drop sequence
+    kill_and_resume_with("fedbuff", 2, 2, "spec-churn", &|c| {
+        c.exec_speculate_depth = 4;
+        c.churn_dropout = 0.5;
+        c.churn_period_secs = 4000.0;
+        c.churn_avail_frac = 0.75;
+    });
 }
 
 /// Sync-mode churn rides the per-round records (`dropped`), which the
